@@ -1,0 +1,138 @@
+//! Fig. 3 reproduction driver: the full {activity}×{ω}×{seeds} grid on the
+//! spiral task, writing `results/fig3_runs.csv` + `results/fig3_summary.csv`
+//! and rendering all six panels as ASCII plots.
+//!
+//! Full paper scale (≈40 runs × 1700 iterations) takes a while; the defaults
+//! here are a faithful-but-faster protocol. Override via flags:
+//!
+//! `cargo run --release --example fig3_sweep -- --iterations 1700 --sequences 10000 --seeds 5`
+
+use sparse_rtrl::config::ExperimentConfig;
+use sparse_rtrl::coordinator::{run_sweep, SweepPlan, SweepResult};
+use sparse_rtrl::report::ascii_plot;
+use sparse_rtrl::report::csv::write_text;
+use sparse_rtrl::util::cli::Args;
+use std::path::PathBuf;
+
+fn panel(
+    result: &SweepResult,
+    activity: bool,
+    x_compute: bool,
+    title: &str,
+    val_axis: bool,
+) -> String {
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for (act, omega) in result.arms() {
+        if act != activity {
+            continue;
+        }
+        let pts = result.aggregate(act, omega);
+        let data: Vec<(f64, f64)> = pts
+            .iter()
+            .filter(|p| !val_axis || p.val_accuracy_mean > 0.0)
+            .map(|p| {
+                let x = if x_compute { p.compute_adjusted_mean } else { p.iteration as f64 };
+                let y = if val_axis { p.val_accuracy_mean as f64 } else { p.loss_mean as f64 };
+                (x, y)
+            })
+            .collect();
+        series.push((format!("ω={omega}"), data));
+    }
+    let named: Vec<(&str, Vec<(f64, f64)>)> =
+        series.iter().map(|(n, d)| (n.as_str(), d.clone())).collect();
+    ascii_plot::plot(&named, 76, 14, title)
+}
+
+fn main() {
+    let mut args = Args::from_env().expect("args");
+    let mut base = ExperimentConfig::default();
+    base.train.iterations = args.get_parse("iterations", 400u64).expect("iterations");
+    base.task.num_sequences = args.get_parse("sequences", 4000usize).expect("sequences");
+    base.train.log_every = args.get_parse("log-every", 10u64).expect("log-every");
+    base.train.eval_every = args.get_parse("eval-every", 25u64).expect("eval-every");
+    let seeds: usize = args.get_parse("seeds", 5).expect("seeds");
+    let workers: usize = args.get_parse("workers", 0).expect("workers");
+    let out_dir: PathBuf = args.get("out-dir").unwrap_or_else(|| "results".into()).into();
+    args.finish().expect("flags");
+
+    let mut plan = SweepPlan::fig3(base, seeds);
+    plan.max_workers = workers;
+    eprintln!(
+        "Fig 3 sweep: {} runs ({} iterations each) on {} workers",
+        plan.expand().len(),
+        plan.base.train.iterations,
+        if plan.max_workers == 0 { "all".to_string() } else { plan.max_workers.to_string() }
+    );
+    let t0 = std::time::Instant::now();
+    let result = run_sweep(&plan, true);
+    eprintln!("sweep finished in {:.1}s", t0.elapsed().as_secs_f64());
+
+    write_text(&out_dir.join("fig3_runs.csv"), &result.to_long_csv()).expect("write runs csv");
+    write_text(&out_dir.join("fig3_summary.csv"), &result.to_summary_csv())
+        .expect("write summary csv");
+
+    // Panels A–F
+    println!("{}", panel(&result, true, false, "Fig 3A: EGRU (activity sparse) — val acc vs iteration", true));
+    println!("{}", panel(&result, true, true, "Fig 3B: EGRU — val acc vs compute-adjusted iteration (cum ω̃²β̃²)", true));
+    // C: activity sparsity over training
+    {
+        let mut series = Vec::new();
+        for (act, omega) in result.arms() {
+            if !act {
+                continue;
+            }
+            let pts = result.aggregate(act, omega);
+            series.push((
+                format!("α ω={omega}"),
+                pts.iter().map(|p| (p.iteration as f64, p.alpha_mean as f64)).collect::<Vec<_>>(),
+            ));
+            series.push((
+                format!("β ω={omega}"),
+                pts.iter().map(|p| (p.iteration as f64, p.beta_mean as f64)).collect::<Vec<_>>(),
+            ));
+        }
+        let named: Vec<(&str, Vec<(f64, f64)>)> =
+            series.iter().map(|(n, d)| (n.as_str(), d.clone())).collect();
+        println!("{}", ascii_plot::plot(&named, 76, 14, "Fig 3C: activity (α) and derivative (β) sparsity"));
+    }
+    // D: influence matrix sparsity
+    {
+        let mut series = Vec::new();
+        for (act, omega) in result.arms() {
+            if !act {
+                continue;
+            }
+            let pts = result.aggregate(act, omega);
+            series.push((
+                format!("ω={omega}"),
+                pts.iter()
+                    .map(|p| (p.iteration as f64, p.influence_sparsity_mean as f64))
+                    .collect::<Vec<_>>(),
+            ));
+        }
+        let named: Vec<(&str, Vec<(f64, f64)>)> =
+            series.iter().map(|(n, d)| (n.as_str(), d.clone())).collect();
+        println!("{}", ascii_plot::plot(&named, 76, 14, "Fig 3D: influence-matrix sparsity"));
+    }
+    println!("{}", panel(&result, false, false, "Fig 3E: gated-tanh (no activity sparsity) — val acc vs iteration", true));
+    println!("{}", panel(&result, false, true, "Fig 3F: gated-tanh — val acc vs compute-adjusted iteration (cum ω̃²)", true));
+
+    // Headline check: which arm converges with least total compute?
+    println!("\ncompute-to-85%-val-accuracy (compute-adjusted iterations, lower is better):");
+    for (act, omega) in result.arms() {
+        let runs: Vec<_> = result
+            .runs
+            .iter()
+            .filter(|r| r.activity == act && (r.omega - omega).abs() < 1e-6)
+            .collect();
+        let costs: Vec<f64> =
+            runs.iter().filter_map(|r| r.curve.compute_to_accuracy(0.85)).collect();
+        let label = format!("{} ω={omega}", if act { "EGRU " } else { "tanh " });
+        if costs.is_empty() {
+            println!("  {label:<16} never reached");
+        } else {
+            let mean = costs.iter().sum::<f64>() / costs.len() as f64;
+            println!("  {label:<16} {:>10.2}  ({}/{} runs reached)", mean, costs.len(), runs.len());
+        }
+    }
+}

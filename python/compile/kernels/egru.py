@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: batched EGRU cell forward.
+
+TPU mapping of the cell: the two gate matmuls target the MXU (one
+(B_blk × n_in+n) × (n_in+n × n) contraction per gate after fusing input and
+recurrent weights would be ideal; here we keep them separate to preserve the
+Rust layout bit-for-bit), all elementwise gate math stays in VMEM. The grid
+tiles the batch so a block's activations never leave VMEM between the
+pre-activation and the threshold.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see /opt/xla-example
+README). The BlockSpec structure is still the real TPU schedule; §Perf in
+DESIGN.md estimates MXU/VMEM figures from it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _cell_kernel(aprev_ref, x_ref, wu_ref, vu_ref, bu_ref, wz_ref, vz_ref, bz_ref,
+                 a_ref, v_ref, dphi_ref, *, theta, gamma, eps):
+    """One batch-block of the EGRU forward."""
+    x = x_ref[...]
+    a_prev = aprev_ref[...]
+    su = x @ wu_ref[...].T + a_prev @ vu_ref[...].T + bu_ref[...][None, :]
+    sz = x @ wz_ref[...].T + a_prev @ vz_ref[...].T + bz_ref[...][None, :]
+    u = jax.nn.sigmoid(su)
+    z = jnp.tanh(sz)
+    v = u * z - theta
+    a_ref[...] = (v > 0.0).astype(v.dtype)
+    v_ref[...] = v
+    dphi_ref[...] = gamma * jnp.maximum(0.0, 1.0 - jnp.abs(v) / eps)
+
+
+def egru_cell_forward(a_prev, x, Wu, Vu, bu, Wz, Vz, bz, *, theta, gamma, eps,
+                      block_batch=None):
+    """Batched EGRU forward via Pallas. Returns (a, v, dphi).
+
+    a_prev: (B, n), x: (B, n_in); weights in the Rust row-major layout.
+    """
+    batch, n = a_prev.shape
+    n_in = x.shape[1]
+    if block_batch is None:
+        block_batch = batch if batch <= 32 else 32
+    assert batch % block_batch == 0, "batch must divide into blocks"
+    grid = (batch // block_batch,)
+    out_shape = [jax.ShapeDtypeStruct((batch, n), a_prev.dtype) for _ in range(3)]
+    batch_spec = pl.BlockSpec((block_batch, n), lambda i: (i, 0))
+    in_specs = [
+        batch_spec,                                      # a_prev
+        pl.BlockSpec((block_batch, n_in), lambda i: (i, 0)),  # x
+        pl.BlockSpec((n, n_in), lambda i: (0, 0)),       # Wu (resident)
+        pl.BlockSpec((n, n), lambda i: (0, 0)),          # Vu
+        pl.BlockSpec((n,), lambda i: (0,)),              # bu
+        pl.BlockSpec((n, n_in), lambda i: (0, 0)),       # Wz
+        pl.BlockSpec((n, n), lambda i: (0, 0)),          # Vz
+        pl.BlockSpec((n,), lambda i: (0,)),              # bz
+    ]
+    out_specs = [batch_spec, batch_spec, batch_spec]
+    kernel = functools.partial(_cell_kernel, theta=theta, gamma=gamma, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,
+    )(a_prev, x, Wu, Vu, bu, Wz, Vz, bz)
+
+
+def egru_cell_reference(a_prev, x, Wu, Vu, bu, Wz, Vz, bz, *, theta, gamma, eps):
+    """jnp oracle with the same signature (first three outputs)."""
+    a, v, dphi, *_ = ref.egru_cell(a_prev, x, Wu, Vu, bu, Wz, Vz, bz, theta, gamma, eps)
+    return a, v, dphi

@@ -1,0 +1,100 @@
+"""Pure-jnp reference oracles for the Pallas kernels and the L2 model.
+
+These implement exactly the mathematics of the Rust engines
+(rust/src/nn/cell.rs, rust/src/rtrl/*.rs):
+
+  EGRU cell (paper Eq. 5, gated drive):
+    u    = sigmoid(x @ Wu.T + a_prev @ Vu.T + bu)
+    z    = tanh   (x @ Wz.T + a_prev @ Vz.T + bz)
+    v    = u * z - theta
+    a    = H(v)                                  (Heaviside)
+    phi' = gamma * max(0, 1 - |v| / eps)          (pseudo-derivative)
+    g_u  = z * u * (1 - u)                        (u-path coefficient)
+    g_z  = u * (1 - z^2)                          (z-path coefficient)
+
+  RTRL ingredients (paper Eqns. 6-10):
+    Jhat[k,l]  = g_u[k] Vu[k,l] + g_z[k] Vz[k,l]  (dv_k/da_l before phi')
+    Mbar[k,p]  = dv_k/dw_p  (structured: only unit k's fan-in rows)
+    M_next     = phi'[:,None] * (Jhat @ M_prev + Mbar)
+
+Parameter flattening matches rust/src/nn/layout.rs: block-major
+[Wu, Vu, bu, Wz, Vz, bz], row-major within each block, so
+p = 2n(n_in + n + 1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def pseudo_derivative(v, gamma, eps):
+    """Triangular surrogate gradient, zero for |v| > eps (paper Fig. 1)."""
+    return gamma * jnp.maximum(0.0, 1.0 - jnp.abs(v) / eps)
+
+
+def egru_cell(a_prev, x, Wu, Vu, bu, Wz, Vz, bz, theta, gamma, eps):
+    """EGRU forward step. Works for batched (B,n)/(B,n_in) or single (n,)/(n_in,).
+
+    Returns (a, v, dphi, u, z, gu, gz).
+    """
+    su = x @ Wu.T + a_prev @ Vu.T + bu
+    sz = x @ Wz.T + a_prev @ Vz.T + bz
+    u = jax.nn.sigmoid(su)
+    z = jnp.tanh(sz)
+    v = u * z - theta
+    a = (v > 0.0).astype(v.dtype)
+    dphi = pseudo_derivative(v, gamma, eps)
+    gu = z * u * (1.0 - u)
+    gz = u * (1.0 - z * z)
+    return a, v, dphi, u, z, gu, gz
+
+
+def jacobian_hat(gu, gz, Vu, Vz):
+    """dv_k/da_l before the phi' row gate (single sample: gu, gz are (n,))."""
+    return gu[:, None] * Vu + gz[:, None] * Vz
+
+
+def immediate_influence(a_prev, x, gu, gz):
+    """Dense Mbar in the flat layout [Wu, Vu, bu, Wz, Vz, bz].
+
+    Single-sample: a_prev (n,), x (n_in,), gu/gz (n,). Returns (n, p).
+    """
+    n = a_prev.shape[0]
+    n_in = x.shape[0]
+    eye = jnp.eye(n, dtype=a_prev.dtype)
+
+    def gate_blocks(g):
+        # W block: Mbar[k, k*n_in + j] = g[k] * x[j]
+        w = (eye[:, :, None] * (g[:, None, None] * x[None, None, :])).reshape(n, n * n_in)
+        # V block: Mbar[k, k*n + l] = g[k] * a_prev[l]
+        vblk = (eye[:, :, None] * (g[:, None, None] * a_prev[None, None, :])).reshape(n, n * n)
+        # bias block: Mbar[k, k] = g[k]
+        b = eye * g[:, None]
+        return w, vblk, b
+
+    wu, vu, bu_ = gate_blocks(gu)
+    wz, vz, bz_ = gate_blocks(gz)
+    return jnp.concatenate([wu, vu, bu_, wz, vz, bz_], axis=1)
+
+
+def influence_update(dphi, jhat, m_prev, mbar):
+    """Dense Eq.-10 update: M_next = phi' * (Jhat @ M_prev + Mbar)."""
+    return dphi[:, None] * (jhat @ m_prev + mbar)
+
+
+def rtrl_step(a_prev, x, m_prev, Wu, Vu, bu, Wz, Vz, bz, theta, gamma, eps):
+    """One full single-sample RTRL step: forward + influence update.
+
+    Returns (a, m_next).
+    """
+    a, _v, dphi, _u, _z, gu, gz = egru_cell(
+        a_prev, x, Wu, Vu, bu, Wz, Vz, bz, theta, gamma, eps
+    )
+    jhat = jacobian_hat(gu, gz, Vu, Vz)
+    mbar = immediate_influence(a_prev, x, gu, gz)
+    m_next = influence_update(dphi, jhat, m_prev, mbar)
+    return a, m_next
+
+
+def param_count(n, n_in):
+    """p = 2n(n_in + n + 1), the flat layout length."""
+    return 2 * n * (n_in + n + 1)

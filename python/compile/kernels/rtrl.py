@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: the RTRL influence-matrix update — the paper's compute
+hot-spot (`M ← φ' ⊙ (Ĵ·M + M̄)`, Eq. 10) as a blocked, activity-gated kernel.
+
+TPU mapping of the paper's insight (DESIGN.md §Hardware-Adaptation):
+
+* the `n×p` influence matrix is tiled into `(ROW_BLK × COL_BLK)` panels; the
+  grid sweeps (row-block, col-panel). `Ĵ`'s `(ROW_BLK × n)` slab and one
+  `(n × COL_BLK)` panel of `M_prev` feed the MXU per step;
+* **activity sparsity becomes block-row skipping**: the paper zeroes whole
+  rows of `J`/`M̄`/`M` where `φ'(v_k) = 0`; the kernel reduces `φ'` over its
+  row block and skips the entire matmul through `@pl.when` when the block is
+  inactive — the block-granular version of event-driven skipping that a
+  systolic array can actually exploit (the GPU version would be a warp-level
+  gather; on TPU the unit of skip is the tile);
+* parameter sparsity lives *outside* the kernel: masked columns are compacted
+  away before the panel sweep (the Rust engines do the same), so `p` here is
+  already `ω̃p`.
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls; the BlockSpec
+schedule is still the TPU design of record.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _influence_kernel(dphi_ref, jhat_ref, mprev_ref, mbar_ref, out_ref):
+    """One (row-block × col-panel) tile of M_next."""
+    dphi = dphi_ref[...]
+    # Block-level activity gate: all rows in this block dead ⇒ whole tile is
+    # zero; skip both the MXU contraction and the M̄ add.
+    active = jnp.any(dphi != 0.0)
+
+    @pl.when(active)
+    def _compute():  # pragma: no cover - traced
+        jm = jhat_ref[...] @ mprev_ref[...]
+        out_ref[...] = dphi[:, None] * (jm + mbar_ref[...])
+
+    @pl.when(jnp.logical_not(active))
+    def _skip():  # pragma: no cover - traced
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+def pick_block(total, target):
+    """Largest divisor of `total` that is ≤ target (≥ 1)."""
+    best = 1
+    for d in range(1, total + 1):
+        if total % d == 0 and d <= target:
+            best = d
+    return best
+
+
+def influence_update(dphi, jhat, m_prev, mbar, *, row_block=None, col_block=None):
+    """Blocked Eq.-10 update. Shapes: dphi (n,), jhat (n,n), m_prev/mbar (n,p).
+
+    Returns M_next (n, p).
+    """
+    n, p = m_prev.shape
+    assert jhat.shape == (n, n)
+    assert mbar.shape == (n, p)
+    if row_block is None:
+        row_block = pick_block(n, 8)
+    if col_block is None:
+        # MXU-friendly 128-lane panels when p allows it
+        col_block = pick_block(p, 128)
+    assert n % row_block == 0 and p % col_block == 0
+    grid = (n // row_block, p // col_block)
+    return pl.pallas_call(
+        _influence_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block,), lambda i, j: (i,)),        # dphi row block
+            pl.BlockSpec((row_block, n), lambda i, j: (i, 0)),    # Ĵ slab
+            pl.BlockSpec((n, col_block), lambda i, j: (0, j)),    # M_prev panel
+            pl.BlockSpec((row_block, col_block), lambda i, j: (i, j)),  # M̄ tile
+        ],
+        out_specs=pl.BlockSpec((row_block, col_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, p), m_prev.dtype),
+        interpret=True,
+    )(dphi, jhat, m_prev, mbar)
+
+
+def vmem_words(n, p, row_block, col_block):
+    """VMEM residency per grid step (words), for the §Perf roofline estimate:
+    Ĵ slab + M_prev panel + M̄ tile + out tile + dphi block."""
+    return row_block * n + n * col_block + 2 * row_block * col_block + row_block

@@ -1,0 +1,92 @@
+"""L2: the JAX model graphs that get AOT-lowered to `artifacts/*.hlo.txt`.
+
+Three exported computations (consumed by rust/src/runtime):
+
+* ``egru_step``       — batched EGRU forward (calls the L1 Pallas cell kernel)
+* ``rtrl_step``       — one full single-sample dense RTRL step: forward +
+                        Jacobian + immediate influence + Eq.-10 update via the
+                        L1 Pallas influence kernel
+* ``influence_kernel``— the blocked influence update alone
+
+These serve as (a) the dense-XLA baseline the Rust engines are benchmarked
+against and (b) the independent numerical oracle for cross-validation
+(rust/tests/pjrt_xval.rs). Input order and parameter layout match
+rust/src/nn/layout.rs exactly.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import egru as egru_kernel
+from .kernels import ref
+from .kernels import rtrl as rtrl_kernel
+
+
+def make_egru_step(theta, gamma, eps):
+    """Batched forward step: (a_prev, x, Wu, Vu, bu, Wz, Vz, bz) → (a, v, dphi)."""
+
+    def egru_step(a_prev, x, Wu, Vu, bu, Wz, Vz, bz):
+        a, v, dphi = egru_kernel.egru_cell_forward(
+            a_prev, x, Wu, Vu, bu, Wz, Vz, bz, theta=theta, gamma=gamma, eps=eps
+        )
+        return a, v, dphi
+
+    return egru_step
+
+
+def make_rtrl_step(theta, gamma, eps):
+    """Single-sample RTRL step:
+    (a_prev, x, M_prev, Wu, Vu, bu, Wz, Vz, bz) → (a, M_next).
+    """
+
+    def rtrl_step(a_prev, x, m_prev, Wu, Vu, bu, Wz, Vz, bz):
+        a, _v, dphi, _u, _z, gu, gz = ref.egru_cell(
+            a_prev, x, Wu, Vu, bu, Wz, Vz, bz, theta, gamma, eps
+        )
+        jhat = ref.jacobian_hat(gu, gz, Vu, Vz)
+        mbar = ref.immediate_influence(a_prev, x, gu, gz)
+        m_next = rtrl_kernel.influence_update(dphi, jhat, m_prev, mbar)
+        return a, m_next
+
+    return rtrl_step
+
+
+def make_influence_kernel():
+    """(dphi, jhat, m_prev, mbar) → (m_next,) via the Pallas kernel."""
+
+    def influence(dphi, jhat, m_prev, mbar):
+        return (rtrl_kernel.influence_update(dphi, jhat, m_prev, mbar),)
+
+    return influence
+
+
+def rtrl_sequence_grad(xs, targets_onehot, m0, a0, params, wo, bo, theta, gamma, eps):
+    """Reference multi-step RTRL gradient over a short sequence (test-only):
+    runs T steps of forward + influence update, accumulating
+    grad_w = Σ_t M_tᵀ · c̄_t for softmax-CE losses at every supervised step.
+
+    ``targets_onehot`` rows of all-zeros mean "no loss at this step".
+    Returns (total_loss, grad_w flat (p,)).
+    """
+    Wu, Vu, bu, Wz, Vz, bz = params
+    a, m = a0, m0
+    p = m0.shape[1]
+    grad = jnp.zeros((p,), dtype=m0.dtype)
+    total = 0.0
+    for t in range(xs.shape[0]):
+        a_prev = a
+        a, _v, dphi, _u, _z, gu, gz = ref.egru_cell(
+            a_prev, xs[t], Wu, Vu, bu, Wz, Vz, bz, theta, gamma, eps
+        )
+        jhat = ref.jacobian_hat(gu, gz, Vu, Vz)
+        mbar = ref.immediate_influence(a_prev, xs[t], gu, gz)
+        m = ref.influence_update(dphi, jhat, m, mbar)
+        has_loss = targets_onehot[t].sum() > 0
+        logits = wo @ a + bo
+        probs = jnp.exp(logits - jnp.max(logits))
+        probs = probs / probs.sum()
+        loss_t = -jnp.sum(targets_onehot[t] * jnp.log(jnp.maximum(probs, 1e-12)))
+        dlogits = jnp.where(has_loss, probs - targets_onehot[t], jnp.zeros_like(probs))
+        c_bar = wo.T @ dlogits
+        grad = grad + m.T @ c_bar
+        total = total + jnp.where(has_loss, loss_t, 0.0)
+    return total, grad

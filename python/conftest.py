@@ -1,0 +1,6 @@
+"""Ensure `compile.*` imports resolve when pytest runs from the repo root."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,137 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and random contents; exact structural properties
+(binary activations, zero rows under dead pseudo-derivatives, block-skip
+equivalence) are asserted separately.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import egru as egru_kernel
+from compile.kernels import ref
+from compile.kernels import rtrl as rtrl_kernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_params(rng, n, n_in, scale=0.5):
+    return [
+        jnp.asarray(rng.uniform(-scale, scale, (n, n_in)), jnp.float32),
+        jnp.asarray(rng.uniform(-scale, scale, (n, n)), jnp.float32),
+        jnp.asarray(rng.uniform(-scale, scale, (n,)), jnp.float32),
+        jnp.asarray(rng.uniform(-scale, scale, (n, n_in)), jnp.float32),
+        jnp.asarray(rng.uniform(-scale, scale, (n, n)), jnp.float32),
+        jnp.asarray(rng.uniform(-scale, scale, (n,)), jnp.float32),
+    ]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16]),
+    n_in=st.sampled_from([1, 2, 3]),
+    batch=st.sampled_from([1, 4, 8, 32]),
+    seed=st.integers(0, 10_000),
+)
+def test_egru_kernel_matches_ref(n, n_in, batch, seed):
+    rng = np.random.default_rng(seed)
+    params = rand_params(rng, n, n_in)
+    a_prev = jnp.asarray(rng.integers(0, 2, (batch, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (batch, n_in)), jnp.float32)
+    a, v, dphi = egru_kernel.egru_cell_forward(
+        a_prev, x, *params, theta=0.1, gamma=0.3, eps=0.5
+    )
+    ar, vr, dr = egru_kernel.egru_cell_reference(
+        a_prev, x, *params, theta=0.1, gamma=0.3, eps=0.5
+    )
+    np.testing.assert_allclose(a, ar, rtol=0, atol=0)
+    np.testing.assert_allclose(v, vr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dphi, dr, rtol=1e-5, atol=1e-6)
+
+
+def test_egru_kernel_binary_activations():
+    rng = np.random.default_rng(0)
+    params = rand_params(rng, 16, 2)
+    a_prev = jnp.zeros((8, 16), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (8, 2)), jnp.float32)
+    a, v, dphi = egru_kernel.egru_cell_forward(
+        a_prev, x, *params, theta=0.1, gamma=0.3, eps=0.5
+    )
+    assert set(np.unique(np.asarray(a))).issubset({0.0, 1.0})
+    # dphi zero exactly where |v| > eps
+    np.testing.assert_array_equal(np.asarray(dphi) == 0.0, np.abs(np.asarray(v)) > 0.5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16]),
+    n_in=st.sampled_from([1, 2]),
+    seed=st.integers(0, 10_000),
+)
+def test_influence_kernel_matches_ref(n, n_in, seed):
+    rng = np.random.default_rng(seed)
+    p = ref.param_count(n, n_in)
+    dphi = jnp.asarray(
+        rng.uniform(0, 0.3, n) * rng.integers(0, 2, n), jnp.float32
+    )  # some rows dead
+    jhat = jnp.asarray(rng.normal(0, 0.3, (n, n)), jnp.float32)
+    m_prev = jnp.asarray(rng.normal(0, 0.1, (n, p)), jnp.float32)
+    mbar = jnp.asarray(rng.normal(0, 0.1, (n, p)), jnp.float32)
+    out = rtrl_kernel.influence_update(dphi, jhat, m_prev, mbar)
+    expect = ref.influence_update(dphi, jhat, m_prev, mbar)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_influence_kernel_zero_rows_where_dphi_zero():
+    rng = np.random.default_rng(3)
+    n, n_in = 8, 2
+    p = ref.param_count(n, n_in)
+    dphi = jnp.zeros((n,), jnp.float32).at[2].set(0.3).at[5].set(0.1)
+    jhat = jnp.asarray(rng.normal(0, 0.3, (n, n)), jnp.float32)
+    m_prev = jnp.asarray(rng.normal(0, 0.1, (n, p)), jnp.float32)
+    mbar = jnp.asarray(rng.normal(0, 0.1, (n, p)), jnp.float32)
+    out = np.asarray(rtrl_kernel.influence_update(dphi, jhat, m_prev, mbar))
+    for k in range(n):
+        if k not in (2, 5):
+            assert np.all(out[k] == 0.0), f"row {k} should be zero (paper Eq. 10)"
+    assert np.any(out[2] != 0.0)
+
+
+def test_influence_kernel_all_dead_is_all_zero():
+    n, n_in = 8, 2
+    p = ref.param_count(n, n_in)
+    rng = np.random.default_rng(4)
+    out = rtrl_kernel.influence_update(
+        jnp.zeros((n,), jnp.float32),
+        jnp.asarray(rng.normal(0, 1, (n, n)), jnp.float32),
+        jnp.asarray(rng.normal(0, 1, (n, p)), jnp.float32),
+        jnp.asarray(rng.normal(0, 1, (n, p)), jnp.float32),
+    )
+    assert np.all(np.asarray(out) == 0.0)
+
+
+@pytest.mark.parametrize("row_block,col_block", [(1, None), (None, 22), (2, 44), (8, None)])
+def test_influence_kernel_blocking_invariant(row_block, col_block):
+    """The result must not depend on the tiling."""
+    rng = np.random.default_rng(5)
+    n, n_in = 8, 2
+    p = ref.param_count(n, n_in)
+    dphi = jnp.asarray(rng.uniform(0, 0.3, n), jnp.float32)
+    jhat = jnp.asarray(rng.normal(0, 0.3, (n, n)), jnp.float32)
+    m_prev = jnp.asarray(rng.normal(0, 0.1, (n, p)), jnp.float32)
+    mbar = jnp.asarray(rng.normal(0, 0.1, (n, p)), jnp.float32)
+    base = rtrl_kernel.influence_update(dphi, jhat, m_prev, mbar)
+    tiled = rtrl_kernel.influence_update(
+        dphi, jhat, m_prev, mbar, row_block=row_block, col_block=col_block
+    )
+    np.testing.assert_allclose(base, tiled, rtol=1e-5, atol=1e-6)
+
+
+def test_pick_block():
+    assert rtrl_kernel.pick_block(608, 128) == 76  # 608 = 8*76
+    assert rtrl_kernel.pick_block(16, 8) == 8
+    assert rtrl_kernel.pick_block(7, 4) == 1
+    assert rtrl_kernel.pick_block(128, 128) == 128

@@ -1,0 +1,141 @@
+"""L2 correctness: the exported model graphs and the AOT pipeline."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_params(rng, n, n_in, scale=0.4):
+    return [
+        jnp.asarray(rng.uniform(-scale, scale, (n, n_in)), jnp.float32),
+        jnp.asarray(rng.uniform(-scale, scale, (n, n)), jnp.float32),
+        jnp.asarray(rng.uniform(-scale, scale, (n,)), jnp.float32),
+        jnp.asarray(rng.uniform(-scale, scale, (n, n_in)), jnp.float32),
+        jnp.asarray(rng.uniform(-scale, scale, (n, n)), jnp.float32),
+        jnp.asarray(rng.uniform(-scale, scale, (n,)), jnp.float32),
+    ]
+
+
+def test_egru_step_shapes_and_values():
+    rng = np.random.default_rng(1)
+    step = model.make_egru_step(0.1, 0.3, 0.5)
+    params = rand_params(rng, aot.N, aot.N_IN)
+    a_prev = jnp.asarray(rng.integers(0, 2, (aot.BATCH, aot.N)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (aot.BATCH, aot.N_IN)), jnp.float32)
+    a, v, dphi = step(a_prev, x, *params)
+    assert a.shape == (aot.BATCH, aot.N)
+    ar, vr, dr, *_ = ref.egru_cell(a_prev, x, *params, 0.1, 0.3, 0.5)
+    np.testing.assert_allclose(a, ar, atol=0)
+    np.testing.assert_allclose(v, vr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dphi, dr, rtol=1e-5, atol=1e-6)
+
+
+def test_rtrl_step_matches_pure_ref():
+    rng = np.random.default_rng(2)
+    n, n_in = 8, 2
+    p = ref.param_count(n, n_in)
+    step = model.make_rtrl_step(0.1, 0.3, 0.5)
+    params = rand_params(rng, n, n_in)
+    a_prev = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, n_in), jnp.float32)
+    m_prev = jnp.asarray(rng.normal(0, 0.05, (n, p)), jnp.float32)
+    a, m_next = step(a_prev, x, m_prev, *params)
+    ar, mr = ref.rtrl_step(a_prev, x, m_prev, *params, 0.1, 0.3, 0.5)
+    np.testing.assert_allclose(a, ar, atol=0)
+    np.testing.assert_allclose(m_next, mr, rtol=1e-4, atol=1e-6)
+
+
+def test_immediate_influence_structure():
+    """Mbar only touches unit k's fan-in slots — the 'default sparsity'."""
+    rng = np.random.default_rng(3)
+    n, n_in = 6, 2
+    a_prev = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, n_in), jnp.float32)
+    gu = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    gz = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    mbar = np.asarray(ref.immediate_influence(a_prev, x, gu, gz))
+    # block offsets in the flat layout
+    off = [0, n * n_in, n * n_in + n * n, n * (n_in + n + 1)]
+    for k in range(n):
+        for pi in range(mbar.shape[1]):
+            half = pi % (n * (n_in + n + 1))
+            if half < n * n_in:
+                owner = half // n_in
+            elif half < n * n_in + n * n:
+                owner = (half - n * n_in) // n
+            else:
+                owner = half - n * n_in - n * n
+            if owner != k:
+                assert mbar[k, pi] == 0.0, f"Mbar[{k},{pi}] leaked outside fan-in"
+
+
+def test_rtrl_step_influence_matches_autodiff_jacobian():
+    """Jhat from ref must equal jax.jacobian of the pre-activation v
+    w.r.t. a_prev (the smooth part of Eq. 6)."""
+    rng = np.random.default_rng(4)
+    n, n_in = 5, 2
+    params = rand_params(rng, n, n_in)
+    x = jnp.asarray(rng.normal(0, 1, n_in), jnp.float32)
+    a_prev = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+
+    def v_of_a(a):
+        _a, v, *_ = ref.egru_cell(a, x, *params, 0.1, 0.3, 0.5)
+        return v
+
+    jac = jax.jacobian(v_of_a)(a_prev)
+    _a, _v, _d, _u, _z, gu, gz = ref.egru_cell(a_prev, x, *params, 0.1, 0.3, 0.5)
+    jhat = ref.jacobian_hat(gu, gz, params[1], params[4])
+    np.testing.assert_allclose(jac, jhat, rtol=1e-4, atol=1e-5)
+
+
+def test_immediate_influence_matches_autodiff():
+    """Mbar must equal jax.jacobian of v w.r.t. the flat parameter vector."""
+    rng = np.random.default_rng(5)
+    n, n_in = 4, 2
+    params = rand_params(rng, n, n_in)
+    x = jnp.asarray(rng.normal(0, 1, n_in), jnp.float32)
+    a_prev = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+
+    sizes = [n * n_in, n * n, n, n * n_in, n * n, n]
+    shapes = [(n, n_in), (n, n), (n,), (n, n_in), (n, n), (n,)]
+
+    def v_of_flat(w):
+        parts = []
+        o = 0
+        for s, sh in zip(sizes, shapes):
+            parts.append(w[o : o + s].reshape(sh))
+            o += s
+        _a, v, *_ = ref.egru_cell(a_prev, x, *parts, 0.1, 0.3, 0.5)
+        return v
+
+    flat = jnp.concatenate([p.reshape(-1) for p in params])
+    jac = jax.jacobian(v_of_flat)(flat)
+    _a, _v, _d, _u, _z, gu, gz = ref.egru_cell(a_prev, x, *params, 0.1, 0.3, 0.5)
+    mbar = ref.immediate_influence(a_prev, x, gu, gz)
+    np.testing.assert_allclose(jac, mbar, rtol=1e-4, atol=1e-5)
+
+
+def test_aot_writes_artifacts(tmp_path):
+    """The AOT pipeline produces parseable HLO text + a manifest."""
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    for name in ["egru_step", "rtrl_step", "influence_kernel"]:
+        text = (out / f"{name}.hlo.txt").read_text()
+        assert text.startswith("HloModule"), f"{name} not HLO text"
+    manifest = (out / "manifest.txt").read_text()
+    assert "egru_step" in manifest and "n=16" in manifest

@@ -1,0 +1,81 @@
+//! Shared micro-bench harness (no criterion offline): warmup + timed runs,
+//! median-of-samples reporting, and a tabular printer.
+
+use std::time::Instant;
+
+/// Timing result for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    #[allow(dead_code)]
+    pub iters: u64,
+}
+
+/// Measure `f` (one logical operation per call). Auto-scales iteration count
+/// to ~`target_ms` per sample, takes `samples` samples, reports median.
+pub fn bench<F: FnMut()>(name: &str, target_ms: f64, samples: usize, mut f: F) -> Sample {
+    // warmup + calibration
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let el = t0.elapsed().as_secs_f64() * 1e3;
+        if el > target_ms || iters > (1 << 24) {
+            break;
+        }
+        iters = (iters * 2).max(((iters as f64) * target_ms / el.max(1e-6)) as u64 + 1);
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t0.elapsed().as_secs_f64() * 1e9 / iters as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+    Sample { name: name.to_string(), median_ns: median, mean_ns: mean, stddev_ns: var.sqrt(), iters }
+}
+
+/// Pretty-print a group of samples with a relative column.
+pub fn print_table(title: &str, samples: &[Sample]) {
+    println!("\n=== {title} ===");
+    println!("{:<38}{:>14}{:>14}{:>10}{:>10}", "case", "median", "mean", "±σ%", "rel");
+    let base = samples.first().map(|s| s.median_ns).unwrap_or(1.0);
+    for s in samples {
+        println!(
+            "{:<38}{:>14}{:>14}{:>9.1}%{:>10.3}",
+            s.name,
+            fmt_ns(s.median_ns),
+            fmt_ns(s.mean_ns),
+            100.0 * s.stddev_ns / s.mean_ns.max(1e-9),
+            s.median_ns / base
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

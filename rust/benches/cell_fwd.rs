@@ -1,0 +1,47 @@
+//! Cell forward-pass micro-bench: the `ω̃α̃n²` event-driven gather
+//! (Table 1's forward term) vs dense activity.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{bench, print_table};
+
+use sparse_rtrl::metrics::OpCounter;
+use sparse_rtrl::nn::{CellScratch, RnnCell};
+use sparse_rtrl::sparse::MaskPattern;
+use sparse_rtrl::util::Pcg64;
+
+fn bench_forward(name: &str, n: usize, density: f32, active_frac: f32) -> bench_util::Sample {
+    let mut rng = Pcg64::new(3);
+    let mask = if density < 1.0 {
+        Some(MaskPattern::random(n, n, density, &mut rng))
+    } else {
+        None
+    };
+    let cell = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, mask, &mut rng);
+    let mut scratch = CellScratch::new(n);
+    let mut ops = OpCounter::new();
+    // fixed binary activation pattern at the requested activity level
+    let active = (active_frac * n as f32).round() as usize;
+    let mut a_prev = vec![0.0f32; n];
+    for k in 0..active {
+        a_prev[k] = 1.0;
+    }
+    let x = [0.4f32, -0.7];
+    bench(name, 10.0, 7, || {
+        cell.forward(&a_prev, &x, &mut scratch, &mut ops);
+        bench_util::black_box(scratch.v[0]);
+    })
+}
+
+fn main() {
+    for &n in &[16usize, 64, 128, 256] {
+        let samples = vec![
+            bench_forward("dense weights, all units active", n, 1.0, 1.0),
+            bench_forward("dense weights, 25% active", n, 1.0, 0.25),
+            bench_forward("dense weights, 1 unit active", n, 1.0, 1.0 / n as f32),
+            bench_forward("ω̃=0.2 weights, all active", n, 0.2, 1.0),
+            bench_forward("ω̃=0.2 weights, 25% active", n, 0.2, 0.25),
+        ];
+        print_table(&format!("EGRU cell forward, n={n}"), &samples);
+    }
+}

@@ -1,0 +1,47 @@
+//! Substrate micro-benches: CSR matvec vs dense matvec, row-gather patterns,
+//! RowSet overheads — the building blocks whose costs Table 1 aggregates.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{bench, black_box, print_table};
+
+use sparse_rtrl::sparse::{Csr, MaskPattern, RowSet};
+use sparse_rtrl::tensor::Matrix;
+use sparse_rtrl::util::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::new(1);
+    for &n in &[64usize, 256, 1024] {
+        let dense_buf: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let dense = Matrix::from_vec(n, n, dense_buf.clone());
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; n];
+        let mut samples = Vec::new();
+        samples.push(bench(&format!("dense matvec {n}x{n}"), 10.0, 7, || {
+            dense.matvec_into(&x, &mut y);
+            black_box(y[0]);
+        }));
+        for density in [0.5f32, 0.2, 0.1] {
+            let mask = MaskPattern::random(n, n, density, &mut rng);
+            let csr = Csr::from_mask(&mask, &dense_buf);
+            samples.push(bench(&format!("csr matvec ω̃={density}"), 10.0, 7, || {
+                csr.matvec_into(&x, &mut y);
+                black_box(y[0]);
+            }));
+        }
+        print_table(&format!("matvec substrate, n={n}"), &samples);
+    }
+
+    // RowSet traffic typical of one RTRL step
+    let n = 128;
+    let mut set = RowSet::empty(n);
+    let pattern: Vec<usize> = (0..n).filter(|k| k % 3 != 0).collect();
+    let s = bench("rowset clear+insert 2/3", 5.0, 7, || {
+        set.clear();
+        for &k in &pattern {
+            set.insert(k);
+        }
+        black_box(set.len());
+    });
+    print_table("active-row tracking, n=128", &[s]);
+}

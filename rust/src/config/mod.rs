@@ -1,0 +1,11 @@
+//! Experiment configuration (serde + TOML).
+//!
+//! One [`ExperimentConfig`] fully determines a run: model, sparsity levels,
+//! algorithm, task, optimizer and seed. The sweep coordinator expands a base
+//! config across the Fig.-3 grid.
+
+pub mod experiment;
+
+pub use experiment::{
+    AlgorithmKind, CellKind, ExperimentConfig, ModelConfig, TaskConfig, TaskKind, TrainConfig,
+};

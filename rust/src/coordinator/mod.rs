@@ -1,0 +1,5 @@
+//! Sweep coordinator: runs the Fig.-3 experiment grid across async workers.
+
+pub mod sweep;
+
+pub use sweep::{run_sweep, SweepPlan, SweepResult};

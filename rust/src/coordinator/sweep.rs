@@ -1,0 +1,324 @@
+//! The Fig.-3 sweep: {activity sparsity on/off} × {parameter sparsity ω} ×
+//! {seeds}, fanned out over the in-tree worker pool (one OS thread per run,
+//! bounded by available parallelism), aggregated to mean ± stderr.
+
+use crate::config::{AlgorithmKind, CellKind, ExperimentConfig};
+use crate::metrics::curve::Curve;
+use crate::train::{build_dataset, Trainer};
+use crate::util::math::{mean, stderr};
+use crate::util::pool;
+
+/// Grid specification for the sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    /// Base configuration (iterations, batch size, task, model dims).
+    pub base: ExperimentConfig,
+    /// Parameter-sparsity levels ω (paper: 0, 0.5, 0.8, 0.9).
+    pub param_sparsities: Vec<f32>,
+    /// Activity-sparsity arms (paper: with = EGRU, without = gated-tanh).
+    pub activity: Vec<bool>,
+    /// Seeds (paper: 5 runs).
+    pub seeds: Vec<u64>,
+    /// Max concurrent runs (0 = available parallelism).
+    pub max_workers: usize,
+}
+
+impl SweepPlan {
+    /// The paper's Fig.-3 grid over a base config.
+    pub fn fig3(base: ExperimentConfig, seeds: usize) -> Self {
+        SweepPlan {
+            base,
+            param_sparsities: vec![0.0, 0.5, 0.8, 0.9],
+            activity: vec![true, false],
+            seeds: (1..=seeds as u64).collect(),
+            max_workers: 0,
+        }
+    }
+
+    /// Expand into concrete run configs.
+    pub fn expand(&self) -> Vec<RunSpec> {
+        let mut runs = Vec::new();
+        for &activity in &self.activity {
+            for &omega in &self.param_sparsities {
+                for &seed in &self.seeds {
+                    let mut cfg = self.base.clone();
+                    cfg.model.param_sparsity = omega;
+                    cfg.model.cell = if activity { CellKind::Egru } else { CellKind::GatedTanh };
+                    // engine matched to the arm: exact either way, but op
+                    // counts reflect what that arm's hardware would exploit
+                    cfg.train.algorithm = if activity {
+                        AlgorithmKind::RtrlBoth
+                    } else {
+                        AlgorithmKind::RtrlParam
+                    };
+                    cfg.seed = seed;
+                    cfg.name = format!(
+                        "spiral-{}-w{:02}-s{}",
+                        if activity { "egru" } else { "tanh" },
+                        (omega * 100.0) as u32,
+                        seed
+                    );
+                    runs.push(RunSpec { activity, omega, seed, cfg });
+                }
+            }
+        }
+        runs
+    }
+}
+
+/// One expanded run.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub activity: bool,
+    pub omega: f32,
+    pub seed: u64,
+    pub cfg: ExperimentConfig,
+}
+
+/// Result of one run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub activity: bool,
+    pub omega: f32,
+    pub seed: u64,
+    pub curve: Curve,
+    pub final_val_accuracy: f32,
+    pub total_macs: u64,
+    pub influence_macs: u64,
+    pub state_memory_words: usize,
+    pub wallclock_secs: f64,
+}
+
+/// All runs of a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub runs: Vec<RunRecord>,
+}
+
+/// Execute one run synchronously (used by workers and by unit tests).
+pub fn run_one(spec: &RunSpec) -> RunRecord {
+    let t0 = std::time::Instant::now();
+    let mut data_rng = Trainer::data_rng(spec.cfg.seed);
+    let (train, val) = build_dataset(&spec.cfg, &mut data_rng);
+    let mut trainer = Trainer::new(spec.cfg.clone());
+    let out = trainer.train(&train, &val);
+    RunRecord {
+        activity: spec.activity,
+        omega: spec.omega,
+        seed: spec.seed,
+        curve: out.curve,
+        final_val_accuracy: out.final_val_accuracy,
+        total_macs: out.ops.total_macs(),
+        influence_macs: out.ops.macs_in(crate::metrics::Phase::InfluenceUpdate),
+        state_memory_words: out.state_memory_words,
+        wallclock_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Run the full sweep on a bounded in-tree thread pool.
+pub fn run_sweep(plan: &SweepPlan, progress: bool) -> SweepResult {
+    let specs = plan.expand();
+    let workers = if plan.max_workers > 0 {
+        plan.max_workers
+    } else {
+        pool::available_workers()
+    };
+    let total = specs.len();
+    let done = std::sync::atomic::AtomicUsize::new(0);
+    let runs = pool::run_parallel(specs, workers, |_, spec| {
+        let rec = run_one(&spec);
+        let i = done.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1;
+        if progress {
+            eprintln!(
+                "[sweep {}/{}] {} -> val_acc={:.3} macs={} ({:.1}s)",
+                i, total, spec.cfg.name, rec.final_val_accuracy, rec.total_macs, rec.wallclock_secs
+            );
+        }
+        rec
+    });
+    SweepResult { runs }
+}
+
+/// One aggregated point of an arm's mean curve.
+#[derive(Debug, Clone)]
+pub struct ArmPoint {
+    pub iteration: u64,
+    pub compute_adjusted_mean: f64,
+    pub loss_mean: f32,
+    pub loss_stderr: f32,
+    pub val_accuracy_mean: f32,
+    pub val_accuracy_stderr: f32,
+    pub alpha_mean: f32,
+    pub beta_mean: f32,
+    pub influence_sparsity_mean: f32,
+}
+
+impl SweepResult {
+    /// Arms present, sorted (activity desc, ω asc).
+    pub fn arms(&self) -> Vec<(bool, f32)> {
+        let mut arms: Vec<(bool, f32)> = Vec::new();
+        for r in &self.runs {
+            if !arms.iter().any(|&(a, w)| a == r.activity && (w - r.omega).abs() < 1e-6) {
+                arms.push((r.activity, r.omega));
+            }
+        }
+        arms.sort_by(|a, b| {
+            b.0.cmp(&a.0).then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        arms
+    }
+
+    /// Mean ± stderr curve of one arm, point-wise over the shared logging
+    /// grid (runs log at identical iterations by construction).
+    pub fn aggregate(&self, activity: bool, omega: f32) -> Vec<ArmPoint> {
+        let members: Vec<&RunRecord> = self
+            .runs
+            .iter()
+            .filter(|r| r.activity == activity && (r.omega - omega).abs() < 1e-6)
+            .collect();
+        if members.is_empty() {
+            return Vec::new();
+        }
+        let npts = members.iter().map(|r| r.curve.points.len()).min().unwrap_or(0);
+        (0..npts)
+            .map(|i| {
+                let losses: Vec<f32> = members.iter().map(|r| r.curve.points[i].loss).collect();
+                let vals: Vec<f32> = members
+                    .iter()
+                    .filter_map(|r| r.curve.points[i].val_accuracy)
+                    .collect();
+                ArmPoint {
+                    iteration: members[0].curve.points[i].iteration,
+                    compute_adjusted_mean: members
+                        .iter()
+                        .map(|r| r.curve.points[i].compute_adjusted)
+                        .sum::<f64>()
+                        / members.len() as f64,
+                    loss_mean: mean(&losses),
+                    loss_stderr: stderr(&losses),
+                    val_accuracy_mean: mean(&vals),
+                    val_accuracy_stderr: stderr(&vals),
+                    alpha_mean: mean(
+                        &members.iter().map(|r| r.curve.points[i].alpha).collect::<Vec<_>>(),
+                    ),
+                    beta_mean: mean(
+                        &members.iter().map(|r| r.curve.points[i].beta).collect::<Vec<_>>(),
+                    ),
+                    influence_sparsity_mean: mean(
+                        &members
+                            .iter()
+                            .map(|r| r.curve.points[i].influence_sparsity)
+                            .collect::<Vec<_>>(),
+                    ),
+                }
+            })
+            .collect()
+    }
+
+    /// Long-form CSV of every logged point of every run (Fig. 3 source data).
+    pub fn to_long_csv(&self) -> String {
+        let mut s = String::from(
+            "activity,omega,seed,iteration,compute_adjusted,loss,accuracy,val_accuracy,alpha,beta,influence_sparsity,influence_macs\n",
+        );
+        for r in &self.runs {
+            for p in &r.curve.points {
+                s.push_str(&format!(
+                    "{},{},{},{},{:.6},{:.6},{:.4},{},{:.4},{:.4},{:.4},{}\n",
+                    r.activity,
+                    r.omega,
+                    r.seed,
+                    p.iteration,
+                    p.compute_adjusted,
+                    p.loss,
+                    p.accuracy,
+                    p.val_accuracy.map(|v| format!("{v:.4}")).unwrap_or_default(),
+                    p.alpha,
+                    p.beta,
+                    p.influence_sparsity,
+                    p.influence_macs,
+                ));
+            }
+        }
+        s
+    }
+
+    /// Aggregated CSV (one row per arm × logged iteration).
+    pub fn to_summary_csv(&self) -> String {
+        let mut s = String::from(
+            "activity,omega,iteration,compute_adjusted_mean,loss_mean,loss_stderr,val_acc_mean,val_acc_stderr,alpha_mean,beta_mean,influence_sparsity_mean\n",
+        );
+        for (activity, omega) in self.arms() {
+            for p in self.aggregate(activity, omega) {
+                s.push_str(&format!(
+                    "{},{},{},{:.6},{:.6},{:.6},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
+                    activity,
+                    omega,
+                    p.iteration,
+                    p.compute_adjusted_mean,
+                    p.loss_mean,
+                    p.loss_stderr,
+                    p.val_accuracy_mean,
+                    p.val_accuracy_stderr,
+                    p.alpha_mean,
+                    p.beta_mean,
+                    p.influence_sparsity_mean,
+                ));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_plan() -> SweepPlan {
+        let mut base = ExperimentConfig::default();
+        base.task.num_sequences = 80;
+        base.train.iterations = 6;
+        base.train.batch_size = 4;
+        base.train.log_every = 2;
+        base.train.eval_every = 3;
+        base.train.eval_sequences = 8;
+        base.model.hidden = 6;
+        SweepPlan {
+            base,
+            param_sparsities: vec![0.0, 0.8],
+            activity: vec![true, false],
+            seeds: vec![1, 2],
+            max_workers: 2,
+        }
+    }
+
+    #[test]
+    fn expand_covers_grid() {
+        let plan = tiny_plan();
+        let runs = plan.expand();
+        assert_eq!(runs.len(), 2 * 2 * 2);
+        // EGRU for activity arms, gated-tanh otherwise
+        for r in &runs {
+            if r.activity {
+                assert_eq!(r.cfg.model.cell, CellKind::Egru);
+                assert_eq!(r.cfg.train.algorithm, AlgorithmKind::RtrlBoth);
+            } else {
+                assert_eq!(r.cfg.model.cell, CellKind::GatedTanh);
+                assert_eq!(r.cfg.train.algorithm, AlgorithmKind::RtrlParam);
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_runs_and_aggregates() {
+        let plan = tiny_plan();
+        let result = run_sweep(&plan, false);
+        assert_eq!(result.runs.len(), 8);
+        assert_eq!(result.arms().len(), 4);
+        let agg = result.aggregate(true, 0.0);
+        assert!(!agg.is_empty());
+        let csv = result.to_summary_csv();
+        assert!(csv.lines().count() > 4);
+        let long = result.to_long_csv();
+        assert!(long.lines().count() > 8);
+    }
+}

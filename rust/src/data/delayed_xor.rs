@@ -1,0 +1,72 @@
+//! Delayed-XOR task: two ±1 pulses arrive at random times on one channel;
+//! at the end the network must output the XOR of their signs. Tests
+//! multiplicative temporal interactions (a single pulse carries no signal).
+
+use super::{Dataset, Sequence, StepTarget};
+use crate::util::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct DelayedXorConfig {
+    pub num_sequences: usize,
+    pub timesteps: usize,
+}
+
+impl Default for DelayedXorConfig {
+    fn default() -> Self {
+        DelayedXorConfig { num_sequences: 2000, timesteps: 12 }
+    }
+}
+
+/// Generate the delayed-XOR dataset (input channels `[pulse, end_marker]`).
+pub fn generate(cfg: &DelayedXorConfig, rng: &mut Pcg64) -> Dataset {
+    assert!(cfg.timesteps >= 4);
+    let mut seqs = Vec::with_capacity(cfg.num_sequences);
+    for _ in 0..cfg.num_sequences {
+        let t1 = rng.below((cfg.timesteps / 2) as u64) as usize;
+        let t2 = cfg.timesteps / 2 + rng.below((cfg.timesteps / 2 - 1) as u64) as usize;
+        let b1 = rng.below(2) == 1;
+        let b2 = rng.below(2) == 1;
+        let class = (b1 ^ b2) as usize;
+        let mut inputs = vec![vec![0.0f32; 2]; cfg.timesteps];
+        let mut targets = vec![StepTarget::None; cfg.timesteps];
+        inputs[t1][0] = if b1 { 1.0 } else { -1.0 };
+        inputs[t2][0] = if b2 { 1.0 } else { -1.0 };
+        inputs[cfg.timesteps - 1][1] = 1.0;
+        targets[cfg.timesteps - 1] = StepTarget::Class(class);
+        seqs.push(Sequence { inputs, targets });
+    }
+    Dataset { seqs, n_in: 2, n_out: 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_pulses_and_final_target() {
+        let cfg = DelayedXorConfig { num_sequences: 20, timesteps: 12 };
+        let mut rng = Pcg64::new(1);
+        let d = generate(&cfg, &mut rng);
+        for s in &d.seqs {
+            let pulses = s.inputs.iter().filter(|x| x[0] != 0.0).count();
+            assert_eq!(pulses, 2);
+            assert!(matches!(s.targets[11], StepTarget::Class(_)));
+            // label equals xor of pulse signs
+            let signs: Vec<bool> =
+                s.inputs.iter().filter(|x| x[0] != 0.0).map(|x| x[0] > 0.0).collect();
+            assert_eq!(s.label().unwrap(), (signs[0] ^ signs[1]) as usize);
+        }
+    }
+
+    #[test]
+    fn pulses_in_separate_halves() {
+        let cfg = DelayedXorConfig { num_sequences: 50, timesteps: 16 };
+        let mut rng = Pcg64::new(2);
+        let d = generate(&cfg, &mut rng);
+        for s in &d.seqs {
+            let times: Vec<usize> =
+                (0..16).filter(|&t| s.inputs[t][0] != 0.0).collect();
+            assert!(times[0] < 8 && times[1] >= 8);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Datasets: the paper's spiral task plus standard temporal-credit
+//! benchmarks and an infinite stream for online learning.
+
+pub mod batch;
+pub mod copy_task;
+pub mod delayed_xor;
+pub mod spiral;
+pub mod stream;
+
+pub use batch::BatchIter;
+pub use spiral::SpiralDataset;
+
+use crate::rtrl::Target;
+
+/// Owned per-step supervision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepTarget {
+    None,
+    Class(usize),
+    Vector(Vec<f32>),
+}
+
+impl StepTarget {
+    /// Borrowed view for the engines.
+    pub fn as_target(&self) -> Target<'_> {
+        match self {
+            StepTarget::None => Target::None,
+            StepTarget::Class(c) => Target::Class(*c),
+            StepTarget::Vector(v) => Target::Vector(v),
+        }
+    }
+}
+
+/// One labelled sequence.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    /// `inputs[t]` is the `n_in`-dimensional input at step `t`.
+    pub inputs: Vec<Vec<f32>>,
+    /// `targets[t]` is the supervision at step `t` (often only final step).
+    pub targets: Vec<StepTarget>,
+}
+
+impl Sequence {
+    pub fn len(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs.is_empty()
+    }
+
+    /// Class label of the last supervised step, if classification.
+    pub fn label(&self) -> Option<usize> {
+        self.targets.iter().rev().find_map(|t| match t {
+            StepTarget::Class(c) => Some(*c),
+            _ => None,
+        })
+    }
+}
+
+/// A dataset of sequences with fixed input/output dimensionality.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub seqs: Vec<Sequence>,
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// Split off the last `frac` of sequences as a validation set.
+    pub fn split_validation(mut self, frac: f32) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&frac));
+        let n_val = ((self.seqs.len() as f32) * frac).round() as usize;
+        let val_seqs = self.seqs.split_off(self.seqs.len() - n_val);
+        let val = Dataset { seqs: val_seqs, n_in: self.n_in, n_out: self.n_out };
+        (self, val)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(label: usize) -> Sequence {
+        Sequence {
+            inputs: vec![vec![0.0, 0.0]; 3],
+            targets: vec![StepTarget::None, StepTarget::None, StepTarget::Class(label)],
+        }
+    }
+
+    #[test]
+    fn label_finds_last_class() {
+        assert_eq!(seq(1).label(), Some(1));
+    }
+
+    #[test]
+    fn split_validation_sizes() {
+        let d = Dataset { seqs: (0..100).map(|i| seq(i % 2)).collect(), n_in: 2, n_out: 2 };
+        let (train, val) = d.split_validation(0.2);
+        assert_eq!(train.len(), 80);
+        assert_eq!(val.len(), 20);
+    }
+
+    #[test]
+    fn step_target_borrows() {
+        let t = StepTarget::Class(3);
+        assert!(matches!(t.as_target(), Target::Class(3)));
+        let v = StepTarget::Vector(vec![1.0]);
+        assert!(matches!(v.as_target(), Target::Vector(_)));
+    }
+}

@@ -1,0 +1,95 @@
+//! Infinite stream for online learning: temporal parity.
+//!
+//! At each step a random bit arrives; the target is the parity of the last
+//! `window` bits. There are no sequence boundaries — exactly the setting
+//! RTRL exists for (BPTT would need to truncate). Used by the
+//! `online_learning` example and the coordinator's streaming server.
+
+use super::StepTarget;
+use crate::util::Pcg64;
+
+/// Stateful generator of `(input, target)` stream steps.
+#[derive(Debug, Clone)]
+pub struct ParityStream {
+    window: usize,
+    history: Vec<bool>,
+    rng: Pcg64,
+    /// Steps emitted so far.
+    pub steps: u64,
+}
+
+impl ParityStream {
+    pub fn new(window: usize, seed: u64) -> Self {
+        assert!(window >= 1);
+        ParityStream { window, history: Vec::new(), rng: Pcg64::new(seed), steps: 0 }
+    }
+
+    pub fn n_in(&self) -> usize {
+        1
+    }
+
+    pub fn n_out(&self) -> usize {
+        2
+    }
+
+    /// Next stream element. Target is `None` until the window has filled.
+    pub fn next_step(&mut self) -> (Vec<f32>, StepTarget) {
+        let bit = self.rng.below(2) == 1;
+        self.history.push(bit);
+        if self.history.len() > self.window {
+            self.history.remove(0);
+        }
+        self.steps += 1;
+        let x = vec![if bit { 1.0 } else { -1.0 }];
+        let target = if self.history.len() == self.window {
+            let parity = self.history.iter().filter(|&&b| b).count() % 2;
+            StepTarget::Class(parity)
+        } else {
+            StepTarget::None
+        };
+        (x, target)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_supervised() {
+        let mut s = ParityStream::new(3, 1);
+        let (_, t0) = s.next_step();
+        let (_, t1) = s.next_step();
+        assert_eq!(t0, StepTarget::None);
+        assert_eq!(t1, StepTarget::None);
+        let (_, t2) = s.next_step();
+        assert!(matches!(t2, StepTarget::Class(_)));
+    }
+
+    #[test]
+    fn parity_is_correct() {
+        let mut s = ParityStream::new(2, 7);
+        let mut last_bits = Vec::new();
+        for _ in 0..100 {
+            let (x, t) = s.next_step();
+            last_bits.push(x[0] > 0.0);
+            if last_bits.len() > 2 {
+                last_bits.remove(0);
+            }
+            if let StepTarget::Class(c) = t {
+                let expect = last_bits.iter().filter(|&&b| b).count() % 2;
+                assert_eq!(c, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let collect = |seed| {
+            let mut s = ParityStream::new(3, seed);
+            (0..20).map(|_| s.next_step().0[0]).collect::<Vec<_>>()
+        };
+        assert_eq!(collect(5), collect(5));
+        assert_ne!(collect(5), collect(6));
+    }
+}

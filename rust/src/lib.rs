@@ -1,0 +1,45 @@
+//! # sparse-rtrl
+//!
+//! Production reproduction of *"Efficient Real Time Recurrent Learning
+//! through combined activity and parameter sparsity"* (Subramoney, 2023).
+//!
+//! The library implements **exact** Real-Time Recurrent Learning (RTRL)
+//! whose per-step cost drops from `O(n²p)` to `O(ω̃²β̃²n²p)` by skipping the
+//! structural zeros that appear in the influence-matrix recursion
+//! `M ← J·M + M̄` when the network is
+//!
+//! * **activity sparse** — a thresholded event-based RNN (`a = H(v)`) whose
+//!   pseudo-derivative `H'(v_k) = 0` zeroes entire *rows* of `J`, `M̄` and
+//!   therefore `M` (paper Eqns. 6–10), and
+//! * **parameter sparse** — a fixed random weight mask zeroes *columns* of
+//!   `M̄`/`M` and elements of `J` (Menick et al., 2020), with the zero
+//!   columns persisting across timesteps.
+//!
+//! Because the savings come from structural zeros in the exact equations, the
+//! sparse engines in [`rtrl`] produce gradients numerically equal to dense
+//! RTRL and to BPTT — enforced by the `grad_equivalence` and
+//! `sparse_exactness` integration tests.
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — event-driven sparse engines, datasets, optimizers,
+//!   training loop, sweep coordinator, op-count instrumentation, reports.
+//! * **L2 (JAX, build time)** — dense EGRU+RTRL step AOT-lowered to HLO text
+//!   (`python/compile/model.py` → `artifacts/*.hlo.txt`), executed from
+//!   [`runtime`] via PJRT as the dense baseline and numerical oracle.
+//! * **L1 (Pallas, build time)** — blocked influence-update kernel with
+//!   row-block activity skipping (`python/compile/kernels/`).
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod nn;
+pub mod optim;
+pub mod report;
+pub mod rtrl;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,147 @@
+//! `sparse-rtrl` CLI: train, sweep, report, inspect artifacts.
+
+use anyhow::{anyhow, bail, Result};
+use sparse_rtrl::config::ExperimentConfig;
+use sparse_rtrl::coordinator::{run_sweep, SweepPlan};
+use sparse_rtrl::report::{csv::write_text, fig1, fig2, table1};
+use sparse_rtrl::runtime::{ArtifactSet, PjrtRuntime};
+use sparse_rtrl::train::{build_dataset, Trainer};
+use sparse_rtrl::util::cli::Args;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+sparse-rtrl — Efficient RTRL through combined activity and parameter sparsity
+
+USAGE:
+  sparse-rtrl train  [--config cfg.toml] [--param-sparsity W] [--iterations N]
+                     [--seed S] [--algorithm NAME] [--cell NAME]
+                     [--out results/train_curve.csv]
+  sparse-rtrl sweep  [--config cfg.toml] [--seeds 5] [--iterations N]
+                     [--sequences N] [--workers 0] [--out-dir results]
+  sparse-rtrl report <table1|fig1|fig2> [--n 16] [--omega 0.8]
+  sparse-rtrl artifacts [--dir artifacts]
+  sparse-rtrl config-dump            # print the default config TOML
+";
+
+fn load_config(args: &mut Args) -> Result<ExperimentConfig> {
+    Ok(match args.get("config") {
+        Some(p) => ExperimentConfig::from_toml(&std::fs::read_to_string(&p)?)
+            .map_err(|e| anyhow!("config {p}: {e}"))?,
+        None => ExperimentConfig::default(),
+    })
+}
+
+fn cmd_train(mut args: Args) -> Result<()> {
+    let mut cfg = load_config(&mut args)?;
+    if let Some(w) = args.get("param-sparsity") {
+        cfg.model.param_sparsity = w.parse().map_err(|_| anyhow!("bad --param-sparsity"))?;
+    }
+    cfg.train.iterations = args.get_parse("iterations", cfg.train.iterations).map_err(err)?;
+    cfg.seed = args.get_parse("seed", cfg.seed).map_err(err)?;
+    if let Some(alg) = args.get("algorithm") {
+        cfg.train.algorithm = sparse_rtrl::config::AlgorithmKind::from_name(&alg)
+            .ok_or_else(|| anyhow!("unknown algorithm {alg:?}"))?;
+    }
+    if let Some(cell) = args.get("cell") {
+        cfg.model.cell = sparse_rtrl::config::CellKind::from_name(&cell)
+            .ok_or_else(|| anyhow!("unknown cell {cell:?} (egru|ev_rnn|gated_tanh|vanilla)"))?;
+    }
+    let out: PathBuf = args.get("out").unwrap_or_else(|| "results/train_curve.csv".into()).into();
+    args.finish().map_err(err)?;
+
+    eprintln!(
+        "training {} (alg={}, ω={}, {} iters)",
+        cfg.name,
+        cfg.train.algorithm.name(),
+        cfg.model.param_sparsity,
+        cfg.train.iterations
+    );
+    let mut data_rng = Trainer::data_rng(cfg.seed);
+    let (train, val) = build_dataset(&cfg, &mut data_rng);
+    let mut trainer = Trainer::new(cfg);
+    let outcome = trainer.train(&train, &val);
+    println!(
+        "final val accuracy: {:.4}\ntotal MACs: {}\nstate memory (words): {}",
+        outcome.final_val_accuracy,
+        outcome.ops.total_macs(),
+        outcome.state_memory_words
+    );
+    println!("{}", outcome.ops.report());
+    write_text(&out, &outcome.curve.to_csv())?;
+    eprintln!("curve written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_sweep(mut args: Args) -> Result<()> {
+    let mut base = load_config(&mut args)?;
+    base.train.iterations = args.get_parse("iterations", base.train.iterations).map_err(err)?;
+    base.task.num_sequences = args.get_parse("sequences", base.task.num_sequences).map_err(err)?;
+    let seeds: usize = args.get_parse("seeds", 5).map_err(err)?;
+    let workers: usize = args.get_parse("workers", 0).map_err(err)?;
+    let out_dir: PathBuf = args.get("out-dir").unwrap_or_else(|| "results".into()).into();
+    args.finish().map_err(err)?;
+
+    let mut plan = SweepPlan::fig3(base, seeds);
+    plan.max_workers = workers;
+    let result = run_sweep(&plan, true);
+    write_text(&out_dir.join("fig3_runs.csv"), &result.to_long_csv())?;
+    write_text(&out_dir.join("fig3_summary.csv"), &result.to_summary_csv())?;
+    eprintln!("wrote {0}/fig3_runs.csv and {0}/fig3_summary.csv", out_dir.display());
+    Ok(())
+}
+
+fn cmd_report(mut args: Args) -> Result<()> {
+    let what = args.pos(1).map(str::to_string).ok_or_else(|| anyhow!("report needs a target"))?;
+    let n: usize = args.get_parse("n", 16).map_err(err)?;
+    let omega: f32 = args.get_parse("omega", 0.8).map_err(err)?;
+    args.finish().map_err(err)?;
+    match what.as_str() {
+        "table1" => println!("{}", table1::render(n, omega, 17)),
+        "fig1" => println!("{}", fig1::render(0.3, 0.5)),
+        "fig2" => println!("{}", fig2::render()),
+        other => bail!("unknown report {other:?} (try table1|fig1|fig2)"),
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(mut args: Args) -> Result<()> {
+    let dir: PathBuf = args.get("dir").unwrap_or_else(|| "artifacts".into()).into();
+    args.finish().map_err(err)?;
+    let set = ArtifactSet::open(&dir);
+    let list = set.list();
+    if list.is_empty() {
+        println!("no artifacts in {} — run `make artifacts`", dir.display());
+        return Ok(());
+    }
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform_name());
+    for name in list {
+        match rt.load(&set.path(&name)) {
+            Ok(_) => println!("  {name}: loads + compiles OK"),
+            Err(e) => println!("  {name}: ERROR {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+fn err(e: String) -> anyhow::Error {
+    anyhow!(e)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(err)?;
+    match args.pos(0) {
+        Some("train") => cmd_train(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("report") => cmd_report(args),
+        Some("artifacts") => cmd_artifacts(args),
+        Some("config-dump") => {
+            print!("{}", ExperimentConfig::default().to_toml());
+            Ok(())
+        }
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

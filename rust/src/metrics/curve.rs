@@ -1,0 +1,128 @@
+//! Learning-curve records: the per-iteration rows behind Fig. 3's panels.
+
+/// One logged training iteration.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    /// Parameter-update iteration index (Fig. 3A/E x-axis).
+    pub iteration: u64,
+    /// Cumulative compute-adjusted iteration (Fig. 3B/F x-axis).
+    pub compute_adjusted: f64,
+    /// Mean training loss over the batch.
+    pub loss: f32,
+    /// Training accuracy over the batch.
+    pub accuracy: f32,
+    /// Validation accuracy (if evaluated this iteration).
+    pub val_accuracy: Option<f32>,
+    /// Mean activation sparsity α this iteration (Fig. 3C).
+    pub alpha: f32,
+    /// Mean pseudo-derivative sparsity β this iteration (Fig. 3C).
+    pub beta: f32,
+    /// Mean influence-matrix sparsity this iteration (Fig. 3D).
+    pub influence_sparsity: f32,
+    /// Measured MACs spent on the influence update this iteration.
+    pub influence_macs: u64,
+}
+
+/// A full learning curve for one run.
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    /// Final validation accuracy (or final train accuracy if never evaluated).
+    pub fn final_accuracy(&self) -> f32 {
+        self.points
+            .iter()
+            .rev()
+            .find_map(|p| p.val_accuracy)
+            .or_else(|| self.points.last().map(|p| p.accuracy))
+            .unwrap_or(0.0)
+    }
+
+    /// First iteration at which val accuracy reached `threshold` (Fig. 3B's
+    /// "converges with the least total compute" comparison), in
+    /// compute-adjusted units. `None` if never reached.
+    pub fn compute_to_accuracy(&self, threshold: f32) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.val_accuracy.unwrap_or(0.0) >= threshold)
+            .map(|p| p.compute_adjusted)
+    }
+
+    /// CSV serialization (one row per point), with header.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "iteration,compute_adjusted,loss,accuracy,val_accuracy,alpha,beta,influence_sparsity,influence_macs\n",
+        );
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{:.4},{},{:.4},{:.4},{:.4},{}\n",
+                p.iteration,
+                p.compute_adjusted,
+                p.loss,
+                p.accuracy,
+                p.val_accuracy.map(|v| format!("{v:.4}")).unwrap_or_default(),
+                p.alpha,
+                p.beta,
+                p.influence_sparsity,
+                p.influence_macs,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(iter: u64, ca: f64, val: Option<f32>) -> CurvePoint {
+        CurvePoint {
+            iteration: iter,
+            compute_adjusted: ca,
+            loss: 1.0,
+            accuracy: 0.5,
+            val_accuracy: val,
+            alpha: 0.0,
+            beta: 0.0,
+            influence_sparsity: 0.0,
+            influence_macs: 0,
+        }
+    }
+
+    #[test]
+    fn compute_to_accuracy_finds_first() {
+        let mut c = Curve::new();
+        c.push(pt(0, 0.1, Some(0.5)));
+        c.push(pt(1, 0.2, Some(0.91)));
+        c.push(pt(2, 0.3, Some(0.95)));
+        assert_eq!(c.compute_to_accuracy(0.9), Some(0.2));
+        assert_eq!(c.compute_to_accuracy(0.99), None);
+    }
+
+    #[test]
+    fn final_accuracy_prefers_val() {
+        let mut c = Curve::new();
+        c.push(pt(0, 0.0, Some(0.8)));
+        c.push(pt(1, 0.0, None));
+        assert_eq!(c.final_accuracy(), 0.8);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut c = Curve::new();
+        c.push(pt(0, 0.0, None));
+        let csv = c.to_csv();
+        assert!(csv.starts_with("iteration,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

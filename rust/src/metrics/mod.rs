@@ -1,0 +1,17 @@
+//! Instrumentation: operation counting, sparsity statistics, learning curves.
+//!
+//! The paper's evaluation metric is *analytic* compute (the
+//! "compute-adjusted iteration", a cumulative `ω̃²β̃²` factor). This module
+//! provides both that analytic measure ([`compute_adjusted`]) and a stronger
+//! *measured* one: [`ops::OpCounter`] counts every multiply-accumulate the
+//! engines actually perform, phase by phase, so Table 1's cost model can be
+//! validated against real op counts rather than asymptotics.
+
+pub mod compute_adjusted;
+pub mod curve;
+pub mod ops;
+pub mod sparsity;
+
+pub use compute_adjusted::ComputeAdjusted;
+pub use ops::{OpCounter, Phase};
+pub use sparsity::SparsityStats;

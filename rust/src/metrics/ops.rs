@@ -1,0 +1,198 @@
+//! Multiply-accumulate and memory-word counters, broken down by phase.
+//!
+//! Counters are incremented in bulk (per row / per gather, never per scalar)
+//! so instrumentation overhead in the hot loop is a single `u64 +=`.
+
+/// Phases of one training step, matching the cost decomposition of Table 1:
+/// the forward term (`ω̃α̃n²`-ish) and the influence-update term
+/// (`ω̃²β̃²n²p`), plus bookkeeping phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Cell forward pass (pre-activations + activation).
+    Forward,
+    /// Jacobian row construction (`∂v_k/∂a_l`).
+    Jacobian,
+    /// Immediate influence `M̄` row construction (`∂v_k/∂w_p`).
+    Immediate,
+    /// The `J·M` influence-matrix recursion — the paper's dominant term.
+    InfluenceUpdate,
+    /// Gradient combination `Mᵀ·c̄` + readout backward.
+    GradCombine,
+    /// Optimizer update.
+    Optimizer,
+}
+
+pub const NUM_PHASES: usize = 6;
+
+impl Phase {
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Forward => 0,
+            Phase::Jacobian => 1,
+            Phase::Immediate => 2,
+            Phase::InfluenceUpdate => 3,
+            Phase::GradCombine => 4,
+            Phase::Optimizer => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Forward => "forward",
+            Phase::Jacobian => "jacobian",
+            Phase::Immediate => "immediate",
+            Phase::InfluenceUpdate => "influence_update",
+            Phase::GradCombine => "grad_combine",
+            Phase::Optimizer => "optimizer",
+        }
+    }
+
+    pub fn all() -> [Phase; NUM_PHASES] {
+        [
+            Phase::Forward,
+            Phase::Jacobian,
+            Phase::Immediate,
+            Phase::InfluenceUpdate,
+            Phase::GradCombine,
+            Phase::Optimizer,
+        ]
+    }
+}
+
+/// Per-phase MAC and memory-word counters.
+#[derive(Debug, Clone, Default)]
+pub struct OpCounter {
+    macs: [u64; NUM_PHASES],
+    words: [u64; NUM_PHASES],
+}
+
+impl OpCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `n` multiply-accumulates to `phase`.
+    #[inline]
+    pub fn macs(&mut self, phase: Phase, n: u64) {
+        self.macs[phase.index()] += n;
+    }
+
+    /// Charge `n` memory words touched to `phase`.
+    #[inline]
+    pub fn words(&mut self, phase: Phase, n: u64) {
+        self.words[phase.index()] += n;
+    }
+
+    /// MACs charged to one phase.
+    pub fn macs_in(&self, phase: Phase) -> u64 {
+        self.macs[phase.index()]
+    }
+
+    /// Words charged to one phase.
+    pub fn words_in(&self, phase: Phase) -> u64 {
+        self.words[phase.index()]
+    }
+
+    /// Total MACs across phases.
+    pub fn total_macs(&self) -> u64 {
+        self.macs.iter().sum()
+    }
+
+    /// Total memory words across phases.
+    pub fn total_words(&self) -> u64 {
+        self.words.iter().sum()
+    }
+
+    /// Zero all counters.
+    pub fn reset(&mut self) {
+        self.macs = [0; NUM_PHASES];
+        self.words = [0; NUM_PHASES];
+    }
+
+    /// Fold another counter into this one (aggregating across samples/runs).
+    pub fn merge(&mut self, other: &OpCounter) {
+        for i in 0..NUM_PHASES {
+            self.macs[i] += other.macs[i];
+            self.words[i] += other.words[i];
+        }
+    }
+
+    /// Difference `self − baseline` (both must be monotone snapshots).
+    pub fn since(&self, baseline: &OpCounter) -> OpCounter {
+        let mut d = OpCounter::new();
+        for i in 0..NUM_PHASES {
+            d.macs[i] = self.macs[i] - baseline.macs[i];
+            d.words[i] = self.words[i] - baseline.words[i];
+        }
+        d
+    }
+
+    /// Human-readable per-phase table.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("{:<18}{:>16}{:>16}\n", "phase", "MACs", "words"));
+        for ph in Phase::all() {
+            s.push_str(&format!(
+                "{:<18}{:>16}{:>16}\n",
+                ph.name(),
+                self.macs_in(ph),
+                self.words_in(ph)
+            ));
+        }
+        s.push_str(&format!(
+            "{:<18}{:>16}{:>16}\n",
+            "TOTAL",
+            self.total_macs(),
+            self.total_words()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_and_total() {
+        let mut c = OpCounter::new();
+        c.macs(Phase::Forward, 10);
+        c.macs(Phase::InfluenceUpdate, 100);
+        c.words(Phase::Forward, 5);
+        assert_eq!(c.macs_in(Phase::Forward), 10);
+        assert_eq!(c.total_macs(), 110);
+        assert_eq!(c.total_words(), 5);
+    }
+
+    #[test]
+    fn merge_and_since() {
+        let mut a = OpCounter::new();
+        a.macs(Phase::Forward, 3);
+        let snapshot = a.clone();
+        a.macs(Phase::Forward, 4);
+        let d = a.since(&snapshot);
+        assert_eq!(d.macs_in(Phase::Forward), 4);
+        let mut b = OpCounter::new();
+        b.merge(&a);
+        b.merge(&a);
+        assert_eq!(b.macs_in(Phase::Forward), 14);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut c = OpCounter::new();
+        c.macs(Phase::Optimizer, 7);
+        c.reset();
+        assert_eq!(c.total_macs(), 0);
+    }
+
+    #[test]
+    fn phase_indices_unique() {
+        let mut seen = [false; NUM_PHASES];
+        for ph in Phase::all() {
+            assert!(!seen[ph.index()]);
+            seen[ph.index()] = true;
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Running sparsity statistics: α (activation), β (pseudo-derivative) and
+//! influence-matrix sparsity — the quantities plotted in Fig. 3C/D.
+
+/// Accumulates per-step sparsity observations over a window (e.g. one
+/// training iteration across the whole batch and sequence).
+#[derive(Debug, Clone, Default)]
+pub struct SparsityStats {
+    /// Σ fraction of units with zero activation (α).
+    alpha_sum: f64,
+    /// Σ fraction of units with zero pseudo-derivative (β).
+    beta_sum: f64,
+    /// Σ fraction of exactly-zero influence-matrix entries.
+    influence_sum: f64,
+    /// Number of observations folded into α/β.
+    steps: u64,
+    /// Number of observations folded into the influence sparsity.
+    influence_obs: u64,
+}
+
+impl SparsityStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one timestep's activity observation.
+    /// `active_units` = α̃n (nonzero activations), `deriv_units` = β̃n.
+    pub fn record_step(&mut self, n: usize, active_units: usize, deriv_units: usize) {
+        let n = n as f64;
+        self.alpha_sum += 1.0 - active_units as f64 / n;
+        self.beta_sum += 1.0 - deriv_units as f64 / n;
+        self.steps += 1;
+    }
+
+    /// Record an influence-matrix sparsity observation (fraction of zeros).
+    pub fn record_influence(&mut self, zero_fraction: f32) {
+        self.influence_sum += zero_fraction as f64;
+        self.influence_obs += 1;
+    }
+
+    /// Mean activation sparsity α over the window.
+    pub fn alpha(&self) -> f32 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            (self.alpha_sum / self.steps as f64) as f32
+        }
+    }
+
+    /// Mean derivative sparsity β over the window.
+    pub fn beta(&self) -> f32 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            (self.beta_sum / self.steps as f64) as f32
+        }
+    }
+
+    /// Mean density of the backward pass, β̃ = 1 − β.
+    pub fn beta_tilde(&self) -> f32 {
+        1.0 - self.beta()
+    }
+
+    /// Mean influence-matrix sparsity over the window.
+    pub fn influence_sparsity(&self) -> f32 {
+        if self.influence_obs == 0 {
+            0.0
+        } else {
+            (self.influence_sum / self.influence_obs as f64) as f32
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+
+    pub fn merge(&mut self, other: &SparsityStats) {
+        self.alpha_sum += other.alpha_sum;
+        self.beta_sum += other.beta_sum;
+        self.influence_sum += other.influence_sum;
+        self.steps += other.steps;
+        self.influence_obs += other.influence_obs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_beta_means() {
+        let mut s = SparsityStats::new();
+        s.record_step(10, 5, 2); // α=0.5 β=0.8
+        s.record_step(10, 10, 10); // α=0.0 β=0.0
+        assert!((s.alpha() - 0.25).abs() < 1e-6);
+        assert!((s.beta() - 0.4).abs() < 1e-6);
+        assert!((s.beta_tilde() - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn influence_mean() {
+        let mut s = SparsityStats::new();
+        s.record_influence(0.9);
+        s.record_influence(0.7);
+        assert!((s.influence_sparsity() - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let s = SparsityStats::new();
+        assert_eq!(s.alpha(), 0.0);
+        assert_eq!(s.influence_sparsity(), 0.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = SparsityStats::new();
+        a.record_step(4, 2, 2);
+        let mut b = SparsityStats::new();
+        b.record_step(4, 4, 4);
+        a.merge(&b);
+        assert!((a.alpha() - 0.25).abs() < 1e-6);
+    }
+}

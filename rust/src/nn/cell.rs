@@ -1,0 +1,818 @@
+//! The recurrent cell family (paper Eqns. 1 & 5): `v = G(a_prev, x; w) − ϑ`,
+//! `a = φ(v)`.
+//!
+//! Two dynamics (`G`) × two activations (`φ`) cover the experiment matrix:
+//!
+//! * [`Dynamics::Gated`] — GRU-form drive `G = u ⊙ z` with
+//!   `u = σ(W_u x + V_u a + b_u)`, `z = tanh(W_z x + V_z a + b_z)`;
+//!   with [`Activation::Heaviside`] this is the **EGRU** in the Eq.-(5)
+//!   formulation the paper's §4 derivation targets.
+//! * [`Dynamics::Linear`] — `G = W x + V a + b`; with Heaviside this is the
+//!   thresholded vanilla RNN (EvNN) of §4, with Tanh the dense baseline.
+//!
+//! The cell exposes exactly the three quantities RTRL needs, in factored
+//! form (paper Eq. 10):
+//!
+//! * `φ'(v_k)` — the row gate ([`CellScratch::dphi`]); zero ⇒ row `k` of
+//!   `J`, `M̄`, `M` is zero,
+//! * `∂v_k/∂a_l` — Jacobian rows before the `φ'` factor ([`RnnCell::dv_da`]),
+//! * `∂v_k/∂w_p` — immediate influence rows ([`RnnCell::immediate_row`]),
+//!   structurally restricted to unit `k`'s fan-in parameters.
+//!
+//! Parameter sparsity is a fixed shared `n×n` [`MaskPattern`] over the
+//! recurrent matrices (`V`, or `V_u`+`V_z`), so a dropped `(k,l)` zeroes the
+//! corresponding `J` element and `M`/`M̄` columns exactly as in §5.
+
+use super::layout::{ParamBlock, ParamLayout};
+use super::pseudo::{heaviside, pseudo_derivative};
+use crate::metrics::{OpCounter, Phase};
+use crate::sparse::MaskPattern;
+use crate::util::math::{dsigmoid_from_out, dtanh_from_out, sigmoid};
+use crate::util::Pcg64;
+
+/// Recurrent drive `G`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dynamics {
+    /// `G = W x + V a_prev + b` (vanilla / EvNN).
+    Linear,
+    /// `G = σ(W_u x + V_u a + b_u) ⊙ tanh(W_z x + V_z a + b_z)` (EGRU-form).
+    Gated,
+}
+
+/// Output nonlinearity `φ`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Activation {
+    /// Heaviside step with triangular pseudo-derivative (γ, ε) — the
+    /// event-based, activity-sparse case.
+    Heaviside { gamma: f32, eps: f32 },
+    /// `tanh` — the dense-activity control (β̃ ≈ 1).
+    Tanh,
+}
+
+impl Activation {
+    #[inline]
+    fn apply(self, v: f32) -> f32 {
+        match self {
+            Activation::Heaviside { .. } => heaviside(v),
+            Activation::Tanh => v.tanh(),
+        }
+    }
+
+    #[inline]
+    fn derivative(self, v: f32, a: f32) -> f32 {
+        match self {
+            Activation::Heaviside { gamma, eps } => pseudo_derivative(v, gamma, eps),
+            Activation::Tanh => dtanh_from_out(a),
+        }
+    }
+
+    /// Whether φ can produce exact zeros in its derivative (activity-sparse).
+    pub fn is_event_based(self) -> bool {
+        matches!(self, Activation::Heaviside { .. })
+    }
+}
+
+/// Per-timestep forward state the derivative computations read.
+#[derive(Debug, Clone)]
+pub struct CellScratch {
+    /// Pre-activation `v = G − ϑ`.
+    pub v: Vec<f32>,
+    /// Activation `a = φ(v)`.
+    pub a: Vec<f32>,
+    /// `φ'(v)` — the RTRL row gate.
+    pub dphi: Vec<f32>,
+    /// Gated only: update-gate output `u`.
+    pub u: Vec<f32>,
+    /// Gated only: candidate output `z`.
+    pub z: Vec<f32>,
+    /// Gated only: u-path coefficient `g_u[k] = z_k·u_k(1−u_k)`.
+    pub gu: Vec<f32>,
+    /// Gated only: z-path coefficient `g_z[k] = u_k(1−z_k²)`.
+    pub gz: Vec<f32>,
+}
+
+impl CellScratch {
+    pub fn new(n: usize) -> Self {
+        CellScratch {
+            v: vec![0.0; n],
+            a: vec![0.0; n],
+            dphi: vec![0.0; n],
+            u: vec![0.0; n],
+            z: vec![0.0; n],
+            gu: vec![0.0; n],
+            gz: vec![0.0; n],
+        }
+    }
+
+    /// Number of units with nonzero activation (α̃n).
+    pub fn active_units(&self) -> usize {
+        self.a.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Number of units with nonzero pseudo-derivative (β̃n).
+    pub fn deriv_units(&self) -> usize {
+        self.dphi.iter().filter(|&&x| x != 0.0).count()
+    }
+}
+
+/// Block indices for [`Dynamics::Linear`] layouts.
+pub mod linear_blocks {
+    pub const W: usize = 0;
+    pub const V: usize = 1;
+    pub const B: usize = 2;
+}
+
+/// Block indices for [`Dynamics::Gated`] layouts.
+pub mod gated_blocks {
+    pub const WU: usize = 0;
+    pub const VU: usize = 1;
+    pub const BU: usize = 2;
+    pub const WZ: usize = 3;
+    pub const VZ: usize = 4;
+    pub const BZ: usize = 5;
+}
+
+/// A recurrent cell with optional fixed parameter sparsity.
+#[derive(Debug, Clone)]
+pub struct RnnCell {
+    n: usize,
+    n_in: usize,
+    dynamics: Dynamics,
+    activation: Activation,
+    /// Per-unit thresholds ϑ (zero vector for tanh cells).
+    theta: Vec<f32>,
+    layout: ParamLayout,
+    /// Flat parameters; masked entries are exactly 0 and stay 0.
+    w: Vec<f32>,
+    /// Shared recurrent mask (None = dense).
+    mask: Option<MaskPattern>,
+    /// Kept column indices per recurrent row (J-row / M̄-row iteration).
+    row_kept: Vec<Vec<u32>>,
+    /// Kept row indices per recurrent column (forward column-gather).
+    col_kept: Vec<Vec<u32>>,
+}
+
+impl RnnCell {
+    /// EGRU in the paper's Eq.-(5) formulation: gated drive + Heaviside.
+    pub fn egru(
+        n: usize,
+        n_in: usize,
+        theta: f32,
+        gamma: f32,
+        eps: f32,
+        mask: Option<MaskPattern>,
+        rng: &mut Pcg64,
+    ) -> Self {
+        Self::new(n, n_in, Dynamics::Gated, Activation::Heaviside { gamma, eps }, theta, mask, rng)
+    }
+
+    /// Thresholded vanilla RNN (EvNN) — the cell of the §4 derivation.
+    pub fn evrnn(
+        n: usize,
+        n_in: usize,
+        theta: f32,
+        gamma: f32,
+        eps: f32,
+        mask: Option<MaskPattern>,
+        rng: &mut Pcg64,
+    ) -> Self {
+        Self::new(n, n_in, Dynamics::Linear, Activation::Heaviside { gamma, eps }, theta, mask, rng)
+    }
+
+    /// Gated cell without activity sparsity (Fig. 3E/F control).
+    pub fn gated_tanh(n: usize, n_in: usize, mask: Option<MaskPattern>, rng: &mut Pcg64) -> Self {
+        Self::new(n, n_in, Dynamics::Gated, Activation::Tanh, 0.0, mask, rng)
+    }
+
+    /// Dense tanh vanilla RNN baseline.
+    pub fn vanilla(n: usize, n_in: usize, mask: Option<MaskPattern>, rng: &mut Pcg64) -> Self {
+        Self::new(n, n_in, Dynamics::Linear, Activation::Tanh, 0.0, mask, rng)
+    }
+
+    /// General constructor. Weights are Glorot-uniform; kept recurrent
+    /// entries are rescaled by `1/sqrt(ω̃)` so the drive variance matches the
+    /// dense init (standard sparse-init practice; without it the 90 %-sparse
+    /// nets start below threshold and learn slowly).
+    pub fn new(
+        n: usize,
+        n_in: usize,
+        dynamics: Dynamics,
+        activation: Activation,
+        theta: f32,
+        mask: Option<MaskPattern>,
+        rng: &mut Pcg64,
+    ) -> Self {
+        if let Some(m) = &mask {
+            assert_eq!((m.rows(), m.cols()), (n, n), "recurrent mask must be n×n");
+        }
+        let layout = Self::make_layout(n, n_in, dynamics);
+        let mut w = vec![0.0; layout.total()];
+        let rescale = mask
+            .as_ref()
+            .map(|m| if m.density() > 0.0 { 1.0 / m.density().sqrt() } else { 1.0 })
+            .unwrap_or(1.0);
+        for (b, blk) in layout.blocks().iter().enumerate() {
+            let is_bias = blk.cols == 1;
+            let is_recurrent = blk.cols == n && !is_bias;
+            let s = if is_bias { 0.0 } else { (6.0 / (blk.rows + blk.cols) as f32).sqrt() };
+            let buf = layout.block_mut(&mut w, b);
+            for x in buf.iter_mut() {
+                *x = if is_bias { 0.0 } else { rng.uniform(-s, s) };
+            }
+            if is_recurrent {
+                if let Some(m) = &mask {
+                    m.apply(buf);
+                    for x in buf.iter_mut() {
+                        *x *= rescale;
+                    }
+                }
+            }
+        }
+        let (row_kept, col_kept) = Self::pattern_indices(n, mask.as_ref());
+        RnnCell {
+            n,
+            n_in,
+            dynamics,
+            activation,
+            theta: vec![theta; n],
+            layout,
+            w,
+            mask,
+            row_kept,
+            col_kept,
+        }
+    }
+
+    fn make_layout(n: usize, n_in: usize, dynamics: Dynamics) -> ParamLayout {
+        match dynamics {
+            Dynamics::Linear => ParamLayout::new(vec![
+                ParamBlock { name: "W", rows: n, cols: n_in },
+                ParamBlock { name: "V", rows: n, cols: n },
+                ParamBlock { name: "b", rows: n, cols: 1 },
+            ]),
+            Dynamics::Gated => ParamLayout::new(vec![
+                ParamBlock { name: "W_u", rows: n, cols: n_in },
+                ParamBlock { name: "V_u", rows: n, cols: n },
+                ParamBlock { name: "b_u", rows: n, cols: 1 },
+                ParamBlock { name: "W_z", rows: n, cols: n_in },
+                ParamBlock { name: "V_z", rows: n, cols: n },
+                ParamBlock { name: "b_z", rows: n, cols: 1 },
+            ]),
+        }
+    }
+
+    fn pattern_indices(
+        n: usize,
+        mask: Option<&MaskPattern>,
+    ) -> (Vec<Vec<u32>>, Vec<Vec<u32>>) {
+        let mut row_kept = vec![Vec::new(); n];
+        let mut col_kept = vec![Vec::new(); n];
+        for r in 0..n {
+            for c in 0..n {
+                if mask.map(|m| m.is_kept(r, c)).unwrap_or(true) {
+                    row_kept[r].push(c as u32);
+                    col_kept[c].push(r as u32);
+                }
+            }
+        }
+        (row_kept, col_kept)
+    }
+
+    // ------------------------------------------------------------------
+    // Accessors
+    // ------------------------------------------------------------------
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    #[inline]
+    pub fn dynamics(&self) -> Dynamics {
+        self.dynamics
+    }
+
+    #[inline]
+    pub fn activation(&self) -> Activation {
+        self.activation
+    }
+
+    #[inline]
+    pub fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    /// Total parameter count `p` (dense count; masked entries included, as in
+    /// the paper's `p`).
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.layout.total()
+    }
+
+    #[inline]
+    pub fn params(&self) -> &[f32] {
+        &self.w
+    }
+
+    #[inline]
+    pub fn params_mut(&mut self) -> &mut [f32] {
+        &mut self.w
+    }
+
+    #[inline]
+    pub fn mask(&self) -> Option<&MaskPattern> {
+        self.mask.as_ref()
+    }
+
+    /// Parameter density ω̃ of the recurrent blocks (1.0 when dense).
+    pub fn omega_tilde(&self) -> f32 {
+        self.mask.as_ref().map(|m| m.density()).unwrap_or(1.0)
+    }
+
+    /// Kept recurrent columns of row `k` (structural `J` row pattern).
+    #[inline]
+    pub fn kept_cols(&self, k: usize) -> &[u32] {
+        &self.row_kept[k]
+    }
+
+    /// Kept recurrent rows of column `l` (forward gather pattern).
+    #[inline]
+    pub fn kept_rows_of_col(&self, l: usize) -> &[u32] {
+        &self.col_kept[l]
+    }
+
+    /// Thresholds ϑ.
+    #[inline]
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Replace the recurrent sparsity mask (Deep-Rewiring-style dynamic
+    /// sparsity — the extension the paper's Discussion points to via
+    /// Bellec et al. 2018). Surviving entries keep their weights, dropped
+    /// entries are zeroed, newly-grown entries are initialized to
+    /// `U(-grow_scale, grow_scale)`. Pattern indices are rebuilt; callers
+    /// must also rebuild any engine whose [`ColumnMap`] was derived from
+    /// the old mask (influence columns of swapped params restart at zero,
+    /// which is exact: a just-grown parameter has had no past influence).
+    pub fn set_mask(&mut self, mask: MaskPattern, grow_scale: f32, rng: &mut Pcg64) {
+        assert_eq!((mask.rows(), mask.cols()), (self.n, self.n), "mask must be n×n");
+        let n = self.n;
+        let old = self.mask.clone();
+        for b in self.recurrent_blocks() {
+            let buf = self.layout.block_mut(&mut self.w, b);
+            for r in 0..n {
+                for c in 0..n {
+                    let was = old.as_ref().map(|m| m.is_kept(r, c)).unwrap_or(true);
+                    let now = mask.is_kept(r, c);
+                    match (was, now) {
+                        (true, false) => buf[r * n + c] = 0.0,
+                        (false, true) => buf[r * n + c] = rng.uniform(-grow_scale, grow_scale),
+                        _ => {}
+                    }
+                }
+            }
+        }
+        let (row_kept, col_kept) = Self::pattern_indices(n, Some(&mask));
+        self.row_kept = row_kept;
+        self.col_kept = col_kept;
+        self.mask = Some(mask);
+    }
+
+    /// Re-zero masked entries (defensive hygiene after optimizer updates;
+    /// gradients at masked positions are structurally zero so this is a
+    /// no-op in exact arithmetic).
+    pub fn enforce_mask(&mut self) {
+        if let Some(mask) = self.mask.clone() {
+            for b in self.recurrent_blocks() {
+                mask.apply(self.layout.block_mut(&mut self.w, b));
+            }
+        }
+    }
+
+    /// Indices of the recurrent (masked) blocks for this dynamics.
+    pub fn recurrent_blocks(&self) -> Vec<usize> {
+        match self.dynamics {
+            Dynamics::Linear => vec![linear_blocks::V],
+            Dynamics::Gated => vec![gated_blocks::VU, gated_blocks::VZ],
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Forward
+    // ------------------------------------------------------------------
+
+    /// One forward step. `a_prev` is the previous activation, `x` the input.
+    /// Fills `scratch` (v, a, φ', gate coefficients). Charges the forward
+    /// phase with its MACs: dense `n·n_in` input terms plus the
+    /// activity-×-parameter-sparse recurrent gather (`ω̃·α̃·n²` of Table 1).
+    pub fn forward(&self, a_prev: &[f32], x: &[f32], scratch: &mut CellScratch, ops: &mut OpCounter) {
+        assert_eq!(a_prev.len(), self.n);
+        assert_eq!(x.len(), self.n_in);
+        match self.dynamics {
+            Dynamics::Linear => self.forward_linear(a_prev, x, scratch, ops),
+            Dynamics::Gated => self.forward_gated(a_prev, x, scratch, ops),
+        }
+        // Activation + derivative.
+        for k in 0..self.n {
+            let v = scratch.v[k];
+            let a = self.activation.apply(v);
+            scratch.a[k] = a;
+            scratch.dphi[k] = self.activation.derivative(v, a);
+        }
+        ops.words(Phase::Forward, 2 * self.n as u64);
+    }
+
+    /// Recurrent contribution `out[k] += Σ_l V[k,l]·a_prev[l]` as an
+    /// event-driven column gather: only nonzero `a_prev[l]` (α̃n events) and
+    /// kept mask entries are touched.
+    fn recurrent_gather(&self, block: usize, a_prev: &[f32], out: &mut [f32], ops: &mut OpCounter) {
+        let vmat = self.layout.block(&self.w, block);
+        let n = self.n;
+        let mut macs = 0u64;
+        for (l, &al) in a_prev.iter().enumerate() {
+            if al == 0.0 {
+                continue;
+            }
+            let rows = &self.col_kept[l];
+            for &k in rows {
+                out[k as usize] += vmat[k as usize * n + l] * al;
+            }
+            macs += rows.len() as u64;
+        }
+        ops.macs(Phase::Forward, macs);
+        ops.words(Phase::Forward, macs);
+    }
+
+    fn input_matvec(&self, block: usize, x: &[f32], out: &mut [f32], ops: &mut OpCounter) {
+        let wmat = self.layout.block(&self.w, block);
+        for k in 0..self.n {
+            let row = &wmat[k * self.n_in..(k + 1) * self.n_in];
+            let mut acc = 0.0;
+            for (w, xv) in row.iter().zip(x) {
+                acc += w * xv;
+            }
+            out[k] = acc;
+        }
+        ops.macs(Phase::Forward, (self.n * self.n_in) as u64);
+    }
+
+    fn forward_linear(&self, a_prev: &[f32], x: &[f32], s: &mut CellScratch, ops: &mut OpCounter) {
+        use linear_blocks::*;
+        self.input_matvec(W, x, &mut s.v, ops);
+        self.recurrent_gather(V, a_prev, &mut s.v, ops);
+        let b = self.layout.block(&self.w, B);
+        for k in 0..self.n {
+            s.v[k] += b[k] - self.theta[k];
+        }
+    }
+
+    fn forward_gated(&self, a_prev: &[f32], x: &[f32], s: &mut CellScratch, ops: &mut OpCounter) {
+        use gated_blocks::*;
+        // u-gate pre-activation in s.u, z pre-activation in s.z (in place).
+        self.input_matvec(WU, x, &mut s.u, ops);
+        self.recurrent_gather(VU, a_prev, &mut s.u, ops);
+        self.input_matvec(WZ, x, &mut s.z, ops);
+        self.recurrent_gather(VZ, a_prev, &mut s.z, ops);
+        let bu = self.layout.block(&self.w, BU);
+        let bz = self.layout.block(&self.w, BZ);
+        for k in 0..self.n {
+            let u = sigmoid(s.u[k] + bu[k]);
+            let z = (s.z[k] + bz[k]).tanh();
+            s.u[k] = u;
+            s.z[k] = z;
+            s.v[k] = u * z - self.theta[k];
+            s.gu[k] = z * dsigmoid_from_out(u);
+            s.gz[k] = u * dtanh_from_out(z);
+        }
+        ops.macs(Phase::Forward, 4 * self.n as u64);
+    }
+
+    // ------------------------------------------------------------------
+    // RTRL ingredients
+    // ------------------------------------------------------------------
+
+    /// `∂v_k/∂a_l` (before the `φ'` row gate). Structurally zero when the
+    /// recurrent mask drops `(k,l)` — callers iterate [`Self::kept_cols`].
+    #[inline]
+    pub fn dv_da(&self, s: &CellScratch, k: usize, l: usize) -> f32 {
+        match self.dynamics {
+            Dynamics::Linear => {
+                let v = self.layout.block(&self.w, linear_blocks::V);
+                v[k * self.n + l]
+            }
+            Dynamics::Gated => {
+                let vu = self.layout.block(&self.w, gated_blocks::VU);
+                let vz = self.layout.block(&self.w, gated_blocks::VZ);
+                s.gu[k] * vu[k * self.n + l] + s.gz[k] * vz[k * self.n + l]
+            }
+        }
+    }
+
+    /// MACs consumed per `dv_da` evaluation (for op accounting).
+    #[inline]
+    pub fn dv_da_cost(&self) -> u64 {
+        match self.dynamics {
+            Dynamics::Linear => 1,
+            Dynamics::Gated => 2,
+        }
+    }
+
+    /// Structural fan-in parameter indices of unit `k`: every flat parameter
+    /// that can ever appear in row `k` of `M̄` (input weights, kept recurrent
+    /// weights, biases), sorted ascending. This is SnAp-1's influence pattern
+    /// (Menick et al. 2020) and the structural row pattern of `M̄`.
+    pub fn fan_in_params(&self, k: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        let blocks: &[usize] = match self.dynamics {
+            Dynamics::Linear => &[linear_blocks::W, linear_blocks::V, linear_blocks::B],
+            Dynamics::Gated => &[
+                gated_blocks::WU,
+                gated_blocks::VU,
+                gated_blocks::BU,
+                gated_blocks::WZ,
+                gated_blocks::VZ,
+                gated_blocks::BZ,
+            ],
+        };
+        for &b in blocks {
+            let blk = &self.layout.blocks()[b];
+            let is_recurrent = blk.cols == self.n && blk.cols != 1;
+            if is_recurrent {
+                let start = self.layout.row_range(b, k).start;
+                for &l in &self.row_kept[k] {
+                    out.push((start + l as usize) as u32);
+                }
+            } else {
+                for pi in self.layout.row_range(b, k) {
+                    out.push(pi as u32);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Immediate influence row `k`: invokes `f(flat_param_index, ∂v_k/∂w_p)`
+    /// for every *structurally nonzero* entry — unit `k`'s fan-in parameters,
+    /// minus masked recurrent entries, minus recurrent entries whose
+    /// presynaptic activation is zero (those have value exactly 0, the
+    /// forward-activity term of `M̄`'s sparsity). Returns emitted count.
+    pub fn immediate_row(
+        &self,
+        s: &CellScratch,
+        a_prev: &[f32],
+        x: &[f32],
+        k: usize,
+        mut f: impl FnMut(usize, f32),
+        ops: &mut OpCounter,
+    ) -> u64 {
+        let mut emitted = 0u64;
+        match self.dynamics {
+            Dynamics::Linear => {
+                use linear_blocks::*;
+                let woff = self.layout.row_range(W, k).start;
+                for (j, &xv) in x.iter().enumerate() {
+                    f(woff + j, xv);
+                }
+                emitted += self.n_in as u64;
+                let voff = self.layout.row_range(V, k).start;
+                for &l in &self.row_kept[k] {
+                    let al = a_prev[l as usize];
+                    if al != 0.0 {
+                        f(voff + l as usize, al);
+                        emitted += 1;
+                    }
+                }
+                f(self.layout.row_range(B, k).start, 1.0);
+                emitted += 1;
+            }
+            Dynamics::Gated => {
+                use gated_blocks::*;
+                let (gu, gz) = (s.gu[k], s.gz[k]);
+                let wu = self.layout.row_range(WU, k).start;
+                let wz = self.layout.row_range(WZ, k).start;
+                for (j, &xv) in x.iter().enumerate() {
+                    f(wu + j, gu * xv);
+                    f(wz + j, gz * xv);
+                }
+                emitted += 2 * self.n_in as u64;
+                let vu = self.layout.row_range(VU, k).start;
+                let vz = self.layout.row_range(VZ, k).start;
+                for &l in &self.row_kept[k] {
+                    let al = a_prev[l as usize];
+                    if al != 0.0 {
+                        f(vu + l as usize, gu * al);
+                        f(vz + l as usize, gz * al);
+                        emitted += 2;
+                    }
+                }
+                f(self.layout.row_range(BU, k).start, gu);
+                f(self.layout.row_range(BZ, k).start, gz);
+                emitted += 2;
+            }
+        }
+        ops.macs(Phase::Immediate, emitted);
+        emitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ops() -> OpCounter {
+        OpCounter::new()
+    }
+
+    #[test]
+    fn layout_sizes() {
+        let mut rng = Pcg64::new(1);
+        let egru = RnnCell::egru(16, 3, 0.1, 0.3, 0.5, None, &mut rng);
+        assert_eq!(egru.p(), 2 * 16 * (3 + 16 + 1));
+        let ev = RnnCell::evrnn(16, 3, 0.1, 0.3, 0.5, None, &mut rng);
+        assert_eq!(ev.p(), 16 * (3 + 16 + 1));
+    }
+
+    #[test]
+    fn heaviside_activations_are_binary_and_theta_shifts() {
+        let mut rng = Pcg64::new(2);
+        let cell = RnnCell::egru(8, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let mut s = CellScratch::new(8);
+        let a_prev = vec![0.0; 8];
+        cell.forward(&a_prev, &[0.5, -0.3], &mut s, &mut ops());
+        for k in 0..8 {
+            assert!(s.a[k] == 0.0 || s.a[k] == 1.0);
+            // v = u*z - theta
+            assert!((s.v[k] - (s.u[k] * s.z[k] - 0.1)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn tanh_cell_has_dense_derivative() {
+        let mut rng = Pcg64::new(3);
+        let cell = RnnCell::gated_tanh(8, 2, None, &mut rng);
+        let mut s = CellScratch::new(8);
+        cell.forward(&vec![0.1; 8], &[0.5, -0.3], &mut s, &mut ops());
+        assert_eq!(s.deriv_units(), 8, "tanh derivative never exactly zero here");
+    }
+
+    /// Finite-difference check of ∂v/∂a_prev on the smooth part of the cell:
+    /// perturb one presynaptic activation and compare v changes against
+    /// dv_da. (The φ' factor is checked separately — it is a definition, not
+    /// a derivative of a smooth function.)
+    #[test]
+    fn dv_da_matches_finite_difference() {
+        for dynamics in [Dynamics::Linear, Dynamics::Gated] {
+            let mut rng = Pcg64::new(4);
+            let cell = RnnCell::new(6, 2, dynamics, Activation::Tanh, 0.0, None, &mut rng);
+            let x = [0.3, -0.7];
+            let a0: Vec<f32> = (0..6).map(|i| 0.1 * i as f32 - 0.2).collect();
+            let mut s0 = CellScratch::new(6);
+            cell.forward(&a0, &x, &mut s0, &mut ops());
+            let h = 1e-3f32;
+            for l in 0..6 {
+                let mut ap = a0.clone();
+                ap[l] += h;
+                let mut s1 = CellScratch::new(6);
+                cell.forward(&ap, &x, &mut s1, &mut ops());
+                for k in 0..6 {
+                    let fd = (s1.v[k] - s0.v[k]) / h;
+                    let an = cell.dv_da(&s0, k, l);
+                    assert!(
+                        (fd - an).abs() < 2e-2,
+                        "{dynamics:?} dv[{k}]/da[{l}]: fd={fd} analytic={an}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Finite-difference check of the immediate influence ∂v_k/∂w_p.
+    #[test]
+    fn immediate_row_matches_finite_difference() {
+        for dynamics in [Dynamics::Linear, Dynamics::Gated] {
+            let mut rng = Pcg64::new(5);
+            let mut cell = RnnCell::new(5, 2, dynamics, Activation::Tanh, 0.0, None, &mut rng);
+            let x = [0.4, 0.9];
+            let a0: Vec<f32> = (0..5).map(|i| 0.15 * i as f32 - 0.1).collect();
+            let mut s0 = CellScratch::new(5);
+            cell.forward(&a0, &x, &mut s0, &mut ops());
+            // collect analytic rows
+            let p = cell.p();
+            let mut analytic = vec![vec![0.0f32; p]; 5];
+            for k in 0..5 {
+                let row = &mut analytic[k];
+                cell.immediate_row(&s0, &a0, &x, k, |pi, val| row[pi] = val, &mut ops());
+            }
+            let h = 1e-3f32;
+            for pi in 0..p {
+                let orig = cell.params()[pi];
+                cell.params_mut()[pi] = orig + h;
+                let mut s1 = CellScratch::new(5);
+                cell.forward(&a0, &x, &mut s1, &mut ops());
+                cell.params_mut()[pi] = orig;
+                for k in 0..5 {
+                    let fd = (s1.v[k] - s0.v[k]) / h;
+                    assert!(
+                        (fd - analytic[k][pi]).abs() < 2e-2,
+                        "{dynamics:?} dv[{k}]/dw[{pi}]: fd={fd} analytic={}",
+                        analytic[k][pi]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mask_zeroes_weights_and_patterns_agree() {
+        let mut rng = Pcg64::new(6);
+        let mask = MaskPattern::random(10, 10, 0.3, &mut rng);
+        let cell = RnnCell::egru(10, 2, 0.1, 0.3, 0.5, Some(mask.clone()), &mut rng);
+        assert!((cell.omega_tilde() - 0.3).abs() < 1e-6);
+        // dropped entries are exactly zero in both V_u and V_z
+        let vu = cell.layout().block(cell.params(), gated_blocks::VU);
+        let vz = cell.layout().block(cell.params(), gated_blocks::VZ);
+        for r in 0..10 {
+            for c in 0..10 {
+                if !mask.is_kept(r, c) {
+                    assert_eq!(vu[r * 10 + c], 0.0);
+                    assert_eq!(vz[r * 10 + c], 0.0);
+                }
+            }
+        }
+        // kept-pattern indices match the mask
+        let total: usize = (0..10).map(|k| cell.kept_cols(k).len()).sum();
+        assert_eq!(total, mask.kept());
+        let total_c: usize = (0..10).map(|l| cell.kept_rows_of_col(l).len()).sum();
+        assert_eq!(total_c, mask.kept());
+    }
+
+    #[test]
+    fn forward_gather_matches_dense_matvec() {
+        // The event-driven column gather must equal a dense matvec when all
+        // activations are nonzero.
+        let mut rng = Pcg64::new(7);
+        let cell = RnnCell::vanilla(8, 3, None, &mut rng);
+        let a_prev: Vec<f32> = (0..8).map(|i| 0.1 + 0.05 * i as f32).collect();
+        let x = [0.2, -0.4, 0.6];
+        let mut s = CellScratch::new(8);
+        cell.forward(&a_prev, &x, &mut s, &mut ops());
+        // reference: dense computation
+        let wm = cell.layout().block(cell.params(), linear_blocks::W);
+        let vm = cell.layout().block(cell.params(), linear_blocks::V);
+        let b = cell.layout().block(cell.params(), linear_blocks::B);
+        for k in 0..8 {
+            let mut acc = b[k];
+            for j in 0..3 {
+                acc += wm[k * 3 + j] * x[j];
+            }
+            for l in 0..8 {
+                acc += vm[k * 8 + l] * a_prev[l];
+            }
+            assert!((s.v[k] - acc).abs() < 1e-5, "unit {k}");
+        }
+    }
+
+    #[test]
+    fn forward_ops_scale_with_activity() {
+        let mut rng = Pcg64::new(8);
+        let cell = RnnCell::evrnn(32, 2, 0.0, 0.3, 0.5, None, &mut rng);
+        let mut s = CellScratch::new(32);
+        let mut dense_ops = OpCounter::new();
+        cell.forward(&vec![1.0; 32], &[0.1, 0.2], &mut s, &mut dense_ops);
+        let mut sparse_ops = OpCounter::new();
+        let mut a = vec![0.0; 32];
+        a[3] = 1.0; // one event
+        cell.forward(&a, &[0.1, 0.2], &mut s, &mut sparse_ops);
+        let dense_macs = dense_ops.macs_in(Phase::Forward);
+        let sparse_macs = sparse_ops.macs_in(Phase::Forward);
+        // gather term shrinks from 32·32 to 1·32
+        assert_eq!(dense_macs - sparse_macs, (31 * 32) as u64);
+    }
+
+    #[test]
+    fn enforce_mask_keeps_dropped_zero() {
+        let mut rng = Pcg64::new(9);
+        let mask = MaskPattern::random(6, 6, 0.5, &mut rng);
+        let mut cell = RnnCell::evrnn(6, 2, 0.0, 0.3, 0.5, Some(mask.clone()), &mut rng);
+        // simulate an optimizer that dirtied everything
+        for w in cell.params_mut().iter_mut() {
+            *w += 1.0;
+        }
+        cell.enforce_mask();
+        let v = cell.layout().block(cell.params(), linear_blocks::V).to_vec();
+        for r in 0..6 {
+            for c in 0..6 {
+                if !mask.is_kept(r, c) {
+                    assert_eq!(v[r * 6 + c], 0.0);
+                }
+            }
+        }
+    }
+}

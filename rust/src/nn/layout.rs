@@ -1,0 +1,167 @@
+//! Flattened parameter-vector layout.
+//!
+//! RTRL's influence matrix `M ∈ R^{n×p}` indexes parameters by their position
+//! in the flattened vector `w ∈ R^p`. [`ParamLayout`] fixes that flattening:
+//! blocks in declaration order, row-major within a block. Because every
+//! recurrent parameter feeds exactly one unit (its row), the layout also
+//! answers the structural question behind `M̄`'s "default sparsity": which
+//! slice of `w` belongs to unit `k`'s fan-in in each block.
+
+/// One named parameter block (a weight matrix; biases are `rows × 1`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamBlock {
+    pub name: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Block-major, row-major-within-block flattening of the parameter vector.
+#[derive(Debug, Clone)]
+pub struct ParamLayout {
+    blocks: Vec<ParamBlock>,
+    offsets: Vec<usize>,
+    total: usize,
+}
+
+impl ParamLayout {
+    pub fn new(blocks: Vec<ParamBlock>) -> Self {
+        let mut offsets = Vec::with_capacity(blocks.len());
+        let mut total = 0;
+        for b in &blocks {
+            offsets.push(total);
+            total += b.rows * b.cols;
+        }
+        ParamLayout { blocks, offsets, total }
+    }
+
+    /// Total parameter count `p`.
+    #[inline]
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    #[inline]
+    pub fn blocks(&self) -> &[ParamBlock] {
+        &self.blocks
+    }
+
+    /// Offset of block `b` in the flattened vector.
+    #[inline]
+    pub fn offset(&self, b: usize) -> usize {
+        self.offsets[b]
+    }
+
+    /// Block index by name (panics if absent — layouts are static).
+    pub fn block_index(&self, name: &str) -> usize {
+        self.blocks
+            .iter()
+            .position(|b| b.name == name)
+            .unwrap_or_else(|| panic!("no parameter block named {name:?}"))
+    }
+
+    /// Flat index of element `(r, c)` of block `b`.
+    #[inline]
+    pub fn flat(&self, b: usize, r: usize, c: usize) -> usize {
+        let blk = &self.blocks[b];
+        debug_assert!(r < blk.rows && c < blk.cols);
+        self.offsets[b] + r * blk.cols + c
+    }
+
+    /// Flat range `[start, end)` of row `r` of block `b` — the fan-in
+    /// parameters of unit `r` within that block.
+    #[inline]
+    pub fn row_range(&self, b: usize, r: usize) -> std::ops::Range<usize> {
+        let blk = &self.blocks[b];
+        debug_assert!(r < blk.rows);
+        let start = self.offsets[b] + r * blk.cols;
+        start..start + blk.cols
+    }
+
+    /// View of block `b` inside a flat parameter buffer.
+    pub fn block<'a>(&self, w: &'a [f32], b: usize) -> &'a [f32] {
+        let blk = &self.blocks[b];
+        &w[self.offsets[b]..self.offsets[b] + blk.rows * blk.cols]
+    }
+
+    /// Mutable view of block `b` inside a flat parameter buffer.
+    pub fn block_mut<'a>(&self, w: &'a mut [f32], b: usize) -> &'a mut [f32] {
+        let blk = &self.blocks[b];
+        &mut w[self.offsets[b]..self.offsets[b] + blk.rows * blk.cols]
+    }
+
+    /// Which `(block, row, col)` a flat index decodes to (reports/tests).
+    pub fn decode(&self, flat: usize) -> (usize, usize, usize) {
+        assert!(flat < self.total);
+        let b = match self.offsets.binary_search(&flat) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let rel = flat - self.offsets[b];
+        (b, rel / self.blocks[b].cols, rel % self.blocks[b].cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> ParamLayout {
+        ParamLayout::new(vec![
+            ParamBlock { name: "W", rows: 3, cols: 2 },
+            ParamBlock { name: "V", rows: 3, cols: 3 },
+            ParamBlock { name: "b", rows: 3, cols: 1 },
+        ])
+    }
+
+    #[test]
+    fn totals_and_offsets() {
+        let l = layout();
+        assert_eq!(l.total(), 6 + 9 + 3);
+        assert_eq!(l.offset(0), 0);
+        assert_eq!(l.offset(1), 6);
+        assert_eq!(l.offset(2), 15);
+    }
+
+    #[test]
+    fn flat_and_decode_roundtrip() {
+        let l = layout();
+        for b in 0..3 {
+            let blk = &l.blocks()[b];
+            for r in 0..blk.rows {
+                for c in 0..blk.cols {
+                    let f = l.flat(b, r, c);
+                    assert_eq!(l.decode(f), (b, r, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_range_is_fan_in() {
+        let l = layout();
+        assert_eq!(l.row_range(1, 2), 12..15); // V row 2
+        assert_eq!(l.row_range(2, 0), 15..16); // b row 0
+    }
+
+    #[test]
+    fn block_views() {
+        let l = layout();
+        let mut w: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        assert_eq!(l.block(&w, 1).len(), 9);
+        assert_eq!(l.block(&w, 1)[0], 6.0);
+        l.block_mut(&mut w, 2)[0] = 99.0;
+        assert_eq!(w[15], 99.0);
+    }
+
+    #[test]
+    fn block_index_by_name() {
+        let l = layout();
+        assert_eq!(l.block_index("V"), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_block_panics() {
+        layout().block_index("nope");
+    }
+}

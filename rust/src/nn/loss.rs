@@ -1,0 +1,117 @@
+//! Instantaneous losses `L(y, y_target)` with gradients w.r.t. logits.
+//!
+//! The paper's formulation puts a loss at every timestep (`𝓛 = Σ_t L_t`);
+//! sequence classification (the spiral task) is the special case where only
+//! the final step carries loss. Both modes are supported by the trainer.
+
+use crate::util::math::softmax_into;
+
+/// Which loss to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    /// Softmax cross-entropy against an integer class target.
+    CrossEntropy,
+    /// Mean squared error against a dense target vector.
+    Mse,
+}
+
+/// Loss evaluator with scratch buffers.
+#[derive(Debug, Clone)]
+pub struct Loss {
+    kind: LossKind,
+    probs: Vec<f32>,
+}
+
+impl Loss {
+    pub fn new(kind: LossKind, n_out: usize) -> Self {
+        Loss { kind, probs: vec![0.0; n_out] }
+    }
+
+    #[inline]
+    pub fn kind(&self) -> LossKind {
+        self.kind
+    }
+
+    /// Cross-entropy for class `target`: returns `(loss, dlogits)` with
+    /// `dlogits = softmax(logits) − onehot(target)` written into `dlogits`.
+    pub fn cross_entropy(&mut self, logits: &[f32], target: usize, dlogits: &mut [f32]) -> f32 {
+        assert_eq!(logits.len(), self.probs.len());
+        assert!(target < logits.len());
+        softmax_into(logits, &mut self.probs);
+        dlogits.copy_from_slice(&self.probs);
+        dlogits[target] -= 1.0;
+        -(self.probs[target].max(1e-12)).ln()
+    }
+
+    /// MSE `0.5·Σ(y−t)²`: returns loss, writes `dlogits = y − t`.
+    pub fn mse(&mut self, logits: &[f32], target: &[f32], dlogits: &mut [f32]) -> f32 {
+        assert_eq!(logits.len(), target.len());
+        let mut loss = 0.0;
+        for ((d, &y), &t) in dlogits.iter_mut().zip(logits).zip(target) {
+            let e = y - t;
+            *d = e;
+            loss += 0.5 * e * e;
+        }
+        loss
+    }
+
+    /// Predicted class (argmax of logits).
+    pub fn predict(logits: &[f32]) -> usize {
+        crate::tensor::ops::argmax(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ce_loss_decreases_with_confidence() {
+        let mut l = Loss::new(LossKind::CrossEntropy, 2);
+        let mut d = [0.0; 2];
+        let weak = l.cross_entropy(&[0.1, 0.0], 0, &mut d);
+        let strong = l.cross_entropy(&[5.0, 0.0], 0, &mut d);
+        assert!(strong < weak);
+    }
+
+    #[test]
+    fn ce_gradient_finite_difference() {
+        let mut l = Loss::new(LossKind::CrossEntropy, 3);
+        let logits = [0.2f32, -0.5, 1.0];
+        let mut d = [0.0; 3];
+        let base = l.cross_entropy(&logits, 1, &mut d);
+        let analytic = d;
+        let h = 1e-3;
+        for i in 0..3 {
+            let mut lp = logits;
+            lp[i] += h;
+            let mut dd = [0.0; 3];
+            let up = l.cross_entropy(&lp, 1, &mut dd);
+            let fd = (up - base) / h;
+            assert!((fd - analytic[i]).abs() < 1e-2, "i={i} fd={fd} an={}", analytic[i]);
+        }
+    }
+
+    #[test]
+    fn ce_gradient_sums_to_zero() {
+        let mut l = Loss::new(LossKind::CrossEntropy, 4);
+        let mut d = [0.0; 4];
+        l.cross_entropy(&[1.0, 2.0, -1.0, 0.0], 2, &mut d);
+        let s: f32 = d.iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn mse_known_values() {
+        let mut l = Loss::new(LossKind::Mse, 2);
+        let mut d = [0.0; 2];
+        let loss = l.mse(&[1.0, 2.0], &[0.0, 0.0], &mut d);
+        assert!((loss - 2.5).abs() < 1e-6);
+        assert_eq!(d, [1.0, 2.0]);
+    }
+
+    #[test]
+    fn predict_argmax() {
+        assert_eq!(Loss::predict(&[0.1, 0.9, 0.5]), 1);
+    }
+}

@@ -1,0 +1,26 @@
+//! Neural network cells, readout and losses.
+//!
+//! One concrete recurrent cell type, [`RnnCell`], covers the four models in
+//! the paper's experiment matrix through two orthogonal axes:
+//!
+//! | Model | [`Dynamics`] | [`Activation`] | Role |
+//! |---|---|---|---|
+//! | EGRU (paper Eq. 5 form) | `Gated` | `Heaviside` | activity-sparse experimental model |
+//! | EvRNN (paper §4 derivation) | `Linear` | `Heaviside` | thresholded vanilla RNN |
+//! | GatedRNN | `Gated` | `Tanh` | "without activity sparsity" arm (Fig. 3E/F) |
+//! | VanillaRNN | `Linear` | `Tanh` | dense baseline (Table 1 rows) |
+//!
+//! All cells have the Markov form `v = G(a_prev, x; w) − ϑ`, `a = φ(v)` of
+//! the paper's Eq. (1)/(5), so RTRL row-sparsity (`φ'(v_k)=0` ⇒ row `k` of
+//! `J`, `M̄`, `M` is zero) holds *exactly* wherever `φ' = 0`.
+
+pub mod cell;
+pub mod layout;
+pub mod loss;
+pub mod pseudo;
+pub mod readout;
+
+pub use cell::{Activation, CellScratch, Dynamics, RnnCell};
+pub use layout::{ParamBlock, ParamLayout};
+pub use loss::{Loss, LossKind};
+pub use readout::Readout;

@@ -1,0 +1,86 @@
+//! Heaviside step activation with surrogate gradient (pseudo-derivative).
+//!
+//! Paper §4: `a = H(v)` with
+//! `H'(v) = γ · max(0, 1 − |v|/ε)`,
+//! so the derivative is exactly zero whenever `|v| > ε` — the condition the
+//! paper uses for row sparsity ("zero derivative … because v > ε or v < −ε").
+//! (The paper's Fig. 1 caption writes the width as `2ε`; we follow the text's
+//! support `±ε` and expose ε, so either convention is reachable by halving ε.)
+//! The fraction of units with `H' = 0` is the backward sparsity β; the
+//! fraction with `a = 0` is the forward sparsity α. Reproduces Fig. 1.
+
+/// Heaviside step: `1` if `v > 0` else `0`.
+#[inline]
+pub fn heaviside(v: f32) -> f32 {
+    if v > 0.0 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Triangular pseudo-derivative `γ·max(0, 1 − |v|/ε)`.
+#[inline]
+pub fn pseudo_derivative(v: f32, gamma: f32, eps: f32) -> f32 {
+    let t = 1.0 - v.abs() / eps;
+    if t > 0.0 {
+        gamma * t
+    } else {
+        0.0
+    }
+}
+
+/// Sampled curve of the pseudo-derivative for Fig. 1 regeneration.
+pub fn curve(gamma: f32, eps: f32, lo: f32, hi: f32, points: usize) -> Vec<(f32, f32)> {
+    assert!(points >= 2);
+    (0..points)
+        .map(|i| {
+            let v = lo + (hi - lo) * i as f32 / (points - 1) as f32;
+            (v, pseudo_derivative(v, gamma, eps))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heaviside_values() {
+        assert_eq!(heaviside(0.5), 1.0);
+        assert_eq!(heaviside(0.0), 0.0);
+        assert_eq!(heaviside(-0.5), 0.0);
+    }
+
+    #[test]
+    fn pseudo_peak_at_zero() {
+        assert!((pseudo_derivative(0.0, 0.3, 0.5) - 0.3).abs() < 1e-7);
+    }
+
+    #[test]
+    fn pseudo_zero_outside_support() {
+        // Exactly zero strictly outside ±ε — the paper's sparsity condition.
+        assert_eq!(pseudo_derivative(0.51, 0.3, 0.5), 0.0);
+        assert_eq!(pseudo_derivative(-0.51, 0.3, 0.5), 0.0);
+        assert_eq!(pseudo_derivative(10.0, 0.3, 0.5), 0.0);
+    }
+
+    #[test]
+    fn pseudo_linear_inside_support() {
+        let g = 0.3;
+        let e = 0.5;
+        assert!((pseudo_derivative(0.25, g, e) - g * 0.5).abs() < 1e-6);
+        assert!((pseudo_derivative(-0.25, g, e) - g * 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn curve_shape() {
+        let c = curve(0.3, 0.5, -1.0, 1.0, 101);
+        assert_eq!(c.len(), 101);
+        // symmetric triangle peaking at v=0
+        let peak = c.iter().cloned().fold((0.0f32, 0.0f32), |acc, p| if p.1 > acc.1 { p } else { acc });
+        assert!(peak.0.abs() < 0.011);
+        assert_eq!(c[0].1, 0.0);
+        assert_eq!(c[100].1, 0.0);
+    }
+}

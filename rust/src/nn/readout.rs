@@ -1,0 +1,212 @@
+//! Linear readout `y = W_o a + b_o` (paper's `F_out`).
+//!
+//! The readout has no recurrence, so its parameters are trained with plain
+//! instantaneous gradients — no influence matrix needed. Its backward pass
+//! also produces the credit-assignment vector `c̄ = ∂L/∂a = W_oᵀ·∂L/∂y`
+//! that RTRL combines with `M` (paper Eq. 3).
+
+use crate::metrics::{OpCounter, Phase};
+use crate::tensor::Matrix;
+use crate::util::Pcg64;
+
+/// Linear readout layer with gradient buffers.
+#[derive(Debug, Clone)]
+pub struct Readout {
+    w: Matrix,
+    b: Vec<f32>,
+    grad_w: Matrix,
+    grad_b: Vec<f32>,
+}
+
+impl Readout {
+    pub fn new(n_out: usize, n: usize, rng: &mut Pcg64) -> Self {
+        Readout {
+            w: Matrix::glorot(n_out, n, rng),
+            b: vec![0.0; n_out],
+            grad_w: Matrix::zeros(n_out, n),
+            grad_b: vec![0.0; n_out],
+        }
+    }
+
+    #[inline]
+    pub fn n_out(&self) -> usize {
+        self.w.rows()
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// `logits = W_o a + b_o`. Event-driven: skips zero activations, so the
+    /// forward cost is `α̃·n·n_out`.
+    pub fn forward(&self, a: &[f32], logits: &mut [f32], ops: &mut OpCounter) {
+        assert_eq!(a.len(), self.n());
+        assert_eq!(logits.len(), self.n_out());
+        logits.copy_from_slice(&self.b);
+        let mut macs = 0u64;
+        for (l, &al) in a.iter().enumerate() {
+            if al == 0.0 {
+                continue;
+            }
+            for (o, logit) in logits.iter_mut().enumerate() {
+                *logit += self.w.get(o, l) * al;
+            }
+            macs += self.n_out() as u64;
+        }
+        ops.macs(Phase::Forward, macs);
+    }
+
+    /// Backward: given `dlogits = ∂L/∂y`, accumulates readout grads and
+    /// writes the credit-assignment vector `c̄ = W_oᵀ dlogits` into `c_bar`.
+    pub fn backward(
+        &mut self,
+        a: &[f32],
+        dlogits: &[f32],
+        c_bar: &mut [f32],
+        ops: &mut OpCounter,
+    ) {
+        assert_eq!(dlogits.len(), self.n_out());
+        assert_eq!(c_bar.len(), self.n());
+        c_bar.iter_mut().for_each(|v| *v = 0.0);
+        let mut macs = 0u64;
+        for (o, &d) in dlogits.iter().enumerate() {
+            self.grad_b[o] += d;
+            if d == 0.0 {
+                continue;
+            }
+            let wrow = self.w.row(o);
+            let grow = self.grad_w.row_mut(o);
+            for l in 0..c_bar.len() {
+                c_bar[l] += wrow[l] * d;
+                // grad only where activation nonzero (a_l = 0 ⇒ zero grad)
+                if a[l] != 0.0 {
+                    grow[l] += d * a[l];
+                    macs += 1;
+                }
+                macs += 1;
+            }
+        }
+        ops.macs(Phase::GradCombine, macs);
+    }
+
+    /// (params, grads) flattened views for the optimizer: `[W_o rows..., b_o]`.
+    pub fn param_len(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    pub fn copy_params_into(&self, out: &mut [f32]) {
+        let (wpart, bpart) = out.split_at_mut(self.w.len());
+        wpart.copy_from_slice(self.w.as_slice());
+        bpart.copy_from_slice(&self.b);
+    }
+
+    pub fn copy_grads_into(&self, out: &mut [f32]) {
+        let (wpart, bpart) = out.split_at_mut(self.grad_w.len());
+        wpart.copy_from_slice(self.grad_w.as_slice());
+        bpart.copy_from_slice(&self.grad_b);
+    }
+
+    pub fn load_params(&mut self, inp: &[f32]) {
+        let (wpart, bpart) = inp.split_at(self.w.len());
+        self.w.as_mut_slice().copy_from_slice(wpart);
+        self.b.copy_from_slice(bpart);
+    }
+
+    pub fn zero_grads(&mut self) {
+        self.grad_w.fill_zero();
+        self.grad_b.iter_mut().for_each(|g| *g = 0.0);
+    }
+
+    /// Scale accumulated gradients (e.g. 1/batch_size).
+    pub fn scale_grads(&mut self, s: f32) {
+        for g in self.grad_w.as_mut_slice() {
+            *g *= s;
+        }
+        for g in &mut self.grad_b {
+            *g *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_known_values() {
+        let mut rng = Pcg64::new(1);
+        let mut r = Readout::new(2, 3, &mut rng);
+        r.load_params(&[1.0, 0.0, 2.0, 0.0, 1.0, 0.0, 0.5, -0.5]);
+        let mut logits = [0.0; 2];
+        r.forward(&[1.0, 0.0, 3.0], &mut logits, &mut OpCounter::new());
+        assert!((logits[0] - (1.0 + 6.0 + 0.5)).abs() < 1e-6);
+        assert!((logits[1] - (0.0 + 0.0 - 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn forward_skips_zeros_in_op_count() {
+        let mut rng = Pcg64::new(2);
+        let r = Readout::new(4, 8, &mut rng);
+        let mut logits = [0.0; 4];
+        let mut dense = OpCounter::new();
+        r.forward(&[1.0; 8], &mut logits, &mut dense);
+        let mut sparse = OpCounter::new();
+        let mut a = [0.0; 8];
+        a[0] = 1.0;
+        r.forward(&a, &mut logits, &mut sparse);
+        assert_eq!(dense.macs_in(Phase::Forward), 32);
+        assert_eq!(sparse.macs_in(Phase::Forward), 4);
+    }
+
+    #[test]
+    fn backward_cbar_matches_transpose() {
+        let mut rng = Pcg64::new(3);
+        let mut r = Readout::new(2, 3, &mut rng);
+        let a = [0.5, 0.0, 1.0];
+        let d = [0.3, -0.7];
+        let mut c_bar = [0.0; 3];
+        r.backward(&a, &d, &mut c_bar, &mut OpCounter::new());
+        for l in 0..3 {
+            let expect = r.w.get(0, l) * d[0] + r.w.get(1, l) * d[1];
+            assert!((c_bar[l] - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn backward_grads_finite_difference() {
+        // Check grad_w against finite differences of L = sum(dlogits · logits)
+        // for fixed dlogits (linear functional — exact).
+        let mut rng = Pcg64::new(4);
+        let mut r = Readout::new(2, 3, &mut rng);
+        let a = [0.5, -0.2, 1.0];
+        let d = [0.3, -0.7];
+        r.zero_grads();
+        let mut c_bar = [0.0; 3];
+        r.backward(&a, &d, &mut c_bar, &mut OpCounter::new());
+        let mut grads = vec![0.0; r.param_len()];
+        r.copy_grads_into(&mut grads);
+        // analytic: grad_w[o,l] = d[o]*a[l]; grad_b[o] = d[o]
+        for o in 0..2 {
+            for l in 0..3 {
+                assert!((grads[o * 3 + l] - d[o] * a[l]).abs() < 1e-6);
+            }
+            assert!((grads[6 + o] - d[o]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut rng = Pcg64::new(5);
+        let mut r = Readout::new(3, 4, &mut rng);
+        let mut buf = vec![0.0; r.param_len()];
+        r.copy_params_into(&mut buf);
+        let orig = buf.clone();
+        buf.iter_mut().for_each(|x| *x += 1.0);
+        r.load_params(&buf);
+        r.copy_params_into(&mut buf);
+        for (a, b) in buf.iter().zip(&orig) {
+            assert!((a - b - 1.0).abs() < 1e-6);
+        }
+    }
+}

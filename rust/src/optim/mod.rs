@@ -1,0 +1,21 @@
+//! Optimizers: Adam (the paper's choice, §6) and SGD.
+//!
+//! Optimizers operate on flat `&mut [f32]` parameter buffers so the same
+//! instance can drive cell and readout parameters. Masked (structurally
+//! zero) parameters receive exactly-zero gradients from the engines, so
+//! their Adam moments stay zero and they never move; the trainer still calls
+//! [`crate::nn::RnnCell::enforce_mask`] after each update as hygiene.
+
+pub mod adam;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use sgd::Sgd;
+
+/// A first-order optimizer over a flat parameter vector.
+pub trait Optimizer {
+    /// Apply one update given gradients (same layout/length as params).
+    fn update(&mut self, params: &mut [f32], grads: &[f32]);
+    /// Reset internal state (moments, step count).
+    fn reset(&mut self);
+}

@@ -1,0 +1,60 @@
+//! Plain SGD with optional momentum (baseline / ablation optimizer).
+
+use super::Optimizer;
+
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    lr: f32,
+    momentum: f32,
+    velocity: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(dim: usize, lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum, velocity: vec![0.0; dim] }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn update(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), self.velocity.len());
+        for i in 0..params.len() {
+            self.velocity[i] = self.momentum * self.velocity[i] + grads[i];
+            params[i] -= self.lr * self.velocity[i];
+        }
+    }
+
+    fn reset(&mut self) {
+        self.velocity.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descends_gradient() {
+        let mut x = vec![10.0f32];
+        let mut sgd = Sgd::new(1, 0.1, 0.0);
+        for _ in 0..200 {
+            let g = vec![2.0 * x[0]];
+            sgd.update(&mut x, &g);
+        }
+        assert!(x[0].abs() < 1e-3);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let run = |mu: f32| {
+            let mut x = vec![10.0f32];
+            let mut sgd = Sgd::new(1, 0.01, mu);
+            for _ in 0..50 {
+                let g = vec![2.0 * x[0]];
+                sgd.update(&mut x, &g);
+            }
+            x[0]
+        };
+        assert!(run(0.9).abs() < run(0.0).abs());
+    }
+}

@@ -1,0 +1,87 @@
+//! Minimal ASCII line plots for terminal reports (Fig. 3 panels).
+
+/// Render multiple named series into a `width × height` ASCII plot.
+/// Each series is a list of `(x, y)` points; series are drawn with distinct
+/// glyphs and a legend is appended.
+pub fn plot(series: &[(&str, Vec<(f64, f64)>)], width: usize, height: usize, title: &str) -> String {
+    const GLYPHS: [char; 8] = ['o', '+', 'x', '*', '#', '@', '%', '&'];
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let pts: Vec<(f64, f64)> = series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+    if pts.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (mut xmin, mut xmax, mut ymin, mut ymax) =
+        (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, p)) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in p {
+            let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = g;
+        }
+    }
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>9.3} |")
+        } else if i == height - 1 {
+            format!("{ymin:>9.3} |")
+        } else {
+            format!("{:>9} |", "")
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>9}  {}\n{:>9}  {:<.3} .. {:<.3}\n",
+        "", "-".repeat(width), "x:", xmin, xmax
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("   {} = {}\n", GLYPHS[si % GLYPHS.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_within_bounds() {
+        let s = vec![("a", vec![(0.0, 0.0), (1.0, 1.0)]), ("b", vec![(0.5, 0.5)])];
+        let p = plot(&s, 20, 10, "test");
+        assert!(p.contains("== test =="));
+        assert!(p.contains('o'));
+        assert!(p.contains('+'));
+        assert!(p.contains("a"));
+    }
+
+    #[test]
+    fn empty_series_no_panic() {
+        let p = plot(&[], 10, 5, "empty");
+        assert!(p.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let s = vec![("c", vec![(1.0, 2.0), (1.0, 2.0)])];
+        let p = plot(&s, 10, 5, "const");
+        assert!(p.contains('o'));
+    }
+}

@@ -1,0 +1,28 @@
+//! Small file-output helpers for result artifacts.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write text to a path, creating parent directories.
+pub fn write_text(path: &Path, text: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(text.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_creates_dirs() {
+        let dir = std::env::temp_dir().join("sparse_rtrl_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("a/b/test.csv");
+        write_text(&p, "x,y\n1,2\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "x,y\n1,2\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,7 @@
+//! Report emitters: regenerate every table and figure of the paper.
+
+pub mod ascii_plot;
+pub mod csv;
+pub mod fig1;
+pub mod fig2;
+pub mod table1;

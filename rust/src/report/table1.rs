@@ -1,0 +1,207 @@
+//! Table 1 regeneration: memory and time-per-step costs for every method,
+//! both **analytic** (the paper's factors, instantiated with measured
+//! α/β/ω̃) and **measured** (actual MACs and state words from running each
+//! engine one step on the same cell and input).
+
+use crate::config::AlgorithmKind;
+use crate::metrics::{OpCounter, Phase};
+use crate::nn::{Loss, LossKind, Readout, RnnCell};
+use crate::rtrl::Target;
+use crate::sparse::MaskPattern;
+use crate::train::build_engine;
+use crate::util::Pcg64;
+
+/// One measured row of the table.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub method: &'static str,
+    pub analytic_time: String,
+    pub analytic_memory: String,
+    pub measured_influence_macs: u64,
+    pub measured_total_macs: u64,
+    pub measured_memory_words: usize,
+}
+
+/// Cost-model parameters extracted from a run.
+#[derive(Debug, Clone, Copy)]
+pub struct CostParams {
+    pub n: usize,
+    pub p: usize,
+    pub t: usize,
+    pub omega_tilde: f64,
+    pub alpha_tilde: f64,
+    pub beta_tilde: f64,
+}
+
+impl CostParams {
+    /// Analytic time-per-step (second term of Table 1, the influence update)
+    /// for a method, in MACs.
+    pub fn analytic_influence(&self, kind: AlgorithmKind) -> f64 {
+        let (n, p) = (self.n as f64, self.p as f64);
+        let (w, b) = (self.omega_tilde, self.beta_tilde);
+        match kind {
+            AlgorithmKind::Bptt => n * n + p,
+            AlgorithmKind::RtrlDense => n * n * p,
+            AlgorithmKind::RtrlParam => w * w * n * n * p,
+            AlgorithmKind::RtrlActivity => b * b * n * n * p,
+            AlgorithmKind::RtrlBoth => w * w * b * b * n * n * p,
+            AlgorithmKind::Snap1 => w * p,
+            AlgorithmKind::Snap2 => w * w * w * n * n * p,
+            AlgorithmKind::Uoro => w * n * n + p,
+        }
+    }
+
+    /// Analytic memory (Table 1 memory column), in words.
+    pub fn analytic_memory(&self, kind: AlgorithmKind) -> f64 {
+        let (n, p, t) = (self.n as f64, self.p as f64, self.t as f64);
+        let (w, b, a) = (self.omega_tilde, self.beta_tilde, self.alpha_tilde);
+        match kind {
+            AlgorithmKind::Bptt => t * n + p,
+            AlgorithmKind::RtrlDense => n + n * p,
+            AlgorithmKind::RtrlParam => n + w * n * p,
+            AlgorithmKind::RtrlActivity => a * n + b * n * p,
+            AlgorithmKind::RtrlBoth => a * n + w * b * n * p,
+            AlgorithmKind::Snap1 => n + w * p,
+            AlgorithmKind::Snap2 => n + w * w * n * p,
+            AlgorithmKind::Uoro => n + 2.0 * p,
+        }
+    }
+}
+
+/// Measure one engine for `steps` timesteps on a fixed random input stream.
+pub fn measure(
+    kind: AlgorithmKind,
+    cell: &RnnCell,
+    steps: usize,
+    seed: u64,
+) -> (u64, u64, usize, f64, f64) {
+    let mut rng = Pcg64::new(seed);
+    let mut readout = Readout::new(2, cell.n(), &mut rng);
+    let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+    let mut eng = build_engine(kind, cell, 2);
+    let mut ops = OpCounter::new();
+    eng.begin_sequence();
+    let mut alpha_sum = 0.0f64;
+    let mut beta_sum = 0.0f64;
+    for t in 0..steps {
+        let x = [rng.normal(), rng.normal()];
+        let target = if t + 1 == steps { Target::Class(0) } else { Target::None };
+        let r = eng.step(cell, &mut readout, &mut loss, &x, target, &mut ops);
+        alpha_sum += r.active_units as f64 / cell.n() as f64;
+        beta_sum += r.deriv_units as f64 / cell.n() as f64;
+    }
+    eng.end_sequence(cell, &mut readout, &mut ops);
+    // "time per step", second term of Table 1: everything that touches the
+    // influence/credit machinery. For RTRL engines this is dominated by the
+    // J·M recursion; for BPTT it is the reverse pass (GradCombine).
+    let influence = (ops.macs_in(Phase::InfluenceUpdate)
+        + ops.macs_in(Phase::Jacobian)
+        + ops.macs_in(Phase::GradCombine))
+        / steps as u64;
+    let total = ops.total_macs() / steps as u64;
+    (
+        influence,
+        total,
+        eng.state_memory_words(),
+        alpha_sum / steps as f64,
+        beta_sum / steps as f64,
+    )
+}
+
+/// Build the full table for given `n`, ω and number of steps.
+pub fn build(n: usize, omega: f32, steps: usize) -> (CostParams, Vec<Row>) {
+    let mut rng = Pcg64::new(7);
+    let mask = if omega > 0.0 {
+        Some(MaskPattern::random(n, n, 1.0 - omega, &mut rng))
+    } else {
+        None
+    };
+    let cell = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, mask, &mut rng);
+    // measure α̃/β̃ once from the dense run (identical across engines)
+    let (_, _, _, at, bt) = measure(AlgorithmKind::RtrlDense, &cell, steps, 99);
+    let params = CostParams {
+        n,
+        p: cell.p(),
+        t: steps,
+        omega_tilde: cell.omega_tilde() as f64,
+        alpha_tilde: at,
+        beta_tilde: bt,
+    };
+    let mut rows = Vec::new();
+    for kind in AlgorithmKind::all() {
+        let (inf, total, mem, _, _) = measure(kind, &cell, steps, 99);
+        rows.push(Row {
+            method: kind.name(),
+            analytic_time: format!("{:.0}", params.analytic_influence(kind)),
+            analytic_memory: format!("{:.0}", params.analytic_memory(kind)),
+            measured_influence_macs: inf,
+            measured_total_macs: total,
+            measured_memory_words: mem,
+        });
+    }
+    (params, rows)
+}
+
+/// Formatted text table.
+pub fn render(n: usize, omega: f32, steps: usize) -> String {
+    let (p, rows) = build(n, omega, steps);
+    let mut s = format!(
+        "Table 1 (measured): n={} p={} T={} ω̃={:.2} α̃={:.2} β̃={:.2}\n",
+        p.n, p.p, p.t, p.omega_tilde, p.alpha_tilde, p.beta_tilde
+    );
+    s.push_str(&format!(
+        "{:<15}{:>18}{:>18}{:>14}{:>18}{:>14}\n",
+        "method", "analytic t/step", "measured MACs/st", "ratio", "analytic memory", "measured mem"
+    ));
+    for r in &rows {
+        let analytic: f64 = r.analytic_time.parse().unwrap_or(1.0);
+        let ratio = r.measured_influence_macs as f64 / analytic.max(1.0);
+        s.push_str(&format!(
+            "{:<15}{:>18}{:>18}{:>14.2}{:>18}{:>14}\n",
+            r.method,
+            r.analytic_time,
+            r.measured_influence_macs,
+            ratio,
+            r.analytic_memory,
+            r.measured_memory_words
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_methods_measured_cheaper_than_dense() {
+        let (_, rows) = build(16, 0.8, 8);
+        let get = |name: &str| {
+            rows.iter().find(|r| r.method == name).unwrap().measured_influence_macs
+        };
+        let dense = get("rtrl-dense");
+        assert!(get("rtrl-activity") < dense);
+        assert!(get("rtrl-param") < dense);
+        assert!(get("rtrl-both") < get("rtrl-activity"));
+        assert!(get("rtrl-both") < get("rtrl-param"));
+        assert!(get("snap1") < get("rtrl-both"));
+    }
+
+    #[test]
+    fn analytic_formulas_match_paper_at_unity() {
+        // with ω̃=β̃=α̃=1 the sparse rows collapse to dense RTRL
+        let p = CostParams { n: 16, p: 608, t: 17, omega_tilde: 1.0, alpha_tilde: 1.0, beta_tilde: 1.0 };
+        let dense = p.analytic_influence(AlgorithmKind::RtrlDense);
+        for kind in [AlgorithmKind::RtrlParam, AlgorithmKind::RtrlActivity, AlgorithmKind::RtrlBoth] {
+            assert_eq!(p.analytic_influence(kind), dense);
+        }
+    }
+
+    #[test]
+    fn render_contains_all_methods() {
+        let s = render(8, 0.5, 4);
+        for m in ["bptt", "rtrl-dense", "rtrl-both", "snap1", "snap2"] {
+            assert!(s.contains(m), "missing {m}");
+        }
+    }
+}

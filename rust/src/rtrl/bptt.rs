@@ -1,0 +1,223 @@
+//! Backpropagation through time — the standard offline baseline.
+//!
+//! Stores the full forward history (the `T·n`-memory growth the paper
+//! motivates against) and runs an exact reverse pass at `end_sequence`.
+//! Because both BPTT and RTRL differentiate the same surrogate-gradient
+//! computational graph, their gradients agree to FP tolerance — the
+//! cross-check used by `rust/tests/grad_equivalence.rs`.
+//!
+//! The reverse pass does exploit activity sparsity (`δv_k = φ'_k·…` vanishes
+//! where `φ' = 0`), matching Subramoney et al. (2022)'s sparse-BPTT
+//! observation; the *memory* still grows with `T`, which is the axis the
+//! paper contrasts.
+
+use super::{supervised_step, Algorithm, StepResult, Target};
+use crate::metrics::{OpCounter, Phase};
+use crate::nn::{CellScratch, Loss, Readout, RnnCell};
+
+/// One stored timestep of forward history.
+struct Frame {
+    x: Vec<f32>,
+    a_prev: Vec<f32>,
+    scratch: CellScratch,
+    /// Credit assignment c̄_t = ∂L_t/∂a_t (zero vector when unsupervised).
+    c_bar: Vec<f32>,
+}
+
+/// BPTT engine (per-sequence state; reusable).
+pub struct Bptt {
+    frames: Vec<Frame>,
+    a_prev: Vec<f32>,
+    grads: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    c_bar: Vec<f32>,
+    /// Peak stored frames (memory reporting).
+    peak_frames: usize,
+    n: usize,
+    n_in: usize,
+}
+
+impl Bptt {
+    pub fn new(cell: &RnnCell, readout_n_out: usize) -> Self {
+        let n = cell.n();
+        Bptt {
+            frames: Vec::new(),
+            a_prev: vec![0.0; n],
+            grads: vec![0.0; cell.p()],
+            logits: vec![0.0; readout_n_out],
+            dlogits: vec![0.0; readout_n_out],
+            c_bar: vec![0.0; n],
+            peak_frames: 0,
+            n,
+            n_in: cell.n_in(),
+        }
+    }
+}
+
+impl Algorithm for Bptt {
+    fn name(&self) -> &'static str {
+        "bptt"
+    }
+
+    fn begin_sequence(&mut self) {
+        self.frames.clear();
+        self.a_prev.iter_mut().for_each(|x| *x = 0.0);
+        self.grads.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn step(
+        &mut self,
+        cell: &RnnCell,
+        readout: &mut Readout,
+        loss: &mut Loss,
+        x: &[f32],
+        target: Target,
+        ops: &mut OpCounter,
+    ) -> StepResult {
+        let n = cell.n();
+        let mut scratch = CellScratch::new(n);
+        cell.forward(&self.a_prev, x, &mut scratch, ops);
+        let active_units = scratch.active_units();
+        let deriv_units = scratch.deriv_units();
+
+        let (loss_val, correct) = supervised_step(
+            readout,
+            loss,
+            &scratch.a,
+            target,
+            &mut self.logits,
+            &mut self.dlogits,
+            &mut self.c_bar,
+            ops,
+        );
+        let c_bar = if loss_val.is_some() {
+            self.c_bar.clone()
+        } else {
+            vec![0.0; n]
+        };
+
+        self.frames.push(Frame {
+            x: x.to_vec(),
+            a_prev: self.a_prev.clone(),
+            scratch: scratch.clone(),
+            c_bar,
+        });
+        self.peak_frames = self.peak_frames.max(self.frames.len());
+        self.a_prev.copy_from_slice(&scratch.a);
+
+        StepResult {
+            loss: loss_val,
+            correct,
+            active_units,
+            deriv_units,
+            influence_sparsity: None,
+        }
+    }
+
+    fn end_sequence(&mut self, cell: &RnnCell, _readout: &mut Readout, ops: &mut OpCounter) {
+        let n = cell.n();
+        // da = ∂𝓛/∂a_t accumulated backwards; dv = φ'_t ⊙ da.
+        let mut da = vec![0.0f32; n];
+        let mut dv = vec![0.0f32; n];
+        for t in (0..self.frames.len()).rev() {
+            let frame = &self.frames[t];
+            // da_t = c̄_t + (carried term already in `da` from t+1)
+            for (d, &c) in da.iter_mut().zip(&frame.c_bar) {
+                *d += c;
+            }
+            let mut bptt_macs = 0u64;
+            for k in 0..n {
+                dv[k] = frame.scratch.dphi[k] * da[k];
+            }
+            bptt_macs += n as u64;
+            // grads += M̄_tᵀ dv (structural nonzeros only)
+            for k in 0..n {
+                if dv[k] == 0.0 {
+                    continue;
+                }
+                let dvk = dv[k];
+                let grads = &mut self.grads;
+                cell.immediate_row(
+                    &frame.scratch,
+                    &frame.a_prev,
+                    &frame.x,
+                    k,
+                    |pi, val| grads[pi] += dvk * val,
+                    ops,
+                );
+            }
+            // da_{t-1} = J_tᵀ dv ( = Σ_k dv_k · ∂v_k/∂a_l )
+            da.iter_mut().for_each(|d| *d = 0.0);
+            for k in 0..n {
+                if dv[k] == 0.0 {
+                    continue;
+                }
+                let dvk = dv[k];
+                for &l in cell.kept_cols(k) {
+                    da[l as usize] += dvk * cell.dv_da(&frame.scratch, k, l as usize);
+                    bptt_macs += 1 + cell.dv_da_cost();
+                }
+            }
+            ops.macs(Phase::GradCombine, bptt_macs);
+        }
+        self.frames.clear();
+    }
+
+    fn grads(&self) -> &[f32] {
+        &self.grads
+    }
+
+    fn reset_grads(&mut self) {
+        self.grads.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn state_memory_words(&self) -> usize {
+        // x + a_prev + scratch(7n) + c̄ per frame — the T·n growth term.
+        self.peak_frames * (self.n_in + 9 * self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LossKind;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn memory_grows_with_sequence_length() {
+        let mut rng = Pcg64::new(30);
+        let cell = RnnCell::egru(6, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let mut readout = Readout::new(2, 6, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut eng = Bptt::new(&cell, 2);
+        let mut ops = OpCounter::new();
+        eng.begin_sequence();
+        for _ in 0..10 {
+            eng.step(&cell, &mut readout, &mut loss, &[0.5, 0.1], Target::None, &mut ops);
+        }
+        assert_eq!(eng.frames.len(), 10);
+        eng.end_sequence(&cell, &mut readout, &mut ops);
+        assert!(eng.frames.is_empty());
+        assert_eq!(eng.peak_frames, 10);
+    }
+
+    #[test]
+    fn grad_nonzero_for_learnable_sequence() {
+        let mut rng = Pcg64::new(31);
+        let cell = RnnCell::egru(8, 2, 0.05, 0.3, 0.5, None, &mut rng);
+        let mut readout = Readout::new(2, 8, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut eng = Bptt::new(&cell, 2);
+        let mut ops = OpCounter::new();
+        eng.begin_sequence();
+        for t in 0..6 {
+            let x = [(t as f32 * 0.7).sin(), (t as f32 * 0.3).cos()];
+            let target = if t == 5 { Target::Class(0) } else { Target::None };
+            eng.step(&cell, &mut readout, &mut loss, &x, target, &mut ops);
+        }
+        eng.end_sequence(&cell, &mut readout, &mut ops);
+        let nonzero = eng.grads().iter().filter(|&&g| g != 0.0).count();
+        assert!(nonzero > 0, "expected some nonzero grads");
+    }
+}

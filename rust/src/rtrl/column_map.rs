@@ -1,0 +1,189 @@
+//! Column compaction for parameter sparsity.
+//!
+//! With a fixed mask, entire columns of `M`/`M̄` are structurally zero for
+//! the dropped recurrent parameters and stay zero across timesteps (§5).
+//! A [`ColumnMap`] stores only the `ω̃p`-ish live columns: the mapping
+//! between flat parameter indices (`R^p`) and compact column indices.
+
+use crate::nn::RnnCell;
+
+/// Sentinel for "parameter not tracked" in the reverse map.
+const UNTRACKED: u32 = u32::MAX;
+
+/// Bijection between tracked flat parameter indices and compact columns.
+#[derive(Debug, Clone)]
+pub struct ColumnMap {
+    /// Compact column → flat parameter index (sorted ascending).
+    cols: Vec<u32>,
+    /// Flat parameter index → compact column (or `UNTRACKED`).
+    rank: Vec<u32>,
+}
+
+impl ColumnMap {
+    /// Identity map over all `p` parameters (the dense-columns case).
+    pub fn full(p: usize) -> Self {
+        ColumnMap {
+            cols: (0..p as u32).collect(),
+            rank: (0..p as u32).collect(),
+        }
+    }
+
+    /// Map tracking every parameter except masked-out recurrent entries.
+    /// Equals [`ColumnMap::full`] when the cell is dense.
+    pub fn from_cell(cell: &RnnCell) -> Self {
+        let p = cell.p();
+        let Some(mask) = cell.mask() else {
+            return Self::full(p);
+        };
+        let n = cell.n();
+        let mut dropped = vec![false; p];
+        let layout = cell.layout();
+        for b in cell.recurrent_blocks() {
+            for r in 0..n {
+                let range = layout.row_range(b, r);
+                for (c, pi) in range.enumerate() {
+                    if !mask.is_kept(r, c) {
+                        dropped[pi] = true;
+                    }
+                }
+            }
+        }
+        let mut cols = Vec::with_capacity(p);
+        let mut rank = vec![UNTRACKED; p];
+        for (pi, &d) in dropped.iter().enumerate() {
+            if !d {
+                rank[pi] = cols.len() as u32;
+                cols.push(pi as u32);
+            }
+        }
+        ColumnMap { cols, rank }
+    }
+
+    /// Number of tracked (compact) columns.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    /// Total flat parameter count `p`.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.rank.len()
+    }
+
+    /// Flat parameter index of compact column `j`.
+    #[inline]
+    pub fn param_of(&self, j: usize) -> usize {
+        self.cols[j] as usize
+    }
+
+    /// Compact column of flat parameter `pi`, if tracked.
+    #[inline]
+    pub fn compact_of(&self, pi: usize) -> Option<usize> {
+        let r = self.rank[pi];
+        if r == UNTRACKED {
+            None
+        } else {
+            Some(r as usize)
+        }
+    }
+
+    /// Compact column of flat parameter `pi`, assuming it is tracked.
+    /// Panics (debug) if not — used where structure guarantees tracking.
+    #[inline]
+    pub fn compact_of_unchecked(&self, pi: usize) -> usize {
+        debug_assert_ne!(self.rank[pi], UNTRACKED, "param {pi} untracked");
+        self.rank[pi] as usize
+    }
+
+    /// Fraction of parameters tracked (≥ ω̃ since input/bias cols are dense).
+    pub fn tracked_fraction(&self) -> f32 {
+        if self.rank.is_empty() {
+            1.0
+        } else {
+            self.cols.len() as f32 / self.rank.len() as f32
+        }
+    }
+
+    /// Scatter a compact row into a dense `R^p` buffer: `dense[param_of(j)] += compact[j] · scale`.
+    pub fn scatter_add(&self, compact: &[f32], scale: f32, dense: &mut [f32]) {
+        debug_assert_eq!(compact.len(), self.cols.len());
+        debug_assert_eq!(dense.len(), self.rank.len());
+        for (j, &v) in compact.iter().enumerate() {
+            if v != 0.0 {
+                dense[self.cols[j] as usize] += v * scale;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::MaskPattern;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn full_is_identity() {
+        let m = ColumnMap::full(10);
+        assert_eq!(m.len(), 10);
+        for i in 0..10 {
+            assert_eq!(m.param_of(i), i);
+            assert_eq!(m.compact_of(i), Some(i));
+        }
+    }
+
+    #[test]
+    fn from_dense_cell_tracks_everything() {
+        let mut rng = Pcg64::new(1);
+        let cell = RnnCell::egru(8, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let m = ColumnMap::from_cell(&cell);
+        assert_eq!(m.len(), cell.p());
+    }
+
+    #[test]
+    fn from_masked_cell_drops_masked_recurrent_params() {
+        let mut rng = Pcg64::new(2);
+        let n = 8;
+        let mask = MaskPattern::random(n, n, 0.25, &mut rng);
+        let cell = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, Some(mask.clone()), &mut rng);
+        let m = ColumnMap::from_cell(&cell);
+        // p − 2 recurrent blocks × dropped entries
+        let dropped_per_block = n * n - mask.kept();
+        assert_eq!(m.len(), cell.p() - 2 * dropped_per_block);
+        // every tracked recurrent param must be kept in the mask
+        let layout = cell.layout();
+        for j in 0..m.len() {
+            let pi = m.param_of(j);
+            let (b, r, c) = layout.decode(pi);
+            if cell.recurrent_blocks().contains(&b) {
+                assert!(mask.is_kept(r, c), "tracked dropped param ({b},{r},{c})");
+            }
+        }
+        // roundtrip
+        for j in 0..m.len() {
+            assert_eq!(m.compact_of(m.param_of(j)), Some(j));
+        }
+    }
+
+    #[test]
+    fn scatter_add_places_values() {
+        let mut rng = Pcg64::new(3);
+        let mask = MaskPattern::random(4, 4, 0.5, &mut rng);
+        let cell = RnnCell::evrnn(4, 2, 0.0, 0.3, 0.5, Some(mask), &mut rng);
+        let m = ColumnMap::from_cell(&cell);
+        let compact: Vec<f32> = (0..m.len()).map(|j| j as f32 + 1.0).collect();
+        let mut dense = vec![0.0; cell.p()];
+        m.scatter_add(&compact, 2.0, &mut dense);
+        for j in 0..m.len() {
+            assert_eq!(dense[m.param_of(j)], 2.0 * (j as f32 + 1.0));
+        }
+        let nonzero = dense.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nonzero, m.len());
+    }
+}

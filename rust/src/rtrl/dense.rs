@@ -1,0 +1,228 @@
+//! Fully dense RTRL — the paper's `O(n²p)`-per-step baseline.
+//!
+//! No skipping of any kind: every row of `M` is recomputed every step and
+//! the gather runs over all `n` previous rows and all `p` columns, exactly
+//! the cost Table 1's "Fully dense / RTRL" row charges. On an
+//! activity-sparse cell this engine still produces the *same* gradients as
+//! the sparse engines (the skipped work is all zeros); it just pays for the
+//! zeros — which is the comparison the paper draws.
+
+use super::{supervised_step, Algorithm, StepResult, Target};
+use crate::metrics::{OpCounter, Phase};
+use crate::nn::{CellScratch, Loss, Readout, RnnCell};
+use crate::tensor::Matrix;
+
+/// Dense RTRL engine (per-sequence state; reusable).
+pub struct DenseRtrl {
+    m_cur: Matrix,
+    m_next: Matrix,
+    scratch: CellScratch,
+    a_prev: Vec<f32>,
+    jrow: Vec<f32>,
+    grads: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    c_bar: Vec<f32>,
+    measure_influence: bool,
+}
+
+impl DenseRtrl {
+    pub fn new(cell: &RnnCell, readout_n_out: usize) -> Self {
+        let (n, p) = (cell.n(), cell.p());
+        DenseRtrl {
+            m_cur: Matrix::zeros(n, p),
+            m_next: Matrix::zeros(n, p),
+            scratch: CellScratch::new(n),
+            a_prev: vec![0.0; n],
+            jrow: vec![0.0; n],
+            grads: vec![0.0; p],
+            logits: vec![0.0; readout_n_out],
+            dlogits: vec![0.0; readout_n_out],
+            c_bar: vec![0.0; n],
+            measure_influence: false,
+        }
+    }
+
+    /// Dense copy of the current influence matrix (tests / Fig. 2).
+    pub fn influence(&self) -> &Matrix {
+        &self.m_cur
+    }
+}
+
+impl Algorithm for DenseRtrl {
+    fn name(&self) -> &'static str {
+        "rtrl-dense"
+    }
+
+    fn begin_sequence(&mut self) {
+        self.m_cur.fill_zero();
+        self.m_next.fill_zero();
+        self.a_prev.iter_mut().for_each(|x| *x = 0.0);
+        self.grads.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn step(
+        &mut self,
+        cell: &RnnCell,
+        readout: &mut Readout,
+        loss: &mut Loss,
+        x: &[f32],
+        target: Target,
+        ops: &mut OpCounter,
+    ) -> StepResult {
+        let n = cell.n();
+        let p = cell.p();
+        cell.forward(&self.a_prev, x, &mut self.scratch, ops);
+        let active_units = self.scratch.active_units();
+        let deriv_units = self.scratch.deriv_units();
+
+        // M_next = J · M_cur + M̄, with J = φ' ⊙ dv_da, no skipping.
+        for k in 0..n {
+            let dphi_k = self.scratch.dphi[k];
+            // full Jacobian row
+            for l in 0..n {
+                self.jrow[l] = cell.dv_da(&self.scratch, k, l);
+            }
+            ops.macs(Phase::Jacobian, n as u64 * cell.dv_da_cost());
+            let row = self.m_next.row_mut(k);
+            row.iter_mut().for_each(|r| *r = 0.0);
+            for l in 0..n {
+                let jv = self.jrow[l];
+                let src = self.m_cur.row(l);
+                for (r, s) in row.iter_mut().zip(src) {
+                    *r += jv * s;
+                }
+            }
+            cell.immediate_row(&self.scratch, &self.a_prev, x, k, |pi, val| row[pi] += val, ops);
+            // flush-to-zero at the row gate (see SparseRtrl::step §Perf note)
+            for r in row.iter_mut() {
+                let v = *r * dphi_k;
+                *r = if v.abs() < 1e-30 { 0.0 } else { v };
+            }
+            ops.macs(Phase::InfluenceUpdate, (n * p + p) as u64);
+        }
+        ops.words(Phase::InfluenceUpdate, ((n + 1) * n * p) as u64);
+
+        let (loss_val, correct) = supervised_step(
+            readout,
+            loss,
+            &self.scratch.a,
+            target,
+            &mut self.logits,
+            &mut self.dlogits,
+            &mut self.c_bar,
+            ops,
+        );
+        if loss_val.is_some() {
+            // grads += M_nextᵀ c̄ over all rows
+            for k in 0..n {
+                let coef = self.c_bar[k];
+                let mrow = self.m_next.row(k);
+                for (g, m) in self.grads.iter_mut().zip(mrow) {
+                    *g += coef * m;
+                }
+            }
+            ops.macs(Phase::GradCombine, (n * p) as u64);
+        }
+
+        let influence_sparsity = if self.measure_influence {
+            Some(self.m_next.sparsity())
+        } else {
+            None
+        };
+
+        std::mem::swap(&mut self.m_cur, &mut self.m_next);
+        self.a_prev.copy_from_slice(&self.scratch.a);
+
+        StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity }
+    }
+
+    fn end_sequence(&mut self, _cell: &RnnCell, _readout: &mut Readout, _ops: &mut OpCounter) {}
+
+    fn grads(&self) -> &[f32] {
+        &self.grads
+    }
+
+    fn reset_grads(&mut self) {
+        self.grads.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn set_measure_influence(&mut self, on: bool) {
+        self.measure_influence = on;
+    }
+
+    fn state_memory_words(&self) -> usize {
+        self.m_cur.len() + self.m_next.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LossKind;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn dense_pays_full_cost_regardless_of_activity() {
+        let mut rng = Pcg64::new(20);
+        // threshold so high nothing fires
+        let cell = RnnCell::egru(6, 2, 100.0, 0.3, 0.5, None, &mut rng);
+        let mut readout = Readout::new(2, 6, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut eng = DenseRtrl::new(&cell, 2);
+        let mut ops = OpCounter::new();
+        eng.begin_sequence();
+        eng.step(&cell, &mut readout, &mut loss, &[1.0, 1.0], Target::None, &mut ops);
+        let n = 6u64;
+        let p = cell.p() as u64;
+        // exactly n·(n·p + p) influence MACs charged even though all-zero
+        assert_eq!(ops.macs_in(Phase::InfluenceUpdate), n * (n * p + p));
+    }
+
+    #[test]
+    fn influence_rows_zero_where_dphi_zero() {
+        let mut rng = Pcg64::new(21);
+        let cell = RnnCell::egru(8, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let mut readout = Readout::new(2, 8, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut eng = DenseRtrl::new(&cell, 2);
+        let mut ops = OpCounter::new();
+        eng.begin_sequence();
+        eng.step(&cell, &mut readout, &mut loss, &[0.7, -0.4], Target::None, &mut ops);
+        // paper Eq. 10: rows of M with φ'(v_k)=0 are fully zero
+        for k in 0..8 {
+            if eng.scratch.dphi[k] == 0.0 {
+                assert!(eng.m_cur.row(k).iter().all(|&v| v == 0.0), "row {k} not zero");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_columns_stay_zero() {
+        let mut rng = Pcg64::new(22);
+        let mask = crate::sparse::MaskPattern::random(6, 6, 0.3, &mut rng);
+        let cell = RnnCell::evrnn(6, 2, 0.0, 0.3, 0.5, Some(mask.clone()), &mut rng);
+        let mut readout = Readout::new(2, 6, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut eng = DenseRtrl::new(&cell, 2);
+        let mut ops = OpCounter::new();
+        eng.begin_sequence();
+        for t in 0..5 {
+            let x = [0.5 + 0.1 * t as f32, -0.2];
+            eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+        }
+        // §5: columns of M for dropped params remain zero across timesteps
+        let layout = cell.layout();
+        let voff = layout.offset(crate::nn::cell::linear_blocks::V);
+        for r in 0..6 {
+            for c in 0..6 {
+                if !mask.is_kept(r, c) {
+                    let pi = voff + r * 6 + c;
+                    for k in 0..6 {
+                        assert_eq!(eng.m_cur.get(k, pi), 0.0, "M[{k},{pi}] nonzero");
+                    }
+                }
+            }
+        }
+    }
+}

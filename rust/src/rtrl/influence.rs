@@ -1,0 +1,236 @@
+//! Ping-pong influence-matrix buffers with active-row tracking.
+//!
+//! `M^{(t)}` has `β̃^{(t)}n` nonzero rows (paper Eq. 10). The buffers hold
+//! two `n × pc` panels (current and next) plus the active-row set of each;
+//! rows outside a panel's active set are *logically zero* and are never read
+//! or written, which is exactly how the `β̃²` factor arises: the gather for
+//! a new row touches only prev-active rows, and only deriv-active rows are
+//! produced.
+
+use crate::sparse::RowSet;
+use crate::tensor::Matrix;
+
+/// Double-buffered row-sparse influence matrix.
+#[derive(Debug, Clone)]
+pub struct InfluenceBuffers {
+    cur: Matrix,
+    next: Matrix,
+    active_cur: RowSet,
+    active_next: RowSet,
+}
+
+impl InfluenceBuffers {
+    pub fn new(n: usize, pc: usize) -> Self {
+        InfluenceBuffers {
+            cur: Matrix::zeros(n, pc),
+            next: Matrix::zeros(n, pc),
+            active_cur: RowSet::empty(n),
+            active_next: RowSet::empty(n),
+        }
+    }
+
+    /// Reset to `M = 0` (start of sequence).
+    pub fn reset(&mut self) {
+        // Logical zero via empty active sets; buffers are lazily overwritten.
+        self.active_cur.clear();
+        self.active_next.clear();
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.cur.rows()
+    }
+
+    #[inline]
+    pub fn pc(&self) -> usize {
+        self.cur.cols()
+    }
+
+    /// Current panel's active rows (nonzero rows of `M^{(t-1)}`).
+    #[inline]
+    pub fn active_cur(&self) -> &RowSet {
+        &self.active_cur
+    }
+
+    /// Row of the current panel (caller must ensure `k ∈ active_cur`).
+    #[inline]
+    pub fn cur_row(&self, k: usize) -> &[f32] {
+        self.cur.row(k)
+    }
+
+    /// Begin writing the next panel: clears its active set.
+    pub fn begin_next(&mut self) {
+        self.active_next.clear();
+    }
+
+    /// Claim row `k` of the next panel for writing; marks it active and
+    /// returns the (stale — caller overwrites) row buffer.
+    #[inline]
+    pub fn claim_next_row(&mut self, k: usize) -> &mut [f32] {
+        self.active_next.insert(k);
+        self.next.row_mut(k)
+    }
+
+    /// Read access to a just-written next-panel row (gradient accumulation).
+    #[inline]
+    pub fn next_row(&self, k: usize) -> &[f32] {
+        self.next.row(k)
+    }
+
+    /// The influence recursion for one row (paper Eq. 10, inner bracket):
+    /// claims row `k` of the next panel and fills it with
+    /// `Σ_l jlist[l] · M_cur[l, :]`. The caller then adds `M̄` entries and
+    /// scales by `φ'(v_k)`. Returns the row for that post-processing.
+    ///
+    /// `jlist` entries must reference rows in `active_cur` — inactive rows
+    /// are logically zero and must already have been filtered out.
+    /// §Perf notes: the first contribution *writes* the row (no separate
+    /// zeroing pass), and entries are consumed in pairs so each pass over
+    /// the row does two fused multiply-adds per element — halving row
+    /// write/read traffic and roughly doubling ILP on the measured hot loop.
+    pub fn gather_into_next(&mut self, k: usize, jlist: &[(u32, f32)]) -> &mut [f32] {
+        self.active_next.insert(k);
+        let row = self.next.row_mut(k);
+        if jlist.is_empty() {
+            row.iter_mut().for_each(|x| *x = 0.0);
+            return row;
+        }
+        // first pair initializes the row
+        let (l0, j0) = jlist[0];
+        debug_assert!(self.active_cur.contains(l0 as usize));
+        let s0 = self.cur.row(l0 as usize);
+        let mut idx = 1;
+        if jlist.len() >= 2 {
+            let (l1, j1) = jlist[1];
+            let s1 = self.cur.row(l1 as usize);
+            let len = row.len();
+            let (s0, s1) = (&s0[..len], &s1[..len]);
+            for i in 0..len {
+                row[i] = j0 * s0[i] + j1 * s1[i];
+            }
+            idx = 2;
+        } else {
+            for (r, s) in row.iter_mut().zip(s0) {
+                *r = j0 * s;
+            }
+        }
+        // remaining pairs accumulate
+        while idx + 1 < jlist.len() {
+            let (la, ja) = jlist[idx];
+            let (lb, jb) = jlist[idx + 1];
+            debug_assert!(self.active_cur.contains(la as usize));
+            debug_assert!(self.active_cur.contains(lb as usize));
+            let sa = self.cur.row(la as usize);
+            let sb = self.cur.row(lb as usize);
+            let len = row.len();
+            let (sa, sb) = (&sa[..len], &sb[..len]);
+            for i in 0..len {
+                row[i] += ja * sa[i] + jb * sb[i];
+            }
+            idx += 2;
+        }
+        if idx < jlist.len() {
+            let (l, jv) = jlist[idx];
+            let src = self.cur.row(l as usize);
+            for (r, s) in row.iter_mut().zip(src) {
+                *r += jv * s;
+            }
+        }
+        row
+    }
+
+    /// Next panel's active rows.
+    #[inline]
+    pub fn active_next(&self) -> &RowSet {
+        &self.active_next
+    }
+
+    /// Rotate: next becomes current.
+    pub fn advance(&mut self) {
+        std::mem::swap(&mut self.cur, &mut self.next);
+        std::mem::swap(&mut self.active_cur, &mut self.active_next);
+    }
+
+    /// Nonzero entries in the *next* panel (inactive rows count as zero).
+    pub fn next_nonzero_count(&self) -> usize {
+        let mut nonzero = 0usize;
+        for k in self.active_next.iter() {
+            nonzero += self.next.row(k).iter().filter(|&&x| x != 0.0).count();
+        }
+        nonzero
+    }
+
+    /// Exact zero fraction of the stored `M^{(t)}` panel (the *next* panel
+    /// if called between write and advance). Callers with column compaction
+    /// should rescale to the logical `n×p` via [`Self::next_nonzero_count`].
+    pub fn next_zero_fraction(&self) -> f32 {
+        let total = (self.n() * self.pc()) as f64;
+        if total == 0.0 {
+            return 1.0;
+        }
+        (1.0 - self.next_nonzero_count() as f64 / total) as f32
+    }
+
+    /// Memory words held (both panels — the Table-1 memory column measures
+    /// the live footprint of the method).
+    pub fn memory_words(&self) -> usize {
+        self.cur.len() + self.next.len()
+    }
+
+    /// Words *touched* this step (β̃-scaled): rows written plus rows read.
+    pub fn touched_words(&self, rows_read: usize) -> usize {
+        (self.active_next.len() + rows_read) * self.pc()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_empties_active_sets() {
+        let mut b = InfluenceBuffers::new(4, 10);
+        b.begin_next();
+        b.claim_next_row(2).iter_mut().for_each(|x| *x = 1.0);
+        b.advance();
+        assert_eq!(b.active_cur().len(), 1);
+        b.reset();
+        assert_eq!(b.active_cur().len(), 0);
+        assert_eq!(b.active_next().len(), 0);
+    }
+
+    #[test]
+    fn claim_write_advance_read() {
+        let mut b = InfluenceBuffers::new(3, 4);
+        b.begin_next();
+        let row = b.claim_next_row(1);
+        row.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        b.advance();
+        assert!(b.active_cur().contains(1));
+        assert_eq!(b.cur_row(1), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_fraction_counts_inactive_rows_as_zero() {
+        let mut b = InfluenceBuffers::new(4, 4);
+        b.begin_next();
+        let row = b.claim_next_row(0);
+        row.copy_from_slice(&[1.0, 0.0, 2.0, 0.0]);
+        // 2 nonzero out of 16 logical entries
+        assert!((b.next_zero_fraction() - 14.0 / 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stale_rows_are_not_readable_via_active_set() {
+        let mut b = InfluenceBuffers::new(2, 2);
+        b.begin_next();
+        b.claim_next_row(0).copy_from_slice(&[5.0, 5.0]);
+        b.advance();
+        // next step: row 0 not claimed
+        b.begin_next();
+        b.claim_next_row(1).copy_from_slice(&[7.0, 7.0]);
+        b.advance();
+        assert!(!b.active_cur().contains(0));
+        assert!(b.active_cur().contains(1));
+    }
+}

@@ -1,0 +1,148 @@
+//! Gradient algorithms: exact RTRL (dense and sparse), the SnAp
+//! approximations, and BPTT.
+//!
+//! All algorithms implement [`Algorithm`] and are interchangeable in the
+//! trainer. The exactness contract (tested in `rust/tests/`):
+//!
+//! * [`DenseRtrl`], [`SparseRtrl`] (in all three sparsity modes) and
+//!   [`Bptt`] compute the **same gradient** up to floating-point
+//!   reassociation — the paper's central claim is that sparsity is exploited
+//!   *"without using any approximations"*;
+//! * [`Snap1`]/[`Snap2`] are the Menick et al. (2020) comparison points and
+//!   deliberately approximate.
+//!
+//! Cost accounting: every engine charges its MACs to an [`OpCounter`] phase
+//! so Table 1's analytic factors can be checked against measured counts.
+
+pub mod bptt;
+pub mod column_map;
+pub mod dense;
+pub mod influence;
+pub mod snap;
+pub mod sparse;
+pub mod uoro;
+
+pub use bptt::Bptt;
+pub use column_map::ColumnMap;
+pub use dense::DenseRtrl;
+pub use snap::{Snap1, Snap2};
+pub use uoro::Uoro;
+pub use sparse::{SparseRtrl, SparsityMode};
+
+use crate::metrics::OpCounter;
+use crate::nn::{Loss, Readout, RnnCell};
+
+/// Supervision for one timestep.
+#[derive(Debug, Clone, Copy)]
+pub enum Target<'a> {
+    /// No loss at this step (influence still propagates).
+    None,
+    /// Integer class target (softmax cross-entropy).
+    Class(usize),
+    /// Dense regression target (MSE).
+    Vector(&'a [f32]),
+}
+
+impl Target<'_> {
+    pub fn is_some(&self) -> bool {
+        !matches!(self, Target::None)
+    }
+}
+
+/// Per-step observation returned by [`Algorithm::step`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepResult {
+    /// Instantaneous loss, if a target was given.
+    pub loss: Option<f32>,
+    /// Whether the prediction matched a class target.
+    pub correct: Option<bool>,
+    /// α̃n — units with nonzero activation.
+    pub active_units: usize,
+    /// β̃n — units with nonzero pseudo-derivative.
+    pub deriv_units: usize,
+    /// Influence-matrix zero fraction, when measurement is enabled.
+    pub influence_sparsity: Option<f32>,
+}
+
+/// A gradient algorithm over one sequence at a time.
+///
+/// Protocol: `begin_sequence` → `step` × T → `end_sequence` → `grads`.
+/// RTRL variants accumulate gradients online during `step`; BPTT materializes
+/// them in `end_sequence`. Readout gradients accumulate into the `Readout`
+/// (scaled by the trainer), recurrent-parameter gradients into `grads()`
+/// (dense layout `R^p`, structurally zero at masked positions).
+pub trait Algorithm {
+    /// Short name for reports ("rtrl-dense", "snap1", …).
+    fn name(&self) -> &'static str;
+
+    /// Reset per-sequence state (influence matrix, histories, gradients).
+    fn begin_sequence(&mut self);
+
+    /// Advance one timestep.
+    fn step(
+        &mut self,
+        cell: &RnnCell,
+        readout: &mut Readout,
+        loss: &mut Loss,
+        x: &[f32],
+        target: Target,
+        ops: &mut OpCounter,
+    ) -> StepResult;
+
+    /// Finish the sequence (no-op for online methods; backward pass for BPTT).
+    fn end_sequence(
+        &mut self,
+        cell: &RnnCell,
+        readout: &mut Readout,
+        ops: &mut OpCounter,
+    );
+
+    /// Accumulated `∂𝓛/∂w` for the last completed sequence (dense `R^p`).
+    fn grads(&self) -> &[f32];
+
+    /// Clear gradient accumulators while *keeping* sequence state (influence
+    /// matrix, activations). This is the online-learning regime the paper
+    /// motivates: apply an update every supervised step of an endless
+    /// stream, M carries on. (BPTT cannot support this — its gradient needs
+    /// the stored history, which is exactly what online learning forbids.)
+    fn reset_grads(&mut self);
+
+    /// Enable/disable influence-sparsity measurement (costs a scan; trainers
+    /// turn it on only for logging iterations). Default: ignored.
+    fn set_measure_influence(&mut self, _on: bool) {}
+
+    /// Peak memory words this algorithm holds for sequence state (the
+    /// Table-1 "memory" column): influence matrices for RTRL, stored history
+    /// for BPTT. Measured, not analytic.
+    fn state_memory_words(&self) -> usize;
+}
+
+/// Shared helper: run readout + loss + credit assignment for a supervised
+/// step. Returns `(loss, correct, c_bar_filled)`.
+pub(crate) fn supervised_step(
+    readout: &mut Readout,
+    loss: &mut Loss,
+    a: &[f32],
+    target: Target,
+    logits: &mut [f32],
+    dlogits: &mut [f32],
+    c_bar: &mut [f32],
+    ops: &mut OpCounter,
+) -> (Option<f32>, Option<bool>) {
+    match target {
+        Target::None => (None, None),
+        Target::Class(t) => {
+            readout.forward(a, logits, ops);
+            let l = loss.cross_entropy(logits, t, dlogits);
+            let correct = Loss::predict(logits) == t;
+            readout.backward(a, dlogits, c_bar, ops);
+            (Some(l), Some(correct))
+        }
+        Target::Vector(tv) => {
+            readout.forward(a, logits, ops);
+            let l = loss.mse(logits, tv, dlogits);
+            readout.backward(a, dlogits, c_bar, ops);
+            (Some(l), None)
+        }
+    }
+}

@@ -1,0 +1,433 @@
+//! SnAp-n — the *approximate* RTRL baselines of Menick et al. (2020),
+//! included as Table 1's comparison rows.
+//!
+//! SnAp-n keeps only influence-matrix entries `(k, p)` reachable from
+//! parameter `p` within `n` steps of the unrolled graph:
+//!
+//! * **SnAp-1** — the pattern of `M̄` itself (parameter `p` only influences
+//!   its own row's unit), collapsing the recursion to a diagonal update
+//!   `M_kp ← J_kk·M_kp + M̄_kp`. Cheap (`O(ω̃p)` per step) but biased.
+//! * **SnAp-2** — two-step reachability: `(k,p)` is kept when `J_kl` is
+//!   structurally nonzero for some `l` with `p` in `l`'s fan-in (plus the
+//!   SnAp-1 pattern). With a dense cell this is the full matrix (SnAp-2 ≡
+//!   exact RTRL); under parameter sparsity it is an `ω̃²np`-sized pattern.
+//!
+//! Contrast with this repo's sparse engines: SnAp *discards* true nonzero
+//! influence terms outside the pattern (approximate), while activity/
+//! parameter sparsity skips only *structural zeros* (exact).
+
+use super::{supervised_step, Algorithm, StepResult, Target};
+use crate::metrics::{OpCounter, Phase};
+use crate::nn::{CellScratch, Loss, Readout, RnnCell};
+
+/// Shared machinery: a per-unit sparse influence slab `M[k] over pattern[k]`.
+struct PatternInfluence {
+    /// Sorted flat param indices kept per unit.
+    pattern: Vec<Vec<u32>>,
+    /// Values aligned with `pattern` (current step).
+    cur: Vec<Vec<f32>>,
+    /// Values aligned with `pattern` (staging).
+    next: Vec<Vec<f32>>,
+}
+
+impl PatternInfluence {
+    fn new(pattern: Vec<Vec<u32>>) -> Self {
+        let cur = pattern.iter().map(|p| vec![0.0; p.len()]).collect::<Vec<_>>();
+        let next = cur.clone();
+        PatternInfluence { pattern, cur, next }
+    }
+
+    fn reset(&mut self) {
+        for row in self.cur.iter_mut().chain(self.next.iter_mut()) {
+            row.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    fn advance(&mut self) {
+        std::mem::swap(&mut self.cur, &mut self.next);
+    }
+
+    fn memory_words(&self) -> usize {
+        2 * self.pattern.iter().map(|p| p.len()).sum::<usize>()
+    }
+}
+
+/// SnAp-1: diagonal-Jacobian approximation on the `M̄` pattern.
+pub struct Snap1 {
+    inf: PatternInfluence,
+    scratch: CellScratch,
+    a_prev: Vec<f32>,
+    grads: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    c_bar: Vec<f32>,
+}
+
+impl Snap1 {
+    pub fn new(cell: &RnnCell, readout_n_out: usize) -> Self {
+        let n = cell.n();
+        let pattern = (0..n).map(|k| cell.fan_in_params(k)).collect();
+        Snap1 {
+            inf: PatternInfluence::new(pattern),
+            scratch: CellScratch::new(n),
+            a_prev: vec![0.0; n],
+            grads: vec![0.0; cell.p()],
+            logits: vec![0.0; readout_n_out],
+            dlogits: vec![0.0; readout_n_out],
+            c_bar: vec![0.0; n],
+        }
+    }
+
+    /// Entries kept (the `ω̃p`-ish SnAp-1 memory of Table 1).
+    pub fn pattern_size(&self) -> usize {
+        self.inf.pattern.iter().map(|p| p.len()).sum()
+    }
+}
+
+impl Algorithm for Snap1 {
+    fn name(&self) -> &'static str {
+        "snap1"
+    }
+
+    fn begin_sequence(&mut self) {
+        self.inf.reset();
+        self.a_prev.iter_mut().for_each(|x| *x = 0.0);
+        self.grads.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn step(
+        &mut self,
+        cell: &RnnCell,
+        readout: &mut Readout,
+        loss: &mut Loss,
+        x: &[f32],
+        target: Target,
+        ops: &mut OpCounter,
+    ) -> StepResult {
+        let n = cell.n();
+        cell.forward(&self.a_prev, x, &mut self.scratch, ops);
+        let active_units = self.scratch.active_units();
+        let deriv_units = self.scratch.deriv_units();
+
+        let mut macs = 0u64;
+        for k in 0..n {
+            let dphi_k = self.scratch.dphi[k];
+            // Diagonal Jacobian element J_kk = φ'_k · ∂v_k/∂a_k.
+            let jkk = dphi_k * cell.dv_da(&self.scratch, k, k);
+            let (cur, next) = (&self.inf.cur[k], &mut self.inf.next[k]);
+            for (nx, &cu) in next.iter_mut().zip(cur) {
+                *nx = jkk * cu;
+            }
+            macs += cur.len() as u64;
+            // + φ'_k · M̄ entries (scatter into the pattern row)
+            let inf_pattern = &self.inf.pattern[k];
+            cell.immediate_row(
+                &self.scratch,
+                &self.a_prev,
+                x,
+                k,
+                |pi, val| {
+                    if let Ok(pos) = inf_pattern.binary_search(&(pi as u32)) {
+                        next[pos] += dphi_k * val;
+                    }
+                },
+                ops,
+            );
+        }
+        ops.macs(Phase::InfluenceUpdate, macs);
+
+        let (loss_val, correct) = supervised_step(
+            readout,
+            loss,
+            &self.scratch.a,
+            target,
+            &mut self.logits,
+            &mut self.dlogits,
+            &mut self.c_bar,
+            ops,
+        );
+        if loss_val.is_some() {
+            let mut gmacs = 0u64;
+            for k in 0..n {
+                let coef = self.c_bar[k];
+                if coef == 0.0 {
+                    continue;
+                }
+                for (j, &pi) in self.inf.pattern[k].iter().enumerate() {
+                    self.grads[pi as usize] += coef * self.inf.next[k][j];
+                }
+                gmacs += self.inf.pattern[k].len() as u64;
+            }
+            ops.macs(Phase::GradCombine, gmacs);
+        }
+
+        self.inf.advance();
+        self.a_prev.copy_from_slice(&self.scratch.a);
+        StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity: None }
+    }
+
+    fn end_sequence(&mut self, _cell: &RnnCell, _readout: &mut Readout, _ops: &mut OpCounter) {}
+
+    fn grads(&self) -> &[f32] {
+        &self.grads
+    }
+
+    fn reset_grads(&mut self) {
+        self.grads.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn state_memory_words(&self) -> usize {
+        self.inf.memory_words()
+    }
+}
+
+/// SnAp-2: two-hop influence pattern.
+pub struct Snap2 {
+    inf: PatternInfluence,
+    scratch: CellScratch,
+    a_prev: Vec<f32>,
+    grads: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    c_bar: Vec<f32>,
+}
+
+impl Snap2 {
+    pub fn new(cell: &RnnCell, readout_n_out: usize) -> Self {
+        let n = cell.n();
+        let fan_in: Vec<Vec<u32>> = (0..n).map(|k| cell.fan_in_params(k)).collect();
+        // pattern(k) = fan_in(k) ∪ ⋃_{l ∈ struct J row k} fan_in(l)
+        let pattern: Vec<Vec<u32>> = (0..n)
+            .map(|k| {
+                let mut set: Vec<u32> = fan_in[k].clone();
+                for &l in cell.kept_cols(k) {
+                    set.extend_from_slice(&fan_in[l as usize]);
+                }
+                set.sort_unstable();
+                set.dedup();
+                set
+            })
+            .collect();
+        Snap2 {
+            inf: PatternInfluence::new(pattern),
+            scratch: CellScratch::new(n),
+            a_prev: vec![0.0; n],
+            grads: vec![0.0; cell.p()],
+            logits: vec![0.0; readout_n_out],
+            dlogits: vec![0.0; readout_n_out],
+            c_bar: vec![0.0; n],
+        }
+    }
+
+    /// Entries kept (the `ω̃²np`-ish SnAp-2 memory of Table 1).
+    pub fn pattern_size(&self) -> usize {
+        self.inf.pattern.iter().map(|p| p.len()).sum()
+    }
+}
+
+impl Algorithm for Snap2 {
+    fn name(&self) -> &'static str {
+        "snap2"
+    }
+
+    fn begin_sequence(&mut self) {
+        self.inf.reset();
+        self.a_prev.iter_mut().for_each(|x| *x = 0.0);
+        self.grads.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn step(
+        &mut self,
+        cell: &RnnCell,
+        readout: &mut Readout,
+        loss: &mut Loss,
+        x: &[f32],
+        target: Target,
+        ops: &mut OpCounter,
+    ) -> StepResult {
+        let n = cell.n();
+        cell.forward(&self.a_prev, x, &mut self.scratch, ops);
+        let active_units = self.scratch.active_units();
+        let deriv_units = self.scratch.deriv_units();
+
+        let mut macs = 0u64;
+        for k in 0..n {
+            let dphi_k = self.scratch.dphi[k];
+            // Pattern-restricted J·M: for each kept (k,p), sum over l with
+            // J_kl structurally nonzero and (l,p) in pattern.
+            // First: stage = Σ_l Ĵ_kl · M_old[l, p∈pattern(k)]
+            {
+                let next = &mut self.inf.next[k];
+                next.iter_mut().for_each(|x| *x = 0.0);
+            }
+            for &l in cell.kept_cols(k) {
+                let jv = cell.dv_da(&self.scratch, k, l as usize);
+                macs += cell.dv_da_cost();
+                if jv == 0.0 {
+                    continue;
+                }
+                // two-pointer merge of pattern(k) and pattern(l)
+                let pk = &self.inf.pattern[k];
+                let pl = &self.inf.pattern[l as usize];
+                let ml = &self.inf.cur[l as usize];
+                let next = &mut self.inf.next[k];
+                let (mut i, mut j) = (0usize, 0usize);
+                while i < pk.len() && j < pl.len() {
+                    match pk[i].cmp(&pl[j]) {
+                        std::cmp::Ordering::Less => i += 1,
+                        std::cmp::Ordering::Greater => j += 1,
+                        std::cmp::Ordering::Equal => {
+                            next[i] += jv * ml[j];
+                            macs += 1;
+                            i += 1;
+                            j += 1;
+                        }
+                    }
+                }
+            }
+            // + M̄, then scale by φ'_k
+            {
+                let inf_pattern = &self.inf.pattern[k];
+                let next = &mut self.inf.next[k];
+                cell.immediate_row(
+                    &self.scratch,
+                    &self.a_prev,
+                    x,
+                    k,
+                    |pi, val| {
+                        if let Ok(pos) = inf_pattern.binary_search(&(pi as u32)) {
+                            next[pos] += val;
+                        }
+                    },
+                    ops,
+                );
+                for v in next.iter_mut() {
+                    *v *= dphi_k;
+                }
+                macs += next.len() as u64;
+            }
+        }
+        ops.macs(Phase::InfluenceUpdate, macs);
+
+        let (loss_val, correct) = supervised_step(
+            readout,
+            loss,
+            &self.scratch.a,
+            target,
+            &mut self.logits,
+            &mut self.dlogits,
+            &mut self.c_bar,
+            ops,
+        );
+        if loss_val.is_some() {
+            let mut gmacs = 0u64;
+            for k in 0..n {
+                let coef = self.c_bar[k];
+                if coef == 0.0 {
+                    continue;
+                }
+                for (j, &pi) in self.inf.pattern[k].iter().enumerate() {
+                    self.grads[pi as usize] += coef * self.inf.next[k][j];
+                }
+                gmacs += self.inf.pattern[k].len() as u64;
+            }
+            ops.macs(Phase::GradCombine, gmacs);
+        }
+
+        self.inf.advance();
+        self.a_prev.copy_from_slice(&self.scratch.a);
+        StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity: None }
+    }
+
+    fn end_sequence(&mut self, _cell: &RnnCell, _readout: &mut Readout, _ops: &mut OpCounter) {}
+
+    fn grads(&self) -> &[f32] {
+        &self.grads
+    }
+
+    fn reset_grads(&mut self) {
+        self.grads.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn state_memory_words(&self) -> usize {
+        self.inf.memory_words()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LossKind;
+    use crate::sparse::MaskPattern;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn snap1_pattern_is_fan_in() {
+        let mut rng = Pcg64::new(40);
+        let cell = RnnCell::egru(8, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let s1 = Snap1::new(&cell, 2);
+        // dense: every unit keeps 2(n_in + n + 1) params
+        assert_eq!(s1.pattern_size(), 8 * 2 * (2 + 8 + 1));
+    }
+
+    #[test]
+    fn snap2_dense_pattern_is_full() {
+        let mut rng = Pcg64::new(41);
+        let cell = RnnCell::evrnn(6, 2, 0.0, 0.3, 0.5, None, &mut rng);
+        let s2 = Snap2::new(&cell, 2);
+        // dense J reaches every unit, so every row keeps all p params
+        assert_eq!(s2.pattern_size(), 6 * cell.p());
+    }
+
+    #[test]
+    fn snap2_pattern_shrinks_with_mask() {
+        let mut rng = Pcg64::new(42);
+        let mask = MaskPattern::random(10, 10, 0.2, &mut rng);
+        let cell = RnnCell::evrnn(10, 2, 0.0, 0.3, 0.5, Some(mask), &mut rng);
+        let s2 = Snap2::new(&cell, 2);
+        assert!(s2.pattern_size() < 10 * cell.p());
+        let s1 = Snap1::new(&cell, 2);
+        assert!(s1.pattern_size() < s2.pattern_size());
+    }
+
+    #[test]
+    fn both_run_sequences() {
+        let mut rng = Pcg64::new(43);
+        let cell = RnnCell::egru(6, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let mut readout = Readout::new(2, 6, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops = OpCounter::new();
+        for alg in [&mut Snap1::new(&cell, 2) as &mut dyn Algorithm, &mut Snap2::new(&cell, 2)] {
+            alg.begin_sequence();
+            for t in 0..5 {
+                let x = [(t as f32).sin(), 0.3];
+                let target = if t == 4 { Target::Class(1) } else { Target::None };
+                alg.step(&cell, &mut readout, &mut loss, &x, target, &mut ops);
+            }
+            alg.end_sequence(&cell, &mut readout, &mut ops);
+            assert_eq!(alg.grads().len(), cell.p());
+        }
+    }
+
+    #[test]
+    fn snap1_cheaper_than_snap2() {
+        let mut rng = Pcg64::new(44);
+        let cell = RnnCell::egru(8, 2, 0.0, 0.3, 0.9, None, &mut rng);
+        let mut readout = Readout::new(2, 8, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops1 = OpCounter::new();
+        let mut s1 = Snap1::new(&cell, 2);
+        s1.begin_sequence();
+        s1.step(&cell, &mut readout, &mut loss, &[0.5, 0.5], Target::None, &mut ops1);
+        let mut ops2 = OpCounter::new();
+        let mut s2 = Snap2::new(&cell, 2);
+        s2.begin_sequence();
+        s2.step(&cell, &mut readout, &mut loss, &[0.5, 0.5], Target::None, &mut ops2);
+        assert!(
+            ops1.macs_in(Phase::InfluenceUpdate) < ops2.macs_in(Phase::InfluenceUpdate),
+            "snap1 {} !< snap2 {}",
+            ops1.macs_in(Phase::InfluenceUpdate),
+            ops2.macs_in(Phase::InfluenceUpdate)
+        );
+    }
+}

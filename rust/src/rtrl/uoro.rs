@@ -1,0 +1,290 @@
+//! UORO — Unbiased Online Recurrent Optimization (Tallec & Ollivier 2017),
+//! the classic *stochastic* rank-1 RTRL approximation, included as a third
+//! comparison point alongside SnAp (Marschall et al. 2020 situate both in
+//! the same framework the paper builds on).
+//!
+//! The influence matrix is approximated by a rank-1 outer product
+//! `M ≈ s̃ ⊗ θ̃` with `s̃ ∈ R^n`, `θ̃ ∈ R^p`, updated with random signs
+//! `ν ∈ {±1}^n` and variance-balancing scales `ρ₀, ρ₁`:
+//!
+//! ```text
+//! s̃ ← ρ₀·J s̃ + ρ₁·ν           θ̃ ← θ̃/ρ₀ + (νᵀ M̄)/ρ₁
+//! ```
+//!
+//! which keeps `E[s̃ ⊗ θ̃] = M` (unbiased) at `O(n² + p)` per step — far
+//! cheaper than exact RTRL but with gradient *variance* that exact sparse
+//! RTRL does not pay. This is the contrast the paper draws: its savings are
+//! free of both bias (SnAp) and variance (UORO).
+
+use super::{supervised_step, Algorithm, StepResult, Target};
+use crate::metrics::{OpCounter, Phase};
+use crate::nn::{CellScratch, Loss, Readout, RnnCell};
+use crate::util::Pcg64;
+
+/// UORO engine (per-sequence state; reusable).
+pub struct Uoro {
+    /// Rank-1 state factor s̃.
+    s_tilde: Vec<f32>,
+    /// Rank-1 parameter factor θ̃.
+    theta_tilde: Vec<f32>,
+    scratch: CellScratch,
+    a_prev: Vec<f32>,
+    grads: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    c_bar: Vec<f32>,
+    /// staging for J·s̃ and νᵀM̄
+    js: Vec<f32>,
+    nu_mbar: Vec<f32>,
+    rng: Pcg64,
+}
+
+impl Uoro {
+    pub fn new(cell: &RnnCell, readout_n_out: usize, seed: u64) -> Self {
+        let (n, p) = (cell.n(), cell.p());
+        Uoro {
+            s_tilde: vec![0.0; n],
+            theta_tilde: vec![0.0; p],
+            scratch: CellScratch::new(n),
+            a_prev: vec![0.0; n],
+            grads: vec![0.0; p],
+            logits: vec![0.0; readout_n_out],
+            dlogits: vec![0.0; readout_n_out],
+            c_bar: vec![0.0; n],
+            js: vec![0.0; n],
+            nu_mbar: vec![0.0; p],
+            rng: Pcg64::new(seed),
+        }
+    }
+}
+
+impl Algorithm for Uoro {
+    fn name(&self) -> &'static str {
+        "uoro"
+    }
+
+    fn begin_sequence(&mut self) {
+        self.s_tilde.iter_mut().for_each(|x| *x = 0.0);
+        self.theta_tilde.iter_mut().for_each(|x| *x = 0.0);
+        self.a_prev.iter_mut().for_each(|x| *x = 0.0);
+        self.grads.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn step(
+        &mut self,
+        cell: &RnnCell,
+        readout: &mut Readout,
+        loss: &mut Loss,
+        x: &[f32],
+        target: Target,
+        ops: &mut OpCounter,
+    ) -> StepResult {
+        let n = cell.n();
+        let p = cell.p();
+        cell.forward(&self.a_prev, x, &mut self.scratch, ops);
+        let active_units = self.scratch.active_units();
+        let deriv_units = self.scratch.deriv_units();
+
+        // J·s̃ with J = φ' ⊙ dv_da (sparse over kept cols)
+        let mut macs = 0u64;
+        for k in 0..n {
+            let dphi_k = self.scratch.dphi[k];
+            let mut acc = 0.0;
+            if dphi_k != 0.0 {
+                for &l in cell.kept_cols(k) {
+                    acc += cell.dv_da(&self.scratch, k, l as usize) * self.s_tilde[l as usize];
+                }
+                macs += cell.kept_cols(k).len() as u64 * (cell.dv_da_cost() + 1);
+            }
+            self.js[k] = dphi_k * acc;
+        }
+        // νᵀ M̄ (ν broadcast through each unit's fan-in rows)
+        self.nu_mbar.iter_mut().for_each(|v| *v = 0.0);
+        let mut nu = vec![0.0f32; n];
+        for k in 0..n {
+            nu[k] = if self.rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        }
+        for k in 0..n {
+            let dphi_k = self.scratch.dphi[k];
+            if dphi_k == 0.0 {
+                continue;
+            }
+            let nk = nu[k] * dphi_k;
+            let nu_mbar = &mut self.nu_mbar;
+            cell.immediate_row(
+                &self.scratch,
+                &self.a_prev,
+                x,
+                k,
+                |pi, val| nu_mbar[pi] += nk * val,
+                ops,
+            );
+        }
+        // variance-balancing scales
+        let norm_js = self.js.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let norm_tt = self.theta_tilde.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let norm_nm = self.nu_mbar.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let eps = 1e-7;
+        let rho0 = ((norm_tt + eps) / (norm_js + eps)).sqrt();
+        let rho1 = ((norm_nm + eps) / ((n as f32).sqrt() + eps)).sqrt();
+        for k in 0..n {
+            self.s_tilde[k] = rho0 * self.js[k] + rho1 * nu[k];
+        }
+        for pi in 0..p {
+            self.theta_tilde[pi] = self.theta_tilde[pi] / rho0 + self.nu_mbar[pi] / rho1;
+        }
+        macs += (2 * p + 2 * n) as u64;
+        ops.macs(Phase::InfluenceUpdate, macs);
+
+        let (loss_val, correct) = supervised_step(
+            readout,
+            loss,
+            &self.scratch.a,
+            target,
+            &mut self.logits,
+            &mut self.dlogits,
+            &mut self.c_bar,
+            ops,
+        );
+        if loss_val.is_some() {
+            // grad += (c̄ · s̃) θ̃
+            let coef: f32 = self.c_bar.iter().zip(&self.s_tilde).map(|(c, s)| c * s).sum();
+            if coef != 0.0 {
+                for (g, t) in self.grads.iter_mut().zip(&self.theta_tilde) {
+                    *g += coef * t;
+                }
+                ops.macs(Phase::GradCombine, p as u64);
+            }
+        }
+
+        self.a_prev.copy_from_slice(&self.scratch.a);
+        StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity: None }
+    }
+
+    fn end_sequence(&mut self, _cell: &RnnCell, _readout: &mut Readout, _ops: &mut OpCounter) {}
+
+    fn grads(&self) -> &[f32] {
+        &self.grads
+    }
+
+    fn reset_grads(&mut self) {
+        self.grads.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn state_memory_words(&self) -> usize {
+        // s̃ + θ̃ + staging — the O(n + p) memory row
+        self.s_tilde.len() + 2 * self.theta_tilde.len() + self.js.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgorithmKind;
+    use crate::nn::LossKind;
+    use crate::train::build_engine;
+
+    /// E[ĝ] over noise draws must approach the exact gradient (unbiasedness).
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut rng = Pcg64::new(70);
+        let cell = RnnCell::gated_tanh(5, 2, None, &mut rng);
+        let seq: Vec<[f32; 2]> = (0..4).map(|_| [rng.normal(), rng.normal()]).collect();
+
+        let run_exact = || {
+            let mut rr = Pcg64::new(7);
+            let mut readout = Readout::new(2, 5, &mut rr);
+            let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+            let mut ops = OpCounter::new();
+            let mut eng = build_engine(AlgorithmKind::RtrlDense, &cell, 2);
+            eng.begin_sequence();
+            for (t, x) in seq.iter().enumerate() {
+                let tg = if t + 1 == seq.len() { Target::Class(1) } else { Target::None };
+                eng.step(&cell, &mut readout, &mut loss, x, tg, &mut ops);
+            }
+            eng.grads().to_vec()
+        };
+        let exact = run_exact();
+
+        let trials = 4000;
+        let mut mean = vec![0.0f64; cell.p()];
+        for trial in 0..trials {
+            let mut rr = Pcg64::new(7);
+            let mut readout = Readout::new(2, 5, &mut rr);
+            let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+            let mut ops = OpCounter::new();
+            let mut eng = Uoro::new(&cell, 2, 1000 + trial);
+            eng.begin_sequence();
+            for (t, x) in seq.iter().enumerate() {
+                let tg = if t + 1 == seq.len() { Target::Class(1) } else { Target::None };
+                eng.step(&cell, &mut readout, &mut loss, x, tg, &mut ops);
+            }
+            for (m, g) in mean.iter_mut().zip(eng.grads()) {
+                *m += *g as f64 / trials as f64;
+            }
+        }
+        // cosine similarity of the averaged stochastic gradient with exact
+        let dot: f64 = mean.iter().zip(&exact).map(|(m, e)| m * *e as f64).sum();
+        let nm: f64 = mean.iter().map(|m| m * m).sum::<f64>().sqrt();
+        let ne: f64 = exact.iter().map(|e| (*e as f64).powi(2)).sum::<f64>().sqrt();
+        let cos = dot / (nm * ne + 1e-12);
+        assert!(cos > 0.9, "E[UORO grad] should align with exact: cos={cos:.3}");
+    }
+
+    /// Single draws are noisy (that is UORO's trade-off).
+    #[test]
+    fn single_draw_is_noisy() {
+        let mut rng = Pcg64::new(71);
+        let cell = RnnCell::gated_tanh(5, 2, None, &mut rng);
+        let x = [[0.3f32, -0.2], [0.8, 0.1], [-0.4, 0.6]];
+        let one = |seed: u64| {
+            let mut rr = Pcg64::new(7);
+            let mut readout = Readout::new(2, 5, &mut rr);
+            let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+            let mut ops = OpCounter::new();
+            let mut eng = Uoro::new(&cell, 2, seed);
+            eng.begin_sequence();
+            for (t, xi) in x.iter().enumerate() {
+                let tg = if t == 2 { Target::Class(0) } else { Target::None };
+                eng.step(&cell, &mut readout, &mut loss, xi, tg, &mut ops);
+            }
+            eng.grads().to_vec()
+        };
+        let a = one(1);
+        let b = one(2);
+        let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1e-4, "different noise draws must differ");
+    }
+
+    /// UORO is much cheaper per step than exact dense RTRL.
+    #[test]
+    fn cheaper_than_dense() {
+        let mut rng = Pcg64::new(72);
+        let cell = RnnCell::egru(16, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let mut readout = Readout::new(2, 16, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut run = |eng: &mut dyn Algorithm| {
+            let mut ops = OpCounter::new();
+            eng.begin_sequence();
+            let mut xr = Pcg64::new(5);
+            for _ in 0..10 {
+                let x = [xr.normal(), xr.normal()];
+                eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+            }
+            ops.macs_in(Phase::InfluenceUpdate)
+        };
+        let dense = run(&mut *build_engine(AlgorithmKind::RtrlDense, &cell, 2));
+        let uoro = run(&mut Uoro::new(&cell, 2, 3));
+        assert!(uoro * 10 < dense, "uoro {uoro} should be ≫ cheaper than dense {dense}");
+    }
+
+    /// Memory is O(n + p), below every exact RTRL variant.
+    #[test]
+    fn memory_is_linear() {
+        let mut rng = Pcg64::new(73);
+        let cell = RnnCell::egru(16, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let uoro = Uoro::new(&cell, 2, 1);
+        let dense = build_engine(AlgorithmKind::RtrlDense, &cell, 2);
+        assert!(uoro.state_memory_words() < dense.state_memory_words() / 4);
+    }
+}

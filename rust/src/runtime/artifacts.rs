@@ -1,0 +1,192 @@
+//! Artifact discovery + manifest.
+//!
+//! `make artifacts` runs `python/compile/aot.py`, which writes
+//! `artifacts/<name>.hlo.txt` files plus `artifacts/manifest.txt` describing
+//! shapes and constants baked into each lowering. The Rust side never
+//! invokes Python — if artifacts are missing, callers degrade gracefully
+//! (tests skip, the CLI prints how to build them).
+//!
+//! Manifest format (one artifact per line, `#` comments):
+//!
+//! ```text
+//! name | in 32x2, 16 | out 32x16 | n=16 n_in=2 theta=0.1
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Canonical artifact names emitted by `python/compile/aot.py`.
+pub mod names {
+    /// One EGRU forward step over a batch.
+    pub const EGRU_STEP: &str = "egru_step";
+    /// One full dense RTRL step: forward + J/M̄ + influence update + grads.
+    pub const RTRL_STEP: &str = "rtrl_step";
+    /// The Pallas blocked influence-update kernel alone.
+    pub const INFLUENCE_KERNEL: &str = "influence_kernel";
+}
+
+/// Per-artifact manifest entry (shapes are row-major).
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactInfo {
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    /// Model constants baked at lowering time (n, n_in, theta, ...).
+    pub meta: HashMap<String, f64>,
+}
+
+fn parse_shapes(field: &str) -> Option<Vec<Vec<usize>>> {
+    let body = field.trim();
+    if body.is_empty() {
+        return Some(Vec::new());
+    }
+    body.split(',')
+        .map(|s| {
+            s.trim()
+                .split('x')
+                .map(|d| d.trim().parse::<usize>().ok())
+                .collect::<Option<Vec<usize>>>()
+        })
+        .collect()
+}
+
+fn parse_line(line: &str) -> Option<(String, ArtifactInfo)> {
+    let mut info = ArtifactInfo::default();
+    let mut parts = line.split('|');
+    let name = parts.next()?.trim().to_string();
+    if name.is_empty() {
+        return None;
+    }
+    for field in parts {
+        let field = field.trim();
+        if let Some(rest) = field.strip_prefix("in ") {
+            info.inputs = parse_shapes(rest)?;
+        } else if let Some(rest) = field.strip_prefix("out ") {
+            info.outputs = parse_shapes(rest)?;
+        } else {
+            for kv in field.split_whitespace() {
+                let (k, v) = kv.split_once('=')?;
+                info.meta.insert(k.to_string(), v.parse().ok()?);
+            }
+        }
+    }
+    Some((name, info))
+}
+
+/// A directory of compiled artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactInfo>,
+}
+
+impl ArtifactSet {
+    /// Open an artifact directory (typically `artifacts/` at the repo root).
+    /// Succeeds even if empty; use [`ArtifactSet::has`] before loading.
+    pub fn open(dir: impl Into<PathBuf>) -> Self {
+        let dir = dir.into();
+        let mut manifest = HashMap::new();
+        if let Ok(text) = std::fs::read_to_string(dir.join("manifest.txt")) {
+            for line in text.lines() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                if let Some((name, info)) = parse_line(line) {
+                    manifest.insert(name, info);
+                }
+            }
+        }
+        ArtifactSet { dir, manifest }
+    }
+
+    /// Default location relative to the current working directory, honouring
+    /// `SPARSE_RTRL_ARTIFACTS` for out-of-tree runs.
+    pub fn default_location() -> Self {
+        let dir = std::env::var("SPARSE_RTRL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of a named artifact.
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Whether the artifact file exists.
+    pub fn has(&self, name: &str) -> bool {
+        self.path(name).is_file()
+    }
+
+    /// Manifest info for a named artifact, if present.
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.manifest.get(name)
+    }
+
+    /// All `.hlo.txt` artifact stems present on disk.
+    pub fn list(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    out.push(stem.to_string());
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_is_empty() {
+        let a = ArtifactSet::open("/nonexistent/path");
+        assert!(!a.has(names::EGRU_STEP));
+        assert!(a.list().is_empty());
+        assert!(a.info(names::RTRL_STEP).is_none());
+    }
+
+    #[test]
+    fn parses_manifest_lines() {
+        let (name, info) = parse_line("egru_step | in 32x2, 16 | out 32x16 | n=16 theta=0.1").unwrap();
+        assert_eq!(name, "egru_step");
+        assert_eq!(info.inputs, vec![vec![32, 2], vec![16]]);
+        assert_eq!(info.outputs, vec![vec![32, 16]]);
+        assert_eq!(info.meta["n"], 16.0);
+        assert_eq!(info.meta["theta"], 0.1);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_line("").is_none());
+        assert!(parse_line("x | in axb").is_none());
+        assert!(parse_line("x | n=notanumber").is_none());
+    }
+
+    #[test]
+    fn discovers_files_and_manifest() {
+        let dir = std::env::temp_dir().join("sparse_rtrl_artifacts_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("foo.hlo.txt"), "HloModule test").unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\nfoo | in 2x3 | out 2 | n=16\n",
+        )
+        .unwrap();
+        let a = ArtifactSet::open(&dir);
+        assert!(a.has("foo"));
+        assert_eq!(a.list(), vec!["foo".to_string()]);
+        let info = a.info("foo").unwrap();
+        assert_eq!(info.inputs, vec![vec![2, 3]]);
+        assert_eq!(info.meta["n"], 16.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

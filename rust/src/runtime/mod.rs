@@ -1,0 +1,8 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) from Rust. Python never runs at request time.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::ArtifactSet;
+pub use pjrt::{PjrtExecutable, PjrtRuntime};

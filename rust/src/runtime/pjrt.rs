@@ -1,0 +1,86 @@
+//! PJRT bridge: compile and execute AOT-lowered HLO text on the CPU client.
+//!
+//! Interchange is HLO *text* (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids and round-trips cleanly. The JAX side lowers
+//! with `return_tuple=True`, so outputs arrive as a tuple literal.
+
+use anyhow::{anyhow as eyre, Context, Result};
+use std::path::Path;
+
+/// Shared PJRT CPU client (compile once, execute many).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load(&self, path: &Path) -> Result<PjrtExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| eyre!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| eyre!("compile {path:?}: {e:?}"))?;
+        Ok(PjrtExecutable {
+            exe,
+            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled executable with an f32 convenience interface.
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl PjrtExecutable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 inputs of the given shapes; returns all tuple
+    /// outputs as flat f32 buffers (row-major).
+    pub fn run_f32(&self, inputs: &[(&[usize], &[f32])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (shape, data) in inputs {
+            let numel: usize = shape.iter().product();
+            if numel != data.len() {
+                return Err(eyre!(
+                    "shape {shape:?} wants {numel} elements, got {}",
+                    data.len()
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| eyre!("reshape to {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| eyre!("execute {}: {e:?}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("fetch result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| eyre!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| eyre!("to_vec: {e:?}")))
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("decoding outputs of {}", self.name))
+    }
+}

@@ -1,0 +1,195 @@
+//! CSR (compressed sparse row) storage with a *fixed pattern* and mutable
+//! values.
+//!
+//! Used for masked recurrent weight matrices: the pattern is frozen at
+//! initialisation (paper §6) while the kept values keep training. The sparse
+//! mat-vec is the `ω̃n²` forward-pass term of Table 1, and the row iterator
+//! drives the `ω̃`-sparse Jacobian sweep in the RTRL engines.
+
+use super::mask::MaskPattern;
+
+/// Fixed-pattern CSR matrix.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a mask pattern and a dense row-major value buffer; dropped
+    /// entries are discarded.
+    pub fn from_mask(mask: &MaskPattern, dense: &[f32]) -> Self {
+        assert_eq!(dense.len(), mask.rows() * mask.cols());
+        let (rows, cols) = (mask.rows(), mask.cols());
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(mask.kept());
+        let mut vals = Vec::with_capacity(mask.kept());
+        row_ptr.push(0);
+        for r in 0..rows {
+            for c in 0..cols {
+                if mask.is_kept(r, c) {
+                    col_idx.push(c);
+                    vals.push(dense[r * cols + c]);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored (kept) entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// `(column indices, values)` of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[usize], &[f32]) {
+        let (s, e) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        (&self.col_idx[s..e], &self.vals[s..e])
+    }
+
+    /// Mutable values of row `r` (pattern itself is immutable).
+    #[inline]
+    pub fn row_vals_mut(&mut self, r: usize) -> &mut [f32] {
+        let (s, e) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        &mut self.vals[s..e]
+    }
+
+    /// Refresh values from a dense buffer (after an optimizer step on the
+    /// dense master copy). Pattern must match the one used at construction.
+    pub fn refresh_from_dense(&mut self, dense: &[f32]) {
+        assert_eq!(dense.len(), self.rows * self.cols);
+        let mut i = 0;
+        for r in 0..self.rows {
+            let (s, e) = (self.row_ptr[r], self.row_ptr[r + 1]);
+            for k in s..e {
+                self.vals[k] = dense[r * self.cols + self.col_idx[k]];
+                i += 1;
+            }
+        }
+        debug_assert_eq!(i, self.vals.len());
+    }
+
+    /// `y = A·x` touching only stored entries; returns the MAC count
+    /// (`= nnz`), which the caller charges to its op counter.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) -> u64 {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0.0f32;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c];
+            }
+            y[r] = acc;
+        }
+        self.nnz() as u64
+    }
+
+    /// `y += A·x`; returns MAC count.
+    pub fn matvec_add_into(&self, x: &[f32], y: &mut [f32]) -> u64 {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0.0f32;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c];
+            }
+            y[r] += acc;
+        }
+        self.nnz() as u64
+    }
+
+    /// Densify (tests / reports).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut d = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                d[r * self.cols + c] = v;
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn toy() -> (MaskPattern, Vec<f32>) {
+        // 3x3 with a fixed pattern:
+        // [1 . 2]
+        // [. 3 .]
+        // [. . .]
+        let keep = vec![true, false, true, false, true, false, false, false, false];
+        let mask = MaskPattern::from_bools(3, 3, keep);
+        let dense = vec![1.0, 9.0, 2.0, 9.0, 3.0, 9.0, 9.0, 9.0, 9.0];
+        (mask, dense)
+    }
+
+    #[test]
+    fn from_mask_drops_entries() {
+        let (mask, dense) = toy();
+        let csr = Csr::from_mask(&mask, &dense);
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.to_dense(), vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg64::new(5);
+        let mask = MaskPattern::random(8, 8, 0.4, &mut rng);
+        let dense: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let mut masked = dense.clone();
+        mask.apply(&mut masked);
+        let csr = Csr::from_mask(&mask, &dense);
+        let x: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        let mut y_sparse = vec![0.0; 8];
+        let macs = csr.matvec_into(&x, &mut y_sparse);
+        assert_eq!(macs, csr.nnz() as u64);
+        let m = crate::tensor::Matrix::from_vec(8, 8, masked);
+        let mut y_dense = vec![0.0; 8];
+        m.matvec_into(&x, &mut y_dense);
+        for (a, b) in y_sparse.iter().zip(&y_dense) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn refresh_updates_values_only() {
+        let (mask, dense) = toy();
+        let mut csr = Csr::from_mask(&mask, &dense);
+        let new_dense: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        csr.refresh_from_dense(&new_dense);
+        assert_eq!(csr.to_dense(), vec![0.0, 0.0, 2.0, 0.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn row_access() {
+        let (mask, dense) = toy();
+        let csr = Csr::from_mask(&mask, &dense);
+        let (cols, vals) = csr.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[1.0, 2.0]);
+        let (cols, _) = csr.row(2);
+        assert!(cols.is_empty());
+    }
+}

@@ -1,0 +1,153 @@
+//! Fixed boolean sparsity masks over weight matrices.
+//!
+//! The paper fixes "a random sparsity mask at initialisation and train[s] the
+//! network with this sparsity mask throughout" (§6). The mask has an *exact*
+//! number of kept entries so the measured ω̃ matches the configured one.
+
+use crate::util::Pcg64;
+
+/// Boolean keep/drop pattern over a `rows × cols` matrix (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskPattern {
+    rows: usize,
+    cols: usize,
+    keep: Vec<bool>,
+    kept: usize,
+}
+
+impl MaskPattern {
+    /// Fully dense mask (all entries kept).
+    pub fn dense(rows: usize, cols: usize) -> Self {
+        MaskPattern { rows, cols, keep: vec![true; rows * cols], kept: rows * cols }
+    }
+
+    /// Random mask keeping exactly `round(density·rows·cols)` entries.
+    /// `density = ω̃ = 1 − ω` where ω is the paper's parameter sparsity.
+    pub fn random(rows: usize, cols: usize, density: f32, rng: &mut Pcg64) -> Self {
+        assert!((0.0..=1.0).contains(&density), "density must be in [0,1]");
+        let total = rows * cols;
+        let kept = ((density as f64) * total as f64).round() as usize;
+        let mut keep = vec![false; total];
+        for i in rng.choose_k(total, kept) {
+            keep[i] = true;
+        }
+        MaskPattern { rows, cols, keep, kept }
+    }
+
+    /// Mask from an explicit pattern.
+    pub fn from_bools(rows: usize, cols: usize, keep: Vec<bool>) -> Self {
+        assert_eq!(keep.len(), rows * cols);
+        let kept = keep.iter().filter(|&&k| k).count();
+        MaskPattern { rows, cols, keep, kept }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Whether entry `(r, c)` is kept (trainable / nonzero).
+    #[inline]
+    pub fn is_kept(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.keep[r * self.cols + c]
+    }
+
+    /// Flat row-major view of the pattern.
+    #[inline]
+    pub fn as_bools(&self) -> &[bool] {
+        &self.keep
+    }
+
+    /// Number of kept entries.
+    #[inline]
+    pub fn kept(&self) -> usize {
+        self.kept
+    }
+
+    /// Achieved density ω̃ (kept / total).
+    pub fn density(&self) -> f32 {
+        if self.keep.is_empty() {
+            1.0
+        } else {
+            self.kept as f32 / self.keep.len() as f32
+        }
+    }
+
+    /// Zero out dropped entries of a row-major weight buffer in place.
+    pub fn apply(&self, weights: &mut [f32]) {
+        assert_eq!(weights.len(), self.keep.len());
+        for (w, &k) in weights.iter_mut().zip(&self.keep) {
+            if !k {
+                *w = 0.0;
+            }
+        }
+    }
+
+    /// Kept column indices of row `r` (allocates; used at build time only).
+    pub fn row_kept_cols(&self, r: usize) -> Vec<usize> {
+        (0..self.cols).filter(|&c| self.is_kept(r, c)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_mask_keeps_everything() {
+        let m = MaskPattern::dense(3, 4);
+        assert_eq!(m.kept(), 12);
+        assert_eq!(m.density(), 1.0);
+    }
+
+    #[test]
+    fn random_mask_exact_count() {
+        let mut rng = Pcg64::new(1);
+        let m = MaskPattern::random(10, 10, 0.2, &mut rng);
+        assert_eq!(m.kept(), 20);
+        assert!((m.density() - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_mask_deterministic() {
+        let a = MaskPattern::random(8, 8, 0.5, &mut Pcg64::new(7));
+        let b = MaskPattern::random(8, 8, 0.5, &mut Pcg64::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn apply_zeroes_dropped() {
+        let mut rng = Pcg64::new(2);
+        let m = MaskPattern::random(4, 4, 0.25, &mut rng);
+        let mut w = vec![1.0f32; 16];
+        m.apply(&mut w);
+        let nonzero = w.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nonzero, m.kept());
+    }
+
+    #[test]
+    fn extreme_densities() {
+        let mut rng = Pcg64::new(3);
+        assert_eq!(MaskPattern::random(5, 5, 0.0, &mut rng).kept(), 0);
+        assert_eq!(MaskPattern::random(5, 5, 1.0, &mut rng).kept(), 25);
+    }
+
+    #[test]
+    fn row_kept_cols_consistent() {
+        let mut rng = Pcg64::new(4);
+        let m = MaskPattern::random(6, 6, 0.5, &mut rng);
+        let total: usize = (0..6).map(|r| m.row_kept_cols(r).len()).sum();
+        assert_eq!(total, m.kept());
+        for r in 0..6 {
+            for c in m.row_kept_cols(r) {
+                assert!(m.is_kept(r, c));
+            }
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Sparse structure substrate: fixed masks, CSR weight storage, active-row
+//! sets.
+//!
+//! The paper's two sparsity axes map onto two structures:
+//!
+//! * **parameter sparsity** (fixed at init) — [`MaskPattern`] boolean masks
+//!   over weight matrices, with a [`Csr`] compaction for the recurrent
+//!   matrices so the forward pass and Jacobian sweep cost `ω̃n²` rather
+//!   than `n²`;
+//! * **activity sparsity** (changes every step) — [`RowSet`] active-row sets
+//!   tracking which units have nonzero pseudo-derivative (`β̃n` rows of
+//!   `J`/`M̄`/`M`) or nonzero activation (`α̃n` forward events).
+
+pub mod csr;
+pub mod mask;
+pub mod rewire;
+pub mod rowset;
+
+pub use csr::Csr;
+pub use mask::MaskPattern;
+pub use rowset::RowSet;

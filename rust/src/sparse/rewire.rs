@@ -1,0 +1,161 @@
+//! Magnitude-based dynamic rewiring (SET / Deep-Rewiring style).
+//!
+//! The paper trains with a *fixed* random mask but its Discussion points to
+//! Bellec et al. (2018) for "optimising the parameter sparsity pattern
+//! during training". This module implements the standard
+//! magnitude-drop / random-grow step at **constant density**, so all the
+//! sparse-RTRL cost guarantees (`ω̃` stays fixed) continue to hold:
+//!
+//! 1. drop the `swap_fraction` of kept recurrent entries with the smallest
+//!    combined magnitude across the recurrent blocks;
+//! 2. grow the same number of connections at uniformly random vacant slots.
+//!
+//! Column-structural exactness is preserved: a dropped parameter's influence
+//! column becomes structurally zero, a grown parameter starts with zero past
+//! influence — both exactly what resetting the engine's `ColumnMap` yields.
+
+use super::mask::MaskPattern;
+use crate::nn::RnnCell;
+use crate::util::Pcg64;
+
+/// One rewiring step. Returns the new mask (same density as the cell's
+/// current mask) without applying it; pass it to [`RnnCell::set_mask`].
+///
+/// `swap_fraction` ∈ [0,1]: fraction of kept entries to relocate.
+pub fn magnitude_rewire(cell: &RnnCell, swap_fraction: f32, rng: &mut Pcg64) -> MaskPattern {
+    let mask = cell.mask().expect("rewiring requires a masked cell").clone();
+    let n = cell.n();
+    assert!((0.0..=1.0).contains(&swap_fraction));
+    let kept = mask.kept();
+    let swaps = ((kept as f32) * swap_fraction).round() as usize;
+    if swaps == 0 {
+        return mask;
+    }
+    // score kept entries by the summed |w| across recurrent blocks (V for
+    // linear cells, V_u + V_z for gated ones — a connection exists in both)
+    let layout = cell.layout();
+    let blocks = cell.recurrent_blocks();
+    let mut scored: Vec<(f32, usize)> = Vec::with_capacity(kept);
+    for r in 0..n {
+        for c in 0..n {
+            if mask.is_kept(r, c) {
+                let score: f32 = blocks
+                    .iter()
+                    .map(|&b| layout.block(cell.params(), b)[r * n + c].abs())
+                    .sum();
+                scored.push((score, r * n + c));
+            }
+        }
+    }
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut keep: Vec<bool> = mask.as_bools().to_vec();
+    for &(_, idx) in scored.iter().take(swaps) {
+        keep[idx] = false;
+    }
+    // grow at random vacant slots
+    let vacant: Vec<usize> = (0..n * n).filter(|&i| !keep[i]).collect();
+    for &slot in rng.choose_k(vacant.len(), swaps).iter() {
+        keep[vacant[slot]] = true;
+    }
+    let new_mask = MaskPattern::from_bools(n, n, keep);
+    debug_assert_eq!(new_mask.kept(), kept, "rewiring must preserve density");
+    new_mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn masked_cell(seed: u64, density: f32) -> RnnCell {
+        let mut rng = Pcg64::new(seed);
+        let mask = MaskPattern::random(12, 12, density, &mut rng);
+        RnnCell::egru(12, 2, 0.1, 0.3, 0.5, Some(mask), &mut rng)
+    }
+
+    #[test]
+    fn preserves_density() {
+        let cell = masked_cell(1, 0.3);
+        let mut rng = Pcg64::new(9);
+        let new = magnitude_rewire(&cell, 0.25, &mut rng);
+        assert_eq!(new.kept(), cell.mask().unwrap().kept());
+    }
+
+    #[test]
+    fn swaps_the_requested_fraction() {
+        let cell = masked_cell(2, 0.3);
+        let old = cell.mask().unwrap().clone();
+        let mut rng = Pcg64::new(10);
+        let new = magnitude_rewire(&cell, 0.25, &mut rng);
+        let moved = old
+            .as_bools()
+            .iter()
+            .zip(new.as_bools())
+            .filter(|(a, b)| **a && !**b)
+            .count();
+        let expected = ((old.kept() as f32) * 0.25).round() as usize;
+        // random growth can land on just-dropped slots, so moved ≤ expected
+        assert!(moved <= expected && moved >= expected / 2, "moved {moved} vs {expected}");
+    }
+
+    #[test]
+    fn drops_smallest_magnitudes() {
+        let mut cell = masked_cell(3, 0.3);
+        // force one kept entry to be enormous: it must survive
+        let (r, c) = {
+            let m = cell.mask().unwrap();
+            let mut found = (0, 0);
+            'outer: for r in 0..12 {
+                for c in 0..12 {
+                    if m.is_kept(r, c) {
+                        found = (r, c);
+                        break 'outer;
+                    }
+                }
+            }
+            found
+        };
+        let blocks = cell.recurrent_blocks();
+        let layout = cell.layout().clone();
+        for &b in &blocks {
+            layout.block_mut(cell.params_mut(), b)[r * 12 + c] = 100.0;
+        }
+        let mut rng = Pcg64::new(11);
+        let new = magnitude_rewire(&cell, 0.5, &mut rng);
+        assert!(new.is_kept(r, c), "large weight must not be dropped");
+    }
+
+    #[test]
+    fn set_mask_roundtrip_zeroes_and_grows() {
+        let mut cell = masked_cell(4, 0.3);
+        let old = cell.mask().unwrap().clone();
+        let mut rng = Pcg64::new(12);
+        let new = magnitude_rewire(&cell, 0.3, &mut rng);
+        cell.set_mask(new.clone(), 0.1, &mut rng);
+        let n = 12;
+        let layout = cell.layout();
+        for &b in &cell.recurrent_blocks() {
+            let buf = layout.block(cell.params(), b);
+            for r in 0..n {
+                for c in 0..n {
+                    if !new.is_kept(r, c) {
+                        assert_eq!(buf[r * n + c], 0.0);
+                    } else if !old.is_kept(r, c) {
+                        let v = buf[r * n + c];
+                        assert!(v.abs() <= 0.1, "grown weight out of init range: {v}");
+                    }
+                }
+            }
+        }
+        // pattern indices rebuilt consistently
+        let total: usize = (0..n).map(|k| cell.kept_cols(k).len()).sum();
+        assert_eq!(total, new.kept());
+    }
+
+    #[test]
+    fn zero_fraction_is_identity() {
+        let cell = masked_cell(5, 0.4);
+        let mut rng = Pcg64::new(13);
+        let new = magnitude_rewire(&cell, 0.0, &mut rng);
+        assert_eq!(&new, cell.mask().unwrap());
+    }
+}

@@ -1,0 +1,144 @@
+//! Active-row sets for activity sparsity.
+//!
+//! At each timestep the engines track which units have nonzero
+//! pseudo-derivative (`β̃n` of them — these index the nonzero rows of `J`,
+//! `M̄` and `M`) and which have nonzero activation (`α̃n` — the forward
+//! events). A [`RowSet`] is a membership bitmap plus a dense index list so
+//! both O(1) membership tests and tight iteration are available.
+
+/// Set of active row indices in `[0, n)`.
+#[derive(Debug, Clone)]
+pub struct RowSet {
+    member: Vec<bool>,
+    idx: Vec<usize>,
+}
+
+impl RowSet {
+    /// Empty set over `n` rows.
+    pub fn empty(n: usize) -> Self {
+        RowSet { member: vec![false; n], idx: Vec::with_capacity(n) }
+    }
+
+    /// Full set over `n` rows (the dense / no-activity-sparsity case).
+    pub fn full(n: usize) -> Self {
+        RowSet { member: vec![true; n], idx: (0..n).collect() }
+    }
+
+    /// Build from a predicate over row indices.
+    pub fn from_pred(n: usize, mut pred: impl FnMut(usize) -> bool) -> Self {
+        let mut s = RowSet::empty(n);
+        for k in 0..n {
+            if pred(k) {
+                s.insert(k);
+            }
+        }
+        s
+    }
+
+    /// Capacity (total number of rows `n`).
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.member.len()
+    }
+
+    /// Number of active rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// O(1) membership test.
+    #[inline]
+    pub fn contains(&self, k: usize) -> bool {
+        self.member[k]
+    }
+
+    /// Insert row `k` (no-op if present). Keeps `iter()` in insertion order —
+    /// engines insert in ascending k, so iteration is ascending.
+    #[inline]
+    pub fn insert(&mut self, k: usize) {
+        if !self.member[k] {
+            self.member[k] = true;
+            self.idx.push(k);
+        }
+    }
+
+    /// Clear to empty (retains allocation; called once per timestep).
+    pub fn clear(&mut self) {
+        for &k in &self.idx {
+            self.member[k] = false;
+        }
+        self.idx.clear();
+    }
+
+    /// Active indices, ascending when inserted ascending.
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.idx.iter().copied()
+    }
+
+    /// Active indices as a slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Active fraction (`β̃` or `α̃` depending on what the set tracks).
+    pub fn active_fraction(&self) -> f32 {
+        if self.member.is_empty() {
+            0.0
+        } else {
+            self.idx.len() as f32 / self.member.len() as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_full() {
+        let e = RowSet::empty(5);
+        assert_eq!(e.len(), 0);
+        assert!(e.is_empty());
+        let f = RowSet::full(5);
+        assert_eq!(f.len(), 5);
+        assert_eq!(f.as_slice(), &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn insert_idempotent() {
+        let mut s = RowSet::empty(4);
+        s.insert(2);
+        s.insert(2);
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(2));
+        assert!(!s.contains(1));
+    }
+
+    #[test]
+    fn clear_resets_membership() {
+        let mut s = RowSet::empty(4);
+        s.insert(0);
+        s.insert(3);
+        s.clear();
+        assert!(s.is_empty());
+        assert!(!s.contains(0));
+        assert!(!s.contains(3));
+        s.insert(1);
+        assert_eq!(s.as_slice(), &[1]);
+    }
+
+    #[test]
+    fn from_pred_ascending() {
+        let s = RowSet::from_pred(6, |k| k % 2 == 0);
+        assert_eq!(s.as_slice(), &[0, 2, 4]);
+        assert!((s.active_fraction() - 0.5).abs() < 1e-6);
+    }
+}

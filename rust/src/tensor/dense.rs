@@ -1,0 +1,272 @@
+//! Row-major dense matrix.
+
+use crate::util::Pcg64;
+
+/// Row-major dense `rows × cols` matrix of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix from an explicit row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Glorot/Xavier-uniform init: `U(-s, s)`, `s = sqrt(6/(fan_in+fan_out))`.
+    pub fn glorot(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        let s = (6.0 / (rows + cols) as f32).sqrt();
+        let data = (0..rows * cols).map(|_| rng.uniform(-s, s)).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform init in `[lo, hi)`.
+    pub fn uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Pcg64) -> Self {
+        let data = (0..rows * cols).map(|_| rng.uniform(lo, hi)).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Immutable view of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable view of row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Full row-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Full mutable row-major buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Set every element to zero (reused per-sequence to avoid realloc).
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// `y = self · x` (matrix–vector product) into `y`.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mut acc = 0.0f32;
+            for (w, xv) in row.iter().zip(x) {
+                acc += w * xv;
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// `y += self · x`.
+    pub fn matvec_add_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mut acc = 0.0f32;
+            for (w, xv) in row.iter().zip(x) {
+                acc += w * xv;
+            }
+            y[r] += acc;
+        }
+    }
+
+    /// `y = selfᵀ · x` (used by readout backward).
+    pub fn tmatvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            for (yc, w) in y.iter_mut().zip(row) {
+                *yc += w * xr;
+            }
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.set(c, r, self.get(r, c));
+            }
+        }
+        t
+    }
+
+    /// Dense `self · other` (tests / small readouts only — the RTRL hot path
+    /// never calls this).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(r, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(r);
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Count of exactly-zero entries.
+    pub fn count_zeros(&self) -> usize {
+        self.data.iter().filter(|&&x| x == 0.0).count()
+    }
+
+    /// Fraction of exactly-zero entries (`1.0` for an empty matrix).
+    pub fn sparsity(&self) -> f32 {
+        if self.data.is_empty() {
+            1.0
+        } else {
+            self.count_zeros() as f32 / self.data.len() as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_and_values() {
+        let m = Matrix::zeros(3, 4);
+        assert_eq!((m.rows(), m.cols(), m.len()), (3, 4, 12));
+        assert!(m.as_slice().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn matvec_known_values() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = [1.0, 0.0, -1.0];
+        let mut y = [0.0; 2];
+        m.matvec_into(&x, &mut y);
+        assert_eq!(y, [-2.0, -2.0]);
+    }
+
+    #[test]
+    fn matvec_add_accumulates() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let mut y = [10.0, 20.0];
+        m.matvec_add_into(&[1.0, 2.0], &mut y);
+        assert_eq!(y, [11.0, 22.0]);
+    }
+
+    #[test]
+    fn tmatvec_matches_transpose_matvec() {
+        let mut rng = Pcg64::new(1);
+        let m = Matrix::glorot(4, 3, &mut rng);
+        let x: Vec<f32> = (0..4).map(|i| i as f32 - 1.5).collect();
+        let mut y1 = vec![0.0; 3];
+        m.tmatvec_into(&x, &mut y1);
+        let mut y2 = vec![0.0; 3];
+        m.transpose().matvec_into(&x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::new(2);
+        let m = Matrix::glorot(3, 3, &mut rng);
+        let eye = Matrix::from_vec(3, 3, vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]);
+        assert_eq!(m.matmul(&eye).as_slice(), m.as_slice());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(3);
+        let m = Matrix::glorot(5, 2, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn glorot_within_bound() {
+        let mut rng = Pcg64::new(4);
+        let m = Matrix::glorot(10, 20, &mut rng);
+        let s = (6.0 / 30.0f32).sqrt();
+        assert!(m.as_slice().iter().all(|&x| x.abs() <= s));
+    }
+
+    #[test]
+    fn sparsity_counts() {
+        let m = Matrix::from_vec(2, 2, vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(m.count_zeros(), 2);
+        assert_eq!(m.sparsity(), 0.5);
+    }
+}

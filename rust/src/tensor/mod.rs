@@ -1,0 +1,12 @@
+//! Minimal dense f32 tensor substrate.
+//!
+//! The RTRL engines operate on row-major [`Matrix`] buffers plus plain
+//! `&[f32]` vectors. This is intentionally a small, fully-owned substrate —
+//! the paper's compute model counts multiply-accumulates on unstructured
+//! sparse data, so the engines need direct index-level control over every
+//! inner loop rather than a BLAS facade.
+
+pub mod dense;
+pub mod ops;
+
+pub use dense::Matrix;

@@ -1,0 +1,7 @@
+//! Training orchestration: config → components → training loop → curve.
+
+pub mod build;
+pub mod trainer;
+
+pub use build::{build_cell, build_dataset, build_engine};
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,339 @@
+//! The training loop (paper §6 protocol): minibatch RTRL/BPTT with Adam,
+//! per-iteration sparsity + compute accounting, periodic validation.
+
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
+use crate::metrics::curve::{Curve, CurvePoint};
+use crate::metrics::{ComputeAdjusted, OpCounter, Phase, SparsityStats};
+use crate::nn::{CellScratch, Loss, LossKind, Readout, RnnCell};
+use crate::optim::{Adam, Optimizer};
+use crate::rtrl::Algorithm;
+use crate::train::build;
+use crate::util::Pcg64;
+
+/// Everything a finished run reports.
+pub struct TrainOutcome {
+    pub curve: Curve,
+    /// Total MACs spent, by phase.
+    pub ops: OpCounter,
+    /// Final validation accuracy.
+    pub final_val_accuracy: f32,
+    /// Engine state memory (words) — the Table-1 memory column.
+    pub state_memory_words: usize,
+}
+
+/// Single-run trainer owning all components.
+pub struct Trainer {
+    pub cfg: ExperimentConfig,
+    pub cell: RnnCell,
+    pub readout: Readout,
+    pub loss: Loss,
+    pub engine: Box<dyn Algorithm>,
+    opt_cell: Adam,
+    opt_readout: Adam,
+    grad_accum: Vec<f32>,
+    readout_params: Vec<f32>,
+    readout_grads: Vec<f32>,
+    batch_rng: Pcg64,
+    pub ops: OpCounter,
+}
+
+impl Trainer {
+    /// Build a trainer from a config. RNG streams are split per component so
+    /// e.g. two algorithms see identical weight init and data order.
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        let mut root = Pcg64::new(cfg.seed);
+        let mut cell_rng = root.split();
+        let mut readout_rng = root.split();
+        let _data_rng = root.split(); // consumed by callers building datasets
+        let batch_rng = root.split();
+        let n_out = build::task_n_out(&cfg);
+        let cell = build::build_cell(&cfg, &mut cell_rng);
+        let readout = Readout::new(n_out, cell.n(), &mut readout_rng);
+        let engine = build::build_engine(cfg.train.algorithm, &cell, n_out);
+        let p = cell.p();
+        let rp = readout.param_len();
+        let lr = cfg.train.lr;
+        Trainer {
+            cfg,
+            cell,
+            readout,
+            loss: Loss::new(LossKind::CrossEntropy, n_out),
+            engine,
+            opt_cell: Adam::new(p, lr),
+            opt_readout: Adam::new(rp, lr),
+            grad_accum: vec![0.0; p],
+            readout_params: vec![0.0; rp],
+            readout_grads: vec![0.0; rp],
+            batch_rng,
+            ops: OpCounter::new(),
+        }
+    }
+
+    /// Dataset RNG matching the stream order used by [`Trainer::new`].
+    pub fn data_rng(seed: u64) -> Pcg64 {
+        let mut root = Pcg64::new(seed);
+        let _ = root.split();
+        let _ = root.split();
+        root.split()
+    }
+
+    /// Run one gradient sequence and accumulate into the batch buffers.
+    /// Returns (mean step loss, final correct, sparsity observations).
+    fn run_sequence(
+        &mut self,
+        seq: &crate::data::Sequence,
+        stats: &mut SparsityStats,
+        measure_influence: bool,
+    ) -> (f32, bool) {
+        self.engine.set_measure_influence(measure_influence);
+        self.engine.begin_sequence();
+        let mut loss_sum = 0.0;
+        let mut loss_count = 0u32;
+        let mut last_correct = false;
+        for (t, x) in seq.inputs.iter().enumerate() {
+            let r = self.engine.step(
+                &self.cell,
+                &mut self.readout,
+                &mut self.loss,
+                x,
+                seq.targets[t].as_target(),
+                &mut self.ops,
+            );
+            stats.record_step(self.cell.n(), r.active_units, r.deriv_units);
+            if let Some(l) = r.loss {
+                loss_sum += l;
+                loss_count += 1;
+            }
+            if let Some(c) = r.correct {
+                last_correct = c;
+            }
+            if let Some(s) = r.influence_sparsity {
+                stats.record_influence(s);
+            }
+        }
+        self.engine.end_sequence(&self.cell, &mut self.readout, &mut self.ops);
+        for (g, eg) in self.grad_accum.iter_mut().zip(self.engine.grads()) {
+            *g += eg;
+        }
+        (loss_sum / loss_count.max(1) as f32, last_correct)
+    }
+
+    /// Apply accumulated batch gradients (mean over `batch_size`).
+    fn apply_update(&mut self, batch_size: usize) {
+        let scale = 1.0 / batch_size as f32;
+        for g in self.grad_accum.iter_mut() {
+            *g *= scale;
+        }
+        self.opt_cell.update(self.cell.params_mut(), &self.grad_accum);
+        self.cell.enforce_mask();
+        self.grad_accum.iter_mut().for_each(|g| *g = 0.0);
+
+        self.readout.scale_grads(scale);
+        self.readout.copy_params_into(&mut self.readout_params);
+        self.readout.copy_grads_into(&mut self.readout_grads);
+        self.opt_readout.update(&mut self.readout_params, &self.readout_grads);
+        self.readout.load_params(&self.readout_params);
+        self.readout.zero_grads();
+        self.ops.macs(Phase::Optimizer, (self.cell.p() + self.readout.param_len()) as u64);
+    }
+
+    /// One Deep-Rewiring-style step (paper Discussion / Bellec et al. 2018):
+    /// relocate the lowest-magnitude kept recurrent connections, rebuild the
+    /// engine (its column map tracks the new pattern) and reset the Adam
+    /// moments of every swapped parameter.
+    fn rewire(&mut self, rng: &mut Pcg64) {
+        if self.cell.mask().is_none() {
+            return;
+        }
+        let old_mask = self.cell.mask().unwrap().clone();
+        let new_mask =
+            crate::sparse::rewire::magnitude_rewire(&self.cell, self.cfg.train.rewire_fraction, rng);
+        // flat indices of swapped recurrent params (either direction)
+        let n = self.cell.n();
+        let layout = self.cell.layout().clone();
+        let mut swapped = Vec::new();
+        for &b in &self.cell.recurrent_blocks() {
+            for r in 0..n {
+                for c in 0..n {
+                    if old_mask.is_kept(r, c) != new_mask.is_kept(r, c) {
+                        swapped.push(layout.flat(b, r, c));
+                    }
+                }
+            }
+        }
+        // grow at ~10% of the fresh-init scale so new connections start small
+        let grow = 0.1 * (6.0 / (2 * n) as f32).sqrt() / new_mask.density().sqrt();
+        self.cell.set_mask(new_mask, grow, rng);
+        self.opt_cell.reset_indices(&swapped);
+        self.engine = build::build_engine(self.cfg.train.algorithm, &self.cell, self.readout.n_out());
+    }
+
+    /// Forward-only accuracy over (a subsample of) a dataset.
+    pub fn evaluate(&self, data: &Dataset, max_sequences: usize) -> f32 {
+        let mut scratch = CellScratch::new(self.cell.n());
+        let mut logits = vec![0.0; self.readout.n_out()];
+        let mut discard = OpCounter::new();
+        let take = data.len().min(max_sequences.max(1));
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for seq in data.seqs.iter().take(take) {
+            let mut a_prev = vec![0.0; self.cell.n()];
+            for (t, x) in seq.inputs.iter().enumerate() {
+                self.cell.forward(&a_prev, x, &mut scratch, &mut discard);
+                if let crate::data::StepTarget::Class(c) = &seq.targets[t] {
+                    self.readout.forward(&scratch.a, &mut logits, &mut discard);
+                    total += 1;
+                    if Loss::predict(&logits) == *c {
+                        correct += 1;
+                    }
+                }
+                a_prev.copy_from_slice(&scratch.a);
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            correct as f32 / total as f32
+        }
+    }
+
+    /// Full training loop per the config. Returns curve + cost accounting.
+    pub fn train(&mut self, train_data: &Dataset, val_data: &Dataset) -> TrainOutcome {
+        let iters = self.cfg.train.iterations;
+        let batch_size = self.cfg.train.batch_size;
+        let log_every = self.cfg.train.log_every.max(1);
+        let eval_every = self.cfg.train.eval_every;
+        let activity_sparse = self.cfg.model.cell.is_event_based();
+        let mut compute = ComputeAdjusted::new(self.cfg.omega_tilde(), activity_sparse);
+        let mut batches = crate::data::BatchIter::new(
+            train_data.len(),
+            batch_size,
+            self.batch_rng.next_u64(),
+        );
+        let mut curve = Curve::new();
+        for it in 0..iters {
+            let logging = it % log_every == 0 || it + 1 == iters;
+            let mut stats = SparsityStats::new();
+            let ops_before = self.ops.clone();
+            let idx = batches.next_batch();
+            let mut loss_sum = 0.0;
+            let mut correct = 0usize;
+            for (bi, &si) in idx.iter().enumerate() {
+                // influence scan only on the first sequence of a logging iter
+                let seq = &train_data.seqs[si];
+                let (l, c) = self.run_sequence(seq, &mut stats, logging && bi == 0);
+                loss_sum += l;
+                if c {
+                    correct += 1;
+                }
+            }
+            self.apply_update(batch_size);
+            if self.cfg.train.rewire_every > 0
+                && it > 0
+                && it % self.cfg.train.rewire_every == 0
+            {
+                let mut rng = Pcg64::new(self.cfg.seed ^ (0x5e71_4e00 + it));
+                self.rewire(&mut rng);
+            }
+            let ca = compute.record_iteration(stats.beta_tilde());
+            if logging {
+                let val_acc = if eval_every > 0 && (it % eval_every == 0 || it + 1 == iters) {
+                    Some(self.evaluate(val_data, self.cfg.train.eval_sequences))
+                } else {
+                    None
+                };
+                let d = self.ops.since(&ops_before);
+                curve.push(CurvePoint {
+                    iteration: it,
+                    compute_adjusted: ca,
+                    loss: loss_sum / batch_size as f32,
+                    accuracy: correct as f32 / batch_size as f32,
+                    val_accuracy: val_acc,
+                    alpha: stats.alpha(),
+                    beta: stats.beta(),
+                    influence_sparsity: stats.influence_sparsity(),
+                    influence_macs: d.macs_in(Phase::InfluenceUpdate),
+                });
+            }
+        }
+        let final_val = self.evaluate(val_data, usize::MAX);
+        TrainOutcome {
+            curve,
+            ops: self.ops.clone(),
+            final_val_accuracy: final_val,
+            state_memory_words: self.engine.state_memory_words(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgorithmKind, CellKind};
+    use crate::train::build_dataset;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.task.num_sequences = 200;
+        cfg.train.iterations = 30;
+        cfg.train.batch_size = 8;
+        cfg.train.log_every = 5;
+        cfg.train.eval_every = 15;
+        cfg.train.eval_sequences = 20;
+        cfg.model.hidden = 8;
+        cfg
+    }
+
+    #[test]
+    fn loss_decreases_on_spiral() {
+        let cfg = tiny_cfg();
+        let mut data_rng = Trainer::data_rng(cfg.seed);
+        let (train, val) = build_dataset(&cfg, &mut data_rng);
+        let mut tr = Trainer::new(cfg);
+        let out = tr.train(&train, &val);
+        let first = out.curve.points.first().unwrap().loss;
+        let last = out.curve.points.last().unwrap().loss;
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn curve_has_expected_logging_cadence() {
+        let cfg = tiny_cfg();
+        let mut data_rng = Trainer::data_rng(cfg.seed);
+        let (train, val) = build_dataset(&cfg, &mut data_rng);
+        let mut tr = Trainer::new(cfg);
+        let out = tr.train(&train, &val);
+        // iterations 0,5,10,15,20,25,29
+        assert_eq!(out.curve.points.len(), 7);
+        assert!(out.curve.points.iter().any(|p| p.val_accuracy.is_some()));
+    }
+
+    #[test]
+    fn compute_adjusted_monotone() {
+        let cfg = tiny_cfg();
+        let mut data_rng = Trainer::data_rng(cfg.seed);
+        let (train, val) = build_dataset(&cfg, &mut data_rng);
+        let mut tr = Trainer::new(cfg);
+        let out = tr.train(&train, &val);
+        let cas: Vec<f64> = out.curve.points.iter().map(|p| p.compute_adjusted).collect();
+        for w in cas.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn tanh_control_reports_zero_beta() {
+        let mut cfg = tiny_cfg();
+        cfg.model.cell = CellKind::GatedTanh;
+        cfg.train.algorithm = AlgorithmKind::RtrlParam;
+        cfg.train.iterations = 5;
+        let mut data_rng = Trainer::data_rng(cfg.seed);
+        let (train, val) = build_dataset(&cfg, &mut data_rng);
+        let mut tr = Trainer::new(cfg);
+        let out = tr.train(&train, &val);
+        for p in &out.curve.points {
+            assert!(p.beta < 0.05, "tanh cell should have ~0 derivative sparsity");
+        }
+    }
+}

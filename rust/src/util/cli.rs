@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser: `prog <subcommand> [positionals] [--flag value]`.
+//!
+//! In-tree because the build environment vendors no argument-parsing crate.
+//! Supports `--key value`, `--key=value`, bare boolean flags (`--verbose`)
+//! and positional arguments; unknown-flag detection is the caller's choice
+//! via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if flag.is_empty() {
+                    return Err("stray `--`".into());
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().expect("peeked");
+                    out.flags.insert(flag.to_string(), v);
+                } else {
+                    out.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument `i`.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn positional_count(&self) -> usize {
+        self.positionals.len()
+    }
+
+    /// String flag.
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Boolean flag (present without value, or `=true/false`).
+    pub fn get_bool(&mut self, key: &str) -> Result<bool, String> {
+        match self.get(key) {
+            None => Ok(false),
+            Some(v) => v.parse::<bool>().map_err(|_| format!("--{key}: expected bool, got {v:?}")),
+        }
+    }
+
+    /// Error on any flag never consumed (typo protection).
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !self.consumed.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flags: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let mut a = parse("train --seed 7 --out results/x.csv extra");
+        assert_eq!(a.pos(0), Some("train"));
+        assert_eq!(a.pos(1), Some("extra"));
+        assert_eq!(a.get_parse::<u64>("seed", 0).unwrap(), 7);
+        assert_eq!(a.get("out").unwrap(), "results/x.csv");
+    }
+
+    #[test]
+    fn equals_form_and_bools() {
+        let mut a = parse("run --omega=0.8 --verbose");
+        assert!((a.get_parse::<f32>("omega", 0.0).unwrap() - 0.8).abs() < 1e-6);
+        assert!(a.get_bool("verbose").unwrap());
+        assert!(!a.get_bool("absent").unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse("cmd");
+        assert_eq!(a.get_parse::<usize>("n", 16).unwrap(), 16);
+    }
+
+    #[test]
+    fn finish_catches_typos() {
+        let mut a = parse("cmd --seeed 1");
+        let _ = a.get("seed");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let mut a = parse("cmd --n notanumber");
+        assert!(a.get_parse::<usize>("n", 1).is_err());
+    }
+}

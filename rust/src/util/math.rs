@@ -1,0 +1,139 @@
+//! Scalar math helpers shared by cells and losses.
+
+/// Numerically stable logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Derivative of sigmoid expressed through its output: `s(1-s)`.
+#[inline]
+pub fn dsigmoid_from_out(s: f32) -> f32 {
+    s * (1.0 - s)
+}
+
+/// Derivative of tanh expressed through its output: `1 - t²`.
+#[inline]
+pub fn dtanh_from_out(t: f32) -> f32 {
+    1.0 - t * t
+}
+
+/// Numerically stable softmax over a slice, written into `out`.
+pub fn softmax_into(logits: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(logits.len(), out.len());
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        let e = (l - max).exp();
+        *o = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// log-sum-exp of a slice (stable).
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if max.is_infinite() {
+        return max;
+    }
+    max + xs.iter().map(|&x| (x - max).exp()).sum::<f32>().ln()
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+}
+
+/// Sample standard error of the mean.
+pub fn stderr(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / (n as f32 - 1.0);
+    (var / n as f32).sqrt()
+}
+
+/// Max absolute difference between two slices (∞ if lengths differ).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    if a.len() != b.len() {
+        return f32::INFINITY;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Relative closeness check used by the exactness tests:
+/// `|a-b| <= atol + rtol*|b|` elementwise.
+pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(30.0) > 0.9999);
+        assert!(sigmoid(-30.0) < 0.0001);
+        // stability at extremes
+        assert!(sigmoid(-1000.0) >= 0.0);
+        assert!(sigmoid(1000.0) <= 1.0);
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        for i in -50..=50 {
+            let x = i as f32 * 0.2;
+            assert!((sigmoid(x) + sigmoid(-x) - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let logits = [1000.0, 1001.0, 999.0];
+        let mut out = [0.0; 3];
+        softmax_into(&logits, &mut out);
+        let s: f32 = out.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(out[1] > out[0] && out[0] > out[2]);
+    }
+
+    #[test]
+    fn logsumexp_matches_naive_in_safe_range() {
+        let xs = [0.1f32, -0.3, 2.0];
+        let naive = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((logsumexp(&xs) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stderr_of_constant_is_zero() {
+        assert_eq!(stderr(&[2.0, 2.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        assert!(allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6));
+        assert!(!allclose(&[1.0, 2.0], &[1.0, 2.1], 1e-5, 1e-6));
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-6));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small utilities: deterministic RNG, math helpers, progress reporting.
+
+pub mod cli;
+pub mod math;
+pub mod pool;
+pub mod rng;
+pub mod toml_mini;
+
+pub use rng::Pcg64;

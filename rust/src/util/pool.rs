@@ -1,0 +1,94 @@
+//! Scoped worker pool for the sweep coordinator.
+//!
+//! A fixed number of OS threads drain a shared job queue; results are
+//! collected in submission order. In-tree because the build environment
+//! vendors no async runtime — and the sweep's unit of work (a whole training
+//! run) is seconds long, so OS threads are the right granularity anyway.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `jobs` across at most `workers` threads; returns outputs in the same
+/// order as the inputs. `f` must be `Sync` (it is shared), jobs are consumed
+/// exactly once.
+pub fn run_parallel<I, O, F>(jobs: Vec<I>, workers: usize, f: F) -> Vec<O>
+where
+    I: Send,
+    O: Send,
+    F: Fn(usize, I) -> O + Sync,
+{
+    let workers = workers.max(1).min(jobs.len().max(1));
+    let n = jobs.len();
+    let queue: Mutex<Vec<Option<I>>> = Mutex::new(jobs.into_iter().map(Some).collect());
+    let cursor = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<O>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let job = queue.lock().expect("queue lock")[i].take().expect("job taken once");
+                let out = f(i, job);
+                results.lock().expect("results lock")[i] = Some(out);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .expect("results lock")
+        .into_iter()
+        .map(|o| o.expect("all jobs completed"))
+        .collect()
+}
+
+/// Available hardware parallelism (≥ 1).
+pub fn available_workers() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<u64> = (0..50).collect();
+        let out = run_parallel(jobs, 8, |_, x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let out = run_parallel(vec![1, 2, 3], 1, |i, x| i as i32 + x);
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_jobs_ok() {
+        let out: Vec<i32> = run_parallel(Vec::<i32>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let out = run_parallel(vec![7], 16, |_, x| x);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        use std::sync::atomic::AtomicUsize;
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static CUR: AtomicUsize = AtomicUsize::new(0);
+        let jobs: Vec<usize> = (0..8).collect();
+        run_parallel(jobs, 4, |_, _| {
+            let c = CUR.fetch_add(1, Ordering::SeqCst) + 1;
+            PEAK.fetch_max(c, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            CUR.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(PEAK.load(Ordering::SeqCst) >= 2, "no overlap observed");
+    }
+}

@@ -1,0 +1,199 @@
+//! Minimal TOML-subset parser for experiment configs.
+//!
+//! Supports the subset the config system uses: `[section]` headers,
+//! `key = value` pairs with string (`"…"`), boolean, integer and float
+//! values, `#` comments and blank lines. No arrays-of-tables, no nesting
+//! beyond one section level, no multi-line strings — experiment configs
+//! don't need them. (In-tree because the build environment vendors no
+//! general TOML crate; see Cargo.toml.)
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`lr = 1` ≡ `1.0`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `sections[""]` holds top-level keys.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    /// Parse a document; returns a line-annotated error message on failure.
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section header", ln + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", ln + 1));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", ln + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", ln + 1));
+            }
+            let value = parse_value(val.trim())
+                .ok_or_else(|| format!("line {}: cannot parse value {:?}", ln + 1, val.trim()))?;
+            doc.sections.entry(section.clone()).or_default().insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Value lookup: `get("model", "hidden")`; use `""` for top level.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"')?;
+        return Some(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Some(Value::Float(f));
+        }
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    s.parse::<f64>().ok().map(Value::Float)
+}
+
+/// Escape a string for emission.
+pub fn escape(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+            name = "run-1"   # comment
+            seed = 42
+            [model]
+            hidden = 16
+            theta = 0.1
+            event = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("run-1"));
+        assert_eq!(doc.get("", "seed").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.get("model", "hidden").unwrap().as_i64(), Some(16));
+        assert_eq!(doc.get("model", "theta").unwrap().as_f64(), Some(0.1));
+        assert_eq!(doc.get("model", "event").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Doc::parse("lr = 1").unwrap();
+        assert_eq!(doc.get("", "lr").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = Doc::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "tag").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = Doc::parse("a = -3\nb = 1.5e-2").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(-3));
+        assert!((doc.get("", "b").unwrap().as_f64().unwrap() - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn escape_roundtrip() {
+        let original = "say \"hi\" \\ there";
+        let doc = Doc::parse(&format!("s = {}", escape(original))).unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some(original));
+    }
+}

@@ -1,0 +1,165 @@
+//! Cross-validation of the Rust engines against the JAX/XLA dense oracle.
+//!
+//! Requires `make artifacts` (Python build step). When artifacts are absent
+//! the tests *skip* — CI without Python still exercises everything else —
+//! but when present, the Rust forward pass and RTRL influence update must
+//! match XLA's numerics on identical weights, proving the two stacks
+//! implement the same mathematics.
+
+use sparse_rtrl::nn::{CellScratch, RnnCell};
+use sparse_rtrl::metrics::OpCounter;
+use sparse_rtrl::runtime::{artifacts::names, ArtifactSet, PjrtRuntime};
+use sparse_rtrl::util::Pcg64;
+
+fn artifacts() -> Option<ArtifactSet> {
+    let set = ArtifactSet::default_location();
+    if set.has(names::EGRU_STEP) {
+        Some(set)
+    } else {
+        eprintln!("skipping PJRT cross-validation: run `make artifacts` first");
+        None
+    }
+}
+
+/// Rebuild the exact cell the AOT step was lowered for, from its manifest.
+fn cell_from_manifest(set: &ArtifactSet, name: &str) -> (RnnCell, usize) {
+    let info = set.info(name).expect("manifest entry");
+    let n = info.meta["n"] as usize;
+    let n_in = info.meta["n_in"] as usize;
+    let theta = info.meta["theta"] as f32;
+    let gamma = info.meta["gamma"] as f32;
+    let eps = info.meta["eps"] as f32;
+    let batch = info.meta["batch"] as usize;
+    let mut rng = Pcg64::new(0); // weights are loaded, not drawn
+    let cell = RnnCell::egru(n, n_in, theta, gamma, eps, None, &mut rng);
+    (cell, batch)
+}
+
+/// The artifact's parameter order (see python/compile/model.py):
+/// W_u, V_u, b_u, W_z, V_z, b_z — identical to the Rust gated layout.
+fn params_as_artifact_inputs(cell: &RnnCell) -> Vec<(Vec<usize>, Vec<f32>)> {
+    let layout = cell.layout();
+    (0..layout.blocks().len())
+        .map(|b| {
+            let blk = &layout.blocks()[b];
+            let shape = if blk.cols == 1 { vec![blk.rows] } else { vec![blk.rows, blk.cols] };
+            (shape, layout.block(cell.params(), b).to_vec())
+        })
+        .collect()
+}
+
+#[test]
+fn egru_forward_matches_xla() {
+    let Some(set) = artifacts() else { return };
+    let rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+    let exe = rt.load(&set.path(names::EGRU_STEP)).expect("compile egru_step");
+    let (mut cell, batch) = cell_from_manifest(&set, names::EGRU_STEP);
+    // randomize weights deterministically, then ship the same weights to XLA
+    let mut wrng = Pcg64::new(123);
+    for w in cell.params_mut() {
+        *w = wrng.uniform(-0.4, 0.4);
+    }
+    let (n, n_in) = (cell.n(), cell.n_in());
+    let mut xrng = Pcg64::new(321);
+    let xs: Vec<f32> = (0..batch * n_in).map(|_| xrng.normal()).collect();
+    let a_prev: Vec<f32> = (0..batch * n).map(|_| if xrng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect();
+
+    // XLA side: inputs are (a_prev[batch,n], x[batch,n_in], params...)
+    let mut inputs: Vec<(Vec<usize>, Vec<f32>)> =
+        vec![(vec![batch, n], a_prev.clone()), (vec![batch, n_in], xs.clone())];
+    inputs.extend(params_as_artifact_inputs(&cell));
+    let input_refs: Vec<(&[usize], &[f32])> =
+        inputs.iter().map(|(s, d)| (s.as_slice(), d.as_slice())).collect();
+    let outs = exe.run_f32(&input_refs).expect("execute egru_step");
+    let (xla_a, xla_v, xla_dphi) = (&outs[0], &outs[1], &outs[2]);
+
+    // Rust side, sample by sample
+    let mut scratch = CellScratch::new(n);
+    let mut ops = OpCounter::new();
+    for b in 0..batch {
+        let ap = &a_prev[b * n..(b + 1) * n];
+        let x = &xs[b * n_in..(b + 1) * n_in];
+        cell.forward(ap, x, &mut scratch, &mut ops);
+        for k in 0..n {
+            let (ra, xa) = (scratch.a[k], xla_a[b * n + k]);
+            assert!(
+                (ra - xa).abs() < 1e-5,
+                "a mismatch sample {b} unit {k}: rust {ra} xla {xa}"
+            );
+            let (rv, xv) = (scratch.v[k], xla_v[b * n + k]);
+            assert!(
+                (rv - xv).abs() < 1e-4,
+                "v mismatch sample {b} unit {k}: rust {rv} xla {xv}"
+            );
+            let (rd, xd) = (scratch.dphi[k], xla_dphi[b * n + k]);
+            assert!(
+                (rd - xd).abs() < 1e-4,
+                "dphi mismatch sample {b} unit {k}: rust {rd} xla {xd}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rtrl_influence_update_matches_xla() {
+    let Some(set) = artifacts() else { return };
+    if !set.has(names::RTRL_STEP) {
+        eprintln!("skipping: no rtrl_step artifact");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().expect("pjrt cpu client");
+    let exe = rt.load(&set.path(names::RTRL_STEP)).expect("compile rtrl_step");
+    let (mut cell, _) = cell_from_manifest(&set, names::RTRL_STEP);
+    let mut wrng = Pcg64::new(55);
+    for w in cell.params_mut() {
+        *w = wrng.uniform(-0.4, 0.4);
+    }
+    let (n, n_in, p) = (cell.n(), cell.n_in(), cell.p());
+
+    let mut xrng = Pcg64::new(66);
+    let x: Vec<f32> = (0..n_in).map(|_| xrng.normal()).collect();
+    let a_prev: Vec<f32> = (0..n).map(|_| if xrng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect();
+    let m_prev: Vec<f32> = (0..n * p).map(|_| xrng.uniform(-0.05, 0.05)).collect();
+
+    let mut inputs: Vec<(Vec<usize>, Vec<f32>)> = vec![
+        (vec![n], a_prev.clone()),
+        (vec![n_in], x.clone()),
+        (vec![n, p], m_prev.clone()),
+    ];
+    inputs.extend(params_as_artifact_inputs(&cell));
+    let input_refs: Vec<(&[usize], &[f32])> =
+        inputs.iter().map(|(s, d)| (s.as_slice(), d.as_slice())).collect();
+    let outs = exe.run_f32(&input_refs).expect("execute rtrl_step");
+    let (xla_a, xla_m) = (&outs[0], &outs[1]);
+
+    // Rust reference: dense Eq.-10 update on the same M_prev.
+    let mut scratch = CellScratch::new(n);
+    let mut ops = OpCounter::new();
+    cell.forward(&a_prev, &x, &mut scratch, &mut ops);
+    for k in 0..n {
+        assert!((scratch.a[k] - xla_a[k]).abs() < 1e-5, "a mismatch unit {k}");
+    }
+    let mut m_next = vec![0.0f32; n * p];
+    for k in 0..n {
+        for l in 0..n {
+            let jv = cell.dv_da(&scratch, k, l);
+            if jv == 0.0 {
+                continue;
+            }
+            for pi in 0..p {
+                m_next[k * p + pi] += jv * m_prev[l * p + pi];
+            }
+        }
+        let row = &mut m_next[k * p..(k + 1) * p];
+        cell.immediate_row(&scratch, &a_prev, &x, k, |pi, val| row[pi] += val, &mut ops);
+        let d = scratch.dphi[k];
+        for v in row.iter_mut() {
+            *v *= d;
+        }
+    }
+    let mut worst = 0.0f32;
+    for i in 0..n * p {
+        worst = worst.max((m_next[i] - xla_m[i]).abs());
+    }
+    assert!(worst < 5e-4, "influence update mismatch: worst abs diff {worst}");
+}

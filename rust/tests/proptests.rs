@@ -1,0 +1,260 @@
+//! Randomized property tests over the sparse-RTRL invariants.
+//!
+//! In-tree property harness (no proptest crate offline): each property runs
+//! across many PCG-seeded random configurations — cells, masks, sparsity
+//! levels, sequence lengths — and reports the failing seed on violation.
+
+use sparse_rtrl::config::AlgorithmKind;
+use sparse_rtrl::metrics::OpCounter;
+use sparse_rtrl::nn::{Activation, Dynamics, Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::rtrl::{Algorithm, ColumnMap, Target};
+use sparse_rtrl::sparse::{MaskPattern, RowSet};
+use sparse_rtrl::train::build_engine;
+use sparse_rtrl::util::Pcg64;
+
+/// Draw a random cell configuration.
+fn random_cell(rng: &mut Pcg64) -> RnnCell {
+    let n = 4 + rng.below(12) as usize;
+    let n_in = 1 + rng.below(3) as usize;
+    let dynamics = if rng.bernoulli(0.5) { Dynamics::Gated } else { Dynamics::Linear };
+    let activation = if rng.bernoulli(0.6) {
+        Activation::Heaviside { gamma: rng.uniform(0.1, 0.6), eps: rng.uniform(0.2, 0.8) }
+    } else {
+        Activation::Tanh
+    };
+    let theta = rng.uniform(-0.1, 0.3);
+    let mask = if rng.bernoulli(0.6) {
+        Some(MaskPattern::random(n, n, rng.uniform(0.05, 0.9), rng))
+    } else {
+        None
+    };
+    RnnCell::new(n, n_in, dynamics, activation, theta, mask, rng)
+}
+
+fn run_pair(
+    cell: &RnnCell,
+    a: AlgorithmKind,
+    b: AlgorithmKind,
+    steps: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>) {
+    let run = |kind| {
+        let mut rng = Pcg64::new(seed);
+        let mut readout = Readout::new(2, cell.n(), &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops = OpCounter::new();
+        let mut eng = build_engine(kind, cell, 2);
+        eng.begin_sequence();
+        let mut xrng = Pcg64::new(seed ^ 0xdead_beef);
+        for t in 0..steps {
+            let x: Vec<f32> = (0..cell.n_in()).map(|_| xrng.normal()).collect();
+            let target = if xrng.bernoulli(0.3) || t + 1 == steps {
+                Target::Class(xrng.below(2) as usize)
+            } else {
+                Target::None
+            };
+            eng.step(cell, &mut readout, &mut loss, &x, target, &mut ops);
+        }
+        eng.end_sequence(cell, &mut readout, &mut ops);
+        eng.grads().to_vec()
+    };
+    (run(a), run(b))
+}
+
+/// PROPERTY: every sparse engine equals dense RTRL on random configs.
+#[test]
+fn prop_sparse_engines_exact() {
+    for case in 0..40u64 {
+        let mut rng = Pcg64::new(900 + case);
+        let cell = random_cell(&mut rng);
+        let steps = 2 + rng.below(10) as usize;
+        for kind in [
+            AlgorithmKind::RtrlActivity,
+            AlgorithmKind::RtrlParam,
+            AlgorithmKind::RtrlBoth,
+            AlgorithmKind::Bptt,
+        ] {
+            let (g_ref, g) = run_pair(&cell, AlgorithmKind::RtrlDense, kind, steps, case);
+            for (i, (x, y)) in g_ref.iter().zip(&g).enumerate() {
+                let tol = 3e-4 * (1.0 + x.abs().max(y.abs()));
+                assert!(
+                    (x - y).abs() <= tol,
+                    "case {case} {} param {i}: dense {x} vs {y} (cell n={} {:?} {:?})",
+                    kind.name(),
+                    cell.n(),
+                    cell.dynamics(),
+                    cell.activation(),
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: gradients at masked parameter positions are exactly zero for
+/// every engine.
+#[test]
+fn prop_masked_positions_zero_grad() {
+    for case in 0..30u64 {
+        let mut rng = Pcg64::new(1700 + case);
+        let n = 4 + rng.below(10) as usize;
+        let mask = MaskPattern::random(n, n, rng.uniform(0.1, 0.7), &mut rng);
+        let cell = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, Some(mask.clone()), &mut rng);
+        for kind in AlgorithmKind::all() {
+            let (g, _) = run_pair(&cell, kind, kind, 5, case);
+            let layout = cell.layout();
+            for &b in &cell.recurrent_blocks() {
+                for r in 0..n {
+                    let range = layout.row_range(b, r);
+                    for (c, pi) in range.enumerate() {
+                        if !mask.is_kept(r, c) {
+                            assert_eq!(
+                                g[pi],
+                                0.0,
+                                "case {case} {}: masked param ({b},{r},{c}) has grad",
+                                kind.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: ColumnMap is a bijection between tracked params and columns.
+#[test]
+fn prop_column_map_bijection() {
+    for case in 0..50u64 {
+        let mut rng = Pcg64::new(2500 + case);
+        let cell = random_cell(&mut rng);
+        let map = ColumnMap::from_cell(&cell);
+        let mut seen = vec![false; cell.p()];
+        for j in 0..map.len() {
+            let pi = map.param_of(j);
+            assert!(!seen[pi], "case {case}: param {pi} mapped twice");
+            seen[pi] = true;
+            assert_eq!(map.compact_of(pi), Some(j), "case {case}");
+        }
+        // untracked params must be masked recurrent entries
+        let layout = cell.layout();
+        for pi in 0..cell.p() {
+            if map.compact_of(pi).is_none() {
+                let (b, r, c) = layout.decode(pi);
+                assert!(cell.recurrent_blocks().contains(&b), "case {case}");
+                assert!(!cell.mask().unwrap().is_kept(r, c), "case {case}");
+            }
+        }
+    }
+}
+
+/// PROPERTY: RowSet behaves like a set under random insert/clear traffic.
+#[test]
+fn prop_rowset_semantics() {
+    for case in 0..50u64 {
+        let mut rng = Pcg64::new(3600 + case);
+        let n = 1 + rng.below(64) as usize;
+        let mut s = RowSet::empty(n);
+        let mut reference = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            match rng.below(10) {
+                0 => {
+                    s.clear();
+                    reference.clear();
+                }
+                _ => {
+                    let k = rng.below(n as u64) as usize;
+                    s.insert(k);
+                    reference.insert(k);
+                }
+            }
+            assert_eq!(s.len(), reference.len(), "case {case}");
+            for k in 0..n {
+                assert_eq!(s.contains(k), reference.contains(&k), "case {case} k={k}");
+            }
+        }
+        let mut from_iter: Vec<usize> = s.iter().collect();
+        from_iter.sort_unstable();
+        let expect: Vec<usize> = reference.into_iter().collect();
+        assert_eq!(from_iter, expect, "case {case}");
+    }
+}
+
+/// PROPERTY: forward activations of Heaviside cells are always binary and
+/// the deriv-active count never exceeds n.
+#[test]
+fn prop_event_cell_binary_activations() {
+    for case in 0..30u64 {
+        let mut rng = Pcg64::new(4700 + case);
+        let n = 4 + rng.below(12) as usize;
+        let cell = RnnCell::egru(n, 2, rng.uniform(0.0, 0.3), 0.3, rng.uniform(0.2, 0.8), None, &mut rng);
+        let mut readout = Readout::new(2, n, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops = OpCounter::new();
+        let mut eng = build_engine(AlgorithmKind::RtrlBoth, &cell, 2);
+        eng.begin_sequence();
+        for _ in 0..10 {
+            let x = [rng.normal(), rng.normal()];
+            let r = eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+            assert!(r.active_units <= n);
+            assert!(r.deriv_units <= n);
+        }
+    }
+}
+
+/// PROPERTY: dynamic rewiring preserves exactness — after any
+/// magnitude-rewire + set_mask, a freshly built sparse engine still matches
+/// dense RTRL on the new topology, and density is invariant.
+#[test]
+fn prop_rewiring_preserves_exactness_and_density() {
+    for case in 0..15u64 {
+        let mut rng = Pcg64::new(6900 + case);
+        let n = 6 + rng.below(8) as usize;
+        let density = rng.uniform(0.2, 0.6);
+        let mask = MaskPattern::random(n, n, density, &mut rng);
+        let mut cell = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, Some(mask), &mut rng);
+        let kept_before = cell.mask().unwrap().kept();
+        for round in 0..3 {
+            let new_mask = sparse_rtrl::sparse::rewire::magnitude_rewire(
+                &cell,
+                rng.uniform(0.1, 0.5),
+                &mut rng,
+            );
+            cell.set_mask(new_mask, 0.05, &mut rng);
+            assert_eq!(cell.mask().unwrap().kept(), kept_before, "case {case} round {round}");
+            let steps = 4 + rng.below(5) as usize;
+            let (g_ref, g) =
+                run_pair(&cell, AlgorithmKind::RtrlDense, AlgorithmKind::RtrlBoth, steps, case);
+            for (i, (x, y)) in g_ref.iter().zip(&g).enumerate() {
+                assert!(
+                    (x - y).abs() <= 3e-4 * (1.0 + x.abs().max(y.abs())),
+                    "case {case} round {round} param {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: influence sparsity reported by the engine is within [0,1] and
+/// at least the parameter-mask floor for column-compacted modes.
+#[test]
+fn prop_influence_sparsity_bounds() {
+    for case in 0..20u64 {
+        let mut rng = Pcg64::new(5800 + case);
+        let n = 6 + rng.below(8) as usize;
+        let density = rng.uniform(0.1, 0.9);
+        let mask = MaskPattern::random(n, n, density, &mut rng);
+        let cell = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, Some(mask), &mut rng);
+        let mut readout = Readout::new(2, n, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops = OpCounter::new();
+        let mut eng = build_engine(AlgorithmKind::RtrlDense, &cell, 2);
+        eng.set_measure_influence(true);
+        eng.begin_sequence();
+        for _ in 0..6 {
+            let x = [rng.normal(), rng.normal()];
+            let r = eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+            let s = r.influence_sparsity.unwrap();
+            assert!((0.0..=1.0).contains(&s), "case {case}: sparsity {s}");
+        }
+    }
+}

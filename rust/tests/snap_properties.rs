@@ -1,0 +1,114 @@
+//! Properties of the SnAp approximations (Menick et al. 2020) that Table 1
+//! relies on: SnAp-2 ≡ exact RTRL for dense cells, pattern restriction under
+//! sparsity, and the cost ordering SnAp-1 < both-sparse RTRL < SnAp-2(dense).
+
+use sparse_rtrl::config::AlgorithmKind;
+use sparse_rtrl::metrics::{OpCounter, Phase};
+use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::rtrl::Target;
+use sparse_rtrl::sparse::MaskPattern;
+use sparse_rtrl::train::build_engine;
+use sparse_rtrl::util::Pcg64;
+
+fn grads_for(kind: AlgorithmKind, cell: &RnnCell, seed: u64, steps: usize) -> (Vec<f32>, u64) {
+    let mut rng = Pcg64::new(seed);
+    let mut readout = Readout::new(2, cell.n(), &mut rng);
+    let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+    let mut ops = OpCounter::new();
+    let mut eng = build_engine(kind, cell, 2);
+    eng.begin_sequence();
+    let mut xrng = Pcg64::new(seed + 1000);
+    for t in 0..steps {
+        let x: Vec<f32> = (0..cell.n_in()).map(|_| xrng.normal()).collect();
+        let target = if t + 1 == steps { Target::Class(1) } else { Target::None };
+        eng.step(cell, &mut readout, &mut loss, &x, target, &mut ops);
+    }
+    eng.end_sequence(cell, &mut readout, &mut ops);
+    (eng.grads().to_vec(), ops.macs_in(Phase::InfluenceUpdate))
+}
+
+/// On a dense cell, SnAp-2's pattern is the whole matrix ⇒ identical to
+/// exact RTRL (Menick et al.: SnAp-2 is exact for fully-connected nets
+/// at n=2 hops because J is one hop).
+#[test]
+fn snap2_exact_on_dense_cell() {
+    let mut rng = Pcg64::new(1);
+    let cell = RnnCell::egru(10, 2, 0.05, 0.3, 0.5, None, &mut rng);
+    let (g_exact, _) = grads_for(AlgorithmKind::RtrlDense, &cell, 3, 8);
+    let (g_snap2, _) = grads_for(AlgorithmKind::Snap2, &cell, 3, 8);
+    for (i, (a, b)) in g_exact.iter().zip(&g_snap2).enumerate() {
+        assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "param {i}: {a} vs {b}");
+    }
+}
+
+/// SnAp-1 keeps only fan-in influence: gradients are generally *different*
+/// from exact RTRL (it is an approximation), but share the fan-in support.
+#[test]
+fn snap1_is_biased_but_supported_on_fan_in() {
+    let mut rng = Pcg64::new(2);
+    let cell = RnnCell::egru(10, 2, 0.05, 0.3, 0.5, None, &mut rng);
+    let (g_exact, _) = grads_for(AlgorithmKind::RtrlDense, &cell, 4, 10);
+    let (g_snap1, _) = grads_for(AlgorithmKind::Snap1, &cell, 4, 10);
+    assert!(g_snap1.iter().any(|&g| g != 0.0), "snap1 produced no gradient");
+    let diff: f32 = g_exact
+        .iter()
+        .zip(&g_snap1)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff > 1e-6, "snap1 should differ from exact RTRL on recurrent tasks");
+}
+
+/// SnAp-1's gradient has nonzero cosine similarity with the exact gradient
+/// (it is a *useful* approximation — this is why Menick et al. can train
+/// with it).
+#[test]
+fn snap1_correlates_with_exact() {
+    let mut rng = Pcg64::new(3);
+    let cell = RnnCell::egru(12, 2, 0.05, 0.3, 0.5, None, &mut rng);
+    let (g_exact, _) = grads_for(AlgorithmKind::RtrlDense, &cell, 5, 12);
+    let (g_snap1, _) = grads_for(AlgorithmKind::Snap1, &cell, 5, 12);
+    let dot: f64 = g_exact.iter().zip(&g_snap1).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+    let na: f64 = g_exact.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = g_snap1.iter().map(|b| (*b as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(na > 0.0 && nb > 0.0);
+    let cos = dot / (na * nb);
+    assert!(cos > 0.3, "snap1/exact cosine {cos:.3} too low");
+}
+
+/// Cost ordering on a masked cell: snap1 < rtrl-both; snap2 < rtrl-dense.
+#[test]
+fn snap_cost_ordering() {
+    let mut rng = Pcg64::new(4);
+    let n = 20;
+    let mask = MaskPattern::random(n, n, 0.3, &mut rng);
+    let cell = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, Some(mask), &mut rng);
+    let (_, c_dense) = grads_for(AlgorithmKind::RtrlDense, &cell, 6, 10);
+    let (_, c_both) = grads_for(AlgorithmKind::RtrlBoth, &cell, 6, 10);
+    let (_, c_snap1) = grads_for(AlgorithmKind::Snap1, &cell, 6, 10);
+    let (_, c_snap2) = grads_for(AlgorithmKind::Snap2, &cell, 6, 10);
+    assert!(c_snap1 < c_both, "snap1 {c_snap1} !< rtrl-both {c_both}");
+    assert!(c_snap2 < c_dense, "snap2 {c_snap2} !< dense {c_dense}");
+    assert!(c_snap1 < c_snap2);
+}
+
+/// SnAp gradients at masked positions are exactly zero (patterns respect
+/// the parameter mask).
+#[test]
+fn snap_respects_mask() {
+    let mut rng = Pcg64::new(5);
+    let n = 12;
+    let mask = MaskPattern::random(n, n, 0.25, &mut rng);
+    let cell = RnnCell::evrnn(n, 2, 0.0, 0.3, 0.5, Some(mask.clone()), &mut rng);
+    for kind in [AlgorithmKind::Snap1, AlgorithmKind::Snap2] {
+        let (g, _) = grads_for(kind, &cell, 7, 8);
+        let layout = cell.layout();
+        let voff = layout.offset(1); // V block
+        for r in 0..n {
+            for c in 0..n {
+                if !mask.is_kept(r, c) {
+                    assert_eq!(g[voff + r * n + c], 0.0, "{:?} leaked into masked param", kind);
+                }
+            }
+        }
+    }
+}
