@@ -15,7 +15,7 @@
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::{OpCounter, Phase};
 use sparse_rtrl::nn::{CellScratch, Loss, LossKind, Readout, RnnCell};
-use sparse_rtrl::rtrl::Target;
+use sparse_rtrl::rtrl::{GradientEngine, Target};
 use sparse_rtrl::runtime::{artifacts::names, ArtifactSet, PjrtRuntime};
 use sparse_rtrl::sparse::MaskPattern;
 use sparse_rtrl::train::build_engine;
@@ -86,6 +86,13 @@ fn main() {
     let set = ArtifactSet::default_location();
     if !set.has(names::RTRL_STEP) {
         println!("\n(artifacts not built — `make artifacts` to enable the XLA cross-check)");
+        return;
+    }
+    if !PjrtRuntime::available() {
+        println!(
+            "\n(PJRT support not compiled in — add the `xla` dep to rust/Cargo.toml and \
+             rebuild with `--features pjrt`)"
+        );
         return;
     }
     println!("\nXLA cross-check (AOT JAX/Pallas graph via PJRT):");

@@ -15,6 +15,7 @@ use sparse_rtrl::data::StepTarget;
 use sparse_rtrl::metrics::OpCounter;
 use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
 use sparse_rtrl::optim::{Adam, Optimizer};
+use sparse_rtrl::rtrl::GradientEngine;
 use sparse_rtrl::sparse::MaskPattern;
 use sparse_rtrl::train::build_engine;
 use sparse_rtrl::util::cli::Args;

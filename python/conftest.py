@@ -1,6 +1,22 @@
-"""Ensure `compile.*` imports resolve when pytest runs from the repo root."""
+"""Ensure `compile.*` imports resolve when pytest runs from the repo root,
+and skip test layers cleanly when their dependencies are absent (the gated
+CI job runs on runners that may not provide jax or hypothesis)."""
 
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def _missing(module):
+    return importlib.util.find_spec(module) is None
+
+
+collect_ignore_glob = []
+if _missing("jax"):
+    # The whole layer is JAX-based.
+    collect_ignore_glob.append("tests/*")
+elif _missing("hypothesis"):
+    # Property-based modules need hypothesis; test_model.py does not.
+    collect_ignore_glob.extend(["tests/test_kernels.py", "tests/test_rtrl_math.py"])

@@ -1,0 +1,186 @@
+//! Minimal JSON emission for the bench report.
+//!
+//! In-tree because the build vendors no serde: the report schema is small,
+//! append-only and versioned, so a hand-rolled writer with an escaping
+//! helper is the whole requirement. The inverse direction (parsing) is
+//! deliberately out of scope — CI consumers read the artifact with real
+//! JSON tooling.
+
+use super::{phase_name, BenchReport, CaseResult};
+
+/// Schema identifier CI consumers can dispatch on.
+pub const SCHEMA: &str = "sparse-rtrl/bench/v1";
+
+/// Escape a string for a JSON string literal (without the quotes).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A float as a JSON number (`null` for non-finite values, which JSON
+/// cannot represent).
+pub fn number(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// f32 variant, formatted at f32 precision (so ω = 0.8 emits `0.8`, not
+/// the f64-widened `0.800000011920929`).
+pub fn number32(x: f32) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn case_json(r: &CaseResult, indent: &str) -> String {
+    let mut phases = String::new();
+    for (i, macs) in r.macs_per_step.iter().enumerate() {
+        if i > 0 {
+            phases.push_str(", ");
+        }
+        phases.push_str(&format!("\"{}\": {}", escape(phase_name(i)), macs));
+    }
+    format!(
+        "{indent}{{\"engine\": \"{}\", \"hidden\": {}, \"param_sparsity\": {}, \
+         \"omega_tilde\": {}, \"p\": {}, \"timesteps\": {}, \"sequences\": {}, \
+         \"wall_ns\": {}, \"ns_per_step\": {}, \"steps_per_sec\": {}, \
+         \"macs_per_step_total\": {}, \"macs_per_step\": {{{}}}, \
+         \"words_per_step_total\": {}, \"state_memory_words\": {}, \
+         \"alpha_tilde\": {}, \"beta_tilde\": {}}}",
+        escape(r.engine),
+        r.hidden,
+        number32(r.param_sparsity),
+        number32(r.omega_tilde),
+        r.p,
+        r.timesteps,
+        r.sequences,
+        r.wall_ns,
+        number(r.ns_per_step),
+        number(r.steps_per_sec),
+        r.macs_per_step_total,
+        phases,
+        r.words_per_step_total,
+        r.state_memory_words,
+        number(r.alpha_tilde),
+        number(r.beta_tilde),
+    )
+}
+
+impl BenchReport {
+    /// Serialize the whole report. One result object per line so diffs and
+    /// line-oriented tooling stay usable on the CI artifact.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": \"{}\",\n", escape(SCHEMA)));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"timesteps\": {},\n", self.timesteps));
+        s.push_str(&format!("  \"sequences\": {},\n", self.sequences));
+        s.push_str(&format!("  \"workers\": {},\n", self.workers));
+        s.push_str(&format!("  \"created_unix\": {},\n", self.created_unix));
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            s.push_str(&case_json(r, "    "));
+            if i + 1 < self.results.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::{run, BenchConfig};
+    use crate::config::AlgorithmKind;
+
+    fn tiny_report() -> BenchReport {
+        let cfg = BenchConfig {
+            engines: vec![AlgorithmKind::RtrlDense, AlgorithmKind::Uoro],
+            hidden_sizes: vec![6],
+            param_sparsities: vec![0.0],
+            timesteps: 4,
+            sequences: 1,
+            warmup_sequences: 0,
+            theta: 0.1,
+            workers: 1,
+            quick: true,
+        };
+        run(&cfg, false)
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(escape("plain"), "plain");
+    }
+
+    #[test]
+    fn number_maps_non_finite_to_null() {
+        assert_eq!(number(1.5), "1.5");
+        assert_eq!(number(f64::NAN), "null");
+        assert_eq!(number(f64::INFINITY), "null");
+    }
+
+    /// Structural validation with an in-test micro JSON checker: balanced
+    /// braces/brackets outside strings, expected keys present.
+    #[test]
+    fn report_json_is_balanced_and_complete() {
+        let j = tiny_report().to_json();
+        let (mut depth, mut in_str, mut esc_next) = (0i32, false, false);
+        let mut max_depth = 0;
+        for c in j.chars() {
+            if esc_next {
+                esc_next = false;
+                continue;
+            }
+            match c {
+                '\\' if in_str => esc_next = true,
+                '"' => in_str = !in_str,
+                '{' | '[' if !in_str => {
+                    depth += 1;
+                    max_depth = max_depth.max(depth);
+                }
+                '}' | ']' if !in_str => depth -= 1,
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced JSON:\n{j}");
+        assert!(!in_str, "unterminated string");
+        assert!(max_depth >= 3, "results objects missing");
+        for key in [
+            "\"schema\"",
+            "\"results\"",
+            "\"engine\"",
+            "\"ns_per_step\"",
+            "\"macs_per_step\"",
+            "\"influence_update\"",
+            "\"state_memory_words\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+        assert!(j.contains(SCHEMA));
+        assert!(j.contains("\"rtrl-dense\""));
+        assert!(j.contains("\"uoro\""));
+    }
+}

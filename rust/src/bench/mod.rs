@@ -1,0 +1,289 @@
+//! The `bench` subsystem: machine-readable performance trajectory.
+//!
+//! Sweeps gradient engine × hidden size × parameter sparsity through the
+//! unified [`crate::rtrl::GradientEngine`] trait, measuring per-step
+//! wall-time alongside the per-phase MAC/word counters from
+//! [`crate::metrics::ops`], and emits a `BENCH_rtrl.json` report that CI
+//! uploads on every PR — the repo's perf record across time.
+//!
+//! Cases fan out over [`crate::util::pool::run_parallel`]. The default is a
+//! single worker (exclusive timing); raising `workers` trades timing noise
+//! for throughput, which is what the CI smoke bench (`--quick`) does.
+//!
+//! Everything here goes through `build_engine` + the trait — adding a new
+//! engine automatically adds it to the bench grid.
+
+pub mod json;
+pub mod runner;
+
+use crate::config::AlgorithmKind;
+use crate::metrics::Phase;
+use crate::util::pool;
+
+/// Grid + measurement knobs for one bench invocation.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Engines to measure (default: every [`AlgorithmKind`]).
+    pub engines: Vec<AlgorithmKind>,
+    /// Hidden sizes n.
+    pub hidden_sizes: Vec<usize>,
+    /// Parameter-sparsity levels ω ∈ [0, 1).
+    pub param_sparsities: Vec<f32>,
+    /// Sequence length T per repetition (paper: 17).
+    pub timesteps: usize,
+    /// Timed sequences per case.
+    pub sequences: usize,
+    /// Untimed warm-up sequences per case.
+    pub warmup_sequences: usize,
+    /// EGRU threshold ϑ (controls activity sparsity of the bench cell).
+    pub theta: f32,
+    /// Worker threads (0 = available parallelism; 1 = exclusive timing).
+    pub workers: usize,
+    /// Whether this is the reduced CI grid.
+    pub quick: bool,
+}
+
+impl BenchConfig {
+    /// The full grid: every engine, paper-and-beyond sizes and sparsities.
+    pub fn full() -> Self {
+        BenchConfig {
+            engines: AlgorithmKind::all().to_vec(),
+            hidden_sizes: vec![16, 32, 64],
+            param_sparsities: vec![0.0, 0.5, 0.8, 0.9],
+            timesteps: 17,
+            sequences: 30,
+            warmup_sequences: 3,
+            theta: 0.1,
+            workers: 1,
+            quick: false,
+        }
+    }
+
+    /// The CI smoke grid: every engine, one size, two sparsity levels —
+    /// small enough to run on every PR, complete enough to catch a
+    /// regression in any engine's hot path.
+    pub fn quick() -> Self {
+        BenchConfig {
+            hidden_sizes: vec![16],
+            param_sparsities: vec![0.0, 0.8],
+            sequences: 6,
+            warmup_sequences: 1,
+            quick: true,
+            ..Self::full()
+        }
+    }
+
+    /// Expand the grid into concrete cases — size-major, engine varying
+    /// fastest — in a deterministic order so reports diff cleanly between
+    /// runs (`seed` is the positional index).
+    pub fn expand(&self) -> Vec<BenchCase> {
+        let mut cases = Vec::new();
+        for &hidden in &self.hidden_sizes {
+            for &omega in &self.param_sparsities {
+                for &engine in &self.engines {
+                    cases.push(BenchCase {
+                        engine,
+                        hidden,
+                        param_sparsity: omega,
+                        timesteps: self.timesteps.max(1),
+                        sequences: self.sequences.max(1),
+                        warmup_sequences: self.warmup_sequences,
+                        theta: self.theta,
+                        seed: cases.len() as u64,
+                    });
+                }
+            }
+        }
+        cases
+    }
+}
+
+/// One (engine, n, ω) measurement unit.
+#[derive(Debug, Clone)]
+pub struct BenchCase {
+    pub engine: AlgorithmKind,
+    pub hidden: usize,
+    pub param_sparsity: f32,
+    pub timesteps: usize,
+    pub sequences: usize,
+    pub warmup_sequences: usize,
+    pub theta: f32,
+    /// Deterministic per-case RNG stream id.
+    pub seed: u64,
+}
+
+/// Measured outcome of one case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub engine: &'static str,
+    pub hidden: usize,
+    pub param_sparsity: f32,
+    pub omega_tilde: f32,
+    /// Flat parameter count p of the bench cell.
+    pub p: usize,
+    pub timesteps: usize,
+    pub sequences: usize,
+    /// Total timed wall-clock nanoseconds.
+    pub wall_ns: u64,
+    pub ns_per_step: f64,
+    pub steps_per_sec: f64,
+    /// Per-phase MACs per step, indexed like [`Phase::all`].
+    pub macs_per_step: [u64; crate::metrics::ops::NUM_PHASES],
+    pub macs_per_step_total: u64,
+    pub words_per_step_total: u64,
+    /// Live state footprint (Table-1 memory column).
+    pub state_memory_words: usize,
+    /// Measured mean active-unit fraction α̃.
+    pub alpha_tilde: f64,
+    /// Measured mean deriv-active fraction β̃.
+    pub beta_tilde: f64,
+}
+
+/// A full bench run: config echo + every case result.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub quick: bool,
+    pub timesteps: usize,
+    pub sequences: usize,
+    pub workers: usize,
+    /// Seconds since the Unix epoch at report creation.
+    pub created_unix: u64,
+    pub results: Vec<CaseResult>,
+}
+
+impl BenchReport {
+    /// Human-readable per-case table (stdout companion of the JSON).
+    pub fn summary_table(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{:<14}{:>6}{:>7}{:>14}{:>14}{:>16}{:>12}\n",
+            "engine", "n", "ω", "ns/step", "steps/s", "MACs/step", "mem words"
+        ));
+        for r in &self.results {
+            s.push_str(&format!(
+                "{:<14}{:>6}{:>7.2}{:>14.1}{:>14.0}{:>16}{:>12}\n",
+                r.engine,
+                r.hidden,
+                r.param_sparsity,
+                r.ns_per_step,
+                r.steps_per_sec,
+                r.macs_per_step_total,
+                r.state_memory_words,
+            ));
+        }
+        s
+    }
+}
+
+/// Run the full grid over the worker pool. `progress` echoes one line per
+/// completed case to stderr.
+pub fn run(cfg: &BenchConfig, progress: bool) -> BenchReport {
+    let cases = cfg.expand();
+    let workers = match cfg.workers {
+        0 => pool::available_workers(),
+        w => w,
+    };
+    let total = cases.len();
+    let done = std::sync::atomic::AtomicUsize::new(0);
+    let results = pool::run_parallel(cases, workers, |_, case| {
+        let r = runner::run_case(&case);
+        let i = done.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1;
+        if progress {
+            eprintln!(
+                "[bench {}/{}] {} n={} ω={:.2} -> {:.1} ns/step, {} MACs/step",
+                i, total, r.engine, r.hidden, r.param_sparsity, r.ns_per_step, r.macs_per_step_total
+            );
+        }
+        r
+    });
+    BenchReport {
+        quick: cfg.quick,
+        timesteps: cfg.timesteps,
+        sequences: cfg.sequences,
+        workers,
+        created_unix: std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0),
+        results,
+    }
+}
+
+/// Name of a phase slot, aligned with [`CaseResult::macs_per_step`].
+pub fn phase_name(i: usize) -> &'static str {
+    Phase::all()[i].name()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> BenchConfig {
+        BenchConfig {
+            engines: vec![AlgorithmKind::RtrlDense, AlgorithmKind::RtrlBoth],
+            hidden_sizes: vec![6],
+            param_sparsities: vec![0.0, 0.5],
+            timesteps: 5,
+            sequences: 2,
+            warmup_sequences: 1,
+            theta: 0.1,
+            workers: 2,
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn expand_covers_grid_in_order() {
+        let cfg = tiny_cfg();
+        let cases = cfg.expand();
+        assert_eq!(cases.len(), 2 * 2);
+        assert_eq!(cases[0].engine, AlgorithmKind::RtrlDense);
+        assert_eq!(cases[1].engine, AlgorithmKind::RtrlBoth);
+        assert!((cases[2].param_sparsity - 0.5).abs() < 1e-6);
+        // seeds are distinct per case
+        let mut seeds: Vec<u64> = cases.iter().map(|c| c.seed).collect();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 4);
+    }
+
+    #[test]
+    fn run_produces_complete_results() {
+        let cfg = tiny_cfg();
+        let report = run(&cfg, false);
+        assert_eq!(report.results.len(), 4);
+        for r in &report.results {
+            assert!(r.wall_ns > 0, "{}: no time measured", r.engine);
+            assert!(r.macs_per_step_total > 0, "{}: no MACs charged", r.engine);
+            assert!(r.state_memory_words > 0);
+            assert!(r.ns_per_step.is_finite());
+            assert!((0.0..=1.0).contains(&r.alpha_tilde));
+            assert!((0.0..=1.0).contains(&r.beta_tilde));
+        }
+        // sparse-exact engine at ω=0.5 must charge fewer MACs than dense at
+        // the same size — the paper's point, visible in the bench report
+        let dense = report
+            .results
+            .iter()
+            .find(|r| r.engine == "rtrl-dense" && r.param_sparsity == 0.0)
+            .unwrap();
+        let both = report
+            .results
+            .iter()
+            .find(|r| r.engine == "rtrl-both" && r.param_sparsity > 0.0)
+            .unwrap();
+        assert!(
+            both.macs_per_step_total < dense.macs_per_step_total,
+            "both {} !< dense {}",
+            both.macs_per_step_total,
+            dense.macs_per_step_total
+        );
+    }
+
+    #[test]
+    fn summary_table_mentions_every_engine() {
+        let report = run(&tiny_cfg(), false);
+        let table = report.summary_table();
+        assert!(table.contains("rtrl-dense"));
+        assert!(table.contains("rtrl-both"));
+    }
+}

@@ -1,0 +1,144 @@
+//! Single-case measurement: build cell + engine, drive warm-up and timed
+//! sequences through the [`GradientEngine`] trait, read wall-clock and the
+//! per-phase op counters.
+
+use super::{BenchCase, CaseResult};
+use crate::metrics::ops::NUM_PHASES;
+use crate::metrics::{OpCounter, Phase};
+use crate::nn::{Loss, LossKind, Readout, RnnCell};
+use crate::rtrl::{GradientEngine, Target};
+use crate::sparse::MaskPattern;
+use crate::train::build_engine;
+use crate::util::Pcg64;
+use std::time::Instant;
+
+/// Input dimensionality of the bench cell (the paper's spiral task shape).
+const BENCH_N_IN: usize = 2;
+/// Output classes of the bench readout.
+const BENCH_N_OUT: usize = 2;
+/// Pseudo-derivative height γ / support ε (config defaults).
+const BENCH_GAMMA: f32 = 0.3;
+const BENCH_EPS: f32 = 0.2;
+
+/// Measure one case. Deterministic for a given `BenchCase` (weights, mask
+/// and the input stream all derive from `case.seed`); wall-time obviously
+/// varies with the host.
+pub fn run_case(case: &BenchCase) -> CaseResult {
+    let n = case.hidden;
+    let mut rng = Pcg64::new(0xbe2c_0001 ^ (case.seed.wrapping_mul(0x9e37_79b9)));
+    let mask = if case.param_sparsity > 0.0 {
+        Some(MaskPattern::random(n, n, 1.0 - case.param_sparsity, &mut rng))
+    } else {
+        None
+    };
+    let cell = RnnCell::egru(n, BENCH_N_IN, case.theta, BENCH_GAMMA, BENCH_EPS, mask, &mut rng);
+    let mut readout = Readout::new(BENCH_N_OUT, n, &mut rng);
+    let mut loss = Loss::new(LossKind::CrossEntropy, BENCH_N_OUT);
+    let mut engine = build_engine(case.engine, &cell, BENCH_N_OUT);
+
+    // Fixed input stream; one class target at the end of each sequence so
+    // the gradient-combine phase is exercised like real training.
+    let mut xrng = Pcg64::new(0x5eed_0000 ^ case.seed);
+    let inputs: Vec<Vec<f32>> = (0..case.timesteps)
+        .map(|_| (0..BENCH_N_IN).map(|_| xrng.normal()).collect())
+        .collect();
+    let mut targets = vec![Target::None; case.timesteps];
+    targets[case.timesteps - 1] = Target::Class(0);
+
+    let mut ops = OpCounter::new();
+    for _ in 0..case.warmup_sequences {
+        engine.run_sequence(&cell, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+    }
+    readout.zero_grads();
+
+    let before = ops.clone();
+    let mut active_unit_steps = 0usize;
+    let mut deriv_unit_steps = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..case.sequences {
+        let summary =
+            engine.run_sequence(&cell, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+        active_unit_steps += summary.active_unit_steps;
+        deriv_unit_steps += summary.deriv_unit_steps;
+        std::hint::black_box(engine.grads()[0]);
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let delta = ops.since(&before);
+
+    let steps = (case.sequences * case.timesteps) as u64;
+    let unit_steps = (steps as usize * n) as f64;
+    let mut macs_per_step = [0u64; NUM_PHASES];
+    for ph in Phase::all() {
+        macs_per_step[ph.index()] = delta.macs_in(ph) / steps;
+    }
+    let ns_per_step = wall_ns as f64 / steps as f64;
+    CaseResult {
+        engine: case.engine.name(),
+        hidden: n,
+        param_sparsity: case.param_sparsity,
+        omega_tilde: cell.omega_tilde(),
+        p: cell.p(),
+        timesteps: case.timesteps,
+        sequences: case.sequences,
+        wall_ns,
+        ns_per_step,
+        steps_per_sec: if ns_per_step > 0.0 { 1e9 / ns_per_step } else { 0.0 },
+        macs_per_step,
+        macs_per_step_total: delta.total_macs() / steps,
+        words_per_step_total: delta.total_words() / steps,
+        state_memory_words: engine.state_memory_words(),
+        alpha_tilde: active_unit_steps as f64 / unit_steps,
+        beta_tilde: deriv_unit_steps as f64 / unit_steps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgorithmKind;
+
+    fn case(engine: AlgorithmKind, omega: f32) -> BenchCase {
+        BenchCase {
+            engine,
+            hidden: 8,
+            param_sparsity: omega,
+            timesteps: 6,
+            sequences: 2,
+            warmup_sequences: 1,
+            theta: 0.1,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn deterministic_op_counts() {
+        let a = run_case(&case(AlgorithmKind::RtrlBoth, 0.5));
+        let b = run_case(&case(AlgorithmKind::RtrlBoth, 0.5));
+        assert_eq!(a.macs_per_step, b.macs_per_step);
+        assert_eq!(a.state_memory_words, b.state_memory_words);
+        assert!((a.alpha_tilde - b.alpha_tilde).abs() < 1e-12);
+    }
+
+    #[test]
+    fn every_engine_kind_measures() {
+        for kind in AlgorithmKind::all() {
+            let r = run_case(&case(kind, 0.5));
+            assert_eq!(r.engine, kind.name());
+            assert!(r.macs_per_step_total > 0, "{}: zero MACs", r.engine);
+            assert!(r.wall_ns > 0);
+        }
+    }
+
+    #[test]
+    fn param_sparsity_reduces_tracked_columns_cost() {
+        let dense = run_case(&case(AlgorithmKind::RtrlParam, 0.0));
+        let sparse = run_case(&case(AlgorithmKind::RtrlParam, 0.8));
+        assert!(
+            sparse.macs_per_step_total < dense.macs_per_step_total,
+            "ω=0.8 {} !< ω=0 {}",
+            sparse.macs_per_step_total,
+            dense.macs_per_step_total
+        );
+        assert!(sparse.omega_tilde < 0.5);
+    }
+}

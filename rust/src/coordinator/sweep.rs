@@ -21,6 +21,11 @@ pub struct SweepPlan {
     pub seeds: Vec<u64>,
     /// Max concurrent runs (0 = available parallelism).
     pub max_workers: usize,
+    /// Pin one gradient engine across every arm instead of the per-arm
+    /// default. Engines are interchangeable behind [`crate::rtrl::GradientEngine`]
+    /// (same gradients for the exact family), so any engine can run any
+    /// arm — this is how e.g. a full SnAp-1 or UORO sweep is launched.
+    pub engine_override: Option<AlgorithmKind>,
 }
 
 impl SweepPlan {
@@ -32,6 +37,7 @@ impl SweepPlan {
             activity: vec![true, false],
             seeds: (1..=seeds as u64).collect(),
             max_workers: 0,
+            engine_override: None,
         }
     }
 
@@ -46,11 +52,11 @@ impl SweepPlan {
                     cfg.model.cell = if activity { CellKind::Egru } else { CellKind::GatedTanh };
                     // engine matched to the arm: exact either way, but op
                     // counts reflect what that arm's hardware would exploit
-                    cfg.train.algorithm = if activity {
+                    cfg.train.algorithm = self.engine_override.unwrap_or(if activity {
                         AlgorithmKind::RtrlBoth
                     } else {
                         AlgorithmKind::RtrlParam
-                    };
+                    });
                     cfg.seed = seed;
                     cfg.name = format!(
                         "spiral-{}-w{:02}-s{}",
@@ -288,6 +294,7 @@ mod tests {
             activity: vec![true, false],
             seeds: vec![1, 2],
             max_workers: 2,
+            engine_override: None,
         }
     }
 
@@ -305,6 +312,15 @@ mod tests {
                 assert_eq!(r.cfg.model.cell, CellKind::GatedTanh);
                 assert_eq!(r.cfg.train.algorithm, AlgorithmKind::RtrlParam);
             }
+        }
+    }
+
+    #[test]
+    fn engine_override_pins_every_arm() {
+        let mut plan = tiny_plan();
+        plan.engine_override = Some(AlgorithmKind::Snap1);
+        for r in plan.expand() {
+            assert_eq!(r.cfg.train.algorithm, AlgorithmKind::Snap1);
         }
     }
 

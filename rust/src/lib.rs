@@ -23,13 +23,37 @@
 //! ## Layers
 //!
 //! * **L3 (this crate)** — event-driven sparse engines, datasets, optimizers,
-//!   training loop, sweep coordinator, op-count instrumentation, reports.
+//!   training loop, sweep coordinator, op-count instrumentation, reports,
+//!   and the [`bench`] performance-trajectory subsystem.
 //! * **L2 (JAX, build time)** — dense EGRU+RTRL step AOT-lowered to HLO text
 //!   (`python/compile/model.py` → `artifacts/*.hlo.txt`), executed from
-//!   [`runtime`] via PJRT as the dense baseline and numerical oracle.
+//!   [`runtime`] via PJRT as the dense baseline and numerical oracle
+//!   (requires the `pjrt` cargo feature; the default build ships a stub).
 //! * **L1 (Pallas, build time)** — blocked influence-update kernel with
 //!   row-block activity skipping (`python/compile/kernels/`).
+//!
+//! ## The `GradientEngine` contract
+//!
+//! Every gradient method — dense RTRL, the three exact sparse RTRL modes,
+//! SnAp-1/2, UORO and BPTT — implements [`rtrl::GradientEngine`]:
+//! `begin_sequence` → `step`×T → `end_sequence` → `grads`, plus
+//! `reset_grads` for the online regime and mandatory op-count accounting
+//! (every MAC charged to the step's [`metrics::OpCounter`] under its
+//! [`metrics::Phase`]; `state_memory_words` reports the live footprint).
+//! The trainer, the sweep coordinator, the micro-benches and [`bench`] all
+//! consume engines exclusively through this trait, so a new engine plugs
+//! into every task, sweep arm and perf report by implementing it and
+//! registering in [`train::build::build_engine`].
+//!
+//! ## The `bench` subsystem
+//!
+//! `sparse-rtrl bench` sweeps engine × hidden size × parameter sparsity
+//! over the in-tree worker pool, measures wall-time next to the op
+//! counters, and emits machine-readable `BENCH_rtrl.json` — the artifact CI
+//! records on every PR as the repo's performance trajectory
+//! (`--quick` is the CI smoke grid).
 
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;

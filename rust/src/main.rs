@@ -1,7 +1,8 @@
 //! `sparse-rtrl` CLI: train, sweep, report, inspect artifacts.
 
 use anyhow::{anyhow, bail, Result};
-use sparse_rtrl::config::ExperimentConfig;
+use sparse_rtrl::bench::{self, BenchConfig};
+use sparse_rtrl::config::{AlgorithmKind, ExperimentConfig};
 use sparse_rtrl::coordinator::{run_sweep, SweepPlan};
 use sparse_rtrl::report::{csv::write_text, fig1, fig2, table1};
 use sparse_rtrl::runtime::{ArtifactSet, PjrtRuntime};
@@ -17,11 +18,20 @@ USAGE:
                      [--seed S] [--algorithm NAME] [--cell NAME]
                      [--out results/train_curve.csv]
   sparse-rtrl sweep  [--config cfg.toml] [--seeds 5] [--iterations N]
-                     [--sequences N] [--workers 0] [--out-dir results]
+                     [--sequences N] [--workers 0] [--algorithm NAME]
+                     [--out-dir results]
+  sparse-rtrl bench  [--quick] [--engines a,b,..] [--hidden 16,32,..]
+                     [--sparsity 0.0,0.8,..] [--timesteps 17] [--sequences 30]
+                     [--warmup 3] [--workers 1] [--out BENCH_rtrl.json]
   sparse-rtrl report <table1|fig1|fig2> [--n 16] [--omega 0.8]
   sparse-rtrl artifacts [--dir artifacts]
   sparse-rtrl config-dump            # print the default config TOML
 ";
+
+/// Resolve an engine name ("rtrl-both", "snap1", …) to its kind.
+fn parse_algorithm(name: &str) -> Result<AlgorithmKind> {
+    AlgorithmKind::from_name(name).ok_or_else(|| anyhow!("unknown algorithm {name:?}"))
+}
 
 fn load_config(args: &mut Args) -> Result<ExperimentConfig> {
     Ok(match args.get("config") {
@@ -39,8 +49,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
     cfg.train.iterations = args.get_parse("iterations", cfg.train.iterations).map_err(err)?;
     cfg.seed = args.get_parse("seed", cfg.seed).map_err(err)?;
     if let Some(alg) = args.get("algorithm") {
-        cfg.train.algorithm = sparse_rtrl::config::AlgorithmKind::from_name(&alg)
-            .ok_or_else(|| anyhow!("unknown algorithm {alg:?}"))?;
+        cfg.train.algorithm = parse_algorithm(&alg)?;
     }
     if let Some(cell) = args.get("cell") {
         cfg.model.cell = sparse_rtrl::config::CellKind::from_name(&cell)
@@ -78,15 +87,79 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
     base.task.num_sequences = args.get_parse("sequences", base.task.num_sequences).map_err(err)?;
     let seeds: usize = args.get_parse("seeds", 5).map_err(err)?;
     let workers: usize = args.get_parse("workers", 0).map_err(err)?;
+    let engine_override = match args.get("algorithm") {
+        Some(alg) => Some(parse_algorithm(&alg)?),
+        None => None,
+    };
     let out_dir: PathBuf = args.get("out-dir").unwrap_or_else(|| "results".into()).into();
     args.finish().map_err(err)?;
 
     let mut plan = SweepPlan::fig3(base, seeds);
     plan.max_workers = workers;
+    plan.engine_override = engine_override;
     let result = run_sweep(&plan, true);
     write_text(&out_dir.join("fig3_runs.csv"), &result.to_long_csv())?;
     write_text(&out_dir.join("fig3_summary.csv"), &result.to_summary_csv())?;
     eprintln!("wrote {0}/fig3_runs.csv and {0}/fig3_summary.csv", out_dir.display());
+    Ok(())
+}
+
+/// Parse a comma-separated flag value into a typed list.
+fn parse_csv<T: std::str::FromStr>(raw: &str, flag: &str) -> Result<Vec<T>> {
+    raw.split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<T>()
+                .map_err(|_| anyhow!("--{flag}: cannot parse {:?}", s.trim()))
+        })
+        .collect()
+}
+
+fn cmd_bench(mut args: Args) -> Result<()> {
+    let quick = args.get_bool("quick").map_err(err)?;
+    let mut cfg = if quick { BenchConfig::quick() } else { BenchConfig::full() };
+    if let Some(s) = args.get("engines") {
+        cfg.engines =
+            s.split(',').map(|name| parse_algorithm(name.trim())).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(s) = args.get("hidden") {
+        cfg.hidden_sizes = parse_csv(&s, "hidden")?;
+    }
+    if let Some(s) = args.get("sparsity") {
+        cfg.param_sparsities = parse_csv(&s, "sparsity")?;
+        if cfg.param_sparsities.iter().any(|w| !(0.0..1.0).contains(w)) {
+            bail!("--sparsity values must be in [0,1)");
+        }
+    }
+    cfg.timesteps = args.get_parse("timesteps", cfg.timesteps).map_err(err)?;
+    cfg.sequences = args.get_parse("sequences", cfg.sequences).map_err(err)?;
+    cfg.warmup_sequences = args.get_parse("warmup", cfg.warmup_sequences).map_err(err)?;
+    cfg.workers = args.get_parse("workers", cfg.workers).map_err(err)?;
+    let out: PathBuf = args.get("out").unwrap_or_else(|| "BENCH_rtrl.json".into()).into();
+    args.finish().map_err(err)?;
+    if cfg.engines.is_empty() || cfg.hidden_sizes.is_empty() || cfg.param_sparsities.is_empty() {
+        bail!("bench grid is empty");
+    }
+    if cfg.hidden_sizes.iter().any(|&n| n == 0) {
+        bail!("--hidden sizes must be positive");
+    }
+    if cfg.timesteps == 0 || cfg.sequences == 0 {
+        bail!("--timesteps and --sequences must be positive");
+    }
+
+    eprintln!(
+        "bench: {} engines × {} sizes × {} sparsities, T={}, {} sequences/case{}",
+        cfg.engines.len(),
+        cfg.hidden_sizes.len(),
+        cfg.param_sparsities.len(),
+        cfg.timesteps,
+        cfg.sequences,
+        if cfg.quick { " (quick)" } else { "" },
+    );
+    let report = bench::run(&cfg, true);
+    print!("{}", report.summary_table());
+    write_text(&out, &report.to_json())?;
+    eprintln!("bench report written to {}", out.display());
     Ok(())
 }
 
@@ -113,6 +186,17 @@ fn cmd_artifacts(mut args: Args) -> Result<()> {
         println!("no artifacts in {} — run `make artifacts`", dir.display());
         return Ok(());
     }
+    if !PjrtRuntime::available() {
+        println!("found {} artifact(s) in {}:", list.len(), dir.display());
+        for name in &list {
+            println!("  {name}");
+        }
+        println!(
+            "(PJRT support not compiled in — add the `xla` dep to rust/Cargo.toml and \
+             rebuild with `--features pjrt` to load them)"
+        );
+        return Ok(());
+    }
     let rt = PjrtRuntime::cpu()?;
     println!("PJRT platform: {}", rt.platform_name());
     for name in list {
@@ -133,6 +217,7 @@ fn main() -> Result<()> {
     match args.pos(0) {
         Some("train") => cmd_train(args),
         Some("sweep") => cmd_sweep(args),
+        Some("bench") => cmd_bench(args),
         Some("report") => cmd_report(args),
         Some("artifacts") => cmd_artifacts(args),
         Some("config-dump") => {

@@ -7,7 +7,7 @@
 
 use crate::metrics::OpCounter;
 use crate::nn::{CellScratch, Loss, LossKind, Readout, RnnCell};
-use crate::rtrl::{Algorithm, DenseRtrl, Target};
+use crate::rtrl::{DenseRtrl, GradientEngine, Target};
 use crate::sparse::MaskPattern;
 use crate::util::Pcg64;
 

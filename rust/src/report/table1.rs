@@ -6,7 +6,7 @@
 use crate::config::AlgorithmKind;
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{Loss, LossKind, Readout, RnnCell};
-use crate::rtrl::Target;
+use crate::rtrl::{GradientEngine, Target};
 use crate::sparse::MaskPattern;
 use crate::train::build_engine;
 use crate::util::Pcg64;

@@ -11,7 +11,7 @@
 //! observation; the *memory* still grows with `T`, which is the axis the
 //! paper contrasts.
 
-use super::{supervised_step, Algorithm, StepResult, Target};
+use super::{supervised_step, GradientEngine, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{CellScratch, Loss, Readout, RnnCell};
 
@@ -55,7 +55,7 @@ impl Bptt {
     }
 }
 
-impl Algorithm for Bptt {
+impl GradientEngine for Bptt {
     fn name(&self) -> &'static str {
         "bptt"
     }

@@ -7,7 +7,7 @@
 //! the sparse engines (the skipped work is all zeros); it just pays for the
 //! zeros — which is the comparison the paper draws.
 
-use super::{supervised_step, Algorithm, StepResult, Target};
+use super::{supervised_step, GradientEngine, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{CellScratch, Loss, Readout, RnnCell};
 use crate::tensor::Matrix;
@@ -49,7 +49,7 @@ impl DenseRtrl {
     }
 }
 
-impl Algorithm for DenseRtrl {
+impl GradientEngine for DenseRtrl {
     fn name(&self) -> &'static str {
         "rtrl-dense"
     }

@@ -1,18 +1,33 @@
-//! Gradient algorithms: exact RTRL (dense and sparse), the SnAp
-//! approximations, and BPTT.
+//! Gradient engines: exact RTRL (dense and sparse), the SnAp
+//! approximations, UORO and BPTT.
 //!
-//! All algorithms implement [`Algorithm`] and are interchangeable in the
-//! trainer. The exactness contract (tested in `rust/tests/`):
+//! All engines implement [`GradientEngine`] and are interchangeable in the
+//! trainer, the sweep coordinator and the `bench` subsystem — nothing
+//! outside the [`crate::train::build::build_engine`] factory matches on a
+//! concrete engine type. The exactness contract (tested in `rust/tests/`):
 //!
 //! * [`DenseRtrl`], [`SparseRtrl`] (in all three sparsity modes) and
 //!   [`Bptt`] compute the **same gradient** up to floating-point
 //!   reassociation — the paper's central claim is that sparsity is exploited
 //!   *"without using any approximations"*;
 //! * [`Snap1`]/[`Snap2`] are the Menick et al. (2020) comparison points and
-//!   deliberately approximate.
+//!   deliberately approximate; [`Uoro`] is the stochastic rank-1 baseline.
 //!
-//! Cost accounting: every engine charges its MACs to an [`OpCounter`] phase
-//! so Table 1's analytic factors can be checked against measured counts.
+//! # The `GradientEngine` contract
+//!
+//! Protocol per sequence: [`GradientEngine::begin_sequence`] →
+//! [`GradientEngine::step`] × T → [`GradientEngine::end_sequence`] →
+//! [`GradientEngine::grads`]. Or drive a whole sequence through the provided
+//! [`GradientEngine::run_sequence`].
+//!
+//! **Op-count accounting** is part of the contract, not an optional extra:
+//! every multiply-accumulate an engine performs must be charged to the
+//! [`OpCounter`] passed into `step`/`end_sequence`, attributed to the
+//! matching [`crate::metrics::Phase`], and
+//! [`GradientEngine::state_memory_words`] must report the measured live
+//! state footprint (Table 1's memory column). The `bench` subsystem and the
+//! Table-1 report derive every per-engine cost figure from these counters,
+//! so an engine that under- or over-charges corrupts the paper comparison.
 
 pub mod bptt;
 pub mod column_map;
@@ -26,8 +41,8 @@ pub use bptt::Bptt;
 pub use column_map::ColumnMap;
 pub use dense::DenseRtrl;
 pub use snap::{Snap1, Snap2};
-pub use uoro::Uoro;
 pub use sparse::{SparseRtrl, SparsityMode};
+pub use uoro::Uoro;
 
 use crate::metrics::OpCounter;
 use crate::nn::{Loss, Readout, RnnCell};
@@ -49,7 +64,7 @@ impl Target<'_> {
     }
 }
 
-/// Per-step observation returned by [`Algorithm::step`].
+/// Per-step observation returned by [`GradientEngine::step`].
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepResult {
     /// Instantaneous loss, if a target was given.
@@ -64,14 +79,57 @@ pub struct StepResult {
     pub influence_sparsity: Option<f32>,
 }
 
-/// A gradient algorithm over one sequence at a time.
+/// Aggregated observations over one sequence, produced by
+/// [`GradientEngine::run_sequence`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SequenceSummary {
+    /// Timesteps run.
+    pub steps: usize,
+    /// Steps that carried a target.
+    pub supervised_steps: usize,
+    /// Sum of per-step losses over supervised steps.
+    pub loss_sum: f32,
+    /// Correct class predictions over supervised classification steps.
+    pub correct: usize,
+    /// Σ per-step active units (divide by `steps·n` for α̃).
+    pub active_unit_steps: usize,
+    /// Σ per-step deriv-active units (divide by `steps·n` for β̃).
+    pub deriv_unit_steps: usize,
+}
+
+impl SequenceSummary {
+    /// Fold one step's observation in.
+    pub fn absorb(&mut self, r: &StepResult) {
+        self.steps += 1;
+        self.active_unit_steps += r.active_units;
+        self.deriv_unit_steps += r.deriv_units;
+        if let Some(l) = r.loss {
+            self.supervised_steps += 1;
+            self.loss_sum += l;
+        }
+        if r.correct == Some(true) {
+            self.correct += 1;
+        }
+    }
+
+    /// Mean loss over supervised steps (0 when unsupervised).
+    pub fn mean_loss(&self) -> f32 {
+        self.loss_sum / self.supervised_steps.max(1) as f32
+    }
+}
+
+/// A gradient engine over one sequence at a time.
 ///
 /// Protocol: `begin_sequence` → `step` × T → `end_sequence` → `grads`.
 /// RTRL variants accumulate gradients online during `step`; BPTT materializes
 /// them in `end_sequence`. Readout gradients accumulate into the `Readout`
 /// (scaled by the trainer), recurrent-parameter gradients into `grads()`
 /// (dense layout `R^p`, structurally zero at masked positions).
-pub trait Algorithm {
+///
+/// Every MAC performed must be charged to the step's [`OpCounter`] under the
+/// matching [`crate::metrics::Phase`] — see the module docs for why this is
+/// load-bearing.
+pub trait GradientEngine {
     /// Short name for reports ("rtrl-dense", "snap1", …).
     fn name(&self) -> &'static str;
 
@@ -90,12 +148,7 @@ pub trait Algorithm {
     ) -> StepResult;
 
     /// Finish the sequence (no-op for online methods; backward pass for BPTT).
-    fn end_sequence(
-        &mut self,
-        cell: &RnnCell,
-        readout: &mut Readout,
-        ops: &mut OpCounter,
-    );
+    fn end_sequence(&mut self, cell: &RnnCell, readout: &mut Readout, ops: &mut OpCounter);
 
     /// Accumulated `∂𝓛/∂w` for the last completed sequence (dense `R^p`).
     fn grads(&self) -> &[f32];
@@ -111,10 +164,35 @@ pub trait Algorithm {
     /// turn it on only for logging iterations). Default: ignored.
     fn set_measure_influence(&mut self, _on: bool) {}
 
-    /// Peak memory words this algorithm holds for sequence state (the
+    /// Peak memory words this engine holds for sequence state (the
     /// Table-1 "memory" column): influence matrices for RTRL, stored history
     /// for BPTT. Measured, not analytic.
     fn state_memory_words(&self) -> usize;
+
+    /// Drive one whole supervised sequence through the engine
+    /// (`begin_sequence` → `step` × T → `end_sequence`), charging every op
+    /// to `ops`. `targets` may be shorter than `inputs`; missing entries are
+    /// [`Target::None`]. This is how the bench subsystem and the trait-level
+    /// tests run engines, so it must stay equivalent to the manual protocol.
+    fn run_sequence(
+        &mut self,
+        cell: &RnnCell,
+        readout: &mut Readout,
+        loss: &mut Loss,
+        inputs: &[Vec<f32>],
+        targets: &[Target<'_>],
+        ops: &mut OpCounter,
+    ) -> SequenceSummary {
+        self.begin_sequence();
+        let mut summary = SequenceSummary::default();
+        for (t, x) in inputs.iter().enumerate() {
+            let target = targets.get(t).copied().unwrap_or(Target::None);
+            let r = self.step(cell, readout, loss, x, target, ops);
+            summary.absorb(&r);
+        }
+        self.end_sequence(cell, readout, ops);
+        summary
+    }
 }
 
 /// Shared helper: run readout + loss + credit assignment for a supervised
@@ -144,5 +222,71 @@ pub(crate) fn supervised_step(
             readout.backward(a, dlogits, c_bar, ops);
             (Some(l), None)
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LossKind;
+    use crate::util::Pcg64;
+
+    /// `run_sequence` must be behaviourally identical to the manual
+    /// begin/step/end protocol.
+    #[test]
+    fn run_sequence_matches_manual_protocol() {
+        let mut rng = Pcg64::new(81);
+        let cell = RnnCell::egru(6, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let inputs: Vec<Vec<f32>> = (0..5)
+            .map(|t| vec![(t as f32 * 0.7).sin(), (t as f32 * 0.4).cos()])
+            .collect();
+        let targets = [Target::None, Target::None, Target::Class(1), Target::None, Target::Class(0)];
+
+        let mut r1 = Pcg64::new(9);
+        let mut readout = Readout::new(2, 6, &mut r1);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops = OpCounter::new();
+        let mut eng = DenseRtrl::new(&cell, 2);
+        let summary = eng.run_sequence(&cell, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+        let g_auto = eng.grads().to_vec();
+
+        let mut r2 = Pcg64::new(9);
+        let mut readout2 = Readout::new(2, 6, &mut r2);
+        let mut loss2 = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops2 = OpCounter::new();
+        let mut eng2 = DenseRtrl::new(&cell, 2);
+        eng2.begin_sequence();
+        let mut loss_sum = 0.0;
+        for (t, x) in inputs.iter().enumerate() {
+            let r = eng2.step(&cell, &mut readout2, &mut loss2, x, targets[t], &mut ops2);
+            if let Some(l) = r.loss {
+                loss_sum += l;
+            }
+        }
+        eng2.end_sequence(&cell, &mut readout2, &mut ops2);
+
+        assert_eq!(summary.steps, 5);
+        assert_eq!(summary.supervised_steps, 2);
+        assert!((summary.loss_sum - loss_sum).abs() < 1e-6);
+        assert_eq!(g_auto, eng2.grads());
+        assert_eq!(ops.total_macs(), ops2.total_macs());
+    }
+
+    #[test]
+    fn summary_absorbs_steps() {
+        let mut s = SequenceSummary::default();
+        s.absorb(&StepResult {
+            loss: Some(0.5),
+            correct: Some(true),
+            active_units: 3,
+            deriv_units: 2,
+            influence_sparsity: None,
+        });
+        s.absorb(&StepResult::default());
+        assert_eq!(s.steps, 2);
+        assert_eq!(s.supervised_steps, 1);
+        assert_eq!(s.correct, 1);
+        assert_eq!(s.active_unit_steps, 3);
+        assert!((s.mean_loss() - 0.5).abs() < 1e-7);
     }
 }

@@ -16,7 +16,7 @@
 //! influence terms outside the pattern (approximate), while activity/
 //! parameter sparsity skips only *structural zeros* (exact).
 
-use super::{supervised_step, Algorithm, StepResult, Target};
+use super::{supervised_step, GradientEngine, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{CellScratch, Loss, Readout, RnnCell};
 
@@ -84,7 +84,7 @@ impl Snap1 {
     }
 }
 
-impl Algorithm for Snap1 {
+impl GradientEngine for Snap1 {
     fn name(&self) -> &'static str {
         "snap1"
     }
@@ -225,7 +225,7 @@ impl Snap2 {
     }
 }
 
-impl Algorithm for Snap2 {
+impl GradientEngine for Snap2 {
     fn name(&self) -> &'static str {
         "snap2"
     }
@@ -397,7 +397,7 @@ mod tests {
         let mut readout = Readout::new(2, 6, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
         let mut ops = OpCounter::new();
-        for alg in [&mut Snap1::new(&cell, 2) as &mut dyn Algorithm, &mut Snap2::new(&cell, 2)] {
+        for alg in [&mut Snap1::new(&cell, 2) as &mut dyn GradientEngine, &mut Snap2::new(&cell, 2)] {
             alg.begin_sequence();
             for t in 0..5 {
                 let x = [(t as f32).sin(), 0.3];

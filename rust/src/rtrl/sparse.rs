@@ -15,7 +15,7 @@
 
 use super::column_map::ColumnMap;
 use super::influence::InfluenceBuffers;
-use super::{supervised_step, Algorithm, StepResult, Target};
+use super::{supervised_step, GradientEngine, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{CellScratch, Loss, Readout, RnnCell};
 
@@ -102,7 +102,7 @@ impl SparseRtrl {
     }
 }
 
-impl Algorithm for SparseRtrl {
+impl GradientEngine for SparseRtrl {
     fn name(&self) -> &'static str {
         match self.mode {
             SparsityMode::Activity => "rtrl-activity",

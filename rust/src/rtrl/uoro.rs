@@ -16,7 +16,7 @@
 //! RTRL does not pay. This is the contrast the paper draws: its savings are
 //! free of both bias (SnAp) and variance (UORO).
 
-use super::{supervised_step, Algorithm, StepResult, Target};
+use super::{supervised_step, GradientEngine, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{CellScratch, Loss, Readout, RnnCell};
 use crate::util::Pcg64;
@@ -58,7 +58,7 @@ impl Uoro {
     }
 }
 
-impl Algorithm for Uoro {
+impl GradientEngine for Uoro {
     fn name(&self) -> &'static str {
         "uoro"
     }
@@ -263,7 +263,7 @@ mod tests {
         let cell = RnnCell::egru(16, 2, 0.1, 0.3, 0.5, None, &mut rng);
         let mut readout = Readout::new(2, 16, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-        let mut run = |eng: &mut dyn Algorithm| {
+        let mut run = |eng: &mut dyn GradientEngine| {
             let mut ops = OpCounter::new();
             eng.begin_sequence();
             let mut xr = Pcg64::new(5);

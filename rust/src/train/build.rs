@@ -3,7 +3,7 @@
 use crate::config::{AlgorithmKind, CellKind, ExperimentConfig, TaskKind};
 use crate::data::{copy_task, delayed_xor, spiral, Dataset};
 use crate::nn::RnnCell;
-use crate::rtrl::{Algorithm, Bptt, DenseRtrl, Snap1, Snap2, SparseRtrl, SparsityMode, Uoro};
+use crate::rtrl::{Bptt, DenseRtrl, GradientEngine, Snap1, Snap2, SparseRtrl, SparsityMode, Uoro};
 use crate::sparse::MaskPattern;
 use crate::util::Pcg64;
 
@@ -42,7 +42,7 @@ pub fn task_n_out(_cfg: &ExperimentConfig) -> usize {
 }
 
 /// Build the gradient engine for a cell.
-pub fn build_engine(kind: AlgorithmKind, cell: &RnnCell, n_out: usize) -> Box<dyn Algorithm> {
+pub fn build_engine(kind: AlgorithmKind, cell: &RnnCell, n_out: usize) -> Box<dyn GradientEngine> {
     match kind {
         AlgorithmKind::RtrlDense => Box::new(DenseRtrl::new(cell, n_out)),
         AlgorithmKind::RtrlActivity => Box::new(SparseRtrl::new(cell, n_out, SparsityMode::Activity)),

@@ -7,7 +7,7 @@ use crate::metrics::curve::{Curve, CurvePoint};
 use crate::metrics::{ComputeAdjusted, OpCounter, Phase, SparsityStats};
 use crate::nn::{CellScratch, Loss, LossKind, Readout, RnnCell};
 use crate::optim::{Adam, Optimizer};
-use crate::rtrl::Algorithm;
+use crate::rtrl::GradientEngine;
 use crate::train::build;
 use crate::util::Pcg64;
 
@@ -28,7 +28,7 @@ pub struct Trainer {
     pub cell: RnnCell,
     pub readout: Readout,
     pub loss: Loss,
-    pub engine: Box<dyn Algorithm>,
+    pub engine: Box<dyn GradientEngine>,
     opt_cell: Adam,
     opt_readout: Adam,
     grad_accum: Vec<f32>,

@@ -78,6 +78,42 @@ mod tests {
     }
 
     #[test]
+    fn zero_workers_clamps_to_one() {
+        let out = run_parallel(vec![1, 2, 3], 0, |i, x| x + i as i32);
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn zero_jobs_zero_workers() {
+        let out: Vec<u8> = run_parallel(Vec::new(), 0, |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn order_preserved_under_uneven_durations() {
+        let jobs: Vec<u64> = (0..24).collect();
+        let out = run_parallel(jobs, 6, |i, x| {
+            // early jobs sleep longest so completion order inverts
+            std::thread::sleep(std::time::Duration::from_millis((24 - i as u64) % 7));
+            x * 10
+        });
+        assert_eq!(out, (0..24).map(|x| x * 10).collect::<Vec<_>>());
+    }
+
+    /// A panicking job must fail the whole call (scoped threads propagate),
+    /// not silently drop its slot.
+    #[test]
+    #[should_panic]
+    fn propagates_worker_panics() {
+        run_parallel(vec![1, 2, 3], 2, |_, x| {
+            if x == 2 {
+                panic!("job failure");
+            }
+            x
+        });
+    }
+
+    #[test]
     fn actually_parallel() {
         use std::sync::atomic::AtomicUsize;
         static PEAK: AtomicUsize = AtomicUsize::new(0);

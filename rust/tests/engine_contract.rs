@@ -1,0 +1,174 @@
+//! Trait-level contract tests for [`GradientEngine`]: every engine is
+//! driven exclusively through `Box<dyn GradientEngine>` and the provided
+//! `run_sequence`, exactly the way the trainer, sweep and bench subsystem
+//! consume engines.
+//!
+//! Exactness: the engines that claim exactness (dense RTRL, the three
+//! sparse modes, BPTT — plus SnAp-2 on a dense cell and SnAp-1 at n=1,
+//! where their patterns are complete) must reproduce the dense-RTRL
+//! gradient on the same tiny network bit-for-bit up to FP reassociation.
+//! UORO, the stochastic engine, must match in expectation.
+
+use sparse_rtrl::config::AlgorithmKind;
+use sparse_rtrl::metrics::OpCounter;
+use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::rtrl::{GradientEngine, Target, Uoro};
+use sparse_rtrl::sparse::MaskPattern;
+use sparse_rtrl::train::build_engine;
+use sparse_rtrl::util::Pcg64;
+
+/// A fixed supervised sequence (mid-sequence and final targets).
+fn sequence(n_in: usize, len: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<Target<'static>>) {
+    let mut rng = Pcg64::new(seed);
+    let inputs: Vec<Vec<f32>> = (0..len)
+        .map(|_| (0..n_in).map(|_| rng.normal()).collect())
+        .collect();
+    let targets: Vec<Target<'static>> = (0..len)
+        .map(|t| {
+            if t == len / 2 || t + 1 == len {
+                Target::Class(t % 2)
+            } else {
+                Target::None
+            }
+        })
+        .collect();
+    (inputs, targets)
+}
+
+/// Run one engine over the shared sequence entirely through the trait.
+fn grads_via_trait(mut engine: Box<dyn GradientEngine>, cell: &RnnCell, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut readout = Readout::new(2, cell.n(), &mut rng);
+    let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+    let mut ops = OpCounter::new();
+    let (inputs, targets) = sequence(cell.n_in(), 9, 77);
+    let summary = engine.run_sequence(cell, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+    assert_eq!(summary.steps, 9, "{}: wrong step count", engine.name());
+    assert_eq!(summary.supervised_steps, 2, "{}: wrong supervised count", engine.name());
+    assert!(ops.total_macs() > 0, "{}: no ops charged", engine.name());
+    engine.grads().to_vec()
+}
+
+fn assert_grads_match(reference: &[f32], got: &[f32], what: &str) {
+    assert_eq!(reference.len(), got.len(), "{what}: length");
+    for (i, (a, b)) in reference.iter().zip(got).enumerate() {
+        let tol = 3e-4 * (1.0 + a.abs().max(b.abs()));
+        assert!(
+            (a - b).abs() <= tol,
+            "{what}: grad[{i}] diverges: dense {a} vs {b}"
+        );
+    }
+}
+
+/// Exact engines equal dense RTRL on a dense tiny EGRU.
+#[test]
+fn exact_engines_match_dense_rtrl() {
+    let mut rng = Pcg64::new(31);
+    let cell = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, None, &mut rng);
+    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &cell, 2), &cell, 5);
+    assert!(
+        reference.iter().any(|&g| g != 0.0),
+        "degenerate reference gradient — retune the test cell"
+    );
+    for kind in [
+        AlgorithmKind::RtrlActivity,
+        AlgorithmKind::RtrlParam,
+        AlgorithmKind::RtrlBoth,
+        AlgorithmKind::Bptt,
+        // SnAp-2's two-hop pattern is complete on a dense cell.
+        AlgorithmKind::Snap2,
+    ] {
+        let g = grads_via_trait(build_engine(kind, &cell, 2), &cell, 5);
+        assert_grads_match(&reference, &g, kind.name());
+    }
+}
+
+/// Same, on a parameter-sparse cell (SnAp-2 excluded: its pattern is
+/// genuinely approximate under a mask).
+#[test]
+fn exact_engines_match_dense_rtrl_under_mask() {
+    let mut rng = Pcg64::new(32);
+    let mask = MaskPattern::random(6, 6, 0.4, &mut rng);
+    let cell = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, Some(mask), &mut rng);
+    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &cell, 2), &cell, 6);
+    for kind in [
+        AlgorithmKind::RtrlActivity,
+        AlgorithmKind::RtrlParam,
+        AlgorithmKind::RtrlBoth,
+        AlgorithmKind::Bptt,
+    ] {
+        let g = grads_via_trait(build_engine(kind, &cell, 2), &cell, 6);
+        assert_grads_match(&reference, &g, kind.name());
+    }
+}
+
+/// At n=1 SnAp-1's fan-in pattern covers every parameter and the diagonal
+/// Jacobian is the whole Jacobian, so it too must be exact.
+#[test]
+fn snap1_exact_on_single_unit_network() {
+    let mut rng = Pcg64::new(33);
+    let cell = RnnCell::egru(1, 2, 0.0, 0.3, 0.9, None, &mut rng);
+    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &cell, 2), &cell, 7);
+    let g = grads_via_trait(build_engine(AlgorithmKind::Snap1, &cell, 2), &cell, 7);
+    assert_grads_match(&reference, &g, "snap1@n=1");
+}
+
+/// UORO is unbiased: its gradient averaged over noise draws aligns with
+/// dense RTRL (cosine similarity), even though single draws differ.
+#[test]
+fn uoro_matches_dense_in_expectation() {
+    let mut rng = Pcg64::new(34);
+    let cell = RnnCell::gated_tanh(4, 2, None, &mut rng);
+    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &cell, 2), &cell, 8);
+    let trials = 1500u64;
+    let mut mean = vec![0.0f64; cell.p()];
+    for trial in 0..trials {
+        let eng: Box<dyn GradientEngine> = Box::new(Uoro::new(&cell, 2, 5000 + trial));
+        let g = grads_via_trait(eng, &cell, 8);
+        for (m, v) in mean.iter_mut().zip(&g) {
+            *m += *v as f64 / trials as f64;
+        }
+    }
+    let dot: f64 = mean.iter().zip(&reference).map(|(m, r)| m * *r as f64).sum();
+    let nm = mean.iter().map(|m| m * m).sum::<f64>().sqrt();
+    let nr = reference.iter().map(|r| (*r as f64).powi(2)).sum::<f64>().sqrt();
+    let cos = dot / (nm * nr + 1e-12);
+    assert!(cos > 0.7, "E[UORO] should align with dense RTRL: cos={cos:.3}");
+}
+
+/// Contract invariants every engine must satisfy, checked uniformly
+/// through the trait: stable name, `R^p` gradient buffer, finite values,
+/// `reset_grads` clearing, measured state memory.
+#[test]
+fn every_engine_satisfies_the_contract() {
+    let mut rng = Pcg64::new(35);
+    let mask = MaskPattern::random(6, 6, 0.5, &mut rng);
+    let cell = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, Some(mask), &mut rng);
+    let (inputs, targets) = sequence(cell.n_in(), 9, 99);
+    for kind in AlgorithmKind::all() {
+        let mut engine = build_engine(kind, &cell, 2);
+        assert_eq!(engine.name(), kind.name(), "factory/name mismatch");
+        let mut rrng = Pcg64::new(1);
+        let mut readout = Readout::new(2, cell.n(), &mut rrng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops = OpCounter::new();
+        engine.run_sequence(&cell, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+        assert_eq!(engine.grads().len(), cell.p(), "{}: grads not R^p", kind.name());
+        assert!(
+            engine.grads().iter().all(|g| g.is_finite()),
+            "{}: non-finite gradient",
+            kind.name()
+        );
+        assert!(
+            engine.state_memory_words() > 0,
+            "{}: zero state memory reported",
+            kind.name()
+        );
+        engine.reset_grads();
+        assert!(
+            engine.grads().iter().all(|&g| g == 0.0),
+            "{}: reset_grads left residue",
+            kind.name()
+        );
+    }
+}

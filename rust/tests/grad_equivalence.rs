@@ -6,7 +6,7 @@
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::OpCounter;
 use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
-use sparse_rtrl::rtrl::Target;
+use sparse_rtrl::rtrl::{GradientEngine, Target};
 use sparse_rtrl::sparse::MaskPattern;
 use sparse_rtrl::train::build_engine;
 use sparse_rtrl::util::Pcg64;

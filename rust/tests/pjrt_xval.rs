@@ -12,6 +12,10 @@ use sparse_rtrl::runtime::{artifacts::names, ArtifactSet, PjrtRuntime};
 use sparse_rtrl::util::Pcg64;
 
 fn artifacts() -> Option<ArtifactSet> {
+    if !PjrtRuntime::available() {
+        eprintln!("skipping PJRT cross-validation: built without the `pjrt` feature");
+        return None;
+    }
     let set = ArtifactSet::default_location();
     if set.has(names::EGRU_STEP) {
         Some(set)

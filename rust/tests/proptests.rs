@@ -7,7 +7,7 @@
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::OpCounter;
 use sparse_rtrl::nn::{Activation, Dynamics, Loss, LossKind, Readout, RnnCell};
-use sparse_rtrl::rtrl::{Algorithm, ColumnMap, Target};
+use sparse_rtrl::rtrl::{ColumnMap, GradientEngine, Target};
 use sparse_rtrl::sparse::{MaskPattern, RowSet};
 use sparse_rtrl::train::build_engine;
 use sparse_rtrl::util::Pcg64;

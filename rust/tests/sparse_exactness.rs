@@ -10,7 +10,7 @@
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::{OpCounter, Phase};
 use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
-use sparse_rtrl::rtrl::{SparseRtrl, SparsityMode, Target};
+use sparse_rtrl::rtrl::{GradientEngine, SparseRtrl, SparsityMode, Target};
 use sparse_rtrl::sparse::MaskPattern;
 use sparse_rtrl::train::build_engine;
 use sparse_rtrl::util::Pcg64;
@@ -150,7 +150,6 @@ fn influence_sparsity_consistent_across_engines() {
     dense.set_measure_influence(true);
     sparse.set_measure_influence(true);
     dense.begin_sequence();
-    use sparse_rtrl::rtrl::Algorithm;
     sparse.begin_sequence();
     let mut rng2 = Pcg64::new(77);
     for _ in 0..6 {
