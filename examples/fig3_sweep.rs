@@ -22,11 +22,11 @@ fn panel(
     val_axis: bool,
 ) -> String {
     let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
-    for (act, omega) in result.arms() {
+    for (act, omega, layers) in result.arms() {
         if act != activity {
             continue;
         }
-        let pts = result.aggregate(act, omega);
+        let pts = result.aggregate(act, omega, layers);
         let data: Vec<(f64, f64)> = pts
             .iter()
             .filter(|p| !val_axis || p.val_accuracy_mean > 0.0)
@@ -52,11 +52,14 @@ fn main() {
     base.train.eval_every = args.get_parse("eval-every", 25u64).expect("eval-every");
     let seeds: usize = args.get_parse("seeds", 5).expect("seeds");
     let workers: usize = args.get_parse("workers", 0).expect("workers");
+    let layers: usize = args.get_parse("layers", 1).expect("layers");
+    assert!(layers >= 1, "--layers must be ≥ 1");
     let out_dir: PathBuf = args.get("out-dir").unwrap_or_else(|| "results".into()).into();
     args.finish().expect("flags");
 
     let mut plan = SweepPlan::fig3(base, seeds);
     plan.max_workers = workers;
+    plan.layers = vec![layers];
     eprintln!(
         "Fig 3 sweep: {} runs ({} iterations each) on {} workers",
         plan.expand().len(),
@@ -77,11 +80,11 @@ fn main() {
     // C: activity sparsity over training
     {
         let mut series = Vec::new();
-        for (act, omega) in result.arms() {
+        for (act, omega, layers) in result.arms() {
             if !act {
                 continue;
             }
-            let pts = result.aggregate(act, omega);
+            let pts = result.aggregate(act, omega, layers);
             series.push((
                 format!("α ω={omega}"),
                 pts.iter().map(|p| (p.iteration as f64, p.alpha_mean as f64)).collect::<Vec<_>>(),
@@ -98,11 +101,11 @@ fn main() {
     // D: influence matrix sparsity
     {
         let mut series = Vec::new();
-        for (act, omega) in result.arms() {
+        for (act, omega, layers) in result.arms() {
             if !act {
                 continue;
             }
-            let pts = result.aggregate(act, omega);
+            let pts = result.aggregate(act, omega, layers);
             series.push((
                 format!("ω={omega}"),
                 pts.iter()
@@ -119,15 +122,15 @@ fn main() {
 
     // Headline check: which arm converges with least total compute?
     println!("\ncompute-to-85%-val-accuracy (compute-adjusted iterations, lower is better):");
-    for (act, omega) in result.arms() {
+    for (act, omega, layers) in result.arms() {
         let runs: Vec<_> = result
             .runs
             .iter()
-            .filter(|r| r.activity == act && (r.omega - omega).abs() < 1e-6)
+            .filter(|r| r.activity == act && (r.omega - omega).abs() < 1e-6 && r.layers == layers)
             .collect();
         let costs: Vec<f64> =
             runs.iter().filter_map(|r| r.curve.compute_to_accuracy(0.85)).collect();
-        let label = format!("{} ω={omega}", if act { "EGRU " } else { "tanh " });
+        let label = format!("{} ω={omega} L={layers}", if act { "EGRU " } else { "tanh " });
         if costs.is_empty() {
             println!("  {label:<16} never reached");
         } else {

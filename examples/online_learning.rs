@@ -13,7 +13,7 @@ use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::data::stream::ParityStream;
 use sparse_rtrl::data::StepTarget;
 use sparse_rtrl::metrics::OpCounter;
-use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
 use sparse_rtrl::optim::{Adam, Optimizer};
 use sparse_rtrl::rtrl::GradientEngine;
 use sparse_rtrl::sparse::MaskPattern;
@@ -26,27 +26,36 @@ fn main() {
     let steps: u64 = args.get_parse("steps", 60_000).expect("steps");
     let window: usize = args.get_parse("window", 3).expect("window");
     let omega: f32 = args.get_parse("omega", 0.5).expect("omega");
+    let layers: usize = args.get_parse("layers", 1).expect("layers");
     let lr: f32 = args.get_parse("lr", 0.003).expect("lr");
     args.finish().expect("flags");
+    assert!(layers >= 1, "--layers must be ≥ 1");
 
     let n = 24;
     let mut rng = Pcg64::new(42);
-    let mask = if omega > 0.0 {
-        Some(MaskPattern::random(n, n, 1.0 - omega, &mut rng))
-    } else {
-        None
-    };
-    let mut cell = RnnCell::egru(n, 1, 0.0, 0.3, 0.6, mask, &mut rng);
-    let mut readout = Readout::new(2, n, &mut rng);
+    let mut cells = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let n_in = if l == 0 { 1 } else { n };
+        let mask = if omega > 0.0 {
+            Some(MaskPattern::random(n, n, 1.0 - omega, &mut rng))
+        } else {
+            None
+        };
+        cells.push(RnnCell::egru(n, n_in, 0.0, 0.3, 0.6, mask, &mut rng));
+    }
+    let mut net = LayerStack::new(cells);
+    let n_total = net.total_units();
+    let mut readout = Readout::new(2, net.top_n(), &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-    let mut engine = build_engine(AlgorithmKind::RtrlBoth, &cell, 2);
-    let mut opt_cell = Adam::new(cell.p(), lr);
+    let mut engine = build_engine(AlgorithmKind::RtrlBoth, &net, 2);
+    let mut opt_cell = Adam::new(net.p(), lr);
     let mut opt_readout = Adam::new(readout.param_len(), lr);
+    let mut cell_params = vec![0.0f32; net.p()];
     let mut ops = OpCounter::new();
 
     let mut stream = ParityStream::new(window, 7);
     println!(
-        "online temporal-parity(window={window}): EGRU n={n}, ω={omega}, RTRL updates every step"
+        "online temporal-parity(window={window}): EGRU n={n}×L{layers}, ω={omega}, RTRL updates every step"
     );
     println!("{:<12}{:>10}{:>12}{:>10}{:>10}{:>16}", "steps", "acc@5k", "loss@5k", "α", "β", "influence MACs");
 
@@ -65,9 +74,9 @@ fn main() {
             StepTarget::Class(c) => sparse_rtrl::rtrl::Target::Class(*c),
             _ => sparse_rtrl::rtrl::Target::None,
         };
-        let r = engine.step(&cell, &mut readout, &mut loss, &x, t, &mut ops);
-        alpha_sum += 1.0 - r.active_units as f64 / n as f64;
-        beta_sum += 1.0 - r.deriv_units as f64 / n as f64;
+        let r = engine.step(&net, &mut readout, &mut loss, &x, t, &mut ops);
+        alpha_sum += 1.0 - r.active_units as f64 / n_total as f64;
+        beta_sum += 1.0 - r.deriv_units as f64 / n_total as f64;
         if let (Some(l), Some(c)) = (r.loss, r.correct) {
             loss_sum += l as f64;
             seen += 1;
@@ -76,9 +85,11 @@ fn main() {
             }
             // online update from the *running* gradient: apply and clear
             // every step (pure online regime, batch size 1, T_grad = 1)
-            engine.end_sequence(&cell, &mut readout, &mut ops);
-            opt_cell.update(cell.params_mut(), engine.grads());
-            cell.enforce_mask();
+            engine.end_sequence(&net, &mut readout, &mut ops);
+            net.copy_params_into(&mut cell_params);
+            opt_cell.update(&mut cell_params, engine.grads());
+            net.load_params(&cell_params);
+            net.enforce_masks();
             readout.copy_params_into(&mut rp);
             readout.copy_grads_into(&mut rg);
             opt_readout.update(&mut rp, &rg);
@@ -106,6 +117,6 @@ fn main() {
     println!(
         "\nstate memory: {} words — constant in stream length (BPTT would need ~{} words of history by now)",
         engine.state_memory_words(),
-        steps as usize * (1 + 9 * n)
+        steps as usize * (1 + 9 * n_total)
     );
 }

@@ -7,32 +7,45 @@ use bench_util::{bench, print_table};
 
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::OpCounter;
-use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
 use sparse_rtrl::rtrl::{GradientEngine, Target};
 use sparse_rtrl::sparse::MaskPattern;
 use sparse_rtrl::train::build_engine;
 use sparse_rtrl::util::Pcg64;
 
 /// One engine step (forward + influence update) at a controlled activity
-/// level, achieved by tuning the threshold.
-fn bench_step(name: &str, kind: AlgorithmKind, theta: f32, n: usize, density: f32) -> bench_util::Sample {
+/// level, achieved by tuning the threshold. `layers` adds depth: every
+/// layer gets the same width and an independent mask at `density`.
+fn bench_step(
+    name: &str,
+    kind: AlgorithmKind,
+    theta: f32,
+    n: usize,
+    layers: usize,
+    density: f32,
+) -> bench_util::Sample {
     let mut rng = Pcg64::new(11);
-    let mask = if density < 1.0 {
-        Some(MaskPattern::random(n, n, density, &mut rng))
-    } else {
-        None
-    };
-    let cell = RnnCell::egru(n, 2, theta, 0.3, 0.4, mask, &mut rng);
+    let mut cells = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let n_in = if l == 0 { 2 } else { n };
+        let mask = if density < 1.0 {
+            Some(MaskPattern::random(n, n, density, &mut rng))
+        } else {
+            None
+        };
+        cells.push(RnnCell::egru(n, n_in, theta, 0.3, 0.4, mask, &mut rng));
+    }
+    let net = LayerStack::new(cells);
     let mut readout = Readout::new(2, n, &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-    let mut eng = build_engine(kind, &cell, 2);
+    let mut eng = build_engine(kind, &net, 2);
     let mut ops = OpCounter::new();
     eng.begin_sequence();
     // advance a few steps so M is populated and activity settles
     let mut xrng = Pcg64::new(5);
     for _ in 0..4 {
         let x = [xrng.normal(), xrng.normal()];
-        eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+        eng.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
     }
     // reset every T=17 steps like real training (an endless recursion decays
     // M toward zero, which does not represent the per-sequence regime)
@@ -43,7 +56,7 @@ fn bench_step(name: &str, kind: AlgorithmKind, theta: f32, n: usize, density: f3
         }
         t += 1;
         let x = [xrng.normal(), xrng.normal()];
-        let r = eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+        let r = eng.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
         bench_util::black_box(r.deriv_units);
     })
 }
@@ -51,12 +64,19 @@ fn bench_step(name: &str, kind: AlgorithmKind, theta: f32, n: usize, density: f3
 fn main() {
     for &n in &[16usize, 32, 64] {
         let mut samples = Vec::new();
-        samples.push(bench_step("dense engine", AlgorithmKind::RtrlDense, 0.1, n, 1.0));
-        samples.push(bench_step("activity (θ=0.1)", AlgorithmKind::RtrlActivity, 0.1, n, 1.0));
-        samples.push(bench_step("activity (θ=0.3, sparser)", AlgorithmKind::RtrlActivity, 0.3, n, 1.0));
-        samples.push(bench_step("param ω̃=0.2", AlgorithmKind::RtrlParam, 0.1, n, 0.2));
-        samples.push(bench_step("both ω̃=0.2 θ=0.1", AlgorithmKind::RtrlBoth, 0.1, n, 0.2));
-        samples.push(bench_step("both ω̃=0.1 θ=0.3", AlgorithmKind::RtrlBoth, 0.3, n, 0.1));
+        samples.push(bench_step("dense engine", AlgorithmKind::RtrlDense, 0.1, n, 1, 1.0));
+        samples.push(bench_step("activity (θ=0.1)", AlgorithmKind::RtrlActivity, 0.1, n, 1, 1.0));
+        samples.push(bench_step("activity (θ=0.3, sparser)", AlgorithmKind::RtrlActivity, 0.3, n, 1, 1.0));
+        samples.push(bench_step("param ω̃=0.2", AlgorithmKind::RtrlParam, 0.1, n, 1, 0.2));
+        samples.push(bench_step("both ω̃=0.2 θ=0.1", AlgorithmKind::RtrlBoth, 0.1, n, 1, 0.2));
+        samples.push(bench_step("both ω̃=0.1 θ=0.3", AlgorithmKind::RtrlBoth, 0.3, n, 1, 0.1));
         print_table(&format!("RTRL influence update, one step, n={n}"), &samples);
+        // depth axis: same width stacked twice — the block recursion's cost
+        let depth = vec![
+            bench_step("L=2 dense engine", AlgorithmKind::RtrlDense, 0.1, n, 2, 1.0),
+            bench_step("L=2 activity (θ=0.1)", AlgorithmKind::RtrlActivity, 0.1, n, 2, 1.0),
+            bench_step("L=2 both ω̃=0.2 θ=0.1", AlgorithmKind::RtrlBoth, 0.1, n, 2, 0.2),
+        ];
+        print_table(&format!("RTRL influence update, one step, n={n}, 2 layers"), &depth);
     }
 }

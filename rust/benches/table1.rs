@@ -11,51 +11,64 @@ use bench_util::{bench, print_table};
 
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::OpCounter;
-use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
 use sparse_rtrl::report::table1::CostParams;
 use sparse_rtrl::rtrl::{GradientEngine, Target};
 use sparse_rtrl::sparse::MaskPattern;
 use sparse_rtrl::train::build_engine;
 use sparse_rtrl::util::Pcg64;
 
-fn bench_method(kind: AlgorithmKind, cell: &RnnCell, t: usize) -> bench_util::Sample {
+fn bench_method(kind: AlgorithmKind, net: &LayerStack, t: usize) -> bench_util::Sample {
     let mut rng = Pcg64::new(1);
-    let mut readout = Readout::new(2, cell.n(), &mut rng);
+    let mut readout = Readout::new(2, net.top_n(), &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-    let mut eng = build_engine(kind, cell, 2);
+    let mut eng = build_engine(kind, net, 2);
     let xs: Vec<[f32; 2]> = (0..t).map(|_| [rng.normal(), rng.normal()]).collect();
     let mut ops = OpCounter::new();
     bench(kind.name(), 30.0, 7, || {
         eng.begin_sequence();
         for (i, x) in xs.iter().enumerate() {
             let target = if i + 1 == t { Target::Class(0) } else { Target::None };
-            eng.step(cell, &mut readout, &mut loss, x, target, &mut ops);
+            eng.step(net, &mut readout, &mut loss, x, target, &mut ops);
         }
-        eng.end_sequence(cell, &mut readout, &mut ops);
+        eng.end_sequence(net, &mut readout, &mut ops);
         bench_util::black_box(eng.grads()[0]);
     })
 }
 
 fn main() {
     let t = 17; // paper's sequence length
-    for &(n, omega) in &[(16usize, 0.0f32), (16, 0.8), (16, 0.9), (32, 0.8), (64, 0.9)] {
+    for &(n, layers, omega) in &[
+        (16usize, 1usize, 0.0f32),
+        (16, 1, 0.8),
+        (16, 1, 0.9),
+        (16, 2, 0.8),
+        (32, 1, 0.8),
+        (64, 1, 0.9),
+    ] {
         let mut rng = Pcg64::new(7);
-        let mask = if omega > 0.0 {
-            Some(MaskPattern::random(n, n, 1.0 - omega, &mut rng))
-        } else {
-            None
-        };
-        let cell = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, mask, &mut rng);
+        let mut cells = Vec::with_capacity(layers);
+        for l in 0..layers {
+            let n_in = if l == 0 { 2 } else { n };
+            let mask = if omega > 0.0 {
+                Some(MaskPattern::random(n, n, 1.0 - omega, &mut rng))
+            } else {
+                None
+            };
+            cells.push(RnnCell::egru(n, n_in, 0.1, 0.3, 0.5, mask, &mut rng));
+        }
+        let net = LayerStack::new(cells);
         // measured sparsity for the analytic columns
-        let (_, _, _, at, bt) =
-            sparse_rtrl::report::table1::measure(AlgorithmKind::RtrlDense, &cell, t, 3);
+        let base = sparse_rtrl::report::table1::measure(AlgorithmKind::RtrlDense, &net, t, 3);
         let params = CostParams {
             n,
-            p: cell.p(),
+            p: net.p(),
+            layer_p: (0..layers).map(|l| net.layer(l).p()).collect(),
             t,
-            omega_tilde: cell.omega_tilde() as f64,
-            alpha_tilde: at,
-            beta_tilde: bt,
+            layers,
+            omega_tilde: net.omega_tilde() as f64,
+            alpha_tilde: base.alpha_tilde,
+            beta_tilde: base.beta_tilde,
         };
         let mut samples = Vec::new();
         for kind in [
@@ -67,11 +80,11 @@ fn main() {
             AlgorithmKind::Snap2,
             AlgorithmKind::Bptt,
         ] {
-            samples.push(bench_method(kind, &cell, t));
+            samples.push(bench_method(kind, &net, t));
         }
         print_table(
             &format!(
-                "Table 1 wallclock: n={n} p={} ω={omega} (ω̃={:.2} α̃={:.2} β̃={:.2}), {t}-step sequence",
+                "Table 1 wallclock: n={n} L={layers} P={} ω={omega} (ω̃={:.2} α̃={:.2} β̃={:.2}), {t}-step sequence",
                 params.p, params.omega_tilde, params.alpha_tilde, params.beta_tilde
             ),
             &samples,

@@ -1,15 +1,23 @@
-//! Minimal JSON emission for the bench report.
+//! JSON emission **and parsing** for the bench report.
 //!
 //! In-tree because the build vendors no serde: the report schema is small,
 //! append-only and versioned, so a hand-rolled writer with an escaping
-//! helper is the whole requirement. The inverse direction (parsing) is
-//! deliberately out of scope — CI consumers read the artifact with real
-//! JSON tooling.
+//! helper plus a ~100-line recursive-descent value parser is the whole
+//! requirement. The parser exists so the serialize→parse round-trip is
+//! testable in-tree and so downstream perf-trajectory tooling has a
+//! reference for dispatching on [`SCHEMA_VERSION`]: v1 reports (single-cell
+//! era) carry no `layers` axis or per-layer counters; v2 reports do.
 
 use super::{phase_name, BenchReport, CaseResult};
+use std::collections::BTreeMap;
 
 /// Schema identifier CI consumers can dispatch on.
-pub const SCHEMA: &str = "sparse-rtrl/bench/v1";
+pub const SCHEMA: &str = "sparse-rtrl/bench/v2";
+/// Monotone schema revision: bump on any breaking field change.
+/// * 1 — single-cell grid (engine × hidden × ω).
+/// * 2 — depth axis: `layers`, `macs_per_step_per_layer`,
+///   `words_per_step_per_layer` per case; `schema_version` at the top.
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Escape a string for a JSON string literal (without the quotes).
 pub fn escape(s: &str) -> String {
@@ -48,6 +56,11 @@ pub fn number32(x: f32) -> String {
     }
 }
 
+fn u64_array(xs: &[u64]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
 fn case_json(r: &CaseResult, indent: &str) -> String {
     let mut phases = String::new();
     for (i, macs) in r.macs_per_step.iter().enumerate() {
@@ -57,14 +70,16 @@ fn case_json(r: &CaseResult, indent: &str) -> String {
         phases.push_str(&format!("\"{}\": {}", escape(phase_name(i)), macs));
     }
     format!(
-        "{indent}{{\"engine\": \"{}\", \"hidden\": {}, \"param_sparsity\": {}, \
+        "{indent}{{\"engine\": \"{}\", \"hidden\": {}, \"layers\": {}, \"param_sparsity\": {}, \
          \"omega_tilde\": {}, \"p\": {}, \"timesteps\": {}, \"sequences\": {}, \
          \"wall_ns\": {}, \"ns_per_step\": {}, \"steps_per_sec\": {}, \
          \"macs_per_step_total\": {}, \"macs_per_step\": {{{}}}, \
+         \"macs_per_step_per_layer\": {}, \"words_per_step_per_layer\": {}, \
          \"words_per_step_total\": {}, \"state_memory_words\": {}, \
          \"alpha_tilde\": {}, \"beta_tilde\": {}}}",
         escape(r.engine),
         r.hidden,
+        r.layers,
         number32(r.param_sparsity),
         number32(r.omega_tilde),
         r.p,
@@ -75,6 +90,8 @@ fn case_json(r: &CaseResult, indent: &str) -> String {
         number(r.steps_per_sec),
         r.macs_per_step_total,
         phases,
+        u64_array(&r.macs_per_step_per_layer),
+        u64_array(&r.words_per_step_per_layer),
         r.words_per_step_total,
         r.state_memory_words,
         number(r.alpha_tilde),
@@ -89,6 +106,7 @@ impl BenchReport {
         let mut s = String::new();
         s.push_str("{\n");
         s.push_str(&format!("  \"schema\": \"{}\",\n", escape(SCHEMA)));
+        s.push_str(&format!("  \"schema_version\": {SCHEMA_VERSION},\n"));
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
         s.push_str(&format!("  \"timesteps\": {},\n", self.timesteps));
         s.push_str(&format!("  \"sequences\": {},\n", self.sequences));
@@ -107,6 +125,208 @@ impl BenchReport {
     }
 }
 
+// ---------------------------------------------------------------------
+// Parsing (reference consumer + round-trip tests)
+// ---------------------------------------------------------------------
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as u64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document (strict enough for the bench schema: objects,
+/// arrays, strings with the escapes [`escape`] emits, numbers, booleans,
+/// null). Returns a byte-offset-annotated error on malformed input.
+pub fn parse(text: &str) -> Result<Json, String> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing content at byte {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut map = BTreeMap::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Json::Str(s) => s,
+                    other => return Err(format!("object key must be a string, got {other:?}")),
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at byte {pos}"));
+                }
+                *pos += 1;
+                let val = parse_value(b, pos)?;
+                map.insert(key, val);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(map));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut arr = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(arr));
+            }
+            loop {
+                arr.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(arr));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'"') => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                match b.get(*pos) {
+                    None => return Err("unterminated string".into()),
+                    Some(b'"') => {
+                        *pos += 1;
+                        return Ok(Json::Str(s));
+                    }
+                    Some(b'\\') => {
+                        *pos += 1;
+                        match b.get(*pos) {
+                            Some(b'"') => s.push('"'),
+                            Some(b'\\') => s.push('\\'),
+                            Some(b'n') => s.push('\n'),
+                            Some(b'r') => s.push('\r'),
+                            Some(b't') => s.push('\t'),
+                            Some(b'u') => {
+                                let hex = b
+                                    .get(*pos + 1..*pos + 5)
+                                    .ok_or("truncated \\u escape")?;
+                                let code = u32::from_str_radix(
+                                    std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
+                                    16,
+                                )
+                                .map_err(|_| "bad \\u escape")?;
+                                s.push(char::from_u32(code).ok_or("invalid \\u codepoint")?);
+                                *pos += 4;
+                            }
+                            other => return Err(format!("bad escape {other:?}")),
+                        }
+                        *pos += 1;
+                    }
+                    Some(_) => {
+                        // advance over one UTF-8 scalar
+                        let start = *pos;
+                        let mut end = start + 1;
+                        while end < b.len() && (b[end] & 0xC0) == 0x80 {
+                            end += 1;
+                        }
+                        s.push_str(
+                            std::str::from_utf8(&b[start..end]).map_err(|_| "invalid UTF-8")?,
+                        );
+                        *pos = end;
+                    }
+                }
+            }
+        }
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && !matches!(b[*pos], b',' | b'}' | b']' | b' ' | b'\t' | b'\n' | b'\r')
+            {
+                *pos += 1;
+            }
+            let tok = std::str::from_utf8(&b[start..*pos]).map_err(|_| "invalid UTF-8")?;
+            match tok {
+                "null" => Ok(Json::Null),
+                "true" => Ok(Json::Bool(true)),
+                "false" => Ok(Json::Bool(false)),
+                _ => tok
+                    .parse::<f64>()
+                    .map(Json::Num)
+                    .map_err(|_| format!("cannot parse token {tok:?} at byte {start}")),
+            }
+        }
+    }
+}
+
+/// Reference consumer: detect the schema revision of a serialized report.
+/// v1 reports predate `schema_version`, so its absence means 1.
+pub fn schema_version_of(doc: &Json) -> u64 {
+    doc.get("schema_version").and_then(Json::as_u64).unwrap_or(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +337,7 @@ mod tests {
         let cfg = BenchConfig {
             engines: vec![AlgorithmKind::RtrlDense, AlgorithmKind::Uoro],
             hidden_sizes: vec![6],
+            layers: vec![1, 2],
             param_sparsities: vec![0.0],
             timesteps: 4,
             sequences: 1,
@@ -140,6 +361,65 @@ mod tests {
         assert_eq!(number(1.5), "1.5");
         assert_eq!(number(f64::NAN), "null");
         assert_eq!(number(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn parser_handles_scalars_arrays_objects() {
+        let doc = parse(r#"{"a": [1, 2.5, null, true], "s": "x\ny", "o": {"k": -3}}"#).unwrap();
+        assert_eq!(doc.get("a").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(doc.get("a").unwrap().as_arr().unwrap()[1].as_f64(), Some(2.5));
+        assert_eq!(doc.get("s").unwrap().as_str(), Some("x\ny"));
+        assert_eq!(doc.get("o").unwrap().get("k").unwrap().as_f64(), Some(-3.0));
+        assert!(parse("{\"unterminated\": ").is_err());
+        assert!(parse("{} trailing").is_err());
+    }
+
+    /// Serialize → parse round-trip: every load-bearing field of the v2
+    /// schema survives, the depth axis is present, and the version is
+    /// detectable — this is the contract downstream perf tooling relies on
+    /// to tell v2 reports from v1 files instead of misreading them.
+    #[test]
+    fn report_round_trips_through_parser() {
+        let report = tiny_report();
+        let doc = parse(&report.to_json()).expect("report must parse");
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(schema_version_of(&doc), SCHEMA_VERSION);
+        assert_eq!(doc.get("timesteps").unwrap().as_u64(), Some(report.timesteps as u64));
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), report.results.len());
+        for (parsed, orig) in results.iter().zip(&report.results) {
+            assert_eq!(parsed.get("engine").unwrap().as_str(), Some(orig.engine));
+            assert_eq!(parsed.get("hidden").unwrap().as_u64(), Some(orig.hidden as u64));
+            assert_eq!(parsed.get("layers").unwrap().as_u64(), Some(orig.layers as u64));
+            assert_eq!(
+                parsed.get("macs_per_step_total").unwrap().as_u64(),
+                Some(orig.macs_per_step_total)
+            );
+            let per_layer: Vec<u64> = parsed
+                .get("macs_per_step_per_layer")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_u64().unwrap())
+                .collect();
+            assert_eq!(per_layer, orig.macs_per_step_per_layer);
+            let words_per_layer = parsed.get("words_per_step_per_layer").unwrap().as_arr().unwrap();
+            assert_eq!(words_per_layer.len(), orig.layers);
+            // per-phase map survives
+            assert!(parsed.get("macs_per_step").unwrap().get("influence_update").is_some());
+        }
+        // the depth axis genuinely varies in the grid
+        let depths: Vec<u64> =
+            results.iter().map(|r| r.get("layers").unwrap().as_u64().unwrap()).collect();
+        assert!(depths.contains(&1) && depths.contains(&2));
+    }
+
+    /// A v1-era document (no `schema_version`) is detected as version 1.
+    #[test]
+    fn v1_documents_detected_as_version_1() {
+        let doc = parse(r#"{"schema": "sparse-rtrl/bench/v1", "results": []}"#).unwrap();
+        assert_eq!(schema_version_of(&doc), 1);
     }
 
     /// Structural validation with an in-test micro JSON checker: balanced
@@ -170,10 +450,13 @@ mod tests {
         assert!(max_depth >= 3, "results objects missing");
         for key in [
             "\"schema\"",
+            "\"schema_version\"",
             "\"results\"",
             "\"engine\"",
+            "\"layers\"",
             "\"ns_per_step\"",
             "\"macs_per_step\"",
+            "\"macs_per_step_per_layer\"",
             "\"influence_update\"",
             "\"state_memory_words\"",
         ] {

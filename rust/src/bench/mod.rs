@@ -1,10 +1,13 @@
 //! The `bench` subsystem: machine-readable performance trajectory.
 //!
-//! Sweeps gradient engine × hidden size × parameter sparsity through the
-//! unified [`crate::rtrl::GradientEngine`] trait, measuring per-step
-//! wall-time alongside the per-phase MAC/word counters from
-//! [`crate::metrics::ops`], and emits a `BENCH_rtrl.json` report that CI
-//! uploads on every PR — the repo's perf record across time.
+//! Sweeps gradient engine × hidden size × depth × parameter sparsity
+//! through the unified [`crate::rtrl::GradientEngine`] trait, measuring
+//! per-step wall-time alongside the per-phase **and per-layer** MAC/word
+//! counters from [`crate::metrics::ops`], and emits a `BENCH_rtrl.json`
+//! report that CI uploads on every PR — the repo's perf record across
+//! time. The report carries `schema_version` (see [`json::SCHEMA_VERSION`])
+//! so downstream perf-trajectory tooling can detect format changes instead
+//! of misreading old files.
 //!
 //! Cases fan out over [`crate::util::pool::run_parallel`]. The default is a
 //! single worker (exclusive timing); raising `workers` trades timing noise
@@ -25,8 +28,10 @@ use crate::util::pool;
 pub struct BenchConfig {
     /// Engines to measure (default: every [`AlgorithmKind`]).
     pub engines: Vec<AlgorithmKind>,
-    /// Hidden sizes n.
+    /// Hidden sizes n (per layer).
     pub hidden_sizes: Vec<usize>,
+    /// Stack depths L ≥ 1.
+    pub layers: Vec<usize>,
     /// Parameter-sparsity levels ω ∈ [0, 1).
     pub param_sparsities: Vec<f32>,
     /// Sequence length T per repetition (paper: 17).
@@ -49,6 +54,7 @@ impl BenchConfig {
         BenchConfig {
             engines: AlgorithmKind::all().to_vec(),
             hidden_sizes: vec![16, 32, 64],
+            layers: vec![1, 2],
             param_sparsities: vec![0.0, 0.5, 0.8, 0.9],
             timesteps: 17,
             sequences: 30,
@@ -65,6 +71,7 @@ impl BenchConfig {
     pub fn quick() -> Self {
         BenchConfig {
             hidden_sizes: vec![16],
+            layers: vec![1],
             param_sparsities: vec![0.0, 0.8],
             sequences: 6,
             warmup_sequences: 1,
@@ -73,24 +80,27 @@ impl BenchConfig {
         }
     }
 
-    /// Expand the grid into concrete cases — size-major, engine varying
-    /// fastest — in a deterministic order so reports diff cleanly between
-    /// runs (`seed` is the positional index).
+    /// Expand the grid into concrete cases — size-major, then depth, then
+    /// sparsity, engine varying fastest — in a deterministic order so
+    /// reports diff cleanly between runs (`seed` is the positional index).
     pub fn expand(&self) -> Vec<BenchCase> {
         let mut cases = Vec::new();
         for &hidden in &self.hidden_sizes {
-            for &omega in &self.param_sparsities {
-                for &engine in &self.engines {
-                    cases.push(BenchCase {
-                        engine,
-                        hidden,
-                        param_sparsity: omega,
-                        timesteps: self.timesteps.max(1),
-                        sequences: self.sequences.max(1),
-                        warmup_sequences: self.warmup_sequences,
-                        theta: self.theta,
-                        seed: cases.len() as u64,
-                    });
+            for &layers in &self.layers {
+                for &omega in &self.param_sparsities {
+                    for &engine in &self.engines {
+                        cases.push(BenchCase {
+                            engine,
+                            hidden,
+                            layers: layers.max(1),
+                            param_sparsity: omega,
+                            timesteps: self.timesteps.max(1),
+                            sequences: self.sequences.max(1),
+                            warmup_sequences: self.warmup_sequences,
+                            theta: self.theta,
+                            seed: cases.len() as u64,
+                        });
+                    }
                 }
             }
         }
@@ -98,11 +108,13 @@ impl BenchConfig {
     }
 }
 
-/// One (engine, n, ω) measurement unit.
+/// One (engine, n, L, ω) measurement unit.
 #[derive(Debug, Clone)]
 pub struct BenchCase {
     pub engine: AlgorithmKind,
     pub hidden: usize,
+    /// Stack depth.
+    pub layers: usize,
     pub param_sparsity: f32,
     pub timesteps: usize,
     pub sequences: usize,
@@ -117,9 +129,11 @@ pub struct BenchCase {
 pub struct CaseResult {
     pub engine: &'static str,
     pub hidden: usize,
+    /// Stack depth of the bench network.
+    pub layers: usize,
     pub param_sparsity: f32,
     pub omega_tilde: f32,
-    /// Flat parameter count p of the bench cell.
+    /// Flat parameter count P of the bench stack.
     pub p: usize,
     pub timesteps: usize,
     pub sequences: usize,
@@ -131,6 +145,10 @@ pub struct CaseResult {
     pub macs_per_step: [u64; crate::metrics::ops::NUM_PHASES],
     pub macs_per_step_total: u64,
     pub words_per_step_total: u64,
+    /// Per-layer MACs per step (layer-attributable charges only).
+    pub macs_per_step_per_layer: Vec<u64>,
+    /// Per-layer words per step.
+    pub words_per_step_per_layer: Vec<u64>,
     /// Live state footprint (Table-1 memory column).
     pub state_memory_words: usize,
     /// Measured mean active-unit fraction α̃.
@@ -156,14 +174,15 @@ impl BenchReport {
     pub fn summary_table(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "{:<14}{:>6}{:>7}{:>14}{:>14}{:>16}{:>12}\n",
-            "engine", "n", "ω", "ns/step", "steps/s", "MACs/step", "mem words"
+            "{:<14}{:>6}{:>4}{:>7}{:>14}{:>14}{:>16}{:>12}\n",
+            "engine", "n", "L", "ω", "ns/step", "steps/s", "MACs/step", "mem words"
         ));
         for r in &self.results {
             s.push_str(&format!(
-                "{:<14}{:>6}{:>7.2}{:>14.1}{:>14.0}{:>16}{:>12}\n",
+                "{:<14}{:>6}{:>4}{:>7.2}{:>14.1}{:>14.0}{:>16}{:>12}\n",
                 r.engine,
                 r.hidden,
+                r.layers,
                 r.param_sparsity,
                 r.ns_per_step,
                 r.steps_per_sec,
@@ -222,6 +241,7 @@ mod tests {
         BenchConfig {
             engines: vec![AlgorithmKind::RtrlDense, AlgorithmKind::RtrlBoth],
             hidden_sizes: vec![6],
+            layers: vec![1, 2],
             param_sparsities: vec![0.0, 0.5],
             timesteps: 5,
             sequences: 2,
@@ -236,21 +256,23 @@ mod tests {
     fn expand_covers_grid_in_order() {
         let cfg = tiny_cfg();
         let cases = cfg.expand();
-        assert_eq!(cases.len(), 2 * 2);
+        assert_eq!(cases.len(), 2 * 2 * 2);
         assert_eq!(cases[0].engine, AlgorithmKind::RtrlDense);
         assert_eq!(cases[1].engine, AlgorithmKind::RtrlBoth);
+        assert_eq!(cases[0].layers, 1);
         assert!((cases[2].param_sparsity - 0.5).abs() < 1e-6);
+        assert_eq!(cases[4].layers, 2, "depth axis follows size");
         // seeds are distinct per case
         let mut seeds: Vec<u64> = cases.iter().map(|c| c.seed).collect();
         seeds.dedup();
-        assert_eq!(seeds.len(), 4);
+        assert_eq!(seeds.len(), 8);
     }
 
     #[test]
     fn run_produces_complete_results() {
         let cfg = tiny_cfg();
         let report = run(&cfg, false);
-        assert_eq!(report.results.len(), 4);
+        assert_eq!(report.results.len(), 8);
         for r in &report.results {
             assert!(r.wall_ns > 0, "{}: no time measured", r.engine);
             assert!(r.macs_per_step_total > 0, "{}: no MACs charged", r.engine);
@@ -258,6 +280,8 @@ mod tests {
             assert!(r.ns_per_step.is_finite());
             assert!((0.0..=1.0).contains(&r.alpha_tilde));
             assert!((0.0..=1.0).contains(&r.beta_tilde));
+            assert_eq!(r.macs_per_step_per_layer.len(), r.layers);
+            assert_eq!(r.words_per_step_per_layer.len(), r.layers);
         }
         // sparse-exact engine at ω=0.5 must charge fewer MACs than dense at
         // the same size — the paper's point, visible in the bench report
@@ -285,5 +309,37 @@ mod tests {
         let table = report.summary_table();
         assert!(table.contains("rtrl-dense"));
         assert!(table.contains("rtrl-both"));
+    }
+
+    /// Acceptance check for the block structure: at depth 2 the sparse
+    /// engine's layer-0 counters stay bounded by its own narrow panel —
+    /// the cross-layer zero blocks (layer 0 rows × layer 1 columns) are
+    /// never charged — while the dense baseline charges layer 0 at the
+    /// full P width.
+    #[test]
+    fn depth2_per_layer_counters_expose_uncharged_zero_blocks() {
+        let report = run(&tiny_cfg(), false);
+        let both = report
+            .results
+            .iter()
+            .find(|r| r.engine == "rtrl-both" && r.layers == 2 && r.param_sparsity == 0.0)
+            .unwrap();
+        let dense = report
+            .results
+            .iter()
+            .find(|r| r.engine == "rtrl-dense" && r.layers == 2 && r.param_sparsity == 0.0)
+            .unwrap();
+        // layer 0's panel tracks only its own p0 columns; layer 1 tracks
+        // p0 + p1 — visible directly in the per-layer counters
+        assert!(
+            both.macs_per_step_per_layer[0] < both.macs_per_step_per_layer[1],
+            "layer 0 ({}) should be cheaper than layer 1 ({})",
+            both.macs_per_step_per_layer[0],
+            both.macs_per_step_per_layer[1]
+        );
+        // dense pays ≥ the sparse engine in every layer
+        for l in 0..2 {
+            assert!(dense.macs_per_step_per_layer[l] >= both.macs_per_step_per_layer[l]);
+        }
     }
 }

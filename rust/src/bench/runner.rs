@@ -1,18 +1,18 @@
-//! Single-case measurement: build cell + engine, drive warm-up and timed
+//! Single-case measurement: build stack + engine, drive warm-up and timed
 //! sequences through the [`GradientEngine`] trait, read wall-clock and the
-//! per-phase op counters.
+//! per-phase / per-layer op counters.
 
 use super::{BenchCase, CaseResult};
 use crate::metrics::ops::NUM_PHASES;
 use crate::metrics::{OpCounter, Phase};
-use crate::nn::{Loss, LossKind, Readout, RnnCell};
+use crate::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
 use crate::rtrl::{GradientEngine, Target};
 use crate::sparse::MaskPattern;
 use crate::train::build_engine;
 use crate::util::Pcg64;
 use std::time::Instant;
 
-/// Input dimensionality of the bench cell (the paper's spiral task shape).
+/// Input dimensionality of the bench network (the paper's spiral task shape).
 const BENCH_N_IN: usize = 2;
 /// Output classes of the bench readout.
 const BENCH_N_OUT: usize = 2;
@@ -20,21 +20,26 @@ const BENCH_N_OUT: usize = 2;
 const BENCH_GAMMA: f32 = 0.3;
 const BENCH_EPS: f32 = 0.2;
 
-/// Measure one case. Deterministic for a given `BenchCase` (weights, mask
+/// Measure one case. Deterministic for a given `BenchCase` (weights, masks
 /// and the input stream all derive from `case.seed`); wall-time obviously
 /// varies with the host.
 pub fn run_case(case: &BenchCase) -> CaseResult {
     let n = case.hidden;
     let mut rng = Pcg64::new(0xbe2c_0001 ^ (case.seed.wrapping_mul(0x9e37_79b9)));
-    let mask = if case.param_sparsity > 0.0 {
-        Some(MaskPattern::random(n, n, 1.0 - case.param_sparsity, &mut rng))
-    } else {
-        None
-    };
-    let cell = RnnCell::egru(n, BENCH_N_IN, case.theta, BENCH_GAMMA, BENCH_EPS, mask, &mut rng);
-    let mut readout = Readout::new(BENCH_N_OUT, n, &mut rng);
+    let mut cells = Vec::with_capacity(case.layers);
+    for l in 0..case.layers {
+        let n_in = if l == 0 { BENCH_N_IN } else { n };
+        let mask = if case.param_sparsity > 0.0 {
+            Some(MaskPattern::random(n, n, 1.0 - case.param_sparsity, &mut rng))
+        } else {
+            None
+        };
+        cells.push(RnnCell::egru(n, n_in, case.theta, BENCH_GAMMA, BENCH_EPS, mask, &mut rng));
+    }
+    let net = LayerStack::new(cells);
+    let mut readout = Readout::new(BENCH_N_OUT, net.top_n(), &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, BENCH_N_OUT);
-    let mut engine = build_engine(case.engine, &cell, BENCH_N_OUT);
+    let mut engine = build_engine(case.engine, &net, BENCH_N_OUT);
 
     // Fixed input stream; one class target at the end of each sequence so
     // the gradient-combine phase is exercised like real training.
@@ -47,7 +52,7 @@ pub fn run_case(case: &BenchCase) -> CaseResult {
 
     let mut ops = OpCounter::new();
     for _ in 0..case.warmup_sequences {
-        engine.run_sequence(&cell, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+        engine.run_sequence(&net, &mut readout, &mut loss, &inputs, &targets, &mut ops);
     }
     readout.zero_grads();
 
@@ -57,7 +62,7 @@ pub fn run_case(case: &BenchCase) -> CaseResult {
     let t0 = Instant::now();
     for _ in 0..case.sequences {
         let summary =
-            engine.run_sequence(&cell, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+            engine.run_sequence(&net, &mut readout, &mut loss, &inputs, &targets, &mut ops);
         active_unit_steps += summary.active_unit_steps;
         deriv_unit_steps += summary.deriv_unit_steps;
         std::hint::black_box(engine.grads()[0]);
@@ -66,18 +71,23 @@ pub fn run_case(case: &BenchCase) -> CaseResult {
     let delta = ops.since(&before);
 
     let steps = (case.sequences * case.timesteps) as u64;
-    let unit_steps = (steps as usize * n) as f64;
+    let unit_steps = (steps as usize * net.total_units()) as f64;
     let mut macs_per_step = [0u64; NUM_PHASES];
     for ph in Phase::all() {
         macs_per_step[ph.index()] = delta.macs_in(ph) / steps;
     }
+    let macs_per_step_per_layer: Vec<u64> =
+        (0..case.layers).map(|l| delta.layer_total_macs(l) / steps).collect();
+    let words_per_step_per_layer: Vec<u64> =
+        (0..case.layers).map(|l| delta.layer_total_words(l) / steps).collect();
     let ns_per_step = wall_ns as f64 / steps as f64;
     CaseResult {
         engine: case.engine.name(),
         hidden: n,
+        layers: case.layers,
         param_sparsity: case.param_sparsity,
-        omega_tilde: cell.omega_tilde(),
-        p: cell.p(),
+        omega_tilde: net.omega_tilde(),
+        p: net.p(),
         timesteps: case.timesteps,
         sequences: case.sequences,
         wall_ns,
@@ -86,6 +96,8 @@ pub fn run_case(case: &BenchCase) -> CaseResult {
         macs_per_step,
         macs_per_step_total: delta.total_macs() / steps,
         words_per_step_total: delta.total_words() / steps,
+        macs_per_step_per_layer,
+        words_per_step_per_layer,
         state_memory_words: engine.state_memory_words(),
         alpha_tilde: active_unit_steps as f64 / unit_steps,
         beta_tilde: deriv_unit_steps as f64 / unit_steps,
@@ -101,6 +113,7 @@ mod tests {
         BenchCase {
             engine,
             hidden: 8,
+            layers: 1,
             param_sparsity: omega,
             timesteps: 6,
             sequences: 2,
@@ -140,5 +153,18 @@ mod tests {
             dense.macs_per_step_total
         );
         assert!(sparse.omega_tilde < 0.5);
+    }
+
+    #[test]
+    fn depth2_case_measures_every_engine() {
+        for kind in AlgorithmKind::all() {
+            let mut c = case(kind, 0.5);
+            c.layers = 2;
+            let r = run_case(&c);
+            assert_eq!(r.layers, 2);
+            assert_eq!(r.macs_per_step_per_layer.len(), 2);
+            assert!(r.p > run_case(&case(kind, 0.5)).p, "depth should add params");
+            assert!(r.macs_per_step_per_layer.iter().sum::<u64>() > 0);
+        }
     }
 }

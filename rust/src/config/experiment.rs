@@ -100,16 +100,19 @@ impl AlgorithmKind {
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
     pub cell: CellKind,
-    /// Hidden units n (paper: 16).
+    /// Hidden units n per layer (paper: 16).
     pub hidden: usize,
+    /// Stacked recurrent layers L ≥ 1 (layer l reads layer l−1's new
+    /// activations; depth 1 is the paper's single-cell configuration).
+    pub layers: usize,
     /// Threshold ϑ (event cells).
     pub theta: f32,
     /// Pseudo-derivative height γ.
     pub gamma: f32,
     /// Pseudo-derivative support half-width ε.
     pub eps: f32,
-    /// Parameter sparsity ω ∈ [0,1) (fraction of recurrent weights dropped;
-    /// ω̃ = 1−ω kept). 0 = dense.
+    /// Parameter sparsity ω ∈ [0,1) (fraction of recurrent weights dropped
+    /// in every layer; ω̃ = 1−ω kept). 0 = dense.
     pub param_sparsity: f32,
 }
 
@@ -118,6 +121,7 @@ impl Default for ModelConfig {
         ModelConfig {
             cell: CellKind::Egru,
             hidden: 16,
+            layers: 1,
             theta: 0.1,
             gamma: 0.3,
             // ε = 0.2 gives β ≈ 0.5–0.6 backward sparsity on the spiral task,
@@ -267,6 +271,7 @@ impl ExperimentConfig {
             cfg.model.cell = CellKind::from_name(s).ok_or_else(|| format!("unknown cell {s:?}"))?;
         }
         read_opt!(doc, "model", "hidden", as_i64, &mut cfg.model.hidden);
+        read_opt!(doc, "model", "layers", as_i64, &mut cfg.model.layers);
         read_f32(&doc, "model", "theta", &mut cfg.model.theta)?;
         read_f32(&doc, "model", "gamma", &mut cfg.model.gamma)?;
         read_f32(&doc, "model", "eps", &mut cfg.model.eps)?;
@@ -296,17 +301,23 @@ impl ExperimentConfig {
         if !(0.0..1.0).contains(&cfg.model.param_sparsity) {
             return Err("model:param_sparsity must be in [0,1)".into());
         }
+        // An explicit `layers = 0` is a configuration error, not a value to
+        // silently clamp: a zero-layer network has no state to train.
+        if cfg.model.layers == 0 {
+            return Err("model:layers must be ≥ 1 (a zero-depth stack has no recurrent state); omit the key for the single-layer default".into());
+        }
         Ok(cfg)
     }
 
     /// Serialize to TOML text (full round-trip of every field).
     pub fn to_toml(&self) -> String {
         format!(
-            "name = {}\nseed = {}\n\n[model]\ncell = {}\nhidden = {}\ntheta = {}\ngamma = {}\neps = {}\nparam_sparsity = {}\n\n[task]\ntask = {}\nnum_sequences = {}\ntimesteps = {}\nval_fraction = {}\n\n[train]\nalgorithm = {}\niterations = {}\nbatch_size = {}\nlr = {}\nlog_every = {}\neval_every = {}\neval_sequences = {}\nrewire_every = {}\nrewire_fraction = {}\n",
+            "name = {}\nseed = {}\n\n[model]\ncell = {}\nhidden = {}\nlayers = {}\ntheta = {}\ngamma = {}\neps = {}\nparam_sparsity = {}\n\n[task]\ntask = {}\nnum_sequences = {}\ntimesteps = {}\nval_fraction = {}\n\n[train]\nalgorithm = {}\niterations = {}\nbatch_size = {}\nlr = {}\nlog_every = {}\neval_every = {}\neval_sequences = {}\nrewire_every = {}\nrewire_fraction = {}\n",
             escape(&self.name),
             self.seed,
             escape(self.model.cell.name()),
             self.model.hidden,
+            self.model.layers,
             fmt_f32(self.model.theta),
             fmt_f32(self.model.gamma),
             fmt_f32(self.model.eps),
@@ -395,6 +406,45 @@ mod tests {
         assert!(ExperimentConfig::from_toml("[model]\ncell = \"nope\"").is_err());
         assert!(ExperimentConfig::from_toml("[model]\nparam_sparsity = 1.5").is_err());
         assert!(ExperimentConfig::from_toml("[train]\nalgorithm = 3").is_err());
+    }
+
+    /// Pre-existing experiment TOMLs (written before the `layers` key
+    /// existed) must keep parsing, defaulting to the single-layer network —
+    /// and any *other* unknown keys they might carry are ignored rather
+    /// than fatal (partial configs are how sweeps override a base file).
+    #[test]
+    fn legacy_toml_without_layers_parses_to_depth_1() {
+        let legacy = r#"
+            name = "pre-stack experiment"
+            seed = 11
+            [model]
+            cell = "egru"
+            hidden = 24
+            param_sparsity = 0.8
+            # a key from some future/older schema revision:
+            dropout = 0.1
+            [train]
+            algorithm = "rtrl-both"
+        "#;
+        let c = ExperimentConfig::from_toml(legacy).unwrap();
+        assert_eq!(c.model.layers, 1, "missing layers key must default to 1");
+        assert_eq!(c.model.hidden, 24);
+        assert_eq!(c.train.algorithm, AlgorithmKind::RtrlBoth);
+    }
+
+    /// `layers = 0` is a loud error naming the key, never a silent default.
+    #[test]
+    fn zero_layers_is_a_clear_error() {
+        let err = ExperimentConfig::from_toml("[model]\nlayers = 0").unwrap_err();
+        assert!(err.contains("layers"), "error should name the offending key: {err}");
+        assert!(err.contains("≥ 1") || err.contains(">= 1"), "error should state the bound: {err}");
+        // negative values are rejected by the integer conversion
+        assert!(ExperimentConfig::from_toml("[model]\nlayers = -2").is_err());
+        // and a valid depth round-trips
+        let mut c = ExperimentConfig::default();
+        c.model.layers = 3;
+        let back = ExperimentConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.model.layers, 3);
     }
 
     #[test]

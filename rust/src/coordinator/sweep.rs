@@ -1,6 +1,8 @@
 //! The Fig.-3 sweep: {activity sparsity on/off} × {parameter sparsity ω} ×
-//! {seeds}, fanned out over the in-tree worker pool (one OS thread per run,
-//! bounded by available parallelism), aggregated to mean ± stderr.
+//! {depth L} × {seeds}, fanned out over the in-tree worker pool (one OS
+//! thread per run, bounded by available parallelism), aggregated to
+//! mean ± stderr. The paper's grid is depth 1; the `layers` axis extends
+//! it to stacked networks (`model.layers`).
 
 use crate::config::{AlgorithmKind, CellKind, ExperimentConfig};
 use crate::metrics::curve::Curve;
@@ -17,6 +19,8 @@ pub struct SweepPlan {
     pub param_sparsities: Vec<f32>,
     /// Activity-sparsity arms (paper: with = EGRU, without = gated-tanh).
     pub activity: Vec<bool>,
+    /// Stack depths L (paper: [1]).
+    pub layers: Vec<usize>,
     /// Seeds (paper: 5 runs).
     pub seeds: Vec<u64>,
     /// Max concurrent runs (0 = available parallelism).
@@ -35,6 +39,7 @@ impl SweepPlan {
             base,
             param_sparsities: vec![0.0, 0.5, 0.8, 0.9],
             activity: vec![true, false],
+            layers: vec![1],
             seeds: (1..=seeds as u64).collect(),
             max_workers: 0,
             engine_override: None,
@@ -45,26 +50,34 @@ impl SweepPlan {
     pub fn expand(&self) -> Vec<RunSpec> {
         let mut runs = Vec::new();
         for &activity in &self.activity {
-            for &omega in &self.param_sparsities {
-                for &seed in &self.seeds {
-                    let mut cfg = self.base.clone();
-                    cfg.model.param_sparsity = omega;
-                    cfg.model.cell = if activity { CellKind::Egru } else { CellKind::GatedTanh };
-                    // engine matched to the arm: exact either way, but op
-                    // counts reflect what that arm's hardware would exploit
-                    cfg.train.algorithm = self.engine_override.unwrap_or(if activity {
-                        AlgorithmKind::RtrlBoth
-                    } else {
-                        AlgorithmKind::RtrlParam
-                    });
-                    cfg.seed = seed;
-                    cfg.name = format!(
-                        "spiral-{}-w{:02}-s{}",
-                        if activity { "egru" } else { "tanh" },
-                        (omega * 100.0) as u32,
-                        seed
-                    );
-                    runs.push(RunSpec { activity, omega, seed, cfg });
+            for &layers in &self.layers {
+                // loud, like the config layer: a zero-depth arm is a plan
+                // bug, never something to silently clamp
+                assert!(layers >= 1, "SweepPlan.layers entries must be ≥ 1 (got 0)");
+                for &omega in &self.param_sparsities {
+                    for &seed in &self.seeds {
+                        let mut cfg = self.base.clone();
+                        cfg.model.param_sparsity = omega;
+                        cfg.model.layers = layers;
+                        cfg.model.cell =
+                            if activity { CellKind::Egru } else { CellKind::GatedTanh };
+                        // engine matched to the arm: exact either way, but op
+                        // counts reflect what that arm's hardware would exploit
+                        cfg.train.algorithm = self.engine_override.unwrap_or(if activity {
+                            AlgorithmKind::RtrlBoth
+                        } else {
+                            AlgorithmKind::RtrlParam
+                        });
+                        cfg.seed = seed;
+                        cfg.name = format!(
+                            "spiral-{}-L{}-w{:02}-s{}",
+                            if activity { "egru" } else { "tanh" },
+                            layers,
+                            (omega * 100.0) as u32,
+                            seed
+                        );
+                        runs.push(RunSpec { activity, omega, layers, seed, cfg });
+                    }
                 }
             }
         }
@@ -77,6 +90,7 @@ impl SweepPlan {
 pub struct RunSpec {
     pub activity: bool,
     pub omega: f32,
+    pub layers: usize,
     pub seed: u64,
     pub cfg: ExperimentConfig,
 }
@@ -86,6 +100,7 @@ pub struct RunSpec {
 pub struct RunRecord {
     pub activity: bool,
     pub omega: f32,
+    pub layers: usize,
     pub seed: u64,
     pub curve: Curve,
     pub final_val_accuracy: f32,
@@ -111,6 +126,7 @@ pub fn run_one(spec: &RunSpec) -> RunRecord {
     RunRecord {
         activity: spec.activity,
         omega: spec.omega,
+        layers: spec.layers,
         seed: spec.seed,
         curve: out.curve,
         final_val_accuracy: out.final_val_accuracy,
@@ -160,27 +176,33 @@ pub struct ArmPoint {
 }
 
 impl SweepResult {
-    /// Arms present, sorted (activity desc, ω asc).
-    pub fn arms(&self) -> Vec<(bool, f32)> {
-        let mut arms: Vec<(bool, f32)> = Vec::new();
+    /// Arms present, sorted (activity desc, L asc, ω asc).
+    pub fn arms(&self) -> Vec<(bool, f32, usize)> {
+        let mut arms: Vec<(bool, f32, usize)> = Vec::new();
         for r in &self.runs {
-            if !arms.iter().any(|&(a, w)| a == r.activity && (w - r.omega).abs() < 1e-6) {
-                arms.push((r.activity, r.omega));
+            if !arms.iter().any(|&(a, w, l)| {
+                a == r.activity && (w - r.omega).abs() < 1e-6 && l == r.layers
+            }) {
+                arms.push((r.activity, r.omega, r.layers));
             }
         }
         arms.sort_by(|a, b| {
-            b.0.cmp(&a.0).then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+            b.0.cmp(&a.0)
+                .then(a.2.cmp(&b.2))
+                .then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
         });
         arms
     }
 
     /// Mean ± stderr curve of one arm, point-wise over the shared logging
     /// grid (runs log at identical iterations by construction).
-    pub fn aggregate(&self, activity: bool, omega: f32) -> Vec<ArmPoint> {
+    pub fn aggregate(&self, activity: bool, omega: f32, layers: usize) -> Vec<ArmPoint> {
         let members: Vec<&RunRecord> = self
             .runs
             .iter()
-            .filter(|r| r.activity == activity && (r.omega - omega).abs() < 1e-6)
+            .filter(|r| {
+                r.activity == activity && (r.omega - omega).abs() < 1e-6 && r.layers == layers
+            })
             .collect();
         if members.is_empty() {
             return Vec::new();
@@ -224,14 +246,15 @@ impl SweepResult {
     /// Long-form CSV of every logged point of every run (Fig. 3 source data).
     pub fn to_long_csv(&self) -> String {
         let mut s = String::from(
-            "activity,omega,seed,iteration,compute_adjusted,loss,accuracy,val_accuracy,alpha,beta,influence_sparsity,influence_macs\n",
+            "activity,omega,layers,seed,iteration,compute_adjusted,loss,accuracy,val_accuracy,alpha,beta,influence_sparsity,influence_macs\n",
         );
         for r in &self.runs {
             for p in &r.curve.points {
                 s.push_str(&format!(
-                    "{},{},{},{},{:.6},{:.6},{:.4},{},{:.4},{:.4},{:.4},{}\n",
+                    "{},{},{},{},{},{:.6},{:.6},{:.4},{},{:.4},{:.4},{:.4},{}\n",
                     r.activity,
                     r.omega,
+                    r.layers,
                     r.seed,
                     p.iteration,
                     p.compute_adjusted,
@@ -251,14 +274,15 @@ impl SweepResult {
     /// Aggregated CSV (one row per arm × logged iteration).
     pub fn to_summary_csv(&self) -> String {
         let mut s = String::from(
-            "activity,omega,iteration,compute_adjusted_mean,loss_mean,loss_stderr,val_acc_mean,val_acc_stderr,alpha_mean,beta_mean,influence_sparsity_mean\n",
+            "activity,omega,layers,iteration,compute_adjusted_mean,loss_mean,loss_stderr,val_acc_mean,val_acc_stderr,alpha_mean,beta_mean,influence_sparsity_mean\n",
         );
-        for (activity, omega) in self.arms() {
-            for p in self.aggregate(activity, omega) {
+        for (activity, omega, layers) in self.arms() {
+            for p in self.aggregate(activity, omega, layers) {
                 s.push_str(&format!(
-                    "{},{},{},{:.6},{:.6},{:.6},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
+                    "{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
                     activity,
                     omega,
+                    layers,
                     p.iteration,
                     p.compute_adjusted_mean,
                     p.loss_mean,
@@ -292,6 +316,7 @@ mod tests {
             base,
             param_sparsities: vec![0.0, 0.8],
             activity: vec![true, false],
+            layers: vec![1],
             seeds: vec![1, 2],
             max_workers: 2,
             engine_override: None,
@@ -315,6 +340,28 @@ mod tests {
         }
     }
 
+    /// The depth axis expands into per-depth configs and shows up in the
+    /// arm keys and CSV columns.
+    #[test]
+    fn depth_axis_expands_and_aggregates() {
+        let mut plan = tiny_plan();
+        plan.layers = vec![1, 2];
+        plan.activity = vec![true];
+        plan.param_sparsities = vec![0.0];
+        plan.seeds = vec![1];
+        plan.base.train.iterations = 3;
+        let runs = plan.expand();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].cfg.model.layers, 1);
+        assert_eq!(runs[1].cfg.model.layers, 2);
+        assert!(runs[1].cfg.name.contains("L2"));
+        let result = run_sweep(&plan, false);
+        assert_eq!(result.arms(), vec![(true, 0.0, 1), (true, 0.0, 2)]);
+        assert!(!result.aggregate(true, 0.0, 2).is_empty());
+        assert!(result.to_summary_csv().starts_with("activity,omega,layers,"));
+        assert!(result.to_long_csv().starts_with("activity,omega,layers,"));
+    }
+
     #[test]
     fn engine_override_pins_every_arm() {
         let mut plan = tiny_plan();
@@ -330,7 +377,7 @@ mod tests {
         let result = run_sweep(&plan, false);
         assert_eq!(result.runs.len(), 8);
         assert_eq!(result.arms().len(), 4);
-        let agg = result.aggregate(true, 0.0);
+        let agg = result.aggregate(true, 0.0, 1);
         assert!(!agg.is_empty());
         let csv = result.to_summary_csv();
         assert!(csv.lines().count() > 4);

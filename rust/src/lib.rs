@@ -20,6 +20,18 @@
 //! RTRL and to BPTT — enforced by the `grad_equivalence` and
 //! `sparse_exactness` integration tests.
 //!
+//! ## Depth
+//!
+//! Networks are stacks ([`nn::LayerStack`], `model.layers` in the config):
+//! layer `l` reads layer `l−1`'s new activations, so the one-step Jacobian
+//! of the concatenated state is **block lower-bidiagonal** and the
+//! influence matrix block lower-triangular over
+//! (layer-row × layer-param-column). Exact RTRL propagates influence
+//! layer-by-layer within a step; each layer's panel tracks only the
+//! columns of layers `0..=l`, so the structural cross-layer zero blocks
+//! are never stored or charged (see [`rtrl`] module docs). Depth 1 is the
+//! paper's single-cell configuration, bit-for-bit.
+//!
 //! ## Layers
 //!
 //! * **L3 (this crate)** — event-driven sparse engines, datasets, optimizers,
@@ -39,7 +51,8 @@
 //! `begin_sequence` → `step`×T → `end_sequence` → `grads`, plus
 //! `reset_grads` for the online regime and mandatory op-count accounting
 //! (every MAC charged to the step's [`metrics::OpCounter`] under its
-//! [`metrics::Phase`]; `state_memory_words` reports the live footprint).
+//! [`metrics::Phase`], inside the owning layer's `set_layer` scope where
+//! attributable; `state_memory_words` reports the live footprint).
 //! The trainer, the sweep coordinator, the micro-benches and [`bench`] all
 //! consume engines exclusively through this trait, so a new engine plugs
 //! into every task, sweep arm and perf report by implementing it and

@@ -15,15 +15,16 @@ sparse-rtrl — Efficient RTRL through combined activity and parameter sparsity
 
 USAGE:
   sparse-rtrl train  [--config cfg.toml] [--param-sparsity W] [--iterations N]
-                     [--seed S] [--algorithm NAME] [--cell NAME]
+                     [--seed S] [--algorithm NAME] [--cell NAME] [--layers L]
                      [--out results/train_curve.csv]
   sparse-rtrl sweep  [--config cfg.toml] [--seeds 5] [--iterations N]
                      [--sequences N] [--workers 0] [--algorithm NAME]
-                     [--out-dir results]
+                     [--layers 1,2,..] [--out-dir results]
   sparse-rtrl bench  [--quick] [--engines a,b,..] [--hidden 16,32,..]
-                     [--sparsity 0.0,0.8,..] [--timesteps 17] [--sequences 30]
+                     [--layers 1,2,..] [--sparsity 0.0,0.8,..]
+                     [--timesteps 17] [--sequences 30]
                      [--warmup 3] [--workers 1] [--out BENCH_rtrl.json]
-  sparse-rtrl report <table1|fig1|fig2> [--n 16] [--omega 0.8]
+  sparse-rtrl report <table1|fig1|fig2> [--n 16] [--layers 1] [--omega 0.8]
   sparse-rtrl artifacts [--dir artifacts]
   sparse-rtrl config-dump            # print the default config TOML
 ";
@@ -55,14 +56,19 @@ fn cmd_train(mut args: Args) -> Result<()> {
         cfg.model.cell = sparse_rtrl::config::CellKind::from_name(&cell)
             .ok_or_else(|| anyhow!("unknown cell {cell:?} (egru|ev_rnn|gated_tanh|vanilla)"))?;
     }
+    cfg.model.layers = args.get_parse("layers", cfg.model.layers).map_err(err)?;
+    if cfg.model.layers == 0 {
+        bail!("--layers must be ≥ 1");
+    }
     let out: PathBuf = args.get("out").unwrap_or_else(|| "results/train_curve.csv".into()).into();
     args.finish().map_err(err)?;
 
     eprintln!(
-        "training {} (alg={}, ω={}, {} iters)",
+        "training {} (alg={}, ω={}, L={}, {} iters)",
         cfg.name,
         cfg.train.algorithm.name(),
         cfg.model.param_sparsity,
+        cfg.model.layers,
         cfg.train.iterations
     );
     let mut data_rng = Trainer::data_rng(cfg.seed);
@@ -91,12 +97,25 @@ fn cmd_sweep(mut args: Args) -> Result<()> {
         Some(alg) => Some(parse_algorithm(&alg)?),
         None => None,
     };
+    let layers = match args.get("layers") {
+        Some(s) => {
+            let l: Vec<usize> = parse_csv(&s, "layers")?;
+            if l.iter().any(|&d| d == 0) {
+                bail!("--layers depths must be ≥ 1");
+            }
+            Some(l)
+        }
+        None => None,
+    };
     let out_dir: PathBuf = args.get("out-dir").unwrap_or_else(|| "results".into()).into();
     args.finish().map_err(err)?;
 
     let mut plan = SweepPlan::fig3(base, seeds);
     plan.max_workers = workers;
     plan.engine_override = engine_override;
+    if let Some(l) = layers {
+        plan.layers = l;
+    }
     let result = run_sweep(&plan, true);
     write_text(&out_dir.join("fig3_runs.csv"), &result.to_long_csv())?;
     write_text(&out_dir.join("fig3_summary.csv"), &result.to_summary_csv())?;
@@ -125,6 +144,12 @@ fn cmd_bench(mut args: Args) -> Result<()> {
     if let Some(s) = args.get("hidden") {
         cfg.hidden_sizes = parse_csv(&s, "hidden")?;
     }
+    if let Some(s) = args.get("layers") {
+        cfg.layers = parse_csv(&s, "layers")?;
+        if cfg.layers.iter().any(|&l| l == 0) {
+            bail!("--layers depths must be ≥ 1");
+        }
+    }
     if let Some(s) = args.get("sparsity") {
         cfg.param_sparsities = parse_csv(&s, "sparsity")?;
         if cfg.param_sparsities.iter().any(|w| !(0.0..1.0).contains(w)) {
@@ -137,7 +162,11 @@ fn cmd_bench(mut args: Args) -> Result<()> {
     cfg.workers = args.get_parse("workers", cfg.workers).map_err(err)?;
     let out: PathBuf = args.get("out").unwrap_or_else(|| "BENCH_rtrl.json".into()).into();
     args.finish().map_err(err)?;
-    if cfg.engines.is_empty() || cfg.hidden_sizes.is_empty() || cfg.param_sparsities.is_empty() {
+    if cfg.engines.is_empty()
+        || cfg.hidden_sizes.is_empty()
+        || cfg.layers.is_empty()
+        || cfg.param_sparsities.is_empty()
+    {
         bail!("bench grid is empty");
     }
     if cfg.hidden_sizes.iter().any(|&n| n == 0) {
@@ -148,9 +177,10 @@ fn cmd_bench(mut args: Args) -> Result<()> {
     }
 
     eprintln!(
-        "bench: {} engines × {} sizes × {} sparsities, T={}, {} sequences/case{}",
+        "bench: {} engines × {} sizes × {} depths × {} sparsities, T={}, {} sequences/case{}",
         cfg.engines.len(),
         cfg.hidden_sizes.len(),
+        cfg.layers.len(),
         cfg.param_sparsities.len(),
         cfg.timesteps,
         cfg.sequences,
@@ -166,10 +196,14 @@ fn cmd_bench(mut args: Args) -> Result<()> {
 fn cmd_report(mut args: Args) -> Result<()> {
     let what = args.pos(1).map(str::to_string).ok_or_else(|| anyhow!("report needs a target"))?;
     let n: usize = args.get_parse("n", 16).map_err(err)?;
+    let layers: usize = args.get_parse("layers", 1).map_err(err)?;
+    if layers == 0 {
+        bail!("--layers must be ≥ 1");
+    }
     let omega: f32 = args.get_parse("omega", 0.8).map_err(err)?;
     args.finish().map_err(err)?;
     match what.as_str() {
-        "table1" => println!("{}", table1::render(n, omega, 17)),
+        "table1" => println!("{}", table1::render(n, layers, omega, 17)),
         "fig1" => println!("{}", fig1::render(0.3, 0.5)),
         "fig2" => println!("{}", fig2::render()),
         other => bail!("unknown report {other:?} (try table1|fig1|fig2)"),

@@ -1,7 +1,20 @@
-//! Multiply-accumulate and memory-word counters, broken down by phase.
+//! Multiply-accumulate and memory-word counters, broken down by phase and
+//! (optionally) by network layer.
 //!
 //! Counters are incremented in bulk (per row / per gather, never per scalar)
-//! so instrumentation overhead in the hot loop is a single `u64 +=`.
+//! so instrumentation overhead in the hot loop is a single `u64 +=` — two
+//! when a layer scope is active.
+//!
+//! # Layer attribution
+//!
+//! Stacked networks ([`crate::nn::LayerStack`]) charge every op twice: once
+//! to the global per-phase counter (as before) and once to the
+//! `(layer, Phase)` cell of the currently scoped layer. Scoping is explicit:
+//! [`OpCounter::set_layer`] opens a layer context, [`OpCounter::clear_layer`]
+//! closes it; charges issued outside any layer context (readout, loss,
+//! optimizer) stay global-only. This is how the bench report and Table 1
+//! attribute per-layer cost — in particular how the "cross-layer zero blocks
+//! are never charged" property of the block-sparse engine is observable.
 
 /// Phases of one training step, matching the cost decomposition of Table 1:
 /// the forward term (`ω̃α̃n²`-ish) and the influence-update term
@@ -60,11 +73,18 @@ impl Phase {
     }
 }
 
-/// Per-phase MAC and memory-word counters.
+/// Per-phase MAC and memory-word counters, with optional per-layer
+/// attribution (see module docs).
 #[derive(Debug, Clone, Default)]
 pub struct OpCounter {
     macs: [u64; NUM_PHASES],
     words: [u64; NUM_PHASES],
+    /// Per-layer per-phase MACs; grown lazily to the highest scoped layer.
+    layer_macs: Vec<[u64; NUM_PHASES]>,
+    /// Per-layer per-phase words.
+    layer_words: Vec<[u64; NUM_PHASES]>,
+    /// Currently scoped layer (None = global-only charging).
+    layer: Option<usize>,
 }
 
 impl OpCounter {
@@ -72,16 +92,39 @@ impl OpCounter {
         Self::default()
     }
 
+    /// Open a layer scope: subsequent charges are also attributed to layer
+    /// `l` until [`Self::clear_layer`] (or the next `set_layer`).
+    #[inline]
+    pub fn set_layer(&mut self, l: usize) {
+        if l >= self.layer_macs.len() {
+            self.layer_macs.resize(l + 1, [0; NUM_PHASES]);
+            self.layer_words.resize(l + 1, [0; NUM_PHASES]);
+        }
+        self.layer = Some(l);
+    }
+
+    /// Close the layer scope: charges go global-only again.
+    #[inline]
+    pub fn clear_layer(&mut self) {
+        self.layer = None;
+    }
+
     /// Charge `n` multiply-accumulates to `phase`.
     #[inline]
     pub fn macs(&mut self, phase: Phase, n: u64) {
         self.macs[phase.index()] += n;
+        if let Some(l) = self.layer {
+            self.layer_macs[l][phase.index()] += n;
+        }
     }
 
     /// Charge `n` memory words touched to `phase`.
     #[inline]
     pub fn words(&mut self, phase: Phase, n: u64) {
         self.words[phase.index()] += n;
+        if let Some(l) = self.layer {
+            self.layer_words[l][phase.index()] += n;
+        }
     }
 
     /// MACs charged to one phase.
@@ -104,10 +147,41 @@ impl OpCounter {
         self.words.iter().sum()
     }
 
-    /// Zero all counters.
+    /// Number of layers that have received at least one scoped charge.
+    pub fn layers_tracked(&self) -> usize {
+        self.layer_macs.len()
+    }
+
+    /// MACs charged to `(layer, phase)` (0 for never-scoped layers).
+    pub fn macs_in_layer(&self, layer: usize, phase: Phase) -> u64 {
+        self.layer_macs.get(layer).map_or(0, |m| m[phase.index()])
+    }
+
+    /// Words charged to `(layer, phase)`.
+    pub fn words_in_layer(&self, layer: usize, phase: Phase) -> u64 {
+        self.layer_words.get(layer).map_or(0, |w| w[phase.index()])
+    }
+
+    /// Total MACs attributed to one layer across phases.
+    pub fn layer_total_macs(&self, layer: usize) -> u64 {
+        self.layer_macs.get(layer).map_or(0, |m| m.iter().sum())
+    }
+
+    /// Total words attributed to one layer across phases.
+    pub fn layer_total_words(&self, layer: usize) -> u64 {
+        self.layer_words.get(layer).map_or(0, |w| w.iter().sum())
+    }
+
+    /// Zero all counters (layer scope survives a reset).
     pub fn reset(&mut self) {
         self.macs = [0; NUM_PHASES];
         self.words = [0; NUM_PHASES];
+        self.layer_macs.clear();
+        self.layer_words.clear();
+        if let Some(l) = self.layer {
+            self.layer_macs.resize(l + 1, [0; NUM_PHASES]);
+            self.layer_words.resize(l + 1, [0; NUM_PHASES]);
+        }
     }
 
     /// Fold another counter into this one (aggregating across samples/runs).
@@ -115,6 +189,16 @@ impl OpCounter {
         for i in 0..NUM_PHASES {
             self.macs[i] += other.macs[i];
             self.words[i] += other.words[i];
+        }
+        if self.layer_macs.len() < other.layer_macs.len() {
+            self.layer_macs.resize(other.layer_macs.len(), [0; NUM_PHASES]);
+            self.layer_words.resize(other.layer_words.len(), [0; NUM_PHASES]);
+        }
+        for (l, (m, w)) in other.layer_macs.iter().zip(&other.layer_words).enumerate() {
+            for i in 0..NUM_PHASES {
+                self.layer_macs[l][i] += m[i];
+                self.layer_words[l][i] += w[i];
+            }
         }
     }
 
@@ -124,6 +208,14 @@ impl OpCounter {
         for i in 0..NUM_PHASES {
             d.macs[i] = self.macs[i] - baseline.macs[i];
             d.words[i] = self.words[i] - baseline.words[i];
+        }
+        d.layer_macs = self.layer_macs.clone();
+        d.layer_words = self.layer_words.clone();
+        for (l, (m, w)) in baseline.layer_macs.iter().zip(&baseline.layer_words).enumerate() {
+            for i in 0..NUM_PHASES {
+                d.layer_macs[l][i] -= m[i];
+                d.layer_words[l][i] -= w[i];
+            }
         }
         d
     }
@@ -146,6 +238,17 @@ impl OpCounter {
             self.total_macs(),
             self.total_words()
         ));
+        if self.layers_tracked() > 1 {
+            s.push_str("per layer:\n");
+            for l in 0..self.layers_tracked() {
+                s.push_str(&format!(
+                    "{:<18}{:>16}{:>16}\n",
+                    format!("  layer {l}"),
+                    self.layer_total_macs(l),
+                    self.layer_total_words(l)
+                ));
+            }
+        }
         s
     }
 }
@@ -185,6 +288,50 @@ mod tests {
         c.macs(Phase::Optimizer, 7);
         c.reset();
         assert_eq!(c.total_macs(), 0);
+    }
+
+    #[test]
+    fn layer_scoped_charges_attribute_both_ways() {
+        let mut c = OpCounter::new();
+        c.macs(Phase::Forward, 5); // unscoped: global only
+        c.set_layer(0);
+        c.macs(Phase::Forward, 10);
+        c.words(Phase::InfluenceUpdate, 3);
+        c.set_layer(1);
+        c.macs(Phase::InfluenceUpdate, 20);
+        c.clear_layer();
+        c.macs(Phase::Optimizer, 7); // unscoped again
+        assert_eq!(c.layers_tracked(), 2);
+        assert_eq!(c.macs_in_layer(0, Phase::Forward), 10);
+        assert_eq!(c.words_in_layer(0, Phase::InfluenceUpdate), 3);
+        assert_eq!(c.macs_in_layer(1, Phase::InfluenceUpdate), 20);
+        assert_eq!(c.layer_total_macs(0) + c.layer_total_macs(1), 30);
+        // global totals include scoped and unscoped charges
+        assert_eq!(c.macs_in(Phase::Forward), 15);
+        assert_eq!(c.total_macs(), 42);
+        // never-scoped layer reads as zero
+        assert_eq!(c.macs_in_layer(5, Phase::Forward), 0);
+    }
+
+    #[test]
+    fn merge_and_since_preserve_layer_counters() {
+        let mut a = OpCounter::new();
+        a.set_layer(1);
+        a.macs(Phase::Jacobian, 4);
+        a.clear_layer();
+        let snap = a.clone();
+        a.set_layer(1);
+        a.macs(Phase::Jacobian, 6);
+        a.clear_layer();
+        let d = a.since(&snap);
+        assert_eq!(d.macs_in_layer(1, Phase::Jacobian), 6);
+        let mut b = OpCounter::new();
+        b.set_layer(0);
+        b.macs(Phase::Forward, 1);
+        b.merge(&a);
+        assert_eq!(b.macs_in_layer(0, Phase::Forward), 1);
+        assert_eq!(b.macs_in_layer(1, Phase::Jacobian), 10);
+        assert_eq!(b.layers_tracked(), 2);
     }
 
     #[test]

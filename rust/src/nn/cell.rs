@@ -523,6 +523,36 @@ impl RnnCell {
         }
     }
 
+    /// `∂v_k/∂x_j` — the input-path Jacobian entry. In a [`super::LayerStack`]
+    /// the input of layer `l ≥ 1` is layer `l−1`'s *new* activation, so this
+    /// is the cross-layer block of the stacked Jacobian (block
+    /// lower-bidiagonal structure). Input weights carry no mask, so the
+    /// block is structurally dense; activity sparsity still zeroes it
+    /// row-wise (φ' gate) and column-wise (inactive lower-layer rows of `M`).
+    #[inline]
+    pub fn dv_dx(&self, s: &CellScratch, k: usize, j: usize) -> f32 {
+        match self.dynamics {
+            Dynamics::Linear => {
+                let w = self.layout.block(&self.w, linear_blocks::W);
+                w[k * self.n_in + j]
+            }
+            Dynamics::Gated => {
+                let wu = self.layout.block(&self.w, gated_blocks::WU);
+                let wz = self.layout.block(&self.w, gated_blocks::WZ);
+                s.gu[k] * wu[k * self.n_in + j] + s.gz[k] * wz[k * self.n_in + j]
+            }
+        }
+    }
+
+    /// MACs consumed per `dv_dx` evaluation (for op accounting).
+    #[inline]
+    pub fn dv_dx_cost(&self) -> u64 {
+        match self.dynamics {
+            Dynamics::Linear => 1,
+            Dynamics::Gated => 2,
+        }
+    }
+
     /// Structural fan-in parameter indices of unit `k`: every flat parameter
     /// that can ever appear in row `k` of `M̄` (input weights, kept recurrent
     /// weights, biases), sorted ascending. This is SnAp-1's influence pattern
@@ -560,9 +590,12 @@ impl RnnCell {
 
     /// Immediate influence row `k`: invokes `f(flat_param_index, ∂v_k/∂w_p)`
     /// for every *structurally nonzero* entry — unit `k`'s fan-in parameters,
-    /// minus masked recurrent entries, minus recurrent entries whose
-    /// presynaptic activation is zero (those have value exactly 0, the
-    /// forward-activity term of `M̄`'s sparsity). Returns emitted count.
+    /// minus masked recurrent entries, minus recurrent/input entries whose
+    /// presynaptic activation or input is zero (those have value exactly 0,
+    /// the forward-activity term of `M̄`'s sparsity). Skipping `x_j = 0` is
+    /// what makes stacked event-based layers cheap: layer `l ≥ 1`'s input is
+    /// layer `l−1`'s activity-sparse activation vector. Returns emitted
+    /// count.
     pub fn immediate_row(
         &self,
         s: &CellScratch,
@@ -578,9 +611,11 @@ impl RnnCell {
                 use linear_blocks::*;
                 let woff = self.layout.row_range(W, k).start;
                 for (j, &xv) in x.iter().enumerate() {
-                    f(woff + j, xv);
+                    if xv != 0.0 {
+                        f(woff + j, xv);
+                        emitted += 1;
+                    }
                 }
-                emitted += self.n_in as u64;
                 let voff = self.layout.row_range(V, k).start;
                 for &l in &self.row_kept[k] {
                     let al = a_prev[l as usize];
@@ -598,10 +633,12 @@ impl RnnCell {
                 let wu = self.layout.row_range(WU, k).start;
                 let wz = self.layout.row_range(WZ, k).start;
                 for (j, &xv) in x.iter().enumerate() {
-                    f(wu + j, gu * xv);
-                    f(wz + j, gz * xv);
+                    if xv != 0.0 {
+                        f(wu + j, gu * xv);
+                        f(wz + j, gz * xv);
+                        emitted += 2;
+                    }
                 }
-                emitted += 2 * self.n_in as u64;
                 let vu = self.layout.row_range(VU, k).start;
                 let vz = self.layout.row_range(VZ, k).start;
                 for &l in &self.row_kept[k] {
@@ -691,6 +728,57 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Finite-difference check of ∂v/∂x (the cross-layer Jacobian block a
+    /// LayerStack feeds from layer l−1's new activations into layer l).
+    #[test]
+    fn dv_dx_matches_finite_difference() {
+        for dynamics in [Dynamics::Linear, Dynamics::Gated] {
+            let mut rng = Pcg64::new(14);
+            let cell = RnnCell::new(5, 3, dynamics, Activation::Tanh, 0.0, None, &mut rng);
+            let x0 = [0.3f32, -0.7, 0.2];
+            let a0: Vec<f32> = (0..5).map(|i| 0.1 * i as f32 - 0.2).collect();
+            let mut s0 = CellScratch::new(5);
+            cell.forward(&a0, &x0, &mut s0, &mut ops());
+            let h = 1e-3f32;
+            for j in 0..3 {
+                let mut xp = x0;
+                xp[j] += h;
+                let mut s1 = CellScratch::new(5);
+                cell.forward(&a0, &xp, &mut s1, &mut ops());
+                for k in 0..5 {
+                    let fd = (s1.v[k] - s0.v[k]) / h;
+                    let an = cell.dv_dx(&s0, k, j);
+                    assert!(
+                        (fd - an).abs() < 2e-2,
+                        "{dynamics:?} dv[{k}]/dx[{j}]: fd={fd} analytic={an}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Zero inputs are skipped by the immediate row (event-driven M̄): they
+    /// produce exactly-zero entries, so skipping is structural, not lossy.
+    #[test]
+    fn immediate_row_skips_zero_inputs() {
+        let mut rng = Pcg64::new(15);
+        let cell = RnnCell::egru(4, 3, 0.0, 0.3, 0.9, None, &mut rng);
+        let a_prev = vec![1.0; 4];
+        let mut s = CellScratch::new(4);
+        cell.forward(&a_prev, &[0.5, 0.0, -0.2], &mut s, &mut ops());
+        let mut touched = Vec::new();
+        let emitted_sparse =
+            cell.immediate_row(&s, &a_prev, &[0.5, 0.0, -0.2], 0, |pi, _| touched.push(pi), &mut ops());
+        let emitted_dense =
+            cell.immediate_row(&s, &a_prev, &[0.5, 0.1, -0.2], 0, |_, _| {}, &mut ops());
+        // one zero input drops exactly two entries (W_u and W_z columns)
+        assert_eq!(emitted_dense - emitted_sparse, 2);
+        // the skipped flat indices are the j=1 input columns
+        let wu1 = cell.layout().flat(gated_blocks::WU, 0, 1);
+        let wz1 = cell.layout().flat(gated_blocks::WZ, 0, 1);
+        assert!(!touched.contains(&wu1) && !touched.contains(&wz1));
     }
 
     /// Finite-difference check of the immediate influence ∂v_k/∂w_p.

@@ -13,14 +13,21 @@
 //! All cells have the Markov form `v = G(a_prev, x; w) − ϑ`, `a = φ(v)` of
 //! the paper's Eq. (1)/(5), so RTRL row-sparsity (`φ'(v_k)=0` ⇒ row `k` of
 //! `J`, `M̄`, `M` is zero) holds *exactly* wherever `φ' = 0`.
+//!
+//! Depth is provided by [`LayerStack`] (`stack` module): an ordered stack of
+//! cells where layer `l` reads layer `l−1`'s new activations, giving the
+//! combined state-update Jacobian a block lower-bidiagonal structure that
+//! every gradient engine in [`crate::rtrl`] operates on directly.
 
 pub mod cell;
 pub mod layout;
 pub mod loss;
 pub mod pseudo;
 pub mod readout;
+pub mod stack;
 
 pub use cell::{Activation, CellScratch, Dynamics, RnnCell};
 pub use layout::{ParamBlock, ParamLayout};
 pub use loss::{Loss, LossKind};
 pub use readout::Readout;
+pub use stack::{LayerStack, NetworkLayout, StackScratch};

@@ -1,0 +1,433 @@
+//! Stacked recurrent layers — depth as a first-class dimension.
+//!
+//! A [`LayerStack`] is an ordered `Vec<RnnCell>` where layer 0 reads the
+//! external input and layer `l ≥ 1` reads layer `l−1`'s *new* activation:
+//!
+//! ```text
+//! a_0^{(t)} = φ(G_0(a_0^{(t-1)}, x^{(t)}))
+//! a_l^{(t)} = φ(G_l(a_l^{(t-1)}, a_{l-1}^{(t)}))        l = 1..L−1
+//! ```
+//!
+//! Viewed as one recurrent map over the concatenated state
+//! `a = [a_0 … a_{L-1}] ∈ R^N`, the one-step dependency structure is
+//! **block lower-bidiagonal**: layer `l` depends on its own previous state
+//! (the diagonal block, through the masked recurrent matrices) and on layer
+//! `l−1`'s new state (the sub-diagonal block, through the dense input
+//! weights). RTRL engines exploit this by propagating influence
+//! layer-by-layer within a step; the influence matrix `M` is block
+//! lower-*triangular* over (layer-row × layer-param-column), because layer
+//! `l`'s state can never depend on a deeper layer's parameters. The
+//! cross-layer upper blocks are structural zeros that the sparse engine
+//! never materializes or charges (see `rtrl::sparse`).
+//!
+//! The concatenated parameter vector follows [`NetworkLayout`]: layer-major,
+//! each layer flattened by its own [`ParamLayout`]. Every per-layer op is
+//! charged to the [`OpCounter`]'s `(layer, Phase)` cell via
+//! [`OpCounter::set_layer`] scoping.
+
+use super::cell::{CellScratch, RnnCell};
+use crate::metrics::OpCounter;
+
+/// Concatenated layout over per-layer [`super::ParamLayout`]s and state
+/// slices: which global flat-parameter / global-unit ranges belong to which
+/// layer.
+#[derive(Debug, Clone)]
+pub struct NetworkLayout {
+    /// `param_offsets[l]..param_offsets[l+1]` = layer `l`'s flat params.
+    param_offsets: Vec<usize>,
+    /// `state_offsets[l]..state_offsets[l+1]` = layer `l`'s units.
+    state_offsets: Vec<usize>,
+}
+
+impl NetworkLayout {
+    fn from_cells(cells: &[RnnCell]) -> Self {
+        let mut param_offsets = Vec::with_capacity(cells.len() + 1);
+        let mut state_offsets = Vec::with_capacity(cells.len() + 1);
+        let (mut p, mut n) = (0usize, 0usize);
+        for c in cells {
+            param_offsets.push(p);
+            state_offsets.push(n);
+            p += c.p();
+            n += c.n();
+        }
+        param_offsets.push(p);
+        state_offsets.push(n);
+        NetworkLayout { param_offsets, state_offsets }
+    }
+
+    /// Number of layers.
+    #[inline]
+    pub fn layers(&self) -> usize {
+        self.param_offsets.len() - 1
+    }
+
+    /// Global flat-parameter offset of layer `l`.
+    #[inline]
+    pub fn param_offset(&self, l: usize) -> usize {
+        self.param_offsets[l]
+    }
+
+    /// Global flat-parameter range of layer `l`.
+    #[inline]
+    pub fn param_range(&self, l: usize) -> std::ops::Range<usize> {
+        self.param_offsets[l]..self.param_offsets[l + 1]
+    }
+
+    /// Global unit offset of layer `l`.
+    #[inline]
+    pub fn state_offset(&self, l: usize) -> usize {
+        self.state_offsets[l]
+    }
+
+    /// Global unit range of layer `l`.
+    #[inline]
+    pub fn state_range(&self, l: usize) -> std::ops::Range<usize> {
+        self.state_offsets[l]..self.state_offsets[l + 1]
+    }
+
+    /// Total parameter count `P = Σ_l p_l`.
+    #[inline]
+    pub fn total_params(&self) -> usize {
+        *self.param_offsets.last().unwrap()
+    }
+
+    /// Total state size `N = Σ_l n_l`.
+    #[inline]
+    pub fn total_units(&self) -> usize {
+        *self.state_offsets.last().unwrap()
+    }
+
+    /// Decode a global flat parameter index to `(layer, local index)`.
+    pub fn layer_of_param(&self, pi: usize) -> (usize, usize) {
+        debug_assert!(pi < self.total_params());
+        let l = match self.param_offsets.binary_search(&pi) {
+            Ok(i) if i < self.layers() => i,
+            Ok(i) => i - 1,
+            Err(i) => i - 1,
+        };
+        (l, pi - self.param_offsets[l])
+    }
+
+    /// Decode a global unit index to `(layer, local unit)`.
+    pub fn layer_of_unit(&self, k: usize) -> (usize, usize) {
+        debug_assert!(k < self.total_units());
+        let l = match self.state_offsets.binary_search(&k) {
+            Ok(i) if i < self.layers() => i,
+            Ok(i) => i - 1,
+            Err(i) => i - 1,
+        };
+        (l, k - self.state_offsets[l])
+    }
+}
+
+/// Per-timestep forward state of a whole stack: one [`CellScratch`] per
+/// layer, filled bottom-up by [`LayerStack::forward`].
+#[derive(Debug, Clone)]
+pub struct StackScratch {
+    pub layers: Vec<CellScratch>,
+}
+
+impl StackScratch {
+    pub fn new(stack: &LayerStack) -> Self {
+        StackScratch {
+            layers: stack.cells.iter().map(|c| CellScratch::new(c.n())).collect(),
+        }
+    }
+
+    /// Scratch of the top layer (whose activations feed the readout).
+    #[inline]
+    pub fn top(&self) -> &CellScratch {
+        self.layers.last().expect("empty stack")
+    }
+
+    /// Σ active units over all layers (α̃N).
+    pub fn active_units(&self) -> usize {
+        self.layers.iter().map(|s| s.active_units()).sum()
+    }
+
+    /// Σ deriv-active units over all layers (β̃N).
+    pub fn deriv_units(&self) -> usize {
+        self.layers.iter().map(|s| s.deriv_units()).sum()
+    }
+
+    /// Concatenate the new activations into a global state vector.
+    pub fn write_state(&self, out: &mut [f32]) {
+        let mut off = 0;
+        for s in &self.layers {
+            out[off..off + s.a.len()].copy_from_slice(&s.a);
+            off += s.a.len();
+        }
+        debug_assert_eq!(off, out.len());
+    }
+}
+
+/// An ordered stack of recurrent cells wired input → layer 0 → … → layer
+/// L−1 → readout. Depth 1 is exactly the single-cell network every engine
+/// historically consumed.
+#[derive(Debug, Clone)]
+pub struct LayerStack {
+    cells: Vec<RnnCell>,
+    layout: NetworkLayout,
+}
+
+impl LayerStack {
+    /// Build from pre-constructed cells. Panics unless layer `l`'s input
+    /// width equals layer `l−1`'s hidden width.
+    pub fn new(cells: Vec<RnnCell>) -> Self {
+        assert!(!cells.is_empty(), "LayerStack needs at least one layer");
+        for l in 1..cells.len() {
+            assert_eq!(
+                cells[l].n_in(),
+                cells[l - 1].n(),
+                "layer {l} reads layer {}: n_in must equal that layer's n",
+                l - 1
+            );
+        }
+        let layout = NetworkLayout::from_cells(&cells);
+        LayerStack { cells, layout }
+    }
+
+    /// Single-layer stack — the historical single-cell configuration.
+    pub fn single(cell: RnnCell) -> Self {
+        Self::new(vec![cell])
+    }
+
+    #[inline]
+    pub fn layers(&self) -> usize {
+        self.cells.len()
+    }
+
+    #[inline]
+    pub fn layer(&self, l: usize) -> &RnnCell {
+        &self.cells[l]
+    }
+
+    /// Mutable access to one layer (mask rewiring, parameter surgery).
+    /// Callers must not change layer dimensions.
+    #[inline]
+    pub fn layer_mut(&mut self, l: usize) -> &mut RnnCell {
+        &mut self.cells[l]
+    }
+
+    #[inline]
+    pub fn cells(&self) -> &[RnnCell] {
+        &self.cells
+    }
+
+    #[inline]
+    pub fn layout(&self) -> &NetworkLayout {
+        &self.layout
+    }
+
+    /// External input width (layer 0's input).
+    #[inline]
+    pub fn n_in(&self) -> usize {
+        self.cells[0].n_in()
+    }
+
+    /// Total state size `N`.
+    #[inline]
+    pub fn total_units(&self) -> usize {
+        self.layout.total_units()
+    }
+
+    /// Hidden width of the top layer (readout input width).
+    #[inline]
+    pub fn top_n(&self) -> usize {
+        self.cells.last().unwrap().n()
+    }
+
+    /// Total parameter count `P` across layers.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.layout.total_params()
+    }
+
+    /// Fresh per-layer scratch sized for this stack.
+    pub fn scratch(&self) -> StackScratch {
+        StackScratch::new(self)
+    }
+
+    /// Kept fraction ω̃ over all layers' recurrent entries (1.0 when dense).
+    pub fn omega_tilde(&self) -> f32 {
+        let mut kept = 0.0f64;
+        let mut total = 0.0f64;
+        for c in &self.cells {
+            let nn = (c.n() * c.n()) as f64;
+            kept += c.omega_tilde() as f64 * nn;
+            total += nn;
+        }
+        (kept / total.max(1.0)) as f32
+    }
+
+    /// One forward step over the whole stack. `a_prev` is the concatenated
+    /// previous state (`R^N`), `x` the external input; each layer's ops are
+    /// charged under its `(layer, Phase)` scope.
+    pub fn forward(
+        &self,
+        a_prev: &[f32],
+        x: &[f32],
+        scratch: &mut StackScratch,
+        ops: &mut OpCounter,
+    ) {
+        assert_eq!(a_prev.len(), self.total_units());
+        assert_eq!(scratch.layers.len(), self.cells.len());
+        for l in 0..self.cells.len() {
+            ops.set_layer(l);
+            let (below, rest) = scratch.layers.split_at_mut(l);
+            let input: &[f32] = if l == 0 { x } else { &below[l - 1].a };
+            let prev = &a_prev[self.layout.state_range(l)];
+            self.cells[l].forward(prev, input, &mut rest[0], ops);
+        }
+        ops.clear_layer();
+    }
+
+    /// Copy the concatenated parameter vector (`R^P`) out — layer-major,
+    /// each layer in its own [`super::ParamLayout`] order. This is the
+    /// indexing engines' `grads()` use.
+    pub fn copy_params_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.p());
+        for (l, c) in self.cells.iter().enumerate() {
+            out[self.layout.param_range(l)].copy_from_slice(c.params());
+        }
+    }
+
+    /// Load a concatenated parameter vector back into the layers.
+    pub fn load_params(&mut self, inp: &[f32]) {
+        assert_eq!(inp.len(), self.p());
+        for l in 0..self.cells.len() {
+            let range = self.layout.param_range(l);
+            self.cells[l].params_mut().copy_from_slice(&inp[range]);
+        }
+    }
+
+    /// Re-zero masked entries in every layer (post-optimizer hygiene).
+    pub fn enforce_masks(&mut self) {
+        for c in &mut self.cells {
+            c.enforce_mask();
+        }
+    }
+}
+
+impl From<RnnCell> for LayerStack {
+    fn from(cell: RnnCell) -> Self {
+        LayerStack::single(cell)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Phase;
+    use crate::util::Pcg64;
+
+    fn two_layer() -> LayerStack {
+        let mut rng = Pcg64::new(50);
+        let l0 = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, None, &mut rng);
+        let l1 = RnnCell::egru(4, 6, 0.05, 0.3, 0.5, None, &mut rng);
+        LayerStack::new(vec![l0, l1])
+    }
+
+    #[test]
+    fn layout_offsets_and_decoding() {
+        let net = two_layer();
+        let lay = net.layout();
+        assert_eq!(lay.layers(), 2);
+        assert_eq!(net.total_units(), 10);
+        assert_eq!(net.top_n(), 4);
+        assert_eq!(net.p(), net.layer(0).p() + net.layer(1).p());
+        assert_eq!(lay.param_range(1), net.layer(0).p()..net.p());
+        assert_eq!(lay.state_range(1), 6..10);
+        // decode round-trips
+        assert_eq!(lay.layer_of_param(0), (0, 0));
+        assert_eq!(lay.layer_of_param(net.layer(0).p()), (1, 0));
+        assert_eq!(lay.layer_of_param(net.p() - 1), (1, net.layer(1).p() - 1));
+        assert_eq!(lay.layer_of_unit(5), (0, 5));
+        assert_eq!(lay.layer_of_unit(6), (1, 0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_wiring_panics() {
+        let mut rng = Pcg64::new(51);
+        let l0 = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, None, &mut rng);
+        let l1 = RnnCell::egru(4, 5, 0.05, 0.3, 0.5, None, &mut rng);
+        LayerStack::new(vec![l0, l1]);
+    }
+
+    /// Stack forward equals chaining the cells by hand: layer 1's input is
+    /// layer 0's *new* activation.
+    #[test]
+    fn forward_matches_manual_chain() {
+        let net = two_layer();
+        let mut s = net.scratch();
+        let mut ops = OpCounter::new();
+        let a_prev: Vec<f32> = (0..10).map(|i| (i % 2) as f32).collect();
+        let x = [0.4, -0.9];
+        net.forward(&a_prev, &x, &mut s, &mut ops);
+
+        let mut s0 = CellScratch::new(6);
+        let mut s1 = CellScratch::new(4);
+        let mut discard = OpCounter::new();
+        net.layer(0).forward(&a_prev[..6], &x, &mut s0, &mut discard);
+        net.layer(1).forward(&a_prev[6..], &s0.a, &mut s1, &mut discard);
+        assert_eq!(s.layers[0].a, s0.a);
+        assert_eq!(s.layers[1].a, s1.a);
+        assert_eq!(s.top().a, s1.a);
+        // and the same total ops were charged
+        assert_eq!(ops.total_macs(), discard.total_macs());
+        // per-layer attribution is populated for both layers
+        assert!(ops.macs_in_layer(0, Phase::Forward) > 0);
+        assert!(ops.macs_in_layer(1, Phase::Forward) > 0);
+        assert_eq!(
+            ops.macs_in(Phase::Forward),
+            ops.macs_in_layer(0, Phase::Forward) + ops.macs_in_layer(1, Phase::Forward)
+        );
+    }
+
+    #[test]
+    fn write_state_concatenates() {
+        let net = two_layer();
+        let mut s = net.scratch();
+        let mut ops = OpCounter::new();
+        net.forward(&vec![0.0; 10], &[1.0, 1.0], &mut s, &mut ops);
+        let mut state = vec![0.0; 10];
+        s.write_state(&mut state);
+        assert_eq!(&state[..6], &s.layers[0].a[..]);
+        assert_eq!(&state[6..], &s.layers[1].a[..]);
+        assert_eq!(s.active_units(), state.iter().filter(|&&v| v != 0.0).count());
+    }
+
+    #[test]
+    fn params_roundtrip_through_concat() {
+        let mut net = two_layer();
+        let mut buf = vec![0.0; net.p()];
+        net.copy_params_into(&mut buf);
+        let orig = buf.clone();
+        for v in buf.iter_mut() {
+            *v += 0.5;
+        }
+        net.load_params(&buf);
+        let mut back = vec![0.0; net.p()];
+        net.copy_params_into(&mut back);
+        for (b, o) in back.iter().zip(&orig) {
+            assert!((b - o - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn single_layer_stack_matches_cell() {
+        let mut rng = Pcg64::new(52);
+        let cell = RnnCell::egru(5, 2, 0.05, 0.3, 0.5, None, &mut rng);
+        let net = LayerStack::single(cell.clone());
+        assert_eq!(net.p(), cell.p());
+        assert_eq!(net.total_units(), cell.n());
+        let mut s = net.scratch();
+        let mut sc = CellScratch::new(5);
+        let mut ops = OpCounter::new();
+        let a0 = vec![0.0; 5];
+        net.forward(&a0, &[0.3, 0.3], &mut s, &mut ops);
+        cell.forward(&a0, &[0.3, 0.3], &mut sc, &mut OpCounter::new());
+        assert_eq!(s.top().a, sc.a);
+    }
+}

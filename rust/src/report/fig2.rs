@@ -6,7 +6,7 @@
 //! the actual matrices are nonzero.
 
 use crate::metrics::OpCounter;
-use crate::nn::{CellScratch, Loss, LossKind, Readout, RnnCell};
+use crate::nn::{CellScratch, LayerStack, Loss, LossKind, Readout, RnnCell};
 use crate::rtrl::{DenseRtrl, GradientEngine, Target};
 use crate::sparse::MaskPattern;
 use crate::util::Pcg64;
@@ -43,7 +43,9 @@ fn regime(name: &str, activity: bool, param_sparse: bool, out: &mut String) {
     };
     let mut readout = Readout::new(2, n, &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-    let mut eng = DenseRtrl::new(&cell, 2);
+    let net = LayerStack::single(cell);
+    let cell = net.layer(0);
+    let mut eng = DenseRtrl::new(&net, 2);
     let mut ops = OpCounter::new();
     eng.begin_sequence();
     // a few steps so M accumulates cross-unit influence
@@ -51,7 +53,7 @@ fn regime(name: &str, activity: bool, param_sparse: bool, out: &mut String) {
     let mut a_prev = vec![0.0; n];
     for t in 0..4 {
         let x = [(t as f32 * 0.9).sin(), (t as f32 * 0.4).cos()];
-        eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+        eng.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
         cell.forward(&a_prev.clone(), &x, &mut scratch, &mut OpCounter::new());
         a_prev.copy_from_slice(&scratch.a);
     }

@@ -1,11 +1,13 @@
 //! Table 1 regeneration: memory and time-per-step costs for every method,
 //! both **analytic** (the paper's factors, instantiated with measured
-//! α/β/ω̃) and **measured** (actual MACs and state words from running each
-//! engine one step on the same cell and input).
+//! α/β/ω̃ and generalized to the block lower-bidiagonal stacked recursion)
+//! and **measured** (actual MACs and state words from running each engine
+//! on the same stack and input), with a per-layer op/memory breakdown for
+//! depth > 1.
 
 use crate::config::AlgorithmKind;
 use crate::metrics::{OpCounter, Phase};
-use crate::nn::{Loss, LossKind, Readout, RnnCell};
+use crate::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
 use crate::rtrl::{GradientEngine, Target};
 use crate::sparse::MaskPattern;
 use crate::train::build_engine;
@@ -20,134 +22,226 @@ pub struct Row {
     pub measured_influence_macs: u64,
     pub measured_total_macs: u64,
     pub measured_memory_words: usize,
+    /// Per-layer influence MACs per step (Jacobian + InfluenceUpdate +
+    /// GradCombine, where layer-attributable).
+    pub per_layer_influence_macs: Vec<u64>,
+    /// Per-layer words per step.
+    pub per_layer_words: Vec<u64>,
 }
 
 /// Cost-model parameters extracted from a run.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct CostParams {
+    /// Hidden width per layer (uniform stacks).
     pub n: usize,
+    /// Total parameter count `P` across layers.
     pub p: usize,
+    /// Per-layer parameter counts.
+    pub layer_p: Vec<usize>,
     pub t: usize,
+    pub layers: usize,
     pub omega_tilde: f64,
     pub alpha_tilde: f64,
     pub beta_tilde: f64,
 }
 
 impl CostParams {
+    /// `Σ_l n_l (n_l + n_{l-1})·P` — the fully dense influence gather
+    /// volume at the *full* column width, which is what [`crate::rtrl::DenseRtrl`]
+    /// actually performs and charges at every layer.
+    fn full_volume(&self) -> f64 {
+        let n = self.n as f64;
+        let mut rows = 0.0;
+        for l in 0..self.layers {
+            let nprev = if l == 0 { 0.0 } else { n };
+            rows += n * (n + nprev);
+        }
+        rows * self.p as f64
+    }
+
+    /// `Σ_l n_l (n_l + n_{l-1})·cols(l)` — the block-structured gather
+    /// volume, where `cols(l)` is layer `l`'s nested panel width
+    /// `Σ_{m≤l} p_m`. This is what the sparse engine's storage exposes:
+    /// strictly below [`Self::full_volume`] at depth ≥ 2 because the
+    /// cross-layer zero blocks are never touched.
+    fn block_volume(&self) -> f64 {
+        let n = self.n as f64;
+        let mut vol = 0.0;
+        let mut cum_p = 0.0;
+        for l in 0..self.layers {
+            cum_p += self.layer_p[l] as f64;
+            let nprev = if l == 0 { 0.0 } else { n };
+            vol += n * (n + nprev) * cum_p;
+        }
+        vol
+    }
+
+    /// `Σ_l n_l · cols(l)` — one block-triangular panel's size.
+    fn panel_words(&self) -> f64 {
+        let n = self.n as f64;
+        let mut words = 0.0;
+        let mut cum_p = 0.0;
+        for l in 0..self.layers {
+            cum_p += self.layer_p[l] as f64;
+            words += n * cum_p;
+        }
+        words
+    }
+
     /// Analytic time-per-step (second term of Table 1, the influence update)
-    /// for a method, in MACs.
+    /// for a method, in MACs. At depth 1 these are exactly the paper's
+    /// factors; for deeper stacks the dense row keeps the full `Σ n(n+n')·P`
+    /// volume its engine pays, while the exact sparse rows scale the
+    /// *block* volume — at depth ≥ 2 they beat dense even at ω̃ = β̃ = 1,
+    /// because exploiting the architectural block structure alone already
+    /// skips the cross-layer zero blocks.
     pub fn analytic_influence(&self, kind: AlgorithmKind) -> f64 {
         let (n, p) = (self.n as f64, self.p as f64);
         let (w, b) = (self.omega_tilde, self.beta_tilde);
+        let nn = self.layers as f64 * n * n; // Σ_l own-block J volume
+        let block = self.block_volume();
         match kind {
-            AlgorithmKind::Bptt => n * n + p,
-            AlgorithmKind::RtrlDense => n * n * p,
-            AlgorithmKind::RtrlParam => w * w * n * n * p,
-            AlgorithmKind::RtrlActivity => b * b * n * n * p,
-            AlgorithmKind::RtrlBoth => w * w * b * b * n * n * p,
+            AlgorithmKind::Bptt => nn + p,
+            AlgorithmKind::RtrlDense => self.full_volume(),
+            AlgorithmKind::RtrlParam => w * w * block,
+            AlgorithmKind::RtrlActivity => b * b * block,
+            AlgorithmKind::RtrlBoth => w * w * b * b * block,
             AlgorithmKind::Snap1 => w * p,
-            AlgorithmKind::Snap2 => w * w * w * n * n * p,
-            AlgorithmKind::Uoro => w * n * n + p,
+            AlgorithmKind::Snap2 => w * w * w * nn * p / self.layers as f64,
+            AlgorithmKind::Uoro => w * nn + p,
         }
     }
 
-    /// Analytic memory (Table 1 memory column), in words.
+    /// Analytic memory (Table 1 memory column), in words. The dense row
+    /// holds the full `N×P` matrix; exact sparse rows scale with the
+    /// block-triangular panel size `Σ_l n·cols(l)`.
     pub fn analytic_memory(&self, kind: AlgorithmKind) -> f64 {
-        let (n, p, t) = (self.n as f64, self.p as f64, self.t as f64);
+        let (p, t) = (self.p as f64, self.t as f64);
+        let big_n = (self.layers * self.n) as f64;
         let (w, b, a) = (self.omega_tilde, self.beta_tilde, self.alpha_tilde);
+        let panel = self.panel_words();
         match kind {
-            AlgorithmKind::Bptt => t * n + p,
-            AlgorithmKind::RtrlDense => n + n * p,
-            AlgorithmKind::RtrlParam => n + w * n * p,
-            AlgorithmKind::RtrlActivity => a * n + b * n * p,
-            AlgorithmKind::RtrlBoth => a * n + w * b * n * p,
-            AlgorithmKind::Snap1 => n + w * p,
-            AlgorithmKind::Snap2 => n + w * w * n * p,
-            AlgorithmKind::Uoro => n + 2.0 * p,
+            AlgorithmKind::Bptt => t * big_n + p,
+            AlgorithmKind::RtrlDense => big_n + big_n * p,
+            AlgorithmKind::RtrlParam => big_n + w * panel,
+            AlgorithmKind::RtrlActivity => a * big_n + b * panel,
+            AlgorithmKind::RtrlBoth => a * big_n + w * b * panel,
+            AlgorithmKind::Snap1 => big_n + w * p,
+            AlgorithmKind::Snap2 => big_n + w * w * panel,
+            AlgorithmKind::Uoro => big_n + 2.0 * p,
         }
     }
 }
 
+/// Measurement of one engine on one stack.
+pub struct Measured {
+    pub influence_macs_per_step: u64,
+    pub total_macs_per_step: u64,
+    pub memory_words: usize,
+    pub alpha_tilde: f64,
+    pub beta_tilde: f64,
+    pub per_layer_influence_macs: Vec<u64>,
+    pub per_layer_words: Vec<u64>,
+}
+
 /// Measure one engine for `steps` timesteps on a fixed random input stream.
-pub fn measure(
-    kind: AlgorithmKind,
-    cell: &RnnCell,
-    steps: usize,
-    seed: u64,
-) -> (u64, u64, usize, f64, f64) {
+pub fn measure(kind: AlgorithmKind, net: &LayerStack, steps: usize, seed: u64) -> Measured {
     let mut rng = Pcg64::new(seed);
-    let mut readout = Readout::new(2, cell.n(), &mut rng);
+    let mut readout = Readout::new(2, net.top_n(), &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-    let mut eng = build_engine(kind, cell, 2);
+    let mut eng = build_engine(kind, net, 2);
     let mut ops = OpCounter::new();
     eng.begin_sequence();
     let mut alpha_sum = 0.0f64;
     let mut beta_sum = 0.0f64;
+    let big_n = net.total_units() as f64;
     for t in 0..steps {
         let x = [rng.normal(), rng.normal()];
         let target = if t + 1 == steps { Target::Class(0) } else { Target::None };
-        let r = eng.step(cell, &mut readout, &mut loss, &x, target, &mut ops);
-        alpha_sum += r.active_units as f64 / cell.n() as f64;
-        beta_sum += r.deriv_units as f64 / cell.n() as f64;
+        let r = eng.step(net, &mut readout, &mut loss, &x, target, &mut ops);
+        alpha_sum += r.active_units as f64 / big_n;
+        beta_sum += r.deriv_units as f64 / big_n;
     }
-    eng.end_sequence(cell, &mut readout, &mut ops);
+    eng.end_sequence(net, &mut readout, &mut ops);
     // "time per step", second term of Table 1: everything that touches the
     // influence/credit machinery. For RTRL engines this is dominated by the
     // J·M recursion; for BPTT it is the reverse pass (GradCombine).
-    let influence = (ops.macs_in(Phase::InfluenceUpdate)
-        + ops.macs_in(Phase::Jacobian)
-        + ops.macs_in(Phase::GradCombine))
-        / steps as u64;
-    let total = ops.total_macs() / steps as u64;
-    (
-        influence,
-        total,
-        eng.state_memory_words(),
-        alpha_sum / steps as f64,
-        beta_sum / steps as f64,
-    )
+    let influence_phases = [Phase::InfluenceUpdate, Phase::Jacobian, Phase::GradCombine];
+    let influence: u64 =
+        influence_phases.iter().map(|&ph| ops.macs_in(ph)).sum::<u64>() / steps as u64;
+    let per_layer_influence_macs: Vec<u64> = (0..net.layers())
+        .map(|l| {
+            influence_phases.iter().map(|&ph| ops.macs_in_layer(l, ph)).sum::<u64>()
+                / steps as u64
+        })
+        .collect();
+    let per_layer_words: Vec<u64> =
+        (0..net.layers()).map(|l| ops.layer_total_words(l) / steps as u64).collect();
+    Measured {
+        influence_macs_per_step: influence,
+        total_macs_per_step: ops.total_macs() / steps as u64,
+        memory_words: eng.state_memory_words(),
+        alpha_tilde: alpha_sum / steps as f64,
+        beta_tilde: beta_sum / steps as f64,
+        per_layer_influence_macs,
+        per_layer_words,
+    }
 }
 
-/// Build the full table for given `n`, ω and number of steps.
-pub fn build(n: usize, omega: f32, steps: usize) -> (CostParams, Vec<Row>) {
+/// Build a uniform EGRU stack for the table.
+fn table_stack(n: usize, layers: usize, omega: f32, rng: &mut Pcg64) -> LayerStack {
+    let mut cells = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let n_in = if l == 0 { 2 } else { n };
+        let mask = if omega > 0.0 {
+            Some(MaskPattern::random(n, n, 1.0 - omega, rng))
+        } else {
+            None
+        };
+        cells.push(RnnCell::egru(n, n_in, 0.1, 0.3, 0.5, mask, rng));
+    }
+    LayerStack::new(cells)
+}
+
+/// Build the full table for given `n`, depth, ω and number of steps.
+pub fn build(n: usize, layers: usize, omega: f32, steps: usize) -> (CostParams, Vec<Row>) {
     let mut rng = Pcg64::new(7);
-    let mask = if omega > 0.0 {
-        Some(MaskPattern::random(n, n, 1.0 - omega, &mut rng))
-    } else {
-        None
-    };
-    let cell = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, mask, &mut rng);
+    let net = table_stack(n, layers, omega, &mut rng);
     // measure α̃/β̃ once from the dense run (identical across engines)
-    let (_, _, _, at, bt) = measure(AlgorithmKind::RtrlDense, &cell, steps, 99);
+    let base = measure(AlgorithmKind::RtrlDense, &net, steps, 99);
     let params = CostParams {
         n,
-        p: cell.p(),
+        p: net.p(),
+        layer_p: (0..layers).map(|l| net.layer(l).p()).collect(),
         t: steps,
-        omega_tilde: cell.omega_tilde() as f64,
-        alpha_tilde: at,
-        beta_tilde: bt,
+        layers,
+        omega_tilde: net.omega_tilde() as f64,
+        alpha_tilde: base.alpha_tilde,
+        beta_tilde: base.beta_tilde,
     };
     let mut rows = Vec::new();
     for kind in AlgorithmKind::all() {
-        let (inf, total, mem, _, _) = measure(kind, &cell, steps, 99);
+        let m = measure(kind, &net, steps, 99);
         rows.push(Row {
             method: kind.name(),
             analytic_time: format!("{:.0}", params.analytic_influence(kind)),
             analytic_memory: format!("{:.0}", params.analytic_memory(kind)),
-            measured_influence_macs: inf,
-            measured_total_macs: total,
-            measured_memory_words: mem,
+            measured_influence_macs: m.influence_macs_per_step,
+            measured_total_macs: m.total_macs_per_step,
+            measured_memory_words: m.memory_words,
+            per_layer_influence_macs: m.per_layer_influence_macs,
+            per_layer_words: m.per_layer_words,
         });
     }
     (params, rows)
 }
 
 /// Formatted text table.
-pub fn render(n: usize, omega: f32, steps: usize) -> String {
-    let (p, rows) = build(n, omega, steps);
+pub fn render(n: usize, layers: usize, omega: f32, steps: usize) -> String {
+    let (p, rows) = build(n, layers, omega, steps);
     let mut s = format!(
-        "Table 1 (measured): n={} p={} T={} ω̃={:.2} α̃={:.2} β̃={:.2}\n",
-        p.n, p.p, p.t, p.omega_tilde, p.alpha_tilde, p.beta_tilde
+        "Table 1 (measured): n={}×L{} P={} T={} ω̃={:.2} α̃={:.2} β̃={:.2}\n",
+        p.n, p.layers, p.p, p.t, p.omega_tilde, p.alpha_tilde, p.beta_tilde
     );
     s.push_str(&format!(
         "{:<15}{:>18}{:>18}{:>14}{:>18}{:>14}\n",
@@ -166,6 +260,35 @@ pub fn render(n: usize, omega: f32, steps: usize) -> String {
             r.measured_memory_words
         ));
     }
+    if layers > 1 {
+        s.push_str(&format!(
+            "\nPer-layer influence MACs/step (block panels; layer l tracks cols of layers 0..=l):\n{:<15}",
+            "method"
+        ));
+        for l in 0..layers {
+            s.push_str(&format!("{:>14}", format!("layer {l}")));
+        }
+        s.push('\n');
+        for r in &rows {
+            s.push_str(&format!("{:<15}", r.method));
+            for &m in &r.per_layer_influence_macs {
+                s.push_str(&format!("{m:>14}"));
+            }
+            s.push('\n');
+        }
+        s.push_str(&format!("\nPer-layer words/step:\n{:<15}", "method"));
+        for l in 0..layers {
+            s.push_str(&format!("{:>14}", format!("layer {l}")));
+        }
+        s.push('\n');
+        for r in &rows {
+            s.push_str(&format!("{:<15}", r.method));
+            for &w in &r.per_layer_words {
+                s.push_str(&format!("{w:>14}"));
+            }
+            s.push('\n');
+        }
+    }
     s
 }
 
@@ -175,7 +298,7 @@ mod tests {
 
     #[test]
     fn sparse_methods_measured_cheaper_than_dense() {
-        let (_, rows) = build(16, 0.8, 8);
+        let (_, rows) = build(16, 1, 0.8, 8);
         let get = |name: &str| {
             rows.iter().find(|r| r.method == name).unwrap().measured_influence_macs
         };
@@ -190,18 +313,66 @@ mod tests {
     #[test]
     fn analytic_formulas_match_paper_at_unity() {
         // with ω̃=β̃=α̃=1 the sparse rows collapse to dense RTRL
-        let p = CostParams { n: 16, p: 608, t: 17, omega_tilde: 1.0, alpha_tilde: 1.0, beta_tilde: 1.0 };
+        let p = CostParams {
+            n: 16,
+            p: 608,
+            layer_p: vec![608],
+            t: 17,
+            layers: 1,
+            omega_tilde: 1.0,
+            alpha_tilde: 1.0,
+            beta_tilde: 1.0,
+        };
         let dense = p.analytic_influence(AlgorithmKind::RtrlDense);
+        // at depth 1 the block volume is the paper's n²p
+        assert_eq!(dense, 16.0 * 16.0 * 608.0);
         for kind in [AlgorithmKind::RtrlParam, AlgorithmKind::RtrlActivity, AlgorithmKind::RtrlBoth] {
             assert_eq!(p.analytic_influence(kind), dense);
         }
+        // at depth 2, even at unity sparsity, the block rows undercut dense:
+        // the dense engine charges full P at every layer, the block engine
+        // only each panel's nested width — matching the measured engines
+        let p2 = CostParams {
+            n: 16,
+            p: 608 + 1056,
+            layer_p: vec![608, 1056],
+            t: 17,
+            layers: 2,
+            omega_tilde: 1.0,
+            alpha_tilde: 1.0,
+            beta_tilde: 1.0,
+        };
+        assert!(
+            p2.analytic_influence(AlgorithmKind::RtrlBoth)
+                < p2.analytic_influence(AlgorithmKind::RtrlDense)
+        );
     }
 
     #[test]
     fn render_contains_all_methods() {
-        let s = render(8, 0.5, 4);
+        let s = render(8, 1, 0.5, 4);
         for m in ["bptt", "rtrl-dense", "rtrl-both", "snap1", "snap2"] {
             assert!(s.contains(m), "missing {m}");
         }
+    }
+
+    /// Depth 2: the per-layer breakdown is emitted and shows layer 0's
+    /// panel (own columns only) costing less than layer 1's (which tracks
+    /// both layers' columns) for the exact sparse engine.
+    #[test]
+    fn depth2_reports_per_layer_rows() {
+        let (_, rows) = build(8, 2, 0.5, 4);
+        let both = rows.iter().find(|r| r.method == "rtrl-both").unwrap();
+        assert_eq!(both.per_layer_influence_macs.len(), 2);
+        assert!(both.per_layer_influence_macs[1] > 0);
+        assert!(
+            both.per_layer_influence_macs[0] < both.per_layer_influence_macs[1],
+            "layer 0 ({}) should be cheaper than layer 1 ({}): narrower panel",
+            both.per_layer_influence_macs[0],
+            both.per_layer_influence_macs[1]
+        );
+        let s = render(8, 2, 0.5, 4);
+        assert!(s.contains("Per-layer influence MACs/step"));
+        assert!(s.contains("layer 1"));
     }
 }

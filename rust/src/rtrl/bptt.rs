@@ -1,10 +1,16 @@
-//! Backpropagation through time — the standard offline baseline.
+//! Backpropagation through time — the standard offline baseline, over the
+//! stacked network.
 //!
-//! Stores the full forward history (the `T·n`-memory growth the paper
-//! motivates against) and runs an exact reverse pass at `end_sequence`.
-//! Because both BPTT and RTRL differentiate the same surrogate-gradient
-//! computational graph, their gradients agree to FP tolerance — the
-//! cross-check used by `rust/tests/grad_equivalence.rs`.
+//! Stores the full forward history (the `T·N`-memory growth the paper
+//! motivates against) and runs an exact reverse pass at `end_sequence`,
+//! mirroring the block lower-bidiagonal forward structure in reverse: at
+//! each stored step the adjoint flows top-down through the layers
+//! (`δa_{l-1} += C_lᵀ δv_l`, the within-step cross-layer path) and then
+//! backwards in time through each layer's own recurrence
+//! (`δa_l^{(t-1)} += J_lᵀ δv_l`). Because both BPTT and RTRL differentiate
+//! the same surrogate-gradient computational graph, their gradients agree
+//! to FP tolerance at any depth — the cross-check used by
+//! `rust/tests/grad_equivalence.rs`.
 //!
 //! The reverse pass does exploit activity sparsity (`δv_k = φ'_k·…` vanishes
 //! where `φ' = 0`), matching Subramoney et al. (2022)'s sparse-BPTT
@@ -13,14 +19,15 @@
 
 use super::{supervised_step, GradientEngine, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
-use crate::nn::{CellScratch, Loss, Readout, RnnCell};
+use crate::nn::{LayerStack, Loss, Readout, StackScratch};
 
 /// One stored timestep of forward history.
 struct Frame {
     x: Vec<f32>,
+    /// Concatenated previous state (`R^N`).
     a_prev: Vec<f32>,
-    scratch: CellScratch,
-    /// Credit assignment c̄_t = ∂L_t/∂a_t (zero vector when unsupervised).
+    scratch: StackScratch,
+    /// Credit assignment c̄_t = ∂L_t/∂a_top,t (zero vector when unsupervised).
     c_bar: Vec<f32>,
 }
 
@@ -34,23 +41,25 @@ pub struct Bptt {
     c_bar: Vec<f32>,
     /// Peak stored frames (memory reporting).
     peak_frames: usize,
-    n: usize,
+    n_total: usize,
     n_in: usize,
+    top_n: usize,
 }
 
 impl Bptt {
-    pub fn new(cell: &RnnCell, readout_n_out: usize) -> Self {
-        let n = cell.n();
+    pub fn new(net: &LayerStack, readout_n_out: usize) -> Self {
+        let n_total = net.total_units();
         Bptt {
             frames: Vec::new(),
-            a_prev: vec![0.0; n],
-            grads: vec![0.0; cell.p()],
+            a_prev: vec![0.0; n_total],
+            grads: vec![0.0; net.p()],
             logits: vec![0.0; readout_n_out],
             dlogits: vec![0.0; readout_n_out],
-            c_bar: vec![0.0; n],
+            c_bar: vec![0.0; net.top_n()],
             peak_frames: 0,
-            n,
-            n_in: cell.n_in(),
+            n_total,
+            n_in: net.n_in(),
+            top_n: net.top_n(),
         }
     }
 }
@@ -68,23 +77,22 @@ impl GradientEngine for Bptt {
 
     fn step(
         &mut self,
-        cell: &RnnCell,
+        net: &LayerStack,
         readout: &mut Readout,
         loss: &mut Loss,
         x: &[f32],
         target: Target,
         ops: &mut OpCounter,
     ) -> StepResult {
-        let n = cell.n();
-        let mut scratch = CellScratch::new(n);
-        cell.forward(&self.a_prev, x, &mut scratch, ops);
+        let mut scratch = net.scratch();
+        net.forward(&self.a_prev, x, &mut scratch, ops);
         let active_units = scratch.active_units();
         let deriv_units = scratch.deriv_units();
 
         let (loss_val, correct) = supervised_step(
             readout,
             loss,
-            &scratch.a,
+            &scratch.top().a,
             target,
             &mut self.logits,
             &mut self.dlogits,
@@ -94,17 +102,18 @@ impl GradientEngine for Bptt {
         let c_bar = if loss_val.is_some() {
             self.c_bar.clone()
         } else {
-            vec![0.0; n]
+            vec![0.0; self.top_n]
         };
 
+        let mut a_new = vec![0.0; self.n_total];
+        scratch.write_state(&mut a_new);
         self.frames.push(Frame {
             x: x.to_vec(),
-            a_prev: self.a_prev.clone(),
-            scratch: scratch.clone(),
+            a_prev: std::mem::replace(&mut self.a_prev, a_new),
+            scratch,
             c_bar,
         });
         self.peak_frames = self.peak_frames.max(self.frames.len());
-        self.a_prev.copy_from_slice(&scratch.a);
 
         StepResult {
             loss: loss_val,
@@ -115,51 +124,79 @@ impl GradientEngine for Bptt {
         }
     }
 
-    fn end_sequence(&mut self, cell: &RnnCell, _readout: &mut Readout, ops: &mut OpCounter) {
-        let n = cell.n();
-        // da = ∂𝓛/∂a_t accumulated backwards; dv = φ'_t ⊙ da.
+    fn end_sequence(&mut self, net: &LayerStack, _readout: &mut Readout, ops: &mut OpCounter) {
+        let n = self.n_total;
+        let layers = net.layers();
+        let top_off = net.layout().state_offset(layers - 1);
+        // da = ∂𝓛/∂a accumulated for the current step (all layers);
+        // carry = own-recurrence adjoint flowing to step t−1.
         let mut da = vec![0.0f32; n];
+        let mut carry = vec![0.0f32; n];
         let mut dv = vec![0.0f32; n];
         for t in (0..self.frames.len()).rev() {
             let frame = &self.frames[t];
-            // da_t = c̄_t + (carried term already in `da` from t+1)
-            for (d, &c) in da.iter_mut().zip(&frame.c_bar) {
+            // credit enters at the top layer
+            for (d, &c) in da[top_off..].iter_mut().zip(&frame.c_bar) {
                 *d += c;
             }
-            let mut bptt_macs = 0u64;
-            for k in 0..n {
-                dv[k] = frame.scratch.dphi[k] * da[k];
-            }
-            bptt_macs += n as u64;
-            // grads += M̄_tᵀ dv (structural nonzeros only)
-            for k in 0..n {
-                if dv[k] == 0.0 {
-                    continue;
+            carry.iter_mut().for_each(|v| *v = 0.0);
+            // top-down: within-step cross-layer adjoint reaches lower
+            // layers before they are processed
+            for l in (0..layers).rev() {
+                ops.set_layer(l);
+                let cell = net.layer(l);
+                let sl = &frame.scratch.layers[l];
+                let nl = cell.n();
+                let soff = net.layout().state_offset(l);
+                let mut bptt_macs = 0u64;
+                for k in 0..nl {
+                    dv[soff + k] = sl.dphi[k] * da[soff + k];
                 }
-                let dvk = dv[k];
-                let grads = &mut self.grads;
-                cell.immediate_row(
-                    &frame.scratch,
-                    &frame.a_prev,
-                    &frame.x,
-                    k,
-                    |pi, val| grads[pi] += dvk * val,
-                    ops,
-                );
-            }
-            // da_{t-1} = J_tᵀ dv ( = Σ_k dv_k · ∂v_k/∂a_l )
-            da.iter_mut().for_each(|d| *d = 0.0);
-            for k in 0..n {
-                if dv[k] == 0.0 {
-                    continue;
+                bptt_macs += nl as u64;
+                // grads += M̄_lᵀ dv_l (structural nonzeros only)
+                let input_l: &[f32] =
+                    if l == 0 { &frame.x } else { &frame.scratch.layers[l - 1].a };
+                let a_prev_l = &frame.a_prev[soff..soff + nl];
+                let poff = net.layout().param_offset(l);
+                for k in 0..nl {
+                    if dv[soff + k] == 0.0 {
+                        continue;
+                    }
+                    let dvk = dv[soff + k];
+                    let grads = &mut self.grads;
+                    cell.immediate_row(
+                        sl,
+                        a_prev_l,
+                        input_l,
+                        k,
+                        |pi, val| grads[poff + pi] += dvk * val,
+                        ops,
+                    );
                 }
-                let dvk = dv[k];
-                for &l in cell.kept_cols(k) {
-                    da[l as usize] += dvk * cell.dv_da(&frame.scratch, k, l as usize);
-                    bptt_macs += 1 + cell.dv_da_cost();
+                // own recurrence: carry_l = J_lᵀ dv_l (reaches step t−1)
+                for k in 0..nl {
+                    if dv[soff + k] == 0.0 {
+                        continue;
+                    }
+                    let dvk = dv[soff + k];
+                    for &c in cell.kept_cols(k) {
+                        carry[soff + c as usize] += dvk * cell.dv_da(sl, k, c as usize);
+                        bptt_macs += 1 + cell.dv_da_cost();
+                    }
+                    // cross-layer: δa_{l-1} += C_lᵀ dv_l (same step, dense)
+                    if l > 0 {
+                        let soff_prev = net.layout().state_offset(l - 1);
+                        let nprev = net.layer(l - 1).n();
+                        for j in 0..nprev {
+                            da[soff_prev + j] += dvk * cell.dv_dx(sl, k, j);
+                        }
+                        bptt_macs += nprev as u64 * (1 + cell.dv_dx_cost());
+                    }
                 }
+                ops.macs(Phase::GradCombine, bptt_macs);
             }
-            ops.macs(Phase::GradCombine, bptt_macs);
+            ops.clear_layer();
+            std::mem::swap(&mut da, &mut carry);
         }
         self.frames.clear();
     }
@@ -173,31 +210,31 @@ impl GradientEngine for Bptt {
     }
 
     fn state_memory_words(&self) -> usize {
-        // x + a_prev + scratch(7n) + c̄ per frame — the T·n growth term.
-        self.peak_frames * (self.n_in + 9 * self.n)
+        // x + a_prev(N) + scratch(7N) + c̄ per frame — the T·N growth term.
+        self.peak_frames * (self.n_in + 8 * self.n_total + self.top_n)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::LossKind;
+    use crate::nn::{LossKind, RnnCell};
     use crate::util::Pcg64;
 
     #[test]
     fn memory_grows_with_sequence_length() {
         let mut rng = Pcg64::new(30);
-        let cell = RnnCell::egru(6, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let net = LayerStack::single(RnnCell::egru(6, 2, 0.1, 0.3, 0.5, None, &mut rng));
         let mut readout = Readout::new(2, 6, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-        let mut eng = Bptt::new(&cell, 2);
+        let mut eng = Bptt::new(&net, 2);
         let mut ops = OpCounter::new();
         eng.begin_sequence();
         for _ in 0..10 {
-            eng.step(&cell, &mut readout, &mut loss, &[0.5, 0.1], Target::None, &mut ops);
+            eng.step(&net, &mut readout, &mut loss, &[0.5, 0.1], Target::None, &mut ops);
         }
         assert_eq!(eng.frames.len(), 10);
-        eng.end_sequence(&cell, &mut readout, &mut ops);
+        eng.end_sequence(&net, &mut readout, &mut ops);
         assert!(eng.frames.is_empty());
         assert_eq!(eng.peak_frames, 10);
     }
@@ -205,19 +242,44 @@ mod tests {
     #[test]
     fn grad_nonzero_for_learnable_sequence() {
         let mut rng = Pcg64::new(31);
-        let cell = RnnCell::egru(8, 2, 0.05, 0.3, 0.5, None, &mut rng);
+        let net = LayerStack::single(RnnCell::egru(8, 2, 0.05, 0.3, 0.5, None, &mut rng));
         let mut readout = Readout::new(2, 8, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-        let mut eng = Bptt::new(&cell, 2);
+        let mut eng = Bptt::new(&net, 2);
         let mut ops = OpCounter::new();
         eng.begin_sequence();
         for t in 0..6 {
             let x = [(t as f32 * 0.7).sin(), (t as f32 * 0.3).cos()];
             let target = if t == 5 { Target::Class(0) } else { Target::None };
-            eng.step(&cell, &mut readout, &mut loss, &x, target, &mut ops);
+            eng.step(&net, &mut readout, &mut loss, &x, target, &mut ops);
         }
-        eng.end_sequence(&cell, &mut readout, &mut ops);
+        eng.end_sequence(&net, &mut readout, &mut ops);
         let nonzero = eng.grads().iter().filter(|&&g| g != 0.0).count();
         assert!(nonzero > 0, "expected some nonzero grads");
+    }
+
+    /// Depth 2: the within-step cross-layer adjoint must reach layer 0 —
+    /// with supervision only at the top, layer 0's parameters still get a
+    /// gradient.
+    #[test]
+    fn depth2_credit_reaches_bottom_layer() {
+        let mut rng = Pcg64::new(32);
+        let l0 = RnnCell::egru(6, 2, 0.05, 0.3, 0.9, None, &mut rng);
+        let l1 = RnnCell::egru(4, 6, 0.05, 0.3, 0.9, None, &mut rng);
+        let net = LayerStack::new(vec![l0, l1]);
+        let mut readout = Readout::new(2, 4, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut eng = Bptt::new(&net, 2);
+        let mut ops = OpCounter::new();
+        eng.begin_sequence();
+        let mut xr = Pcg64::new(4);
+        for t in 0..8 {
+            let target = if t >= 6 { Target::Class(t % 2) } else { Target::None };
+            eng.step(&net, &mut readout, &mut loss, &[xr.normal(), xr.normal()], target, &mut ops);
+        }
+        eng.end_sequence(&net, &mut readout, &mut ops);
+        let p0 = net.layer(0).p();
+        assert!(eng.grads()[..p0].iter().any(|&g| g != 0.0), "layer 0 got no credit");
+        assert!(eng.grads()[p0..].iter().any(|&g| g != 0.0), "layer 1 got no credit");
     }
 }

@@ -1,11 +1,17 @@
-//! Column compaction for parameter sparsity.
+//! Column compaction for parameter sparsity, per layer and stacked.
 //!
 //! With a fixed mask, entire columns of `M`/`M̄` are structurally zero for
 //! the dropped recurrent parameters and stay zero across timesteps (§5).
-//! A [`ColumnMap`] stores only the `ω̃p`-ish live columns: the mapping
-//! between flat parameter indices (`R^p`) and compact column indices.
+//! A [`ColumnMap`] stores only the `ω̃p`-ish live columns of one layer: the
+//! mapping between flat parameter indices (`R^p`) and compact column
+//! indices. A [`StackColumnMap`] concatenates per-layer maps for a
+//! [`LayerStack`]: layer `l`'s influence panel tracks the compact columns of
+//! layers `0..=l` (the block lower-triangular column structure), so the
+//! compact column space of layer `l` is a *prefix* of layer `l+1`'s — which
+//! is what lets the cross-layer gather accumulate a lower panel row into the
+//! leading slice of an upper panel row with no index translation.
 
-use crate::nn::RnnCell;
+use crate::nn::{LayerStack, RnnCell};
 
 /// Sentinel for "parameter not tracked" in the reverse map.
 const UNTRACKED: u32 = u32::MAX;
@@ -122,6 +128,98 @@ impl ColumnMap {
     }
 }
 
+/// Per-layer [`ColumnMap`]s plus cumulative offsets over a [`LayerStack`].
+///
+/// Global compact column of layer `m`'s local parameter `pi` is
+/// `compact_offset(m) + maps[m].compact_of(pi)`; layer `l`'s influence
+/// panel is `cum_cols(l)` wide (columns of layers `0..=l` only — the
+/// structurally-zero columns for deeper layers are never allocated).
+#[derive(Debug, Clone)]
+pub struct StackColumnMap {
+    maps: Vec<ColumnMap>,
+    /// `compact_offsets[l]` = Σ_{m<l} maps[m].len(); last entry = total.
+    compact_offsets: Vec<usize>,
+    /// Global flat parameter count `P`.
+    p_total: usize,
+}
+
+impl StackColumnMap {
+    /// Build from a stack. `compact` selects whether masked recurrent
+    /// parameters are compacted out (`Parameter`/`Both` modes) or every
+    /// parameter keeps a column.
+    pub fn from_stack(net: &LayerStack, compact: bool) -> Self {
+        let maps: Vec<ColumnMap> = net
+            .cells()
+            .iter()
+            .map(|c| if compact { ColumnMap::from_cell(c) } else { ColumnMap::full(c.p()) })
+            .collect();
+        let mut compact_offsets = Vec::with_capacity(maps.len() + 1);
+        let mut acc = 0;
+        for m in &maps {
+            compact_offsets.push(acc);
+            acc += m.len();
+        }
+        compact_offsets.push(acc);
+        StackColumnMap { maps, compact_offsets, p_total: net.p() }
+    }
+
+    /// Number of layers.
+    #[inline]
+    pub fn layers(&self) -> usize {
+        self.maps.len()
+    }
+
+    /// Per-layer map.
+    #[inline]
+    pub fn layer(&self, l: usize) -> &ColumnMap {
+        &self.maps[l]
+    }
+
+    /// Global compact-column offset of layer `l`'s own columns.
+    #[inline]
+    pub fn compact_offset(&self, l: usize) -> usize {
+        self.compact_offsets[l]
+    }
+
+    /// Width of layer `l`'s influence panel: compact columns of layers
+    /// `0..=l`.
+    #[inline]
+    pub fn cum_cols(&self, l: usize) -> usize {
+        self.compact_offsets[l + 1]
+    }
+
+    /// Total compact columns across all layers (= top panel width).
+    #[inline]
+    pub fn total_cols(&self) -> usize {
+        *self.compact_offsets.last().unwrap()
+    }
+
+    /// Total flat parameter count `P`.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p_total
+    }
+
+    /// Global compact column of layer `l`'s *local* flat parameter `pi`
+    /// (must be tracked — structure guarantees it on the immediate path).
+    #[inline]
+    pub fn global_compact_of(&self, l: usize, pi: usize) -> usize {
+        self.compact_offsets[l] + self.maps[l].compact_of_unchecked(pi)
+    }
+
+    /// Scatter a full-width compact vector into a dense `R^P` buffer
+    /// (global flat layout of [`crate::nn::NetworkLayout`]).
+    pub fn scatter_add(&self, net: &LayerStack, compact: &[f32], scale: f32, dense: &mut [f32]) {
+        debug_assert_eq!(compact.len(), self.total_cols());
+        debug_assert_eq!(dense.len(), self.p_total);
+        for (l, map) in self.maps.iter().enumerate() {
+            let cslice = &compact[self.compact_offsets[l]..self.compact_offsets[l + 1]];
+            let dslice = &mut dense[net.layout().param_range(l)];
+            map.scatter_add(cslice, scale, dslice);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +267,50 @@ mod tests {
         for j in 0..m.len() {
             assert_eq!(m.compact_of(m.param_of(j)), Some(j));
         }
+    }
+
+    #[test]
+    fn stack_map_prefix_structure() {
+        let mut rng = Pcg64::new(4);
+        let n = 6;
+        let mask0 = MaskPattern::random(n, n, 0.5, &mut rng);
+        let mask1 = MaskPattern::random(n, n, 0.5, &mut rng);
+        let l0 = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, Some(mask0), &mut rng);
+        let l1 = RnnCell::egru(n, n, 0.1, 0.3, 0.5, Some(mask1), &mut rng);
+        let net = LayerStack::new(vec![l0, l1]);
+        let sm = StackColumnMap::from_stack(&net, true);
+        assert_eq!(sm.layers(), 2);
+        // layer 0's panel width is a strict prefix of layer 1's
+        assert_eq!(sm.cum_cols(0), sm.layer(0).len());
+        assert_eq!(sm.cum_cols(1), sm.layer(0).len() + sm.layer(1).len());
+        assert_eq!(sm.total_cols(), sm.cum_cols(1));
+        assert!(sm.total_cols() < net.p(), "compaction dropped masked columns");
+        // global compact index of layer 1's first tracked param lands after
+        // all of layer 0's columns
+        let pi = sm.layer(1).param_of(0);
+        assert_eq!(sm.global_compact_of(1, pi), sm.compact_offset(1));
+        // dense (non-compacting) map covers everything
+        let full = StackColumnMap::from_stack(&net, false);
+        assert_eq!(full.total_cols(), net.p());
+    }
+
+    #[test]
+    fn stack_scatter_add_respects_layer_offsets() {
+        let mut rng = Pcg64::new(5);
+        let n = 4;
+        let l0 = RnnCell::evrnn(n, 2, 0.0, 0.3, 0.5, None, &mut rng);
+        let l1 = RnnCell::evrnn(n, n, 0.0, 0.3, 0.5, None, &mut rng);
+        let net = LayerStack::new(vec![l0, l1]);
+        let sm = StackColumnMap::from_stack(&net, true);
+        let compact: Vec<f32> = (0..sm.total_cols()).map(|j| j as f32 + 1.0).collect();
+        let mut dense = vec![0.0; net.p()];
+        sm.scatter_add(&net, &compact, 1.0, &mut dense);
+        // dense cells: identity maps, so layer 1's first value lands at the
+        // global param offset of layer 1
+        let off1 = net.layout().param_offset(1);
+        assert_eq!(dense[off1], compact[sm.compact_offset(1)]);
+        assert_eq!(dense[0], compact[0]);
+        assert_eq!(dense.iter().filter(|&&v| v != 0.0).count(), sm.total_cols());
     }
 
     #[test]

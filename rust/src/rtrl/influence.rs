@@ -1,4 +1,5 @@
-//! Ping-pong influence-matrix buffers with active-row tracking.
+//! Ping-pong influence-matrix buffers with active-row tracking — one
+//! [`InfluenceBuffers`] per layer, collected in a [`StackedInfluence`].
 //!
 //! `M^{(t)}` has `β̃^{(t)}n` nonzero rows (paper Eq. 10). The buffers hold
 //! two `n × pc` panels (current and next) plus the active-row set of each;
@@ -6,6 +7,14 @@
 //! or written, which is exactly how the `β̃²` factor arises: the gather for
 //! a new row touches only prev-active rows, and only deriv-active rows are
 //! produced.
+//!
+//! In a stack, layer `l`'s panel is `n_l × cum_pc(l)` — its columns span
+//! the compact columns of layers `0..=l` only, never the structurally-zero
+//! blocks for deeper layers (see `rtrl::column_map::StackColumnMap`). The
+//! cross-layer term of the block recursion reads layer `l−1`'s **next**
+//! panel (already written this step) and accumulates into the leading
+//! `cum_pc(l−1)` slice of layer `l`'s next row; [`StackedInfluence`]
+//! hands out exactly that disjoint pair of borrows.
 
 use crate::sparse::RowSet;
 use crate::tensor::Matrix;
@@ -177,9 +186,74 @@ impl InfluenceBuffers {
         self.cur.len() + self.next.len()
     }
 
-    /// Words *touched* this step (β̃-scaled): rows written plus rows read.
-    pub fn touched_words(&self, rows_read: usize) -> usize {
-        (self.active_next.len() + rows_read) * self.pc()
+}
+
+/// Per-layer influence buffers for a stacked network.
+#[derive(Debug, Clone)]
+pub struct StackedInfluence {
+    layers: Vec<InfluenceBuffers>,
+}
+
+impl StackedInfluence {
+    /// `dims[l] = (n_l, panel_cols_l)` where `panel_cols_l` is the
+    /// cumulative compact-column count of layers `0..=l`.
+    pub fn new(dims: &[(usize, usize)]) -> Self {
+        StackedInfluence {
+            layers: dims.iter().map(|&(n, pc)| InfluenceBuffers::new(n, pc)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    #[inline]
+    pub fn layer(&self, l: usize) -> &InfluenceBuffers {
+        &self.layers[l]
+    }
+
+    #[inline]
+    pub fn layer_mut(&mut self, l: usize) -> &mut InfluenceBuffers {
+        &mut self.layers[l]
+    }
+
+    /// Disjoint borrow of `(layer l−1 readable, layer l writable)` — the
+    /// cross-layer gather pattern. Layer 0 has no lower layer.
+    #[inline]
+    pub fn lower_and_current(&mut self, l: usize) -> (Option<&InfluenceBuffers>, &mut InfluenceBuffers) {
+        if l == 0 {
+            (None, &mut self.layers[0])
+        } else {
+            let (lo, hi) = self.layers.split_at_mut(l);
+            (Some(&lo[l - 1]), &mut hi[0])
+        }
+    }
+
+    /// Reset every panel to `M = 0` (start of sequence).
+    pub fn reset(&mut self) {
+        self.layers.iter_mut().for_each(InfluenceBuffers::reset);
+    }
+
+    /// Begin a new step: clear every layer's next-panel active set.
+    pub fn begin_next(&mut self) {
+        self.layers.iter_mut().for_each(InfluenceBuffers::begin_next);
+    }
+
+    /// Rotate every layer: next becomes current.
+    pub fn advance(&mut self) {
+        self.layers.iter_mut().for_each(InfluenceBuffers::advance);
+    }
+
+    /// Σ memory words across layer panels (Table-1 memory column).
+    pub fn memory_words(&self) -> usize {
+        self.layers.iter().map(InfluenceBuffers::memory_words).sum()
+    }
+
+    /// Σ nonzero entries in the next panels (stored blocks only — the
+    /// never-materialized cross-layer blocks are zero by construction).
+    pub fn next_nonzero_total(&self) -> usize {
+        self.layers.iter().map(InfluenceBuffers::next_nonzero_count).sum()
     }
 }
 
@@ -218,6 +292,32 @@ mod tests {
         row.copy_from_slice(&[1.0, 0.0, 2.0, 0.0]);
         // 2 nonzero out of 16 logical entries
         assert!((b.next_zero_fraction() - 14.0 / 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stacked_buffers_expose_disjoint_lower_and_current() {
+        let mut s = StackedInfluence::new(&[(3, 4), (2, 10)]);
+        assert_eq!(s.layers(), 2);
+        assert_eq!(s.layer(0).pc(), 4);
+        assert_eq!(s.layer(1).pc(), 10);
+        s.begin_next();
+        s.layer_mut(0).claim_next_row(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        {
+            let (lower, cur) = s.lower_and_current(1);
+            let lower = lower.expect("layer 1 has a lower layer");
+            assert!(lower.active_next().contains(1));
+            // cross-layer accumulate into the 4-column prefix of layer 1's row
+            let row = cur.claim_next_row(0);
+            for (r, v) in row[..4].iter_mut().zip(lower.next_row(1)) {
+                *r = 2.0 * v;
+            }
+        }
+        assert_eq!(&s.layer(1).next_row(0)[..4], &[2.0, 4.0, 6.0, 8.0]);
+        let (lower, _) = s.lower_and_current(0);
+        assert!(lower.is_none());
+        assert_eq!(s.memory_words(), 2 * (3 * 4) + 2 * (2 * 10));
+        s.advance();
+        assert!(s.layer(0).active_cur().contains(1));
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Gradient engines: exact RTRL (dense and sparse), the SnAp
-//! approximations, UORO and BPTT.
+//! approximations, UORO and BPTT — all operating on stacked recurrent
+//! networks ([`crate::nn::LayerStack`]).
 //!
 //! All engines implement [`GradientEngine`] and are interchangeable in the
 //! trainer, the sweep coordinator and the `bench` subsystem — nothing
@@ -9,9 +10,36 @@
 //! * [`DenseRtrl`], [`SparseRtrl`] (in all three sparsity modes) and
 //!   [`Bptt`] compute the **same gradient** up to floating-point
 //!   reassociation — the paper's central claim is that sparsity is exploited
-//!   *"without using any approximations"*;
+//!   *"without using any approximations"*, and it survives depth;
 //! * [`Snap1`]/[`Snap2`] are the Menick et al. (2020) comparison points and
 //!   deliberately approximate; [`Uoro`] is the stochastic rank-1 baseline.
+//!
+//! # The stacked Jacobian: block lower-bidiagonal
+//!
+//! Over the concatenated state `a = [a_0 … a_{L-1}] ∈ R^N`, one step of the
+//! stack gives layer `l` two dependency blocks (see `nn::stack`):
+//!
+//! ```text
+//! ∂a_l^{(t)}/∂a_l^{(t-1)}     diagonal block    (masked recurrent weights)
+//! ∂a_l^{(t)}/∂a_{l-1}^{(t)}   sub-diagonal block (dense input weights)
+//! ```
+//!
+//! so the exact influence recursion propagates layer-by-layer *within* a
+//! step: layer `l`'s new rows gather from its own previous rows (`M_l^{(t-1)}`)
+//! and from layer `l−1`'s **already-updated** rows (`M_{l-1}^{(t)}`), then add
+//! the immediate term and apply the `φ'` row gate:
+//!
+//! ```text
+//! M_l^{(t)} = φ'_l ⊙ [ J_l·M_l^{(t-1)} + C_l·M_{l-1}^{(t)} + M̄_l ]
+//! ```
+//!
+//! Columns follow the same order as parameters (layer-major), and because a
+//! parameter of layer `m` can never influence a shallower layer's state,
+//! `M` is block lower-*triangular* over (layer-row × layer-column): layer
+//! `l`'s rows span only the parameters of layers `0..=l`. Activity sparsity
+//! still zeroes entire rows per layer (`φ'(v_k) = 0`), and parameter
+//! sparsity still drops columns — both exactly as in the single-layer
+//! derivation (paper §4–§5), block by block.
 //!
 //! # The `GradientEngine` contract
 //!
@@ -23,7 +51,12 @@
 //! **Op-count accounting** is part of the contract, not an optional extra:
 //! every multiply-accumulate an engine performs must be charged to the
 //! [`OpCounter`] passed into `step`/`end_sequence`, attributed to the
-//! matching [`crate::metrics::Phase`], and
+//! matching [`crate::metrics::Phase`] **and**, for work attributable to one
+//! layer, performed inside that layer's [`OpCounter::set_layer`] scope so
+//! the `(layer, Phase)` breakdown stays truthful. In particular the
+//! structural zero blocks of the stacked `M` (layer `l`'s rows over deeper
+//! layers' parameter columns) must never be charged — the bench report
+//! exposes per-layer counters precisely so this is checkable.
 //! [`GradientEngine::state_memory_words`] must report the measured live
 //! state footprint (Table 1's memory column). The `bench` subsystem and the
 //! Table-1 report derive every per-engine cost figure from these counters,
@@ -38,14 +71,15 @@ pub mod sparse;
 pub mod uoro;
 
 pub use bptt::Bptt;
-pub use column_map::ColumnMap;
+pub use column_map::{ColumnMap, StackColumnMap};
 pub use dense::DenseRtrl;
+pub use influence::{InfluenceBuffers, StackedInfluence};
 pub use snap::{Snap1, Snap2};
 pub use sparse::{SparseRtrl, SparsityMode};
 pub use uoro::Uoro;
 
 use crate::metrics::OpCounter;
-use crate::nn::{Loss, Readout, RnnCell};
+use crate::nn::{LayerStack, Loss, Readout};
 
 /// Supervision for one timestep.
 #[derive(Debug, Clone, Copy)]
@@ -124,11 +158,13 @@ impl SequenceSummary {
 /// RTRL variants accumulate gradients online during `step`; BPTT materializes
 /// them in `end_sequence`. Readout gradients accumulate into the `Readout`
 /// (scaled by the trainer), recurrent-parameter gradients into `grads()`
-/// (dense layout `R^p`, structurally zero at masked positions).
+/// (concatenated layer-major layout `R^P` per
+/// [`crate::nn::NetworkLayout`], structurally zero at masked positions).
 ///
 /// Every MAC performed must be charged to the step's [`OpCounter`] under the
-/// matching [`crate::metrics::Phase`] — see the module docs for why this is
-/// load-bearing.
+/// matching [`crate::metrics::Phase`], inside the owning layer's
+/// [`OpCounter::set_layer`] scope where attributable — see the module docs
+/// for why this is load-bearing.
 pub trait GradientEngine {
     /// Short name for reports ("rtrl-dense", "snap1", …).
     fn name(&self) -> &'static str;
@@ -136,10 +172,10 @@ pub trait GradientEngine {
     /// Reset per-sequence state (influence matrix, histories, gradients).
     fn begin_sequence(&mut self);
 
-    /// Advance one timestep.
+    /// Advance one timestep of the whole stack.
     fn step(
         &mut self,
-        cell: &RnnCell,
+        net: &LayerStack,
         readout: &mut Readout,
         loss: &mut Loss,
         x: &[f32],
@@ -148,9 +184,10 @@ pub trait GradientEngine {
     ) -> StepResult;
 
     /// Finish the sequence (no-op for online methods; backward pass for BPTT).
-    fn end_sequence(&mut self, cell: &RnnCell, readout: &mut Readout, ops: &mut OpCounter);
+    fn end_sequence(&mut self, net: &LayerStack, readout: &mut Readout, ops: &mut OpCounter);
 
-    /// Accumulated `∂𝓛/∂w` for the last completed sequence (dense `R^p`).
+    /// Accumulated `∂𝓛/∂w` for the last completed sequence (dense `R^P`,
+    /// concatenated layer-major).
     fn grads(&self) -> &[f32];
 
     /// Clear gradient accumulators while *keeping* sequence state (influence
@@ -176,7 +213,7 @@ pub trait GradientEngine {
     /// tests run engines, so it must stay equivalent to the manual protocol.
     fn run_sequence(
         &mut self,
-        cell: &RnnCell,
+        net: &LayerStack,
         readout: &mut Readout,
         loss: &mut Loss,
         inputs: &[Vec<f32>],
@@ -187,10 +224,10 @@ pub trait GradientEngine {
         let mut summary = SequenceSummary::default();
         for (t, x) in inputs.iter().enumerate() {
             let target = targets.get(t).copied().unwrap_or(Target::None);
-            let r = self.step(cell, readout, loss, x, target, ops);
+            let r = self.step(net, readout, loss, x, target, ops);
             summary.absorb(&r);
         }
-        self.end_sequence(cell, readout, ops);
+        self.end_sequence(net, readout, ops);
         summary
     }
 }
@@ -236,7 +273,7 @@ mod tests {
     #[test]
     fn run_sequence_matches_manual_protocol() {
         let mut rng = Pcg64::new(81);
-        let cell = RnnCell::egru(6, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let net = LayerStack::single(crate::nn::RnnCell::egru(6, 2, 0.1, 0.3, 0.5, None, &mut rng));
         let inputs: Vec<Vec<f32>> = (0..5)
             .map(|t| vec![(t as f32 * 0.7).sin(), (t as f32 * 0.4).cos()])
             .collect();
@@ -246,24 +283,24 @@ mod tests {
         let mut readout = Readout::new(2, 6, &mut r1);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
         let mut ops = OpCounter::new();
-        let mut eng = DenseRtrl::new(&cell, 2);
-        let summary = eng.run_sequence(&cell, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+        let mut eng = DenseRtrl::new(&net, 2);
+        let summary = eng.run_sequence(&net, &mut readout, &mut loss, &inputs, &targets, &mut ops);
         let g_auto = eng.grads().to_vec();
 
         let mut r2 = Pcg64::new(9);
         let mut readout2 = Readout::new(2, 6, &mut r2);
         let mut loss2 = Loss::new(LossKind::CrossEntropy, 2);
         let mut ops2 = OpCounter::new();
-        let mut eng2 = DenseRtrl::new(&cell, 2);
+        let mut eng2 = DenseRtrl::new(&net, 2);
         eng2.begin_sequence();
         let mut loss_sum = 0.0;
         for (t, x) in inputs.iter().enumerate() {
-            let r = eng2.step(&cell, &mut readout2, &mut loss2, x, targets[t], &mut ops2);
+            let r = eng2.step(&net, &mut readout2, &mut loss2, x, targets[t], &mut ops2);
             if let Some(l) = r.loss {
                 loss_sum += l;
             }
         }
-        eng2.end_sequence(&cell, &mut readout2, &mut ops2);
+        eng2.end_sequence(&net, &mut readout2, &mut ops2);
 
         assert_eq!(summary.steps, 5);
         assert_eq!(summary.supervised_steps, 2);

@@ -1,28 +1,43 @@
 //! SnAp-n — the *approximate* RTRL baselines of Menick et al. (2020),
-//! included as Table 1's comparison rows.
+//! included as Table 1's comparison rows, on the stacked network.
 //!
 //! SnAp-n keeps only influence-matrix entries `(k, p)` reachable from
 //! parameter `p` within `n` steps of the unrolled graph:
 //!
-//! * **SnAp-1** — the pattern of `M̄` itself (parameter `p` only influences
-//!   its own row's unit), collapsing the recursion to a diagonal update
-//!   `M_kp ← J_kk·M_kp + M̄_kp`. Cheap (`O(ω̃p)` per step) but biased.
-//! * **SnAp-2** — two-step reachability: `(k,p)` is kept when `J_kl` is
-//!   structurally nonzero for some `l` with `p` in `l`'s fan-in (plus the
-//!   SnAp-1 pattern). With a dense cell this is the full matrix (SnAp-2 ≡
-//!   exact RTRL); under parameter sparsity it is an `ω̃²np`-sized pattern.
+//! * **SnAp-1** — the pattern of the layer-local `M̄` (parameter `p` only
+//!   influences its own row's unit), collapsing the recursion to a diagonal
+//!   update `M_kp ← J_kk·M_kp + M̄_kp`. Cheap (`O(ω̃p)` per step) but biased.
+//! * **SnAp-2** — two-step reachability within the layer: `(k,p)` is kept
+//!   when `J_kl` is structurally nonzero for some `l` with `p` in `l`'s
+//!   fan-in (plus the SnAp-1 pattern). With a dense single layer this is
+//!   the full matrix (SnAp-2 ≡ exact RTRL); under parameter sparsity it is
+//!   an `ω̃²np`-sized pattern.
 //!
-//! Contrast with this repo's sparse engines: SnAp *discards* true nonzero
-//! influence terms outside the pattern (approximate), while activity/
-//! parameter sparsity skips only *structural zeros* (exact).
+//! # Depth: per-layer panels + within-step credit backprop
+//!
+//! On a [`LayerStack`] the SnAp engines keep each layer's influence slab
+//! *layer-local* (rows over the layer's own parameters only) and route
+//! credit to lower layers by backpropagating `c̄` down the stack within the
+//! step (`c̄_{l-1} += C_lᵀ(φ'_l ⊙ c̄_l)`) — the standard "RTRL through time,
+//! backprop through depth" decomposition for stacked RNNs. This keeps every
+//! layer trainable while dropping the cross-layer *temporal* influence
+//! paths (a past parameter's effect on an upper layer's recurrent state),
+//! which is exactly the kind of truncation SnAp already makes within a
+//! layer. Contrast with this repo's sparse engines: SnAp *discards* true
+//! nonzero influence terms outside the pattern (approximate), while
+//! activity/parameter sparsity skips only *structural zeros* (exact; see
+//! `rtrl::sparse` for the exact block treatment of depth). At depth 1 the
+//! decomposition degenerates to the original single-cell SnAp exactly.
 
 use super::{supervised_step, GradientEngine, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
-use crate::nn::{CellScratch, Loss, Readout, RnnCell};
+use crate::nn::{LayerStack, Loss, Readout, StackScratch};
 
-/// Shared machinery: a per-unit sparse influence slab `M[k] over pattern[k]`.
+/// Shared machinery: a per-unit sparse influence slab `M[k] over pattern[k]`,
+/// with global (concatenated) rows and *global* flat parameter indices in
+/// the patterns.
 struct PatternInfluence {
-    /// Sorted flat param indices kept per unit.
+    /// Sorted global flat param indices kept per global unit.
     pattern: Vec<Vec<u32>>,
     /// Values aligned with `pattern` (current step).
     cur: Vec<Vec<f32>>,
@@ -52,29 +67,80 @@ impl PatternInfluence {
     }
 }
 
-/// SnAp-1: diagonal-Jacobian approximation on the `M̄` pattern.
+/// Shared across Snap-1/2: after the supervised step, extend the top-layer
+/// credit vector to every layer by backprop through the within-step stack
+/// cascade, then fold `c̄_full ⊙ rows` into `grads`.
+fn stacked_credit(
+    net: &LayerStack,
+    scratch: &StackScratch,
+    c_bar_top: &[f32],
+    c_bar_full: &mut [f32],
+    ops: &mut OpCounter,
+) {
+    let layers = net.layers();
+    let top_off = net.layout().state_offset(layers - 1);
+    c_bar_full.iter_mut().for_each(|v| *v = 0.0);
+    c_bar_full[top_off..].copy_from_slice(c_bar_top);
+    let mut macs = 0u64;
+    for l in (1..layers).rev() {
+        let cell = net.layer(l);
+        let sl = &scratch.layers[l];
+        let soff = net.layout().state_offset(l);
+        let soff_prev = net.layout().state_offset(l - 1);
+        let nprev = net.layer(l - 1).n();
+        for k in 0..cell.n() {
+            let coef = sl.dphi[k] * c_bar_full[soff + k];
+            if coef == 0.0 {
+                continue;
+            }
+            for j in 0..nprev {
+                c_bar_full[soff_prev + j] += coef * cell.dv_dx(sl, k, j);
+            }
+            macs += nprev as u64 * (1 + cell.dv_dx_cost());
+        }
+    }
+    ops.macs(Phase::GradCombine, macs);
+}
+
+/// Build per-unit fan-in patterns with global flat indices, layer by layer.
+fn layer_local_fan_in(net: &LayerStack) -> Vec<Vec<u32>> {
+    let mut pattern = Vec::with_capacity(net.total_units());
+    for l in 0..net.layers() {
+        let poff = net.layout().param_offset(l) as u32;
+        for k in 0..net.layer(l).n() {
+            let mut row = net.layer(l).fan_in_params(k);
+            for pi in row.iter_mut() {
+                *pi += poff;
+            }
+            pattern.push(row);
+        }
+    }
+    pattern
+}
+
+/// SnAp-1: diagonal-Jacobian approximation on the layer-local `M̄` pattern.
 pub struct Snap1 {
     inf: PatternInfluence,
-    scratch: CellScratch,
+    scratch: StackScratch,
     a_prev: Vec<f32>,
     grads: Vec<f32>,
     logits: Vec<f32>,
     dlogits: Vec<f32>,
     c_bar: Vec<f32>,
+    c_bar_full: Vec<f32>,
 }
 
 impl Snap1 {
-    pub fn new(cell: &RnnCell, readout_n_out: usize) -> Self {
-        let n = cell.n();
-        let pattern = (0..n).map(|k| cell.fan_in_params(k)).collect();
+    pub fn new(net: &LayerStack, readout_n_out: usize) -> Self {
         Snap1 {
-            inf: PatternInfluence::new(pattern),
-            scratch: CellScratch::new(n),
-            a_prev: vec![0.0; n],
-            grads: vec![0.0; cell.p()],
+            inf: PatternInfluence::new(layer_local_fan_in(net)),
+            scratch: net.scratch(),
+            a_prev: vec![0.0; net.total_units()],
+            grads: vec![0.0; net.p()],
             logits: vec![0.0; readout_n_out],
             dlogits: vec![0.0; readout_n_out],
-            c_bar: vec![0.0; n],
+            c_bar: vec![0.0; net.top_n()],
+            c_bar_full: vec![0.0; net.total_units()],
         }
     }
 
@@ -97,49 +163,59 @@ impl GradientEngine for Snap1 {
 
     fn step(
         &mut self,
-        cell: &RnnCell,
+        net: &LayerStack,
         readout: &mut Readout,
         loss: &mut Loss,
         x: &[f32],
         target: Target,
         ops: &mut OpCounter,
     ) -> StepResult {
-        let n = cell.n();
-        cell.forward(&self.a_prev, x, &mut self.scratch, ops);
+        net.forward(&self.a_prev, x, &mut self.scratch, ops);
         let active_units = self.scratch.active_units();
         let deriv_units = self.scratch.deriv_units();
 
-        let mut macs = 0u64;
-        for k in 0..n {
-            let dphi_k = self.scratch.dphi[k];
-            // Diagonal Jacobian element J_kk = φ'_k · ∂v_k/∂a_k.
-            let jkk = dphi_k * cell.dv_da(&self.scratch, k, k);
-            let (cur, next) = (&self.inf.cur[k], &mut self.inf.next[k]);
-            for (nx, &cu) in next.iter_mut().zip(cur) {
-                *nx = jkk * cu;
+        for l in 0..net.layers() {
+            ops.set_layer(l);
+            let cell = net.layer(l);
+            let sl = &self.scratch.layers[l];
+            let soff = net.layout().state_offset(l);
+            let poff = net.layout().param_offset(l);
+            let a_prev_l = &self.a_prev[soff..soff + cell.n()];
+            let input_l: &[f32] = if l == 0 { x } else { &self.scratch.layers[l - 1].a };
+            let mut macs = 0u64;
+            for kl in 0..cell.n() {
+                let k = soff + kl;
+                let dphi_k = sl.dphi[kl];
+                // Diagonal Jacobian element J_kk = φ'_k · ∂v_k/∂a_k.
+                let jkk = dphi_k * cell.dv_da(sl, kl, kl);
+                let (cur, next) = (&self.inf.cur[k], &mut self.inf.next[k]);
+                for (nx, &cu) in next.iter_mut().zip(cur) {
+                    *nx = jkk * cu;
+                }
+                macs += cur.len() as u64;
+                // + φ'_k · M̄ entries (scatter into the pattern row)
+                let inf_pattern = &self.inf.pattern[k];
+                cell.immediate_row(
+                    sl,
+                    a_prev_l,
+                    input_l,
+                    kl,
+                    |pi, val| {
+                        if let Ok(pos) = inf_pattern.binary_search(&((poff + pi) as u32)) {
+                            next[pos] += dphi_k * val;
+                        }
+                    },
+                    ops,
+                );
             }
-            macs += cur.len() as u64;
-            // + φ'_k · M̄ entries (scatter into the pattern row)
-            let inf_pattern = &self.inf.pattern[k];
-            cell.immediate_row(
-                &self.scratch,
-                &self.a_prev,
-                x,
-                k,
-                |pi, val| {
-                    if let Ok(pos) = inf_pattern.binary_search(&(pi as u32)) {
-                        next[pos] += dphi_k * val;
-                    }
-                },
-                ops,
-            );
+            ops.macs(Phase::InfluenceUpdate, macs);
         }
-        ops.macs(Phase::InfluenceUpdate, macs);
+        ops.clear_layer();
 
         let (loss_val, correct) = supervised_step(
             readout,
             loss,
-            &self.scratch.a,
+            &self.scratch.top().a,
             target,
             &mut self.logits,
             &mut self.dlogits,
@@ -147,9 +223,10 @@ impl GradientEngine for Snap1 {
             ops,
         );
         if loss_val.is_some() {
+            stacked_credit(net, &self.scratch, &self.c_bar, &mut self.c_bar_full, ops);
             let mut gmacs = 0u64;
-            for k in 0..n {
-                let coef = self.c_bar[k];
+            for k in 0..net.total_units() {
+                let coef = self.c_bar_full[k];
                 if coef == 0.0 {
                     continue;
                 }
@@ -162,11 +239,11 @@ impl GradientEngine for Snap1 {
         }
 
         self.inf.advance();
-        self.a_prev.copy_from_slice(&self.scratch.a);
+        self.scratch.write_state(&mut self.a_prev);
         StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity: None }
     }
 
-    fn end_sequence(&mut self, _cell: &RnnCell, _readout: &mut Readout, _ops: &mut OpCounter) {}
+    fn end_sequence(&mut self, _net: &LayerStack, _readout: &mut Readout, _ops: &mut OpCounter) {}
 
     fn grads(&self) -> &[f32] {
         &self.grads
@@ -181,41 +258,48 @@ impl GradientEngine for Snap1 {
     }
 }
 
-/// SnAp-2: two-hop influence pattern.
+/// SnAp-2: two-hop influence pattern within each layer.
 pub struct Snap2 {
     inf: PatternInfluence,
-    scratch: CellScratch,
+    scratch: StackScratch,
     a_prev: Vec<f32>,
     grads: Vec<f32>,
     logits: Vec<f32>,
     dlogits: Vec<f32>,
     c_bar: Vec<f32>,
+    c_bar_full: Vec<f32>,
 }
 
 impl Snap2 {
-    pub fn new(cell: &RnnCell, readout_n_out: usize) -> Self {
-        let n = cell.n();
-        let fan_in: Vec<Vec<u32>> = (0..n).map(|k| cell.fan_in_params(k)).collect();
-        // pattern(k) = fan_in(k) ∪ ⋃_{l ∈ struct J row k} fan_in(l)
-        let pattern: Vec<Vec<u32>> = (0..n)
-            .map(|k| {
+    pub fn new(net: &LayerStack, readout_n_out: usize) -> Self {
+        // pattern(k) = fan_in(k) ∪ ⋃_{l ∈ struct J row k} fan_in(l), per layer
+        let mut pattern: Vec<Vec<u32>> = Vec::with_capacity(net.total_units());
+        for l in 0..net.layers() {
+            let cell = net.layer(l);
+            let poff = net.layout().param_offset(l) as u32;
+            let fan_in: Vec<Vec<u32>> = (0..cell.n()).map(|k| cell.fan_in_params(k)).collect();
+            for k in 0..cell.n() {
                 let mut set: Vec<u32> = fan_in[k].clone();
-                for &l in cell.kept_cols(k) {
-                    set.extend_from_slice(&fan_in[l as usize]);
+                for &c in cell.kept_cols(k) {
+                    set.extend_from_slice(&fan_in[c as usize]);
                 }
                 set.sort_unstable();
                 set.dedup();
-                set
-            })
-            .collect();
+                for pi in set.iter_mut() {
+                    *pi += poff;
+                }
+                pattern.push(set);
+            }
+        }
         Snap2 {
             inf: PatternInfluence::new(pattern),
-            scratch: CellScratch::new(n),
-            a_prev: vec![0.0; n],
-            grads: vec![0.0; cell.p()],
+            scratch: net.scratch(),
+            a_prev: vec![0.0; net.total_units()],
+            grads: vec![0.0; net.p()],
             logits: vec![0.0; readout_n_out],
             dlogits: vec![0.0; readout_n_out],
-            c_bar: vec![0.0; n],
+            c_bar: vec![0.0; net.top_n()],
+            c_bar_full: vec![0.0; net.total_units()],
         }
     }
 
@@ -238,81 +322,92 @@ impl GradientEngine for Snap2 {
 
     fn step(
         &mut self,
-        cell: &RnnCell,
+        net: &LayerStack,
         readout: &mut Readout,
         loss: &mut Loss,
         x: &[f32],
         target: Target,
         ops: &mut OpCounter,
     ) -> StepResult {
-        let n = cell.n();
-        cell.forward(&self.a_prev, x, &mut self.scratch, ops);
+        net.forward(&self.a_prev, x, &mut self.scratch, ops);
         let active_units = self.scratch.active_units();
         let deriv_units = self.scratch.deriv_units();
 
-        let mut macs = 0u64;
-        for k in 0..n {
-            let dphi_k = self.scratch.dphi[k];
-            // Pattern-restricted J·M: for each kept (k,p), sum over l with
-            // J_kl structurally nonzero and (l,p) in pattern.
-            // First: stage = Σ_l Ĵ_kl · M_old[l, p∈pattern(k)]
-            {
-                let next = &mut self.inf.next[k];
-                next.iter_mut().for_each(|x| *x = 0.0);
-            }
-            for &l in cell.kept_cols(k) {
-                let jv = cell.dv_da(&self.scratch, k, l as usize);
-                macs += cell.dv_da_cost();
-                if jv == 0.0 {
-                    continue;
+        for l in 0..net.layers() {
+            ops.set_layer(l);
+            let cell = net.layer(l);
+            let sl = &self.scratch.layers[l];
+            let soff = net.layout().state_offset(l);
+            let poff = net.layout().param_offset(l);
+            let a_prev_l = &self.a_prev[soff..soff + cell.n()];
+            let input_l: &[f32] = if l == 0 { x } else { &self.scratch.layers[l - 1].a };
+            let mut macs = 0u64;
+            for kl in 0..cell.n() {
+                let k = soff + kl;
+                let dphi_k = sl.dphi[kl];
+                // Pattern-restricted J·M within the layer: for each kept
+                // (k,p), sum over c with J_kc structurally nonzero and (c,p)
+                // in pattern.
+                {
+                    let next = &mut self.inf.next[k];
+                    next.iter_mut().for_each(|x| *x = 0.0);
                 }
-                // two-pointer merge of pattern(k) and pattern(l)
-                let pk = &self.inf.pattern[k];
-                let pl = &self.inf.pattern[l as usize];
-                let ml = &self.inf.cur[l as usize];
-                let next = &mut self.inf.next[k];
-                let (mut i, mut j) = (0usize, 0usize);
-                while i < pk.len() && j < pl.len() {
-                    match pk[i].cmp(&pl[j]) {
-                        std::cmp::Ordering::Less => i += 1,
-                        std::cmp::Ordering::Greater => j += 1,
-                        std::cmp::Ordering::Equal => {
-                            next[i] += jv * ml[j];
-                            macs += 1;
-                            i += 1;
-                            j += 1;
+                for &c in cell.kept_cols(kl) {
+                    let jv = cell.dv_da(sl, kl, c as usize);
+                    macs += cell.dv_da_cost();
+                    if jv == 0.0 {
+                        continue;
+                    }
+                    // two-pointer merge of pattern(k) and pattern(c)
+                    let gc = soff + c as usize;
+                    let pk = &self.inf.pattern[k];
+                    let pl = &self.inf.pattern[gc];
+                    let ml = &self.inf.cur[gc];
+                    let next = &mut self.inf.next[k];
+                    let (mut i, mut j) = (0usize, 0usize);
+                    while i < pk.len() && j < pl.len() {
+                        match pk[i].cmp(&pl[j]) {
+                            std::cmp::Ordering::Less => i += 1,
+                            std::cmp::Ordering::Greater => j += 1,
+                            std::cmp::Ordering::Equal => {
+                                next[i] += jv * ml[j];
+                                macs += 1;
+                                i += 1;
+                                j += 1;
+                            }
                         }
                     }
                 }
-            }
-            // + M̄, then scale by φ'_k
-            {
-                let inf_pattern = &self.inf.pattern[k];
-                let next = &mut self.inf.next[k];
-                cell.immediate_row(
-                    &self.scratch,
-                    &self.a_prev,
-                    x,
-                    k,
-                    |pi, val| {
-                        if let Ok(pos) = inf_pattern.binary_search(&(pi as u32)) {
-                            next[pos] += val;
-                        }
-                    },
-                    ops,
-                );
-                for v in next.iter_mut() {
-                    *v *= dphi_k;
+                // + M̄, then scale by φ'_k
+                {
+                    let inf_pattern = &self.inf.pattern[k];
+                    let next = &mut self.inf.next[k];
+                    cell.immediate_row(
+                        sl,
+                        a_prev_l,
+                        input_l,
+                        kl,
+                        |pi, val| {
+                            if let Ok(pos) = inf_pattern.binary_search(&((poff + pi) as u32)) {
+                                next[pos] += val;
+                            }
+                        },
+                        ops,
+                    );
+                    for v in next.iter_mut() {
+                        *v *= dphi_k;
+                    }
+                    macs += next.len() as u64;
                 }
-                macs += next.len() as u64;
             }
+            ops.macs(Phase::InfluenceUpdate, macs);
         }
-        ops.macs(Phase::InfluenceUpdate, macs);
+        ops.clear_layer();
 
         let (loss_val, correct) = supervised_step(
             readout,
             loss,
-            &self.scratch.a,
+            &self.scratch.top().a,
             target,
             &mut self.logits,
             &mut self.dlogits,
@@ -320,9 +415,10 @@ impl GradientEngine for Snap2 {
             ops,
         );
         if loss_val.is_some() {
+            stacked_credit(net, &self.scratch, &self.c_bar, &mut self.c_bar_full, ops);
             let mut gmacs = 0u64;
-            for k in 0..n {
-                let coef = self.c_bar[k];
+            for k in 0..net.total_units() {
+                let coef = self.c_bar_full[k];
                 if coef == 0.0 {
                     continue;
                 }
@@ -335,11 +431,11 @@ impl GradientEngine for Snap2 {
         }
 
         self.inf.advance();
-        self.a_prev.copy_from_slice(&self.scratch.a);
+        self.scratch.write_state(&mut self.a_prev);
         StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity: None }
     }
 
-    fn end_sequence(&mut self, _cell: &RnnCell, _readout: &mut Readout, _ops: &mut OpCounter) {}
+    fn end_sequence(&mut self, _net: &LayerStack, _readout: &mut Readout, _ops: &mut OpCounter) {}
 
     fn grads(&self) -> &[f32] {
         &self.grads
@@ -357,15 +453,15 @@ impl GradientEngine for Snap2 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::LossKind;
+    use crate::nn::{LossKind, RnnCell};
     use crate::sparse::MaskPattern;
     use crate::util::Pcg64;
 
     #[test]
     fn snap1_pattern_is_fan_in() {
         let mut rng = Pcg64::new(40);
-        let cell = RnnCell::egru(8, 2, 0.1, 0.3, 0.5, None, &mut rng);
-        let s1 = Snap1::new(&cell, 2);
+        let net = LayerStack::single(RnnCell::egru(8, 2, 0.1, 0.3, 0.5, None, &mut rng));
+        let s1 = Snap1::new(&net, 2);
         // dense: every unit keeps 2(n_in + n + 1) params
         assert_eq!(s1.pattern_size(), 8 * 2 * (2 + 8 + 1));
     }
@@ -373,61 +469,89 @@ mod tests {
     #[test]
     fn snap2_dense_pattern_is_full() {
         let mut rng = Pcg64::new(41);
-        let cell = RnnCell::evrnn(6, 2, 0.0, 0.3, 0.5, None, &mut rng);
-        let s2 = Snap2::new(&cell, 2);
+        let net = LayerStack::single(RnnCell::evrnn(6, 2, 0.0, 0.3, 0.5, None, &mut rng));
+        let s2 = Snap2::new(&net, 2);
         // dense J reaches every unit, so every row keeps all p params
-        assert_eq!(s2.pattern_size(), 6 * cell.p());
+        assert_eq!(s2.pattern_size(), 6 * net.p());
     }
 
     #[test]
     fn snap2_pattern_shrinks_with_mask() {
         let mut rng = Pcg64::new(42);
         let mask = MaskPattern::random(10, 10, 0.2, &mut rng);
-        let cell = RnnCell::evrnn(10, 2, 0.0, 0.3, 0.5, Some(mask), &mut rng);
-        let s2 = Snap2::new(&cell, 2);
-        assert!(s2.pattern_size() < 10 * cell.p());
-        let s1 = Snap1::new(&cell, 2);
+        let net = LayerStack::single(RnnCell::evrnn(10, 2, 0.0, 0.3, 0.5, Some(mask), &mut rng));
+        let s2 = Snap2::new(&net, 2);
+        assert!(s2.pattern_size() < 10 * net.p());
+        let s1 = Snap1::new(&net, 2);
         assert!(s1.pattern_size() < s2.pattern_size());
     }
 
     #[test]
     fn both_run_sequences() {
         let mut rng = Pcg64::new(43);
-        let cell = RnnCell::egru(6, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let net = LayerStack::single(RnnCell::egru(6, 2, 0.1, 0.3, 0.5, None, &mut rng));
         let mut readout = Readout::new(2, 6, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
         let mut ops = OpCounter::new();
-        for alg in [&mut Snap1::new(&cell, 2) as &mut dyn GradientEngine, &mut Snap2::new(&cell, 2)] {
+        for alg in [&mut Snap1::new(&net, 2) as &mut dyn GradientEngine, &mut Snap2::new(&net, 2)] {
             alg.begin_sequence();
             for t in 0..5 {
                 let x = [(t as f32).sin(), 0.3];
                 let target = if t == 4 { Target::Class(1) } else { Target::None };
-                alg.step(&cell, &mut readout, &mut loss, &x, target, &mut ops);
+                alg.step(&net, &mut readout, &mut loss, &x, target, &mut ops);
             }
-            alg.end_sequence(&cell, &mut readout, &mut ops);
-            assert_eq!(alg.grads().len(), cell.p());
+            alg.end_sequence(&net, &mut readout, &mut ops);
+            assert_eq!(alg.grads().len(), net.p());
         }
     }
 
     #[test]
     fn snap1_cheaper_than_snap2() {
         let mut rng = Pcg64::new(44);
-        let cell = RnnCell::egru(8, 2, 0.0, 0.3, 0.9, None, &mut rng);
+        let net = LayerStack::single(RnnCell::egru(8, 2, 0.0, 0.3, 0.9, None, &mut rng));
         let mut readout = Readout::new(2, 8, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
         let mut ops1 = OpCounter::new();
-        let mut s1 = Snap1::new(&cell, 2);
+        let mut s1 = Snap1::new(&net, 2);
         s1.begin_sequence();
-        s1.step(&cell, &mut readout, &mut loss, &[0.5, 0.5], Target::None, &mut ops1);
+        s1.step(&net, &mut readout, &mut loss, &[0.5, 0.5], Target::None, &mut ops1);
         let mut ops2 = OpCounter::new();
-        let mut s2 = Snap2::new(&cell, 2);
+        let mut s2 = Snap2::new(&net, 2);
         s2.begin_sequence();
-        s2.step(&cell, &mut readout, &mut loss, &[0.5, 0.5], Target::None, &mut ops2);
+        s2.step(&net, &mut readout, &mut loss, &[0.5, 0.5], Target::None, &mut ops2);
         assert!(
             ops1.macs_in(Phase::InfluenceUpdate) < ops2.macs_in(Phase::InfluenceUpdate),
             "snap1 {} !< snap2 {}",
             ops1.macs_in(Phase::InfluenceUpdate),
             ops2.macs_in(Phase::InfluenceUpdate)
         );
+    }
+
+    /// Depth 2: the within-step credit cascade must reach layer 0's
+    /// parameters even though supervision only touches the top readout.
+    #[test]
+    fn depth2_snap_trains_bottom_layer() {
+        let mut rng = Pcg64::new(45);
+        let l0 = RnnCell::egru(6, 2, 0.0, 0.3, 0.9, None, &mut rng);
+        let l1 = RnnCell::egru(4, 6, 0.0, 0.3, 0.9, None, &mut rng);
+        let net = LayerStack::new(vec![l0, l1]);
+        let mut readout = Readout::new(2, 4, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let p0 = net.layer(0).p();
+        for alg in [&mut Snap1::new(&net, 2) as &mut dyn GradientEngine, &mut Snap2::new(&net, 2)] {
+            let mut ops = OpCounter::new();
+            alg.begin_sequence();
+            let mut xr = Pcg64::new(6);
+            for t in 0..8 {
+                let target = if t >= 4 { Target::Class(t % 2) } else { Target::None };
+                alg.step(&net, &mut readout, &mut loss, &[xr.normal(), xr.normal()], target, &mut ops);
+            }
+            alg.end_sequence(&net, &mut readout, &mut ops);
+            assert!(
+                alg.grads()[..p0].iter().any(|&g| g != 0.0),
+                "{}: bottom layer got no credit",
+                alg.name()
+            );
+        }
     }
 }

@@ -1,23 +1,48 @@
 //! The paper's contribution: **exact** RTRL exploiting activity and/or
-//! parameter sparsity.
+//! parameter sparsity — generalized to stacked layers with a block
+//! lower-bidiagonal Jacobian.
 //!
 //! One engine covers the three sparse rows of Table 1 via [`SparsityMode`]:
 //!
-//! * `Activity` — rows of `J`/`M̄`/`M` with `φ'(v_k)=0` are skipped; the
-//!   gather touches only rows active at `t−1` → `O(β̃^{(t)}β̃^{(t-1)}n²p)`.
+//! * `Activity` — rows of `J`/`M̄`/`M` with `φ'(v_k)=0` are skipped *per
+//!   layer*; the own-layer gather touches only rows active at `t−1` and the
+//!   cross-layer gather only rows of the lower layer active at `t` →
+//!   `O(β̃^{(t)}β̃^{(t-1)}n²p)` per layer pair.
 //! * `Parameter` — masked recurrent params drop columns of `M`/`M̄` (compact
 //!   storage) and elements of `J` → `O(ω̃²n²p)`.
 //! * `Both` — the combination → `O(ω̃²β̃²n²p)` (paper §5).
 //!
+//! # Block structure (stacked networks)
+//!
+//! Layer `l` keeps its own ping-pong panel of shape `n_l × cum_pc(l)`:
+//! rows are its units, columns the compact columns of layers `0..=l`. The
+//! update per row `k` of layer `l` (see `rtrl::mod` docs):
+//!
+//! ```text
+//! M_l^{(t)}[k] = φ'_k · ( Σ_c J_l[k,c]·M_l^{(t-1)}[c]          own layer, M^{(t-1)}
+//!                       + Σ_j C_l[k,j]·M_{l-1}^{(t)}[j]        lower layer, M^{(t)} (!)
+//!                       + M̄_l[k] )
+//! ```
+//!
+//! The cross-layer term reads the lower layer's **already-updated** next
+//! panel and lands in the leading `cum_pc(l−1)` slice of the row — the
+//! panels' column spaces nest by construction
+//! ([`StackColumnMap::cum_cols`]), so no index translation happens and the
+//! structurally-zero blocks (layer `l` rows over deeper layers' columns)
+//! are never materialized **or charged**: every MAC is charged inside
+//! layer `l`'s `(layer, Phase)` scope and is proportional to the stored
+//! panel widths only.
+//!
 //! No approximation anywhere: skipped work is *structurally zero*, so the
 //! gradient equals dense RTRL / BPTT bit-for-bit up to FP reassociation
-//! (enforced by `rust/tests/sparse_exactness.rs`).
+//! (enforced by `rust/tests/sparse_exactness.rs` and
+//! `rust/tests/grad_equivalence.rs`, including at depth 2).
 
-use super::column_map::ColumnMap;
-use super::influence::InfluenceBuffers;
+use super::column_map::StackColumnMap;
+use super::influence::StackedInfluence;
 use super::{supervised_step, GradientEngine, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
-use crate::nn::{CellScratch, Loss, Readout, RnnCell};
+use crate::nn::{LayerStack, Loss, Readout, StackScratch};
 
 /// Which structural zeros the engine exploits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,15 +68,16 @@ impl SparsityMode {
 /// Exact sparse RTRL engine (per-sequence state; reusable across sequences).
 pub struct SparseRtrl {
     mode: SparsityMode,
-    colmap: ColumnMap,
-    buffers: InfluenceBuffers,
-    scratch: CellScratch,
+    colmap: StackColumnMap,
+    buffers: StackedInfluence,
+    scratch: StackScratch,
+    /// Concatenated previous state (`R^N`).
     a_prev: Vec<f32>,
     /// Jacobian row staging: `(l, ∂v_k/∂a_l)` pairs for the current row.
     jlist: Vec<(u32, f32)>,
-    /// Gradient accumulator over compact columns (scattered at end).
+    /// Gradient accumulator over the full compact column space.
     grad_compact: Vec<f32>,
-    /// Dense `R^p` gradient view (valid after `end_sequence`).
+    /// Dense `R^P` gradient view (valid after `end_sequence`).
     grads: Vec<f32>,
     logits: Vec<f32>,
     dlogits: Vec<f32>,
@@ -60,29 +86,26 @@ pub struct SparseRtrl {
 }
 
 impl SparseRtrl {
-    /// Build for a cell. `Parameter`/`Both` modes compact columns using the
-    /// cell's mask (a dense cell degrades gracefully to full columns).
-    pub fn new(cell: &RnnCell, readout_n_out: usize, mode: SparsityMode) -> Self {
-        let n = cell.n();
-        let p = cell.p();
-        let colmap = if mode.use_columns() {
-            ColumnMap::from_cell(cell)
-        } else {
-            ColumnMap::full(p)
-        };
-        let pc = colmap.len();
+    /// Build for a stack. `Parameter`/`Both` modes compact columns using
+    /// each layer's mask (dense layers degrade gracefully to full columns).
+    pub fn new(net: &LayerStack, readout_n_out: usize, mode: SparsityMode) -> Self {
+        let colmap = StackColumnMap::from_stack(net, mode.use_columns());
+        let dims: Vec<(usize, usize)> = (0..net.layers())
+            .map(|l| (net.layer(l).n(), colmap.cum_cols(l)))
+            .collect();
+        let pc_total = colmap.total_cols();
         SparseRtrl {
             mode,
             colmap,
-            buffers: InfluenceBuffers::new(n, pc),
-            scratch: CellScratch::new(n),
-            a_prev: vec![0.0; n],
-            jlist: Vec::with_capacity(n),
-            grad_compact: vec![0.0; pc],
-            grads: vec![0.0; p],
+            buffers: StackedInfluence::new(&dims),
+            scratch: net.scratch(),
+            a_prev: vec![0.0; net.total_units()],
+            jlist: Vec::with_capacity(net.total_units()),
+            grad_compact: vec![0.0; pc_total],
+            grads: vec![0.0; net.p()],
             logits: vec![0.0; readout_n_out],
             dlogits: vec![0.0; readout_n_out],
-            c_bar: vec![0.0; n],
+            c_bar: vec![0.0; net.top_n()],
             measure_influence: false,
         }
     }
@@ -91,12 +114,13 @@ impl SparseRtrl {
         self.mode
     }
 
-    /// Compact column count `pc` (≈ ω̃-scaled when columns are compacted).
+    /// Compact column count `pc` of the top panel (≈ ω̃-scaled total when
+    /// columns are compacted).
     pub fn tracked_columns(&self) -> usize {
-        self.colmap.len()
+        self.colmap.total_cols()
     }
 
-    /// Current activation state (for inference-style probing in examples).
+    /// Current concatenated activation state (for inference-style probing).
     pub fn activations(&self) -> &[f32] {
         &self.a_prev
     }
@@ -120,84 +144,121 @@ impl GradientEngine for SparseRtrl {
 
     fn step(
         &mut self,
-        cell: &RnnCell,
+        net: &LayerStack,
         readout: &mut Readout,
         loss: &mut Loss,
         x: &[f32],
         target: Target,
         ops: &mut OpCounter,
     ) -> StepResult {
-        let n = cell.n();
-        // ---- forward ----------------------------------------------------
-        cell.forward(&self.a_prev, x, &mut self.scratch, ops);
+        // ---- forward (charges per-layer Forward ops) --------------------
+        net.forward(&self.a_prev, x, &mut self.scratch, ops);
         let active_units = self.scratch.active_units();
         let deriv_units = self.scratch.deriv_units();
 
-        // ---- influence update (Eq. 10) ----------------------------------
+        // ---- influence update (Eq. 10, block-by-block) ------------------
         self.buffers.begin_next();
-        let dv_da_cost = cell.dv_da_cost();
-        let pc = self.colmap.len();
-        let mut jac_macs = 0u64;
-        let mut upd_macs = 0u64;
-        let mut rows_read = 0usize;
-        for k in 0..n {
-            let dphi_k = self.scratch.dphi[k];
-            if self.mode.use_activity() && dphi_k == 0.0 {
-                continue; // row k of J, M̄, M is structurally zero
-            }
-            // Jacobian row, restricted to kept params × prev-active rows.
-            self.jlist.clear();
-            for &l in cell.kept_cols(k) {
-                if !self.buffers.active_cur().contains(l as usize) {
-                    continue; // M^{t-1} row l is zero
+        for l in 0..net.layers() {
+            ops.set_layer(l);
+            let cell = net.layer(l);
+            let sl = &self.scratch.layers[l];
+            let dv_da_cost = cell.dv_da_cost();
+            let dv_dx_cost = cell.dv_dx_cost();
+            let pc_l = self.colmap.cum_cols(l);
+            let pc_lower = if l > 0 { self.colmap.cum_cols(l - 1) } else { 0 };
+            let a_prev_l = &self.a_prev[net.layout().state_range(l)];
+            let input_l: &[f32] = if l == 0 { x } else { &self.scratch.layers[l - 1].a };
+            let (lower, buf) = self.buffers.lower_and_current(l);
+            let mut jac_macs = 0u64;
+            let mut upd_macs = 0u64;
+            let mut rows_read = 0usize;
+            let mut rows_written = 0usize;
+            for k in 0..cell.n() {
+                let dphi_k = sl.dphi[k];
+                if self.mode.use_activity() && dphi_k == 0.0 {
+                    continue; // row k of J, M̄, M_l is structurally zero
                 }
-                let jv = cell.dv_da(&self.scratch, k, l as usize);
-                jac_macs += dv_da_cost;
-                if jv != 0.0 {
-                    self.jlist.push((l, jv));
+                // Own-layer Jacobian row: kept params × prev-active rows.
+                self.jlist.clear();
+                for &c in cell.kept_cols(k) {
+                    if !buf.active_cur().contains(c as usize) {
+                        continue; // M_l^{t-1} row c is zero
+                    }
+                    let jv = cell.dv_da(sl, k, c as usize);
+                    jac_macs += dv_da_cost;
+                    if jv != 0.0 {
+                        self.jlist.push((c, jv));
+                    }
                 }
+                rows_read += self.jlist.len();
+                upd_macs += self.jlist.len() as u64 * pc_l as u64;
+                let row = buf.gather_into_next(k, &self.jlist);
+                rows_written += 1;
+                // Cross-layer block: lower layer's *new* panel, prefix slice.
+                // Only rows active at t (produced this step) are nonzero, so
+                // the never-materialized zero blocks cost nothing here.
+                if let Some(lower) = lower {
+                    for j in lower.active_next().as_slice() {
+                        let cv = cell.dv_dx(sl, k, *j);
+                        jac_macs += dv_dx_cost;
+                        if cv == 0.0 {
+                            continue;
+                        }
+                        let src = lower.next_row(*j);
+                        for (r, s) in row[..pc_lower].iter_mut().zip(src) {
+                            *r += cv * s;
+                        }
+                        rows_read += 1;
+                        upd_macs += pc_lower as u64;
+                    }
+                }
+                // Immediate influence M̄_l row k (structural nonzeros only),
+                // landing in layer l's own column block.
+                let colmap = &self.colmap;
+                cell.immediate_row(
+                    sl,
+                    a_prev_l,
+                    input_l,
+                    k,
+                    |pi, val| {
+                        row[colmap.global_compact_of(l, pi)] += val;
+                    },
+                    ops,
+                );
+                // Row gate φ'(v_k) (Eq. 10's common factor), with
+                // flush-to-zero: M entries only ever shrink through this
+                // multiply (φ' ≤ γ < 1), so long sequences would otherwise
+                // decay them into denormal range, where scalar multiplies
+                // cost ~100 cycles (§Perf: a measured 10× slowdown).
+                // Flushing tiny magnitudes to an exact 0 restores full-speed
+                // arithmetic and surfaces the decayed-influence entries as
+                // the structural zeros they effectively are.
+                for r in row.iter_mut() {
+                    let v = *r * dphi_k;
+                    *r = if v.abs() < 1e-30 { 0.0 } else { v };
+                }
+                upd_macs += pc_l as u64;
             }
-            rows_read += self.jlist.len();
-            upd_macs += self.jlist.len() as u64 * pc as u64;
-            let row = self.buffers.gather_into_next(k, &self.jlist);
-            // Immediate influence M̄ row k (structural nonzeros only).
-            let colmap = &self.colmap;
-            cell.immediate_row(
-                &self.scratch,
-                &self.a_prev,
-                x,
-                k,
-                |pi, val| {
-                    row[colmap.compact_of_unchecked(pi)] += val;
-                },
-                ops,
+            ops.macs(Phase::Jacobian, jac_macs);
+            ops.macs(Phase::InfluenceUpdate, upd_macs);
+            // Words touched: rows written at this panel's width plus rows
+            // read (own prev rows at pc_l, lower rows at pc_lower — charge
+            // at the width actually streamed, conservatively pc_l).
+            ops.words(
+                Phase::InfluenceUpdate,
+                ((rows_written + rows_read) * pc_l) as u64,
             );
-            // Row gate φ'(v_k) (Eq. 10's common factor), with flush-to-zero:
-            // M entries only ever shrink through this multiply (φ' ≤ γ < 1),
-            // so long sequences would otherwise decay them into denormal
-            // range, where scalar multiplies cost ~100 cycles (§Perf: this
-            // was a measured 10× slowdown). Flushing tiny magnitudes to an
-            // exact 0 both restores full-speed arithmetic and surfaces the
-            // decayed-influence entries as the structural zeros they
-            // effectively are.
-            for r in row.iter_mut() {
-                let v = *r * dphi_k;
-                *r = if v.abs() < 1e-30 { 0.0 } else { v };
-            }
-            upd_macs += pc as u64;
         }
-        ops.macs(Phase::Jacobian, jac_macs);
-        ops.macs(Phase::InfluenceUpdate, upd_macs);
-        ops.words(
-            Phase::InfluenceUpdate,
-            self.buffers.touched_words(rows_read) as u64,
-        );
+        ops.clear_layer();
 
         // ---- loss + gradient accumulation (Eq. 3) ------------------------
+        // The readout reads the top layer; credit for lower layers' params
+        // is already folded into the top panel's columns by the cross-layer
+        // gather above, so combining top rows only is exact.
         let (loss_val, correct) = supervised_step(
             readout,
             loss,
-            &self.scratch.a,
+            &self.scratch.top().a,
             target,
             &mut self.logits,
             &mut self.dlogits,
@@ -205,34 +266,36 @@ impl GradientEngine for SparseRtrl {
             ops,
         );
         if loss_val.is_some() {
+            let top = self.buffers.layer(net.layers() - 1);
+            let pc_total = self.colmap.total_cols();
             let mut grad_macs = 0u64;
-            for k in self.buffers.active_next().as_slice() {
+            for k in top.active_next().as_slice() {
                 let coef = self.c_bar[*k];
                 if coef == 0.0 {
                     continue;
                 }
-                let mrow = self.buffers.next_row(*k);
+                let mrow = top.next_row(*k);
                 for (g, m) in self.grad_compact.iter_mut().zip(mrow) {
                     *g += coef * m;
                 }
-                grad_macs += pc as u64;
+                grad_macs += pc_total as u64;
             }
             ops.macs(Phase::GradCombine, grad_macs);
         }
 
         let influence_sparsity = if self.measure_influence {
-            // Report over the *logical* n×p matrix (the paper's M): masked
-            // columns are structural zeros even though they are compacted
-            // out of storage.
-            let logical = (n * self.colmap.p()) as f64;
-            Some((1.0 - self.buffers.next_nonzero_count() as f64 / logical) as f32)
+            // Report over the *logical* N×P matrix (the paper's M for the
+            // stacked map): masked columns and the cross-layer upper blocks
+            // are structural zeros even though they are never stored.
+            let logical = (self.a_prev.len() * self.colmap.p()) as f64;
+            Some((1.0 - self.buffers.next_nonzero_total() as f64 / logical) as f32)
         } else {
             None
         };
 
         // ---- rotate state -------------------------------------------------
         self.buffers.advance();
-        self.a_prev.copy_from_slice(&self.scratch.a);
+        self.scratch.write_state(&mut self.a_prev);
 
         StepResult {
             loss: loss_val,
@@ -243,9 +306,9 @@ impl GradientEngine for SparseRtrl {
         }
     }
 
-    fn end_sequence(&mut self, _cell: &RnnCell, _readout: &mut Readout, _ops: &mut OpCounter) {
+    fn end_sequence(&mut self, net: &LayerStack, _readout: &mut Readout, _ops: &mut OpCounter) {
         self.grads.iter_mut().for_each(|x| *x = 0.0);
-        self.colmap.scatter_add(&self.grad_compact, 1.0, &mut self.grads);
+        self.colmap.scatter_add(net, &self.grad_compact, 1.0, &mut self.grads);
     }
 
     fn grads(&self) -> &[f32] {
@@ -269,33 +332,31 @@ impl GradientEngine for SparseRtrl {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::LossKind;
+    use crate::nn::{LossKind, RnnCell};
     use crate::util::Pcg64;
 
-    fn setup(mode: SparsityMode) -> (RnnCell, Readout, Loss, SparseRtrl) {
+    fn setup(mode: SparsityMode) -> (LayerStack, Readout, Loss, SparseRtrl) {
         let mut rng = Pcg64::new(11);
-        let cell = RnnCell::egru(8, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let net = LayerStack::single(RnnCell::egru(8, 2, 0.1, 0.3, 0.5, None, &mut rng));
         let readout = Readout::new(2, 8, &mut rng);
         let loss = Loss::new(LossKind::CrossEntropy, 2);
-        let engine = SparseRtrl::new(&cell, 2, mode);
-        (cell, readout, loss, engine)
+        let engine = SparseRtrl::new(&net, 2, mode);
+        (net, readout, loss, engine)
     }
 
     #[test]
     fn runs_a_sequence_and_produces_grads() {
-        let (cell, mut readout, mut loss, mut eng) = setup(SparsityMode::Both);
+        let (net, mut readout, mut loss, mut eng) = setup(SparsityMode::Both);
         let mut ops = OpCounter::new();
         eng.begin_sequence();
         let xs = [[0.5, -0.2], [0.9, 0.1], [-0.3, 0.7]];
         for (t, x) in xs.iter().enumerate() {
             let target = if t == 2 { Target::Class(1) } else { Target::None };
-            let r = eng.step(&cell, &mut readout, &mut loss, x, target, &mut ops);
+            let r = eng.step(&net, &mut readout, &mut loss, x, target, &mut ops);
             assert!(r.active_units <= 8);
         }
-        eng.end_sequence(&cell, &mut readout, &mut ops);
-        // gradient exists (possibly zero if no unit was ever deriv-active,
-        // but with these seeds some are)
-        assert_eq!(eng.grads().len(), cell.p());
+        eng.end_sequence(&net, &mut readout, &mut ops);
+        assert_eq!(eng.grads().len(), net.p());
     }
 
     #[test]
@@ -304,17 +365,17 @@ mod tests {
         // be exactly zero even under a loss.
         let mut rng = Pcg64::new(12);
         // huge threshold: v strongly negative => H'=0 everywhere
-        let cell = RnnCell::egru(6, 2, 100.0, 0.3, 0.5, None, &mut rng);
+        let net = LayerStack::single(RnnCell::egru(6, 2, 100.0, 0.3, 0.5, None, &mut rng));
         let mut readout = Readout::new(2, 6, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-        let mut eng = SparseRtrl::new(&cell, 2, SparsityMode::Activity);
+        let mut eng = SparseRtrl::new(&net, 2, SparsityMode::Activity);
         let mut ops = OpCounter::new();
         eng.begin_sequence();
         for _ in 0..4 {
-            let r = eng.step(&cell, &mut readout, &mut loss, &[1.0, 1.0], Target::Class(0), &mut ops);
+            let r = eng.step(&net, &mut readout, &mut loss, &[1.0, 1.0], Target::Class(0), &mut ops);
             assert_eq!(r.deriv_units, 0);
         }
-        eng.end_sequence(&cell, &mut readout, &mut ops);
+        eng.end_sequence(&net, &mut readout, &mut ops);
         assert!(eng.grads().iter().all(|&g| g == 0.0));
         // and the influence update cost is zero
         assert_eq!(ops.macs_in(Phase::InfluenceUpdate), 0);
@@ -322,11 +383,11 @@ mod tests {
 
     #[test]
     fn influence_sparsity_measured_when_enabled() {
-        let (cell, mut readout, mut loss, mut eng) = setup(SparsityMode::Activity);
+        let (net, mut readout, mut loss, mut eng) = setup(SparsityMode::Activity);
         eng.set_measure_influence(true);
         let mut ops = OpCounter::new();
         eng.begin_sequence();
-        let r = eng.step(&cell, &mut readout, &mut loss, &[0.5, 0.5], Target::None, &mut ops);
+        let r = eng.step(&net, &mut readout, &mut loss, &[0.5, 0.5], Target::None, &mut ops);
         assert!(r.influence_sparsity.is_some());
         let s = r.influence_sparsity.unwrap();
         assert!((0.0..=1.0).contains(&s));
@@ -336,10 +397,57 @@ mod tests {
     fn parameter_mode_tracks_fewer_columns_with_mask() {
         let mut rng = Pcg64::new(13);
         let mask = crate::sparse::MaskPattern::random(8, 8, 0.2, &mut rng);
-        let cell = RnnCell::egru(8, 2, 0.1, 0.3, 0.5, Some(mask), &mut rng);
-        let eng = SparseRtrl::new(&cell, 2, SparsityMode::Parameter);
-        assert!(eng.tracked_columns() < cell.p());
-        let dense_eng = SparseRtrl::new(&cell, 2, SparsityMode::Activity);
-        assert_eq!(dense_eng.tracked_columns(), cell.p());
+        let net =
+            LayerStack::single(RnnCell::egru(8, 2, 0.1, 0.3, 0.5, Some(mask), &mut rng));
+        let eng = SparseRtrl::new(&net, 2, SparsityMode::Parameter);
+        assert!(eng.tracked_columns() < net.p());
+        let dense_eng = SparseRtrl::new(&net, 2, SparsityMode::Activity);
+        assert_eq!(dense_eng.tracked_columns(), net.p());
+    }
+
+    /// Depth 2: the per-layer panels have nested column spaces, layer 0's
+    /// panel never allocates or charges columns for layer 1's parameters,
+    /// and per-layer op attribution covers the whole influence cost.
+    #[test]
+    fn depth2_panels_nest_and_layer0_never_pays_for_layer1_columns() {
+        let mut rng = Pcg64::new(14);
+        let l0 = RnnCell::egru(6, 2, 0.05, 0.3, 0.9, None, &mut rng);
+        let l1 = RnnCell::egru(5, 6, 0.05, 0.3, 0.9, None, &mut rng);
+        let net = LayerStack::new(vec![l0, l1]);
+        let mut readout = Readout::new(2, 5, &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut eng = SparseRtrl::new(&net, 2, SparsityMode::Activity);
+        // layer 0 panel: p0 columns; layer 1 panel: p0 + p1 columns
+        assert_eq!(eng.buffers.layer(0).pc(), net.layer(0).p());
+        assert_eq!(eng.buffers.layer(1).pc(), net.p());
+        let mut ops = OpCounter::new();
+        eng.begin_sequence();
+        let mut xr = Pcg64::new(3);
+        for t in 0..6 {
+            let x = [xr.normal(), xr.normal()];
+            let target = if t == 5 { Target::Class(0) } else { Target::None };
+            eng.step(&net, &mut readout, &mut loss, &x, target, &mut ops);
+        }
+        eng.end_sequence(&net, &mut readout, &mut ops);
+        // both layers charged influence work, and the split is complete
+        let l0_macs = ops.macs_in_layer(0, Phase::InfluenceUpdate);
+        let l1_macs = ops.macs_in_layer(1, Phase::InfluenceUpdate);
+        assert!(l0_macs > 0 && l1_macs > 0);
+        assert_eq!(l0_macs + l1_macs, ops.macs_in(Phase::InfluenceUpdate));
+        // layer 0's per-step influence charge is bounded by work over its
+        // own panel width (p0 columns), i.e. the zero blocks for layer 1's
+        // params were never charged: even a fully-dense row update costs at
+        // most (rows_read + 1) * p0 per row.
+        let n0 = net.layer(0).n() as u64;
+        let p0 = net.layer(0).p() as u64;
+        let steps = 6u64;
+        assert!(
+            l0_macs <= steps * n0 * (n0 + 1) * p0,
+            "layer 0 charged {l0_macs} MACs — exceeds its own-panel bound"
+        );
+        // gradient exists for both layers' params
+        let off1 = net.layout().param_offset(1);
+        assert!(eng.grads()[..off1].iter().any(|&g| g != 0.0), "layer 0 got no gradient");
+        assert!(eng.grads()[off1..].iter().any(|&g| g != 0.0), "layer 1 got no gradient");
     }
 }

@@ -4,55 +4,65 @@
 //! the same framework the paper builds on).
 //!
 //! The influence matrix is approximated by a rank-1 outer product
-//! `M ≈ s̃ ⊗ θ̃` with `s̃ ∈ R^n`, `θ̃ ∈ R^p`, updated with random signs
-//! `ν ∈ {±1}^n` and variance-balancing scales `ρ₀, ρ₁`:
+//! `M ≈ s̃ ⊗ θ̃` with `s̃ ∈ R^N`, `θ̃ ∈ R^P` over the *stacked* state and
+//! parameters, updated with random signs `ν ∈ {±1}^N` and
+//! variance-balancing scales `ρ₀, ρ₁`:
 //!
 //! ```text
 //! s̃ ← ρ₀·J s̃ + ρ₁·ν           θ̃ ← θ̃/ρ₀ + (νᵀ M̄)/ρ₁
 //! ```
 //!
-//! which keeps `E[s̃ ⊗ θ̃] = M` (unbiased) at `O(n² + p)` per step — far
-//! cheaper than exact RTRL but with gradient *variance* that exact sparse
-//! RTRL does not pay. This is the contrast the paper draws: its savings are
-//! free of both bias (SnAp) and variance (UORO).
+//! For a stack, `J` is the one-step Jacobian of the *composed* map and `M̄`
+//! the composed immediate influence; both factor along the block
+//! lower-bidiagonal structure, so `J·s̃` is computed by **forward
+//! substitution** through the layers
+//! (`(Js̃)_l = φ'_l ⊙ (J_l s̃_l + C_l (Js̃)_{l-1})`) and `νᵀM̄` by **backward
+//! substitution** (`g_l = ν_l + C_{l+1}ᵀ(φ'_{l+1} ⊙ g_{l+1})`, then layer
+//! `l` contributes `(φ'_l ⊙ g_l)ᵀ M̄_l` to its own parameter block). This
+//! keeps `E[s̃ ⊗ θ̃] = M` (unbiased) at `O(N² + P)` per step — far cheaper
+//! than exact RTRL but with gradient *variance* that exact sparse RTRL does
+//! not pay. This is the contrast the paper draws: its savings are free of
+//! both bias (SnAp) and variance (UORO).
 
 use super::{supervised_step, GradientEngine, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
-use crate::nn::{CellScratch, Loss, Readout, RnnCell};
+use crate::nn::{LayerStack, Loss, Readout, StackScratch};
 use crate::util::Pcg64;
 
 /// UORO engine (per-sequence state; reusable).
 pub struct Uoro {
-    /// Rank-1 state factor s̃.
+    /// Rank-1 state factor s̃ (over the concatenated state).
     s_tilde: Vec<f32>,
-    /// Rank-1 parameter factor θ̃.
+    /// Rank-1 parameter factor θ̃ (over the concatenated params).
     theta_tilde: Vec<f32>,
-    scratch: CellScratch,
+    scratch: StackScratch,
     a_prev: Vec<f32>,
     grads: Vec<f32>,
     logits: Vec<f32>,
     dlogits: Vec<f32>,
     c_bar: Vec<f32>,
-    /// staging for J·s̃ and νᵀM̄
+    /// staging for J·s̃, νᵀM̄ and the backward-substituted sign vector
     js: Vec<f32>,
     nu_mbar: Vec<f32>,
+    g_signs: Vec<f32>,
     rng: Pcg64,
 }
 
 impl Uoro {
-    pub fn new(cell: &RnnCell, readout_n_out: usize, seed: u64) -> Self {
-        let (n, p) = (cell.n(), cell.p());
+    pub fn new(net: &LayerStack, readout_n_out: usize, seed: u64) -> Self {
+        let (n, p) = (net.total_units(), net.p());
         Uoro {
             s_tilde: vec![0.0; n],
             theta_tilde: vec![0.0; p],
-            scratch: CellScratch::new(n),
+            scratch: net.scratch(),
             a_prev: vec![0.0; n],
             grads: vec![0.0; p],
             logits: vec![0.0; readout_n_out],
             dlogits: vec![0.0; readout_n_out],
-            c_bar: vec![0.0; n],
+            c_bar: vec![0.0; net.top_n()],
             js: vec![0.0; n],
             nu_mbar: vec![0.0; p],
+            g_signs: vec![0.0; n],
             rng: Pcg64::new(seed),
         }
     }
@@ -72,54 +82,105 @@ impl GradientEngine for Uoro {
 
     fn step(
         &mut self,
-        cell: &RnnCell,
+        net: &LayerStack,
         readout: &mut Readout,
         loss: &mut Loss,
         x: &[f32],
         target: Target,
         ops: &mut OpCounter,
     ) -> StepResult {
-        let n = cell.n();
-        let p = cell.p();
-        cell.forward(&self.a_prev, x, &mut self.scratch, ops);
+        let n = net.total_units();
+        let p = net.p();
+        net.forward(&self.a_prev, x, &mut self.scratch, ops);
         let active_units = self.scratch.active_units();
         let deriv_units = self.scratch.deriv_units();
 
-        // J·s̃ with J = φ' ⊙ dv_da (sparse over kept cols)
-        let mut macs = 0u64;
-        for k in 0..n {
-            let dphi_k = self.scratch.dphi[k];
-            let mut acc = 0.0;
-            if dphi_k != 0.0 {
-                for &l in cell.kept_cols(k) {
-                    acc += cell.dv_da(&self.scratch, k, l as usize) * self.s_tilde[l as usize];
+        // J·s̃ by forward substitution through the layers (sparse over kept
+        // own-layer cols; the cross-layer block reads the already-computed
+        // (Js̃)_{l-1} of this very step). Per-layer work is charged inside
+        // that layer's scope, like every other engine.
+        for l in 0..net.layers() {
+            ops.set_layer(l);
+            let mut macs = 0u64;
+            let cell = net.layer(l);
+            let sl = &self.scratch.layers[l];
+            let soff = net.layout().state_offset(l);
+            let soff_prev = if l > 0 { net.layout().state_offset(l - 1) } else { 0 };
+            let nprev = if l > 0 { net.layer(l - 1).n() } else { 0 };
+            for k in 0..cell.n() {
+                let dphi_k = sl.dphi[k];
+                let mut acc = 0.0;
+                if dphi_k != 0.0 {
+                    for &c in cell.kept_cols(k) {
+                        acc += cell.dv_da(sl, k, c as usize) * self.s_tilde[soff + c as usize];
+                    }
+                    macs += cell.kept_cols(k).len() as u64 * (cell.dv_da_cost() + 1);
+                    for j in 0..nprev {
+                        acc += cell.dv_dx(sl, k, j) * self.js[soff_prev + j];
+                    }
+                    macs += nprev as u64 * (cell.dv_dx_cost() + 1);
                 }
-                macs += cell.kept_cols(k).len() as u64 * (cell.dv_da_cost() + 1);
+                self.js[soff + k] = dphi_k * acc;
             }
-            self.js[k] = dphi_k * acc;
+            ops.macs(Phase::InfluenceUpdate, macs);
         }
-        // νᵀ M̄ (ν broadcast through each unit's fan-in rows)
+        ops.clear_layer();
+        // νᵀ M̄ of the composed map: draw signs, backward-substitute them
+        // down the stack, then broadcast through each layer's local M̄.
         self.nu_mbar.iter_mut().for_each(|v| *v = 0.0);
-        let mut nu = vec![0.0f32; n];
         for k in 0..n {
-            nu[k] = if self.rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            self.g_signs[k] = if self.rng.bernoulli(0.5) { 1.0 } else { -1.0 };
         }
-        for k in 0..n {
-            let dphi_k = self.scratch.dphi[k];
-            if dphi_k == 0.0 {
-                continue;
+        let nu: Vec<f32> = self.g_signs.clone();
+        for l in (1..net.layers()).rev() {
+            ops.set_layer(l);
+            let mut macs = 0u64;
+            let cell = net.layer(l);
+            let sl = &self.scratch.layers[l];
+            let soff = net.layout().state_offset(l);
+            let soff_prev = net.layout().state_offset(l - 1);
+            let nprev = net.layer(l - 1).n();
+            for k in 0..cell.n() {
+                let coef = sl.dphi[k] * self.g_signs[soff + k];
+                if coef == 0.0 {
+                    continue;
+                }
+                for j in 0..nprev {
+                    self.g_signs[soff_prev + j] += coef * cell.dv_dx(sl, k, j);
+                }
+                macs += nprev as u64 * (cell.dv_dx_cost() + 1);
             }
-            let nk = nu[k] * dphi_k;
-            let nu_mbar = &mut self.nu_mbar;
-            cell.immediate_row(
-                &self.scratch,
-                &self.a_prev,
-                x,
-                k,
-                |pi, val| nu_mbar[pi] += nk * val,
-                ops,
-            );
+            ops.macs(Phase::InfluenceUpdate, macs);
         }
+        for l in 0..net.layers() {
+            ops.set_layer(l);
+            let cell = net.layer(l);
+            let sl = &self.scratch.layers[l];
+            let soff = net.layout().state_offset(l);
+            let poff = net.layout().param_offset(l);
+            let a_prev_l = &self.a_prev[soff..soff + cell.n()];
+            let input_l: &[f32] = if l == 0 { x } else { &self.scratch.layers[l - 1].a };
+            for k in 0..cell.n() {
+                let dphi_k = sl.dphi[k];
+                if dphi_k == 0.0 {
+                    continue;
+                }
+                let gk = self.g_signs[soff + k] * dphi_k;
+                if gk == 0.0 {
+                    continue;
+                }
+                let nu_mbar = &mut self.nu_mbar;
+                cell.immediate_row(
+                    sl,
+                    a_prev_l,
+                    input_l,
+                    k,
+                    |pi, val| nu_mbar[poff + pi] += gk * val,
+                    ops,
+                );
+            }
+        }
+        ops.clear_layer();
         // variance-balancing scales
         let norm_js = self.js.iter().map(|v| v * v).sum::<f32>().sqrt();
         let norm_tt = self.theta_tilde.iter().map(|v| v * v).sum::<f32>().sqrt();
@@ -133,13 +194,14 @@ impl GradientEngine for Uoro {
         for pi in 0..p {
             self.theta_tilde[pi] = self.theta_tilde[pi] / rho0 + self.nu_mbar[pi] / rho1;
         }
-        macs += (2 * p + 2 * n) as u64;
-        ops.macs(Phase::InfluenceUpdate, macs);
+        // rank-1 rescale touches every state and parameter entry once —
+        // whole-stack work, charged outside any layer scope
+        ops.macs(Phase::InfluenceUpdate, (2 * p + 2 * n) as u64);
 
         let (loss_val, correct) = supervised_step(
             readout,
             loss,
-            &self.scratch.a,
+            &self.scratch.top().a,
             target,
             &mut self.logits,
             &mut self.dlogits,
@@ -147,8 +209,10 @@ impl GradientEngine for Uoro {
             ops,
         );
         if loss_val.is_some() {
-            // grad += (c̄ · s̃) θ̃
-            let coef: f32 = self.c_bar.iter().zip(&self.s_tilde).map(|(c, s)| c * s).sum();
+            // grad += (c̄ · s̃_top) θ̃ — c̄ lives on the top layer only
+            let top_off = net.layout().state_offset(net.layers() - 1);
+            let coef: f32 =
+                self.c_bar.iter().zip(&self.s_tilde[top_off..]).map(|(c, s)| c * s).sum();
             if coef != 0.0 {
                 for (g, t) in self.grads.iter_mut().zip(&self.theta_tilde) {
                     *g += coef * t;
@@ -157,11 +221,11 @@ impl GradientEngine for Uoro {
             }
         }
 
-        self.a_prev.copy_from_slice(&self.scratch.a);
+        self.scratch.write_state(&mut self.a_prev);
         StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity: None }
     }
 
-    fn end_sequence(&mut self, _cell: &RnnCell, _readout: &mut Readout, _ops: &mut OpCounter) {}
+    fn end_sequence(&mut self, _net: &LayerStack, _readout: &mut Readout, _ops: &mut OpCounter) {}
 
     fn grads(&self) -> &[f32] {
         &self.grads
@@ -172,7 +236,7 @@ impl GradientEngine for Uoro {
     }
 
     fn state_memory_words(&self) -> usize {
-        // s̃ + θ̃ + staging — the O(n + p) memory row
+        // s̃ + θ̃ + staging — the O(N + P) memory row
         self.s_tilde.len() + 2 * self.theta_tilde.len() + self.js.len()
     }
 }
@@ -181,14 +245,14 @@ impl GradientEngine for Uoro {
 mod tests {
     use super::*;
     use crate::config::AlgorithmKind;
-    use crate::nn::LossKind;
+    use crate::nn::{LossKind, RnnCell};
     use crate::train::build_engine;
 
     /// E[ĝ] over noise draws must approach the exact gradient (unbiasedness).
     #[test]
     fn unbiased_in_expectation() {
         let mut rng = Pcg64::new(70);
-        let cell = RnnCell::gated_tanh(5, 2, None, &mut rng);
+        let net = LayerStack::single(RnnCell::gated_tanh(5, 2, None, &mut rng));
         let seq: Vec<[f32; 2]> = (0..4).map(|_| [rng.normal(), rng.normal()]).collect();
 
         let run_exact = || {
@@ -196,28 +260,28 @@ mod tests {
             let mut readout = Readout::new(2, 5, &mut rr);
             let mut loss = Loss::new(LossKind::CrossEntropy, 2);
             let mut ops = OpCounter::new();
-            let mut eng = build_engine(AlgorithmKind::RtrlDense, &cell, 2);
+            let mut eng = build_engine(AlgorithmKind::RtrlDense, &net, 2);
             eng.begin_sequence();
             for (t, x) in seq.iter().enumerate() {
                 let tg = if t + 1 == seq.len() { Target::Class(1) } else { Target::None };
-                eng.step(&cell, &mut readout, &mut loss, x, tg, &mut ops);
+                eng.step(&net, &mut readout, &mut loss, x, tg, &mut ops);
             }
             eng.grads().to_vec()
         };
         let exact = run_exact();
 
         let trials = 4000;
-        let mut mean = vec![0.0f64; cell.p()];
+        let mut mean = vec![0.0f64; net.p()];
         for trial in 0..trials {
             let mut rr = Pcg64::new(7);
             let mut readout = Readout::new(2, 5, &mut rr);
             let mut loss = Loss::new(LossKind::CrossEntropy, 2);
             let mut ops = OpCounter::new();
-            let mut eng = Uoro::new(&cell, 2, 1000 + trial);
+            let mut eng = Uoro::new(&net, 2, 1000 + trial);
             eng.begin_sequence();
             for (t, x) in seq.iter().enumerate() {
                 let tg = if t + 1 == seq.len() { Target::Class(1) } else { Target::None };
-                eng.step(&cell, &mut readout, &mut loss, x, tg, &mut ops);
+                eng.step(&net, &mut readout, &mut loss, x, tg, &mut ops);
             }
             for (m, g) in mean.iter_mut().zip(eng.grads()) {
                 *m += *g as f64 / trials as f64;
@@ -235,18 +299,18 @@ mod tests {
     #[test]
     fn single_draw_is_noisy() {
         let mut rng = Pcg64::new(71);
-        let cell = RnnCell::gated_tanh(5, 2, None, &mut rng);
+        let net = LayerStack::single(RnnCell::gated_tanh(5, 2, None, &mut rng));
         let x = [[0.3f32, -0.2], [0.8, 0.1], [-0.4, 0.6]];
         let one = |seed: u64| {
             let mut rr = Pcg64::new(7);
             let mut readout = Readout::new(2, 5, &mut rr);
             let mut loss = Loss::new(LossKind::CrossEntropy, 2);
             let mut ops = OpCounter::new();
-            let mut eng = Uoro::new(&cell, 2, seed);
+            let mut eng = Uoro::new(&net, 2, seed);
             eng.begin_sequence();
             for (t, xi) in x.iter().enumerate() {
                 let tg = if t == 2 { Target::Class(0) } else { Target::None };
-                eng.step(&cell, &mut readout, &mut loss, xi, tg, &mut ops);
+                eng.step(&net, &mut readout, &mut loss, xi, tg, &mut ops);
             }
             eng.grads().to_vec()
         };
@@ -260,7 +324,7 @@ mod tests {
     #[test]
     fn cheaper_than_dense() {
         let mut rng = Pcg64::new(72);
-        let cell = RnnCell::egru(16, 2, 0.1, 0.3, 0.5, None, &mut rng);
+        let net = LayerStack::single(RnnCell::egru(16, 2, 0.1, 0.3, 0.5, None, &mut rng));
         let mut readout = Readout::new(2, 16, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
         let mut run = |eng: &mut dyn GradientEngine| {
@@ -269,22 +333,59 @@ mod tests {
             let mut xr = Pcg64::new(5);
             for _ in 0..10 {
                 let x = [xr.normal(), xr.normal()];
-                eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+                eng.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
             }
             ops.macs_in(Phase::InfluenceUpdate)
         };
-        let dense = run(&mut *build_engine(AlgorithmKind::RtrlDense, &cell, 2));
-        let uoro = run(&mut Uoro::new(&cell, 2, 3));
+        let dense = run(&mut *build_engine(AlgorithmKind::RtrlDense, &net, 2));
+        let uoro = run(&mut Uoro::new(&net, 2, 3));
         assert!(uoro * 10 < dense, "uoro {uoro} should be ≫ cheaper than dense {dense}");
     }
 
-    /// Memory is O(n + p), below every exact RTRL variant.
+    /// Memory is O(N + P), below every exact RTRL variant.
     #[test]
     fn memory_is_linear() {
         let mut rng = Pcg64::new(73);
-        let cell = RnnCell::egru(16, 2, 0.1, 0.3, 0.5, None, &mut rng);
-        let uoro = Uoro::new(&cell, 2, 1);
-        let dense = build_engine(AlgorithmKind::RtrlDense, &cell, 2);
+        let net = LayerStack::single(RnnCell::egru(16, 2, 0.1, 0.3, 0.5, None, &mut rng));
+        let uoro = Uoro::new(&net, 2, 1);
+        let dense = build_engine(AlgorithmKind::RtrlDense, &net, 2);
         assert!(uoro.state_memory_words() < dense.state_memory_words() / 4);
+    }
+
+    /// Depth 2: the stacked forward/backward substitutions keep UORO
+    /// unbiased — mean over draws aligns with the exact stacked gradient.
+    #[test]
+    fn depth2_unbiased_in_expectation() {
+        let mut rng = Pcg64::new(74);
+        let l0 = RnnCell::gated_tanh(4, 2, None, &mut rng);
+        let l1 = RnnCell::gated_tanh(3, 4, None, &mut rng);
+        let net = LayerStack::new(vec![l0, l1]);
+        let seq: Vec<[f32; 2]> = (0..3).map(|_| [rng.normal(), rng.normal()]).collect();
+        let run = |eng: &mut dyn GradientEngine| {
+            let mut rr = Pcg64::new(7);
+            let mut readout = Readout::new(2, 3, &mut rr);
+            let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+            let mut ops = OpCounter::new();
+            eng.begin_sequence();
+            for (t, x) in seq.iter().enumerate() {
+                let tg = if t + 1 == seq.len() { Target::Class(1) } else { Target::None };
+                eng.step(&net, &mut readout, &mut loss, x, tg, &mut ops);
+            }
+            eng.grads().to_vec()
+        };
+        let exact = run(&mut *build_engine(AlgorithmKind::RtrlDense, &net, 2));
+        let trials = 3000u64;
+        let mut mean = vec![0.0f64; net.p()];
+        for trial in 0..trials {
+            let g = run(&mut Uoro::new(&net, 2, 9000 + trial));
+            for (m, v) in mean.iter_mut().zip(&g) {
+                *m += *v as f64 / trials as f64;
+            }
+        }
+        let dot: f64 = mean.iter().zip(&exact).map(|(m, e)| m * *e as f64).sum();
+        let nm: f64 = mean.iter().map(|m| m * m).sum::<f64>().sqrt();
+        let ne: f64 = exact.iter().map(|e| (*e as f64).powi(2)).sum::<f64>().sqrt();
+        let cos = dot / (nm * ne + 1e-12);
+        assert!(cos > 0.8, "E[UORO] should align with stacked exact: cos={cos:.3}");
     }
 }

@@ -81,6 +81,17 @@ impl Matrix {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Split the buffer at the start of row `r`: `(rows 0..r, rows r..)`,
+    /// both row-major. Lets a caller read earlier rows while writing later
+    /// ones — the borrow pattern of the stacked RTRL update, where layer
+    /// `l`'s new influence rows gather from layer `l−1`'s already-written
+    /// rows of the *same* panel.
+    #[inline]
+    pub fn split_at_row_mut(&mut self, r: usize) -> (&mut [f32], &mut [f32]) {
+        debug_assert!(r <= self.rows);
+        self.data.split_at_mut(r * self.cols)
+    }
+
     /// Full row-major buffer.
     #[inline]
     pub fn as_slice(&self) -> &[f32] {

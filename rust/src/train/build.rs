@@ -1,19 +1,18 @@
-//! Factories: config → cell / engine / dataset.
+//! Factories: config → stack / engine / dataset.
 
 use crate::config::{AlgorithmKind, CellKind, ExperimentConfig, TaskKind};
 use crate::data::{copy_task, delayed_xor, spiral, Dataset};
-use crate::nn::RnnCell;
+use crate::nn::{LayerStack, RnnCell};
 use crate::rtrl::{Bptt, DenseRtrl, GradientEngine, Snap1, Snap2, SparseRtrl, SparsityMode, Uoro};
 use crate::sparse::MaskPattern;
 use crate::util::Pcg64;
 
-/// Build the recurrent cell (mask drawn first so the pattern is independent
+/// Build one recurrent cell (mask drawn first so the pattern is independent
 /// of weight-init draws, as in "fixed random sparsity mask at
 /// initialisation").
-pub fn build_cell(cfg: &ExperimentConfig, rng: &mut Pcg64) -> RnnCell {
+fn build_cell_with(cfg: &ExperimentConfig, n_in: usize, rng: &mut Pcg64) -> RnnCell {
     let m = &cfg.model;
     let n = m.hidden;
-    let n_in = task_n_in(cfg);
     let mask = if m.param_sparsity > 0.0 {
         Some(MaskPattern::random(n, n, 1.0 - m.param_sparsity, rng))
     } else {
@@ -25,6 +24,20 @@ pub fn build_cell(cfg: &ExperimentConfig, rng: &mut Pcg64) -> RnnCell {
         CellKind::GatedTanh => RnnCell::gated_tanh(n, n_in, mask, rng),
         CellKind::Vanilla => RnnCell::vanilla(n, n_in, mask, rng),
     }
+}
+
+/// Build the full layer stack: layer 0 reads the task input, every deeper
+/// layer reads the previous layer's `hidden` activations. Each layer draws
+/// its own mask at the configured sparsity (independent patterns, as in
+/// per-layer fixed random masks).
+pub fn build_stack(cfg: &ExperimentConfig, rng: &mut Pcg64) -> LayerStack {
+    assert!(cfg.model.layers >= 1, "model.layers must be ≥ 1");
+    let mut cells = Vec::with_capacity(cfg.model.layers);
+    for l in 0..cfg.model.layers {
+        let n_in = if l == 0 { task_n_in(cfg) } else { cfg.model.hidden };
+        cells.push(build_cell_with(cfg, n_in, rng));
+    }
+    LayerStack::new(cells)
 }
 
 /// Input dimensionality implied by the task.
@@ -41,19 +54,19 @@ pub fn task_n_out(_cfg: &ExperimentConfig) -> usize {
     2 // all bundled tasks are binary classification
 }
 
-/// Build the gradient engine for a cell.
-pub fn build_engine(kind: AlgorithmKind, cell: &RnnCell, n_out: usize) -> Box<dyn GradientEngine> {
+/// Build the gradient engine for a stack.
+pub fn build_engine(kind: AlgorithmKind, net: &LayerStack, n_out: usize) -> Box<dyn GradientEngine> {
     match kind {
-        AlgorithmKind::RtrlDense => Box::new(DenseRtrl::new(cell, n_out)),
-        AlgorithmKind::RtrlActivity => Box::new(SparseRtrl::new(cell, n_out, SparsityMode::Activity)),
-        AlgorithmKind::RtrlParam => Box::new(SparseRtrl::new(cell, n_out, SparsityMode::Parameter)),
-        AlgorithmKind::RtrlBoth => Box::new(SparseRtrl::new(cell, n_out, SparsityMode::Both)),
-        AlgorithmKind::Snap1 => Box::new(Snap1::new(cell, n_out)),
-        AlgorithmKind::Snap2 => Box::new(Snap2::new(cell, n_out)),
+        AlgorithmKind::RtrlDense => Box::new(DenseRtrl::new(net, n_out)),
+        AlgorithmKind::RtrlActivity => Box::new(SparseRtrl::new(net, n_out, SparsityMode::Activity)),
+        AlgorithmKind::RtrlParam => Box::new(SparseRtrl::new(net, n_out, SparsityMode::Parameter)),
+        AlgorithmKind::RtrlBoth => Box::new(SparseRtrl::new(net, n_out, SparsityMode::Both)),
+        AlgorithmKind::Snap1 => Box::new(Snap1::new(net, n_out)),
+        AlgorithmKind::Snap2 => Box::new(Snap2::new(net, n_out)),
         // fixed stream seed: the trainer's gradient stochasticity is UORO's
         // own; reproducibility comes from the experiment seed path
-        AlgorithmKind::Uoro => Box::new(Uoro::new(cell, n_out, 0x706f_726f)),
-        AlgorithmKind::Bptt => Box::new(Bptt::new(cell, n_out)),
+        AlgorithmKind::Uoro => Box::new(Uoro::new(net, n_out, 0x706f_726f)),
+        AlgorithmKind::Bptt => Box::new(Bptt::new(net, n_out)),
     }
 }
 
@@ -94,20 +107,42 @@ mod tests {
     fn builds_every_engine() {
         let cfg = ExperimentConfig::default();
         let mut rng = Pcg64::new(1);
-        let cell = build_cell(&cfg, &mut rng);
+        let net = build_stack(&cfg, &mut rng);
         for kind in AlgorithmKind::all() {
-            let eng = build_engine(kind, &cell, 2);
+            let eng = build_engine(kind, &net, 2);
             assert_eq!(eng.name(), kind.name());
         }
     }
 
     #[test]
-    fn masked_cell_when_sparsity_positive() {
+    fn masked_stack_when_sparsity_positive() {
         let mut cfg = ExperimentConfig::default();
         cfg.model.param_sparsity = 0.8;
         let mut rng = Pcg64::new(2);
-        let cell = build_cell(&cfg, &mut rng);
-        assert!((cell.omega_tilde() - 0.2).abs() < 0.01);
+        let net = build_stack(&cfg, &mut rng);
+        assert!((net.omega_tilde() - 0.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn multi_layer_stack_wires_hidden_to_hidden() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model.layers = 3;
+        cfg.model.hidden = 12;
+        cfg.model.param_sparsity = 0.5;
+        let mut rng = Pcg64::new(3);
+        let net = build_stack(&cfg, &mut rng);
+        assert_eq!(net.layers(), 3);
+        assert_eq!(net.layer(0).n_in(), task_n_in(&cfg));
+        assert_eq!(net.layer(1).n_in(), 12);
+        assert_eq!(net.layer(2).n_in(), 12);
+        assert_eq!(net.total_units(), 36);
+        // each layer draws an independent mask
+        let m0 = net.layer(0).mask().unwrap();
+        let m1 = net.layer(1).mask().unwrap();
+        let differs = (0..12)
+            .flat_map(|r| (0..12).map(move |c| (r, c)))
+            .any(|(r, c)| m0.is_kept(r, c) != m1.is_kept(r, c));
+        assert!(differs, "layer masks should be independent draws");
     }
 
     #[test]

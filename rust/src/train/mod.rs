@@ -3,5 +3,5 @@
 pub mod build;
 pub mod trainer;
 
-pub use build::{build_cell, build_dataset, build_engine};
+pub use build::{build_dataset, build_engine, build_stack};
 pub use trainer::{TrainOutcome, Trainer};

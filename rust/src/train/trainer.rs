@@ -1,11 +1,12 @@
 //! The training loop (paper §6 protocol): minibatch RTRL/BPTT with Adam,
-//! per-iteration sparsity + compute accounting, periodic validation.
+//! per-iteration sparsity + compute accounting, periodic validation —
+//! over a [`LayerStack`] of any depth.
 
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::metrics::curve::{Curve, CurvePoint};
 use crate::metrics::{ComputeAdjusted, OpCounter, Phase, SparsityStats};
-use crate::nn::{CellScratch, Loss, LossKind, Readout, RnnCell};
+use crate::nn::{LayerStack, Loss, LossKind, Readout};
 use crate::optim::{Adam, Optimizer};
 use crate::rtrl::GradientEngine;
 use crate::train::build;
@@ -14,7 +15,7 @@ use crate::util::Pcg64;
 /// Everything a finished run reports.
 pub struct TrainOutcome {
     pub curve: Curve,
-    /// Total MACs spent, by phase.
+    /// Total MACs spent, by phase (and by layer where attributable).
     pub ops: OpCounter,
     /// Final validation accuracy.
     pub final_val_accuracy: f32,
@@ -25,13 +26,15 @@ pub struct TrainOutcome {
 /// Single-run trainer owning all components.
 pub struct Trainer {
     pub cfg: ExperimentConfig,
-    pub cell: RnnCell,
+    pub net: LayerStack,
     pub readout: Readout,
     pub loss: Loss,
     pub engine: Box<dyn GradientEngine>,
     opt_cell: Adam,
     opt_readout: Adam,
     grad_accum: Vec<f32>,
+    /// Staging buffer for the concatenated stack parameters (`R^P`).
+    cell_params: Vec<f32>,
     readout_params: Vec<f32>,
     readout_grads: Vec<f32>,
     batch_rng: Pcg64,
@@ -48,21 +51,22 @@ impl Trainer {
         let _data_rng = root.split(); // consumed by callers building datasets
         let batch_rng = root.split();
         let n_out = build::task_n_out(&cfg);
-        let cell = build::build_cell(&cfg, &mut cell_rng);
-        let readout = Readout::new(n_out, cell.n(), &mut readout_rng);
-        let engine = build::build_engine(cfg.train.algorithm, &cell, n_out);
-        let p = cell.p();
+        let net = build::build_stack(&cfg, &mut cell_rng);
+        let readout = Readout::new(n_out, net.top_n(), &mut readout_rng);
+        let engine = build::build_engine(cfg.train.algorithm, &net, n_out);
+        let p = net.p();
         let rp = readout.param_len();
         let lr = cfg.train.lr;
         Trainer {
             cfg,
-            cell,
+            net,
             readout,
             loss: Loss::new(LossKind::CrossEntropy, n_out),
             engine,
             opt_cell: Adam::new(p, lr),
             opt_readout: Adam::new(rp, lr),
             grad_accum: vec![0.0; p],
+            cell_params: vec![0.0; p],
             readout_params: vec![0.0; rp],
             readout_grads: vec![0.0; rp],
             batch_rng,
@@ -91,16 +95,17 @@ impl Trainer {
         let mut loss_sum = 0.0;
         let mut loss_count = 0u32;
         let mut last_correct = false;
+        let n_total = self.net.total_units();
         for (t, x) in seq.inputs.iter().enumerate() {
             let r = self.engine.step(
-                &self.cell,
+                &self.net,
                 &mut self.readout,
                 &mut self.loss,
                 x,
                 seq.targets[t].as_target(),
                 &mut self.ops,
             );
-            stats.record_step(self.cell.n(), r.active_units, r.deriv_units);
+            stats.record_step(n_total, r.active_units, r.deriv_units);
             if let Some(l) = r.loss {
                 loss_sum += l;
                 loss_count += 1;
@@ -112,7 +117,7 @@ impl Trainer {
                 stats.record_influence(s);
             }
         }
-        self.engine.end_sequence(&self.cell, &mut self.readout, &mut self.ops);
+        self.engine.end_sequence(&self.net, &mut self.readout, &mut self.ops);
         for (g, eg) in self.grad_accum.iter_mut().zip(self.engine.grads()) {
             *g += eg;
         }
@@ -125,8 +130,10 @@ impl Trainer {
         for g in self.grad_accum.iter_mut() {
             *g *= scale;
         }
-        self.opt_cell.update(self.cell.params_mut(), &self.grad_accum);
-        self.cell.enforce_mask();
+        self.net.copy_params_into(&mut self.cell_params);
+        self.opt_cell.update(&mut self.cell_params, &self.grad_accum);
+        self.net.load_params(&self.cell_params);
+        self.net.enforce_masks();
         self.grad_accum.iter_mut().for_each(|g| *g = 0.0);
 
         self.readout.scale_grads(scale);
@@ -135,60 +142,74 @@ impl Trainer {
         self.opt_readout.update(&mut self.readout_params, &self.readout_grads);
         self.readout.load_params(&self.readout_params);
         self.readout.zero_grads();
-        self.ops.macs(Phase::Optimizer, (self.cell.p() + self.readout.param_len()) as u64);
+        self.ops.macs(Phase::Optimizer, (self.net.p() + self.readout.param_len()) as u64);
     }
 
-    /// One Deep-Rewiring-style step (paper Discussion / Bellec et al. 2018):
-    /// relocate the lowest-magnitude kept recurrent connections, rebuild the
-    /// engine (its column map tracks the new pattern) and reset the Adam
-    /// moments of every swapped parameter.
+    /// One Deep-Rewiring-style step (paper Discussion / Bellec et al. 2018),
+    /// applied to every masked layer: relocate the lowest-magnitude kept
+    /// recurrent connections, rebuild the engine (its column maps track the
+    /// new patterns) and reset the Adam moments of every swapped parameter
+    /// (indices in the concatenated layout).
     fn rewire(&mut self, rng: &mut Pcg64) {
-        if self.cell.mask().is_none() {
-            return;
-        }
-        let old_mask = self.cell.mask().unwrap().clone();
-        let new_mask =
-            crate::sparse::rewire::magnitude_rewire(&self.cell, self.cfg.train.rewire_fraction, rng);
-        // flat indices of swapped recurrent params (either direction)
-        let n = self.cell.n();
-        let layout = self.cell.layout().clone();
         let mut swapped = Vec::new();
-        for &b in &self.cell.recurrent_blocks() {
-            for r in 0..n {
-                for c in 0..n {
-                    if old_mask.is_kept(r, c) != new_mask.is_kept(r, c) {
-                        swapped.push(layout.flat(b, r, c));
+        let mut any = false;
+        for l in 0..self.net.layers() {
+            if self.net.layer(l).mask().is_none() {
+                continue;
+            }
+            any = true;
+            let old_mask = self.net.layer(l).mask().unwrap().clone();
+            let new_mask = crate::sparse::rewire::magnitude_rewire(
+                self.net.layer(l),
+                self.cfg.train.rewire_fraction,
+                rng,
+            );
+            // flat indices of swapped recurrent params (either direction),
+            // offset into the concatenated parameter space
+            let n = self.net.layer(l).n();
+            let poff = self.net.layout().param_offset(l);
+            let layout = self.net.layer(l).layout().clone();
+            for &b in &self.net.layer(l).recurrent_blocks() {
+                for r in 0..n {
+                    for c in 0..n {
+                        if old_mask.is_kept(r, c) != new_mask.is_kept(r, c) {
+                            swapped.push(poff + layout.flat(b, r, c));
+                        }
                     }
                 }
             }
+            // grow at ~10% of the fresh-init scale so new connections start small
+            let grow = 0.1 * (6.0 / (2 * n) as f32).sqrt() / new_mask.density().sqrt();
+            self.net.layer_mut(l).set_mask(new_mask, grow, rng);
         }
-        // grow at ~10% of the fresh-init scale so new connections start small
-        let grow = 0.1 * (6.0 / (2 * n) as f32).sqrt() / new_mask.density().sqrt();
-        self.cell.set_mask(new_mask, grow, rng);
+        if !any {
+            return;
+        }
         self.opt_cell.reset_indices(&swapped);
-        self.engine = build::build_engine(self.cfg.train.algorithm, &self.cell, self.readout.n_out());
+        self.engine =
+            build::build_engine(self.cfg.train.algorithm, &self.net, self.readout.n_out());
     }
 
     /// Forward-only accuracy over (a subsample of) a dataset.
     pub fn evaluate(&self, data: &Dataset, max_sequences: usize) -> f32 {
-        let mut scratch = CellScratch::new(self.cell.n());
+        let mut scratch = self.net.scratch();
         let mut logits = vec![0.0; self.readout.n_out()];
         let mut discard = OpCounter::new();
         let take = data.len().min(max_sequences.max(1));
         let mut correct = 0usize;
         let mut total = 0usize;
         for seq in data.seqs.iter().take(take) {
-            let mut a_prev = vec![0.0; self.cell.n()];
+            let mut a_prev = vec![0.0; self.net.total_units()];
             for (t, x) in seq.inputs.iter().enumerate() {
-                self.cell.forward(&a_prev, x, &mut scratch, &mut discard);
+                self.net.forward(&a_prev, x, &mut scratch, &mut discard);
                 if let crate::data::StepTarget::Class(c) = &seq.targets[t] {
-                    self.readout.forward(&scratch.a, &mut logits, &mut discard);
+                    self.readout.forward(&scratch.top().a, &mut logits, &mut discard);
                     total += 1;
                     if Loss::predict(&logits) == *c {
                         correct += 1;
                     }
                 }
-                a_prev.copy_from_slice(&scratch.a);
+                scratch.write_state(&mut a_prev);
             }
         }
         if total == 0 {
@@ -335,5 +356,26 @@ mod tests {
         for p in &out.curve.points {
             assert!(p.beta < 0.05, "tanh cell should have ~0 derivative sparsity");
         }
+    }
+
+    /// A 2-layer stack trains end-to-end through the same loop, and the op
+    /// counters carry a per-layer breakdown covering the influence cost.
+    #[test]
+    fn two_layer_stack_trains_with_layer_attribution() {
+        let mut cfg = tiny_cfg();
+        cfg.model.layers = 2;
+        cfg.train.iterations = 20;
+        let mut data_rng = Trainer::data_rng(cfg.seed);
+        let (train, val) = build_dataset(&cfg, &mut data_rng);
+        let mut tr = Trainer::new(cfg);
+        let out = tr.train(&train, &val);
+        let first = out.curve.points.first().unwrap().loss;
+        let last = out.curve.points.last().unwrap().loss;
+        assert!(last < first, "2-layer loss did not decrease: {first} -> {last}");
+        assert_eq!(out.ops.layers_tracked(), 2);
+        let l0 = out.ops.macs_in_layer(0, Phase::InfluenceUpdate);
+        let l1 = out.ops.macs_in_layer(1, Phase::InfluenceUpdate);
+        assert!(l0 > 0 && l1 > 0);
+        assert_eq!(l0 + l1, out.ops.macs_in(Phase::InfluenceUpdate));
     }
 }

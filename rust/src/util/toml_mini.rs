@@ -100,6 +100,17 @@ impl Doc {
     pub fn has_section(&self, section: &str) -> bool {
         self.sections.contains_key(section)
     }
+
+    /// Keys present in a section (sorted). Lets callers that care about
+    /// strictness detect unknown keys; the config layer deliberately does
+    /// *not* — unknown keys are preserved here and ignored there, so old
+    /// binaries keep reading new config files and vice versa.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|s| s.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -188,6 +199,28 @@ mod tests {
         let doc = Doc::parse("a = -3\nb = 1.5e-2").unwrap();
         assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(-3));
         assert!((doc.get("", "b").unwrap().as_f64().unwrap() - 0.015).abs() < 1e-12);
+    }
+
+    /// Unknown keys are parsed and retained, never an error — forward and
+    /// backward compatibility of experiment TOMLs rests on this (e.g. files
+    /// written before `model.layers` existed, or after keys this build does
+    /// not know yet).
+    #[test]
+    fn unknown_keys_are_preserved_not_fatal() {
+        let doc = Doc::parse(
+            r#"
+            future_top_level = "kept"
+            [model]
+            hidden = 8
+            some_future_knob = 3.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "future_top_level").unwrap().as_str(), Some("kept"));
+        assert_eq!(doc.get("model", "some_future_knob").unwrap().as_f64(), Some(3.5));
+        let keys = doc.keys("model");
+        assert!(keys.contains(&"hidden") && keys.contains(&"some_future_knob"));
+        assert!(doc.keys("absent_section").is_empty());
     }
 
     #[test]

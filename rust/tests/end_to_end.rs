@@ -117,13 +117,14 @@ fn rewiring_learns_and_preserves_density() {
     let out = tr.train(&train, &val);
     assert!(out.final_val_accuracy > 0.7, "rewired run accuracy {}", out.final_val_accuracy);
     // density preserved through all rewirings
-    let mask = tr.cell.mask().expect("still masked");
+    let cell = tr.net.layer(0);
+    let mask = cell.mask().expect("still masked");
     assert!((mask.density() - 0.2).abs() < 0.01, "density drifted: {}", mask.density());
     // masked entries exactly zero
-    let n = tr.cell.n();
-    let layout = tr.cell.layout().clone();
-    for &b in &tr.cell.recurrent_blocks() {
-        let buf = layout.block(tr.cell.params(), b);
+    let n = cell.n();
+    let layout = cell.layout().clone();
+    for &b in &cell.recurrent_blocks() {
+        let buf = layout.block(cell.params(), b);
         for r in 0..n {
             for c in 0..n {
                 if !mask.is_kept(r, c) {
@@ -153,4 +154,45 @@ fn sparsity_metrics_sane() {
         "influence sparsity {} should exceed the 0.8-mask floor region",
         last.influence_sparsity
     );
+}
+
+/// **Depth acceptance**: a 2-layer EGRU stack trains on delayed-XOR via the
+/// exact sparse engine with decreasing loss, well above chance, and the op
+/// counters expose per-layer cost with layer 0's panel (own columns only)
+/// cheaper than layer 1's (both layers' columns) — the never-charged
+/// cross-layer zero blocks, visible end to end.
+#[test]
+fn two_layer_egru_learns_delayed_xor_with_sparse_rtrl() {
+    let mut cfg = base_cfg();
+    cfg.task.task = TaskKind::DelayedXor;
+    cfg.task.timesteps = 8;
+    cfg.task.num_sequences = 800;
+    cfg.train.iterations = 400;
+    cfg.train.algorithm = AlgorithmKind::RtrlBoth;
+    cfg.model.hidden = 16;
+    cfg.model.layers = 2;
+    cfg.model.theta = 0.05;
+    cfg.model.eps = 1.0;
+    cfg.model.gamma = 0.5;
+    cfg.train.lr = 0.005;
+    cfg.seed = 4;
+    let mut data_rng = Trainer::data_rng(cfg.seed);
+    let (train, val) = build_dataset(&cfg, &mut data_rng);
+    let mut tr = Trainer::new(cfg);
+    let out = tr.train(&train, &val);
+    let first = out.curve.points.first().unwrap().loss;
+    let last = out.curve.points.last().unwrap().loss;
+    assert!(last < first, "2-layer delayed-XOR loss did not decrease: {first} -> {last}");
+    assert!(
+        out.final_val_accuracy > 0.7,
+        "2-layer delayed-XOR accuracy {} (chance = 0.5)",
+        out.final_val_accuracy
+    );
+    // per-layer op accounting: both layers charged, split complete, and
+    // layer 0 cheaper (narrower influence panel)
+    let l0 = out.ops.macs_in_layer(0, sparse_rtrl::metrics::Phase::InfluenceUpdate);
+    let l1 = out.ops.macs_in_layer(1, sparse_rtrl::metrics::Phase::InfluenceUpdate);
+    assert!(l0 > 0 && l1 > 0, "per-layer influence counters empty: {l0}/{l1}");
+    assert_eq!(l0 + l1, out.ops.macs_in(sparse_rtrl::metrics::Phase::InfluenceUpdate));
+    assert!(l0 < l1, "layer 0 ({l0}) should charge less than layer 1 ({l1})");
 }

@@ -11,7 +11,7 @@
 
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::OpCounter;
-use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::nn::{CellScratch, LayerStack, Loss, LossKind, Readout, RnnCell};
 use sparse_rtrl::rtrl::{GradientEngine, Target, Uoro};
 use sparse_rtrl::sparse::MaskPattern;
 use sparse_rtrl::train::build_engine;
@@ -36,17 +36,71 @@ fn sequence(n_in: usize, len: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<Target<'s
 }
 
 /// Run one engine over the shared sequence entirely through the trait.
-fn grads_via_trait(mut engine: Box<dyn GradientEngine>, cell: &RnnCell, seed: u64) -> Vec<f32> {
+fn grads_via_trait(mut engine: Box<dyn GradientEngine>, net: &LayerStack, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut readout = Readout::new(2, net.top_n(), &mut rng);
+    let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+    let mut ops = OpCounter::new();
+    let (inputs, targets) = sequence(net.n_in(), 9, 77);
+    let summary = engine.run_sequence(net, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+    assert_eq!(summary.steps, 9, "{}: wrong step count", engine.name());
+    assert_eq!(summary.supervised_steps, 2, "{}: wrong supervised count", engine.name());
+    assert!(ops.total_macs() > 0, "{}: no ops charged", engine.name());
+    engine.grads().to_vec()
+}
+
+/// Reference implementation: textbook dense RTRL written directly against
+/// the bare [`RnnCell`] — no `LayerStack`, no engine machinery. This pins
+/// the *pre-refactor* single-cell semantics so the stacked engines at
+/// depth 1 are provably behavior-preserving.
+fn manual_single_cell_rtrl(cell: &RnnCell, seed: u64) -> Vec<f32> {
     let mut rng = Pcg64::new(seed);
     let mut readout = Readout::new(2, cell.n(), &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, 2);
     let mut ops = OpCounter::new();
     let (inputs, targets) = sequence(cell.n_in(), 9, 77);
-    let summary = engine.run_sequence(cell, &mut readout, &mut loss, &inputs, &targets, &mut ops);
-    assert_eq!(summary.steps, 9, "{}: wrong step count", engine.name());
-    assert_eq!(summary.supervised_steps, 2, "{}: wrong supervised count", engine.name());
-    assert!(ops.total_macs() > 0, "{}: no ops charged", engine.name());
-    engine.grads().to_vec()
+    let (n, p) = (cell.n(), cell.p());
+    let mut m_cur = vec![0.0f32; n * p];
+    let mut m_next = vec![0.0f32; n * p];
+    let mut a_prev = vec![0.0f32; n];
+    let mut grads = vec![0.0f32; p];
+    let mut scratch = CellScratch::new(n);
+    let mut logits = [0.0f32; 2];
+    let mut dlogits = [0.0f32; 2];
+    let mut c_bar = vec![0.0f32; n];
+    for (x, target) in inputs.iter().zip(&targets) {
+        cell.forward(&a_prev, x, &mut scratch, &mut ops);
+        for k in 0..n {
+            let row = &mut m_next[k * p..(k + 1) * p];
+            row.iter_mut().for_each(|r| *r = 0.0);
+            for l in 0..n {
+                let jv = cell.dv_da(&scratch, k, l);
+                for (r, sv) in row.iter_mut().zip(&m_cur[l * p..(l + 1) * p]) {
+                    *r += jv * sv;
+                }
+            }
+            cell.immediate_row(&scratch, &a_prev, x, k, |pi, val| row[pi] += val, &mut ops);
+            let dphi = scratch.dphi[k];
+            for r in row.iter_mut() {
+                let v = *r * dphi;
+                *r = if v.abs() < 1e-30 { 0.0 } else { v };
+            }
+        }
+        if let Target::Class(t) = target {
+            readout.forward(&scratch.a, &mut logits, &mut ops);
+            loss.cross_entropy(&logits, *t, &mut dlogits);
+            readout.backward(&scratch.a, &dlogits, &mut c_bar, &mut ops);
+            for k in 0..n {
+                let coef = c_bar[k];
+                for (g, m) in grads.iter_mut().zip(&m_next[k * p..(k + 1) * p]) {
+                    *g += coef * m;
+                }
+            }
+        }
+        std::mem::swap(&mut m_cur, &mut m_next);
+        a_prev.copy_from_slice(&scratch.a);
+    }
+    grads
 }
 
 fn assert_grads_match(reference: &[f32], got: &[f32], what: &str) {
@@ -64,8 +118,8 @@ fn assert_grads_match(reference: &[f32], got: &[f32], what: &str) {
 #[test]
 fn exact_engines_match_dense_rtrl() {
     let mut rng = Pcg64::new(31);
-    let cell = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, None, &mut rng);
-    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &cell, 2), &cell, 5);
+    let net = LayerStack::single(RnnCell::egru(6, 2, 0.05, 0.3, 0.5, None, &mut rng));
+    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &net, 2), &net, 5);
     assert!(
         reference.iter().any(|&g| g != 0.0),
         "degenerate reference gradient — retune the test cell"
@@ -78,8 +132,38 @@ fn exact_engines_match_dense_rtrl() {
         // SnAp-2's two-hop pattern is complete on a dense cell.
         AlgorithmKind::Snap2,
     ] {
-        let g = grads_via_trait(build_engine(kind, &cell, 2), &cell, 5);
+        let g = grads_via_trait(build_engine(kind, &net, 2), &net, 5);
         assert_grads_match(&reference, &g, kind.name());
+    }
+}
+
+/// **Behavior preservation at depth 1** — the refactor's contract: every
+/// exact engine, now running on a `LayerStack`, reproduces the gradients
+/// of a from-scratch single-cell dense RTRL implementation (the old
+/// engine semantics) up to float reassociation. Checked dense and masked.
+#[test]
+fn depth1_stack_reproduces_single_cell_rtrl() {
+    let mut rng = Pcg64::new(36);
+    let dense_cell = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, None, &mut rng);
+    let mask = MaskPattern::random(6, 6, 0.4, &mut rng);
+    let masked_cell = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, Some(mask), &mut rng);
+    for (what, cell) in [("dense", dense_cell), ("masked", masked_cell)] {
+        let reference = manual_single_cell_rtrl(&cell, 9);
+        assert!(
+            reference.iter().any(|&g| g != 0.0),
+            "{what}: degenerate manual reference gradient"
+        );
+        let net = LayerStack::single(cell);
+        for kind in [
+            AlgorithmKind::RtrlDense,
+            AlgorithmKind::RtrlActivity,
+            AlgorithmKind::RtrlParam,
+            AlgorithmKind::RtrlBoth,
+            AlgorithmKind::Bptt,
+        ] {
+            let g = grads_via_trait(build_engine(kind, &net, 2), &net, 9);
+            assert_grads_match(&reference, &g, &format!("{what}/{} vs manual", kind.name()));
+        }
     }
 }
 
@@ -89,15 +173,15 @@ fn exact_engines_match_dense_rtrl() {
 fn exact_engines_match_dense_rtrl_under_mask() {
     let mut rng = Pcg64::new(32);
     let mask = MaskPattern::random(6, 6, 0.4, &mut rng);
-    let cell = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, Some(mask), &mut rng);
-    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &cell, 2), &cell, 6);
+    let net = LayerStack::single(RnnCell::egru(6, 2, 0.05, 0.3, 0.5, Some(mask), &mut rng));
+    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &net, 2), &net, 6);
     for kind in [
         AlgorithmKind::RtrlActivity,
         AlgorithmKind::RtrlParam,
         AlgorithmKind::RtrlBoth,
         AlgorithmKind::Bptt,
     ] {
-        let g = grads_via_trait(build_engine(kind, &cell, 2), &cell, 6);
+        let g = grads_via_trait(build_engine(kind, &net, 2), &net, 6);
         assert_grads_match(&reference, &g, kind.name());
     }
 }
@@ -107,9 +191,9 @@ fn exact_engines_match_dense_rtrl_under_mask() {
 #[test]
 fn snap1_exact_on_single_unit_network() {
     let mut rng = Pcg64::new(33);
-    let cell = RnnCell::egru(1, 2, 0.0, 0.3, 0.9, None, &mut rng);
-    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &cell, 2), &cell, 7);
-    let g = grads_via_trait(build_engine(AlgorithmKind::Snap1, &cell, 2), &cell, 7);
+    let net = LayerStack::single(RnnCell::egru(1, 2, 0.0, 0.3, 0.9, None, &mut rng));
+    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &net, 2), &net, 7);
+    let g = grads_via_trait(build_engine(AlgorithmKind::Snap1, &net, 2), &net, 7);
     assert_grads_match(&reference, &g, "snap1@n=1");
 }
 
@@ -118,13 +202,13 @@ fn snap1_exact_on_single_unit_network() {
 #[test]
 fn uoro_matches_dense_in_expectation() {
     let mut rng = Pcg64::new(34);
-    let cell = RnnCell::gated_tanh(4, 2, None, &mut rng);
-    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &cell, 2), &cell, 8);
+    let net = LayerStack::single(RnnCell::gated_tanh(4, 2, None, &mut rng));
+    let reference = grads_via_trait(build_engine(AlgorithmKind::RtrlDense, &net, 2), &net, 8);
     let trials = 1500u64;
-    let mut mean = vec![0.0f64; cell.p()];
+    let mut mean = vec![0.0f64; net.p()];
     for trial in 0..trials {
-        let eng: Box<dyn GradientEngine> = Box::new(Uoro::new(&cell, 2, 5000 + trial));
-        let g = grads_via_trait(eng, &cell, 8);
+        let eng: Box<dyn GradientEngine> = Box::new(Uoro::new(&net, 2, 5000 + trial));
+        let g = grads_via_trait(eng, &net, 8);
         for (m, v) in mean.iter_mut().zip(&g) {
             *m += *v as f64 / trials as f64;
         }
@@ -142,18 +226,23 @@ fn uoro_matches_dense_in_expectation() {
 #[test]
 fn every_engine_satisfies_the_contract() {
     let mut rng = Pcg64::new(35);
-    let mask = MaskPattern::random(6, 6, 0.5, &mut rng);
-    let cell = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, Some(mask), &mut rng);
-    let (inputs, targets) = sequence(cell.n_in(), 9, 99);
+    let mask0 = MaskPattern::random(6, 6, 0.5, &mut rng);
+    let l0 = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, Some(mask0), &mut rng);
+    let mask1 = MaskPattern::random(4, 4, 0.5, &mut rng);
+    let l1 = RnnCell::egru(4, 6, 0.05, 0.3, 0.5, Some(mask1), &mut rng);
+    // the uniform contract is checked on a *2-layer* masked stack — the
+    // hardest configuration every engine must now support
+    let net = LayerStack::new(vec![l0, l1]);
+    let (inputs, targets) = sequence(net.n_in(), 9, 99);
     for kind in AlgorithmKind::all() {
-        let mut engine = build_engine(kind, &cell, 2);
+        let mut engine = build_engine(kind, &net, 2);
         assert_eq!(engine.name(), kind.name(), "factory/name mismatch");
         let mut rrng = Pcg64::new(1);
-        let mut readout = Readout::new(2, cell.n(), &mut rrng);
+        let mut readout = Readout::new(2, net.top_n(), &mut rrng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
         let mut ops = OpCounter::new();
-        engine.run_sequence(&cell, &mut readout, &mut loss, &inputs, &targets, &mut ops);
-        assert_eq!(engine.grads().len(), cell.p(), "{}: grads not R^p", kind.name());
+        engine.run_sequence(&net, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+        assert_eq!(engine.grads().len(), net.p(), "{}: grads not R^P", kind.name());
         assert!(
             engine.grads().iter().all(|g| g.is_finite()),
             "{}: non-finite gradient",

@@ -5,34 +5,44 @@
 
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::OpCounter;
-use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
 use sparse_rtrl::rtrl::{GradientEngine, Target};
 use sparse_rtrl::sparse::MaskPattern;
 use sparse_rtrl::train::build_engine;
 use sparse_rtrl::util::Pcg64;
 
-/// Run one supervised sequence through an algorithm; return (cell grads,
-/// readout grads).
+/// Run one supervised sequence through an algorithm on a stack; return
+/// (stack grads, readout grads).
+fn grads_for_net(
+    kind: AlgorithmKind,
+    net: &LayerStack,
+    seq: &[(Vec<f32>, Option<usize>)],
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::new(seed);
+    let mut readout = Readout::new(2, net.top_n(), &mut rng);
+    let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+    let mut ops = OpCounter::new();
+    let mut eng = build_engine(kind, net, 2);
+    eng.begin_sequence();
+    for (x, t) in seq {
+        let target = t.map(Target::Class).unwrap_or(Target::None);
+        eng.step(net, &mut readout, &mut loss, x, target, &mut ops);
+    }
+    eng.end_sequence(net, &mut readout, &mut ops);
+    let mut rg = vec![0.0; readout.param_len()];
+    readout.copy_grads_into(&mut rg);
+    (eng.grads().to_vec(), rg)
+}
+
+/// Single-cell convenience wrapper over [`grads_for_net`].
 fn grads_for(
     kind: AlgorithmKind,
     cell: &RnnCell,
     seq: &[(Vec<f32>, Option<usize>)],
     seed: u64,
 ) -> (Vec<f32>, Vec<f32>) {
-    let mut rng = Pcg64::new(seed);
-    let mut readout = Readout::new(2, cell.n(), &mut rng);
-    let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-    let mut ops = OpCounter::new();
-    let mut eng = build_engine(kind, cell, 2);
-    eng.begin_sequence();
-    for (x, t) in seq {
-        let target = t.map(Target::Class).unwrap_or(Target::None);
-        eng.step(cell, &mut readout, &mut loss, x, target, &mut ops);
-    }
-    eng.end_sequence(cell, &mut readout, &mut ops);
-    let mut rg = vec![0.0; readout.param_len()];
-    readout.copy_grads_into(&mut rg);
-    (eng.grads().to_vec(), rg)
+    grads_for_net(kind, &LayerStack::single(cell.clone()), seq, seed)
 }
 
 fn random_sequence(n_in: usize, len: usize, rng: &mut Pcg64) -> Vec<(Vec<f32>, Option<usize>)> {
@@ -142,16 +152,17 @@ fn rtrl_matches_finite_difference_loss() {
 
     // loss evaluation with fixed readout (same seed 8 readout)
     let eval_loss = |cell: &RnnCell| -> f64 {
+        let net = LayerStack::single(cell.clone());
         let mut rng = Pcg64::new(8);
-        let mut readout = Readout::new(2, cell.n(), &mut rng);
+        let mut readout = Readout::new(2, net.top_n(), &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
         let mut ops = OpCounter::new();
-        let mut eng = build_engine(AlgorithmKind::RtrlDense, cell, 2);
+        let mut eng = build_engine(AlgorithmKind::RtrlDense, &net, 2);
         eng.begin_sequence();
         let mut total = 0.0f64;
         for (x, t) in &seq {
             let target = t.map(Target::Class).unwrap_or(Target::None);
-            let r = eng.step(cell, &mut readout, &mut loss, x, target, &mut ops);
+            let r = eng.step(&net, &mut readout, &mut loss, x, target, &mut ops);
             if let Some(l) = r.loss {
                 total += l as f64;
             }
@@ -189,4 +200,151 @@ fn grads_are_deterministic() {
     let (a, _) = grads_for(AlgorithmKind::RtrlBoth, &cell, &seq, 9);
     let (b, _) = grads_for(AlgorithmKind::RtrlBoth, &cell, &seq, 9);
     assert_eq!(a, b);
+}
+
+// ---------------------------------------------------------------------
+// Depth: the "no approximations" claim must survive the block structure.
+// ---------------------------------------------------------------------
+
+/// Build a 2-layer EGRU stack (independent masks when `omega > 0`).
+fn egru_stack2(n0: usize, n1: usize, omega: f32, rng: &mut Pcg64) -> LayerStack {
+    let mask = |n: usize, rng: &mut Pcg64| {
+        if omega > 0.0 {
+            Some(MaskPattern::random(n, n, 1.0 - omega, rng))
+        } else {
+            None
+        }
+    };
+    let m0 = mask(n0, rng);
+    let l0 = RnnCell::egru(n0, 2, 0.05, 0.3, 0.5, m0, rng);
+    let m1 = mask(n1, rng);
+    let l1 = RnnCell::egru(n1, n0, 0.05, 0.3, 0.5, m1, rng);
+    LayerStack::new(vec![l0, l1])
+}
+
+/// Delayed-XOR input/target sequences (the task the depth acceptance
+/// criterion names), lifted from the bundled dataset generator.
+fn delayed_xor_sequences(count: usize, timesteps: usize) -> Vec<Vec<(Vec<f32>, Option<usize>)>> {
+    let mut rng = Pcg64::new(4242);
+    let data = sparse_rtrl::data::delayed_xor::generate(
+        &sparse_rtrl::data::delayed_xor::DelayedXorConfig { num_sequences: count, timesteps },
+        &mut rng,
+    );
+    data.seqs
+        .iter()
+        .map(|seq| {
+            seq.inputs
+                .iter()
+                .zip(&seq.targets)
+                .map(|(x, t)| {
+                    let target = match t {
+                        sparse_rtrl::data::StepTarget::Class(c) => Some(*c),
+                        _ => None,
+                    };
+                    (x.clone(), target)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Sparse RTRL == dense RTRL == BPTT on a 2-layer EGRU over delayed-XOR:
+/// the exact family agrees at depth, dense stack.
+#[test]
+fn exact_methods_agree_depth2_delayed_xor() {
+    let mut rng = Pcg64::new(600);
+    let net = egru_stack2(10, 8, 0.0, &mut rng);
+    for (si, seq) in delayed_xor_sequences(3, 9).iter().enumerate() {
+        let (g_dense, r_dense) = grads_for_net(AlgorithmKind::RtrlDense, &net, seq, 15);
+        assert!(
+            g_dense.iter().any(|&g| g != 0.0),
+            "degenerate test: depth-2 dense gradient is all-zero (seq {si})"
+        );
+        for kind in [
+            AlgorithmKind::RtrlActivity,
+            AlgorithmKind::RtrlParam,
+            AlgorithmKind::RtrlBoth,
+            AlgorithmKind::Bptt,
+        ] {
+            let (g, r) = grads_for_net(kind, &net, seq, 15);
+            assert_close(&g, &g_dense, 3e-4, &format!("depth2 seq {si} {} grads", kind.name()));
+            assert_close(&r, &r_dense, 3e-4, &format!("depth2 seq {si} {} readout", kind.name()));
+        }
+    }
+}
+
+/// Same at 80% parameter sparsity per layer — column compaction and the
+/// nested block panels stay exact.
+#[test]
+fn exact_methods_agree_depth2_masked() {
+    let mut rng = Pcg64::new(601);
+    let net = egru_stack2(10, 8, 0.8, &mut rng);
+    let seq = &delayed_xor_sequences(1, 9)[0];
+    let (g_dense, _) = grads_for_net(AlgorithmKind::RtrlDense, &net, seq, 16);
+    assert!(g_dense.iter().any(|&g| g != 0.0));
+    for kind in [
+        AlgorithmKind::RtrlActivity,
+        AlgorithmKind::RtrlParam,
+        AlgorithmKind::RtrlBoth,
+        AlgorithmKind::Bptt,
+    ] {
+        let (g, _) = grads_for_net(kind, &net, seq, 16);
+        assert_close(&g, &g_dense, 3e-4, &format!("depth2-masked {}", kind.name()));
+    }
+}
+
+/// Finite differences through the *stacked* dynamics: dense RTRL on a
+/// 2-layer tanh stack matches d(loss)/dw for parameters of both layers —
+/// the cross-layer propagation is a true total derivative.
+#[test]
+fn depth2_rtrl_matches_finite_difference_loss() {
+    let mut rng = Pcg64::new(602);
+    let l0 = RnnCell::gated_tanh(5, 2, None, &mut rng);
+    let l1 = RnnCell::gated_tanh(4, 5, None, &mut rng);
+    let mut net = LayerStack::new(vec![l0, l1]);
+    let seq = random_sequence(2, 5, &mut rng);
+    let (g, _) = grads_for_net(AlgorithmKind::RtrlDense, &net, &seq, 17);
+
+    let eval_loss = |net: &LayerStack| -> f64 {
+        let mut rng = Pcg64::new(17);
+        let mut readout = Readout::new(2, net.top_n(), &mut rng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops = OpCounter::new();
+        let mut eng = build_engine(AlgorithmKind::RtrlDense, net, 2);
+        eng.begin_sequence();
+        let mut total = 0.0f64;
+        for (x, t) in &seq {
+            let target = t.map(Target::Class).unwrap_or(Target::None);
+            let r = eng.step(net, &mut readout, &mut loss, x, target, &mut ops);
+            if let Some(l) = r.loss {
+                total += l as f64;
+            }
+        }
+        total
+    };
+
+    let h = 1e-3f32;
+    let p_total = net.p();
+    let mut buf = vec![0.0; p_total];
+    let mut checked = 0;
+    for pi in (0..p_total).step_by(p_total / 23) {
+        net.copy_params_into(&mut buf);
+        let orig = buf[pi];
+        buf[pi] = orig + h;
+        net.load_params(&buf);
+        let up = eval_loss(&net);
+        buf[pi] = orig - h;
+        net.load_params(&buf);
+        let down = eval_loss(&net);
+        buf[pi] = orig;
+        net.load_params(&buf);
+        let fd = ((up - down) / (2.0 * h as f64)) as f32;
+        assert!(
+            (fd - g[pi]).abs() < 5e-3 + 0.05 * fd.abs().max(g[pi].abs()),
+            "param {pi}: fd={fd} rtrl={}",
+            g[pi]
+        );
+        checked += 1;
+    }
+    assert!(checked >= 20);
 }

@@ -6,7 +6,7 @@
 
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::OpCounter;
-use sparse_rtrl::nn::{Activation, Dynamics, Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::nn::{Activation, Dynamics, LayerStack, Loss, LossKind, Readout, RnnCell};
 use sparse_rtrl::rtrl::{ColumnMap, GradientEngine, Target};
 use sparse_rtrl::sparse::{MaskPattern, RowSet};
 use sparse_rtrl::train::build_engine;
@@ -38,27 +38,59 @@ fn run_pair(
     steps: usize,
     seed: u64,
 ) -> (Vec<f32>, Vec<f32>) {
-    let run = |kind| {
-        let mut rng = Pcg64::new(seed);
-        let mut readout = Readout::new(2, cell.n(), &mut rng);
-        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-        let mut ops = OpCounter::new();
-        let mut eng = build_engine(kind, cell, 2);
-        eng.begin_sequence();
-        let mut xrng = Pcg64::new(seed ^ 0xdead_beef);
-        for t in 0..steps {
-            let x: Vec<f32> = (0..cell.n_in()).map(|_| xrng.normal()).collect();
-            let target = if xrng.bernoulli(0.3) || t + 1 == steps {
-                Target::Class(xrng.below(2) as usize)
-            } else {
-                Target::None
-            };
-            eng.step(cell, &mut readout, &mut loss, &x, target, &mut ops);
-        }
-        eng.end_sequence(cell, &mut readout, &mut ops);
-        eng.grads().to_vec()
+    let net = LayerStack::single(cell.clone());
+    let (ga, gb) = (run_one(&net, a, steps, seed), run_one(&net, b, steps, seed));
+    (ga, gb)
+}
+
+/// Run one engine over a stack for `steps` random supervised steps.
+fn run_one(net: &LayerStack, kind: AlgorithmKind, steps: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut readout = Readout::new(2, net.top_n(), &mut rng);
+    let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+    let mut ops = OpCounter::new();
+    let mut eng = build_engine(kind, net, 2);
+    eng.begin_sequence();
+    let mut xrng = Pcg64::new(seed ^ 0xdead_beef);
+    for t in 0..steps {
+        let x: Vec<f32> = (0..net.n_in()).map(|_| xrng.normal()).collect();
+        let target = if xrng.bernoulli(0.3) || t + 1 == steps {
+            Target::Class(xrng.below(2) as usize)
+        } else {
+            Target::None
+        };
+        eng.step(net, &mut readout, &mut loss, &x, target, &mut ops);
+    }
+    eng.end_sequence(net, &mut readout, &mut ops);
+    eng.grads().to_vec()
+}
+
+/// Draw a random 2-layer stack (uniform cell family per layer, independent
+/// masks) — the depth analogue of `random_cell`.
+fn random_stack2(rng: &mut Pcg64) -> LayerStack {
+    let n0 = 4 + rng.below(8) as usize;
+    let n1 = 3 + rng.below(8) as usize;
+    let n_in = 1 + rng.below(3) as usize;
+    let dynamics = if rng.bernoulli(0.5) { Dynamics::Gated } else { Dynamics::Linear };
+    let activation = if rng.bernoulli(0.6) {
+        Activation::Heaviside { gamma: rng.uniform(0.1, 0.6), eps: rng.uniform(0.2, 0.8) }
+    } else {
+        Activation::Tanh
     };
-    (run(a), run(b))
+    let theta = rng.uniform(-0.1, 0.3);
+    let m0 = if rng.bernoulli(0.6) {
+        Some(MaskPattern::random(n0, n0, rng.uniform(0.05, 0.9), rng))
+    } else {
+        None
+    };
+    let l0 = RnnCell::new(n0, n_in, dynamics, activation, theta, m0, rng);
+    let m1 = if rng.bernoulli(0.6) {
+        Some(MaskPattern::random(n1, n1, rng.uniform(0.05, 0.9), rng))
+    } else {
+        None
+    };
+    let l1 = RnnCell::new(n1, n0, dynamics, activation, theta, m1, rng);
+    LayerStack::new(vec![l0, l1])
 }
 
 /// PROPERTY: every sparse engine equals dense RTRL on random configs.
@@ -187,16 +219,48 @@ fn prop_event_cell_binary_activations() {
         let mut rng = Pcg64::new(4700 + case);
         let n = 4 + rng.below(12) as usize;
         let cell = RnnCell::egru(n, 2, rng.uniform(0.0, 0.3), 0.3, rng.uniform(0.2, 0.8), None, &mut rng);
+        let net = LayerStack::single(cell);
         let mut readout = Readout::new(2, n, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
         let mut ops = OpCounter::new();
-        let mut eng = build_engine(AlgorithmKind::RtrlBoth, &cell, 2);
+        let mut eng = build_engine(AlgorithmKind::RtrlBoth, &net, 2);
         eng.begin_sequence();
         for _ in 0..10 {
             let x = [rng.normal(), rng.normal()];
-            let r = eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+            let r = eng.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
             assert!(r.active_units <= n);
             assert!(r.deriv_units <= n);
+        }
+    }
+}
+
+/// PROPERTY (depth): every exact engine equals dense RTRL on random
+/// 2-layer stacks — the block lower-bidiagonal recursion keeps the "no
+/// approximations" claim at depth.
+#[test]
+fn prop_sparse_engines_exact_depth2() {
+    for case in 0..20u64 {
+        let mut rng = Pcg64::new(7700 + case);
+        let net = random_stack2(&mut rng);
+        let steps = 2 + rng.below(8) as usize;
+        let g_ref = run_one(&net, AlgorithmKind::RtrlDense, steps, case);
+        for kind in [
+            AlgorithmKind::RtrlActivity,
+            AlgorithmKind::RtrlParam,
+            AlgorithmKind::RtrlBoth,
+            AlgorithmKind::Bptt,
+        ] {
+            let g = run_one(&net, kind, steps, case);
+            for (i, (x, y)) in g_ref.iter().zip(&g).enumerate() {
+                let tol = 4e-4 * (1.0 + x.abs().max(y.abs()));
+                assert!(
+                    (x - y).abs() <= tol,
+                    "case {case} {} param {i}: dense {x} vs {y} (stack {}+{})",
+                    kind.name(),
+                    net.layer(0).n(),
+                    net.layer(1).n(),
+                );
+            }
         }
     }
 }
@@ -247,12 +311,13 @@ fn prop_influence_sparsity_bounds() {
         let mut readout = Readout::new(2, n, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
         let mut ops = OpCounter::new();
-        let mut eng = build_engine(AlgorithmKind::RtrlDense, &cell, 2);
+        let net = LayerStack::single(cell);
+        let mut eng = build_engine(AlgorithmKind::RtrlDense, &net, 2);
         eng.set_measure_influence(true);
         eng.begin_sequence();
         for _ in 0..6 {
             let x = [rng.normal(), rng.normal()];
-            let r = eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+            let r = eng.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
             let s = r.influence_sparsity.unwrap();
             assert!((0.0..=1.0).contains(&s), "case {case}: sparsity {s}");
         }

@@ -4,26 +4,27 @@
 
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::{OpCounter, Phase};
-use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
 use sparse_rtrl::rtrl::{GradientEngine, Target};
 use sparse_rtrl::sparse::MaskPattern;
 use sparse_rtrl::train::build_engine;
 use sparse_rtrl::util::Pcg64;
 
 fn grads_for(kind: AlgorithmKind, cell: &RnnCell, seed: u64, steps: usize) -> (Vec<f32>, u64) {
+    let net = LayerStack::single(cell.clone());
     let mut rng = Pcg64::new(seed);
-    let mut readout = Readout::new(2, cell.n(), &mut rng);
+    let mut readout = Readout::new(2, net.top_n(), &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, 2);
     let mut ops = OpCounter::new();
-    let mut eng = build_engine(kind, cell, 2);
+    let mut eng = build_engine(kind, &net, 2);
     eng.begin_sequence();
     let mut xrng = Pcg64::new(seed + 1000);
     for t in 0..steps {
-        let x: Vec<f32> = (0..cell.n_in()).map(|_| xrng.normal()).collect();
+        let x: Vec<f32> = (0..net.n_in()).map(|_| xrng.normal()).collect();
         let target = if t + 1 == steps { Target::Class(1) } else { Target::None };
-        eng.step(cell, &mut readout, &mut loss, &x, target, &mut ops);
+        eng.step(&net, &mut readout, &mut loss, &x, target, &mut ops);
     }
-    eng.end_sequence(cell, &mut readout, &mut ops);
+    eng.end_sequence(&net, &mut readout, &mut ops);
     (eng.grads().to_vec(), ops.macs_in(Phase::InfluenceUpdate))
 }
 

@@ -9,7 +9,7 @@
 
 use sparse_rtrl::config::AlgorithmKind;
 use sparse_rtrl::metrics::{OpCounter, Phase};
-use sparse_rtrl::nn::{Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
 use sparse_rtrl::rtrl::{GradientEngine, SparseRtrl, SparsityMode, Target};
 use sparse_rtrl::sparse::MaskPattern;
 use sparse_rtrl::train::build_engine;
@@ -22,19 +22,20 @@ struct StepStats {
 
 /// Run `steps` random steps, return influence MACs + mean β̃.
 fn run_steps(kind: AlgorithmKind, cell: &RnnCell, steps: usize, seed: u64) -> StepStats {
+    let net = LayerStack::single(cell.clone());
     let mut rng = Pcg64::new(seed);
-    let mut readout = Readout::new(2, cell.n(), &mut rng);
+    let mut readout = Readout::new(2, net.top_n(), &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, 2);
     let mut ops = OpCounter::new();
-    let mut eng = build_engine(kind, cell, 2);
+    let mut eng = build_engine(kind, &net, 2);
     eng.begin_sequence();
     let mut bt = 0.0;
     for _ in 0..steps {
-        let x: Vec<f32> = (0..cell.n_in()).map(|_| rng.normal()).collect();
-        let r = eng.step(cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
-        bt += r.deriv_units as f64 / cell.n() as f64;
+        let x: Vec<f32> = (0..net.n_in()).map(|_| rng.normal()).collect();
+        let r = eng.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
+        bt += r.deriv_units as f64 / net.total_units() as f64;
     }
-    eng.end_sequence(cell, &mut readout, &mut ops);
+    eng.end_sequence(&net, &mut readout, &mut ops);
     StepStats {
         influence_macs: ops.macs_in(Phase::InfluenceUpdate) + ops.macs_in(Phase::Jacobian),
         beta_tilde_mean: bt / steps as f64,
@@ -145,8 +146,9 @@ fn influence_sparsity_consistent_across_engines() {
     let mut readout = Readout::new(2, 10, &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, 2);
     let mut ops = OpCounter::new();
-    let mut dense = build_engine(AlgorithmKind::RtrlDense, &cell, 2);
-    let mut sparse = SparseRtrl::new(&cell, 2, SparsityMode::Activity);
+    let net = LayerStack::single(cell);
+    let mut dense = build_engine(AlgorithmKind::RtrlDense, &net, 2);
+    let mut sparse = SparseRtrl::new(&net, 2, SparsityMode::Activity);
     dense.set_measure_influence(true);
     sparse.set_measure_influence(true);
     dense.begin_sequence();
@@ -154,8 +156,8 @@ fn influence_sparsity_consistent_across_engines() {
     let mut rng2 = Pcg64::new(77);
     for _ in 0..6 {
         let x = [rng2.normal(), rng2.normal()];
-        let rd = dense.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
-        let rs = sparse.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+        let rd = dense.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
+        let rs = sparse.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
         let (sd, ss) = (rd.influence_sparsity.unwrap(), rs.influence_sparsity.unwrap());
         assert!(
             (sd - ss).abs() < 1e-6,
@@ -173,16 +175,17 @@ fn memory_ordering_matches_table1() {
     let n = 24;
     let mask = MaskPattern::random(n, n, 0.2, &mut rng);
     let cell = RnnCell::egru(n, 2, 0.1, 0.3, 0.5, Some(mask), &mut rng);
+    let net = LayerStack::single(cell);
     let mem = |kind| {
         let mut rng = Pcg64::new(9);
         let mut readout = Readout::new(2, n, &mut rng);
         let mut loss = Loss::new(LossKind::CrossEntropy, 2);
         let mut ops = OpCounter::new();
-        let mut eng = build_engine(kind, &cell, 2);
+        let mut eng = build_engine(kind, &net, 2);
         eng.begin_sequence();
         for _ in 0..17 {
             let x = [rng.normal(), rng.normal()];
-            eng.step(&cell, &mut readout, &mut loss, &x, Target::None, &mut ops);
+            eng.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
         }
         eng.state_memory_words()
     };
@@ -195,4 +198,27 @@ fn memory_ordering_matches_table1() {
     assert!(both <= param);
     assert!(snap1 < both, "snap1 {snap1} !< both {both}");
     assert!(bptt < dense, "BPTT at T=17,n=24 should be below dense RTRL's n·p");
+}
+
+/// Depth: the block-structured engine's influence memory is the block
+/// lower-triangular footprint (layer l's panel is only `Σ_{m≤l} p_m`
+/// wide), strictly below a naïve full `N×P` double-buffer, and activity
+/// savings compound across layers.
+#[test]
+fn depth2_block_memory_below_full_matrix() {
+    let mut rng = Pcg64::new(7);
+    let l0 = RnnCell::egru(12, 2, 0.1, 0.3, 0.5, None, &mut rng);
+    let l1 = RnnCell::egru(12, 12, 0.1, 0.3, 0.5, None, &mut rng);
+    let net = LayerStack::new(vec![l0, l1]);
+    let sparse = SparseRtrl::new(&net, 2, SparsityMode::Both);
+    let full_np = 2 * net.total_units() * net.p(); // dense double-buffer
+    assert!(
+        sparse.state_memory_words() < full_np,
+        "block panels {} should undercut full N×P ping-pong {}",
+        sparse.state_memory_words(),
+        full_np
+    );
+    // dense engine pays the full footprint
+    let dense = build_engine(AlgorithmKind::RtrlDense, &net, 2);
+    assert_eq!(dense.state_memory_words(), full_np);
 }
