@@ -2,24 +2,22 @@
 //! learn from an *infinite stream* with updates at every step, no sequence
 //! boundaries, no stored history, memory independent of stream length.
 //!
-//! Task: temporal parity over a sliding window (data::stream). The EGRU is
-//! updated online from per-step losses; accuracy is reported over trailing
-//! windows, demonstrating continual improvement. An equivalent BPTT learner
-//! would need the entire (unbounded) history.
+//! Built on the streaming session API: an [`OnlineSession`] with
+//! `UpdatePolicy::EveryKSteps(1)` consumes the stream one `step(x, target)`
+//! at a time and applies a parameter update at every supervised step.
+//! Midway through, the session is checkpointed to JSON and resumed — the
+//! stream continues bit-exactly, demonstrating live-session migration.
+//!
+//! Task: temporal parity over a sliding window (data::stream).
 //!
 //! Run: `cargo run --release --example online_learning`
 
-use sparse_rtrl::config::AlgorithmKind;
+use sparse_rtrl::config::{AlgorithmKind, ExperimentConfig};
 use sparse_rtrl::data::stream::ParityStream;
 use sparse_rtrl::data::StepTarget;
-use sparse_rtrl::metrics::OpCounter;
-use sparse_rtrl::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
-use sparse_rtrl::optim::{Adam, Optimizer};
-use sparse_rtrl::rtrl::GradientEngine;
-use sparse_rtrl::sparse::MaskPattern;
-use sparse_rtrl::train::build_engine;
+use sparse_rtrl::metrics::Phase;
+use sparse_rtrl::session::{OnlineSession, SessionBuilder, SessionCheckpoint, UpdatePolicy};
 use sparse_rtrl::util::cli::Args;
-use sparse_rtrl::util::Pcg64;
 
 fn main() {
     let mut args = Args::from_env().expect("args");
@@ -32,70 +30,71 @@ fn main() {
     assert!(layers >= 1, "--layers must be ≥ 1");
 
     let n = 24;
-    let mut rng = Pcg64::new(42);
-    let mut cells = Vec::with_capacity(layers);
-    for l in 0..layers {
-        let n_in = if l == 0 { 1 } else { n };
-        let mask = if omega > 0.0 {
-            Some(MaskPattern::random(n, n, 1.0 - omega, &mut rng))
-        } else {
-            None
-        };
-        cells.push(RnnCell::egru(n, n_in, 0.0, 0.3, 0.6, mask, &mut rng));
-    }
-    let mut net = LayerStack::new(cells);
-    let n_total = net.total_units();
-    let mut readout = Readout::new(2, net.top_n(), &mut rng);
-    let mut loss = Loss::new(LossKind::CrossEntropy, 2);
-    let mut engine = build_engine(AlgorithmKind::RtrlBoth, &net, 2);
-    let mut opt_cell = Adam::new(net.p(), lr);
-    let mut opt_readout = Adam::new(readout.param_len(), lr);
-    let mut cell_params = vec![0.0f32; net.p()];
-    let mut ops = OpCounter::new();
+    // The parity stream is 1-input; describe the network via the config so
+    // the session is checkpointable.
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "online-parity".into();
+    cfg.model.hidden = n;
+    cfg.model.layers = layers;
+    cfg.model.theta = 0.0;
+    cfg.model.gamma = 0.3;
+    cfg.model.eps = 0.6;
+    cfg.model.param_sparsity = omega;
+    cfg.train.lr = lr;
+    cfg.seed = 42;
+    // the bundled tasks are 2-input; parity is 1-input, so pad below
+    let mut session = SessionBuilder::from_config(cfg)
+        .algorithm(AlgorithmKind::RtrlBoth)
+        .policy(UpdatePolicy::EveryKSteps(1))
+        .build();
+    let n_total = session.net().total_units();
+    let n_in = session.net().n_in();
 
     let mut stream = ParityStream::new(window, 7);
     println!(
-        "online temporal-parity(window={window}): EGRU n={n}×L{layers}, ω={omega}, RTRL updates every step"
+        "online temporal-parity(window={window}): EGRU n={n}×L{layers}, ω={omega}, \
+         RTRL update every supervised step"
     );
-    println!("{:<12}{:>10}{:>12}{:>10}{:>10}{:>16}", "steps", "acc@5k", "loss@5k", "α", "β", "influence MACs");
+    println!(
+        "{:<12}{:>10}{:>12}{:>10}{:>10}{:>16}",
+        "steps", "acc@5k", "loss@5k", "α", "β", "influence MACs"
+    );
 
-    // One endless sequence: begin once, never reset — that's the point.
-    engine.begin_sequence();
+    // One endless stream: no begin/end_sequence anywhere — that's the point.
     let mut correct = 0u64;
     let mut seen = 0u64;
     let mut loss_sum = 0.0f64;
     let mut alpha_sum = 0.0f64;
     let mut beta_sum = 0.0f64;
-    let mut rp = vec![0.0f32; readout.param_len()];
-    let mut rg = vec![0.0f32; readout.param_len()];
     for step in 1..=steps {
-        let (x, target) = stream.next_step();
+        let (bits, target) = stream.next_step();
+        // pad the 1-channel parity input up to the config's input width
+        let mut x = vec![0.0f32; n_in];
+        x[0] = bits[0];
         let t = match &target {
             StepTarget::Class(c) => sparse_rtrl::rtrl::Target::Class(*c),
             _ => sparse_rtrl::rtrl::Target::None,
         };
-        let r = engine.step(&net, &mut readout, &mut loss, &x, t, &mut ops);
-        alpha_sum += 1.0 - r.active_units as f64 / n_total as f64;
-        beta_sum += 1.0 - r.deriv_units as f64 / n_total as f64;
-        if let (Some(l), Some(c)) = (r.loss, r.correct) {
+        let o = session.step(&x, t);
+        alpha_sum += 1.0 - o.active_units as f64 / n_total as f64;
+        beta_sum += 1.0 - o.deriv_units as f64 / n_total as f64;
+        if let (Some(l), Some(c)) = (o.loss, o.correct) {
             loss_sum += l as f64;
             seen += 1;
             if c {
                 correct += 1;
             }
-            // online update from the *running* gradient: apply and clear
-            // every step (pure online regime, batch size 1, T_grad = 1)
-            engine.end_sequence(&net, &mut readout, &mut ops);
-            net.copy_params_into(&mut cell_params);
-            opt_cell.update(&mut cell_params, engine.grads());
-            net.load_params(&cell_params);
-            net.enforce_masks();
-            readout.copy_params_into(&mut rp);
-            readout.copy_grads_into(&mut rg);
-            opt_readout.update(&mut rp, &rg);
-            readout.load_params(&rp);
-            readout.zero_grads();
-            engine.reset_grads();
+        }
+        if step == steps / 2 {
+            // live migration: serialize → parse → resume, mid-stream
+            // (`step` starts at 1, so this fires exactly once)
+            let json = session.checkpoint().to_json();
+            let ck = SessionCheckpoint::from_json(&json).expect("checkpoint parses");
+            session = OnlineSession::resume(&ck).expect("session resumes");
+            println!(
+                "-- checkpointed + resumed at step {step} ({} bytes of JSON) --",
+                json.len()
+            );
         }
         if step % 5000 == 0 {
             println!(
@@ -105,7 +104,7 @@ fn main() {
                 loss_sum / seen.max(1) as f64,
                 alpha_sum / 5000.0,
                 beta_sum / 5000.0,
-                ops.macs_in(sparse_rtrl::metrics::Phase::InfluenceUpdate),
+                session.ops.macs_in(Phase::InfluenceUpdate),
             );
             correct = 0;
             seen = 0;
@@ -115,8 +114,9 @@ fn main() {
         }
     }
     println!(
-        "\nstate memory: {} words — constant in stream length (BPTT would need ~{} words of history by now)",
-        engine.state_memory_words(),
+        "\nstate memory: {} words — constant in stream length (BPTT would need ~{} words of \
+         history by now)",
+        session.state_memory_words(),
         steps as usize * (1 + 9 * n_total)
     );
 }

@@ -78,9 +78,42 @@ mod tests {
         for s in &d.seqs {
             for i in 0..2 {
                 let presented = s.inputs[i][0] > 0.0;
-                match &s.targets[2 + 3 + i] {
+                let t = 2 + 3 + i;
+                match &s.targets[t] {
                     StepTarget::Class(c) => assert_eq!(*c == 1, presented),
-                    _ => panic!("missing target"),
+                    // the generator places a class target on every recall
+                    // step by construction — anything else is a generator bug
+                    other => unreachable!(
+                        "recall step {t} (payload bit {i}) lost its class target: {other:?}"
+                    ),
+                }
+            }
+        }
+    }
+
+    /// Regression over target *placement*: for arbitrary payload/delay
+    /// geometry, supervision covers exactly the recall window
+    /// `[payload+delay, payload+delay+payload)` — never the presentation or
+    /// delay phases — and each recall step carries a `Class` target.
+    #[test]
+    fn targets_cover_exactly_the_recall_window() {
+        for (payload, delay) in [(1usize, 0usize), (2, 1), (3, 5), (4, 7)] {
+            let cfg = CopyConfig { num_sequences: 5, payload, delay };
+            let mut rng = Pcg64::new(7 + payload as u64);
+            let d = generate(&cfg, &mut rng);
+            let t_total = 2 * payload + delay;
+            for s in &d.seqs {
+                assert_eq!(s.len(), t_total);
+                for t in 0..t_total {
+                    let in_recall = t >= payload + delay;
+                    match (&s.targets[t], in_recall) {
+                        (StepTarget::Class(c), true) => assert!(*c < 2),
+                        (StepTarget::None, false) => {}
+                        (other, _) => unreachable!(
+                            "payload={payload} delay={delay}: step {t} has {other:?} \
+                             (in_recall={in_recall})"
+                        ),
+                    }
                 }
             }
         }

@@ -32,11 +32,31 @@
 //! are never stored or charged (see [`rtrl`] module docs). Depth 1 is the
 //! paper's single-cell configuration, bit-for-bit.
 //!
+//! ## The session layer — the primary API
+//!
+//! Online learning is the point of RTRL, so the public surface is built
+//! around it: [`session::SessionBuilder`] produces a long-lived
+//! [`session::OnlineSession`] whose core call is
+//! `step(input, target) → `[`session::StepOutcome`] (prediction, loss,
+//! sparsity stats). There are no mandatory sequence boundaries — a
+//! [`session::UpdatePolicy`] (every-k-supervised-steps / end-of-sequence /
+//! manual) decides when accumulated gradients become parameter updates.
+//! Sessions checkpoint **bit-exactly** ([`session::SessionCheckpoint`]):
+//! weights, Adam moments, stream counters and the engine's versioned
+//! [`rtrl::EngineState`] snapshot travel in one JSON document, so a live
+//! session migrates across process restarts with bit-identical gradients
+//! and predictions. [`session::SessionPool`] steps N independent sessions
+//! (the many-users scenario) concurrently over [`util::pool`]. The batch
+//! [`train::Trainer`] is a thin client of the session (manual policy +
+//! minibatch averaging), and the `stream` CLI subcommand drives a session
+//! from a file/stdin event stream ([`session::events`]).
+//!
 //! ## Layers
 //!
-//! * **L3 (this crate)** — event-driven sparse engines, datasets, optimizers,
-//!   training loop, sweep coordinator, op-count instrumentation, reports,
-//!   and the [`bench`] performance-trajectory subsystem.
+//! * **L3 (this crate)** — streaming sessions, event-driven sparse engines,
+//!   datasets, optimizers, training loop, sweep coordinator, op-count
+//!   instrumentation, reports, and the [`bench`] performance-trajectory
+//!   subsystem.
 //! * **L2 (JAX, build time)** — dense EGRU+RTRL step AOT-lowered to HLO text
 //!   (`python/compile/model.py` → `artifacts/*.hlo.txt`), executed from
 //!   [`runtime`] via PJRT as the dense baseline and numerical oracle
@@ -53,10 +73,20 @@
 //! (every MAC charged to the step's [`metrics::OpCounter`] under its
 //! [`metrics::Phase`], inside the owning layer's `set_layer` scope where
 //! attributable; `state_memory_words` reports the live footprint).
-//! The trainer, the sweep coordinator, the micro-benches and [`bench`] all
-//! consume engines exclusively through this trait, so a new engine plugs
-//! into every task, sweep arm and perf report by implementing it and
-//! registering in [`train::build::build_engine`].
+//!
+//! **Snapshot contract:** engines also implement `save_state`/`load_state`
+//! over a versioned [`rtrl::EngineState`] — a named-buffer snapshot of all
+//! sequence state (influence panels, UORO's rank-1 vectors *and* noise-RNG
+//! position, SnAp pattern slabs, BPTT's stored tape). A snapshot taken
+//! between steps and restored into a freshly-built engine of the same
+//! configuration continues the sequence **bit-identically**; name/version/
+//! shape mismatches fail loudly (`tests/engine_contract.rs` pins both
+//! halves for every engine).
+//!
+//! Sessions, the trainer, the sweep coordinator, the micro-benches and
+//! [`bench`] all consume engines exclusively through this trait, so a new
+//! engine plugs into every task, sweep arm and perf report by implementing
+//! it and registering in [`train::build::build_engine`].
 //!
 //! ## The `bench` subsystem
 //!
@@ -76,6 +106,7 @@ pub mod optim;
 pub mod report;
 pub mod rtrl;
 pub mod runtime;
+pub mod session;
 pub mod sparse;
 pub mod tensor;
 pub mod train;

@@ -1,4 +1,4 @@
-//! `sparse-rtrl` CLI: train, sweep, report, inspect artifacts.
+//! `sparse-rtrl` CLI: stream, train, sweep, report, inspect artifacts.
 
 use anyhow::{anyhow, bail, Result};
 use sparse_rtrl::bench::{self, BenchConfig};
@@ -6,14 +6,23 @@ use sparse_rtrl::config::{AlgorithmKind, ExperimentConfig};
 use sparse_rtrl::coordinator::{run_sweep, SweepPlan};
 use sparse_rtrl::report::{csv::write_text, fig1, fig2, table1};
 use sparse_rtrl::runtime::{ArtifactSet, PjrtRuntime};
+use sparse_rtrl::session::{
+    parse_event, OnlineSession, SessionBuilder, SessionCheckpoint, StreamEvent, UpdatePolicy,
+};
 use sparse_rtrl::train::{build_dataset, Trainer};
 use sparse_rtrl::util::cli::Args;
+use std::io::{BufRead, Write};
 use std::path::PathBuf;
 
 const USAGE: &str = "\
 sparse-rtrl — Efficient RTRL through combined activity and parameter sparsity
 
 USAGE:
+  sparse-rtrl stream [--config cfg.toml] [--algorithm NAME] [--layers L]
+                     [--hidden N] [--param-sparsity W] [--seed S] [--lr R]
+                     [--policy every-k|sequence|manual] [--update-every K]
+                     [--input events.txt|-] [--checkpoint out.json]
+                     [--resume ck.json] [--quiet]
   sparse-rtrl train  [--config cfg.toml] [--param-sparsity W] [--iterations N]
                      [--seed S] [--algorithm NAME] [--cell NAME] [--layers L]
                      [--out results/train_curve.csv]
@@ -29,9 +38,19 @@ USAGE:
   sparse-rtrl config-dump            # print the default config TOML
 ";
 
+/// Subcommand list for unknown-command errors (kept in sync with `main`).
+const SUBCOMMANDS: &str = "stream, train, sweep, bench, report, artifacts, config-dump";
+
+/// Engine names from the single source of truth ([`AlgorithmKind::all`],
+/// the same registry `build_engine` dispatches on).
+fn algorithm_names() -> String {
+    AlgorithmKind::all().map(|k| k.name()).join(", ")
+}
+
 /// Resolve an engine name ("rtrl-both", "snap1", …) to its kind.
 fn parse_algorithm(name: &str) -> Result<AlgorithmKind> {
-    AlgorithmKind::from_name(name).ok_or_else(|| anyhow!("unknown algorithm {name:?}"))
+    AlgorithmKind::from_name(name)
+        .ok_or_else(|| anyhow!("unknown algorithm {name:?} (valid: {})", algorithm_names()))
 }
 
 fn load_config(args: &mut Args) -> Result<ExperimentConfig> {
@@ -40,6 +59,140 @@ fn load_config(args: &mut Args) -> Result<ExperimentConfig> {
             .map_err(|e| anyhow!("config {p}: {e}"))?,
         None => ExperimentConfig::default(),
     })
+}
+
+/// Drive an [`OnlineSession`] from a line-oriented event stream (file or
+/// stdin). Emits one `step=… pred=… loss=… updated=…` line per event and
+/// optionally writes a checkpoint at end of stream.
+fn cmd_stream(mut args: Args) -> Result<()> {
+    let session = match args.get("resume") {
+        Some(path) => {
+            for flag in ["config", "algorithm", "layers", "hidden", "param-sparsity", "seed", "lr", "policy", "update-every"] {
+                if args.get(flag).is_some() {
+                    bail!("--resume restores the full session (config, policy, weights); drop --{flag}");
+                }
+            }
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("cannot read checkpoint {path}: {e}"))?;
+            let ck = SessionCheckpoint::from_json(&text).map_err(err)?;
+            let s = OnlineSession::resume(&ck).map_err(err)?;
+            eprintln!(
+                "resumed session at step {} ({} updates applied, engine {})",
+                s.steps(),
+                s.updates_applied(),
+                s.engine().name()
+            );
+            s
+        }
+        None => {
+            let mut cfg = load_config(&mut args)?;
+            if let Some(alg) = args.get("algorithm") {
+                cfg.train.algorithm = parse_algorithm(&alg)?;
+            }
+            cfg.model.layers = args.get_parse("layers", cfg.model.layers).map_err(err)?;
+            if cfg.model.layers == 0 {
+                bail!("--layers must be ≥ 1");
+            }
+            cfg.model.hidden = args.get_parse("hidden", cfg.model.hidden).map_err(err)?;
+            if let Some(w) = args.get("param-sparsity") {
+                cfg.model.param_sparsity =
+                    w.parse().map_err(|_| anyhow!("bad --param-sparsity"))?;
+                if !(0.0..1.0).contains(&cfg.model.param_sparsity) {
+                    bail!("--param-sparsity must be in [0,1)");
+                }
+            }
+            cfg.seed = args.get_parse("seed", cfg.seed).map_err(err)?;
+            cfg.train.lr = args.get_parse("lr", cfg.train.lr).map_err(err)?;
+            let update_every: u64 = args.get_parse("update-every", 1).map_err(err)?;
+            if update_every == 0 {
+                bail!("--update-every must be ≥ 1");
+            }
+            let policy = match args.get("policy").as_deref().unwrap_or("every-k") {
+                "every-k" => UpdatePolicy::EveryKSteps(update_every),
+                "sequence" => UpdatePolicy::EndOfSequence,
+                "manual" => UpdatePolicy::Manual,
+                other => bail!("unknown policy {other:?} (valid: every-k, sequence, manual)"),
+            };
+            eprintln!(
+                "new session: engine {}, n={}×L{}, ω={}, policy {:?}",
+                cfg.train.algorithm.name(),
+                cfg.model.hidden,
+                cfg.model.layers,
+                cfg.model.param_sparsity,
+                policy
+            );
+            SessionBuilder::from_config(cfg).policy(policy).predict_always(true).build()
+        }
+    };
+    let input = args.get("input").unwrap_or_else(|| "-".into());
+    let checkpoint_out = args.get("checkpoint");
+    let quiet = args.get_bool("quiet").map_err(err)?;
+    args.finish().map_err(err)?;
+
+    let reader: Box<dyn BufRead> = if input == "-" {
+        Box::new(std::io::BufReader::new(std::io::stdin()))
+    } else {
+        Box::new(std::io::BufReader::new(
+            std::fs::File::open(&input).map_err(|e| anyhow!("cannot open {input}: {e}"))?,
+        ))
+    };
+    let mut session = session;
+    let stdout = std::io::stdout();
+    let mut out = std::io::BufWriter::new(stdout.lock());
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let event = parse_event(&line).map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        match event {
+            None => {}
+            Some(StreamEvent::Update) => {
+                session.update_now();
+                if !quiet {
+                    writeln!(out, "step={} update applied", session.steps())?;
+                }
+            }
+            Some(StreamEvent::EndSequence) => {
+                session.end_sequence();
+                session.begin_sequence();
+                if !quiet {
+                    writeln!(out, "step={} sequence boundary", session.steps())?;
+                }
+            }
+            Some(StreamEvent::Step { x, target }) => {
+                if x.len() != session.net().n_in() {
+                    bail!(
+                        "line {}: event has {} input values, session expects {}",
+                        lineno + 1,
+                        x.len(),
+                        session.net().n_in()
+                    );
+                }
+                let o = session.step(&x, target.as_target());
+                if !quiet {
+                    let pred = o.prediction.map_or("-".to_string(), |p| p.to_string());
+                    let loss = o.loss.map_or("-".to_string(), |l| l.to_string());
+                    writeln!(
+                        out,
+                        "step={} pred={pred} loss={loss} updated={}",
+                        o.step, o.updated
+                    )?;
+                }
+            }
+        }
+    }
+    out.flush()?;
+    eprintln!(
+        "stream done: {} steps ({} supervised), {} updates, engine state {} words",
+        session.steps(),
+        session.supervised_steps(),
+        session.updates_applied(),
+        session.state_memory_words()
+    );
+    if let Some(path) = checkpoint_out {
+        std::fs::write(&path, session.checkpoint().to_json())
+            .map_err(|e| anyhow!("cannot write checkpoint {path}: {e}"))?;
+        eprintln!("checkpoint written to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_train(mut args: Args) -> Result<()> {
@@ -249,6 +402,7 @@ fn err(e: String) -> anyhow::Error {
 fn main() -> Result<()> {
     let args = Args::from_env().map_err(err)?;
     match args.pos(0) {
+        Some("stream") => cmd_stream(args),
         Some("train") => cmd_train(args),
         Some("sweep") => cmd_sweep(args),
         Some("bench") => cmd_bench(args),
@@ -258,7 +412,12 @@ fn main() -> Result<()> {
             print!("{}", ExperimentConfig::default().to_toml());
             Ok(())
         }
-        _ => {
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?} (valid: {SUBCOMMANDS})");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+        None => {
             eprint!("{USAGE}");
             std::process::exit(2);
         }

@@ -127,6 +127,60 @@ impl OpCounter {
         }
     }
 
+    /// Flatten every counter into one word list (session checkpoints).
+    /// Layout: `[NUM_PHASES, layers, macs.., words.., per-layer (macs..,
+    /// words..)..]` — the leading phase count makes a schema change fail
+    /// loudly on restore instead of misattributing counters.
+    pub fn to_words_vec(&self) -> Vec<u64> {
+        let layers = self.layer_macs.len();
+        let mut out = Vec::with_capacity(2 + 2 * NUM_PHASES * (1 + layers));
+        out.push(NUM_PHASES as u64);
+        out.push(layers as u64);
+        out.extend_from_slice(&self.macs);
+        out.extend_from_slice(&self.words);
+        for l in 0..layers {
+            out.extend_from_slice(&self.layer_macs[l]);
+            out.extend_from_slice(&self.layer_words[l]);
+        }
+        out
+    }
+
+    /// Rebuild from a [`OpCounter::to_words_vec`] snapshot.
+    pub fn from_words_vec(words: &[u64]) -> Result<OpCounter, String> {
+        if words.len() < 2 || words[0] != NUM_PHASES as u64 {
+            return Err(format!(
+                "op-counter snapshot has {} phases, this build counts {NUM_PHASES}",
+                words.first().copied().unwrap_or(0)
+            ));
+        }
+        let layers = words[1] as usize;
+        let expect = 2 + 2 * NUM_PHASES * (1 + layers);
+        if words.len() != expect {
+            return Err(format!(
+                "op-counter snapshot holds {} words, layout needs {expect}",
+                words.len()
+            ));
+        }
+        fn take<'a>(words: &'a [u64], off: &mut usize, n: usize) -> &'a [u64] {
+            let s = &words[*off..*off + n];
+            *off += n;
+            s
+        }
+        let mut c = OpCounter::new();
+        let mut off = 2usize;
+        c.macs.copy_from_slice(take(words, &mut off, NUM_PHASES));
+        c.words.copy_from_slice(take(words, &mut off, NUM_PHASES));
+        for _ in 0..layers {
+            let mut lm = [0u64; NUM_PHASES];
+            lm.copy_from_slice(take(words, &mut off, NUM_PHASES));
+            c.layer_macs.push(lm);
+            let mut lw = [0u64; NUM_PHASES];
+            lw.copy_from_slice(take(words, &mut off, NUM_PHASES));
+            c.layer_words.push(lw);
+        }
+        Ok(c)
+    }
+
     /// MACs charged to one phase.
     pub fn macs_in(&self, phase: Phase) -> u64 {
         self.macs[phase.index()]
@@ -266,6 +320,25 @@ mod tests {
         assert_eq!(c.macs_in(Phase::Forward), 10);
         assert_eq!(c.total_macs(), 110);
         assert_eq!(c.total_words(), 5);
+    }
+
+    #[test]
+    fn words_vec_roundtrip_including_layers() {
+        let mut c = OpCounter::new();
+        c.macs(Phase::Forward, 7);
+        c.set_layer(1);
+        c.macs(Phase::InfluenceUpdate, 11);
+        c.words(Phase::InfluenceUpdate, 3);
+        c.clear_layer();
+        let back = OpCounter::from_words_vec(&c.to_words_vec()).unwrap();
+        assert_eq!(back.total_macs(), c.total_macs());
+        assert_eq!(back.total_words(), c.total_words());
+        assert_eq!(back.layers_tracked(), 2);
+        assert_eq!(back.macs_in_layer(1, Phase::InfluenceUpdate), 11);
+        // malformed snapshots are loud
+        assert!(OpCounter::from_words_vec(&[]).is_err());
+        assert!(OpCounter::from_words_vec(&[99, 0]).is_err());
+        assert!(OpCounter::from_words_vec(&c.to_words_vec()[..5]).is_err());
     }
 
     #[test]

@@ -113,6 +113,14 @@ impl Readout {
         self.b.copy_from_slice(bpart);
     }
 
+    /// Restore accumulated gradients from a [`Readout::copy_grads_into`]
+    /// buffer (session checkpoints taken mid-accumulation).
+    pub fn load_grads(&mut self, inp: &[f32]) {
+        let (wpart, bpart) = inp.split_at(self.grad_w.len());
+        self.grad_w.as_mut_slice().copy_from_slice(wpart);
+        self.grad_b.copy_from_slice(bpart);
+    }
+
     pub fn zero_grads(&mut self) {
         self.grad_w.fill_zero();
         self.grad_b.iter_mut().for_each(|g| *g = 0.0);

@@ -2,6 +2,16 @@
 
 use super::Optimizer;
 
+/// Serializable Adam state — first/second moments plus the step count.
+/// Session checkpoints carry this so a resumed stream continues with the
+/// exact same bias correction and per-parameter scaling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+}
+
 /// Adam with bias correction.
 #[derive(Debug, Clone)]
 pub struct Adam {
@@ -40,6 +50,26 @@ impl Adam {
             self.m[i] = 0.0;
             self.v[i] = 0.0;
         }
+    }
+
+    /// Snapshot the moments + step count (session checkpoints).
+    pub fn save_state(&self) -> AdamState {
+        AdamState { m: self.m.clone(), v: self.v.clone(), t: self.t }
+    }
+
+    /// Restore a [`Adam::save_state`] snapshot; errors on dimension mismatch.
+    pub fn load_state(&mut self, s: &AdamState) -> Result<(), String> {
+        if s.m.len() != self.m.len() || s.v.len() != self.v.len() {
+            return Err(format!(
+                "Adam state over {} params cannot restore into optimizer over {}",
+                s.m.len(),
+                self.m.len()
+            ));
+        }
+        self.m.copy_from_slice(&s.m);
+        self.v.copy_from_slice(&s.v);
+        self.t = s.t;
+        Ok(())
     }
 }
 
@@ -111,6 +141,28 @@ mod tests {
         adam.reset();
         assert_eq!(adam.t, 0);
         assert_eq!(adam.m[0], 0.0);
+    }
+
+    #[test]
+    fn save_load_resumes_identical_trajectory() {
+        let grads = [[0.4f32, -1.0], [0.2, 0.3], [-0.6, 0.1]];
+        // uninterrupted
+        let mut x1 = vec![0.1f32, -0.2];
+        let mut a1 = Adam::new(2, 0.05);
+        for g in &grads {
+            a1.update(&mut x1, g);
+        }
+        // interrupted after step 1, state carried across a fresh optimizer
+        let mut x2 = vec![0.1f32, -0.2];
+        let mut a2 = Adam::new(2, 0.05);
+        a2.update(&mut x2, &grads[0]);
+        let mut a3 = Adam::new(2, 0.05);
+        a3.load_state(&a2.save_state()).unwrap();
+        for g in &grads[1..] {
+            a3.update(&mut x2, g);
+        }
+        assert_eq!(x1, x2, "resumed Adam diverged");
+        assert!(a3.load_state(&Adam::new(3, 0.05).save_state()).is_err());
     }
 
     #[test]

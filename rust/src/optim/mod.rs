@@ -9,7 +9,7 @@
 pub mod adam;
 pub mod sgd;
 
-pub use adam::Adam;
+pub use adam::{Adam, AdamState};
 pub use sgd::Sgd;
 
 /// A first-order optimizer over a flat parameter vector.

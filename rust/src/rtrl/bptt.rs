@@ -17,9 +17,12 @@
 //! observation; the *memory* still grows with `T`, which is the axis the
 //! paper contrasts.
 
-use super::{supervised_step, GradientEngine, StepResult, Target};
+use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
+
+/// Snapshot-format version of [`Bptt`] (see [`EngineState`]).
+const STATE_VERSION: u32 = 1;
 
 /// One stored timestep of forward history.
 struct Frame {
@@ -89,7 +92,7 @@ impl GradientEngine for Bptt {
         let active_units = scratch.active_units();
         let deriv_units = scratch.deriv_units();
 
-        let (loss_val, correct) = supervised_step(
+        let (loss_val, correct, prediction) = supervised_step(
             readout,
             loss,
             &scratch.top().a,
@@ -118,6 +121,7 @@ impl GradientEngine for Bptt {
         StepResult {
             loss: loss_val,
             correct,
+            prediction,
             active_units,
             deriv_units,
             influence_sparsity: None,
@@ -212,6 +216,76 @@ impl GradientEngine for Bptt {
     fn state_memory_words(&self) -> usize {
         // x + a_prev(N) + scratch(7N) + c̄ per frame — the T·N growth term.
         self.peak_frames * (self.n_in + 8 * self.n_total + self.top_n)
+    }
+
+    fn activations(&self) -> &[f32] {
+        &self.a_prev
+    }
+
+    fn save_state(&self) -> EngineState {
+        // The whole stored tape travels: per frame `x | a_prev | per-layer
+        // (v a dphi u z gu gz) | c̄`, concatenated in time order. This is the
+        // honest cost of checkpointing BPTT mid-sequence — the T·N history
+        // the paper's online methods exist to avoid.
+        let frame_len = self.n_in + 8 * self.n_total + self.top_n;
+        let mut data = Vec::with_capacity(self.frames.len() * frame_len);
+        for f in &self.frames {
+            data.extend_from_slice(&f.x);
+            data.extend_from_slice(&f.a_prev);
+            for sl in &f.scratch.layers {
+                for buf in [&sl.v, &sl.a, &sl.dphi, &sl.u, &sl.z, &sl.gu, &sl.gz] {
+                    data.extend_from_slice(buf);
+                }
+            }
+            data.extend_from_slice(&f.c_bar);
+        }
+        let mut st = EngineState::new(self.name(), STATE_VERSION);
+        st.put_scalar("frames", self.frames.len() as u64);
+        st.put_scalar("peak_frames", self.peak_frames as u64);
+        st.put_floats("frame_data", data);
+        st.put_floats("a_prev", self.a_prev.clone());
+        st.put_floats("grads", self.grads.clone());
+        st
+    }
+
+    fn load_state(&mut self, net: &LayerStack, state: &EngineState) -> Result<(), StateError> {
+        fn take<'a>(data: &'a [f32], off: &mut usize, len: usize) -> &'a [f32] {
+            let s = &data[*off..*off + len];
+            *off += len;
+            s
+        }
+        state.expect(self.name(), STATE_VERSION)?;
+        if net.total_units() != self.n_total || net.n_in() != self.n_in {
+            return Err(StateError("stack does not match the engine's dimensions".into()));
+        }
+        let count = state.scalar("frames")? as usize;
+        let frame_len = self.n_in + 8 * self.n_total + self.top_n;
+        let data = state.floats_exact("frame_data", count * frame_len)?;
+        let a_prev = state.floats_exact("a_prev", self.n_total)?;
+        let grads = state.floats_exact("grads", self.grads.len())?;
+        self.frames.clear();
+        for i in 0..count {
+            let mut off = i * frame_len;
+            let x = take(data, &mut off, self.n_in).to_vec();
+            let fa_prev = take(data, &mut off, self.n_total).to_vec();
+            let mut scratch = net.scratch();
+            for sl in scratch.layers.iter_mut() {
+                let n = sl.v.len();
+                sl.v.copy_from_slice(take(data, &mut off, n));
+                sl.a.copy_from_slice(take(data, &mut off, n));
+                sl.dphi.copy_from_slice(take(data, &mut off, n));
+                sl.u.copy_from_slice(take(data, &mut off, n));
+                sl.z.copy_from_slice(take(data, &mut off, n));
+                sl.gu.copy_from_slice(take(data, &mut off, n));
+                sl.gz.copy_from_slice(take(data, &mut off, n));
+            }
+            let c_bar = take(data, &mut off, self.top_n).to_vec();
+            self.frames.push(Frame { x, a_prev: fa_prev, scratch, c_bar });
+        }
+        self.peak_frames = state.scalar("peak_frames")? as usize;
+        self.a_prev.copy_from_slice(a_prev);
+        self.grads.copy_from_slice(grads);
+        Ok(())
     }
 }
 

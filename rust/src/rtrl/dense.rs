@@ -15,10 +15,13 @@
 //! exact recursion of the layered network, so the structurally-zero upper
 //! blocks hold zeros in the materialized `N×P` matrix too.
 
-use super::{supervised_step, GradientEngine, StepResult, Target};
+use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
 use crate::tensor::Matrix;
+
+/// Snapshot-format version of [`DenseRtrl`] (see [`EngineState`]).
+const STATE_VERSION: u32 = 1;
 
 /// Dense RTRL engine (per-sequence state; reusable).
 pub struct DenseRtrl {
@@ -147,7 +150,7 @@ impl GradientEngine for DenseRtrl {
         }
         ops.clear_layer();
 
-        let (loss_val, correct) = supervised_step(
+        let (loss_val, correct, prediction) = supervised_step(
             readout,
             loss,
             &self.scratch.top().a,
@@ -179,7 +182,7 @@ impl GradientEngine for DenseRtrl {
         std::mem::swap(&mut self.m_cur, &mut self.m_next);
         self.scratch.write_state(&mut self.a_prev);
 
-        StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity }
+        StepResult { loss: loss_val, correct, prediction, active_units, deriv_units, influence_sparsity }
     }
 
     fn end_sequence(&mut self, _net: &LayerStack, _readout: &mut Readout, _ops: &mut OpCounter) {}
@@ -198,6 +201,32 @@ impl GradientEngine for DenseRtrl {
 
     fn state_memory_words(&self) -> usize {
         self.m_cur.len() + self.m_next.len()
+    }
+
+    fn activations(&self) -> &[f32] {
+        &self.a_prev
+    }
+
+    fn save_state(&self) -> EngineState {
+        // m_next is pure staging (every row is rewritten before it is read),
+        // so the sequence state is the current panel + activations + grads.
+        let mut st = EngineState::new(self.name(), STATE_VERSION);
+        st.put_floats("m_cur", self.m_cur.as_slice().to_vec());
+        st.put_floats("a_prev", self.a_prev.clone());
+        st.put_floats("grads", self.grads.clone());
+        st
+    }
+
+    fn load_state(&mut self, _net: &LayerStack, state: &EngineState) -> Result<(), StateError> {
+        state.expect(self.name(), STATE_VERSION)?;
+        let m = state.floats_exact("m_cur", self.m_cur.len())?;
+        let a = state.floats_exact("a_prev", self.a_prev.len())?;
+        let g = state.floats_exact("grads", self.grads.len())?;
+        self.m_cur.as_mut_slice().copy_from_slice(m);
+        self.m_next.fill_zero();
+        self.a_prev.copy_from_slice(a);
+        self.grads.copy_from_slice(g);
+        Ok(())
     }
 }
 

@@ -186,6 +186,47 @@ impl InfluenceBuffers {
         self.cur.len() + self.next.len()
     }
 
+    /// Snapshot the *current* panel between steps: the active row indices
+    /// and their values, concatenated in active-set order. Inactive rows are
+    /// logically zero and are not stored; the stale next panel is never read
+    /// before being rewritten, so it is not part of the state.
+    pub fn snapshot_cur(&self) -> (Vec<u64>, Vec<f32>) {
+        let mut rows = Vec::with_capacity(self.active_cur.len());
+        let mut vals = Vec::with_capacity(self.active_cur.len() * self.pc());
+        for k in self.active_cur.iter() {
+            rows.push(k as u64);
+            vals.extend_from_slice(self.cur.row(k));
+        }
+        (rows, vals)
+    }
+
+    /// Restore a [`InfluenceBuffers::snapshot_cur`] snapshot: the current
+    /// panel holds exactly the given active rows (everything else zero) and
+    /// the next panel is reset. Errors on out-of-range rows or a value
+    /// buffer that does not match `rows.len() × pc`.
+    pub fn restore_cur(&mut self, rows: &[u64], vals: &[f32]) -> Result<(), String> {
+        let pc = self.pc();
+        if vals.len() != rows.len() * pc {
+            return Err(format!(
+                "influence snapshot holds {} values for {} rows × {pc} cols",
+                vals.len(),
+                rows.len()
+            ));
+        }
+        self.cur.fill_zero();
+        self.next.fill_zero();
+        self.active_cur.clear();
+        self.active_next.clear();
+        for (i, &r) in rows.iter().enumerate() {
+            let r = r as usize;
+            if r >= self.n() {
+                return Err(format!("influence snapshot row {r} out of range (n={})", self.n()));
+            }
+            self.active_cur.insert(r);
+            self.cur.row_mut(r).copy_from_slice(&vals[i * pc..(i + 1) * pc]);
+        }
+        Ok(())
+    }
 }
 
 /// Per-layer influence buffers for a stacked network.
@@ -318,6 +359,27 @@ mod tests {
         assert_eq!(s.memory_words(), 2 * (3 * 4) + 2 * (2 * 10));
         s.advance();
         assert!(s.layer(0).active_cur().contains(1));
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_active_rows() {
+        let mut b = InfluenceBuffers::new(4, 3);
+        b.begin_next();
+        b.claim_next_row(1).copy_from_slice(&[1.0, 2.0, 3.0]);
+        b.claim_next_row(3).copy_from_slice(&[-4.0, 5.0, 0.5]);
+        b.advance();
+        let (rows, vals) = b.snapshot_cur();
+        assert_eq!(rows, vec![1, 3]);
+        assert_eq!(vals.len(), 6);
+        let mut c = InfluenceBuffers::new(4, 3);
+        c.restore_cur(&rows, &vals).unwrap();
+        assert!(c.active_cur().contains(1) && c.active_cur().contains(3));
+        assert!(!c.active_cur().contains(0));
+        assert_eq!(c.cur_row(1), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.cur_row(3), &[-4.0, 5.0, 0.5]);
+        // malformed snapshots are rejected
+        assert!(c.restore_cur(&[9], &[0.0; 3]).is_err());
+        assert!(c.restore_cur(&[1], &[0.0; 2]).is_err());
     }
 
     #[test]

@@ -46,7 +46,11 @@
 //! Protocol per sequence: [`GradientEngine::begin_sequence`] →
 //! [`GradientEngine::step`] × T → [`GradientEngine::end_sequence`] →
 //! [`GradientEngine::grads`]. Or drive a whole sequence through the provided
-//! [`GradientEngine::run_sequence`].
+//! [`GradientEngine::run_sequence`]. For the streaming session surface,
+//! engines additionally implement the versioned snapshot contract
+//! ([`GradientEngine::save_state`] / [`GradientEngine::load_state`] over
+//! [`EngineState`], see [`state`]): a between-steps snapshot restored into
+//! a freshly-built engine continues the sequence bit-identically.
 //!
 //! **Op-count accounting** is part of the contract, not an optional extra:
 //! every multiply-accumulate an engine performs must be charged to the
@@ -68,6 +72,7 @@ pub mod dense;
 pub mod influence;
 pub mod snap;
 pub mod sparse;
+pub mod state;
 pub mod uoro;
 
 pub use bptt::Bptt;
@@ -76,6 +81,7 @@ pub use dense::DenseRtrl;
 pub use influence::{InfluenceBuffers, StackedInfluence};
 pub use snap::{Snap1, Snap2};
 pub use sparse::{SparseRtrl, SparsityMode};
+pub use state::{EngineState, StateError};
 pub use uoro::Uoro;
 
 use crate::metrics::OpCounter;
@@ -105,6 +111,8 @@ pub struct StepResult {
     pub loss: Option<f32>,
     /// Whether the prediction matched a class target.
     pub correct: Option<bool>,
+    /// Predicted class on supervised classification steps (argmax logits).
+    pub prediction: Option<usize>,
     /// α̃n — units with nonzero activation.
     pub active_units: usize,
     /// β̃n — units with nonzero pseudo-derivative.
@@ -165,7 +173,10 @@ impl SequenceSummary {
 /// matching [`crate::metrics::Phase`], inside the owning layer's
 /// [`OpCounter::set_layer`] scope where attributable — see the module docs
 /// for why this is load-bearing.
-pub trait GradientEngine {
+///
+/// Engines are `Send` so long-lived sessions holding them can migrate
+/// across the worker threads of a [`crate::session::SessionPool`].
+pub trait GradientEngine: Send {
     /// Short name for reports ("rtrl-dense", "snap1", …).
     fn name(&self) -> &'static str;
 
@@ -206,6 +217,30 @@ pub trait GradientEngine {
     /// for BPTT. Measured, not analytic.
     fn state_memory_words(&self) -> usize;
 
+    /// Concatenated current activations `a ∈ R^N` (the state produced by the
+    /// last `step`, all zeros before the first). Sessions use this to run
+    /// readout-only predictions on unsupervised steps without re-running the
+    /// recurrent forward.
+    fn activations(&self) -> &[f32];
+
+    /// Versioned snapshot of **all** sequence state: influence panels for
+    /// RTRL, SnAp pattern slabs, UORO's rank-1 vectors *and* noise-RNG
+    /// position, BPTT's stored tape — plus the previous activations and the
+    /// gradient accumulators. Taken between steps.
+    ///
+    /// Contract: restoring the snapshot via [`GradientEngine::load_state`]
+    /// into a freshly-built engine of the same configuration continues the
+    /// sequence with gradients and predictions **bit-identical** to the
+    /// uninterrupted run (`rust/tests/engine_contract.rs` pins this for
+    /// every engine).
+    fn save_state(&self) -> EngineState;
+
+    /// Restore a [`GradientEngine::save_state`] snapshot. `net` must be the
+    /// stack the snapshotted engine was built for (same depth, widths and
+    /// masks); mismatches in engine name, state version or buffer lengths
+    /// fail loudly without partially mutating the engine where practical.
+    fn load_state(&mut self, net: &LayerStack, state: &EngineState) -> Result<(), StateError>;
+
     /// Drive one whole supervised sequence through the engine
     /// (`begin_sequence` → `step` × T → `end_sequence`), charging every op
     /// to `ops`. `targets` may be shorter than `inputs`; missing entries are
@@ -233,7 +268,7 @@ pub trait GradientEngine {
 }
 
 /// Shared helper: run readout + loss + credit assignment for a supervised
-/// step. Returns `(loss, correct, c_bar_filled)`.
+/// step, filling `c_bar`. Returns `(loss, correct, predicted class)`.
 pub(crate) fn supervised_step(
     readout: &mut Readout,
     loss: &mut Loss,
@@ -243,21 +278,21 @@ pub(crate) fn supervised_step(
     dlogits: &mut [f32],
     c_bar: &mut [f32],
     ops: &mut OpCounter,
-) -> (Option<f32>, Option<bool>) {
+) -> (Option<f32>, Option<bool>, Option<usize>) {
     match target {
-        Target::None => (None, None),
+        Target::None => (None, None, None),
         Target::Class(t) => {
             readout.forward(a, logits, ops);
             let l = loss.cross_entropy(logits, t, dlogits);
-            let correct = Loss::predict(logits) == t;
+            let pred = Loss::predict(logits);
             readout.backward(a, dlogits, c_bar, ops);
-            (Some(l), Some(correct))
+            (Some(l), Some(pred == t), Some(pred))
         }
         Target::Vector(tv) => {
             readout.forward(a, logits, ops);
             let l = loss.mse(logits, tv, dlogits);
             readout.backward(a, dlogits, c_bar, ops);
-            (Some(l), None)
+            (Some(l), None, None)
         }
     }
 }
@@ -315,6 +350,7 @@ mod tests {
         s.absorb(&StepResult {
             loss: Some(0.5),
             correct: Some(true),
+            prediction: Some(1),
             active_units: 3,
             deriv_units: 2,
             influence_sparsity: None,

@@ -29,9 +29,12 @@
 //! `rtrl::sparse` for the exact block treatment of depth). At depth 1 the
 //! decomposition degenerates to the original single-cell SnAp exactly.
 
-use super::{supervised_step, GradientEngine, StepResult, Target};
+use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
+
+/// Snapshot-format version shared by [`Snap1`] and [`Snap2`].
+const STATE_VERSION: u32 = 1;
 
 /// Shared machinery: a per-unit sparse influence slab `M[k] over pattern[k]`,
 /// with global (concatenated) rows and *global* flat parameter indices in
@@ -65,6 +68,60 @@ impl PatternInfluence {
     fn memory_words(&self) -> usize {
         2 * self.pattern.iter().map(|p| p.len()).sum::<usize>()
     }
+
+    /// Current-slab values, concatenated row-major over the pattern (the
+    /// pattern itself is rebuilt deterministically from the stack).
+    fn snapshot_cur(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.pattern.iter().map(|p| p.len()).sum());
+        for row in &self.cur {
+            out.extend_from_slice(row);
+        }
+        out
+    }
+
+    /// Restore [`PatternInfluence::snapshot_cur`] values; the staging slab is
+    /// zeroed (it is fully rewritten each step before being read).
+    fn restore_cur(&mut self, vals: &[f32]) -> Result<(), String> {
+        let total: usize = self.pattern.iter().map(|p| p.len()).sum();
+        if vals.len() != total {
+            return Err(format!(
+                "pattern snapshot holds {} values, engine pattern has {total}",
+                vals.len()
+            ));
+        }
+        let mut off = 0;
+        for (cur, next) in self.cur.iter_mut().zip(self.next.iter_mut()) {
+            cur.copy_from_slice(&vals[off..off + cur.len()]);
+            next.iter_mut().for_each(|x| *x = 0.0);
+            off += cur.len();
+        }
+        Ok(())
+    }
+}
+
+/// Shared save/load bodies for the two SnAp engines (identical state shape).
+fn snap_save(name: &'static str, inf: &PatternInfluence, a_prev: &[f32], grads: &[f32]) -> EngineState {
+    let mut st = EngineState::new(name, STATE_VERSION);
+    st.put_floats("inf_cur", inf.snapshot_cur());
+    st.put_floats("a_prev", a_prev.to_vec());
+    st.put_floats("grads", grads.to_vec());
+    st
+}
+
+fn snap_load(
+    name: &'static str,
+    state: &EngineState,
+    inf: &mut PatternInfluence,
+    a_prev: &mut [f32],
+    grads: &mut [f32],
+) -> Result<(), StateError> {
+    state.expect(name, STATE_VERSION)?;
+    let a = state.floats_exact("a_prev", a_prev.len())?;
+    let g = state.floats_exact("grads", grads.len())?;
+    inf.restore_cur(state.floats("inf_cur")?).map_err(StateError)?;
+    a_prev.copy_from_slice(a);
+    grads.copy_from_slice(g);
+    Ok(())
 }
 
 /// Shared across Snap-1/2: after the supervised step, extend the top-layer
@@ -212,7 +269,7 @@ impl GradientEngine for Snap1 {
         }
         ops.clear_layer();
 
-        let (loss_val, correct) = supervised_step(
+        let (loss_val, correct, prediction) = supervised_step(
             readout,
             loss,
             &self.scratch.top().a,
@@ -240,7 +297,7 @@ impl GradientEngine for Snap1 {
 
         self.inf.advance();
         self.scratch.write_state(&mut self.a_prev);
-        StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity: None }
+        StepResult { loss: loss_val, correct, prediction, active_units, deriv_units, influence_sparsity: None }
     }
 
     fn end_sequence(&mut self, _net: &LayerStack, _readout: &mut Readout, _ops: &mut OpCounter) {}
@@ -255,6 +312,18 @@ impl GradientEngine for Snap1 {
 
     fn state_memory_words(&self) -> usize {
         self.inf.memory_words()
+    }
+
+    fn activations(&self) -> &[f32] {
+        &self.a_prev
+    }
+
+    fn save_state(&self) -> EngineState {
+        snap_save(self.name(), &self.inf, &self.a_prev, &self.grads)
+    }
+
+    fn load_state(&mut self, _net: &LayerStack, state: &EngineState) -> Result<(), StateError> {
+        snap_load(self.name(), state, &mut self.inf, &mut self.a_prev, &mut self.grads)
     }
 }
 
@@ -404,7 +473,7 @@ impl GradientEngine for Snap2 {
         }
         ops.clear_layer();
 
-        let (loss_val, correct) = supervised_step(
+        let (loss_val, correct, prediction) = supervised_step(
             readout,
             loss,
             &self.scratch.top().a,
@@ -432,7 +501,7 @@ impl GradientEngine for Snap2 {
 
         self.inf.advance();
         self.scratch.write_state(&mut self.a_prev);
-        StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity: None }
+        StepResult { loss: loss_val, correct, prediction, active_units, deriv_units, influence_sparsity: None }
     }
 
     fn end_sequence(&mut self, _net: &LayerStack, _readout: &mut Readout, _ops: &mut OpCounter) {}
@@ -447,6 +516,18 @@ impl GradientEngine for Snap2 {
 
     fn state_memory_words(&self) -> usize {
         self.inf.memory_words()
+    }
+
+    fn activations(&self) -> &[f32] {
+        &self.a_prev
+    }
+
+    fn save_state(&self) -> EngineState {
+        snap_save(self.name(), &self.inf, &self.a_prev, &self.grads)
+    }
+
+    fn load_state(&mut self, _net: &LayerStack, state: &EngineState) -> Result<(), StateError> {
+        snap_load(self.name(), state, &mut self.inf, &mut self.a_prev, &mut self.grads)
     }
 }
 

@@ -40,9 +40,12 @@
 
 use super::column_map::StackColumnMap;
 use super::influence::StackedInfluence;
-use super::{supervised_step, GradientEngine, StepResult, Target};
+use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
+
+/// Snapshot-format version of [`SparseRtrl`] (see [`EngineState`]).
+const STATE_VERSION: u32 = 1;
 
 /// Which structural zeros the engine exploits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -120,10 +123,6 @@ impl SparseRtrl {
         self.colmap.total_cols()
     }
 
-    /// Current concatenated activation state (for inference-style probing).
-    pub fn activations(&self) -> &[f32] {
-        &self.a_prev
-    }
 }
 
 impl GradientEngine for SparseRtrl {
@@ -255,7 +254,7 @@ impl GradientEngine for SparseRtrl {
         // The readout reads the top layer; credit for lower layers' params
         // is already folded into the top panel's columns by the cross-layer
         // gather above, so combining top rows only is exact.
-        let (loss_val, correct) = supervised_step(
+        let (loss_val, correct, prediction) = supervised_step(
             readout,
             loss,
             &self.scratch.top().a,
@@ -300,6 +299,7 @@ impl GradientEngine for SparseRtrl {
         StepResult {
             loss: loss_val,
             correct,
+            prediction,
             active_units,
             deriv_units,
             influence_sparsity,
@@ -326,6 +326,50 @@ impl GradientEngine for SparseRtrl {
 
     fn state_memory_words(&self) -> usize {
         self.buffers.memory_words() + self.grad_compact.len()
+    }
+
+    fn activations(&self) -> &[f32] {
+        &self.a_prev
+    }
+
+    fn save_state(&self) -> EngineState {
+        // Per-layer: the active rows of the current panel (inactive rows are
+        // logical zeros and never stored). The column maps are rebuilt
+        // deterministically from the stack, so only values travel.
+        let mut st = EngineState::new(self.name(), STATE_VERSION);
+        st.put_scalar("layers", self.buffers.layers() as u64);
+        for l in 0..self.buffers.layers() {
+            let (rows, vals) = self.buffers.layer(l).snapshot_cur();
+            st.put_ints(&format!("rows_{l}"), rows);
+            st.put_floats(&format!("vals_{l}"), vals);
+        }
+        st.put_floats("a_prev", self.a_prev.clone());
+        st.put_floats("grad_compact", self.grad_compact.clone());
+        st.put_floats("grads", self.grads.clone());
+        st
+    }
+
+    fn load_state(&mut self, _net: &LayerStack, state: &EngineState) -> Result<(), StateError> {
+        state.expect(self.name(), STATE_VERSION)?;
+        if state.scalar("layers")? != self.buffers.layers() as u64 {
+            return Err(StateError(format!(
+                "snapshot has {} influence layers, engine has {}",
+                state.scalar("layers")?,
+                self.buffers.layers()
+            )));
+        }
+        let a = state.floats_exact("a_prev", self.a_prev.len())?;
+        let gc = state.floats_exact("grad_compact", self.grad_compact.len())?;
+        let g = state.floats_exact("grads", self.grads.len())?;
+        for l in 0..self.buffers.layers() {
+            let rows = state.ints(&format!("rows_{l}"))?;
+            let vals = state.floats(&format!("vals_{l}"))?;
+            self.buffers.layer_mut(l).restore_cur(rows, vals).map_err(StateError)?;
+        }
+        self.a_prev.copy_from_slice(a);
+        self.grad_compact.copy_from_slice(gc);
+        self.grads.copy_from_slice(g);
+        Ok(())
     }
 }
 

@@ -1,0 +1,175 @@
+//! Versioned engine-state snapshots — the save/restore half of the
+//! [`GradientEngine`](crate::rtrl::GradientEngine) streaming contract.
+//!
+//! An [`EngineState`] is a flat, schema-light container: an engine name, a
+//! state-format version, and named `u64` / `f32` buffers. Each engine owns
+//! its key layout (influence panels for RTRL, rank-1 vectors plus the noise
+//! RNG for UORO, pattern slabs for SnAp, the stored tape for BPTT) and bumps
+//! its version when that layout changes, so a checkpoint written by an old
+//! build fails loudly on restore instead of silently misloading.
+//!
+//! The contract (pinned by `rust/tests/engine_contract.rs`): a snapshot
+//! taken **between steps** and restored into a freshly-built engine of the
+//! same configuration continues the sequence with **bit-identical**
+//! gradients and predictions — floats are carried verbatim, never
+//! re-derived, and stochastic engines include their RNG stream position.
+//! Serialization to disk (with exact f32-bit encoding) lives in
+//! [`crate::session::checkpoint`]; this module is the in-memory form.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Restore failure: wrong engine, wrong version, missing key, or a buffer
+/// whose length does not match the live engine's configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StateError(pub String);
+
+impl fmt::Display for StateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "engine state: {}", self.0)
+    }
+}
+
+impl std::error::Error for StateError {}
+
+/// A named-buffer snapshot of one engine's sequence state.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineState {
+    /// Engine name the snapshot belongs to (must match on restore).
+    pub engine: String,
+    /// Engine-specific state-format version (must match on restore).
+    pub version: u32,
+    ints: BTreeMap<String, Vec<u64>>,
+    floats: BTreeMap<String, Vec<f32>>,
+}
+
+impl EngineState {
+    pub fn new(engine: &str, version: u32) -> Self {
+        EngineState {
+            engine: engine.to_string(),
+            version,
+            ints: BTreeMap::new(),
+            floats: BTreeMap::new(),
+        }
+    }
+
+    /// Store an integer buffer under `key`.
+    pub fn put_ints(&mut self, key: &str, v: Vec<u64>) {
+        self.ints.insert(key.to_string(), v);
+    }
+
+    /// Store a single integer under `key`.
+    pub fn put_scalar(&mut self, key: &str, v: u64) {
+        self.put_ints(key, vec![v]);
+    }
+
+    /// Store a float buffer under `key`.
+    pub fn put_floats(&mut self, key: &str, v: Vec<f32>) {
+        self.floats.insert(key.to_string(), v);
+    }
+
+    /// Integer buffer under `key`.
+    pub fn ints(&self, key: &str) -> Result<&[u64], StateError> {
+        self.ints
+            .get(key)
+            .map(Vec::as_slice)
+            .ok_or_else(|| StateError(format!("missing int buffer {key:?}")))
+    }
+
+    /// Single integer under `key`.
+    pub fn scalar(&self, key: &str) -> Result<u64, StateError> {
+        let v = self.ints(key)?;
+        if v.len() != 1 {
+            return Err(StateError(format!("{key:?} holds {} ints, expected 1", v.len())));
+        }
+        Ok(v[0])
+    }
+
+    /// Float buffer under `key`.
+    pub fn floats(&self, key: &str) -> Result<&[f32], StateError> {
+        self.floats
+            .get(key)
+            .map(Vec::as_slice)
+            .ok_or_else(|| StateError(format!("missing float buffer {key:?}")))
+    }
+
+    /// Float buffer under `key`, checked against the length the live engine
+    /// requires — a mismatch means the snapshot came from a differently
+    /// configured engine.
+    pub fn floats_exact(&self, key: &str, len: usize) -> Result<&[f32], StateError> {
+        let v = self.floats(key)?;
+        if v.len() != len {
+            return Err(StateError(format!(
+                "{key:?} holds {} floats, engine expects {len}",
+                v.len()
+            )));
+        }
+        Ok(v)
+    }
+
+    /// All integer buffers, key-sorted (serialization).
+    pub fn int_entries(&self) -> impl Iterator<Item = (&str, &[u64])> {
+        self.ints.iter().map(|(k, v)| (k.as_str(), v.as_slice()))
+    }
+
+    /// All float buffers, key-sorted (serialization).
+    pub fn float_entries(&self) -> impl Iterator<Item = (&str, &[f32])> {
+        self.floats.iter().map(|(k, v)| (k.as_str(), v.as_slice()))
+    }
+
+    /// Verify the snapshot header matches the restoring engine.
+    pub fn expect(&self, engine: &str, version: u32) -> Result<(), StateError> {
+        if self.engine != engine {
+            return Err(StateError(format!(
+                "snapshot is for engine {:?}, cannot restore into {engine:?}",
+                self.engine
+            )));
+        }
+        if self.version != version {
+            return Err(StateError(format!(
+                "snapshot version {} ≠ engine state version {version} for {engine:?}",
+                self.version
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut st = EngineState::new("rtrl-both", 1);
+        st.put_floats("a", vec![1.0, -2.5]);
+        st.put_ints("rows", vec![0, 3, 5]);
+        st.put_scalar("layers", 2);
+        assert_eq!(st.floats("a").unwrap(), &[1.0, -2.5]);
+        assert_eq!(st.ints("rows").unwrap(), &[0, 3, 5]);
+        assert_eq!(st.scalar("layers").unwrap(), 2);
+        assert_eq!(st.floats_exact("a", 2).unwrap().len(), 2);
+        assert!(st.floats_exact("a", 3).is_err());
+        assert!(st.floats("missing").is_err());
+        assert!(st.scalar("rows").is_err());
+    }
+
+    #[test]
+    fn header_mismatches_are_loud() {
+        let st = EngineState::new("uoro", 1);
+        assert!(st.expect("uoro", 1).is_ok());
+        let e = st.expect("bptt", 1).unwrap_err();
+        assert!(e.to_string().contains("uoro"), "{e}");
+        let e = st.expect("uoro", 2).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+    }
+
+    #[test]
+    fn entries_iterate_sorted() {
+        let mut st = EngineState::new("x", 1);
+        st.put_floats("b", vec![]);
+        st.put_floats("a", vec![1.0]);
+        let keys: Vec<&str> = st.float_entries().map(|(k, _)| k).collect();
+        assert_eq!(keys, ["a", "b"]);
+    }
+}

@@ -24,10 +24,13 @@
 //! not pay. This is the contrast the paper draws: its savings are free of
 //! both bias (SnAp) and variance (UORO).
 
-use super::{supervised_step, GradientEngine, StepResult, Target};
+use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
 use crate::util::Pcg64;
+
+/// Snapshot-format version of [`Uoro`] (see [`EngineState`]).
+const STATE_VERSION: u32 = 1;
 
 /// UORO engine (per-sequence state; reusable).
 pub struct Uoro {
@@ -198,7 +201,7 @@ impl GradientEngine for Uoro {
         // whole-stack work, charged outside any layer scope
         ops.macs(Phase::InfluenceUpdate, (2 * p + 2 * n) as u64);
 
-        let (loss_val, correct) = supervised_step(
+        let (loss_val, correct, prediction) = supervised_step(
             readout,
             loss,
             &self.scratch.top().a,
@@ -222,7 +225,7 @@ impl GradientEngine for Uoro {
         }
 
         self.scratch.write_state(&mut self.a_prev);
-        StepResult { loss: loss_val, correct, active_units, deriv_units, influence_sparsity: None }
+        StepResult { loss: loss_val, correct, prediction, active_units, deriv_units, influence_sparsity: None }
     }
 
     fn end_sequence(&mut self, _net: &LayerStack, _readout: &mut Readout, _ops: &mut OpCounter) {}
@@ -238,6 +241,42 @@ impl GradientEngine for Uoro {
     fn state_memory_words(&self) -> usize {
         // s̃ + θ̃ + staging — the O(N + P) memory row
         self.s_tilde.len() + 2 * self.theta_tilde.len() + self.js.len()
+    }
+
+    fn activations(&self) -> &[f32] {
+        &self.a_prev
+    }
+
+    fn save_state(&self) -> EngineState {
+        // The rank-1 factors + the *noise RNG position*: UORO's gradient is
+        // a function of the sign draws, so bit-exact resume requires the
+        // stream to continue where it stopped. js/nu_mbar/g_signs are
+        // staging, fully rewritten every step.
+        let mut st = EngineState::new(self.name(), STATE_VERSION);
+        st.put_floats("s_tilde", self.s_tilde.clone());
+        st.put_floats("theta_tilde", self.theta_tilde.clone());
+        st.put_floats("a_prev", self.a_prev.clone());
+        st.put_floats("grads", self.grads.clone());
+        st.put_ints("rng", self.rng.state_words().to_vec());
+        st
+    }
+
+    fn load_state(&mut self, _net: &LayerStack, state: &EngineState) -> Result<(), StateError> {
+        state.expect(self.name(), STATE_VERSION)?;
+        let s = state.floats_exact("s_tilde", self.s_tilde.len())?;
+        let t = state.floats_exact("theta_tilde", self.theta_tilde.len())?;
+        let a = state.floats_exact("a_prev", self.a_prev.len())?;
+        let g = state.floats_exact("grads", self.grads.len())?;
+        let rng = state.ints("rng")?;
+        if rng.len() != 4 {
+            return Err(StateError(format!("rng state has {} words, expected 4", rng.len())));
+        }
+        self.s_tilde.copy_from_slice(s);
+        self.theta_tilde.copy_from_slice(t);
+        self.a_prev.copy_from_slice(a);
+        self.grads.copy_from_slice(g);
+        self.rng = Pcg64::from_state_words([rng[0], rng[1], rng[2], rng[3]]);
+        Ok(())
     }
 }
 

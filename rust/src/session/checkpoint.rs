@@ -1,0 +1,494 @@
+//! Session checkpoints: migrate a live [`OnlineSession`] across process
+//! restarts **bit-exactly**.
+//!
+//! A [`SessionCheckpoint`] captures everything a resumed session needs to
+//! continue the stream as if never interrupted: the experiment config (the
+//! recipe for stack topology and readout shape), the current weights, the
+//! mid-accumulation gradient buffers, both optimizers' Adam moments, the
+//! engine's [`EngineState`] snapshot (influence panels / UORO rank-1
+//! vectors + RNG / SnAp slabs / BPTT tape), the per-layer sparsity masks
+//! (which may have drifted from the config via rewiring), the stream
+//! counters, and the op counters (so cost accounting keeps accumulating
+//! across the migration instead of restarting at zero).
+//!
+//! Serialization reuses the in-tree JSON from [`crate::bench::json`]. Two
+//! encoding rules keep restores bit-exact across platforms:
+//!
+//! * every `f32` travels as its IEEE-754 **bit pattern** (a `u32` JSON
+//!   number — exactly representable as an `f64`), never as a decimal float;
+//! * every `u64` travels as a **decimal string** (64-bit RNG state words do
+//!   not fit exactly in a JSON double).
+//!
+//! `tests/session_checkpoint.rs` pins the contract for all engines, and the
+//! `stream` CLI round-trips checkpoints across real process boundaries.
+
+use super::online::{OnlineSession, SessionBuilder, UpdatePolicy};
+use crate::bench::json::{escape, parse, Json};
+use crate::config::ExperimentConfig;
+use crate::optim::AdamState;
+use crate::rtrl::EngineState;
+use crate::sparse::MaskPattern;
+use crate::util::Pcg64;
+
+/// Schema identifier of the checkpoint document.
+pub const SCHEMA: &str = "sparse-rtrl/session/v1";
+/// Monotone document revision; bump on breaking field changes.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// A complete, serializable snapshot of one [`OnlineSession`].
+#[derive(Debug, Clone)]
+pub struct SessionCheckpoint {
+    /// Full experiment config (TOML text — the topology recipe).
+    pub config_toml: String,
+    pub policy: UpdatePolicy,
+    pub predict_always: bool,
+    pub steps: u64,
+    pub supervised_steps: u64,
+    pub updates_applied: u64,
+    pub pending_supervised: u64,
+    /// Concatenated recurrent parameters (`R^P`).
+    pub net_params: Vec<f32>,
+    pub readout_params: Vec<f32>,
+    /// Mid-accumulation readout gradients.
+    pub readout_grads: Vec<f32>,
+    /// Harvested-but-unapplied recurrent gradient.
+    pub grad_accum: Vec<f32>,
+    pub opt_cell: AdamState,
+    pub opt_readout: AdamState,
+    /// Per-layer kept flat indices (`r·n + c`) of the recurrent mask, or
+    /// `None` for dense layers. Saved explicitly because rewiring can move
+    /// masks away from their config-seeded pattern.
+    pub masks: Vec<Option<Vec<u64>>>,
+    /// The session's op counters ([`crate::metrics::OpCounter`] word form),
+    /// so cost accounting also survives migration.
+    pub ops: Vec<u64>,
+    /// The gradient engine's own versioned snapshot.
+    pub engine: EngineState,
+}
+
+impl OnlineSession {
+    /// Snapshot the session between steps. The checkpoint is self-contained:
+    /// [`OnlineSession::resume`] in a fresh process continues the stream
+    /// with bit-identical predictions, gradients and updates.
+    pub fn checkpoint(&self) -> SessionCheckpoint {
+        let mut net_params = vec![0.0; self.net.p()];
+        self.net.copy_params_into(&mut net_params);
+        let mut readout_params = vec![0.0; self.readout.param_len()];
+        self.readout.copy_params_into(&mut readout_params);
+        let mut readout_grads = vec![0.0; self.readout.param_len()];
+        self.readout.copy_grads_into(&mut readout_grads);
+        let masks = (0..self.net.layers())
+            .map(|l| {
+                self.net.layer(l).mask().map(|m| {
+                    let n = self.net.layer(l).n();
+                    let mut kept = Vec::with_capacity(m.kept());
+                    for r in 0..n {
+                        for c in 0..n {
+                            if m.is_kept(r, c) {
+                                kept.push((r * n + c) as u64);
+                            }
+                        }
+                    }
+                    kept
+                })
+            })
+            .collect();
+        SessionCheckpoint {
+            config_toml: self.cfg.to_toml(),
+            policy: self.policy,
+            predict_always: self.predict_always,
+            steps: self.steps,
+            supervised_steps: self.supervised_steps,
+            updates_applied: self.updates_applied,
+            pending_supervised: self.pending_supervised,
+            net_params,
+            readout_params,
+            readout_grads,
+            grad_accum: self.grad_accum.clone(),
+            opt_cell: self.opt_cell.save_state(),
+            opt_readout: self.opt_readout.save_state(),
+            masks,
+            ops: self.ops.to_words_vec(),
+            engine: self.engine.save_state(),
+        }
+    }
+
+    /// Rebuild a session from a checkpoint. The stack topology is rebuilt
+    /// from the embedded config, masks are restored verbatim, and every
+    /// float buffer is loaded bit-for-bit.
+    pub fn resume(ck: &SessionCheckpoint) -> Result<OnlineSession, String> {
+        let cfg = ExperimentConfig::from_toml(&ck.config_toml)
+            .map_err(|e| format!("checkpoint config: {e}"))?;
+        let mut s = SessionBuilder::from_config(cfg)
+            .policy(ck.policy)
+            .predict_always(ck.predict_always)
+            .build();
+        if ck.masks.len() != s.net.layers() {
+            return Err(format!(
+                "checkpoint has {} mask entries for a {}-layer stack",
+                ck.masks.len(),
+                s.net.layers()
+            ));
+        }
+        let mut mask_rng = Pcg64::new(0); // grown-entry init is overwritten by load_params
+        for l in 0..s.net.layers() {
+            match &ck.masks[l] {
+                Some(kept) => {
+                    let n = s.net.layer(l).n();
+                    let mut keep = vec![false; n * n];
+                    for &flat in kept {
+                        let flat = flat as usize;
+                        if flat >= n * n {
+                            return Err(format!("layer {l}: mask index {flat} out of range"));
+                        }
+                        keep[flat] = true;
+                    }
+                    s.net.layer_mut(l).set_mask(
+                        MaskPattern::from_bools(n, n, keep),
+                        0.0,
+                        &mut mask_rng,
+                    );
+                }
+                None => {
+                    if s.net.layer(l).mask().is_some() {
+                        return Err(format!(
+                            "layer {l}: config builds a masked layer but the checkpoint has no mask"
+                        ));
+                    }
+                }
+            }
+        }
+        // Engine must be derived from the *restored* masks before its state
+        // loads (column maps / SnAp patterns follow the mask).
+        s.rebuild_engine();
+        if ck.net_params.len() != s.net.p() {
+            return Err(format!(
+                "checkpoint carries {} recurrent params, stack has {}",
+                ck.net_params.len(),
+                s.net.p()
+            ));
+        }
+        if ck.readout_params.len() != s.readout.param_len()
+            || ck.readout_grads.len() != s.readout.param_len()
+        {
+            return Err("checkpoint readout buffers do not match the readout shape".into());
+        }
+        if ck.grad_accum.len() != s.net.p() {
+            return Err("checkpoint gradient accumulator does not match P".into());
+        }
+        s.net.load_params(&ck.net_params);
+        s.readout.load_params(&ck.readout_params);
+        s.readout.load_grads(&ck.readout_grads);
+        s.grad_accum.copy_from_slice(&ck.grad_accum);
+        s.opt_cell.load_state(&ck.opt_cell)?;
+        s.opt_readout.load_state(&ck.opt_readout)?;
+        s.engine.load_state(&s.net, &ck.engine).map_err(|e| e.to_string())?;
+        s.ops = crate::metrics::OpCounter::from_words_vec(&ck.ops)?;
+        s.steps = ck.steps;
+        s.supervised_steps = ck.supervised_steps;
+        s.updates_applied = ck.updates_applied;
+        s.pending_supervised = ck.pending_supervised;
+        Ok(s)
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON encoding
+// ---------------------------------------------------------------------
+
+/// f32 slice → JSON array of IEEE-754 bit patterns.
+fn bits_array(xs: &[f32]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| x.to_bits().to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// u64 slice → JSON array of decimal strings (exact at full 64-bit width).
+fn u64_array(xs: &[u64]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| format!("\"{x}\"")).collect();
+    format!("[{}]", items.join(","))
+}
+
+fn policy_name(p: UpdatePolicy) -> (&'static str, u64) {
+    match p {
+        UpdatePolicy::EveryKSteps(k) => ("every_k", k),
+        UpdatePolicy::EndOfSequence => ("sequence", 0),
+        UpdatePolicy::Manual => ("manual", 0),
+    }
+}
+
+fn policy_from(name: &str, k: u64) -> Result<UpdatePolicy, String> {
+    match name {
+        "every_k" if k == 0 => Err("update_every must be ≥ 1 for the every_k policy".into()),
+        "every_k" => Ok(UpdatePolicy::EveryKSteps(k)),
+        "sequence" => Ok(UpdatePolicy::EndOfSequence),
+        "manual" => Ok(UpdatePolicy::Manual),
+        other => Err(format!("unknown update policy {other:?}")),
+    }
+}
+
+impl SessionCheckpoint {
+    /// Serialize to the versioned JSON document.
+    pub fn to_json(&self) -> String {
+        let (policy, k) = policy_name(self.policy);
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": \"{}\",\n", escape(SCHEMA)));
+        s.push_str(&format!("  \"schema_version\": \"{SCHEMA_VERSION}\",\n"));
+        s.push_str(&format!("  \"config_toml\": \"{}\",\n", escape(&self.config_toml)));
+        s.push_str(&format!("  \"policy\": \"{policy}\",\n"));
+        s.push_str(&format!("  \"update_every\": \"{k}\",\n"));
+        s.push_str(&format!("  \"predict_always\": {},\n", self.predict_always));
+        s.push_str(&format!("  \"steps\": \"{}\",\n", self.steps));
+        s.push_str(&format!("  \"supervised_steps\": \"{}\",\n", self.supervised_steps));
+        s.push_str(&format!("  \"updates_applied\": \"{}\",\n", self.updates_applied));
+        s.push_str(&format!("  \"pending_supervised\": \"{}\",\n", self.pending_supervised));
+        s.push_str(&format!("  \"net_params\": {},\n", bits_array(&self.net_params)));
+        s.push_str(&format!("  \"readout_params\": {},\n", bits_array(&self.readout_params)));
+        s.push_str(&format!("  \"readout_grads\": {},\n", bits_array(&self.readout_grads)));
+        s.push_str(&format!("  \"grad_accum\": {},\n", bits_array(&self.grad_accum)));
+        s.push_str(&format!("  \"opt_cell_m\": {},\n", bits_array(&self.opt_cell.m)));
+        s.push_str(&format!("  \"opt_cell_v\": {},\n", bits_array(&self.opt_cell.v)));
+        s.push_str(&format!("  \"opt_cell_t\": \"{}\",\n", self.opt_cell.t));
+        s.push_str(&format!("  \"opt_readout_m\": {},\n", bits_array(&self.opt_readout.m)));
+        s.push_str(&format!("  \"opt_readout_v\": {},\n", bits_array(&self.opt_readout.v)));
+        s.push_str(&format!("  \"opt_readout_t\": \"{}\",\n", self.opt_readout.t));
+        let masks: Vec<String> = self
+            .masks
+            .iter()
+            .map(|m| match m {
+                None => "null".to_string(),
+                Some(kept) => u64_array(kept),
+            })
+            .collect();
+        s.push_str(&format!("  \"masks\": [{}],\n", masks.join(", ")));
+        s.push_str(&format!("  \"ops\": {},\n", u64_array(&self.ops)));
+        s.push_str("  \"engine\": {\n");
+        s.push_str(&format!("    \"name\": \"{}\",\n", escape(&self.engine.engine)));
+        s.push_str(&format!("    \"version\": \"{}\",\n", self.engine.version));
+        let ints: Vec<String> = self
+            .engine
+            .int_entries()
+            .map(|(key, v)| format!("\"{}\": {}", escape(key), u64_array(v)))
+            .collect();
+        s.push_str(&format!("    \"ints\": {{{}}},\n", ints.join(", ")));
+        let floats: Vec<String> = self
+            .engine
+            .float_entries()
+            .map(|(key, v)| format!("\"{}\": {}", escape(key), bits_array(v)))
+            .collect();
+        s.push_str(&format!("    \"floats\": {{{}}}\n", floats.join(", ")));
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// Parse a [`SessionCheckpoint::to_json`] document.
+    pub fn from_json(text: &str) -> Result<SessionCheckpoint, String> {
+        let doc = parse(text)?;
+        let schema = str_of(&doc, "schema")?;
+        if schema != SCHEMA {
+            return Err(format!("not a session checkpoint (schema {schema:?})"));
+        }
+        let version = u64_of(&doc, "schema_version")?;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "checkpoint schema_version {version} unsupported (this build reads {SCHEMA_VERSION})"
+            ));
+        }
+        let policy = policy_from(str_of(&doc, "policy")?, u64_of(&doc, "update_every")?)?;
+        let predict_always = match doc.get("predict_always") {
+            Some(Json::Bool(b)) => *b,
+            _ => return Err("predict_always must be a bool".into()),
+        };
+        let engine_doc =
+            doc.get("engine").ok_or_else(|| "missing engine section".to_string())?;
+        let engine_version = u64_of(engine_doc, "version")?;
+        if engine_version > u32::MAX as u64 {
+            return Err(format!("engine state version {engine_version} out of range"));
+        }
+        let mut engine =
+            EngineState::new(str_of(engine_doc, "name")?, engine_version as u32);
+        for (key, val) in obj_of(engine_doc, "ints")? {
+            engine.put_ints(key, u64s_from(val, key)?);
+        }
+        for (key, val) in obj_of(engine_doc, "floats")? {
+            engine.put_floats(key, floats_from(val, key)?);
+        }
+        let masks_arr = doc
+            .get("masks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "masks must be an array".to_string())?;
+        let masks = masks_arr
+            .iter()
+            .map(|m| match m {
+                Json::Null => Ok(None),
+                other => u64s_from(other, "masks").map(Some),
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(SessionCheckpoint {
+            config_toml: str_of(&doc, "config_toml")?.to_string(),
+            policy,
+            predict_always,
+            steps: u64_of(&doc, "steps")?,
+            supervised_steps: u64_of(&doc, "supervised_steps")?,
+            updates_applied: u64_of(&doc, "updates_applied")?,
+            pending_supervised: u64_of(&doc, "pending_supervised")?,
+            net_params: floats_of(&doc, "net_params")?,
+            readout_params: floats_of(&doc, "readout_params")?,
+            readout_grads: floats_of(&doc, "readout_grads")?,
+            grad_accum: floats_of(&doc, "grad_accum")?,
+            opt_cell: AdamState {
+                m: floats_of(&doc, "opt_cell_m")?,
+                v: floats_of(&doc, "opt_cell_v")?,
+                t: u64_of(&doc, "opt_cell_t")?,
+            },
+            opt_readout: AdamState {
+                m: floats_of(&doc, "opt_readout_m")?,
+                v: floats_of(&doc, "opt_readout_v")?,
+                t: u64_of(&doc, "opt_readout_t")?,
+            },
+            masks,
+            ops: u64s_from(
+                doc.get("ops").ok_or_else(|| "missing ops array".to_string())?,
+                "ops",
+            )?,
+            engine,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parsing helpers over the bench-json value tree
+// ---------------------------------------------------------------------
+
+fn str_of<'a>(doc: &'a Json, key: &str) -> Result<&'a str, String> {
+    doc.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("missing string field {key:?}"))
+}
+
+/// u64 stored as a decimal string.
+fn u64_of(doc: &Json, key: &str) -> Result<u64, String> {
+    str_of(doc, key)?
+        .parse::<u64>()
+        .map_err(|_| format!("field {key:?} is not a u64 string"))
+}
+
+fn obj_of<'a>(doc: &'a Json, key: &str) -> Result<Vec<(&'a str, &'a Json)>, String> {
+    match doc.get(key) {
+        Some(Json::Obj(m)) => Ok(m.iter().map(|(k, v)| (k.as_str(), v)).collect()),
+        _ => Err(format!("missing object field {key:?}")),
+    }
+}
+
+fn floats_of(doc: &Json, key: &str) -> Result<Vec<f32>, String> {
+    let arr = doc
+        .get(key)
+        .ok_or_else(|| format!("missing float array {key:?}"))?;
+    floats_from(arr, key)
+}
+
+/// JSON array of u32 bit patterns → f32 values.
+fn floats_from(arr: &Json, key: &str) -> Result<Vec<f32>, String> {
+    arr.as_arr()
+        .ok_or_else(|| format!("{key:?} must be an array"))?
+        .iter()
+        .map(|v| {
+            let bits = v
+                .as_u64()
+                .filter(|&b| b <= u32::MAX as u64)
+                .ok_or_else(|| format!("{key:?} holds a non-u32 bit pattern"))?;
+            Ok(f32::from_bits(bits as u32))
+        })
+        .collect()
+}
+
+/// JSON array of decimal strings → u64 values.
+fn u64s_from(arr: &Json, key: &str) -> Result<Vec<u64>, String> {
+    arr.as_arr()
+        .ok_or_else(|| format!("{key:?} must be an array"))?
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .and_then(|s| s.parse::<u64>().ok())
+                .ok_or_else(|| format!("{key:?} holds a non-u64 entry"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgorithmKind;
+    use crate::rtrl::Target;
+
+    #[test]
+    fn json_roundtrip_preserves_every_bit() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model.hidden = 6;
+        cfg.model.param_sparsity = 0.5;
+        let mut s = SessionBuilder::from_config(cfg)
+            .algorithm(AlgorithmKind::Uoro)
+            .predict_always(true)
+            .build();
+        for i in 0..7 {
+            let x = [0.3 * i as f32, -0.1];
+            let t = if i % 2 == 1 { Target::Class(i % 2) } else { Target::None };
+            s.step(&x, t);
+        }
+        let ck = s.checkpoint();
+        let back = SessionCheckpoint::from_json(&ck.to_json()).expect("parse");
+        assert_eq!(back.config_toml, ck.config_toml);
+        assert_eq!(back.policy, ck.policy);
+        assert_eq!(back.predict_always, ck.predict_always);
+        assert_eq!(back.steps, ck.steps);
+        // exact f32 bit equality, including any negative zeros / denormals
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.net_params), bits(&ck.net_params));
+        assert_eq!(bits(&back.grad_accum), bits(&ck.grad_accum));
+        assert_eq!(bits(&back.opt_cell.m), bits(&ck.opt_cell.m));
+        assert_eq!(back.opt_cell.t, ck.opt_cell.t);
+        assert_eq!(back.masks, ck.masks);
+        assert_eq!(back.ops, ck.ops);
+        assert_eq!(back.engine, ck.engine);
+    }
+
+    #[test]
+    fn special_float_values_survive() {
+        let mut s = SessionBuilder::new().build();
+        s.grad_accum[0] = -0.0;
+        s.grad_accum[1] = f32::from_bits(1); // smallest denormal
+        s.grad_accum[2] = f32::NEG_INFINITY;
+        let ck = s.checkpoint();
+        let back = SessionCheckpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(back.grad_accum[0].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(back.grad_accum[1].to_bits(), 1);
+        assert_eq!(back.grad_accum[2], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        assert!(SessionCheckpoint::from_json("{\"schema\": \"other\"}").is_err());
+        assert!(SessionCheckpoint::from_json("not json").is_err());
+    }
+
+    /// Tampered policy/version fields fail loudly instead of being clamped.
+    #[test]
+    fn tampered_fields_rejected() {
+        let good = SessionBuilder::new().build().checkpoint().to_json();
+        let zero_k = good.replace("\"update_every\": \"1\"", "\"update_every\": \"0\"");
+        assert!(SessionCheckpoint::from_json(&zero_k).is_err(), "k=0 must be rejected");
+        let big_version =
+            good.replace("\"version\": \"1\"", &format!("\"version\": \"{}\"", u64::MAX));
+        assert!(
+            SessionCheckpoint::from_json(&big_version).is_err(),
+            "out-of-range engine version must be rejected"
+        );
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_engine_kind() {
+        let mut ck = SessionBuilder::new().build().checkpoint();
+        ck.engine = EngineState::new("bptt", 1); // session config says rtrl-both
+        assert!(OnlineSession::resume(&ck).is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! Text event-stream format for the `stream` CLI subcommand.
+//!
+//! One event per line; `#` starts a comment, blank lines are skipped:
+//!
+//! ```text
+//! 0.5 -0.2          # unsupervised input (n_in whitespace-separated floats)
+//! 0.5 -0.2 -> 1     # input with a class target
+//! !update           # force a parameter update now (manual policy)
+//! !end              # sequence boundary (end_sequence + begin_sequence)
+//! ```
+
+use crate::data::StepTarget;
+
+/// One parsed stream event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamEvent {
+    /// A timestep: input vector plus optional supervision.
+    Step { x: Vec<f32>, target: StepTarget },
+    /// Force an immediate parameter update.
+    Update,
+    /// Sequence boundary.
+    EndSequence,
+}
+
+/// Parse one line. `Ok(None)` for blank/comment lines; `Err` carries a
+/// message without the line number (the caller knows the position).
+pub fn parse_event(line: &str) -> Result<Option<StreamEvent>, String> {
+    let line = line.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    match line {
+        "!update" => return Ok(Some(StreamEvent::Update)),
+        "!end" => return Ok(Some(StreamEvent::EndSequence)),
+        other if other.starts_with('!') => {
+            return Err(format!("unknown directive {other:?} (try !update or !end)"))
+        }
+        _ => {}
+    }
+    let (xpart, tpart) = match line.split_once("->") {
+        Some((a, b)) => (a, Some(b.trim())),
+        None => (line, None),
+    };
+    let x = xpart
+        .split_whitespace()
+        .map(|tok| tok.parse::<f32>().map_err(|_| format!("bad input value {tok:?}")))
+        .collect::<Result<Vec<f32>, String>>()?;
+    if x.is_empty() {
+        return Err("event line has no input values".into());
+    }
+    let target = match tpart {
+        None => StepTarget::None,
+        Some(t) => StepTarget::Class(
+            t.parse::<usize>().map_err(|_| format!("bad class target {t:?}"))?,
+        ),
+    };
+    Ok(Some(StreamEvent::Step { x, target }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_steps_targets_and_directives() {
+        assert_eq!(parse_event("").unwrap(), None);
+        assert_eq!(parse_event("  # just a comment").unwrap(), None);
+        assert_eq!(
+            parse_event("0.5 -0.2").unwrap(),
+            Some(StreamEvent::Step { x: vec![0.5, -0.2], target: StepTarget::None })
+        );
+        assert_eq!(
+            parse_event("1.0 2.0 -> 1  # recall").unwrap(),
+            Some(StreamEvent::Step { x: vec![1.0, 2.0], target: StepTarget::Class(1) })
+        );
+        assert_eq!(parse_event("!update").unwrap(), Some(StreamEvent::Update));
+        assert_eq!(parse_event("!end").unwrap(), Some(StreamEvent::EndSequence));
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(parse_event("abc").is_err());
+        assert!(parse_event("0.5 -> x").is_err());
+        assert!(parse_event("-> 1").is_err());
+        assert!(parse_event("!frobnicate").is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! Streaming online learning — the crate's primary API surface.
+//!
+//! RTRL's defining capability is learning from an **endless stream** with
+//! memory independent of stream length. This module is that capability as
+//! an API:
+//!
+//! * [`SessionBuilder`] → [`OnlineSession`]: a long-lived learner whose core
+//!   call is [`OnlineSession::step`]`(input, target) → `[`StepOutcome`]
+//!   (prediction, loss, sparsity stats). No mandatory sequence boundaries;
+//!   an [`UpdatePolicy`] decides when accumulated gradients become
+//!   parameter updates (every-k-supervised-steps, end-of-sequence, or
+//!   manual).
+//! * [`OnlineSession::checkpoint`] / [`OnlineSession::resume`]: migrate a
+//!   session across process restarts **bit-exactly** — weights, optimizer
+//!   moments, stream counters and the engine's versioned
+//!   [`crate::rtrl::EngineState`] snapshot (influence panels, UORO rank-1
+//!   vectors + noise-RNG position, SnAp slabs, the BPTT tape) all travel in
+//!   one JSON document ([`checkpoint`]).
+//! * [`SessionPool`]: N independent sessions (one per user) stepped
+//!   concurrently over the in-tree worker pool.
+//! * [`events`]: the line-oriented event format the `sparse-rtrl stream`
+//!   subcommand reads from a file or stdin.
+//!
+//! The batch [`crate::train::Trainer`] is a thin client of
+//! [`OnlineSession`] (manual policy + per-minibatch
+//! [`OnlineSession::apply_update`]), so the paper experiments and the
+//! streaming surface share one code path.
+
+pub mod checkpoint;
+pub mod events;
+pub mod online;
+pub mod pool;
+
+pub use checkpoint::SessionCheckpoint;
+pub use events::{parse_event, StreamEvent};
+pub use online::{OnlineSession, SessionBuilder, StepOutcome, UpdatePolicy};
+pub use pool::SessionPool;

@@ -1,0 +1,544 @@
+//! [`OnlineSession`]: a long-lived, step-driven learner — the crate's
+//! primary API surface.
+//!
+//! A session owns the full learning state (stack, readout, gradient engine,
+//! optimizer moments, op counters) and consumes an **event stream**: every
+//! [`OnlineSession::step`] takes one `(input, target)` pair and returns a
+//! [`StepOutcome`] with the prediction, the instantaneous loss and the
+//! step's sparsity observations. There are no mandatory sequence
+//! boundaries — [`UpdatePolicy`] decides when the accumulated RTRL gradient
+//! is turned into a parameter update, and [`OnlineSession::begin_sequence`]
+//! / [`OnlineSession::end_sequence`] exist only for workloads that *have*
+//! boundaries (the batch trainer is one such client).
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{OpCounter, Phase};
+use crate::nn::{LayerStack, Loss, LossKind, Readout};
+use crate::optim::{Adam, Optimizer};
+use crate::rtrl::{GradientEngine, Target};
+use crate::train::build;
+use crate::util::Pcg64;
+
+/// When a session turns accumulated gradients into a parameter update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdatePolicy {
+    /// Apply after every `k ≥ 1` *supervised* steps — the paper's online
+    /// regime at `k = 1`. (With BPTT this truncates the tape at each
+    /// update, i.e. truncated BPTT; the RTRL engines carry their influence
+    /// state across updates with no approximation.)
+    EveryKSteps(u64),
+    /// Apply at [`OnlineSession::end_sequence`] boundaries.
+    EndOfSequence,
+    /// Never apply automatically; the caller harvests via `end_sequence`
+    /// and applies via [`OnlineSession::apply_update`] (how the batch
+    /// trainer averages gradients over a minibatch).
+    Manual,
+}
+
+/// Everything one [`OnlineSession::step`] reports.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepOutcome {
+    /// 1-based stream position of this step.
+    pub step: u64,
+    /// Instantaneous loss, when the step carried a target.
+    pub loss: Option<f32>,
+    /// Whether a class prediction matched the target.
+    pub correct: Option<bool>,
+    /// Predicted class — present on supervised classification steps, and on
+    /// unsupervised steps too when the session runs in serving mode (see
+    /// [`SessionBuilder::predict_always`]). `None` on regression
+    /// ([`crate::rtrl::Target::Vector`]) steps.
+    pub prediction: Option<usize>,
+    /// Units with nonzero activation (α̃N).
+    pub active_units: usize,
+    /// Units with nonzero pseudo-derivative (β̃N).
+    pub deriv_units: usize,
+    /// Influence-matrix zero fraction, when measurement is on.
+    pub influence_sparsity: Option<f32>,
+    /// Whether this step triggered a parameter update.
+    pub updated: bool,
+}
+
+/// Builder for [`OnlineSession`] — programmatic or straight from an
+/// [`ExperimentConfig`]. Weight init replays the trainer's RNG stream
+/// order, so a session and a [`crate::train::Trainer`] built from the same
+/// config see identical parameters.
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    cfg: ExperimentConfig,
+    policy: UpdatePolicy,
+    predict_always: bool,
+}
+
+impl SessionBuilder {
+    /// Start from a config (the TOML-level description of model + task +
+    /// training hyperparameters).
+    pub fn from_config(cfg: ExperimentConfig) -> Self {
+        SessionBuilder { cfg, policy: UpdatePolicy::EveryKSteps(1), predict_always: false }
+    }
+
+    /// Default configuration (paper spiral setup), for programmatic use.
+    pub fn new() -> Self {
+        Self::from_config(ExperimentConfig::default())
+    }
+
+    /// Set the update policy (default: update every supervised step).
+    /// Panics on `EveryKSteps(0)` — a zero cadence is a caller bug, not a
+    /// value to silently reinterpret.
+    pub fn policy(mut self, policy: UpdatePolicy) -> Self {
+        if let UpdatePolicy::EveryKSteps(0) = policy {
+            panic!("UpdatePolicy::EveryKSteps requires k ≥ 1");
+        }
+        self.policy = policy;
+        self
+    }
+
+    /// Gradient engine selection.
+    pub fn algorithm(mut self, kind: crate::config::AlgorithmKind) -> Self {
+        self.cfg.train.algorithm = kind;
+        self
+    }
+
+    /// Weight-init / mask seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Hidden units per layer.
+    pub fn hidden(mut self, n: usize) -> Self {
+        self.cfg.model.hidden = n;
+        self
+    }
+
+    /// Stack depth (≥ 1).
+    pub fn layers(mut self, l: usize) -> Self {
+        assert!(l >= 1, "layers must be ≥ 1");
+        self.cfg.model.layers = l;
+        self
+    }
+
+    /// Recurrent parameter sparsity ω ∈ [0, 1).
+    pub fn param_sparsity(mut self, w: f32) -> Self {
+        assert!((0.0..1.0).contains(&w), "param_sparsity must be in [0,1)");
+        self.cfg.model.param_sparsity = w;
+        self
+    }
+
+    /// Learning rate for both optimizers.
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.cfg.train.lr = lr;
+        self
+    }
+
+    /// Run a readout-only prediction on *unsupervised* steps too, so every
+    /// [`StepOutcome`] carries a class (serving mode; costs one readout
+    /// forward per unsupervised step, charged to the session's op counter).
+    pub fn predict_always(mut self, on: bool) -> Self {
+        self.predict_always = on;
+        self
+    }
+
+    /// Build the session. RNG streams split in the same order as
+    /// [`crate::train::Trainer::new`] (cell, readout, data, batch), so the
+    /// two surfaces are weight-for-weight interchangeable.
+    pub fn build(self) -> OnlineSession {
+        let cfg = self.cfg;
+        let mut root = Pcg64::new(cfg.seed);
+        let mut cell_rng = root.split();
+        let mut readout_rng = root.split();
+        let _data_rng = root.split();
+        let _batch_rng = root.split();
+        let n_out = build::task_n_out(&cfg);
+        let net = build::build_stack(&cfg, &mut cell_rng);
+        let readout = Readout::new(n_out, net.top_n(), &mut readout_rng);
+        let mut engine = build::build_engine(cfg.train.algorithm, &net, n_out);
+        engine.begin_sequence();
+        let p = net.p();
+        let rp = readout.param_len();
+        let lr = cfg.train.lr;
+        OnlineSession {
+            cfg,
+            net,
+            readout,
+            loss: Loss::new(LossKind::CrossEntropy, n_out),
+            engine,
+            opt_cell: Adam::new(p, lr),
+            opt_readout: Adam::new(rp, lr),
+            policy: self.policy,
+            predict_always: self.predict_always,
+            grad_accum: vec![0.0; p],
+            cell_params: vec![0.0; p],
+            readout_params: vec![0.0; rp],
+            readout_grads: vec![0.0; rp],
+            logits: vec![0.0; n_out],
+            ops: OpCounter::new(),
+            steps: 0,
+            supervised_steps: 0,
+            updates_applied: 0,
+            pending_supervised: 0,
+        }
+    }
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A long-lived online learner over an event stream. See the module docs;
+/// built by [`SessionBuilder`], checkpointed by
+/// [`OnlineSession::checkpoint`] (see [`crate::session::checkpoint`]).
+pub struct OnlineSession {
+    pub(crate) cfg: ExperimentConfig,
+    pub(crate) net: LayerStack,
+    pub(crate) readout: Readout,
+    pub(crate) loss: Loss,
+    pub(crate) engine: Box<dyn GradientEngine>,
+    pub(crate) opt_cell: Adam,
+    pub(crate) opt_readout: Adam,
+    pub(crate) policy: UpdatePolicy,
+    pub(crate) predict_always: bool,
+    /// Harvested-but-unapplied gradient (`R^P`), summed across harvests.
+    pub(crate) grad_accum: Vec<f32>,
+    cell_params: Vec<f32>,
+    readout_params: Vec<f32>,
+    readout_grads: Vec<f32>,
+    logits: Vec<f32>,
+    /// Every MAC the session performs, phase- and layer-attributed.
+    pub ops: OpCounter,
+    pub(crate) steps: u64,
+    pub(crate) supervised_steps: u64,
+    pub(crate) updates_applied: u64,
+    /// Supervised steps whose gradient has not been applied yet.
+    pub(crate) pending_supervised: u64,
+}
+
+impl OnlineSession {
+    /// The configuration the session was built from.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// The recurrent stack.
+    pub fn net(&self) -> &LayerStack {
+        &self.net
+    }
+
+    /// Mutable stack access (mask rewiring). Callers that change masks must
+    /// [`OnlineSession::rebuild_engine`] afterwards.
+    pub fn net_mut(&mut self) -> &mut LayerStack {
+        &mut self.net
+    }
+
+    /// The linear readout.
+    pub fn readout(&self) -> &Readout {
+        &self.readout
+    }
+
+    /// The gradient engine (state-memory queries, grads inspection).
+    pub fn engine(&self) -> &dyn GradientEngine {
+        &*self.engine
+    }
+
+    /// The recurrent-parameter optimizer (moment surgery after rewiring).
+    pub fn optimizer_cell_mut(&mut self) -> &mut Adam {
+        &mut self.opt_cell
+    }
+
+    /// The active update policy.
+    pub fn policy(&self) -> UpdatePolicy {
+        self.policy
+    }
+
+    /// Steps consumed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Supervised steps consumed so far.
+    pub fn supervised_steps(&self) -> u64 {
+        self.supervised_steps
+    }
+
+    /// Parameter updates applied so far.
+    pub fn updates_applied(&self) -> u64 {
+        self.updates_applied
+    }
+
+    /// Rebuild the gradient engine from the current stack (after mask
+    /// rewiring: column maps and SnAp patterns must track the new
+    /// structure). Influence state restarts at zero — exact for just-grown
+    /// parameters, which have had no past influence.
+    pub fn rebuild_engine(&mut self) {
+        self.engine =
+            build::build_engine(self.cfg.train.algorithm, &self.net, self.readout.n_out());
+        self.engine.begin_sequence();
+    }
+
+    /// Toggle influence-sparsity measurement on the engine.
+    pub fn set_measure_influence(&mut self, on: bool) {
+        self.engine.set_measure_influence(on);
+    }
+
+    /// Reset the engine's temporal state for a new sequence. Optional: a
+    /// boundary-free stream never calls this.
+    pub fn begin_sequence(&mut self) {
+        self.engine.begin_sequence();
+    }
+
+    /// Consume one stream event. Runs the engine step, optionally a
+    /// readout-only prediction (serving mode), then lets the update policy
+    /// decide whether to apply the accumulated gradient.
+    pub fn step(&mut self, x: &[f32], target: Target<'_>) -> StepOutcome {
+        assert_eq!(x.len(), self.net.n_in(), "input width must match the stack");
+        let r = self.engine.step(
+            &self.net,
+            &mut self.readout,
+            &mut self.loss,
+            x,
+            target,
+            &mut self.ops,
+        );
+        self.steps += 1;
+        let mut prediction = r.prediction;
+        if r.loss.is_none() && self.predict_always {
+            // Unsupervised step in serving mode: readout-only forward on the
+            // freshly-produced top activations (the recurrent forward already
+            // ran inside the engine). Supervised steps already ran the
+            // readout; regression (Vector) steps deliberately keep
+            // `prediction = None` rather than argmax-ing an MSE output.
+            let top_off = self.net.layout().state_offset(self.net.layers() - 1);
+            self.readout.forward(
+                &self.engine.activations()[top_off..],
+                &mut self.logits,
+                &mut self.ops,
+            );
+            prediction = Some(Loss::predict(&self.logits));
+        }
+        if r.loss.is_some() {
+            self.supervised_steps += 1;
+            self.pending_supervised += 1;
+        }
+        let updated = match self.policy {
+            UpdatePolicy::EveryKSteps(k) if self.pending_supervised >= k => {
+                self.harvest();
+                self.apply_update(1.0);
+                true
+            }
+            _ => false,
+        };
+        StepOutcome {
+            step: self.steps,
+            loss: r.loss,
+            correct: r.correct,
+            prediction,
+            active_units: r.active_units,
+            deriv_units: r.deriv_units,
+            influence_sparsity: r.influence_sparsity,
+            updated,
+        }
+    }
+
+    /// Close a sequence: finish the engine's pass (BPTT's backward runs
+    /// here) and fold its gradient into the session accumulator. Under
+    /// [`UpdatePolicy::EndOfSequence`] the update is applied immediately;
+    /// under [`UpdatePolicy::EveryKSteps`] any pending remainder is applied;
+    /// under [`UpdatePolicy::Manual`] the caller applies later.
+    pub fn end_sequence(&mut self) {
+        match self.policy {
+            UpdatePolicy::Manual => self.harvest(),
+            UpdatePolicy::EndOfSequence => {
+                self.harvest();
+                self.apply_update(1.0);
+            }
+            UpdatePolicy::EveryKSteps(_) => {
+                if self.pending_supervised > 0 {
+                    self.harvest();
+                    self.apply_update(1.0);
+                }
+            }
+        }
+    }
+
+    /// Force an update right now regardless of policy (`!update` stream
+    /// directive): harvest the engine gradient and apply it unscaled.
+    pub fn update_now(&mut self) {
+        self.harvest();
+        self.apply_update(1.0);
+    }
+
+    /// Materialize the engine's accumulated gradient into `grad_accum` and
+    /// clear the engine-side accumulators (influence/temporal state is
+    /// untouched — that is the online regime).
+    fn harvest(&mut self) {
+        self.engine.end_sequence(&self.net, &mut self.readout, &mut self.ops);
+        for (g, eg) in self.grad_accum.iter_mut().zip(self.engine.grads()) {
+            *g += eg;
+        }
+        self.engine.reset_grads();
+    }
+
+    /// Apply the harvested gradient, scaled by `scale` (the trainer passes
+    /// `1/batch_size`; streaming policies pass 1). Clears the accumulators
+    /// and re-zeroes masked parameters.
+    pub fn apply_update(&mut self, scale: f32) {
+        for g in self.grad_accum.iter_mut() {
+            *g *= scale;
+        }
+        self.net.copy_params_into(&mut self.cell_params);
+        self.opt_cell.update(&mut self.cell_params, &self.grad_accum);
+        self.net.load_params(&self.cell_params);
+        self.net.enforce_masks();
+        self.grad_accum.iter_mut().for_each(|g| *g = 0.0);
+
+        self.readout.scale_grads(scale);
+        self.readout.copy_params_into(&mut self.readout_params);
+        self.readout.copy_grads_into(&mut self.readout_grads);
+        self.opt_readout.update(&mut self.readout_params, &self.readout_grads);
+        self.readout.load_params(&self.readout_params);
+        self.readout.zero_grads();
+        self.ops.macs(Phase::Optimizer, (self.net.p() + self.readout.param_len()) as u64);
+        self.updates_applied += 1;
+        self.pending_supervised = 0;
+    }
+
+    /// Engine state memory in words (Table-1 memory column) — constant in
+    /// stream length for every online engine.
+    pub fn state_memory_words(&self) -> usize {
+        self.engine.state_memory_words()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgorithmKind;
+
+    fn tiny_builder() -> SessionBuilder {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model.hidden = 8;
+        cfg.train.lr = 0.01;
+        SessionBuilder::from_config(cfg)
+    }
+
+    /// Inputs that make a 2-in session tick; supervise every third step.
+    fn drive(s: &mut OnlineSession, n: usize, seed: u64) -> Vec<StepOutcome> {
+        let mut rng = Pcg64::new(seed);
+        (0..n)
+            .map(|i| {
+                let x = [rng.normal(), rng.normal()];
+                let t = if i % 3 == 2 { Target::Class(i % 2) } else { Target::None };
+                s.step(&x, t)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_k_policy_updates_on_supervised_cadence() {
+        let mut s = tiny_builder().policy(UpdatePolicy::EveryKSteps(2)).build();
+        let outs = drive(&mut s, 12, 5);
+        // supervised steps at i = 2,5,8,11 → updates after the 2nd and 4th
+        let updated: Vec<usize> =
+            outs.iter().enumerate().filter(|(_, o)| o.updated).map(|(i, _)| i).collect();
+        assert_eq!(updated, vec![5, 11]);
+        assert_eq!(s.updates_applied(), 2);
+        assert_eq!(s.supervised_steps(), 4);
+        assert_eq!(s.steps(), 12);
+    }
+
+    #[test]
+    fn manual_policy_never_auto_updates() {
+        let mut s = tiny_builder().policy(UpdatePolicy::Manual).build();
+        let outs = drive(&mut s, 9, 6);
+        assert!(outs.iter().all(|o| !o.updated));
+        assert_eq!(s.updates_applied(), 0);
+        s.end_sequence(); // harvest only
+        assert_eq!(s.updates_applied(), 0);
+        s.apply_update(0.5);
+        assert_eq!(s.updates_applied(), 1);
+    }
+
+    #[test]
+    fn end_of_sequence_policy_applies_at_boundary() {
+        let mut s = tiny_builder().policy(UpdatePolicy::EndOfSequence).build();
+        drive(&mut s, 6, 7);
+        assert_eq!(s.updates_applied(), 0);
+        s.end_sequence();
+        assert_eq!(s.updates_applied(), 1);
+    }
+
+    #[test]
+    fn predict_always_emits_predictions_on_unsupervised_steps() {
+        let mut s = tiny_builder().predict_always(true).build();
+        let outs = drive(&mut s, 6, 8);
+        assert!(outs.iter().all(|o| o.prediction.is_some()));
+        let mut s2 = tiny_builder().build();
+        let outs2 = drive(&mut s2, 6, 8);
+        assert!(outs2.iter().any(|o| o.prediction.is_none()));
+        // the extra readout forwards cost ops
+        assert!(s.ops.total_macs() > s2.ops.total_macs());
+    }
+
+    /// The online loop actually learns: on a fixed-association stream the
+    /// loss trend goes down (same smoke-level bar the trainer tests use).
+    #[test]
+    fn online_updates_reduce_loss_on_learnable_stream() {
+        let mut s = tiny_builder()
+            .algorithm(AlgorithmKind::RtrlBoth)
+            .lr(0.02)
+            .policy(UpdatePolicy::EveryKSteps(1))
+            .build();
+        let mut early = 0.0f64;
+        let mut late = 0.0f64;
+        let (mut n_early, mut n_late) = (0u32, 0u32);
+        let mut rng = Pcg64::new(9);
+        for i in 0..400 {
+            // class = sign of the first input — learnable from one step
+            let x = [if rng.bernoulli(0.5) { 1.0 } else { -1.0 }, 0.5];
+            let class = usize::from(x[0] > 0.0);
+            let o = s.step(&x, Target::Class(class));
+            let l = o.loss.unwrap() as f64;
+            if i < 100 {
+                early += l;
+                n_early += 1;
+            } else if i >= 300 {
+                late += l;
+                n_late += 1;
+            }
+        }
+        assert!(
+            late / n_late as f64 <= early / n_early as f64,
+            "online loss did not improve: early {early} late {late}"
+        );
+    }
+
+    #[test]
+    fn builder_overrides_apply() {
+        let s = tiny_builder()
+            .algorithm(AlgorithmKind::Snap1)
+            .hidden(6)
+            .layers(2)
+            .param_sparsity(0.5)
+            .seed(11)
+            .build();
+        assert_eq!(s.engine().name(), "snap1");
+        assert_eq!(s.net().layers(), 2);
+        assert_eq!(s.net().top_n(), 6);
+        assert!(s.net().layer(0).mask().is_some());
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_input_width_panics() {
+        let mut s = tiny_builder().build();
+        s.step(&[1.0], Target::None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_update_cadence_is_a_loud_error() {
+        let _ = tiny_builder().policy(UpdatePolicy::EveryKSteps(0));
+    }
+}

@@ -1,0 +1,219 @@
+//! [`SessionPool`]: N independent [`OnlineSession`]s driven concurrently —
+//! the many-users serving scenario.
+//!
+//! Each session is a user's private learner (own weights, own optimizer
+//! moments, own engine state); the pool fans work out over the in-tree
+//! worker threads ([`crate::util::pool`]). Sessions are `Send` (the
+//! [`crate::rtrl::GradientEngine`] contract requires it), so they migrate
+//! freely between workers; results always return in session order.
+
+use super::online::{OnlineSession, StepOutcome};
+use crate::data::StepTarget;
+use crate::util::pool::run_parallel;
+
+/// A fixed set of independent sessions plus a worker-thread budget.
+pub struct SessionPool {
+    sessions: Vec<OnlineSession>,
+    workers: usize,
+}
+
+impl SessionPool {
+    /// Wrap pre-built sessions. `workers = 0` uses the available hardware
+    /// parallelism.
+    pub fn new(sessions: Vec<OnlineSession>, workers: usize) -> Self {
+        let workers = if workers == 0 { crate::util::pool::available_workers() } else { workers };
+        SessionPool { sessions, workers }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn session(&self, i: usize) -> &OnlineSession {
+        &self.sessions[i]
+    }
+
+    pub fn session_mut(&mut self, i: usize) -> &mut OnlineSession {
+        &mut self.sessions[i]
+    }
+
+    /// Tear down into the individual sessions (checkpointing each, say).
+    pub fn into_sessions(self) -> Vec<OnlineSession> {
+        self.sessions
+    }
+
+    /// Deliver one event per session (index-aligned) and step them all
+    /// concurrently. Outcomes return in session order.
+    pub fn step_all(&mut self, events: &[(Vec<f32>, StepTarget)]) -> Vec<StepOutcome> {
+        assert_eq!(events.len(), self.sessions.len(), "one event per session");
+        self.run_each(|i, s| {
+            let (x, t) = &events[i];
+            s.step(x, t.as_target())
+        })
+    }
+
+    /// Run an arbitrary closure over every session concurrently (e.g. drain
+    /// a per-user event queue); results return in session order. The
+    /// sessions move to worker threads for the duration of the call.
+    ///
+    /// Failure containment: a panic in `f` for one session is caught at
+    /// that session's boundary — every sibling still runs, **all** sessions
+    /// (including the panicked one, whose learning state may be mid-step)
+    /// return to the pool, and only then is the first panic re-raised.
+    pub fn run_each<R, F>(&mut self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &mut OnlineSession) -> R + Sync,
+    {
+        use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+        let sessions = std::mem::take(&mut self.sessions);
+        let results = run_parallel(sessions, self.workers, |i, mut s| {
+            let r = catch_unwind(AssertUnwindSafe(|| f(i, &mut s)));
+            (s, r)
+        });
+        let mut out = Vec::with_capacity(results.len());
+        let mut first_panic = None;
+        for (s, r) in results {
+            self.sessions.push(s);
+            match r {
+                Ok(r) => out.push(r),
+                Err(payload) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(payload);
+                    }
+                }
+            }
+        }
+        if let Some(p) = first_panic {
+            resume_unwind(p);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgorithmKind, ExperimentConfig};
+    use crate::rtrl::Target;
+    use crate::session::{SessionBuilder, UpdatePolicy};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn make_pool(n: usize, workers: usize) -> SessionPool {
+        let sessions = (0..n)
+            .map(|i| {
+                let mut cfg = ExperimentConfig::default();
+                cfg.model.hidden = 6;
+                cfg.seed = 100 + i as u64; // every user gets their own weights
+                SessionBuilder::from_config(cfg)
+                    .algorithm(AlgorithmKind::RtrlBoth)
+                    .policy(UpdatePolicy::EveryKSteps(1))
+                    .build()
+            })
+            .collect();
+        SessionPool::new(sessions, workers)
+    }
+
+    /// ≥ 8 sessions stepping concurrently, many rounds, each learning its
+    /// own stream — the acceptance bar for the many-users scenario.
+    #[test]
+    fn eight_concurrent_sessions_sustain_independent_streams() {
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static CUR: AtomicUsize = AtomicUsize::new(0);
+        let mut pool = make_pool(8, 8);
+        for round in 0..30 {
+            pool.run_each(|i, s| {
+                let c = CUR.fetch_add(1, Ordering::SeqCst) + 1;
+                PEAK.fetch_max(c, Ordering::SeqCst);
+                // hold the slot briefly so overlap is observable even though
+                // a single step only takes microseconds
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                let x = [(round as f32 * 0.3 + i as f32).sin(), 0.5];
+                let t = if round % 3 == 0 { Target::Class(i % 2) } else { Target::None };
+                let o = s.step(&x, t);
+                CUR.fetch_sub(1, Ordering::SeqCst);
+                o
+            });
+        }
+        assert!(PEAK.load(Ordering::SeqCst) >= 2, "sessions never overlapped");
+        for i in 0..pool.len() {
+            assert_eq!(pool.session(i).steps(), 30);
+            assert_eq!(pool.session(i).supervised_steps(), 10);
+            assert_eq!(pool.session(i).updates_applied(), 10);
+        }
+        // independent learners: different seeds → different weights
+        let mut p0 = vec![0.0; pool.session(0).net().p()];
+        let mut p1 = vec![0.0; pool.session(1).net().p()];
+        pool.session(0).net().copy_params_into(&mut p0);
+        pool.session(1).net().copy_params_into(&mut p1);
+        assert_ne!(p0, p1);
+    }
+
+    /// One user's panic must not destroy the other users' learned state:
+    /// after a contained panic, every session (including the offender) is
+    /// still in the pool and the siblings' steps were applied.
+    #[test]
+    fn one_panicking_session_does_not_lose_the_others() {
+        let mut pool = make_pool(6, 3);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_each(|i, s| {
+                if i == 2 {
+                    panic!("user 2 sent a poison event");
+                }
+                s.step(&[0.4, -0.4], Target::Class(i % 2))
+            })
+        }));
+        assert!(caught.is_err(), "the panic must still surface");
+        assert_eq!(pool.len(), 6, "sessions were lost from the pool");
+        for i in 0..6 {
+            let expect = if i == 2 { 0 } else { 1 };
+            assert_eq!(pool.session(i).steps(), expect, "session {i} step count");
+        }
+        // the pool remains fully usable afterwards
+        let outs = pool.run_each(|_, s| s.step(&[0.1, 0.2], Target::None));
+        assert_eq!(outs.len(), 6);
+    }
+
+    /// `step_all` preserves session order and pairs events by index.
+    #[test]
+    fn step_all_is_index_aligned() {
+        let mut pool = make_pool(4, 2);
+        let events: Vec<(Vec<f32>, StepTarget)> = (0..4)
+            .map(|i| (vec![i as f32, -1.0], StepTarget::Class(i % 2)))
+            .collect();
+        let outs = pool.step_all(&events);
+        assert_eq!(outs.len(), 4);
+        for o in &outs {
+            assert_eq!(o.step, 1);
+            assert!(o.loss.is_some());
+        }
+    }
+
+    /// Pool results are deterministic regardless of worker interleaving: a
+    /// 1-worker pool and an 8-worker pool produce identical per-session
+    /// outcomes.
+    #[test]
+    fn outcomes_independent_of_worker_count() {
+        let run = |workers: usize| -> Vec<Vec<u32>> {
+            let mut pool = make_pool(6, workers);
+            let mut all = Vec::new();
+            for round in 0..10 {
+                let outs = pool.run_each(|i, s| {
+                    let x = [(i as f32 - round as f32).cos(), 0.1];
+                    s.step(&x, Target::Class((i + round) % 2))
+                });
+                all.push(outs.iter().map(|o| o.loss.unwrap().to_bits()).collect());
+            }
+            all
+        };
+        assert_eq!(run(1), run(8));
+    }
+}

@@ -1,15 +1,23 @@
 //! The training loop (paper §6 protocol): minibatch RTRL/BPTT with Adam,
 //! per-iteration sparsity + compute accounting, periodic validation —
 //! over a [`LayerStack`] of any depth.
+//!
+//! Since the session redesign the trainer is a **thin client** of
+//! [`OnlineSession`]: it owns the dataset loop, minibatch averaging and the
+//! rewiring schedule, while the session owns every learning component
+//! (stack, readout, engine, optimizers, op counters). The trainer drives
+//! the session under [`UpdatePolicy::Manual`] — `begin_sequence` → `step`×T
+//! → `end_sequence` per sequence, then one [`OnlineSession::apply_update`]
+//! scaled by `1/batch_size` per iteration — which reproduces the historical
+//! trainer semantics exactly (same RNG stream order, same op accounting,
+//! same gradient math).
 
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::metrics::curve::{Curve, CurvePoint};
 use crate::metrics::{ComputeAdjusted, OpCounter, Phase, SparsityStats};
-use crate::nn::{LayerStack, Loss, LossKind, Readout};
-use crate::optim::{Adam, Optimizer};
-use crate::rtrl::GradientEngine;
-use crate::train::build;
+use crate::nn::{LayerStack, Loss, Readout};
+use crate::session::{OnlineSession, SessionBuilder, UpdatePolicy};
 use crate::util::Pcg64;
 
 /// Everything a finished run reports.
@@ -23,55 +31,34 @@ pub struct TrainOutcome {
     pub state_memory_words: usize,
 }
 
-/// Single-run trainer owning all components.
+/// Single-run trainer: dataset loop + minibatch schedule over an
+/// [`OnlineSession`].
 pub struct Trainer {
-    pub cfg: ExperimentConfig,
-    pub net: LayerStack,
-    pub readout: Readout,
-    pub loss: Loss,
-    pub engine: Box<dyn GradientEngine>,
-    opt_cell: Adam,
-    opt_readout: Adam,
-    grad_accum: Vec<f32>,
-    /// Staging buffer for the concatenated stack parameters (`R^P`).
-    cell_params: Vec<f32>,
-    readout_params: Vec<f32>,
-    readout_grads: Vec<f32>,
+    /// The learning state, which also owns the experiment config
+    /// ([`Trainer::config`]). Public so callers can inspect the stack,
+    /// readout or engine mid-training (tests, reports).
+    pub session: OnlineSession,
     batch_rng: Pcg64,
-    pub ops: OpCounter,
 }
 
 impl Trainer {
     /// Build a trainer from a config. RNG streams are split per component so
-    /// e.g. two algorithms see identical weight init and data order.
+    /// e.g. two algorithms see identical weight init and data order (the
+    /// split order lives in [`SessionBuilder::build`]).
     pub fn new(cfg: ExperimentConfig) -> Self {
         let mut root = Pcg64::new(cfg.seed);
-        let mut cell_rng = root.split();
-        let mut readout_rng = root.split();
+        let _cell_rng = root.split();
+        let _readout_rng = root.split();
         let _data_rng = root.split(); // consumed by callers building datasets
         let batch_rng = root.split();
-        let n_out = build::task_n_out(&cfg);
-        let net = build::build_stack(&cfg, &mut cell_rng);
-        let readout = Readout::new(n_out, net.top_n(), &mut readout_rng);
-        let engine = build::build_engine(cfg.train.algorithm, &net, n_out);
-        let p = net.p();
-        let rp = readout.param_len();
-        let lr = cfg.train.lr;
-        Trainer {
-            cfg,
-            net,
-            readout,
-            loss: Loss::new(LossKind::CrossEntropy, n_out),
-            engine,
-            opt_cell: Adam::new(p, lr),
-            opt_readout: Adam::new(rp, lr),
-            grad_accum: vec![0.0; p],
-            cell_params: vec![0.0; p],
-            readout_params: vec![0.0; rp],
-            readout_grads: vec![0.0; rp],
-            batch_rng,
-            ops: OpCounter::new(),
-        }
+        let session = SessionBuilder::from_config(cfg).policy(UpdatePolicy::Manual).build();
+        Trainer { session, batch_rng }
+    }
+
+    /// The experiment configuration (owned by the session — a single copy,
+    /// so there is no second config that could silently diverge).
+    pub fn config(&self) -> &ExperimentConfig {
+        self.session.config()
     }
 
     /// Dataset RNG matching the stream order used by [`Trainer::new`].
@@ -82,29 +69,33 @@ impl Trainer {
         root.split()
     }
 
-    /// Run one gradient sequence and accumulate into the batch buffers.
-    /// Returns (mean step loss, final correct, sparsity observations).
+    /// The recurrent stack under training.
+    pub fn net(&self) -> &LayerStack {
+        self.session.net()
+    }
+
+    /// The readout under training.
+    pub fn readout(&self) -> &Readout {
+        self.session.readout()
+    }
+
+    /// Run one gradient sequence through the session and harvest its
+    /// gradient into the batch accumulator (manual policy: no update yet).
+    /// Returns (mean step loss, final correct).
     fn run_sequence(
         &mut self,
         seq: &crate::data::Sequence,
         stats: &mut SparsityStats,
         measure_influence: bool,
     ) -> (f32, bool) {
-        self.engine.set_measure_influence(measure_influence);
-        self.engine.begin_sequence();
+        self.session.set_measure_influence(measure_influence);
+        self.session.begin_sequence();
         let mut loss_sum = 0.0;
         let mut loss_count = 0u32;
         let mut last_correct = false;
-        let n_total = self.net.total_units();
+        let n_total = self.session.net().total_units();
         for (t, x) in seq.inputs.iter().enumerate() {
-            let r = self.engine.step(
-                &self.net,
-                &mut self.readout,
-                &mut self.loss,
-                x,
-                seq.targets[t].as_target(),
-                &mut self.ops,
-            );
+            let r = self.session.step(x, seq.targets[t].as_target());
             stats.record_step(n_total, r.active_units, r.deriv_units);
             if let Some(l) = r.loss {
                 loss_sum += l;
@@ -117,32 +108,8 @@ impl Trainer {
                 stats.record_influence(s);
             }
         }
-        self.engine.end_sequence(&self.net, &mut self.readout, &mut self.ops);
-        for (g, eg) in self.grad_accum.iter_mut().zip(self.engine.grads()) {
-            *g += eg;
-        }
+        self.session.end_sequence();
         (loss_sum / loss_count.max(1) as f32, last_correct)
-    }
-
-    /// Apply accumulated batch gradients (mean over `batch_size`).
-    fn apply_update(&mut self, batch_size: usize) {
-        let scale = 1.0 / batch_size as f32;
-        for g in self.grad_accum.iter_mut() {
-            *g *= scale;
-        }
-        self.net.copy_params_into(&mut self.cell_params);
-        self.opt_cell.update(&mut self.cell_params, &self.grad_accum);
-        self.net.load_params(&self.cell_params);
-        self.net.enforce_masks();
-        self.grad_accum.iter_mut().for_each(|g| *g = 0.0);
-
-        self.readout.scale_grads(scale);
-        self.readout.copy_params_into(&mut self.readout_params);
-        self.readout.copy_grads_into(&mut self.readout_grads);
-        self.opt_readout.update(&mut self.readout_params, &self.readout_grads);
-        self.readout.load_params(&self.readout_params);
-        self.readout.zero_grads();
-        self.ops.macs(Phase::Optimizer, (self.net.p() + self.readout.param_len()) as u64);
     }
 
     /// One Deep-Rewiring-style step (paper Discussion / Bellec et al. 2018),
@@ -151,25 +118,24 @@ impl Trainer {
     /// new patterns) and reset the Adam moments of every swapped parameter
     /// (indices in the concatenated layout).
     fn rewire(&mut self, rng: &mut Pcg64) {
+        let rewire_fraction = self.session.config().train.rewire_fraction;
         let mut swapped = Vec::new();
         let mut any = false;
-        for l in 0..self.net.layers() {
-            if self.net.layer(l).mask().is_none() {
+        let net = self.session.net_mut();
+        for l in 0..net.layers() {
+            if net.layer(l).mask().is_none() {
                 continue;
             }
             any = true;
-            let old_mask = self.net.layer(l).mask().unwrap().clone();
-            let new_mask = crate::sparse::rewire::magnitude_rewire(
-                self.net.layer(l),
-                self.cfg.train.rewire_fraction,
-                rng,
-            );
+            let old_mask = net.layer(l).mask().unwrap().clone();
+            let new_mask =
+                crate::sparse::rewire::magnitude_rewire(net.layer(l), rewire_fraction, rng);
             // flat indices of swapped recurrent params (either direction),
             // offset into the concatenated parameter space
-            let n = self.net.layer(l).n();
-            let poff = self.net.layout().param_offset(l);
-            let layout = self.net.layer(l).layout().clone();
-            for &b in &self.net.layer(l).recurrent_blocks() {
+            let n = net.layer(l).n();
+            let poff = net.layout().param_offset(l);
+            let layout = net.layer(l).layout().clone();
+            for &b in &net.layer(l).recurrent_blocks() {
                 for r in 0..n {
                     for c in 0..n {
                         if old_mask.is_kept(r, c) != new_mask.is_kept(r, c) {
@@ -180,30 +146,31 @@ impl Trainer {
             }
             // grow at ~10% of the fresh-init scale so new connections start small
             let grow = 0.1 * (6.0 / (2 * n) as f32).sqrt() / new_mask.density().sqrt();
-            self.net.layer_mut(l).set_mask(new_mask, grow, rng);
+            net.layer_mut(l).set_mask(new_mask, grow, rng);
         }
         if !any {
             return;
         }
-        self.opt_cell.reset_indices(&swapped);
-        self.engine =
-            build::build_engine(self.cfg.train.algorithm, &self.net, self.readout.n_out());
+        self.session.optimizer_cell_mut().reset_indices(&swapped);
+        self.session.rebuild_engine();
     }
 
     /// Forward-only accuracy over (a subsample of) a dataset.
     pub fn evaluate(&self, data: &Dataset, max_sequences: usize) -> f32 {
-        let mut scratch = self.net.scratch();
-        let mut logits = vec![0.0; self.readout.n_out()];
+        let net = self.session.net();
+        let readout = self.session.readout();
+        let mut scratch = net.scratch();
+        let mut logits = vec![0.0; readout.n_out()];
         let mut discard = OpCounter::new();
         let take = data.len().min(max_sequences.max(1));
         let mut correct = 0usize;
         let mut total = 0usize;
         for seq in data.seqs.iter().take(take) {
-            let mut a_prev = vec![0.0; self.net.total_units()];
+            let mut a_prev = vec![0.0; net.total_units()];
             for (t, x) in seq.inputs.iter().enumerate() {
-                self.net.forward(&a_prev, x, &mut scratch, &mut discard);
+                net.forward(&a_prev, x, &mut scratch, &mut discard);
                 if let crate::data::StepTarget::Class(c) = &seq.targets[t] {
-                    self.readout.forward(&scratch.top().a, &mut logits, &mut discard);
+                    readout.forward(&scratch.top().a, &mut logits, &mut discard);
                     total += 1;
                     if Loss::predict(&logits) == *c {
                         correct += 1;
@@ -221,12 +188,16 @@ impl Trainer {
 
     /// Full training loop per the config. Returns curve + cost accounting.
     pub fn train(&mut self, train_data: &Dataset, val_data: &Dataset) -> TrainOutcome {
-        let iters = self.cfg.train.iterations;
-        let batch_size = self.cfg.train.batch_size;
-        let log_every = self.cfg.train.log_every.max(1);
-        let eval_every = self.cfg.train.eval_every;
-        let activity_sparse = self.cfg.model.cell.is_event_based();
-        let mut compute = ComputeAdjusted::new(self.cfg.omega_tilde(), activity_sparse);
+        let cfg = self.session.config();
+        let iters = cfg.train.iterations;
+        let batch_size = cfg.train.batch_size;
+        let log_every = cfg.train.log_every.max(1);
+        let eval_every = cfg.train.eval_every;
+        let eval_sequences = cfg.train.eval_sequences;
+        let rewire_every = cfg.train.rewire_every;
+        let seed = cfg.seed;
+        let activity_sparse = cfg.model.cell.is_event_based();
+        let mut compute = ComputeAdjusted::new(cfg.omega_tilde(), activity_sparse);
         let mut batches = crate::data::BatchIter::new(
             train_data.len(),
             batch_size,
@@ -236,7 +207,7 @@ impl Trainer {
         for it in 0..iters {
             let logging = it % log_every == 0 || it + 1 == iters;
             let mut stats = SparsityStats::new();
-            let ops_before = self.ops.clone();
+            let ops_before = self.session.ops.clone();
             let idx = batches.next_batch();
             let mut loss_sum = 0.0;
             let mut correct = 0usize;
@@ -249,22 +220,19 @@ impl Trainer {
                     correct += 1;
                 }
             }
-            self.apply_update(batch_size);
-            if self.cfg.train.rewire_every > 0
-                && it > 0
-                && it % self.cfg.train.rewire_every == 0
-            {
-                let mut rng = Pcg64::new(self.cfg.seed ^ (0x5e71_4e00 + it));
+            self.session.apply_update(1.0 / batch_size as f32);
+            if rewire_every > 0 && it > 0 && it % rewire_every == 0 {
+                let mut rng = Pcg64::new(seed ^ (0x5e71_4e00 + it));
                 self.rewire(&mut rng);
             }
             let ca = compute.record_iteration(stats.beta_tilde());
             if logging {
                 let val_acc = if eval_every > 0 && (it % eval_every == 0 || it + 1 == iters) {
-                    Some(self.evaluate(val_data, self.cfg.train.eval_sequences))
+                    Some(self.evaluate(val_data, eval_sequences))
                 } else {
                     None
                 };
-                let d = self.ops.since(&ops_before);
+                let d = self.session.ops.since(&ops_before);
                 curve.push(CurvePoint {
                     iteration: it,
                     compute_adjusted: ca,
@@ -281,9 +249,9 @@ impl Trainer {
         let final_val = self.evaluate(val_data, usize::MAX);
         TrainOutcome {
             curve,
-            ops: self.ops.clone(),
+            ops: self.session.ops.clone(),
             final_val_accuracy: final_val,
-            state_memory_words: self.engine.state_memory_words(),
+            state_memory_words: self.session.state_memory_words(),
         }
     }
 }
@@ -377,5 +345,49 @@ mod tests {
         let l1 = out.ops.macs_in_layer(1, Phase::InfluenceUpdate);
         assert!(l0 > 0 && l1 > 0);
         assert_eq!(l0 + l1, out.ops.macs_in(Phase::InfluenceUpdate));
+    }
+
+    /// Behavior preservation of the session refactor: the trainer and a
+    /// hand-driven manual-policy session produce bit-identical weights after
+    /// the same minibatch schedule.
+    #[test]
+    fn trainer_is_a_thin_session_client() {
+        let cfg = tiny_cfg();
+        let mut data_rng = Trainer::data_rng(cfg.seed);
+        let (train, val) = build_dataset(&cfg, &mut data_rng);
+        // replicate two iterations by hand through the session API
+        let mut session = crate::session::SessionBuilder::from_config(cfg.clone())
+            .policy(crate::session::UpdatePolicy::Manual)
+            .build();
+        let mut root = Pcg64::new(cfg.seed);
+        let _ = root.split();
+        let _ = root.split();
+        let _ = root.split();
+        let mut batch_rng = root.split();
+        let mut batches =
+            crate::data::BatchIter::new(train.len(), cfg.train.batch_size, batch_rng.next_u64());
+        let mut tr_cfg = cfg.clone();
+        tr_cfg.train.iterations = 2;
+        tr_cfg.train.eval_every = 0;
+        let mut tr2 = Trainer::new(tr_cfg);
+        let _ = tr2.train(&train, &val);
+        for _ in 0..2 {
+            let idx = batches.next_batch();
+            for &si in idx.iter() {
+                let seq = &train.seqs[si];
+                session.set_measure_influence(false);
+                session.begin_sequence();
+                for (t, x) in seq.inputs.iter().enumerate() {
+                    session.step(x, seq.targets[t].as_target());
+                }
+                session.end_sequence();
+            }
+            session.apply_update(1.0 / cfg.train.batch_size as f32);
+        }
+        let mut via_trainer = vec![0.0; tr2.net().p()];
+        let mut via_session = vec![0.0; session.net().p()];
+        tr2.net().copy_params_into(&mut via_trainer);
+        session.net().copy_params_into(&mut via_session);
+        assert_eq!(via_trainer, via_session, "trainer diverged from the session path");
     }
 }

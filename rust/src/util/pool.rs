@@ -1,17 +1,103 @@
-//! Scoped worker pool for the sweep coordinator.
+//! Scoped worker pool for the sweep coordinator, the bench grid and the
+//! session pool.
 //!
 //! A fixed number of OS threads drain a shared job queue; results are
 //! collected in submission order. In-tree because the build environment
-//! vendors no async runtime — and the sweep's unit of work (a whole training
-//! run) is seconds long, so OS threads are the right granularity anyway.
+//! vendors no async runtime — and the unit of work (a whole training run,
+//! or one session step) is long enough that OS threads are the right
+//! granularity anyway.
+//!
+//! **Failure containment:** a failing job never kills its siblings. Worker
+//! threads catch per-job panics and park them; every queued job still runs,
+//! and only then is the first failure surfaced — as the job's own error for
+//! [`try_run_parallel`], or by re-raising the first panic payload for
+//! [`run_parallel`]. This is what lets one poisoned session in a
+//! [`crate::session::SessionPool`] fail alone while the other users' work
+//! completes.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
 /// Run `jobs` across at most `workers` threads; returns outputs in the same
 /// order as the inputs. `f` must be `Sync` (it is shared), jobs are consumed
-/// exactly once.
+/// exactly once. A panicking job does not abort its siblings: every job
+/// runs, then the first panic (by job index) is re-raised on the caller.
 pub fn run_parallel<I, O, F>(jobs: Vec<I>, workers: usize, f: F) -> Vec<O>
+where
+    I: Send,
+    O: Send,
+    F: Fn(usize, I) -> O + Sync,
+{
+    let results = run_caught(jobs, workers, &f);
+    let mut out = Vec::with_capacity(results.len());
+    let mut first_panic: Option<PanicPayload> = None;
+    for r in results {
+        match r {
+            Ok(o) => out.push(o),
+            Err(payload) => {
+                if first_panic.is_none() {
+                    first_panic = Some(payload);
+                }
+            }
+        }
+    }
+    if let Some(p) = first_panic {
+        resume_unwind(p);
+    }
+    out
+}
+
+/// Fallible variant: jobs return `Result<O, E>`. Every job runs to
+/// completion regardless of sibling failures; on any failure the error of
+/// the lowest-indexed failed job is returned together with its index
+/// (successful siblings' outputs are dropped — jobs must be idempotent or
+/// externally checkpointed if partial results matter). Panicking jobs are
+/// contained the same way and re-raised only after every sibling finished.
+pub fn try_run_parallel<I, O, E, F>(
+    jobs: Vec<I>,
+    workers: usize,
+    f: F,
+) -> Result<Vec<O>, (usize, E)>
+where
+    I: Send,
+    O: Send,
+    E: Send,
+    F: Fn(usize, I) -> Result<O, E> + Sync,
+{
+    let results = run_caught(jobs, workers, &f);
+    let mut out = Vec::with_capacity(results.len());
+    let mut first_err: Option<(usize, E)> = None;
+    let mut first_panic: Option<PanicPayload> = None;
+    for (i, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(Ok(o)) => out.push(o),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some((i, e));
+                }
+            }
+            Err(payload) => {
+                if first_panic.is_none() {
+                    first_panic = Some(payload);
+                }
+            }
+        }
+    }
+    if let Some(p) = first_panic {
+        resume_unwind(p);
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
+/// Shared core: drain the queue, catching each job's panic individually so
+/// one failure cannot poison the pool.
+fn run_caught<I, O, F>(jobs: Vec<I>, workers: usize, f: &F) -> Vec<Result<O, PanicPayload>>
 where
     I: Send,
     O: Send,
@@ -21,7 +107,8 @@ where
     let n = jobs.len();
     let queue: Mutex<Vec<Option<I>>> = Mutex::new(jobs.into_iter().map(Some).collect());
     let cursor = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<O>>> = Mutex::new((0..n).map(|_| None).collect());
+    let results: Mutex<Vec<Option<Result<O, PanicPayload>>>> =
+        Mutex::new((0..n).map(|_| None).collect());
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
@@ -30,7 +117,7 @@ where
                     break;
                 }
                 let job = queue.lock().expect("queue lock")[i].take().expect("job taken once");
-                let out = f(i, job);
+                let out = catch_unwind(AssertUnwindSafe(|| f(i, job)));
                 results.lock().expect("results lock")[i] = Some(out);
             });
         }
@@ -100,8 +187,8 @@ mod tests {
         assert_eq!(out, (0..24).map(|x| x * 10).collect::<Vec<_>>());
     }
 
-    /// A panicking job must fail the whole call (scoped threads propagate),
-    /// not silently drop its slot.
+    /// A panicking job must still fail the whole `run_parallel` call (the
+    /// caller sees the panic) — but only after every sibling ran.
     #[test]
     #[should_panic]
     fn propagates_worker_panics() {
@@ -111,6 +198,70 @@ mod tests {
             }
             x
         });
+    }
+
+    /// The containment satellite: one failing job must not kill or skip its
+    /// siblings — all jobs run, and the caller receives the failed job's
+    /// error (index + payload), not a poisoned pool.
+    #[test]
+    fn failing_job_does_not_kill_siblings() {
+        use std::sync::atomic::AtomicUsize;
+        static COMPLETED: AtomicUsize = AtomicUsize::new(0);
+        let jobs: Vec<usize> = (0..8).collect();
+        let r: Result<Vec<usize>, (usize, String)> = try_run_parallel(jobs, 4, |_, x| {
+            COMPLETED.fetch_add(1, Ordering::SeqCst);
+            if x == 3 {
+                Err(format!("job {x} exploded"))
+            } else {
+                Ok(x * 10)
+            }
+        });
+        assert_eq!(COMPLETED.load(Ordering::SeqCst), 8, "a sibling was skipped");
+        let (idx, msg) = r.unwrap_err();
+        assert_eq!(idx, 3);
+        assert!(msg.contains("exploded"));
+    }
+
+    /// Same containment under a *panicking* job: siblings all complete
+    /// before the panic is re-raised on the caller.
+    #[test]
+    fn panicking_job_lets_siblings_finish() {
+        use std::sync::atomic::AtomicUsize;
+        static COMPLETED: AtomicUsize = AtomicUsize::new(0);
+        let jobs: Vec<usize> = (0..6).collect();
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            run_parallel(jobs, 3, |_, x| {
+                if x == 1 {
+                    panic!("bad job");
+                }
+                COMPLETED.fetch_add(1, Ordering::SeqCst);
+                x
+            })
+        }));
+        assert!(caught.is_err(), "panic must still reach the caller");
+        assert_eq!(COMPLETED.load(Ordering::SeqCst), 5, "siblings died with the bad job");
+    }
+
+    #[test]
+    fn try_run_parallel_all_ok() {
+        let out: Result<Vec<i32>, (usize, String)> =
+            try_run_parallel(vec![1, 2, 3], 2, |i, x| Ok(x + i as i32));
+        assert_eq!(out.unwrap(), vec![1, 3, 5]);
+    }
+
+    /// With several failures, the lowest job index wins (deterministic
+    /// regardless of scheduling).
+    #[test]
+    fn first_error_by_index_is_reported() {
+        let jobs: Vec<usize> = (0..10).collect();
+        let r: Result<Vec<usize>, (usize, usize)> = try_run_parallel(jobs, 4, |_, x| {
+            if x % 3 == 2 {
+                Err(x)
+            } else {
+                Ok(x)
+            }
+        });
+        assert_eq!(r.unwrap_err(), (2, 2));
     }
 
     #[test]

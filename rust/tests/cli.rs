@@ -1,0 +1,201 @@
+//! CLI-level tests against the real binary (`CARGO_BIN_EXE_sparse-rtrl`):
+//! unknown-option errors list the valid choices from the engine registry,
+//! and the `stream` subcommand runs a session from an event file —
+//! including a checkpoint/resume round-trip across *separate processes*,
+//! which must reproduce the uninterrupted run bit-for-bit.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_sparse-rtrl"))
+}
+
+fn run(args: &[&str]) -> Output {
+    bin().args(args).output().expect("binary runs")
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// Fresh per-test scratch dir (no tempdir crate in-tree).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "sparse-rtrl-cli-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+#[test]
+fn unknown_subcommand_lists_valid_ones() {
+    let out = run(&["frobnicate"]);
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr_of(&out);
+    assert!(err.contains("unknown subcommand"), "{err}");
+    for cmd in ["stream", "train", "sweep", "bench", "report"] {
+        assert!(err.contains(cmd), "subcommand list missing {cmd}: {err}");
+    }
+}
+
+#[test]
+fn unknown_algorithm_lists_engine_registry() {
+    let out = run(&["train", "--algorithm", "nope", "--iterations", "1"]);
+    assert!(!out.status.success());
+    let err = stderr_of(&out);
+    assert!(err.contains("unknown algorithm"), "{err}");
+    // the list comes from AlgorithmKind::all() — the same source build_engine
+    // dispatches on, so every engine must appear
+    for name in ["rtrl-dense", "rtrl-activity", "rtrl-param", "rtrl-both", "snap1", "snap2", "uoro", "bptt"]
+    {
+        assert!(err.contains(name), "algorithm list missing {name}: {err}");
+    }
+}
+
+#[test]
+fn stream_unknown_policy_is_rejected() {
+    let out = run(&["stream", "--policy", "sometimes", "--input", "-"]);
+    assert!(!out.status.success());
+    let err = stderr_of(&out);
+    assert!(err.contains("unknown policy"), "{err}");
+    assert!(err.contains("every-k"), "{err}");
+}
+
+/// Event lines (2-input session): a mix of unsupervised and supervised
+/// steps. Deterministic content so runs are reproducible.
+fn event_lines(range: std::ops::Range<usize>) -> String {
+    let mut s = String::new();
+    for i in range {
+        let a = ((i as f32) * 0.37).sin();
+        let b = ((i as f32) * 0.23).cos();
+        if i % 3 == 2 {
+            s.push_str(&format!("{a} {b} -> {}\n", i % 2));
+        } else {
+            s.push_str(&format!("{a} {b}\n"));
+        }
+    }
+    s
+}
+
+#[test]
+fn stream_emits_predictions_from_an_event_file() {
+    let dir = scratch("smoke");
+    let events = dir.join("events.txt");
+    std::fs::write(&events, format!("# smoke stream\n{}", event_lines(0..9))).unwrap();
+    let out = run(&["stream", "--input", events.to_str().unwrap(), "--seed", "3"]);
+    assert!(out.status.success(), "stream failed: {}", stderr_of(&out));
+    let stdout = stdout_of(&out);
+    let pred_lines = stdout.lines().filter(|l| l.contains("pred=")).count();
+    assert_eq!(pred_lines, 9, "one prediction per step expected:\n{stdout}");
+    assert!(stdout.contains("loss="), "{stdout}");
+    assert!(stderr_of(&out).contains("stream done"), "{}", stderr_of(&out));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stream_reads_stdin_dash() {
+    use std::io::Write as _;
+    let mut child = bin()
+        .args(["stream", "--input", "-", "--seed", "5"])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn");
+    child
+        .stdin
+        .as_mut()
+        .unwrap()
+        .write_all(event_lines(0..4).as_bytes())
+        .unwrap();
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    assert!(stdout_of(&out).contains("pred="));
+}
+
+/// The process-boundary acceptance test: run a 24-event stream in one
+/// process, then the same stream split across two processes with a
+/// checkpoint in between. The resumed process must emit byte-identical
+/// step/pred/loss lines for the second half.
+#[test]
+fn stream_checkpoint_resume_across_processes_is_exact() {
+    let dir = scratch("resume");
+    let all = dir.join("all.txt");
+    let head = dir.join("head.txt");
+    let tail = dir.join("tail.txt");
+    let ck = dir.join("ck.json");
+    std::fs::write(&all, event_lines(0..24)).unwrap();
+    std::fs::write(&head, event_lines(0..12)).unwrap();
+    std::fs::write(&tail, event_lines(12..24)).unwrap();
+
+    let full = run(&["stream", "--input", all.to_str().unwrap(), "--seed", "9"]);
+    assert!(full.status.success(), "{}", stderr_of(&full));
+    let full_lines: Vec<String> = stdout_of(&full).lines().map(str::to_string).collect();
+    assert_eq!(full_lines.len(), 24);
+
+    let first = run(&[
+        "stream",
+        "--input",
+        head.to_str().unwrap(),
+        "--seed",
+        "9",
+        "--checkpoint",
+        ck.to_str().unwrap(),
+    ]);
+    assert!(first.status.success(), "{}", stderr_of(&first));
+    assert!(ck.exists(), "checkpoint file not written");
+
+    let second = run(&[
+        "stream",
+        "--input",
+        tail.to_str().unwrap(),
+        "--resume",
+        ck.to_str().unwrap(),
+    ]);
+    assert!(second.status.success(), "{}", stderr_of(&second));
+    assert!(stderr_of(&second).contains("resumed session at step 12"), "{}", stderr_of(&second));
+    let resumed_lines: Vec<String> = stdout_of(&second).lines().map(str::to_string).collect();
+    assert_eq!(
+        resumed_lines,
+        &full_lines[12..],
+        "resumed process diverged from the uninterrupted run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--resume` plus a config-shaping flag is contradictory and must fail.
+#[test]
+fn stream_resume_rejects_config_flags() {
+    let dir = scratch("resume-flags");
+    let ck = dir.join("ck.json");
+    let head = dir.join("head.txt");
+    std::fs::write(&head, event_lines(0..3)).unwrap();
+    let first = run(&[
+        "stream",
+        "--input",
+        head.to_str().unwrap(),
+        "--checkpoint",
+        ck.to_str().unwrap(),
+    ]);
+    assert!(first.status.success(), "{}", stderr_of(&first));
+    let out = run(&[
+        "stream",
+        "--resume",
+        ck.to_str().unwrap(),
+        "--hidden",
+        "32",
+        "--input",
+        head.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    assert!(stderr_of(&out).contains("--resume"), "{}", stderr_of(&out));
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -117,7 +117,7 @@ fn rewiring_learns_and_preserves_density() {
     let out = tr.train(&train, &val);
     assert!(out.final_val_accuracy > 0.7, "rewired run accuracy {}", out.final_val_accuracy);
     // density preserved through all rewirings
-    let cell = tr.net.layer(0);
+    let cell = tr.net().layer(0);
     let mask = cell.mask().expect("still masked");
     assert!((mask.density() - 0.2).abs() < 0.01, "density drifted: {}", mask.density());
     // masked entries exactly zero

@@ -220,6 +220,102 @@ fn uoro_matches_dense_in_expectation() {
     assert!(cos > 0.7, "E[UORO] should align with dense RTRL: cos={cos:.3}");
 }
 
+/// **Snapshot exactness** — the save/load half of the contract: for every
+/// engine, saving mid-sequence and restoring into a *freshly built* engine
+/// must produce gradients **bit-identical** to the uninterrupted run. The
+/// check runs on a 2-layer masked stack (the hardest configuration) and
+/// includes the stochastic engine (UORO snapshots its noise-RNG position)
+/// and BPTT (snapshots its stored tape).
+#[test]
+fn snapshot_mid_sequence_is_bit_exact_for_every_engine() {
+    let mut rng = Pcg64::new(37);
+    let mask0 = MaskPattern::random(6, 6, 0.5, &mut rng);
+    let l0 = RnnCell::egru(6, 2, 0.05, 0.3, 0.5, Some(mask0), &mut rng);
+    let mask1 = MaskPattern::random(4, 4, 0.5, &mut rng);
+    let l1 = RnnCell::egru(4, 6, 0.05, 0.3, 0.5, Some(mask1), &mut rng);
+    let net = LayerStack::new(vec![l0, l1]);
+    let (inputs, targets) = sequence(net.n_in(), 9, 123);
+    let cut = 5usize;
+    for kind in AlgorithmKind::all() {
+        // uninterrupted reference run
+        let mut r1 = Pcg64::new(3);
+        let mut readout1 = Readout::new(2, net.top_n(), &mut r1);
+        let mut loss1 = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops1 = OpCounter::new();
+        let mut full = build_engine(kind, &net, 2);
+        full.begin_sequence();
+        let mut full_losses = Vec::new();
+        for (t, x) in inputs.iter().enumerate() {
+            let r = full.step(&net, &mut readout1, &mut loss1, x, targets[t], &mut ops1);
+            full_losses.push(r.loss.map(f32::to_bits));
+        }
+        full.end_sequence(&net, &mut readout1, &mut ops1);
+
+        // interrupted run: save at `cut`, restore into a fresh engine
+        let mut r2 = Pcg64::new(3);
+        let mut readout2 = Readout::new(2, net.top_n(), &mut r2);
+        let mut loss2 = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops2 = OpCounter::new();
+        let mut first = build_engine(kind, &net, 2);
+        first.begin_sequence();
+        for (t, x) in inputs.iter().take(cut).enumerate() {
+            first.step(&net, &mut readout2, &mut loss2, x, targets[t], &mut ops2);
+        }
+        assert_eq!(first.activations().len(), net.total_units(), "{}", kind.name());
+        let snapshot = first.save_state();
+        drop(first);
+        let mut second = build_engine(kind, &net, 2);
+        second
+            .load_state(&net, &snapshot)
+            .unwrap_or_else(|e| panic!("{}: load_state failed: {e}", kind.name()));
+        let mut resumed_losses: Vec<Option<u32>> = full_losses[..cut].to_vec();
+        for (t, x) in inputs.iter().enumerate().skip(cut) {
+            let r = second.step(&net, &mut readout2, &mut loss2, x, targets[t], &mut ops2);
+            resumed_losses.push(r.loss.map(f32::to_bits));
+        }
+        second.end_sequence(&net, &mut readout2, &mut ops2);
+
+        assert_eq!(
+            full.grads(),
+            second.grads(),
+            "{}: resumed gradients are not bit-identical",
+            kind.name()
+        );
+        assert_eq!(
+            full_losses,
+            resumed_losses,
+            "{}: resumed losses are not bit-identical",
+            kind.name()
+        );
+        assert_eq!(
+            full.activations(),
+            second.activations(),
+            "{}: resumed activations diverged",
+            kind.name()
+        );
+    }
+}
+
+/// Snapshot headers are enforced: a snapshot from one engine cannot restore
+/// into another, and a tampered version is rejected.
+#[test]
+fn snapshot_header_mismatches_are_rejected() {
+    let mut rng = Pcg64::new(38);
+    let net = LayerStack::single(RnnCell::egru(5, 2, 0.05, 0.3, 0.5, None, &mut rng));
+    let donor = build_engine(AlgorithmKind::RtrlDense, &net, 2);
+    let snapshot = donor.save_state();
+    let mut other = build_engine(AlgorithmKind::Snap1, &net, 2);
+    assert!(other.load_state(&net, &snapshot).is_err(), "cross-engine restore must fail");
+    let mut tampered = snapshot.clone();
+    tampered.version += 1;
+    let mut same = build_engine(AlgorithmKind::RtrlDense, &net, 2);
+    assert!(same.load_state(&net, &tampered).is_err(), "version bump must fail");
+    // a differently-sized engine rejects the buffers
+    let small = LayerStack::single(RnnCell::egru(3, 2, 0.05, 0.3, 0.5, None, &mut rng));
+    let mut wrong_size = build_engine(AlgorithmKind::RtrlDense, &small, 2);
+    assert!(wrong_size.load_state(&small, &snapshot).is_err(), "size mismatch must fail");
+}
+
 /// Contract invariants every engine must satisfy, checked uniformly
 /// through the trait: stable name, `R^p` gradient buffer, finite values,
 /// `reset_grads` clearing, measured state memory.
