@@ -6,18 +6,23 @@
 //! requirement. The parser exists so the serialize→parse round-trip is
 //! testable in-tree and so downstream perf-trajectory tooling has a
 //! reference for dispatching on [`SCHEMA_VERSION`]: v1 reports (single-cell
-//! era) carry no `layers` axis or per-layer counters; v2 reports do.
+//! era) carry no `layers` axis or per-layer counters; v2 adds depth; v3
+//! adds the intra-step `threads` axis and throughput fields.
 
 use super::{phase_name, BenchReport, CaseResult};
 use std::collections::BTreeMap;
 
 /// Schema identifier CI consumers can dispatch on.
-pub const SCHEMA: &str = "sparse-rtrl/bench/v2";
+pub const SCHEMA: &str = "sparse-rtrl/bench/v3";
 /// Monotone schema revision: bump on any breaking field change.
 /// * 1 — single-cell grid (engine × hidden × ω).
 /// * 2 — depth axis: `layers`, `macs_per_step_per_layer`,
 ///   `words_per_step_per_layer` per case; `schema_version` at the top.
-pub const SCHEMA_VERSION: u64 = 2;
+/// * 3 — intra-step threads axis (`threads` at the top and per case) and
+///   throughput fields (`seqs_per_sec` per case, alongside the existing
+///   `steps_per_sec`). Op counts are thread-invariant by contract; CI
+///   diffs a `--threads 1` vs `--threads 2` run on every PR.
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// Escape a string for a JSON string literal (without the quotes).
 pub fn escape(s: &str) -> String {
@@ -72,7 +77,8 @@ fn case_json(r: &CaseResult, indent: &str) -> String {
     format!(
         "{indent}{{\"engine\": \"{}\", \"hidden\": {}, \"layers\": {}, \"param_sparsity\": {}, \
          \"omega_tilde\": {}, \"p\": {}, \"timesteps\": {}, \"sequences\": {}, \
-         \"wall_ns\": {}, \"ns_per_step\": {}, \"steps_per_sec\": {}, \
+         \"threads\": {}, \
+         \"wall_ns\": {}, \"ns_per_step\": {}, \"steps_per_sec\": {}, \"seqs_per_sec\": {}, \
          \"macs_per_step_total\": {}, \"macs_per_step\": {{{}}}, \
          \"macs_per_step_per_layer\": {}, \"words_per_step_per_layer\": {}, \
          \"words_per_step_total\": {}, \"state_memory_words\": {}, \
@@ -85,9 +91,11 @@ fn case_json(r: &CaseResult, indent: &str) -> String {
         r.p,
         r.timesteps,
         r.sequences,
+        r.threads,
         r.wall_ns,
         number(r.ns_per_step),
         number(r.steps_per_sec),
+        number(r.seqs_per_sec),
         r.macs_per_step_total,
         phases,
         u64_array(&r.macs_per_step_per_layer),
@@ -111,6 +119,7 @@ impl BenchReport {
         s.push_str(&format!("  \"timesteps\": {},\n", self.timesteps));
         s.push_str(&format!("  \"sequences\": {},\n", self.sequences));
         s.push_str(&format!("  \"workers\": {},\n", self.workers));
+        s.push_str(&format!("  \"threads\": {},\n", self.threads));
         s.push_str(&format!("  \"created_unix\": {},\n", self.created_unix));
         s.push_str("  \"results\": [\n");
         for (i, r) in self.results.iter().enumerate() {
@@ -344,6 +353,7 @@ mod tests {
             warmup_sequences: 0,
             theta: 0.1,
             workers: 1,
+            threads: 1,
             quick: true,
         };
         run(&cfg, false)
@@ -374,10 +384,11 @@ mod tests {
         assert!(parse("{} trailing").is_err());
     }
 
-    /// Serialize → parse round-trip: every load-bearing field of the v2
-    /// schema survives, the depth axis is present, and the version is
-    /// detectable — this is the contract downstream perf tooling relies on
-    /// to tell v2 reports from v1 files instead of misreading them.
+    /// Serialize → parse round-trip: every load-bearing field of the v3
+    /// schema survives — the depth axis, the threads axis, the throughput
+    /// fields — and the version is detectable. This is the contract
+    /// downstream perf tooling relies on to tell v3 reports from older
+    /// files instead of misreading them.
     #[test]
     fn report_round_trips_through_parser() {
         let report = tiny_report();
@@ -385,12 +396,16 @@ mod tests {
         assert_eq!(doc.get("schema").unwrap().as_str(), Some(SCHEMA));
         assert_eq!(schema_version_of(&doc), SCHEMA_VERSION);
         assert_eq!(doc.get("timesteps").unwrap().as_u64(), Some(report.timesteps as u64));
+        assert_eq!(doc.get("threads").unwrap().as_u64(), Some(report.threads as u64));
         let results = doc.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), report.results.len());
         for (parsed, orig) in results.iter().zip(&report.results) {
             assert_eq!(parsed.get("engine").unwrap().as_str(), Some(orig.engine));
             assert_eq!(parsed.get("hidden").unwrap().as_u64(), Some(orig.hidden as u64));
             assert_eq!(parsed.get("layers").unwrap().as_u64(), Some(orig.layers as u64));
+            assert_eq!(parsed.get("threads").unwrap().as_u64(), Some(orig.threads as u64));
+            let sps = parsed.get("seqs_per_sec").unwrap().as_f64().unwrap();
+            assert!((sps - orig.seqs_per_sec).abs() < 1e-6 * (1.0 + sps.abs()));
             assert_eq!(
                 parsed.get("macs_per_step_total").unwrap().as_u64(),
                 Some(orig.macs_per_step_total)
@@ -454,7 +469,10 @@ mod tests {
             "\"results\"",
             "\"engine\"",
             "\"layers\"",
+            "\"threads\"",
             "\"ns_per_step\"",
+            "\"steps_per_sec\"",
+            "\"seqs_per_sec\"",
             "\"macs_per_step\"",
             "\"macs_per_step_per_layer\"",
             "\"influence_update\"",

@@ -42,8 +42,13 @@ pub struct BenchConfig {
     pub warmup_sequences: usize,
     /// EGRU threshold ϑ (controls activity sparsity of the bench cell).
     pub theta: f32,
-    /// Worker threads (0 = available parallelism; 1 = exclusive timing).
+    /// Worker threads for the *case grid* fan-out (0 = available
+    /// parallelism; 1 = exclusive timing).
     pub workers: usize,
+    /// Worker threads for the *intra-step* kernels of each measured engine
+    /// (0 = available parallelism; 1 = serial, the default). Op counts are
+    /// identical at any value — CI diffs 1 vs 2 to prove it.
+    pub threads: usize,
     /// Whether this is the reduced CI grid.
     pub quick: bool,
 }
@@ -61,6 +66,7 @@ impl BenchConfig {
             warmup_sequences: 3,
             theta: 0.1,
             workers: 1,
+            threads: 1,
             quick: false,
         }
     }
@@ -98,6 +104,7 @@ impl BenchConfig {
                             sequences: self.sequences.max(1),
                             warmup_sequences: self.warmup_sequences,
                             theta: self.theta,
+                            threads: self.threads,
                             seed: cases.len() as u64,
                         });
                     }
@@ -120,6 +127,8 @@ pub struct BenchCase {
     pub sequences: usize,
     pub warmup_sequences: usize,
     pub theta: f32,
+    /// Intra-step kernel threads handed to the engine under measurement.
+    pub threads: usize,
     /// Deterministic per-case RNG stream id.
     pub seed: u64,
 }
@@ -137,10 +146,15 @@ pub struct CaseResult {
     pub p: usize,
     pub timesteps: usize,
     pub sequences: usize,
+    /// Intra-step kernel threads the engine ran with.
+    pub threads: usize,
     /// Total timed wall-clock nanoseconds.
     pub wall_ns: u64,
     pub ns_per_step: f64,
+    /// Timed throughput, steps per second (`1e9 / ns_per_step`).
     pub steps_per_sec: f64,
+    /// Timed throughput, whole sequences per second.
+    pub seqs_per_sec: f64,
     /// Per-phase MACs per step, indexed like [`Phase::all`].
     pub macs_per_step: [u64; crate::metrics::ops::NUM_PHASES],
     pub macs_per_step_total: u64,
@@ -164,6 +178,8 @@ pub struct BenchReport {
     pub timesteps: usize,
     pub sequences: usize,
     pub workers: usize,
+    /// Intra-step kernel threads of the measured engines.
+    pub threads: usize,
     /// Seconds since the Unix epoch at report creation.
     pub created_unix: u64,
     pub results: Vec<CaseResult>,
@@ -198,10 +214,7 @@ impl BenchReport {
 /// completed case to stderr.
 pub fn run(cfg: &BenchConfig, progress: bool) -> BenchReport {
     let cases = cfg.expand();
-    let workers = match cfg.workers {
-        0 => pool::available_workers(),
-        w => w,
-    };
+    let workers = pool::resolve_workers(cfg.workers);
     let total = cases.len();
     let done = std::sync::atomic::AtomicUsize::new(0);
     let results = pool::run_parallel(cases, workers, |_, case| {
@@ -220,6 +233,7 @@ pub fn run(cfg: &BenchConfig, progress: bool) -> BenchReport {
         timesteps: cfg.timesteps,
         sequences: cfg.sequences,
         workers,
+        threads: cfg.threads,
         created_unix: std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs())
@@ -248,6 +262,7 @@ mod tests {
             warmup_sequences: 1,
             theta: 0.1,
             workers: 2,
+            threads: 1,
             quick: true,
         }
     }

@@ -40,6 +40,7 @@ pub fn run_case(case: &BenchCase) -> CaseResult {
     let mut readout = Readout::new(BENCH_N_OUT, net.top_n(), &mut rng);
     let mut loss = Loss::new(LossKind::CrossEntropy, BENCH_N_OUT);
     let mut engine = build_engine(case.engine, &net, BENCH_N_OUT);
+    engine.set_threads(case.threads);
 
     // Fixed input stream; one class target at the end of each sequence so
     // the gradient-combine phase is exercised like real training.
@@ -90,9 +91,11 @@ pub fn run_case(case: &BenchCase) -> CaseResult {
         p: net.p(),
         timesteps: case.timesteps,
         sequences: case.sequences,
+        threads: case.threads,
         wall_ns,
         ns_per_step,
         steps_per_sec: if ns_per_step > 0.0 { 1e9 / ns_per_step } else { 0.0 },
+        seqs_per_sec: if wall_ns > 0 { case.sequences as f64 * 1e9 / wall_ns as f64 } else { 0.0 },
         macs_per_step,
         macs_per_step_total: delta.total_macs() / steps,
         words_per_step_total: delta.total_words() / steps,
@@ -119,7 +122,33 @@ mod tests {
             sequences: 2,
             warmup_sequences: 1,
             theta: 0.1,
+            threads: 1,
             seed: 7,
+        }
+    }
+
+    /// The threads knob changes wall-clock only: per-phase and per-layer op
+    /// counts are identical between a serial and a 2-worker run. At this
+    /// tiny size the panels sit below the engine's parallel threshold, so
+    /// this pins the *grid plumbing*; the threaded row update itself is
+    /// exercised above-threshold by `tests/jacobian_slab.rs` and by the CI
+    /// arm's `--hidden 64` invariance bench.
+    #[test]
+    fn intra_step_threads_do_not_change_op_counts() {
+        for kind in [AlgorithmKind::RtrlBoth, AlgorithmKind::RtrlActivity] {
+            let serial = run_case(&case(kind, 0.5));
+            let mut c2 = case(kind, 0.5);
+            c2.threads = 2;
+            let threaded = run_case(&c2);
+            assert_eq!(serial.macs_per_step, threaded.macs_per_step, "{kind:?}");
+            assert_eq!(
+                serial.macs_per_step_per_layer, threaded.macs_per_step_per_layer,
+                "{kind:?}"
+            );
+            assert_eq!(serial.words_per_step_total, threaded.words_per_step_total);
+            assert_eq!(serial.state_memory_words, threaded.state_memory_words);
+            assert_eq!(serial.alpha_tilde.to_bits(), threaded.alpha_tilde.to_bits());
+            assert_eq!(serial.beta_tilde.to_bits(), threaded.beta_tilde.to_bits());
         }
     }
 

@@ -140,11 +140,7 @@ pub fn run_one(spec: &RunSpec) -> RunRecord {
 /// Run the full sweep on a bounded in-tree thread pool.
 pub fn run_sweep(plan: &SweepPlan, progress: bool) -> SweepResult {
     let specs = plan.expand();
-    let workers = if plan.max_workers > 0 {
-        plan.max_workers
-    } else {
-        pool::available_workers()
-    };
+    let workers = pool::resolve_workers(plan.max_workers);
     let total = specs.len();
     let done = std::sync::atomic::AtomicUsize::new(0);
     let runs = pool::run_parallel(specs, workers, |_, spec| {

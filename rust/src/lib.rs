@@ -88,13 +88,25 @@
 //! engine plugs into every task, sweep arm and perf report by implementing
 //! it and registering in [`train::build::build_engine`].
 //!
+//! ## The kernels layer
+//!
+//! All engines realize their recursions through [`rtrl::kernels`]: a
+//! per-step, per-layer [`rtrl::JacobianSlab`] (the one-step Jacobian,
+//! materialized once over the engine's exact evaluation set) plus fused
+//! row kernels with bulk op charging. The exact sparse engine's influence
+//! update additionally fans out across panel rows on the worker pool
+//! (`set_threads` / the CLI `--threads` flag) with **bit-identical**
+//! results at any thread count — gradients and op counters alike.
+//!
 //! ## The `bench` subsystem
 //!
 //! `sparse-rtrl bench` sweeps engine × hidden size × parameter sparsity
-//! over the in-tree worker pool, measures wall-time next to the op
-//! counters, and emits machine-readable `BENCH_rtrl.json` — the artifact CI
-//! records on every PR as the repo's performance trajectory
-//! (`--quick` is the CI smoke grid).
+//! over the in-tree worker pool, measures wall-time and throughput next to
+//! the op counters, and emits machine-readable `BENCH_rtrl.json`
+//! (schema v3: depth + threads axes) — the artifact CI records on every PR
+//! as the repo's performance trajectory (`--quick` is the CI smoke grid;
+//! a dedicated arm fails the build if op counts differ between
+//! `--threads 1` and `--threads 2`).
 
 pub mod bench;
 pub mod config;

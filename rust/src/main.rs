@@ -22,20 +22,23 @@ USAGE:
                      [--hidden N] [--param-sparsity W] [--seed S] [--lr R]
                      [--policy every-k|sequence|manual] [--update-every K]
                      [--input events.txt|-] [--checkpoint out.json]
-                     [--resume ck.json] [--quiet]
+                     [--resume ck.json] [--threads 1] [--quiet]
   sparse-rtrl train  [--config cfg.toml] [--param-sparsity W] [--iterations N]
                      [--seed S] [--algorithm NAME] [--cell NAME] [--layers L]
-                     [--out results/train_curve.csv]
+                     [--threads 1] [--out results/train_curve.csv]
   sparse-rtrl sweep  [--config cfg.toml] [--seeds 5] [--iterations N]
                      [--sequences N] [--workers 0] [--algorithm NAME]
                      [--layers 1,2,..] [--out-dir results]
   sparse-rtrl bench  [--quick] [--engines a,b,..] [--hidden 16,32,..]
                      [--layers 1,2,..] [--sparsity 0.0,0.8,..]
-                     [--timesteps 17] [--sequences 30]
-                     [--warmup 3] [--workers 1] [--out BENCH_rtrl.json]
+                     [--timesteps 17] [--sequences 30] [--warmup 3]
+                     [--workers 1] [--threads 1] [--out BENCH_rtrl.json]
   sparse-rtrl report <table1|fig1|fig2> [--n 16] [--layers 1] [--omega 0.8]
   sparse-rtrl artifacts [--dir artifacts]
   sparse-rtrl config-dump            # print the default config TOML
+
+--threads N sets the worker count for the intra-step RTRL kernels
+(0 = available parallelism); results are bit-identical at any value.
 ";
 
 /// Subcommand list for unknown-command errors (kept in sync with `main`).
@@ -127,6 +130,9 @@ fn cmd_stream(mut args: Args) -> Result<()> {
     let input = args.get("input").unwrap_or_else(|| "-".into());
     let checkpoint_out = args.get("checkpoint");
     let quiet = args.get_bool("quiet").map_err(err)?;
+    // Runtime knob, deliberately allowed alongside --resume: thread count
+    // is not session state (results are bit-identical at any value).
+    let threads: usize = args.get_parse("threads", 1).map_err(err)?;
     args.finish().map_err(err)?;
 
     let reader: Box<dyn BufRead> = if input == "-" {
@@ -137,6 +143,7 @@ fn cmd_stream(mut args: Args) -> Result<()> {
         ))
     };
     let mut session = session;
+    session.set_threads(threads);
     let stdout = std::io::stdout();
     let mut out = std::io::BufWriter::new(stdout.lock());
     for (lineno, line) in reader.lines().enumerate() {
@@ -213,6 +220,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
     if cfg.model.layers == 0 {
         bail!("--layers must be ≥ 1");
     }
+    let threads: usize = args.get_parse("threads", 1).map_err(err)?;
     let out: PathBuf = args.get("out").unwrap_or_else(|| "results/train_curve.csv".into()).into();
     args.finish().map_err(err)?;
 
@@ -227,6 +235,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
     let mut data_rng = Trainer::data_rng(cfg.seed);
     let (train, val) = build_dataset(&cfg, &mut data_rng);
     let mut trainer = Trainer::new(cfg);
+    trainer.set_threads(threads);
     let outcome = trainer.train(&train, &val);
     println!(
         "final val accuracy: {:.4}\ntotal MACs: {}\nstate memory (words): {}",
@@ -313,6 +322,7 @@ fn cmd_bench(mut args: Args) -> Result<()> {
     cfg.sequences = args.get_parse("sequences", cfg.sequences).map_err(err)?;
     cfg.warmup_sequences = args.get_parse("warmup", cfg.warmup_sequences).map_err(err)?;
     cfg.workers = args.get_parse("workers", cfg.workers).map_err(err)?;
+    cfg.threads = args.get_parse("threads", cfg.threads).map_err(err)?;
     let out: PathBuf = args.get("out").unwrap_or_else(|| "BENCH_rtrl.json".into()).into();
     args.finish().map_err(err)?;
     if cfg.engines.is_empty()

@@ -553,6 +553,59 @@ impl RnnCell {
         }
     }
 
+    /// Fill `out[i] = ∂v_k/∂a_{cols[i]}` — one row of the step-Jacobian
+    /// slab ([`crate::rtrl::kernels::JacobianSlab`]). Identical arithmetic
+    /// to per-entry [`Self::dv_da`] calls (bit-exact), but the dynamics
+    /// dispatch and the gated `g_u/g_z` loads happen once per row instead
+    /// of once per entry — the fused form the slab build runs.
+    pub fn fill_dv_da_cols(&self, s: &CellScratch, k: usize, cols: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(cols.len(), out.len());
+        let n = self.n;
+        match self.dynamics {
+            Dynamics::Linear => {
+                let v = self.layout.block(&self.w, linear_blocks::V);
+                let row = &v[k * n..(k + 1) * n];
+                for (o, &c) in out.iter_mut().zip(cols) {
+                    *o = row[c as usize];
+                }
+            }
+            Dynamics::Gated => {
+                let vu = self.layout.block(&self.w, gated_blocks::VU);
+                let vz = self.layout.block(&self.w, gated_blocks::VZ);
+                let (ru, rz) = (&vu[k * n..(k + 1) * n], &vz[k * n..(k + 1) * n]);
+                let (gu, gz) = (s.gu[k], s.gz[k]);
+                for (o, &c) in out.iter_mut().zip(cols) {
+                    *o = gu * ru[c as usize] + gz * rz[c as usize];
+                }
+            }
+        }
+    }
+
+    /// Fill `out[i] = ∂v_k/∂x_{cols[i]}` — one cross-layer row of the step
+    /// Jacobian slab. Bit-exact with per-entry [`Self::dv_dx`] calls.
+    pub fn fill_dv_dx_cols(&self, s: &CellScratch, k: usize, cols: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(cols.len(), out.len());
+        let n_in = self.n_in;
+        match self.dynamics {
+            Dynamics::Linear => {
+                let w = self.layout.block(&self.w, linear_blocks::W);
+                let row = &w[k * n_in..(k + 1) * n_in];
+                for (o, &c) in out.iter_mut().zip(cols) {
+                    *o = row[c as usize];
+                }
+            }
+            Dynamics::Gated => {
+                let wu = self.layout.block(&self.w, gated_blocks::WU);
+                let wz = self.layout.block(&self.w, gated_blocks::WZ);
+                let (ru, rz) = (&wu[k * n_in..(k + 1) * n_in], &wz[k * n_in..(k + 1) * n_in]);
+                let (gu, gz) = (s.gu[k], s.gz[k]);
+                for (o, &c) in out.iter_mut().zip(cols) {
+                    *o = gu * ru[c as usize] + gz * rz[c as usize];
+                }
+            }
+        }
+    }
+
     /// Structural fan-in parameter indices of unit `k`: every flat parameter
     /// that can ever appear in row `k` of `M̄` (input weights, kept recurrent
     /// weights, biases), sorted ascending. This is SnAp-1's influence pattern
@@ -602,8 +655,25 @@ impl RnnCell {
         a_prev: &[f32],
         x: &[f32],
         k: usize,
-        mut f: impl FnMut(usize, f32),
+        f: impl FnMut(usize, f32),
         ops: &mut OpCounter,
+    ) -> u64 {
+        let emitted = self.immediate_row_visit(s, a_prev, x, k, f);
+        ops.macs(Phase::Immediate, emitted);
+        emitted
+    }
+
+    /// [`Self::immediate_row`] without op charging — the form the parallel
+    /// panel kernel calls from worker threads, where the shared
+    /// [`OpCounter`] is unreachable: each row job returns its emitted count
+    /// and the engine charges `Phase::Immediate` in bulk after the join.
+    pub fn immediate_row_visit(
+        &self,
+        s: &CellScratch,
+        a_prev: &[f32],
+        x: &[f32],
+        k: usize,
+        mut f: impl FnMut(usize, f32),
     ) -> u64 {
         let mut emitted = 0u64;
         match self.dynamics {
@@ -654,7 +724,6 @@ impl RnnCell {
                 emitted += 2;
             }
         }
-        ops.macs(Phase::Immediate, emitted);
         emitted
     }
 }

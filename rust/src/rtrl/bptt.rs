@@ -17,6 +17,7 @@
 //! observation; the *memory* still grows with `T`, which is the axis the
 //! paper contrasts.
 
+use super::kernels::{self, CrossSelect, JacobianSlab, OwnSelect, RowSelect};
 use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
@@ -42,6 +43,11 @@ pub struct Bptt {
     logits: Vec<f32>,
     dlogits: Vec<f32>,
     c_bar: Vec<f32>,
+    /// Per-(frame, layer) step-Jacobian slab, rebuilt from stored scratch
+    /// during the reverse pass (scratch, not part of the tape).
+    slab: JacobianSlab,
+    /// Rows with nonzero adjoint `δv` at the current frame/layer.
+    rows_buf: Vec<u32>,
     /// Peak stored frames (memory reporting).
     peak_frames: usize,
     n_total: usize,
@@ -59,6 +65,8 @@ impl Bptt {
             logits: vec![0.0; readout_n_out],
             dlogits: vec![0.0; readout_n_out],
             c_bar: vec![0.0; net.top_n()],
+            slab: JacobianSlab::new(),
+            rows_buf: Vec::new(),
             peak_frames: 0,
             n_total,
             n_in: net.n_in(),
@@ -157,43 +165,57 @@ impl GradientEngine for Bptt {
                     dv[soff + k] = sl.dphi[k] * da[soff + k];
                 }
                 bptt_macs += nl as u64;
+                // Step-Jacobian slab for this (frame, layer): only the rows
+                // whose adjoint is nonzero — the exact evaluation set of the
+                // per-scalar path. Eval + scatter are charged together at
+                // the historical (1 + cost) per-entry rate below.
+                self.rows_buf.clear();
+                for k in 0..nl {
+                    if dv[soff + k] != 0.0 {
+                        self.rows_buf.push(k as u32);
+                    }
+                }
+                let cross_sel = if l > 0 { CrossSelect::All } else { CrossSelect::Skip };
+                self.slab.build(
+                    cell,
+                    sl,
+                    RowSelect::Rows(&self.rows_buf),
+                    OwnSelect::Kept,
+                    cross_sel,
+                );
                 // grads += M̄_lᵀ dv_l (structural nonzeros only)
                 let input_l: &[f32] =
                     if l == 0 { &frame.x } else { &frame.scratch.layers[l - 1].a };
                 let a_prev_l = &frame.a_prev[soff..soff + nl];
                 let poff = net.layout().param_offset(l);
-                for k in 0..nl {
-                    if dv[soff + k] == 0.0 {
-                        continue;
-                    }
-                    let dvk = dv[soff + k];
+                for &k in &self.rows_buf {
+                    let dvk = dv[soff + k as usize];
                     let grads = &mut self.grads;
                     cell.immediate_row(
                         sl,
                         a_prev_l,
                         input_l,
-                        k,
+                        k as usize,
                         |pi, val| grads[poff + pi] += dvk * val,
                         ops,
                     );
                 }
-                // own recurrence: carry_l = J_lᵀ dv_l (reaches step t−1)
-                for k in 0..nl {
-                    if dv[soff + k] == 0.0 {
-                        continue;
-                    }
-                    let dvk = dv[soff + k];
-                    for &c in cell.kept_cols(k) {
-                        carry[soff + c as usize] += dvk * cell.dv_da(sl, k, c as usize);
-                        bptt_macs += 1 + cell.dv_da_cost();
-                    }
-                    // cross-layer: δa_{l-1} += C_lᵀ dv_l (same step, dense)
+                // own recurrence: carry_l = J_lᵀ dv_l (reaches step t−1),
+                // a sparse adjoint scatter over the slab row; then the
+                // cross-layer push δa_{l-1} += C_lᵀ dv_l (same step, dense)
+                for &k in &self.rows_buf {
+                    let dvk = dv[soff + k as usize];
+                    let (jcols, jvals) = self.slab.own_row(k as usize);
+                    kernels::scatter_axpy(&mut carry[soff..soff + nl], dvk, jcols, jvals);
+                    bptt_macs += jcols.len() as u64 * (1 + cell.dv_da_cost());
                     if l > 0 {
                         let soff_prev = net.layout().state_offset(l - 1);
                         let nprev = net.layer(l - 1).n();
-                        for j in 0..nprev {
-                            da[soff_prev + j] += dvk * cell.dv_dx(sl, k, j);
-                        }
+                        kernels::axpy(
+                            &mut da[soff_prev..soff_prev + nprev],
+                            dvk,
+                            self.slab.cross_row(k as usize),
+                        );
                         bptt_macs += nprev as u64 * (1 + cell.dv_dx_cost());
                     }
                 }

@@ -15,6 +15,7 @@
 //! exact recursion of the layered network, so the structurally-zero upper
 //! blocks hold zeros in the materialized `N×P` matrix too.
 
+use super::kernels::{self, CrossSelect, JacobianSlab, OwnSelect, RowSelect};
 use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
@@ -30,7 +31,9 @@ pub struct DenseRtrl {
     m_next: Matrix,
     scratch: StackScratch,
     a_prev: Vec<f32>,
-    jrow: Vec<f32>,
+    /// Per-step dense Jacobian slab (all rows × all columns — the baseline
+    /// pays for the structural zeros; that is the comparison Table 1 draws).
+    slab: JacobianSlab,
     grads: Vec<f32>,
     logits: Vec<f32>,
     dlogits: Vec<f32>,
@@ -41,13 +44,12 @@ pub struct DenseRtrl {
 impl DenseRtrl {
     pub fn new(net: &LayerStack, readout_n_out: usize) -> Self {
         let (n, p) = (net.total_units(), net.p());
-        let max_width = (0..net.layers()).map(|l| net.layer(l).n()).max().unwrap_or(0);
         DenseRtrl {
             m_cur: Matrix::zeros(n, p),
             m_next: Matrix::zeros(n, p),
             scratch: net.scratch(),
             a_prev: vec![0.0; n],
-            jrow: vec![0.0; max_width],
+            slab: JacobianSlab::new(),
             grads: vec![0.0; p],
             logits: vec![0.0; readout_n_out],
             dlogits: vec![0.0; readout_n_out],
@@ -93,7 +95,11 @@ impl GradientEngine for DenseRtrl {
         let active_units = self.scratch.active_units();
         let deriv_units = self.scratch.deriv_units();
 
-        // M_next = blockwise J·M + C·M_next_lower + M̄, no value skipping.
+        // M_next = blockwise J·M + C·M_next_lower + M̄, no value skipping:
+        // the slab is built dense (all rows × all columns, masked entries
+        // included) and every coefficient — zero or not — is streamed
+        // through the full-width axpy, exactly the cost Table 1's dense
+        // row charges.
         for l in 0..net.layers() {
             ops.set_layer(l);
             let cell = net.layer(l);
@@ -105,42 +111,33 @@ impl GradientEngine for DenseRtrl {
             let soff_prev = if l > 0 { net.layout().state_offset(l - 1) } else { 0 };
             let a_prev_l = &self.a_prev[soff..soff + nl];
             let input_l: &[f32] = if l == 0 { x } else { &self.scratch.layers[l - 1].a };
+            let cross_sel = if l > 0 { CrossSelect::All } else { CrossSelect::Skip };
+            let counts = self.slab.build(cell, sl, RowSelect::All, OwnSelect::Dense, cross_sel);
+            ops.macs(
+                Phase::Jacobian,
+                counts.own_entries * cell.dv_da_cost() + counts.cross_entries * cell.dv_dx_cost(),
+            );
             // Split the next panel at this layer's first row so the lower
             // layer's already-written rows stay readable while we write.
             let (next_lower, next_upper) = self.m_next.split_at_row_mut(soff);
             for k in 0..nl {
-                let dphi_k = sl.dphi[k];
-                // full own-layer Jacobian row
-                for c in 0..nl {
-                    self.jrow[c] = cell.dv_da(sl, k, c);
-                }
-                ops.macs(Phase::Jacobian, nl as u64 * cell.dv_da_cost());
                 let row = &mut next_upper[k * p..(k + 1) * p];
                 row.iter_mut().for_each(|r| *r = 0.0);
-                for c in 0..nl {
-                    let jv = self.jrow[c];
-                    let src = self.m_cur.row(soff + c);
-                    for (r, s) in row.iter_mut().zip(src) {
-                        *r += jv * s;
-                    }
+                // full own-layer Jacobian row from the slab
+                let (cols, vals) = self.slab.own_row(k);
+                for (&c, &jv) in cols.iter().zip(vals) {
+                    kernels::axpy(row, jv, self.m_cur.row(soff + c as usize));
                 }
                 // cross-layer block: lower layer's new rows, full width
                 if l > 0 {
-                    ops.macs(Phase::Jacobian, nprev as u64 * cell.dv_dx_cost());
-                    for j in 0..nprev {
-                        let cv = cell.dv_dx(sl, k, j);
+                    for (j, &cv) in self.slab.cross_row(k).iter().enumerate() {
                         let src = &next_lower[(soff_prev + j) * p..(soff_prev + j + 1) * p];
-                        for (r, s) in row.iter_mut().zip(src) {
-                            *r += cv * s;
-                        }
+                        kernels::axpy(row, cv, src);
                     }
                 }
                 cell.immediate_row(sl, a_prev_l, input_l, k, |pi, val| row[poff + pi] += val, ops);
-                // flush-to-zero at the row gate (see SparseRtrl::step §Perf)
-                for r in row.iter_mut() {
-                    let v = *r * dphi_k;
-                    *r = if v.abs() < 1e-30 { 0.0 } else { v };
-                }
+                // flush-to-zero at the row gate (see kernels::FLUSH_EPS)
+                kernels::scale_flush(row, sl.dphi[k]);
                 ops.macs(Phase::InfluenceUpdate, ((nl + nprev) * p + p) as u64);
             }
             ops.words(

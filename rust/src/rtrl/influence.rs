@@ -80,72 +80,28 @@ impl InfluenceBuffers {
         self.next.row_mut(k)
     }
 
+    /// Mark row `k` active in the next panel *without* borrowing its
+    /// buffer. The parallel panel update claims all rows first (serially,
+    /// in ascending order, so the active set is identical to the serial
+    /// path's), then splits the panel into disjoint `&mut` row slices via
+    /// [`Self::split_cur_next`].
+    #[inline]
+    pub fn mark_next_active(&mut self, k: usize) {
+        self.active_next.insert(k);
+    }
+
+    /// Disjoint borrow of `(current panel read-only, next panel writable)`
+    /// — the borrow shape of the intra-step row update: every row job reads
+    /// the shared previous panel and writes its own next-panel row.
+    #[inline]
+    pub fn split_cur_next(&mut self) -> (&Matrix, &mut Matrix) {
+        (&self.cur, &mut self.next)
+    }
+
     /// Read access to a just-written next-panel row (gradient accumulation).
     #[inline]
     pub fn next_row(&self, k: usize) -> &[f32] {
         self.next.row(k)
-    }
-
-    /// The influence recursion for one row (paper Eq. 10, inner bracket):
-    /// claims row `k` of the next panel and fills it with
-    /// `Σ_l jlist[l] · M_cur[l, :]`. The caller then adds `M̄` entries and
-    /// scales by `φ'(v_k)`. Returns the row for that post-processing.
-    ///
-    /// `jlist` entries must reference rows in `active_cur` — inactive rows
-    /// are logically zero and must already have been filtered out.
-    /// §Perf notes: the first contribution *writes* the row (no separate
-    /// zeroing pass), and entries are consumed in pairs so each pass over
-    /// the row does two fused multiply-adds per element — halving row
-    /// write/read traffic and roughly doubling ILP on the measured hot loop.
-    pub fn gather_into_next(&mut self, k: usize, jlist: &[(u32, f32)]) -> &mut [f32] {
-        self.active_next.insert(k);
-        let row = self.next.row_mut(k);
-        if jlist.is_empty() {
-            row.iter_mut().for_each(|x| *x = 0.0);
-            return row;
-        }
-        // first pair initializes the row
-        let (l0, j0) = jlist[0];
-        debug_assert!(self.active_cur.contains(l0 as usize));
-        let s0 = self.cur.row(l0 as usize);
-        let mut idx = 1;
-        if jlist.len() >= 2 {
-            let (l1, j1) = jlist[1];
-            let s1 = self.cur.row(l1 as usize);
-            let len = row.len();
-            let (s0, s1) = (&s0[..len], &s1[..len]);
-            for i in 0..len {
-                row[i] = j0 * s0[i] + j1 * s1[i];
-            }
-            idx = 2;
-        } else {
-            for (r, s) in row.iter_mut().zip(s0) {
-                *r = j0 * s;
-            }
-        }
-        // remaining pairs accumulate
-        while idx + 1 < jlist.len() {
-            let (la, ja) = jlist[idx];
-            let (lb, jb) = jlist[idx + 1];
-            debug_assert!(self.active_cur.contains(la as usize));
-            debug_assert!(self.active_cur.contains(lb as usize));
-            let sa = self.cur.row(la as usize);
-            let sb = self.cur.row(lb as usize);
-            let len = row.len();
-            let (sa, sb) = (&sa[..len], &sb[..len]);
-            for i in 0..len {
-                row[i] += ja * sa[i] + jb * sb[i];
-            }
-            idx += 2;
-        }
-        if idx < jlist.len() {
-            let (l, jv) = jlist[idx];
-            let src = self.cur.row(l as usize);
-            for (r, s) in row.iter_mut().zip(src) {
-                *r += jv * s;
-            }
-        }
-        row
     }
 
     /// Next panel's active rows.

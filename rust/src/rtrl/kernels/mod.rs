@@ -1,0 +1,100 @@
+//! Shared step-Jacobian slabs and fused row kernels — the single hot-path
+//! layer every gradient engine drives.
+//!
+//! Before this layer existed, each engine re-derived the one-step Jacobian
+//! entry-by-entry through per-scalar `cell.dv_da`/`cell.dv_dx` callbacks
+//! inside its innermost loop, interleaving op accounting with arithmetic.
+//! Now a [`JacobianSlab`] is built **once per step per layer** — CSR over
+//! the engine-selected rows × columns, reusing the cell's `kept_cols`
+//! pattern and the engines' active sets — and the engines compose their
+//! updates from a handful of fused row kernels ([`rowops`]): the Eq.-10
+//! panel gather, cross-layer axpy, the `φ'` gate with flush-to-zero,
+//! adjoint scatters and slab·vector dots. Op charging is bulk per kernel
+//! call, derived from slice lengths and [`SlabCounts`].
+//!
+//! # Intra-step parallelism
+//!
+//! The exact-RTRL influence update writes disjoint memory per panel row
+//! (row `k` of `M^{(t)}` depends only on the *previous* panel, the lower
+//! layer's finished panel and row `k`'s immediate term), so
+//! [`for_each_row_parallel`] fans rows out over the in-tree worker pool.
+//! Because every kernel fixes its floating-point association order and a
+//! row's inputs are immutable during the update, a multi-threaded step is
+//! **bit-identical** to the single-threaded one — pinned by
+//! `rust/tests/jacobian_slab.rs` over a full training run.
+
+pub mod rowops;
+pub mod slab;
+
+pub use rowops::{
+    axpy, dot_dense_acc, dot_sparse_acc, fused_gather, scale_flush, scatter_axpy, FLUSH_EPS,
+};
+pub use slab::{CrossSelect, JacobianSlab, OwnSelect, RowSelect, SlabCounts};
+
+use crate::util::pool;
+
+/// Run one job per panel row, on `threads` workers when `threads > 1`
+/// (a plain in-order map otherwise). Jobs must write disjoint memory —
+/// the caller passes each row's `&mut` slice *into* its job, so the
+/// borrow checker enforces disjointness. Results return in job order;
+/// per-row op statistics are summed by the caller after the join, which
+/// keeps charged counts independent of scheduling.
+///
+/// Cost note: the pool spawns *scoped* threads per call (no persistent
+/// workers in-tree), so one invocation costs tens of microseconds before
+/// any row runs. Callers on a per-step path must gate on the amount of
+/// row work — see `SparseRtrl`'s panel-size threshold — and hot serial
+/// callers should iterate rows directly rather than build a job vector.
+pub fn for_each_row_parallel<T, R, F>(jobs: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if threads > 1 && jobs.len() > 1 {
+        pool::run_parallel(jobs, threads, |_, job| f(job))
+    } else {
+        jobs.into_iter().map(f).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_parallel_matches_serial_and_preserves_order() {
+        let rows: Vec<Vec<f32>> = (0..32).map(|r| vec![r as f32; 8]).collect();
+        let run = |threads: usize| {
+            let jobs: Vec<(usize, Vec<f32>)> = rows.iter().cloned().enumerate().collect();
+            for_each_row_parallel(jobs, threads, |(i, mut row)| {
+                for v in row.iter_mut() {
+                    *v = *v * 2.0 + i as f32;
+                }
+                row
+            })
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn disjoint_mut_rows_cross_thread() {
+        // The real usage pattern: chunk a buffer into disjoint &mut rows,
+        // move each into a job, mutate in place.
+        let mut buf = vec![0.0f32; 6 * 4];
+        {
+            let jobs: Vec<(usize, &mut [f32])> =
+                buf.chunks_mut(4).enumerate().collect();
+            let stats = for_each_row_parallel(jobs, 3, |(i, row)| {
+                for v in row.iter_mut() {
+                    *v = i as f32;
+                }
+                row.len() as u64
+            });
+            assert_eq!(stats.iter().sum::<u64>(), 24);
+        }
+        for (i, chunk) in buf.chunks(4).enumerate() {
+            assert!(chunk.iter().all(|&v| v == i as f32));
+        }
+    }
+}

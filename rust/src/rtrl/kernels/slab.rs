@@ -1,0 +1,373 @@
+//! [`JacobianSlab`] — the step Jacobian of one layer, materialized once per
+//! timestep as a sparse slab and consumed by every engine through shared
+//! row kernels.
+//!
+//! One step of layer `l` has two Jacobian blocks (see `nn::stack`):
+//!
+//! * **own-layer** `∂v_k/∂a_l` — structurally restricted to the kept
+//!   entries of the recurrent mask, stored CSR-style over the *built* rows
+//!   ([`RowSelect`]) × the *selected* columns ([`OwnSelect`]);
+//! * **cross-layer** `∂v_k/∂x_j` — structurally dense (input weights carry
+//!   no mask), stored as dense rows over a shared column list
+//!   ([`CrossSelect`], typically the lower layer's active rows).
+//!
+//! The selects mirror exactly the evaluation set each engine historically
+//! walked with per-scalar `cell.dv_da`/`cell.dv_dx` callbacks, so a
+//! slab-driven engine evaluates the same entries in the same order — the
+//! gradient *and* the op counts stay bit-identical to the per-scalar path
+//! (pinned by `rust/tests/jacobian_slab.rs`). What changes is the shape of
+//! the work: one branch dispatch and one `gu/gz` load per *row* instead of
+//! per *entry* (see [`crate::nn::RnnCell::fill_dv_da_cols`]), values
+//! reusable across every consumer within the step (UORO's backward
+//! substitution reuses the forward slab; the paper's Eq.-10 recursion reads
+//! each row once per panel gather).
+//!
+//! The slab does **not** charge the [`crate::metrics::OpCounter`] itself:
+//! [`JacobianSlab::build`] returns a [`SlabCounts`] and each engine charges
+//! its own cost model in bulk — the accounting contract of `rtrl::mod`
+//! predates the slab and must not drift with implementation details.
+//! Buffers are retained across steps (no per-step allocation in steady
+//! state), and the slab is scratch: it is rebuilt every step and never part
+//! of an engine's [`crate::rtrl::EngineState`] snapshot.
+
+use crate::nn::{CellScratch, RnnCell};
+use crate::sparse::RowSet;
+
+/// Sentinel for "row not built" in the reverse row map.
+const ABSENT: u32 = u32::MAX;
+
+/// Which rows of the layer's Jacobian are materialized.
+#[derive(Clone, Copy)]
+pub enum RowSelect<'a> {
+    /// Every row (the dense baseline, SnAp's unskipped sweep, and the
+    /// sparse engine without activity mode).
+    All,
+    /// Rows with `φ'(v_k) ≠ 0` — the `β̃n` nonzero rows of Eq. 10.
+    DerivActive,
+    /// An explicit row list (BPTT's reverse pass builds only the rows whose
+    /// adjoint `δv_k` is nonzero at this frame).
+    Rows(&'a [u32]),
+}
+
+/// Which own-layer columns are evaluated per built row.
+#[derive(Clone, Copy)]
+pub enum OwnSelect<'a> {
+    /// All `n` columns, masked entries included (the dense engine pays for
+    /// the structural zeros — that is the baseline the paper prices).
+    Dense,
+    /// The kept columns of the recurrent mask (structural `J` pattern).
+    Kept,
+    /// Kept columns whose source row is in the given active set — the
+    /// `β̃²` intersection of the exact sparse engine: a `J` entry is only
+    /// worth evaluating when the influence row it would multiply is
+    /// nonzero.
+    KeptActive(&'a RowSet),
+    /// Only the diagonal entry `(k, k)` — SnAp-1's structural need.
+    Diag,
+}
+
+/// Which cross-layer (input-path) columns are evaluated.
+#[derive(Clone, Copy)]
+pub enum CrossSelect<'a> {
+    /// No cross block (layer 0, or engines that route cross-layer credit
+    /// outside the influence recursion).
+    Skip,
+    /// All `n_in` columns.
+    All,
+    /// An explicit column list (the lower layer's rows active at `t` — the
+    /// only rows of its just-written panel that are nonzero).
+    Cols(&'a [usize]),
+}
+
+/// Entry counts of one [`JacobianSlab::build`], for bulk op charging at the
+/// call site (`own_entries × dv_da_cost`, `cross_entries × dv_dx_cost`).
+#[derive(Debug, Clone, Copy)]
+pub struct SlabCounts {
+    pub own_entries: u64,
+    pub cross_entries: u64,
+}
+
+/// One layer's step Jacobian, materialized (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct JacobianSlab {
+    /// Built row indices, in build order (ascending for `All`/`DerivActive`).
+    rows: Vec<u32>,
+    /// Unit index → position in `rows` (`ABSENT` if not built).
+    row_of: Vec<u32>,
+    /// CSR row pointers over `rows` (`len = rows.len() + 1`).
+    own_ptr: Vec<u32>,
+    own_cols: Vec<u32>,
+    own_vals: Vec<f32>,
+    /// Shared cross-block column list (lower-layer unit indices).
+    cross_cols: Vec<u32>,
+    /// Dense cross values, `rows.len() × cross_cols.len()` row-major.
+    cross_vals: Vec<f32>,
+}
+
+impl JacobianSlab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Materialize the slab for one `(cell, step scratch)` pair. Buffers are
+    /// reused; previous contents are discarded. Returns the entry counts for
+    /// bulk op charging.
+    pub fn build(
+        &mut self,
+        cell: &RnnCell,
+        sl: &CellScratch,
+        rows: RowSelect,
+        own: OwnSelect,
+        cross: CrossSelect,
+    ) -> SlabCounts {
+        let n = cell.n();
+        self.rows.clear();
+        self.row_of.clear();
+        self.row_of.resize(n, ABSENT);
+        match rows {
+            RowSelect::All => self.rows.extend(0..n as u32),
+            RowSelect::DerivActive => {
+                for k in 0..n {
+                    if sl.dphi[k] != 0.0 {
+                        self.rows.push(k as u32);
+                    }
+                }
+            }
+            RowSelect::Rows(list) => self.rows.extend_from_slice(list),
+        }
+        for (i, &k) in self.rows.iter().enumerate() {
+            debug_assert!((k as usize) < n, "slab row {k} out of range");
+            self.row_of[k as usize] = i as u32;
+        }
+
+        // Own-layer block: columns first, then one fused value fill per row.
+        self.own_ptr.clear();
+        self.own_cols.clear();
+        self.own_vals.clear();
+        self.own_ptr.push(0);
+        for &k in &self.rows {
+            let k = k as usize;
+            let start = self.own_cols.len();
+            match own {
+                OwnSelect::Dense => self.own_cols.extend(0..n as u32),
+                OwnSelect::Kept => self.own_cols.extend_from_slice(cell.kept_cols(k)),
+                OwnSelect::KeptActive(active) => {
+                    for &c in cell.kept_cols(k) {
+                        if active.contains(c as usize) {
+                            self.own_cols.push(c);
+                        }
+                    }
+                }
+                OwnSelect::Diag => self.own_cols.push(k as u32),
+            }
+            let end = self.own_cols.len();
+            self.own_vals.resize(end, 0.0);
+            cell.fill_dv_da_cols(sl, k, &self.own_cols[start..end], &mut self.own_vals[start..end]);
+            self.own_ptr.push(end as u32);
+        }
+
+        // Cross-layer block: shared column list, dense value rows.
+        self.cross_cols.clear();
+        self.cross_vals.clear();
+        match cross {
+            CrossSelect::Skip => {}
+            CrossSelect::All => self.cross_cols.extend(0..cell.n_in() as u32),
+            CrossSelect::Cols(js) => self.cross_cols.extend(js.iter().map(|&j| j as u32)),
+        }
+        let w = self.cross_cols.len();
+        if w > 0 {
+            self.cross_vals.resize(self.rows.len() * w, 0.0);
+            for (i, &k) in self.rows.iter().enumerate() {
+                cell.fill_dv_dx_cols(
+                    sl,
+                    k as usize,
+                    &self.cross_cols,
+                    &mut self.cross_vals[i * w..(i + 1) * w],
+                );
+            }
+        }
+        SlabCounts {
+            own_entries: self.own_vals.len() as u64,
+            cross_entries: self.cross_vals.len() as u64,
+        }
+    }
+
+    /// Built rows, in build order.
+    #[inline]
+    pub fn rows(&self) -> &[u32] {
+        &self.rows
+    }
+
+    /// Whether row `k` was built.
+    #[inline]
+    pub fn has_row(&self, k: usize) -> bool {
+        self.row_of.get(k).is_some_and(|&i| i != ABSENT)
+    }
+
+    /// Own-layer row `k`: `(column indices, values)`. Empty for unbuilt rows.
+    #[inline]
+    pub fn own_row(&self, k: usize) -> (&[u32], &[f32]) {
+        match self.row_of.get(k) {
+            Some(&i) if i != ABSENT => {
+                let (s, e) = (self.own_ptr[i as usize] as usize, self.own_ptr[i as usize + 1] as usize);
+                (&self.own_cols[s..e], &self.own_vals[s..e])
+            }
+            _ => (&[], &[]),
+        }
+    }
+
+    /// Diagonal entry `∂v_k/∂a_k` of a [`OwnSelect::Diag`] build (0.0 for
+    /// unbuilt rows — structurally consistent: an unbuilt row is zero).
+    #[inline]
+    pub fn diag(&self, k: usize) -> f32 {
+        let (cols, vals) = self.own_row(k);
+        debug_assert!(cols.len() <= 1, "diag() on a non-diagonal slab row");
+        vals.first().copied().unwrap_or(0.0)
+    }
+
+    /// The shared cross-block column list (lower-layer unit indices).
+    #[inline]
+    pub fn cross_cols(&self) -> &[u32] {
+        &self.cross_cols
+    }
+
+    /// Cross-layer values of row `k`, aligned with [`Self::cross_cols`].
+    /// Empty for unbuilt rows or a [`CrossSelect::Skip`] build.
+    #[inline]
+    pub fn cross_row(&self, k: usize) -> &[f32] {
+        let w = self.cross_cols.len();
+        if w == 0 {
+            return &[];
+        }
+        match self.row_of.get(k) {
+            Some(&i) if i != ABSENT => &self.cross_vals[i as usize * w..(i as usize + 1) * w],
+            _ => &[],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OpCounter;
+    use crate::sparse::MaskPattern;
+    use crate::util::Pcg64;
+
+    fn forward(cell: &RnnCell, seed: u64) -> CellScratch {
+        let mut rng = Pcg64::new(seed);
+        let a_prev: Vec<f32> = (0..cell.n()).map(|_| rng.normal().max(0.0)).collect();
+        let x: Vec<f32> = (0..cell.n_in()).map(|_| rng.normal()).collect();
+        let mut s = CellScratch::new(cell.n());
+        cell.forward(&a_prev, &x, &mut s, &mut OpCounter::new());
+        s
+    }
+
+    #[test]
+    fn dense_build_matches_direct_dv_da_and_dv_dx() {
+        let mut rng = Pcg64::new(1);
+        let cell = RnnCell::gated_tanh(6, 3, None, &mut rng);
+        let s = forward(&cell, 2);
+        let mut slab = JacobianSlab::new();
+        let counts = slab.build(&cell, &s, RowSelect::All, OwnSelect::Dense, CrossSelect::All);
+        assert_eq!(counts.own_entries, 36);
+        assert_eq!(counts.cross_entries, 18);
+        for k in 0..6 {
+            let (cols, vals) = slab.own_row(k);
+            assert_eq!(cols.len(), 6);
+            for (&c, &v) in cols.iter().zip(vals) {
+                assert_eq!(v.to_bits(), cell.dv_da(&s, k, c as usize).to_bits());
+            }
+            for (j, &v) in slab.cross_row(k).iter().enumerate() {
+                assert_eq!(v.to_bits(), cell.dv_dx(&s, k, j).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn kept_build_follows_mask_pattern() {
+        let mut rng = Pcg64::new(3);
+        let mask = MaskPattern::random(8, 8, 0.4, &mut rng);
+        let cell = RnnCell::egru(8, 2, 0.05, 0.3, 0.9, Some(mask), &mut rng);
+        let s = forward(&cell, 4);
+        let mut slab = JacobianSlab::new();
+        slab.build(&cell, &s, RowSelect::All, OwnSelect::Kept, CrossSelect::Skip);
+        for k in 0..8 {
+            let (cols, vals) = slab.own_row(k);
+            assert_eq!(cols, cell.kept_cols(k));
+            for (&c, &v) in cols.iter().zip(vals) {
+                assert_eq!(v.to_bits(), cell.dv_da(&s, k, c as usize).to_bits());
+            }
+            assert!(slab.cross_row(k).is_empty());
+        }
+    }
+
+    #[test]
+    fn deriv_active_rows_and_kept_active_cols_filter() {
+        let mut rng = Pcg64::new(5);
+        // n_in = 6 so the explicit cross-column list below stays in range
+        let cell = RnnCell::egru(10, 6, 0.1, 0.3, 0.4, None, &mut rng);
+        let s = forward(&cell, 6);
+        let active = RowSet::from_pred(10, |k| k % 3 == 0);
+        let mut slab = JacobianSlab::new();
+        slab.build(
+            &cell,
+            &s,
+            RowSelect::DerivActive,
+            OwnSelect::KeptActive(&active),
+            CrossSelect::Cols(&[1, 4]),
+        );
+        for k in 0..10 {
+            if s.dphi[k] == 0.0 {
+                assert!(!slab.has_row(k));
+                assert!(slab.own_row(k).0.is_empty());
+                assert!(slab.cross_row(k).is_empty());
+            } else {
+                assert!(slab.has_row(k));
+                let (cols, _) = slab.own_row(k);
+                assert!(cols.iter().all(|&c| active.contains(c as usize)));
+                assert_eq!(slab.cross_row(k).len(), 2);
+            }
+        }
+        assert_eq!(slab.cross_cols(), &[1, 4]);
+    }
+
+    #[test]
+    fn diag_build_has_one_entry_per_row() {
+        let mut rng = Pcg64::new(7);
+        let cell = RnnCell::vanilla(5, 2, None, &mut rng);
+        let s = forward(&cell, 8);
+        let mut slab = JacobianSlab::new();
+        let counts = slab.build(&cell, &s, RowSelect::All, OwnSelect::Diag, CrossSelect::Skip);
+        assert_eq!(counts.own_entries, 5);
+        for k in 0..5 {
+            assert_eq!(slab.diag(k).to_bits(), cell.dv_da(&s, k, k).to_bits());
+        }
+    }
+
+    #[test]
+    fn explicit_row_list_builds_exactly_those_rows() {
+        let mut rng = Pcg64::new(9);
+        let cell = RnnCell::vanilla(6, 2, None, &mut rng);
+        let s = forward(&cell, 10);
+        let mut slab = JacobianSlab::new();
+        slab.build(&cell, &s, RowSelect::Rows(&[1, 4]), OwnSelect::Kept, CrossSelect::All);
+        assert_eq!(slab.rows(), &[1, 4]);
+        assert!(slab.has_row(1) && slab.has_row(4) && !slab.has_row(0));
+        assert_eq!(slab.cross_row(4).len(), 2);
+        assert!(slab.cross_row(0).is_empty());
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_and_discards_old_contents() {
+        let mut rng = Pcg64::new(11);
+        let cell = RnnCell::vanilla(4, 2, None, &mut rng);
+        let s = forward(&cell, 12);
+        let mut slab = JacobianSlab::new();
+        slab.build(&cell, &s, RowSelect::All, OwnSelect::Dense, CrossSelect::All);
+        slab.build(&cell, &s, RowSelect::Rows(&[2]), OwnSelect::Diag, CrossSelect::Skip);
+        assert_eq!(slab.rows(), &[2]);
+        assert!(!slab.has_row(0));
+        assert!(slab.cross_cols().is_empty());
+        assert_eq!(slab.own_row(2).0, &[2]);
+    }
+}

@@ -41,6 +41,57 @@
 //! sparsity still drops columns — both exactly as in the single-layer
 //! derivation (paper §4–§5), block by block.
 //!
+//! # Step-Jacobian slabs and panel kernels
+//!
+//! Every engine realizes its recursion through the shared [`kernels`]
+//! layer. Once per step per layer, the cell materializes a
+//! [`kernels::JacobianSlab`]: the own-layer block `∂v/∂a` as CSR over the
+//! engine-selected rows × columns (deriv-active rows, `kept_cols` pattern,
+//! active-set intersections — whatever evaluation set the engine's cost
+//! model prescribes), plus the cross-layer block `∂v/∂x` as dense rows
+//! over the lower layer's active rows. The engines then compose their
+//! updates from fused row kernels — the Eq.-10 panel gather, cross-layer
+//! axpy, the `φ'` gate with flush-to-zero, adjoint scatters, slab·vector
+//! dots. This buys three things:
+//!
+//! * **No recomputation.** A gated cell's `∂v_k/∂a_l` costs two MACs and a
+//!   `g_u/g_z` load per evaluation; slab rows are filled with one dynamics
+//!   dispatch per *row* and the values are reused by every consumer within
+//!   the step (UORO's backward substitution reads the forward slab instead
+//!   of re-deriving every cross-layer entry).
+//! * **Bulk op accounting.** Charges are computed from slab entry counts
+//!   and kernel slice lengths — `count × per-entry cost` at the call site —
+//!   so the innermost loops carry no accounting at all. Each engine keeps
+//!   charging the *same counts in the same phases* as the historical
+//!   per-scalar path (its cost model is the paper's, not the
+//!   implementation's); `rust/tests/jacobian_slab.rs` pins this.
+//! * **Intra-step parallelism.** Panel rows write disjoint memory, so the
+//!   exact sparse engine fans the row update out over
+//!   [`crate::util::pool`] ([`GradientEngine::set_threads`]). The kernels
+//!   fix their float association order and every row's inputs are frozen
+//!   during the update, so multi-threaded and single-threaded steps are
+//!   **bit-identical** — same gradients, same op counts, pinned over a
+//!   full training run.
+//!
+//! # The cost model, per step and layer (Table 1, generalized)
+//!
+//! With panel width `pc_l = Σ_{m≤l} ω̃-compact columns`, the exact sparse
+//! engine charges per layer `l`:
+//!
+//! ```text
+//! Jacobian    β̃ωn²·c        slab build: deriv rows × (kept ∩ prev-active cols)
+//! Immediate   β̃ω̃n·fan-in    M̄ rows, event-driven (zero inputs skipped)
+//! Influence   β̃²n·(ω̃n+1)·pc  panel gathers + cross rows + φ' gate
+//! ```
+//!
+//! so the dominant term is `O(ω̃²β̃²n²p)` — the paper's §5 product — and
+//! the structurally-zero blocks (masked columns, inactive rows, deeper
+//! layers' columns in shallower panels) are never materialized *or*
+//! charged. The dense baseline charges the full `n(n+1)P` per layer pair;
+//! the bench subsystem records both, together with wall-clock, so the
+//! op-count model and the hardware reality stay comparable in
+//! `BENCH_rtrl.json` across history.
+//!
 //! # The `GradientEngine` contract
 //!
 //! Protocol per sequence: [`GradientEngine::begin_sequence`] →
@@ -62,14 +113,19 @@
 //! layers' parameter columns) must never be charged — the bench report
 //! exposes per-layer counters precisely so this is checkable.
 //! [`GradientEngine::state_memory_words`] must report the measured live
-//! state footprint (Table 1's memory column). The `bench` subsystem and the
-//! Table-1 report derive every per-engine cost figure from these counters,
-//! so an engine that under- or over-charges corrupts the paper comparison.
+//! state footprint (Table 1's memory column; Jacobian slabs are per-step
+//! scratch and are excluded). The `bench` subsystem and the Table-1 report
+//! derive every per-engine cost figure from these counters, so an engine
+//! that under- or over-charges corrupts the paper comparison. Charged
+//! counts must also be **independent of the worker-thread count** — CI
+//! diffs the per-phase counters between `--threads 1` and `--threads 2`
+//! smoke benches on every PR.
 
 pub mod bptt;
 pub mod column_map;
 pub mod dense;
 pub mod influence;
+pub mod kernels;
 pub mod snap;
 pub mod sparse;
 pub mod state;
@@ -79,6 +135,7 @@ pub use bptt::Bptt;
 pub use column_map::{ColumnMap, StackColumnMap};
 pub use dense::DenseRtrl;
 pub use influence::{InfluenceBuffers, StackedInfluence};
+pub use kernels::JacobianSlab;
 pub use snap::{Snap1, Snap2};
 pub use sparse::{SparseRtrl, SparsityMode};
 pub use state::{EngineState, StateError};
@@ -211,6 +268,14 @@ pub trait GradientEngine: Send {
     /// Enable/disable influence-sparsity measurement (costs a scan; trainers
     /// turn it on only for logging iterations). Default: ignored.
     fn set_measure_influence(&mut self, _on: bool) {}
+
+    /// Set the worker-thread count for intra-step kernels (`0` = available
+    /// hardware parallelism, the uniform `--threads` semantics). Engines
+    /// that parallelize ([`SparseRtrl`]'s panel-row update) must stay
+    /// **bit-identical** across thread counts — same gradients, same op
+    /// counts — because rows write disjoint memory and the row kernels fix
+    /// their float association order. Default: ignored (serial engines).
+    fn set_threads(&mut self, _threads: usize) {}
 
     /// Peak memory words this engine holds for sequence state (the
     /// Table-1 "memory" column): influence matrices for RTRL, stored history

@@ -29,6 +29,7 @@
 //! `rtrl::sparse` for the exact block treatment of depth). At depth 1 the
 //! decomposition degenerates to the original single-cell SnAp exactly.
 
+use super::kernels::{CrossSelect, JacobianSlab, OwnSelect, RowSelect};
 use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
@@ -180,6 +181,9 @@ pub struct Snap1 {
     inf: PatternInfluence,
     scratch: StackScratch,
     a_prev: Vec<f32>,
+    /// Per-step diagonal Jacobian slab (scratch; SnAp-1's structural need
+    /// is exactly the `(k, k)` entries).
+    slab: JacobianSlab,
     grads: Vec<f32>,
     logits: Vec<f32>,
     dlogits: Vec<f32>,
@@ -193,6 +197,7 @@ impl Snap1 {
             inf: PatternInfluence::new(layer_local_fan_in(net)),
             scratch: net.scratch(),
             a_prev: vec![0.0; net.total_units()],
+            slab: JacobianSlab::new(),
             grads: vec![0.0; net.p()],
             logits: vec![0.0; readout_n_out],
             dlogits: vec![0.0; readout_n_out],
@@ -239,12 +244,16 @@ impl GradientEngine for Snap1 {
             let poff = net.layout().param_offset(l);
             let a_prev_l = &self.a_prev[soff..soff + cell.n()];
             let input_l: &[f32] = if l == 0 { x } else { &self.scratch.layers[l - 1].a };
+            // Diagonal step-Jacobian slab — SnAp-1's whole structural need.
+            // Diagonal evaluations stay uncharged, matching the engine's
+            // historical cost model (the O(p) update is the charged term).
+            self.slab.build(cell, sl, RowSelect::All, OwnSelect::Diag, CrossSelect::Skip);
             let mut macs = 0u64;
             for kl in 0..cell.n() {
                 let k = soff + kl;
                 let dphi_k = sl.dphi[kl];
                 // Diagonal Jacobian element J_kk = φ'_k · ∂v_k/∂a_k.
-                let jkk = dphi_k * cell.dv_da(sl, kl, kl);
+                let jkk = dphi_k * self.slab.diag(kl);
                 let (cur, next) = (&self.inf.cur[k], &mut self.inf.next[k]);
                 for (nx, &cu) in next.iter_mut().zip(cur) {
                     *nx = jkk * cu;
@@ -332,6 +341,8 @@ pub struct Snap2 {
     inf: PatternInfluence,
     scratch: StackScratch,
     a_prev: Vec<f32>,
+    /// Per-step kept-pattern Jacobian slab (scratch).
+    slab: JacobianSlab,
     grads: Vec<f32>,
     logits: Vec<f32>,
     dlogits: Vec<f32>,
@@ -364,6 +375,7 @@ impl Snap2 {
             inf: PatternInfluence::new(pattern),
             scratch: net.scratch(),
             a_prev: vec![0.0; net.total_units()],
+            slab: JacobianSlab::new(),
             grads: vec![0.0; net.p()],
             logits: vec![0.0; readout_n_out],
             dlogits: vec![0.0; readout_n_out],
@@ -410,6 +422,10 @@ impl GradientEngine for Snap2 {
             let poff = net.layout().param_offset(l);
             let a_prev_l = &self.a_prev[soff..soff + cell.n()];
             let input_l: &[f32] = if l == 0 { x } else { &self.scratch.layers[l - 1].a };
+            // Step-Jacobian slab over the kept pattern, built once for the
+            // layer; evaluations are charged in bulk per row below, to the
+            // engine's historical phase (InfluenceUpdate).
+            self.slab.build(cell, sl, RowSelect::All, OwnSelect::Kept, CrossSelect::Skip);
             let mut macs = 0u64;
             for kl in 0..cell.n() {
                 let k = soff + kl;
@@ -421,9 +437,9 @@ impl GradientEngine for Snap2 {
                     let next = &mut self.inf.next[k];
                     next.iter_mut().for_each(|x| *x = 0.0);
                 }
-                for &c in cell.kept_cols(kl) {
-                    let jv = cell.dv_da(sl, kl, c as usize);
-                    macs += cell.dv_da_cost();
+                let (jcols, jvals) = self.slab.own_row(kl);
+                macs += jcols.len() as u64 * cell.dv_da_cost();
+                for (&c, &jv) in jcols.iter().zip(jvals) {
                     if jv == 0.0 {
                         continue;
                     }
@@ -433,6 +449,7 @@ impl GradientEngine for Snap2 {
                     let pl = &self.inf.pattern[gc];
                     let ml = &self.inf.cur[gc];
                     let next = &mut self.inf.next[k];
+                    let mut matched = 0u64;
                     let (mut i, mut j) = (0usize, 0usize);
                     while i < pk.len() && j < pl.len() {
                         match pk[i].cmp(&pl[j]) {
@@ -440,12 +457,13 @@ impl GradientEngine for Snap2 {
                             std::cmp::Ordering::Greater => j += 1,
                             std::cmp::Ordering::Equal => {
                                 next[i] += jv * ml[j];
-                                macs += 1;
+                                matched += 1;
                                 i += 1;
                                 j += 1;
                             }
                         }
                     }
+                    macs += matched;
                 }
                 // + M̄, then scale by φ'_k
                 {

@@ -40,12 +40,41 @@
 
 use super::column_map::StackColumnMap;
 use super::influence::StackedInfluence;
+use super::kernels::{
+    self, CrossSelect, JacobianSlab, OwnSelect, RowSelect,
+};
 use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
 
 /// Snapshot-format version of [`SparseRtrl`] (see [`EngineState`]).
 const STATE_VERSION: u32 = 1;
+
+/// Minimum panel elements (claimed rows × panel width) before the row
+/// update fans out over the worker pool. The pool spawns scoped threads
+/// per call (tens of microseconds), so small panels — where a whole step
+/// is only a few microseconds of row work — must stay serial even at
+/// `--threads N`; results are bit-identical either way, so this threshold
+/// is purely a wall-clock guard.
+const PAR_MIN_PANEL_ELEMS: u64 = 32 * 1024;
+
+/// One staged panel-row update: row `k` with its filtered Jacobian
+/// coefficient span in the engine's flat `jflat` staging buffer.
+#[derive(Debug, Clone, Copy)]
+struct RowPlan {
+    k: u32,
+    jstart: u32,
+    jend: u32,
+}
+
+/// Per-row statistics a row job returns, summed after the join so op
+/// charging is independent of scheduling.
+#[derive(Debug, Clone, Copy)]
+struct RowStats {
+    rows_read: u64,
+    upd_macs: u64,
+    emitted: u64,
+}
 
 /// Which structural zeros the engine exploits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,8 +105,15 @@ pub struct SparseRtrl {
     scratch: StackScratch,
     /// Concatenated previous state (`R^N`).
     a_prev: Vec<f32>,
-    /// Jacobian row staging: `(l, ∂v_k/∂a_l)` pairs for the current row.
-    jlist: Vec<(u32, f32)>,
+    /// Per-step, per-layer Jacobian slab (scratch; rebuilt every step).
+    slab: JacobianSlab,
+    /// Staged row plans for the current layer's panel update.
+    plans: Vec<RowPlan>,
+    /// Flat `(col, ∂v_k/∂a_col)` staging shared by all plans of a layer.
+    jflat: Vec<(u32, f32)>,
+    /// Intra-step worker threads for the panel-row update (resolved; 1 =
+    /// serial). Bit-identical results at any value.
+    threads: usize,
     /// Gradient accumulator over the full compact column space.
     grad_compact: Vec<f32>,
     /// Dense `R^P` gradient view (valid after `end_sequence`).
@@ -103,7 +139,10 @@ impl SparseRtrl {
             buffers: StackedInfluence::new(&dims),
             scratch: net.scratch(),
             a_prev: vec![0.0; net.total_units()],
-            jlist: Vec::with_capacity(net.total_units()),
+            slab: JacobianSlab::new(),
+            plans: Vec::with_capacity(net.total_units()),
+            jflat: Vec::with_capacity(net.total_units()),
+            threads: 1,
             grad_compact: vec![0.0; pc_total],
             grads: vec![0.0; net.p()],
             logits: vec![0.0; readout_n_out],
@@ -156,6 +195,15 @@ impl GradientEngine for SparseRtrl {
         let deriv_units = self.scratch.deriv_units();
 
         // ---- influence update (Eq. 10, block-by-block) ------------------
+        //
+        // Per layer: (1) build the step-Jacobian slab once — deriv-active
+        // rows × (kept ∩ prev-active) columns, cross block over the lower
+        // layer's just-written active rows; (2) stage one RowPlan per row
+        // (nonzero coefficients only, the gather list); (3) run the row
+        // update — fused gather + cross axpy + immediate scatter + φ' gate
+        // — serially or across panel rows on the worker pool. Rows write
+        // disjoint panel memory and read only frozen state, so the
+        // parallel path is bit-identical to the serial one.
         self.buffers.begin_next();
         for l in 0..net.layers() {
             ops.set_layer(l);
@@ -163,89 +211,131 @@ impl GradientEngine for SparseRtrl {
             let sl = &self.scratch.layers[l];
             let dv_da_cost = cell.dv_da_cost();
             let dv_dx_cost = cell.dv_dx_cost();
-            let pc_l = self.colmap.cum_cols(l);
             let pc_lower = if l > 0 { self.colmap.cum_cols(l - 1) } else { 0 };
             let a_prev_l = &self.a_prev[net.layout().state_range(l)];
             let input_l: &[f32] = if l == 0 { x } else { &self.scratch.layers[l - 1].a };
             let (lower, buf) = self.buffers.lower_and_current(l);
-            let mut jac_macs = 0u64;
-            let mut upd_macs = 0u64;
-            let mut rows_read = 0usize;
-            let mut rows_written = 0usize;
-            for k in 0..cell.n() {
-                let dphi_k = sl.dphi[k];
-                if self.mode.use_activity() && dphi_k == 0.0 {
-                    continue; // row k of J, M̄, M_l is structurally zero
-                }
-                // Own-layer Jacobian row: kept params × prev-active rows.
-                self.jlist.clear();
-                for &c in cell.kept_cols(k) {
-                    if !buf.active_cur().contains(c as usize) {
-                        continue; // M_l^{t-1} row c is zero
+            let pc_l = buf.pc();
+
+            // (1) slab: the exact evaluation set of the per-scalar path —
+            // same entries, same order, same Jacobian-phase charge.
+            let row_sel = if self.mode.use_activity() {
+                RowSelect::DerivActive
+            } else {
+                RowSelect::All
+            };
+            let cross_sel = match lower {
+                // Only the lower layer's rows active at t (produced this
+                // step) are nonzero — the never-materialized zero blocks
+                // cost nothing here.
+                Some(lo) => CrossSelect::Cols(lo.active_next().as_slice()),
+                None => CrossSelect::Skip,
+            };
+            let counts = self.slab.build(
+                cell,
+                sl,
+                row_sel,
+                OwnSelect::KeptActive(buf.active_cur()),
+                cross_sel,
+            );
+            let jac_macs =
+                counts.own_entries * dv_da_cost + counts.cross_entries * dv_dx_cost;
+
+            // (2) stage gather lists: drop exact-zero coefficients.
+            self.plans.clear();
+            self.jflat.clear();
+            for &k in self.slab.rows() {
+                let (cols, vals) = self.slab.own_row(k as usize);
+                let jstart = self.jflat.len() as u32;
+                for (&c, &v) in cols.iter().zip(vals) {
+                    if v != 0.0 {
+                        self.jflat.push((c, v));
                     }
-                    let jv = cell.dv_da(sl, k, c as usize);
-                    jac_macs += dv_da_cost;
-                    if jv != 0.0 {
-                        self.jlist.push((c, jv));
-                    }
                 }
-                rows_read += self.jlist.len();
-                upd_macs += self.jlist.len() as u64 * pc_l as u64;
-                let row = buf.gather_into_next(k, &self.jlist);
-                rows_written += 1;
-                // Cross-layer block: lower layer's *new* panel, prefix slice.
-                // Only rows active at t (produced this step) are nonzero, so
-                // the never-materialized zero blocks cost nothing here.
-                if let Some(lower) = lower {
-                    for j in lower.active_next().as_slice() {
-                        let cv = cell.dv_dx(sl, k, *j);
-                        jac_macs += dv_dx_cost;
+                self.plans.push(RowPlan { k, jstart, jend: self.jflat.len() as u32 });
+            }
+
+            // (3) claim rows serially (ascending — identical active set
+            // regardless of how the update runs), then run the row update.
+            for p in &self.plans {
+                buf.mark_next_active(p.k as usize);
+            }
+            let (cur_panel, next_panel) = buf.split_cur_next();
+            let slab = &self.slab;
+            let jflat = &self.jflat;
+            let colmap = &self.colmap;
+            let update_row = |plan: RowPlan, row: &mut [f32]| -> RowStats {
+                let k = plan.k as usize;
+                // Own-layer gather: Σ_c J[k,c] · M_l^{(t-1)}[c].
+                let jlist = &jflat[plan.jstart as usize..plan.jend as usize];
+                kernels::fused_gather(row, jlist, |c| cur_panel.row(c));
+                let mut rows_read = jlist.len() as u64;
+                let mut upd_macs = jlist.len() as u64 * pc_l as u64;
+                // Cross-layer block: lower layer's *new* panel rows land in
+                // the leading pc_lower slice (nested column spaces).
+                if let Some(lo) = lower {
+                    let cvals = slab.cross_row(k);
+                    for (&j, &cv) in slab.cross_cols().iter().zip(cvals) {
                         if cv == 0.0 {
                             continue;
                         }
-                        let src = lower.next_row(*j);
-                        for (r, s) in row[..pc_lower].iter_mut().zip(src) {
-                            *r += cv * s;
-                        }
+                        kernels::axpy(&mut row[..pc_lower], cv, lo.next_row(j as usize));
                         rows_read += 1;
                         upd_macs += pc_lower as u64;
                     }
                 }
                 // Immediate influence M̄_l row k (structural nonzeros only),
                 // landing in layer l's own column block.
-                let colmap = &self.colmap;
-                cell.immediate_row(
-                    sl,
-                    a_prev_l,
-                    input_l,
-                    k,
-                    |pi, val| {
-                        row[colmap.global_compact_of(l, pi)] += val;
-                    },
-                    ops,
-                );
-                // Row gate φ'(v_k) (Eq. 10's common factor), with
-                // flush-to-zero: M entries only ever shrink through this
-                // multiply (φ' ≤ γ < 1), so long sequences would otherwise
-                // decay them into denormal range, where scalar multiplies
-                // cost ~100 cycles (§Perf: a measured 10× slowdown).
-                // Flushing tiny magnitudes to an exact 0 restores full-speed
-                // arithmetic and surfaces the decayed-influence entries as
-                // the structural zeros they effectively are.
-                for r in row.iter_mut() {
-                    let v = *r * dphi_k;
-                    *r = if v.abs() < 1e-30 { 0.0 } else { v };
-                }
+                let emitted = cell.immediate_row_visit(sl, a_prev_l, input_l, k, |pi, val| {
+                    row[colmap.global_compact_of(l, pi)] += val;
+                });
+                // Row gate φ'(v_k) (Eq. 10's common factor) with
+                // flush-to-zero — see kernels::FLUSH_EPS for why.
+                kernels::scale_flush(row, sl.dphi[k]);
                 upd_macs += pc_l as u64;
+                RowStats { rows_read, upd_macs, emitted }
+            };
+            // Serial path: allocation-free — iterate plans, one row at a
+            // time. Parallel path: fan disjoint row slices out over the
+            // pool, but only when the panel work dwarfs the per-step
+            // thread-spawn cost (scoped threads are spawned per call); tiny
+            // panels stay serial even at --threads N. Either way the
+            // per-row math is `update_row`, so results are bit-identical.
+            let (mut rows_read, mut upd_macs, mut emitted) = (0u64, 0u64, 0u64);
+            let panel_elems = self.plans.len() as u64 * pc_l as u64;
+            if self.threads > 1 && self.plans.len() > 1 && panel_elems >= PAR_MIN_PANEL_ELEMS {
+                let mut row_slots: Vec<Option<&mut [f32]>> =
+                    next_panel.as_mut_slice().chunks_mut(pc_l.max(1)).map(Some).collect();
+                let mut jobs: Vec<(RowPlan, &mut [f32])> = Vec::with_capacity(self.plans.len());
+                for p in &self.plans {
+                    jobs.push((*p, row_slots[p.k as usize].take().expect("row claimed once")));
+                }
+                let stats = kernels::for_each_row_parallel(jobs, self.threads, |(plan, row)| {
+                    update_row(plan, row)
+                });
+                // Summed in row order — charges independent of scheduling.
+                for s in &stats {
+                    rows_read += s.rows_read;
+                    upd_macs += s.upd_macs;
+                    emitted += s.emitted;
+                }
+            } else {
+                for p in &self.plans {
+                    let s = update_row(*p, next_panel.row_mut(p.k as usize));
+                    rows_read += s.rows_read;
+                    upd_macs += s.upd_macs;
+                    emitted += s.emitted;
+                }
             }
             ops.macs(Phase::Jacobian, jac_macs);
+            ops.macs(Phase::Immediate, emitted);
             ops.macs(Phase::InfluenceUpdate, upd_macs);
             // Words touched: rows written at this panel's width plus rows
             // read (own prev rows at pc_l, lower rows at pc_lower — charge
             // at the width actually streamed, conservatively pc_l).
             ops.words(
                 Phase::InfluenceUpdate,
-                ((rows_written + rows_read) * pc_l) as u64,
+                (self.plans.len() as u64 + rows_read) * pc_l as u64,
             );
         }
         ops.clear_layer();
@@ -324,7 +414,13 @@ impl GradientEngine for SparseRtrl {
         self.measure_influence = on;
     }
 
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = crate::util::pool::resolve_workers(threads);
+    }
+
     fn state_memory_words(&self) -> usize {
+        // The Jacobian slab and row plans are per-step scratch, not
+        // sequence state — excluded from the Table-1 memory column.
         self.buffers.memory_words() + self.grad_compact.len()
     }
 

@@ -24,6 +24,7 @@
 //! not pay. This is the contrast the paper draws: its savings are free of
 //! both bias (SnAp) and variance (UORO).
 
+use super::kernels::{self, CrossSelect, JacobianSlab, OwnSelect, RowSelect};
 use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
@@ -48,6 +49,11 @@ pub struct Uoro {
     js: Vec<f32>,
     nu_mbar: Vec<f32>,
     g_signs: Vec<f32>,
+    /// Per-layer step-Jacobian slabs (scratch). Built once during the
+    /// forward substitution and **reused** by the backward sign
+    /// substitution — the cross-layer `∂v/∂x` entries are no longer
+    /// re-derived per pass, which is the slab layer's wall-clock win here.
+    slabs: Vec<JacobianSlab>,
     rng: Pcg64,
 }
 
@@ -66,6 +72,7 @@ impl Uoro {
             js: vec![0.0; n],
             nu_mbar: vec![0.0; p],
             g_signs: vec![0.0; n],
+            slabs: (0..net.layers()).map(|_| JacobianSlab::new()).collect(),
             rng: Pcg64::new(seed),
         }
     }
@@ -100,8 +107,11 @@ impl GradientEngine for Uoro {
 
         // J·s̃ by forward substitution through the layers (sparse over kept
         // own-layer cols; the cross-layer block reads the already-computed
-        // (Js̃)_{l-1} of this very step). Per-layer work is charged inside
-        // that layer's scope, like every other engine.
+        // (Js̃)_{l-1} of this very step). The per-layer step-Jacobian slab
+        // is built here — deriv-active rows × kept cols, dense cross block
+        // — and reused below by the backward sign substitution. Charges
+        // keep the engine's historical cost model: (eval + multiply) per
+        // entry, in this layer's InfluenceUpdate scope.
         for l in 0..net.layers() {
             ops.set_layer(l);
             let mut macs = 0u64;
@@ -110,17 +120,25 @@ impl GradientEngine for Uoro {
             let soff = net.layout().state_offset(l);
             let soff_prev = if l > 0 { net.layout().state_offset(l - 1) } else { 0 };
             let nprev = if l > 0 { net.layer(l - 1).n() } else { 0 };
+            let cross_sel = if l > 0 { CrossSelect::All } else { CrossSelect::Skip };
+            self.slabs[l].build(cell, sl, RowSelect::DerivActive, OwnSelect::Kept, cross_sel);
             for k in 0..cell.n() {
                 let dphi_k = sl.dphi[k];
                 let mut acc = 0.0;
                 if dphi_k != 0.0 {
-                    for &c in cell.kept_cols(k) {
-                        acc += cell.dv_da(sl, k, c as usize) * self.s_tilde[soff + c as usize];
-                    }
-                    macs += cell.kept_cols(k).len() as u64 * (cell.dv_da_cost() + 1);
-                    for j in 0..nprev {
-                        acc += cell.dv_dx(sl, k, j) * self.js[soff_prev + j];
-                    }
+                    let (jcols, jvals) = self.slabs[l].own_row(k);
+                    acc = kernels::dot_sparse_acc(
+                        acc,
+                        jcols,
+                        jvals,
+                        &self.s_tilde[soff..soff + cell.n()],
+                    );
+                    macs += jcols.len() as u64 * (cell.dv_da_cost() + 1);
+                    acc = kernels::dot_dense_acc(
+                        acc,
+                        self.slabs[l].cross_row(k),
+                        &self.js[soff_prev..soff_prev + nprev],
+                    );
                     macs += nprev as u64 * (cell.dv_dx_cost() + 1);
                 }
                 self.js[soff + k] = dphi_k * acc;
@@ -148,9 +166,13 @@ impl GradientEngine for Uoro {
                 if coef == 0.0 {
                     continue;
                 }
-                for j in 0..nprev {
-                    self.g_signs[soff_prev + j] += coef * cell.dv_dx(sl, k, j);
-                }
+                // coef ≠ 0 ⇒ φ'_k ≠ 0 ⇒ the forward pass built this slab
+                // row; the cross entries are read back, not re-derived.
+                // Charged at the historical (eval + multiply) rate so the
+                // engine's cost model is unchanged by the reuse — the
+                // saving is wall-clock, not counted MACs.
+                let cross = self.slabs[l].cross_row(k);
+                kernels::axpy(&mut self.g_signs[soff_prev..soff_prev + nprev], coef, cross);
                 macs += nprev as u64 * (cell.dv_dx_cost() + 1);
             }
             ops.macs(Phase::InfluenceUpdate, macs);

@@ -68,13 +68,19 @@ pub struct SessionBuilder {
     cfg: ExperimentConfig,
     policy: UpdatePolicy,
     predict_always: bool,
+    threads: usize,
 }
 
 impl SessionBuilder {
     /// Start from a config (the TOML-level description of model + task +
     /// training hyperparameters).
     pub fn from_config(cfg: ExperimentConfig) -> Self {
-        SessionBuilder { cfg, policy: UpdatePolicy::EveryKSteps(1), predict_always: false }
+        SessionBuilder {
+            cfg,
+            policy: UpdatePolicy::EveryKSteps(1),
+            predict_always: false,
+            threads: 1,
+        }
     }
 
     /// Default configuration (paper spiral setup), for programmatic use.
@@ -139,6 +145,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Worker threads for the engine's intra-step kernels (`0` = available
+    /// hardware parallelism, `1` = serial — the default). A runtime knob,
+    /// not session state: it never travels in checkpoints, and results are
+    /// bit-identical at any value ([`crate::rtrl::GradientEngine::set_threads`]).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     /// Build the session. RNG streams split in the same order as
     /// [`crate::train::Trainer::new`] (cell, readout, data, batch), so the
     /// two surfaces are weight-for-weight interchangeable.
@@ -153,6 +168,7 @@ impl SessionBuilder {
         let net = build::build_stack(&cfg, &mut cell_rng);
         let readout = Readout::new(n_out, net.top_n(), &mut readout_rng);
         let mut engine = build::build_engine(cfg.train.algorithm, &net, n_out);
+        engine.set_threads(self.threads);
         engine.begin_sequence();
         let p = net.p();
         let rp = readout.param_len();
@@ -167,6 +183,7 @@ impl SessionBuilder {
             opt_readout: Adam::new(rp, lr),
             policy: self.policy,
             predict_always: self.predict_always,
+            threads: self.threads,
             grad_accum: vec![0.0; p],
             cell_params: vec![0.0; p],
             readout_params: vec![0.0; rp],
@@ -200,6 +217,9 @@ pub struct OnlineSession {
     pub(crate) opt_readout: Adam,
     pub(crate) policy: UpdatePolicy,
     pub(crate) predict_always: bool,
+    /// Intra-step kernel threads (runtime knob; reapplied on engine
+    /// rebuild, never checkpointed).
+    pub(crate) threads: usize,
     /// Harvested-but-unapplied gradient (`R^P`), summed across harvests.
     pub(crate) grad_accum: Vec<f32>,
     cell_params: Vec<f32>,
@@ -274,12 +294,22 @@ impl OnlineSession {
     pub fn rebuild_engine(&mut self) {
         self.engine =
             build::build_engine(self.cfg.train.algorithm, &self.net, self.readout.n_out());
+        self.engine.set_threads(self.threads);
         self.engine.begin_sequence();
     }
 
     /// Toggle influence-sparsity measurement on the engine.
     pub fn set_measure_influence(&mut self, on: bool) {
         self.engine.set_measure_influence(on);
+    }
+
+    /// Set the intra-step kernel thread count (`0` = available hardware
+    /// parallelism). Safe at any point — including on a resumed session:
+    /// results are bit-identical at any value, so this is a pure
+    /// wall-clock knob and is never part of a checkpoint.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+        self.engine.set_threads(threads);
     }
 
     /// Reset the engine's temporal state for a new sequence. Optional: a

@@ -19,9 +19,10 @@ pub struct SessionPool {
 
 impl SessionPool {
     /// Wrap pre-built sessions. `workers = 0` uses the available hardware
-    /// parallelism.
+    /// parallelism (the uniform `--threads` semantics of
+    /// [`crate::util::pool::resolve_workers`]).
     pub fn new(sessions: Vec<OnlineSession>, workers: usize) -> Self {
-        let workers = if workers == 0 { crate::util::pool::available_workers() } else { workers };
+        let workers = crate::util::pool::resolve_workers(workers);
         SessionPool { sessions, workers }
     }
 

@@ -61,6 +61,13 @@ impl Trainer {
         self.session.config()
     }
 
+    /// Worker threads for the engine's intra-step kernels (`0` = available
+    /// hardware parallelism). Training results are bit-identical at any
+    /// value — this trades nothing but wall-clock.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.session.set_threads(threads);
+    }
+
     /// Dataset RNG matching the stream order used by [`Trainer::new`].
     pub fn data_rng(seed: u64) -> Pcg64 {
         let mut root = Pcg64::new(seed);

@@ -130,9 +130,22 @@ where
         .collect()
 }
 
-/// Available hardware parallelism (≥ 1).
+/// Available hardware parallelism (≥ 1). Falls back to 1 (serial) when the
+/// platform cannot report a count — parallelism is opted into via
+/// `--threads 0`, never guessed at a hardcoded width.
 pub fn available_workers() -> usize {
-    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// The uniform `--threads` semantics shared by `train`/`stream`/`bench`,
+/// [`crate::session::SessionPool`] and the intra-step panel kernels:
+/// `0` = available hardware parallelism, any other value is taken as-is.
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested == 0 {
+        available_workers()
+    } else {
+        requested
+    }
 }
 
 #[cfg(test)]
@@ -240,6 +253,15 @@ mod tests {
         }));
         assert!(caught.is_err(), "panic must still reach the caller");
         assert_eq!(COMPLETED.load(Ordering::SeqCst), 5, "siblings died with the bad job");
+    }
+
+    #[test]
+    fn resolve_workers_zero_means_available() {
+        assert_eq!(resolve_workers(3), 3);
+        assert_eq!(resolve_workers(1), 1);
+        let auto = resolve_workers(0);
+        assert!(auto >= 1);
+        assert_eq!(auto, available_workers());
     }
 
     #[test]

@@ -1,0 +1,265 @@
+//! The step-Jacobian slab contract (see `rtrl::kernels`):
+//!
+//! * slab-built entries are **bit-exact** against direct `dv_da`/`dv_dx`
+//!   evaluation for all four cell dynamics, masked and dense, at depths
+//!   1 and 2;
+//! * the slab refactor left engine op counts unchanged — pinned against
+//!   the pre-refactor per-scalar charging formulas;
+//! * intra-step parallelism changes wall-clock only: a multi-threaded run
+//!   is bit-identical to the serial one — gradients, losses, op counters,
+//!   and a full training run's final weights.
+
+use sparse_rtrl::config::AlgorithmKind;
+use sparse_rtrl::metrics::{OpCounter, Phase};
+use sparse_rtrl::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::rtrl::kernels::{CrossSelect, JacobianSlab, OwnSelect, RowSelect};
+use sparse_rtrl::rtrl::{GradientEngine, SparseRtrl, SparsityMode, Target};
+use sparse_rtrl::sparse::MaskPattern;
+use sparse_rtrl::train::build_engine;
+use sparse_rtrl::util::Pcg64;
+
+/// The four dynamics × activation combinations of the experiment matrix.
+fn all_cells(n: usize, n_in: usize, mask: Option<MaskPattern>, rng: &mut Pcg64) -> Vec<(&'static str, RnnCell)> {
+    vec![
+        ("egru", RnnCell::egru(n, n_in, 0.05, 0.3, 0.5, mask.clone(), rng)),
+        ("evrnn", RnnCell::evrnn(n, n_in, 0.05, 0.3, 0.5, mask.clone(), rng)),
+        ("gated_tanh", RnnCell::gated_tanh(n, n_in, mask.clone(), rng)),
+        ("vanilla", RnnCell::vanilla(n, n_in, mask, rng)),
+    ]
+}
+
+/// Property: for every dynamics, at depths 1 and 2, every slab entry equals
+/// the direct per-scalar evaluation bit-for-bit — own block and cross block,
+/// dense and masked.
+#[test]
+fn slab_entries_bit_exact_for_all_dynamics_and_depths() {
+    for masked in [false, true] {
+        let mut rng = Pcg64::new(101 + masked as u64);
+        let mask = masked.then(|| MaskPattern::random(7, 7, 0.4, &mut rng));
+        for (what, cell0) in all_cells(7, 2, mask.clone(), &mut rng) {
+            // depth 2: layer 1 reads layer 0's 7 activations
+            let mut rng2 = Pcg64::new(202);
+            let cell1 = match what {
+                "egru" => RnnCell::egru(5, 7, 0.05, 0.3, 0.5, None, &mut rng2),
+                "evrnn" => RnnCell::evrnn(5, 7, 0.05, 0.3, 0.5, None, &mut rng2),
+                "gated_tanh" => RnnCell::gated_tanh(5, 7, None, &mut rng2),
+                _ => RnnCell::vanilla(5, 7, None, &mut rng2),
+            };
+            let net = LayerStack::new(vec![cell0, cell1]);
+            let mut scratch = net.scratch();
+            let mut ops = OpCounter::new();
+            let mut xr = Pcg64::new(303);
+            let mut a_prev = vec![0.0; net.total_units()];
+            for _ in 0..3 {
+                net.forward(&a_prev, &[xr.normal(), xr.normal()], &mut scratch, &mut ops);
+                scratch.write_state(&mut a_prev);
+            }
+            let mut slab = JacobianSlab::new();
+            for l in 0..2 {
+                let cell = net.layer(l);
+                let sl = &scratch.layers[l];
+                let cross = if l > 0 { CrossSelect::All } else { CrossSelect::Skip };
+                // kept pattern, all rows
+                slab.build(cell, sl, RowSelect::All, OwnSelect::Kept, cross);
+                for k in 0..cell.n() {
+                    let (cols, vals) = slab.own_row(k);
+                    assert_eq!(cols, cell.kept_cols(k), "{what}/L{l} row {k} pattern");
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        assert_eq!(
+                            v.to_bits(),
+                            cell.dv_da(sl, k, c as usize).to_bits(),
+                            "{what}/L{l} dv_da[{k},{c}]"
+                        );
+                    }
+                    for (j, &v) in slab.cross_row(k).iter().enumerate() {
+                        assert_eq!(
+                            v.to_bits(),
+                            cell.dv_dx(sl, k, j).to_bits(),
+                            "{what}/L{l} dv_dx[{k},{j}]"
+                        );
+                    }
+                }
+                // deriv-active rows only
+                slab.build(cell, sl, RowSelect::DerivActive, OwnSelect::Kept, CrossSelect::Skip);
+                for k in 0..cell.n() {
+                    assert_eq!(slab.has_row(k), sl.dphi[k] != 0.0, "{what}/L{l} row gate {k}");
+                }
+                // diagonal build matches direct diagonal evaluation
+                slab.build(cell, sl, RowSelect::All, OwnSelect::Diag, CrossSelect::Skip);
+                for k in 0..cell.n() {
+                    assert_eq!(
+                        slab.diag(k).to_bits(),
+                        cell.dv_da(sl, k, k).to_bits(),
+                        "{what}/L{l} diag {k}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Counts-unchanged pin (the op-hoisting satellite): the slab-driven sparse
+/// engine charges exactly the pre-refactor per-scalar formulas. On a dense
+/// vanilla-tanh cell under `SparsityMode::Parameter` (no activity skipping,
+/// full column space) the historical charging was, per step `t`:
+///
+/// * Jacobian: `0` at `t = 1` (previous panel empty), `n²` after;
+/// * InfluenceUpdate: `n·p` at `t = 1` (gate-scale only), `jnz·p + n·p`
+///   after, where `jnz` = nonzero recurrent weights (each nonzero Jacobian
+///   coefficient gathers one `p`-wide panel row).
+#[test]
+fn sparse_engine_op_counts_match_per_scalar_formulas() {
+    let n = 6usize;
+    let mut rng = Pcg64::new(17);
+    let cell = RnnCell::vanilla(n, 2, None, &mut rng);
+    let net = LayerStack::single(cell);
+    let p = net.p();
+    // nonzero recurrent entries (the jlist lengths of the historical path)
+    let vblock = sparse_rtrl::nn::cell::linear_blocks::V;
+    let layout = net.layer(0).layout();
+    let v = layout.block(net.layer(0).params(), vblock);
+    let jnz = v.iter().filter(|&&w| w != 0.0).count();
+    assert!(jnz > 0, "degenerate init");
+
+    let mut readout = Readout::new(2, n, &mut rng);
+    let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+    let mut eng = SparseRtrl::new(&net, 2, SparsityMode::Parameter);
+    let mut ops = OpCounter::new();
+    eng.begin_sequence();
+    let steps = 5u64;
+    let mut xr = Pcg64::new(23);
+    for _ in 0..steps {
+        // small inputs: tanh stays unsaturated, φ' ≠ 0 everywhere
+        let x = [0.3 * xr.normal(), 0.3 * xr.normal()];
+        let r = eng.step(&net, &mut readout, &mut loss, &x, Target::None, &mut ops);
+        assert_eq!(r.deriv_units, n, "tanh φ' must be nonzero for the formula to apply");
+    }
+    let (n64, p64) = (n as u64, p as u64);
+    assert_eq!(ops.macs_in(Phase::Jacobian), (steps - 1) * n64 * n64);
+    assert_eq!(
+        ops.macs_in(Phase::InfluenceUpdate),
+        steps * n64 * p64 + (steps - 1) * jnz as u64 * p64
+    );
+}
+
+/// Threads are a pure wall-clock knob: a 3-thread engine produces
+/// bit-identical gradients, losses, activations and op counters to the
+/// serial engine. The stack is sized so every step's panel work clears the
+/// engine's parallel threshold (gated-tanh → all rows deriv-active, panels
+/// tens of thousands of elements wide), so the pooled row update genuinely
+/// runs — on a 2-layer stack with a masked (column-compacted) layer 0.
+#[test]
+fn threaded_sparse_engine_bit_identical_to_serial() {
+    let mut rng = Pcg64::new(61);
+    let mask0 = MaskPattern::random(32, 32, 0.5, &mut rng);
+    let l0 = RnnCell::gated_tanh(32, 2, Some(mask0), &mut rng);
+    let l1 = RnnCell::gated_tanh(16, 32, None, &mut rng);
+    let net = LayerStack::new(vec![l0, l1]);
+    let mut xr = Pcg64::new(62);
+    let inputs: Vec<[f32; 2]> = (0..12).map(|_| [xr.normal(), xr.normal()]).collect();
+
+    let run = |threads: usize, mode: SparsityMode| {
+        let mut rrng = Pcg64::new(7);
+        let mut readout = Readout::new(2, net.top_n(), &mut rrng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops = OpCounter::new();
+        let mut eng = SparseRtrl::new(&net, 2, mode);
+        eng.set_threads(threads);
+        eng.begin_sequence();
+        let mut losses = Vec::new();
+        for (t, x) in inputs.iter().enumerate() {
+            let tg = if t % 4 == 3 { Target::Class(t % 2) } else { Target::None };
+            let r = eng.step(&net, &mut readout, &mut loss, x, tg, &mut ops);
+            losses.push(r.loss.map(f32::to_bits));
+        }
+        eng.end_sequence(&net, &mut readout, &mut ops);
+        let grads: Vec<u32> = eng.grads().iter().map(|g| g.to_bits()).collect();
+        let acts: Vec<u32> = eng.activations().iter().map(|a| a.to_bits()).collect();
+        (grads, acts, losses, ops)
+    };
+    for mode in [SparsityMode::Both, SparsityMode::Activity, SparsityMode::Parameter] {
+        let (g1, a1, l1s, o1) = run(1, mode);
+        let (g3, a3, l3s, o3) = run(3, mode);
+        assert_eq!(g1, g3, "{mode:?}: gradients diverged across thread counts");
+        assert_eq!(a1, a3, "{mode:?}: activations diverged");
+        assert_eq!(l1s, l3s, "{mode:?}: losses diverged");
+        for ph in Phase::all() {
+            assert_eq!(o1.macs_in(ph), o3.macs_in(ph), "{mode:?}/{}: MACs differ", ph.name());
+            assert_eq!(o1.words_in(ph), o3.words_in(ph), "{mode:?}/{}: words differ", ph.name());
+        }
+        for l in 0..2 {
+            for ph in Phase::all() {
+                assert_eq!(o1.macs_in_layer(l, ph), o3.macs_in_layer(l, ph), "{mode:?} layer {l}");
+            }
+        }
+    }
+}
+
+/// End-to-end: a full training run (trainer → session → engine) with
+/// `threads = 4` ends at bit-identical weights and total op counts to the
+/// serial run — the whole-system form of the invariant CI checks on the
+/// smoke bench.
+#[test]
+fn full_training_run_bit_identical_across_thread_counts() {
+    use sparse_rtrl::config::ExperimentConfig;
+    use sparse_rtrl::train::{build_dataset, Trainer};
+    let mut cfg = ExperimentConfig::default();
+    cfg.task.num_sequences = 60;
+    cfg.train.iterations = 8;
+    cfg.train.batch_size = 4;
+    cfg.train.eval_every = 0;
+    cfg.model.hidden = 10;
+    cfg.model.layers = 2;
+    cfg.model.param_sparsity = 0.5;
+    cfg.train.algorithm = AlgorithmKind::RtrlBoth;
+
+    let run = |threads: usize| {
+        let mut data_rng = Trainer::data_rng(cfg.seed);
+        let (train, val) = build_dataset(&cfg, &mut data_rng);
+        let mut tr = Trainer::new(cfg.clone());
+        tr.set_threads(threads);
+        let out = tr.train(&train, &val);
+        let mut w = vec![0.0; tr.net().p()];
+        tr.net().copy_params_into(&mut w);
+        let bits: Vec<u32> = w.iter().map(|x| x.to_bits()).collect();
+        (bits, out.ops.total_macs(), out.ops.total_words())
+    };
+    let (w1, m1, d1) = run(1);
+    let (w4, m4, d4) = run(4);
+    assert_eq!(w1, w4, "trained weights diverged across thread counts");
+    assert_eq!(m1, m4, "total MACs diverged");
+    assert_eq!(d1, d4, "total words diverged");
+}
+
+/// The slab path preserves gradient exactness across every exact engine —
+/// a threaded sparse engine still matches dense RTRL on a masked stack.
+#[test]
+fn threaded_engine_still_matches_dense_reference() {
+    let mut rng = Pcg64::new(91);
+    let mask = MaskPattern::random(8, 8, 0.5, &mut rng);
+    let net = LayerStack::single(RnnCell::egru(8, 2, 0.05, 0.3, 0.5, Some(mask), &mut rng));
+    let mut xr = Pcg64::new(92);
+    let inputs: Vec<[f32; 2]> = (0..9).map(|_| [xr.normal(), xr.normal()]).collect();
+    let run = |mut eng: Box<dyn GradientEngine>| {
+        let mut rrng = Pcg64::new(5);
+        let mut readout = Readout::new(2, 8, &mut rrng);
+        let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+        let mut ops = OpCounter::new();
+        eng.set_threads(2);
+        eng.begin_sequence();
+        for (t, x) in inputs.iter().enumerate() {
+            let tg = if t + 1 == inputs.len() { Target::Class(1) } else { Target::None };
+            eng.step(&net, &mut readout, &mut loss, x, tg, &mut ops);
+        }
+        eng.end_sequence(&net, &mut readout, &mut ops);
+        eng.grads().to_vec()
+    };
+    let reference = run(build_engine(AlgorithmKind::RtrlDense, &net, 2));
+    for kind in [AlgorithmKind::RtrlActivity, AlgorithmKind::RtrlParam, AlgorithmKind::RtrlBoth] {
+        let g = run(build_engine(kind, &net, 2));
+        for (i, (a, b)) in reference.iter().zip(&g).enumerate() {
+            let tol = 3e-4 * (1.0 + a.abs().max(b.abs()));
+            assert!((a - b).abs() <= tol, "{}: grad[{i}] {a} vs {b}", kind.name());
+        }
+    }
+}
