@@ -5,8 +5,9 @@
 //! Built on the streaming session API: an [`OnlineSession`] with
 //! `UpdatePolicy::EveryKSteps(1)` consumes the stream one `step(x, target)`
 //! at a time and applies a parameter update at every supervised step.
-//! Midway through, the session is checkpointed to JSON and resumed — the
-//! stream continues bit-exactly, demonstrating live-session migration.
+//! Midway through, the session is checkpointed through the snapshot codec
+//! facade (binary container) and resumed — the stream continues
+//! bit-exactly, demonstrating live-session migration.
 //!
 //! Task: temporal parity over a sliding window (data::stream).
 //!
@@ -16,7 +17,7 @@ use sparse_rtrl::config::{AlgorithmKind, ExperimentConfig};
 use sparse_rtrl::data::stream::ParityStream;
 use sparse_rtrl::data::StepTarget;
 use sparse_rtrl::metrics::Phase;
-use sparse_rtrl::session::{OnlineSession, SessionBuilder, SessionCheckpoint, UpdatePolicy};
+use sparse_rtrl::session::{codec, OnlineSession, SessionBuilder, SnapshotFormat, UpdatePolicy};
 use sparse_rtrl::util::cli::Args;
 
 fn main() {
@@ -86,14 +87,15 @@ fn main() {
             }
         }
         if step == steps / 2 {
-            // live migration: serialize → parse → resume, mid-stream
-            // (`step` starts at 1, so this fires exactly once)
-            let json = session.checkpoint().to_json();
-            let ck = SessionCheckpoint::from_json(&json).expect("checkpoint parses");
+            // live migration: encode → decode → resume, mid-stream, through
+            // the snapshot codec facade (`step` starts at 1, so this fires
+            // exactly once)
+            let bytes = codec::encode(&session.checkpoint(), SnapshotFormat::Binary);
+            let ck = codec::decode(&bytes).expect("snapshot decodes");
             session = OnlineSession::resume(&ck).expect("session resumes");
             println!(
-                "-- checkpointed + resumed at step {step} ({} bytes of JSON) --",
-                json.len()
+                "-- checkpointed + resumed at step {step} ({} bytes, binary snapshot) --",
+                bytes.len()
             );
         }
         if step % 5000 == 0 {

@@ -7,13 +7,14 @@
 //! testable in-tree and so downstream perf-trajectory tooling has a
 //! reference for dispatching on [`SCHEMA_VERSION`]: v1 reports (single-cell
 //! era) carry no `layers` axis or per-layer counters; v2 adds depth; v3
-//! adds the intra-step `threads` axis and throughput fields.
+//! adds the intra-step `threads` axis and throughput fields; v4 adds the
+//! `snapshot_codecs` block (checkpoint encode/decode cost per format).
 
 use super::{phase_name, BenchReport, CaseResult};
 use std::collections::BTreeMap;
 
 /// Schema identifier CI consumers can dispatch on.
-pub const SCHEMA: &str = "sparse-rtrl/bench/v3";
+pub const SCHEMA: &str = "sparse-rtrl/bench/v4";
 /// Monotone schema revision: bump on any breaking field change.
 /// * 1 — single-cell grid (engine × hidden × ω).
 /// * 2 — depth axis: `layers`, `macs_per_step_per_layer`,
@@ -22,7 +23,11 @@ pub const SCHEMA: &str = "sparse-rtrl/bench/v3";
 ///   throughput fields (`seqs_per_sec` per case, alongside the existing
 ///   `steps_per_sec`). Op counts are thread-invariant by contract; CI
 ///   diffs a `--threads 1` vs `--threads 2` run on every PR.
-pub const SCHEMA_VERSION: u64 = 3;
+/// * 4 — `snapshot_codecs` at the top: per-format checkpoint size and
+///   encode/decode wall time on the reference session
+///   ([`crate::bench::snapshot`]), so the binary-vs-JSON cost ratio is
+///   part of the tracked perf trajectory.
+pub const SCHEMA_VERSION: u64 = 4;
 
 /// Escape a string for a JSON string literal (without the quotes).
 pub fn escape(s: &str) -> String {
@@ -121,6 +126,18 @@ impl BenchReport {
         s.push_str(&format!("  \"workers\": {},\n", self.workers));
         s.push_str(&format!("  \"threads\": {},\n", self.threads));
         s.push_str(&format!("  \"created_unix\": {},\n", self.created_unix));
+        s.push_str("  \"snapshot_codecs\": [\n");
+        for (i, c) in self.snapshot_codecs.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"format\": \"{}\", \"bytes\": {}, \"encode_ns\": {}, \"decode_ns\": {}}}{}\n",
+                escape(c.format),
+                c.bytes,
+                c.encode_ns,
+                c.decode_ns,
+                if i + 1 < self.snapshot_codecs.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
         s.push_str("  \"results\": [\n");
         for (i, r) in self.results.iter().enumerate() {
             s.push_str(&case_json(r, "    "));
@@ -397,6 +414,15 @@ mod tests {
         assert_eq!(schema_version_of(&doc), SCHEMA_VERSION);
         assert_eq!(doc.get("timesteps").unwrap().as_u64(), Some(report.timesteps as u64));
         assert_eq!(doc.get("threads").unwrap().as_u64(), Some(report.threads as u64));
+        // v4: the snapshot-codec block survives the round trip
+        let codecs = doc.get("snapshot_codecs").unwrap().as_arr().unwrap();
+        assert_eq!(codecs.len(), report.snapshot_codecs.len());
+        for (parsed, orig) in codecs.iter().zip(&report.snapshot_codecs) {
+            assert_eq!(parsed.get("format").unwrap().as_str(), Some(orig.format));
+            assert_eq!(parsed.get("bytes").unwrap().as_u64(), Some(orig.bytes as u64));
+            assert_eq!(parsed.get("encode_ns").unwrap().as_u64(), Some(orig.encode_ns));
+            assert_eq!(parsed.get("decode_ns").unwrap().as_u64(), Some(orig.decode_ns));
+        }
         let results = doc.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), report.results.len());
         for (parsed, orig) in results.iter().zip(&report.results) {
@@ -466,6 +492,9 @@ mod tests {
         for key in [
             "\"schema\"",
             "\"schema_version\"",
+            "\"snapshot_codecs\"",
+            "\"encode_ns\"",
+            "\"decode_ns\"",
             "\"results\"",
             "\"engine\"",
             "\"layers\"",

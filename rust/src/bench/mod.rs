@@ -18,10 +18,13 @@
 
 pub mod json;
 pub mod runner;
+pub mod snapshot;
 
 use crate::config::AlgorithmKind;
 use crate::metrics::Phase;
 use crate::util::pool;
+
+pub use snapshot::SnapshotCodecResult;
 
 /// Grid + measurement knobs for one bench invocation.
 #[derive(Debug, Clone)]
@@ -183,6 +186,9 @@ pub struct BenchReport {
     /// Seconds since the Unix epoch at report creation.
     pub created_unix: u64,
     pub results: Vec<CaseResult>,
+    /// Snapshot-codec cost (encode/decode ns, byte size) per format on the
+    /// reference checkpoint — see [`snapshot::measure`]. Schema v4.
+    pub snapshot_codecs: Vec<SnapshotCodecResult>,
 }
 
 impl BenchReport {
@@ -205,6 +211,19 @@ impl BenchReport {
                 r.macs_per_step_total,
                 r.state_memory_words,
             ));
+        }
+        if !self.snapshot_codecs.is_empty() {
+            s.push_str("\nsnapshot codecs (reference checkpoint):\n");
+            s.push_str(&format!(
+                "{:<10}{:>12}{:>14}{:>14}\n",
+                "format", "bytes", "encode ns", "decode ns"
+            ));
+            for c in &self.snapshot_codecs {
+                s.push_str(&format!(
+                    "{:<10}{:>12}{:>14}{:>14}\n",
+                    c.format, c.bytes, c.encode_ns, c.decode_ns
+                ));
+            }
         }
         s
     }
@@ -239,6 +258,7 @@ pub fn run(cfg: &BenchConfig, progress: bool) -> BenchReport {
             .map(|d| d.as_secs())
             .unwrap_or(0),
         results,
+        snapshot_codecs: snapshot::measure(snapshot::DEFAULT_REPS),
     }
 }
 

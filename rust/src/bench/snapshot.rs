@@ -1,0 +1,115 @@
+//! Snapshot-codec measurements for the bench report: encode/decode wall
+//! time and byte size per [`SnapshotFormat`], on one representative driven
+//! session.
+//!
+//! The numbers answer the eviction-loop question — how much does spilling
+//! a session cost, per format? — and land in `BENCH_rtrl.json`
+//! (`snapshot_codecs`, schema v4) so the codec's perf trajectory is
+//! tracked alongside the engines'. The binary container is required to be
+//! several times smaller and faster than the JSON interchange; CI reads
+//! these fields to hold that line.
+
+use crate::config::AlgorithmKind;
+use crate::rtrl::Target;
+use crate::session::codec::{codec_for, SnapshotFormat};
+use crate::session::{SessionBuilder, SessionCheckpoint, UpdatePolicy};
+use crate::util::Pcg64;
+
+/// Encode/decode cost of one snapshot format on the reference checkpoint.
+#[derive(Debug, Clone)]
+pub struct SnapshotCodecResult {
+    /// Format name ([`SnapshotFormat::name`]).
+    pub format: &'static str,
+    /// Serialized snapshot size in bytes.
+    pub bytes: usize,
+    /// Best-of-reps wall time to encode the checkpoint, nanoseconds.
+    pub encode_ns: u64,
+    /// Best-of-reps wall time to decode it back, nanoseconds.
+    pub decode_ns: u64,
+}
+
+/// The reference checkpoint: a mid-stream sparse session at bench-like
+/// scale (n = 32, ω = 0.8, the paper's combined-sparsity engine), driven
+/// long enough that every field group — params, Adam moments, masks,
+/// influence state — is populated and non-trivial.
+fn reference_checkpoint() -> SessionCheckpoint {
+    let mut s = SessionBuilder::new()
+        .algorithm(AlgorithmKind::RtrlBoth)
+        .hidden(32)
+        .param_sparsity(0.8)
+        .policy(UpdatePolicy::EveryKSteps(2))
+        .build();
+    let mut rng = Pcg64::new(17);
+    for i in 0..24 {
+        let x = [rng.normal(), rng.normal()];
+        let t = if i % 3 == 2 { Target::Class(i % 2) } else { Target::None };
+        s.step(&x, t);
+    }
+    s.checkpoint()
+}
+
+fn best_of<F: FnMut()>(reps: usize, mut f: F) -> u64 {
+    let mut best = u64::MAX;
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_nanos() as u64);
+    }
+    best
+}
+
+/// Measure every snapshot format on the reference checkpoint. `reps` is
+/// the best-of repetition count (timing noise control; sizes are exact).
+pub fn measure(reps: usize) -> Vec<SnapshotCodecResult> {
+    let ck = reference_checkpoint();
+    SnapshotFormat::all()
+        .into_iter()
+        .map(|format| {
+            let codec = codec_for(format);
+            let bytes = codec.encode(&ck);
+            let encode_ns = best_of(reps, || {
+                std::hint::black_box(codec.encode(std::hint::black_box(&ck)));
+            });
+            let decode_ns = best_of(reps, || {
+                std::hint::black_box(codec.decode(std::hint::black_box(&bytes)).unwrap());
+            });
+            SnapshotCodecResult { format: format.name(), bytes: bytes.len(), encode_ns, decode_ns }
+        })
+        .collect()
+}
+
+/// The rep count the bench run uses.
+pub const DEFAULT_REPS: usize = 7;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_every_format_with_nonzero_cost() {
+        let results = measure(2);
+        assert_eq!(results.len(), SnapshotFormat::all().len());
+        for r in &results {
+            assert!(r.bytes > 0, "{}: empty snapshot", r.format);
+            assert!(r.encode_ns > 0 && r.decode_ns > 0, "{}: no time measured", r.format);
+        }
+    }
+
+    /// The size claim is deterministic: the binary container is ≥ 3×
+    /// smaller than the JSON interchange on the reference checkpoint.
+    /// (The speed claim — binary several times faster — is recorded in the
+    /// report and enforced by CI on real hardware, not asserted here where
+    /// test parallelism makes wall time noisy.)
+    #[test]
+    fn binary_is_at_least_3x_smaller() {
+        let results = measure(1);
+        let by_name = |n: &str| results.iter().find(|r| r.format == n).unwrap();
+        let (bin, json) = (by_name("binary"), by_name("json"));
+        assert!(
+            bin.bytes * 3 <= json.bytes,
+            "binary {} B not 3× smaller than json {} B",
+            bin.bytes,
+            json.bytes
+        );
+    }
+}

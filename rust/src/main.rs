@@ -4,10 +4,12 @@ use anyhow::{anyhow, bail, Result};
 use sparse_rtrl::bench::{self, BenchConfig};
 use sparse_rtrl::config::{AlgorithmKind, ExperimentConfig};
 use sparse_rtrl::coordinator::{run_sweep, SweepPlan};
+use sparse_rtrl::data::StepTarget;
 use sparse_rtrl::report::{csv::write_text, fig1, fig2, table1};
 use sparse_rtrl::runtime::{ArtifactSet, PjrtRuntime};
 use sparse_rtrl::session::{
-    parse_event, OnlineSession, SessionBuilder, SessionCheckpoint, StreamEvent, UpdatePolicy,
+    codec, EventFormat, EventReader, OnlineSession, SessionBuilder, SnapshotFormat, StreamEvent,
+    UpdatePolicy,
 };
 use sparse_rtrl::train::{build_dataset, Trainer};
 use sparse_rtrl::util::cli::Args;
@@ -21,8 +23,9 @@ USAGE:
   sparse-rtrl stream [--config cfg.toml] [--algorithm NAME] [--layers L]
                      [--hidden N] [--param-sparsity W] [--seed S] [--lr R]
                      [--policy every-k|sequence|manual] [--update-every K]
-                     [--input events.txt|-] [--checkpoint out.json]
-                     [--resume ck.json] [--threads 1] [--quiet]
+                     [--input events.txt|-] [--event-format auto|text|jsonl|binary]
+                     [--checkpoint out.snap] [--snapshot-format auto|binary|json]
+                     [--resume ck.snap] [--threads 1] [--quiet]
   sparse-rtrl train  [--config cfg.toml] [--param-sparsity W] [--iterations N]
                      [--seed S] [--algorithm NAME] [--cell NAME] [--layers L]
                      [--threads 1] [--out results/train_curve.csv]
@@ -39,6 +42,11 @@ USAGE:
 
 --threads N sets the worker count for the intra-step RTRL kernels
 (0 = available parallelism); results are bit-identical at any value.
+
+stream formats: --resume autodetects the snapshot format from the file
+bytes (binary or json). --snapshot-format auto writes binary unless the
+--checkpoint path ends in .json. --event-format auto sniffs the input
+(text lines, JSON lines, or binary f32 frames) from its leading bytes.
 ";
 
 /// Subcommand list for unknown-command errors (kept in sync with `main`).
@@ -64,9 +72,9 @@ fn load_config(args: &mut Args) -> Result<ExperimentConfig> {
     })
 }
 
-/// Drive an [`OnlineSession`] from a line-oriented event stream (file or
-/// stdin). Emits one `step=… pred=… loss=… updated=…` line per event and
-/// optionally writes a checkpoint at end of stream.
+/// Drive an [`OnlineSession`] from an event stream (file or stdin; text,
+/// JSON-lines or binary frames). Emits one `step=… pred=… loss=… updated=…`
+/// line per event and optionally writes a checkpoint at end of stream.
 fn cmd_stream(mut args: Args) -> Result<()> {
     let session = match args.get("resume") {
         Some(path) => {
@@ -75,9 +83,11 @@ fn cmd_stream(mut args: Args) -> Result<()> {
                     bail!("--resume restores the full session (config, policy, weights); drop --{flag}");
                 }
             }
-            let text = std::fs::read_to_string(&path)
+            let bytes = std::fs::read(&path)
                 .map_err(|e| anyhow!("cannot read checkpoint {path}: {e}"))?;
-            let ck = SessionCheckpoint::from_json(&text).map_err(err)?;
+            // One ingestion entry point: the codec facade autodetects the
+            // snapshot format (binary container or JSON interchange).
+            let ck = codec::decode(&bytes).map_err(|e| anyhow!("{path}: {e}"))?;
             let s = OnlineSession::resume(&ck).map_err(err)?;
             eprintln!(
                 "resumed session at step {} ({} updates applied, engine {})",
@@ -129,49 +139,77 @@ fn cmd_stream(mut args: Args) -> Result<()> {
     };
     let input = args.get("input").unwrap_or_else(|| "-".into());
     let checkpoint_out = args.get("checkpoint");
+    let snapshot_format = match args.get("snapshot-format").as_deref().unwrap_or("auto") {
+        "auto" => None,
+        name => Some(SnapshotFormat::from_name(name).ok_or_else(|| {
+            anyhow!("unknown --snapshot-format {name:?} (valid: auto, binary, json)")
+        })?),
+    };
+    let event_format = match args.get("event-format").as_deref().unwrap_or("auto") {
+        "auto" => None,
+        name => Some(EventFormat::from_name(name).ok_or_else(|| {
+            anyhow!("unknown --event-format {name:?} (valid: auto, text, jsonl, binary)")
+        })?),
+    };
     let quiet = args.get_bool("quiet").map_err(err)?;
     // Runtime knob, deliberately allowed alongside --resume: thread count
     // is not session state (results are bit-identical at any value).
     let threads: usize = args.get_parse("threads", 1).map_err(err)?;
     args.finish().map_err(err)?;
 
-    let reader: Box<dyn BufRead> = if input == "-" {
+    let src: Box<dyn BufRead> = if input == "-" {
         Box::new(std::io::BufReader::new(std::io::stdin()))
     } else {
         Box::new(std::io::BufReader::new(
             std::fs::File::open(&input).map_err(|e| anyhow!("cannot open {input}: {e}"))?,
         ))
     };
+    // `file:line:` error prefixes name stdin the conventional way.
+    let input_name = if input == "-" { "<stdin>" } else { input.as_str() };
+    let mut events = match event_format {
+        Some(f) => EventReader::new(src, f),
+        None => EventReader::autodetect(src)
+            .map_err(|e| anyhow!("cannot sniff event format of {input_name}: {e}"))?,
+    };
     let mut session = session;
     session.set_threads(threads);
     let stdout = std::io::stdout();
     let mut out = std::io::BufWriter::new(stdout.lock());
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let event = parse_event(&line).map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+    while let Some(event) = events.next() {
+        let event = event.map_err(|e| anyhow!("{}", e.in_file(input_name)))?;
         match event {
-            None => {}
-            Some(StreamEvent::Update) => {
+            StreamEvent::Update => {
                 session.update_now();
                 if !quiet {
                     writeln!(out, "step={} update applied", session.steps())?;
                 }
             }
-            Some(StreamEvent::EndSequence) => {
+            StreamEvent::EndSequence => {
                 session.end_sequence();
                 session.begin_sequence();
                 if !quiet {
                     writeln!(out, "step={} sequence boundary", session.steps())?;
                 }
             }
-            Some(StreamEvent::Step { x, target }) => {
+            StreamEvent::Step { x, target } => {
                 if x.len() != session.net().n_in() {
                     bail!(
-                        "line {}: event has {} input values, session expects {}",
-                        lineno + 1,
+                        "{input_name}:{}: event has {} input values, session expects {}",
+                        events.line(),
                         x.len(),
                         session.net().n_in()
                     );
+                }
+                if let StepTarget::Vector(t) = &target {
+                    if t.len() != session.n_out() {
+                        bail!(
+                            "{input_name}:{}: regression target has {} values, \
+                             session expects {}",
+                            events.line(),
+                            t.len(),
+                            session.n_out()
+                        );
+                    }
                 }
                 let o = session.step(&x, target.as_target());
                 if !quiet {
@@ -195,9 +233,11 @@ fn cmd_stream(mut args: Args) -> Result<()> {
         session.state_memory_words()
     );
     if let Some(path) = checkpoint_out {
-        std::fs::write(&path, session.checkpoint().to_json())
+        let format = snapshot_format.unwrap_or_else(|| SnapshotFormat::for_path(&path));
+        let bytes = codec::encode(&session.checkpoint(), format);
+        std::fs::write(&path, &bytes)
             .map_err(|e| anyhow!("cannot write checkpoint {path}: {e}"))?;
-        eprintln!("checkpoint written to {path}");
+        eprintln!("checkpoint written to {path} ({format}, {} bytes)", bytes.len());
     }
     Ok(())
 }

@@ -208,7 +208,10 @@ fn u64_array(xs: &[u64]) -> String {
     format!("[{}]", items.join(","))
 }
 
-fn policy_name(p: UpdatePolicy) -> (&'static str, u64) {
+/// Canonical (name, k) form of an [`UpdatePolicy`] — shared by the JSON
+/// document and the binary codec so the two formats can never disagree on
+/// the policy vocabulary.
+pub(crate) fn policy_name(p: UpdatePolicy) -> (&'static str, u64) {
     match p {
         UpdatePolicy::EveryKSteps(k) => ("every_k", k),
         UpdatePolicy::EndOfSequence => ("sequence", 0),
@@ -216,7 +219,9 @@ fn policy_name(p: UpdatePolicy) -> (&'static str, u64) {
     }
 }
 
-fn policy_from(name: &str, k: u64) -> Result<UpdatePolicy, String> {
+/// Inverse of [`policy_name`]; rejects unknown names and `every_k` with
+/// `k = 0`.
+pub(crate) fn policy_from(name: &str, k: u64) -> Result<UpdatePolicy, String> {
     match name {
         "every_k" if k == 0 => Err("update_every must be ≥ 1 for the every_k policy".into()),
         "every_k" => Ok(UpdatePolicy::EveryKSteps(k)),

@@ -1,0 +1,647 @@
+//! The versioned binary snapshot container — byte-level layout and codec.
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"SRTLSNAP"
+//! 8       4     u32 LE schema version (currently 1)
+//! 12      4     u32 LE section count
+//! 16      …     sections, back to back
+//! ```
+//!
+//! Each section is one checkpoint field group, framed as:
+//!
+//! ```text
+//! u16 LE  name length
+//! …       name bytes (UTF-8: "meta", "config", "params", "optim",
+//!         "masks", "ops", "engine")
+//! u32 LE  CRC32 of the payload bytes (crate::util::crc32)
+//! u64 LE  payload length in bytes
+//! …       zero padding to the next 8-byte boundary
+//! …       payload bytes
+//! …       zero padding to the next 8-byte boundary
+//! ```
+//!
+//! Payloads therefore always start 8-byte aligned in the file — an
+//! mmap-friendly property: a reader that maps the snapshot can view the
+//! `f32`/`u64` bulk arrays in place on any platform where unaligned access
+//! is costly. Inside payloads, all integers are little-endian and every
+//! `f32` is its IEEE-754 bit pattern in little-endian byte order, so
+//! restores are bit-exact (negative zeros, denormals and infinities
+//! included). Sections are looked up by name: unknown extra sections are
+//! ignored (forward-compatible within a schema version), missing required
+//! sections and duplicate names are errors.
+//!
+//! Corruption handling is the point of the framing: every decode path
+//! checks declared lengths against the remaining bytes **before**
+//! allocating, and every payload is CRC-checked before parsing, so a
+//! truncated file or a flipped bit yields a typed [`CodecError`] naming
+//! the damaged section — never a panic, never a silently wrong resume.
+
+use super::super::checkpoint::{policy_from, policy_name, SessionCheckpoint};
+use super::{CodecError, SnapshotCodec, SnapshotFormat};
+use crate::optim::AdamState;
+use crate::rtrl::EngineState;
+use crate::util::crc32::crc32;
+
+/// Leading magic of every binary snapshot. Starts with an uppercase ASCII
+/// letter, so it can never be confused with a JSON document (which the
+/// autodetector requires to start with `{`).
+pub const MAGIC: [u8; 8] = *b"SRTLSNAP";
+
+/// Container schema version. Bump on any layout change; old builds then
+/// reject newer snapshots loudly ([`CodecError::UnsupportedVersion`]).
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Alignment of section payloads within the file.
+const ALIGN: usize = 8;
+
+const SEC_META: &str = "meta";
+const SEC_CONFIG: &str = "config";
+const SEC_PARAMS: &str = "params";
+const SEC_OPTIM: &str = "optim";
+const SEC_MASKS: &str = "masks";
+const SEC_OPS: &str = "ops";
+const SEC_ENGINE: &str = "engine";
+
+/// The required sections, in the order [`BinaryCodec::encode`] writes them.
+const SECTIONS: [&str; 7] =
+    [SEC_META, SEC_CONFIG, SEC_PARAMS, SEC_OPTIM, SEC_MASKS, SEC_OPS, SEC_ENGINE];
+
+/// The binary [`SnapshotCodec`]. Stateless; see the module docs for the
+/// layout.
+pub struct BinaryCodec;
+
+impl SnapshotCodec for BinaryCodec {
+    fn format(&self) -> SnapshotFormat {
+        SnapshotFormat::Binary
+    }
+
+    fn encode(&self, ck: &SessionCheckpoint) -> Vec<u8> {
+        encode(ck)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<SessionCheckpoint, CodecError> {
+        decode(bytes)
+    }
+
+    fn sniff(&self, bytes: &[u8]) -> bool {
+        bytes.starts_with(&MAGIC)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+/// Little-endian payload writer.
+#[derive(Default)]
+struct Payload {
+    buf: Vec<u8>,
+}
+
+impl Payload {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// u16-length-prefixed UTF-8 string (names are short by construction;
+    /// longer ones are truncated at a char boundary rather than panicking).
+    fn str16(&mut self, s: &str) {
+        let mut end = s.len().min(u16::MAX as usize);
+        while !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        self.u16(end as u16);
+        self.buf.extend_from_slice(&s.as_bytes()[..end]);
+    }
+
+    /// u64-count-prefixed f32 array (LE bit patterns).
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    /// u64-count-prefixed u64 array.
+    fn u64s(&mut self, xs: &[u64]) {
+        self.u64(xs.len() as u64);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn pad_to(buf: &mut Vec<u8>, align: usize) {
+    while buf.len() % align != 0 {
+        buf.push(0);
+    }
+}
+
+fn write_section(out: &mut Vec<u8>, name: &str, payload: &[u8]) {
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    pad_to(out, ALIGN);
+    out.extend_from_slice(payload);
+    pad_to(out, ALIGN);
+}
+
+fn section_payload(ck: &SessionCheckpoint, name: &str) -> Vec<u8> {
+    let mut p = Payload::default();
+    match name {
+        SEC_META => {
+            let (policy, k) = policy_name(ck.policy);
+            p.str16(policy);
+            p.u8(ck.predict_always as u8);
+            p.u64(k);
+            p.u64(ck.steps);
+            p.u64(ck.supervised_steps);
+            p.u64(ck.updates_applied);
+            p.u64(ck.pending_supervised);
+        }
+        SEC_CONFIG => p.buf.extend_from_slice(ck.config_toml.as_bytes()),
+        SEC_PARAMS => {
+            p.f32s(&ck.net_params);
+            p.f32s(&ck.readout_params);
+            p.f32s(&ck.readout_grads);
+            p.f32s(&ck.grad_accum);
+        }
+        SEC_OPTIM => {
+            for opt in [&ck.opt_cell, &ck.opt_readout] {
+                p.u64(opt.t);
+                p.f32s(&opt.m);
+                p.f32s(&opt.v);
+            }
+        }
+        SEC_MASKS => {
+            p.u64(ck.masks.len() as u64);
+            for m in &ck.masks {
+                match m {
+                    None => p.u8(0),
+                    Some(kept) => {
+                        p.u8(1);
+                        p.u64s(kept);
+                    }
+                }
+            }
+        }
+        SEC_OPS => p.u64s(&ck.ops),
+        SEC_ENGINE => {
+            p.str16(&ck.engine.engine);
+            p.u32(ck.engine.version);
+            let ints: Vec<_> = ck.engine.int_entries().collect();
+            p.u32(ints.len() as u32);
+            for (key, v) in ints {
+                p.str16(key);
+                p.u64s(v);
+            }
+            let floats: Vec<_> = ck.engine.float_entries().collect();
+            p.u32(floats.len() as u32);
+            for (key, v) in floats {
+                p.str16(key);
+                p.f32s(v);
+            }
+        }
+        other => unreachable!("unknown section {other:?} in the encoder table"),
+    }
+    p.buf
+}
+
+/// Serialize a checkpoint into the binary container.
+pub fn encode(ck: &SessionCheckpoint) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + 5 * ck.net_params.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&SCHEMA_VERSION.to_le_bytes());
+    out.extend_from_slice(&(SECTIONS.len() as u32).to_le_bytes());
+    for name in SECTIONS {
+        write_section(&mut out, name, &section_payload(ck, name));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over one section's payload. Every
+/// error names the section; declared counts are validated against the
+/// remaining bytes **before** any allocation.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+    section: &'a str,
+}
+
+impl<'a> Cur<'a> {
+    fn new(section: &'a str, b: &'a [u8]) -> Self {
+        Cur { b, pos: 0, section }
+    }
+
+    fn truncated(&self) -> CodecError {
+        CodecError::Truncated { section: self.section.to_string() }
+    }
+
+    fn malformed(&self, detail: impl Into<String>) -> CodecError {
+        CodecError::Malformed { section: self.section.to_string(), detail: detail.into() }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if n > self.remaining() {
+            return Err(self.truncated());
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, CodecError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Declared element count, validated against `bytes_per_elem` of
+    /// remaining payload so a corrupted length can never trigger a huge
+    /// allocation.
+    fn count(&mut self, bytes_per_elem: usize) -> Result<usize, CodecError> {
+        let n = self.u64()?;
+        if n > (self.remaining() / bytes_per_elem) as u64 {
+            return Err(self.truncated());
+        }
+        Ok(n as usize)
+    }
+
+    fn str16(&mut self) -> Result<String, CodecError> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| self.malformed("non-UTF-8 string"))
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>, CodecError> {
+        let n = self.count(4)?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+
+    fn u64_vec(&mut self) -> Result<Vec<u64>, CodecError> {
+        let n = self.count(8)?;
+        let bytes = self.take(n * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| {
+                u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+            })
+            .collect())
+    }
+
+    /// The payload must be fully consumed — trailing bytes mean the writer
+    /// and reader disagree about the section layout.
+    fn finish(&self) -> Result<(), CodecError> {
+        if self.pos != self.b.len() {
+            return Err(self.malformed(format!(
+                "{} trailing bytes after the last field",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn align_up(pos: usize, align: usize) -> usize {
+    pos.div_ceil(align) * align
+}
+
+/// Parse the container framing: magic, version, and the CRC-verified
+/// section directory. Returns `(name, payload)` pairs.
+fn directory(bytes: &[u8]) -> Result<Vec<(String, &[u8])>, CodecError> {
+    let bad = |detail: &str| CodecError::BadHeader { detail: detail.to_string() };
+    if bytes.len() < 16 {
+        return Err(bad("file shorter than the 16-byte header"));
+    }
+    if bytes[..8] != MAGIC {
+        return Err(bad("wrong magic (not a sparse-rtrl binary snapshot)"));
+    }
+    let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+    if version == 0 || version > SCHEMA_VERSION {
+        return Err(CodecError::UnsupportedVersion { found: version, supported: SCHEMA_VERSION });
+    }
+    let count = u32::from_le_bytes([bytes[12], bytes[13], bytes[14], bytes[15]]) as usize;
+    // every section needs ≥ 14 framing bytes, so an absurd count is a
+    // corrupted header, not a reason to loop
+    if count > (bytes.len() - 16) / 14 {
+        return Err(bad("section count exceeds what the file can hold"));
+    }
+    let mut sections: Vec<(String, &[u8])> = Vec::with_capacity(count);
+    let mut pos = 16usize;
+    for _ in 0..count {
+        // section framing; until the name is known, errors blame the directory
+        let mut cur = Cur::new("directory", &bytes[pos..]);
+        let name = cur.str16()?;
+        let stored = cur.u32()?;
+        let len = cur.u64()?;
+        let payload_start = align_up(pos + cur.pos, ALIGN);
+        let payload_end = payload_start
+            .checked_add(usize::try_from(len).map_err(|_| CodecError::Truncated {
+                section: name.clone(),
+            })?)
+            .ok_or_else(|| CodecError::Truncated { section: name.clone() })?;
+        if payload_end > bytes.len() {
+            return Err(CodecError::Truncated { section: name });
+        }
+        let payload = &bytes[payload_start..payload_end];
+        let computed = crc32(payload);
+        if computed != stored {
+            return Err(CodecError::Checksum { section: name, stored, computed });
+        }
+        if sections.iter().any(|(n, _)| *n == name) {
+            return Err(CodecError::Malformed {
+                section: name,
+                detail: "duplicate section".into(),
+            });
+        }
+        sections.push((name, payload));
+        pos = align_up(payload_end, ALIGN);
+    }
+    if pos != bytes.len() {
+        return Err(bad("trailing bytes after the last section"));
+    }
+    Ok(sections)
+}
+
+fn section<'a>(
+    sections: &'a [(String, &'a [u8])],
+    name: &'static str,
+) -> Result<Cur<'a>, CodecError> {
+    sections
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, payload)| Cur::new(name, payload))
+        .ok_or_else(|| CodecError::MissingSection { section: name.to_string() })
+}
+
+fn decode_adam(cur: &mut Cur<'_>) -> Result<AdamState, CodecError> {
+    let t = cur.u64()?;
+    let m = cur.f32_vec()?;
+    let v = cur.f32_vec()?;
+    Ok(AdamState { m, v, t })
+}
+
+/// Parse a binary snapshot back into a checkpoint, bit-exactly.
+pub fn decode(bytes: &[u8]) -> Result<SessionCheckpoint, CodecError> {
+    let sections = directory(bytes)?;
+
+    let mut meta = section(&sections, SEC_META)?;
+    let policy_tag = meta.str16()?;
+    let predict_always = match meta.u8()? {
+        0 => false,
+        1 => true,
+        other => return Err(meta.malformed(format!("predict_always byte {other} not 0/1"))),
+    };
+    let k = meta.u64()?;
+    let policy = policy_from(&policy_tag, k).map_err(|e| meta.malformed(e))?;
+    let steps = meta.u64()?;
+    let supervised_steps = meta.u64()?;
+    let updates_applied = meta.u64()?;
+    let pending_supervised = meta.u64()?;
+    meta.finish()?;
+
+    let mut config = section(&sections, SEC_CONFIG)?;
+    let config_bytes = config.take(config.remaining())?;
+    let config_toml = String::from_utf8(config_bytes.to_vec())
+        .map_err(|_| config.malformed("config TOML is not UTF-8"))?;
+
+    let mut params = section(&sections, SEC_PARAMS)?;
+    let net_params = params.f32_vec()?;
+    let readout_params = params.f32_vec()?;
+    let readout_grads = params.f32_vec()?;
+    let grad_accum = params.f32_vec()?;
+    params.finish()?;
+
+    let mut optim = section(&sections, SEC_OPTIM)?;
+    let opt_cell = decode_adam(&mut optim)?;
+    let opt_readout = decode_adam(&mut optim)?;
+    optim.finish()?;
+
+    let mut masks_cur = section(&sections, SEC_MASKS)?;
+    let n_layers = {
+        let n = masks_cur.u64()?;
+        // each layer contributes at least its presence byte
+        if n > masks_cur.remaining() as u64 {
+            return Err(masks_cur.truncated());
+        }
+        n as usize
+    };
+    let mut masks = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        masks.push(match masks_cur.u8()? {
+            0 => None,
+            1 => Some(masks_cur.u64_vec()?),
+            other => {
+                return Err(masks_cur.malformed(format!("mask presence byte {other} not 0/1")))
+            }
+        });
+    }
+    masks_cur.finish()?;
+
+    let mut ops_cur = section(&sections, SEC_OPS)?;
+    let ops = ops_cur.u64_vec()?;
+    ops_cur.finish()?;
+
+    let mut eng = section(&sections, SEC_ENGINE)?;
+    let engine_name = eng.str16()?;
+    let engine_version = eng.u32()?;
+    let mut engine = EngineState::new(&engine_name, engine_version);
+    let n_ints = eng.u32()? as usize;
+    for _ in 0..n_ints {
+        let key = eng.str16()?;
+        let v = eng.u64_vec()?;
+        engine.put_ints(&key, v);
+    }
+    let n_floats = eng.u32()? as usize;
+    for _ in 0..n_floats {
+        let key = eng.str16()?;
+        let v = eng.f32_vec()?;
+        engine.put_floats(&key, v);
+    }
+    eng.finish()?;
+
+    Ok(SessionCheckpoint {
+        config_toml,
+        policy,
+        predict_always,
+        steps,
+        supervised_steps,
+        updates_applied,
+        pending_supervised,
+        net_params,
+        readout_params,
+        readout_grads,
+        grad_accum,
+        opt_cell,
+        opt_readout,
+        masks,
+        ops,
+        engine,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::SessionBuilder;
+
+    fn checkpoint() -> SessionCheckpoint {
+        let mut s = SessionBuilder::new().hidden(6).param_sparsity(0.5).build();
+        for i in 0..6 {
+            let t = if i % 2 == 0 {
+                crate::rtrl::Target::Class(i % 2)
+            } else {
+                crate::rtrl::Target::None
+            };
+            s.step(&[0.1 * i as f32, -0.4], t);
+        }
+        s.checkpoint()
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let ck = checkpoint();
+        let bytes = encode(&ck);
+        assert_eq!(&bytes[..8], &MAGIC);
+        let back = decode(&bytes).expect("decode");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(back.config_toml, ck.config_toml);
+        assert_eq!(back.policy, ck.policy);
+        assert_eq!(back.predict_always, ck.predict_always);
+        assert_eq!(
+            (back.steps, back.supervised_steps, back.updates_applied, back.pending_supervised),
+            (ck.steps, ck.supervised_steps, ck.updates_applied, ck.pending_supervised)
+        );
+        assert_eq!(bits(&back.net_params), bits(&ck.net_params));
+        assert_eq!(bits(&back.readout_params), bits(&ck.readout_params));
+        assert_eq!(bits(&back.readout_grads), bits(&ck.readout_grads));
+        assert_eq!(bits(&back.grad_accum), bits(&ck.grad_accum));
+        assert_eq!(bits(&back.opt_cell.m), bits(&ck.opt_cell.m));
+        assert_eq!(bits(&back.opt_cell.v), bits(&ck.opt_cell.v));
+        assert_eq!(back.opt_cell.t, ck.opt_cell.t);
+        assert_eq!(bits(&back.opt_readout.m), bits(&ck.opt_readout.m));
+        assert_eq!(back.opt_readout.t, ck.opt_readout.t);
+        assert_eq!(back.masks, ck.masks);
+        assert_eq!(back.ops, ck.ops);
+        assert_eq!(back.engine, ck.engine);
+    }
+
+    #[test]
+    fn special_float_bit_patterns_survive() {
+        let mut ck = checkpoint();
+        ck.grad_accum[0] = -0.0;
+        ck.grad_accum[1] = f32::from_bits(1); // smallest denormal
+        ck.grad_accum[2] = f32::NEG_INFINITY;
+        ck.grad_accum[3] = f32::from_bits(0x7fc0_1234); // a specific NaN
+        let back = decode(&encode(&ck)).unwrap();
+        assert_eq!(back.grad_accum[0].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(back.grad_accum[1].to_bits(), 1);
+        assert_eq!(back.grad_accum[2], f32::NEG_INFINITY);
+        assert_eq!(back.grad_accum[3].to_bits(), 0x7fc0_1234);
+    }
+
+    /// Every section payload starts on an 8-byte boundary (the mmap
+    /// contract from the module docs).
+    #[test]
+    fn payloads_are_8_byte_aligned() {
+        let bytes = encode(&checkpoint());
+        let dir = directory(&bytes).unwrap();
+        assert_eq!(dir.len(), SECTIONS.len());
+        for (name, payload) in &dir {
+            let offset = payload.as_ptr() as usize - bytes.as_ptr() as usize;
+            assert_eq!(offset % ALIGN, 0, "section {name:?} payload misaligned at {offset}");
+        }
+    }
+
+    #[test]
+    fn wrong_magic_is_rejected() {
+        let mut bytes = encode(&checkpoint());
+        bytes[0] = b'X';
+        match decode(&bytes) {
+            Err(CodecError::BadHeader { detail }) => assert!(detail.contains("magic"), "{detail}"),
+            other => panic!("expected BadHeader, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn future_schema_version_is_rejected() {
+        let mut bytes = encode(&checkpoint());
+        bytes[8..12].copy_from_slice(&(SCHEMA_VERSION + 1).to_le_bytes());
+        match decode(&bytes) {
+            Err(CodecError::UnsupportedVersion { found, supported }) => {
+                assert_eq!(found, SCHEMA_VERSION + 1);
+                assert_eq!(supported, SCHEMA_VERSION);
+            }
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_names_a_section() {
+        let bytes = encode(&checkpoint());
+        let cut = decode(&bytes[..bytes.len() - 9]);
+        match cut {
+            Err(
+                CodecError::Truncated { .. }
+                | CodecError::BadHeader { .. }
+                | CodecError::Checksum { .. },
+            ) => {}
+            other => panic!("truncation must be a framing error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flipped_payload_byte_fails_the_section_checksum() {
+        let bytes = encode(&checkpoint());
+        // locate the "params" section payload and flip a byte inside it
+        let dir = directory(&bytes).unwrap();
+        let (_, payload) =
+            dir.iter().find(|(n, _)| n == SEC_PARAMS).expect("params section present");
+        let offset = payload.as_ptr() as usize - bytes.as_ptr() as usize;
+        let mut corrupt = bytes.clone();
+        corrupt[offset + payload.len() / 2] ^= 0x10;
+        match decode(&corrupt) {
+            Err(CodecError::Checksum { section, .. }) => assert_eq!(section, SEC_PARAMS),
+            other => panic!("expected a params checksum error, got {other:?}"),
+        }
+    }
+}

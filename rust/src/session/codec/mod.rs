@@ -1,0 +1,297 @@
+//! One entry point for snapshot serialization: the [`SnapshotCodec`]
+//! facade over the checkpoint wire formats.
+//!
+//! Everything that persists or ingests a [`SessionCheckpoint`] — the
+//! `stream` CLI's `--checkpoint`/`--resume`, [`crate::session::SessionPool`]
+//! eviction, the bench subsystem's codec measurements — goes through this
+//! module instead of hard-coding a format. Two codecs implement the trait:
+//!
+//! * **Binary** ([`BinaryCodec`], the default spill format): a versioned
+//!   container — 8-byte magic, `u32` schema version, then length-prefixed
+//!   named sections, one per checkpoint field group (`meta`, `config`,
+//!   `params`, `optim`, `masks`, `ops`, `engine`). Every section payload is
+//!   8-byte aligned (mmap-friendly) and carries a CRC32 checksum, so a
+//!   flipped bit in a spilled checkpoint fails loudly on load — naming the
+//!   damaged section — instead of resuming a session from corrupted state.
+//!   All `f32`s travel as little-endian IEEE-754 bit patterns; restores are
+//!   bit-exact. See [`binary`] for the byte-level layout.
+//! * **JSON** ([`JsonCodec`], the debug interchange): the
+//!   [`SessionCheckpoint::to_json`] document, human-inspectable and
+//!   diff-able, with f32s as bit-pattern numbers. Behavior is pinned —
+//!   the binary format is required to round-trip bit-identically against
+//!   it (`rust/tests/snapshot_codec.rs`).
+//!
+//! Loading always **autodetects** the format from the leading bytes
+//! ([`detect`]): the binary magic cannot begin a JSON document and vice
+//! versa, so `--resume` and [`decode`] accept either format transparently.
+
+pub mod binary;
+
+use super::checkpoint::SessionCheckpoint;
+use std::fmt;
+
+pub use binary::BinaryCodec;
+
+/// The snapshot wire formats the facade dispatches between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotFormat {
+    /// Versioned binary container with per-section CRC32 checksums — the
+    /// spill format for eviction loops.
+    Binary,
+    /// The JSON debug interchange ([`SessionCheckpoint::to_json`]).
+    Json,
+}
+
+impl SnapshotFormat {
+    /// Canonical CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SnapshotFormat::Binary => "binary",
+            SnapshotFormat::Json => "json",
+        }
+    }
+
+    /// Inverse of [`SnapshotFormat::name`].
+    pub fn from_name(name: &str) -> Option<SnapshotFormat> {
+        match name {
+            "binary" => Some(SnapshotFormat::Binary),
+            "json" => Some(SnapshotFormat::Json),
+            _ => None,
+        }
+    }
+
+    /// Every format, registry-style (CLI error messages).
+    pub fn all() -> [SnapshotFormat; 2] {
+        [SnapshotFormat::Binary, SnapshotFormat::Json]
+    }
+
+    /// Format conventionally implied by a file path: `.json` means the
+    /// debug interchange, anything else the binary spill format.
+    pub fn for_path(path: &str) -> SnapshotFormat {
+        if path.to_ascii_lowercase().ends_with(".json") {
+            SnapshotFormat::Json
+        } else {
+            SnapshotFormat::Binary
+        }
+    }
+}
+
+impl fmt::Display for SnapshotFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Why a snapshot failed to decode. Binary-side variants name the section
+/// at fault so corruption reports point at the damaged field group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// Autodetection failed: the bytes start with neither the binary magic
+    /// nor a JSON document.
+    UnknownFormat,
+    /// The binary header is damaged (bad magic or header truncation).
+    BadHeader { detail: String },
+    /// The snapshot was written by a future schema revision.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// A section (or the file itself) ends before its declared length.
+    Truncated { section: String },
+    /// A section's stored CRC32 does not match its payload.
+    Checksum { section: String, stored: u32, computed: u32 },
+    /// A section is structurally intact but its contents are invalid.
+    Malformed { section: String, detail: String },
+    /// A required section is absent from the container.
+    MissingSection { section: String },
+    /// The JSON interchange document failed to parse.
+    Json(String),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::UnknownFormat => write!(
+                f,
+                "snapshot format not recognized (neither the binary magic nor a JSON document)"
+            ),
+            CodecError::BadHeader { detail } => {
+                write!(f, "snapshot section \"header\": {detail}")
+            }
+            CodecError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "snapshot section \"header\": schema version {found} unsupported \
+                 (this build reads ≤ {supported})"
+            ),
+            CodecError::Truncated { section } => {
+                write!(f, "snapshot section {section:?}: truncated")
+            }
+            CodecError::Checksum { section, stored, computed } => write!(
+                f,
+                "snapshot section {section:?}: checksum mismatch \
+                 (stored {stored:#010x}, computed {computed:#010x}) — the snapshot is corrupted"
+            ),
+            CodecError::Malformed { section, detail } => {
+                write!(f, "snapshot section {section:?}: {detail}")
+            }
+            CodecError::MissingSection { section } => {
+                write!(f, "snapshot section {section:?}: missing")
+            }
+            CodecError::Json(e) => write!(f, "json snapshot: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// One snapshot wire format: encode to bytes, decode from bytes, and sniff
+/// whether a byte prefix belongs to this format.
+pub trait SnapshotCodec: Sync {
+    /// Which [`SnapshotFormat`] this codec implements.
+    fn format(&self) -> SnapshotFormat;
+
+    /// Serialize a checkpoint. Infallible: every in-memory checkpoint has a
+    /// representation in every format.
+    fn encode(&self, ck: &SessionCheckpoint) -> Vec<u8>;
+
+    /// Parse a checkpoint; bit-exact for every `f32`/`u64` field.
+    fn decode(&self, bytes: &[u8]) -> Result<SessionCheckpoint, CodecError>;
+
+    /// Whether `bytes` plausibly starts a document of this format (cheap
+    /// prefix test, used by [`detect`]).
+    fn sniff(&self, bytes: &[u8]) -> bool;
+}
+
+/// The JSON debug-interchange codec — a thin [`SnapshotCodec`] wrapper over
+/// the pinned [`SessionCheckpoint::to_json`] / [`SessionCheckpoint::from_json`]
+/// document.
+pub struct JsonCodec;
+
+impl SnapshotCodec for JsonCodec {
+    fn format(&self) -> SnapshotFormat {
+        SnapshotFormat::Json
+    }
+
+    fn encode(&self, ck: &SessionCheckpoint) -> Vec<u8> {
+        ck.to_json().into_bytes()
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<SessionCheckpoint, CodecError> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| CodecError::Json("document is not UTF-8".into()))?;
+        SessionCheckpoint::from_json(text).map_err(CodecError::Json)
+    }
+
+    fn sniff(&self, bytes: &[u8]) -> bool {
+        bytes.iter().find(|b| !b.is_ascii_whitespace()) == Some(&b'{')
+    }
+}
+
+static BINARY: BinaryCodec = BinaryCodec;
+static JSON: JsonCodec = JsonCodec;
+
+/// The codec implementing `format`.
+pub fn codec_for(format: SnapshotFormat) -> &'static dyn SnapshotCodec {
+    match format {
+        SnapshotFormat::Binary => &BINARY,
+        SnapshotFormat::Json => &JSON,
+    }
+}
+
+/// Serialize a checkpoint in the chosen format.
+pub fn encode(ck: &SessionCheckpoint, format: SnapshotFormat) -> Vec<u8> {
+    codec_for(format).encode(ck)
+}
+
+/// Identify the format of serialized snapshot bytes from their prefix.
+/// The binary magic can never begin a JSON document, so detection is
+/// unambiguous.
+pub fn detect(bytes: &[u8]) -> Option<SnapshotFormat> {
+    SnapshotFormat::all().into_iter().find(|&f| codec_for(f).sniff(bytes))
+}
+
+/// Parse a snapshot of either format, autodetecting from the bytes — the
+/// single ingestion entry point `--resume`, pool admission and tests use.
+pub fn decode(bytes: &[u8]) -> Result<SessionCheckpoint, CodecError> {
+    match detect(bytes) {
+        Some(format) => codec_for(format).decode(bytes),
+        None => Err(CodecError::UnknownFormat),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgorithmKind;
+    use crate::rtrl::Target;
+    use crate::session::SessionBuilder;
+
+    fn driven_checkpoint() -> SessionCheckpoint {
+        let mut s = SessionBuilder::new()
+            .algorithm(AlgorithmKind::RtrlBoth)
+            .hidden(8)
+            .param_sparsity(0.5)
+            .build();
+        for i in 0..9 {
+            let x = [0.2 * i as f32 - 0.7, (i as f32 * 0.5).sin()];
+            let t = if i % 3 == 2 { Target::Class(i % 2) } else { Target::None };
+            s.step(&x, t);
+        }
+        s.checkpoint()
+    }
+
+    #[test]
+    fn format_names_round_trip() {
+        for f in SnapshotFormat::all() {
+            assert_eq!(SnapshotFormat::from_name(f.name()), Some(f));
+        }
+        assert_eq!(SnapshotFormat::from_name("msgpack"), None);
+        assert_eq!(SnapshotFormat::for_path("ck.json"), SnapshotFormat::Json);
+        assert_eq!(SnapshotFormat::for_path("CK.JSON"), SnapshotFormat::Json);
+        assert_eq!(SnapshotFormat::for_path("ck.snap"), SnapshotFormat::Binary);
+        assert_eq!(SnapshotFormat::for_path("ck"), SnapshotFormat::Binary);
+    }
+
+    #[test]
+    fn detection_is_unambiguous() {
+        let ck = driven_checkpoint();
+        for f in SnapshotFormat::all() {
+            let bytes = encode(&ck, f);
+            assert_eq!(detect(&bytes), Some(f), "{f} bytes misdetected");
+        }
+        assert_eq!(detect(b"plain text, not a snapshot"), None);
+        assert_eq!(detect(b""), None);
+        assert!(decode(b"garbage").is_err());
+    }
+
+    /// Both codecs round-trip through the facade's autodetecting `decode`,
+    /// and the two decoded checkpoints agree bit-for-bit.
+    #[test]
+    fn both_formats_round_trip_and_agree() {
+        let ck = driven_checkpoint();
+        let from_json = decode(&encode(&ck, SnapshotFormat::Json)).expect("json round-trip");
+        let from_bin = decode(&encode(&ck, SnapshotFormat::Binary)).expect("binary round-trip");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for decoded in [&from_json, &from_bin] {
+            assert_eq!(decoded.config_toml, ck.config_toml);
+            assert_eq!(decoded.policy, ck.policy);
+            assert_eq!(decoded.steps, ck.steps);
+            assert_eq!(bits(&decoded.net_params), bits(&ck.net_params));
+            assert_eq!(bits(&decoded.opt_cell.m), bits(&ck.opt_cell.m));
+            assert_eq!(decoded.opt_cell.t, ck.opt_cell.t);
+            assert_eq!(decoded.masks, ck.masks);
+            assert_eq!(decoded.ops, ck.ops);
+            assert_eq!(decoded.engine, ck.engine);
+        }
+    }
+
+    /// The binary format earns its keep: at least 3× smaller than the JSON
+    /// interchange on a real (driven, sparse, multi-buffer) checkpoint.
+    #[test]
+    fn binary_is_at_least_3x_smaller_than_json() {
+        let ck = driven_checkpoint();
+        let json = encode(&ck, SnapshotFormat::Json).len();
+        let bin = encode(&ck, SnapshotFormat::Binary).len();
+        assert!(
+            bin * 3 <= json,
+            "binary snapshot ({bin} B) is not 3× smaller than JSON ({json} B)"
+        );
+    }
+}

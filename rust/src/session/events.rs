@@ -1,15 +1,49 @@
-//! Text event-stream format for the `stream` CLI subcommand.
+//! Event-stream ingestion for the `stream` CLI subcommand — three wire
+//! formats behind one [`EventFormat`] dispatch.
 //!
-//! One event per line; `#` starts a comment, blank lines are skipped:
+//! **Text** (the original format, behavior pinned): one event per line,
+//! `#` starts a comment, blank lines are skipped:
 //!
 //! ```text
-//! 0.5 -0.2          # unsupervised input (n_in whitespace-separated floats)
-//! 0.5 -0.2 -> 1     # input with a class target
-//! !update           # force a parameter update now (manual policy)
-//! !end              # sequence boundary (end_sequence + begin_sequence)
+//! 0.5 -0.2            # unsupervised input (n_in whitespace-separated floats)
+//! 0.5 -0.2 -> 1       # input with a class target
+//! 0.5 -0.2 -> 0.5 0.25 # input with a regression (vector) target
+//! !update             # force a parameter update now (manual policy)
+//! !end                # sequence boundary (end_sequence + begin_sequence)
 //! ```
+//!
+//! After `->`, a bare unsigned integer (`1`, `42`) is a **class** target;
+//! anything in decimal form (`1.0`, `0.5`, `-1`) or more than one number is
+//! a **vector** (regression) target — so `-> 1` and `-> 1.0` are
+//! deliberately different events.
+//!
+//! **JSON lines**: one JSON object per line, self-describing targets (no
+//! integer/float ambiguity):
+//!
+//! ```text
+//! {"x": [0.5, -0.2]}
+//! {"x": [0.5, -0.2], "class": 1}
+//! {"x": [0.5, -0.2], "target": [0.5, 0.25]}
+//! {"event": "update"}
+//! {"event": "end"}
+//! ```
+//!
+//! **Binary**: an 8-byte magic (`SRTLEVS1`) then raw little-endian f32
+//! frames — the zero-parse path for high-rate producers. Each frame is a
+//! `u8` record tag (0 step, 1 update, 2 end); step frames carry
+//! `u32 LE` input count, the inputs as LE f32 bit patterns, a `u8` target
+//! kind (0 none, 1 class, 2 vector), then a `u64 LE` class or a
+//! `u32 LE`-counted f32 vector. [`encode_binary`] is the reference writer.
+//!
+//! [`EventReader`] wraps any [`BufRead`] source, autodetects the format
+//! from the leading bytes ([`EventFormat::detect`]) and yields
+//! `Result<StreamEvent, EventError>` — every error carries the 1-based
+//! line (or frame) number, so the CLI can report `file:line: message`.
 
+use crate::bench::json::{parse as json_parse, Json};
 use crate::data::StepTarget;
+use std::fmt;
+use std::io::BufRead;
 
 /// One parsed stream event.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,9 +56,172 @@ pub enum StreamEvent {
     EndSequence,
 }
 
-/// Parse one line. `Ok(None)` for blank/comment lines; `Err` carries a
-/// message without the line number (the caller knows the position).
-pub fn parse_event(line: &str) -> Result<Option<StreamEvent>, String> {
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// What went wrong with one event record (no position — [`EventError`]
+/// adds the line number).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventErrorKind {
+    /// A text input token failed to parse as a float.
+    BadValue { token: String },
+    /// The target after `->` (or in a JSON object) is invalid.
+    BadTarget { detail: String },
+    /// An event line has no input values.
+    EmptyInput,
+    /// A `!directive` other than `!update` / `!end`.
+    UnknownDirective { directive: String },
+    /// A JSON line failed to parse or has the wrong shape.
+    Json { detail: String },
+    /// A binary frame is truncated or structurally invalid.
+    BadFrame { detail: String },
+    /// The underlying reader failed (I/O error, non-UTF-8 text line).
+    Io { detail: String },
+}
+
+impl fmt::Display for EventErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EventErrorKind::BadValue { token } => write!(f, "bad input value {token:?}"),
+            EventErrorKind::BadTarget { detail } => write!(f, "bad target: {detail}"),
+            EventErrorKind::EmptyInput => write!(f, "event line has no input values"),
+            EventErrorKind::UnknownDirective { directive } => {
+                write!(f, "unknown directive {directive:?} (try !update or !end)")
+            }
+            EventErrorKind::Json { detail } => write!(f, "bad json event: {detail}"),
+            EventErrorKind::BadFrame { detail } => write!(f, "bad binary frame: {detail}"),
+            EventErrorKind::Io { detail } => write!(f, "read failed: {detail}"),
+        }
+    }
+}
+
+/// An [`EventErrorKind`] at a 1-based line (text/jsonl) or frame (binary)
+/// number. Displays as `line N: message`; the CLI prepends the file name
+/// for `file:line: message` reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventError {
+    pub line: u64,
+    pub kind: EventErrorKind,
+}
+
+impl fmt::Display for EventError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.kind)
+    }
+}
+
+impl std::error::Error for EventError {}
+
+impl EventError {
+    /// The CLI report form: `file:line: message`.
+    pub fn in_file(&self, file: &str) -> String {
+        format!("{file}:{}: {}", self.line, self.kind)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Formats
+// ---------------------------------------------------------------------
+
+/// Leading magic of a binary event stream (distinct from the snapshot
+/// magic, and not valid UTF-8-decimal text, so detection is unambiguous).
+pub const BINARY_MAGIC: [u8; 8] = *b"SRTLEVS1";
+
+/// Sanity cap on per-frame element counts in the binary format: a
+/// corrupted count fails loudly instead of attempting a huge allocation.
+const MAX_FRAME_ELEMS: u32 = 1 << 20;
+
+/// The event-stream wire formats the `stream` subcommand accepts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventFormat {
+    /// Line-oriented text (`0.5 -0.2 -> 1`, `!update`, `!end`).
+    Text,
+    /// One JSON object per line (`{"x": [...], "class": 1}`).
+    JsonLines,
+    /// Magic + raw little-endian f32 frames.
+    Binary,
+}
+
+impl EventFormat {
+    /// Canonical CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventFormat::Text => "text",
+            EventFormat::JsonLines => "jsonl",
+            EventFormat::Binary => "binary",
+        }
+    }
+
+    /// Inverse of [`EventFormat::name`].
+    pub fn from_name(name: &str) -> Option<EventFormat> {
+        match name {
+            "text" => Some(EventFormat::Text),
+            "jsonl" => Some(EventFormat::JsonLines),
+            "binary" => Some(EventFormat::Binary),
+            _ => None,
+        }
+    }
+
+    /// Every format, registry-style (CLI error messages).
+    pub fn all() -> [EventFormat; 3] {
+        [EventFormat::Text, EventFormat::JsonLines, EventFormat::Binary]
+    }
+
+    /// Identify the format from the stream's leading bytes: the binary
+    /// magic wins, a leading `{` means JSON lines, anything else is text
+    /// (text is the lenient fallback — it reports its own errors per line).
+    pub fn detect(prefix: &[u8]) -> EventFormat {
+        if prefix.starts_with(&BINARY_MAGIC) {
+            return EventFormat::Binary;
+        }
+        match prefix.iter().find(|b| !b.is_ascii_whitespace()) {
+            Some(&b'{') => EventFormat::JsonLines,
+            _ => EventFormat::Text,
+        }
+    }
+}
+
+impl fmt::Display for EventFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Text format
+// ---------------------------------------------------------------------
+
+/// Whether a target token selects the **class** interpretation: a bare
+/// unsigned integer (`1`, `42`). Decimal/signed/exponent forms (`1.0`,
+/// `-1`, `5e-1`) are vector components.
+fn is_class_token(tok: &str) -> bool {
+    !tok.is_empty() && tok.bytes().all(|b| b.is_ascii_digit())
+}
+
+fn parse_target_tokens(spec: &str) -> Result<StepTarget, EventErrorKind> {
+    let toks: Vec<&str> = spec.split_whitespace().collect();
+    let bad = |detail: String| EventErrorKind::BadTarget { detail };
+    match toks.as_slice() {
+        [] => Err(bad("nothing after \"->\"".into())),
+        [tok] if is_class_token(tok) => tok
+            .parse::<usize>()
+            .map(StepTarget::Class)
+            .map_err(|_| bad(format!("class {tok:?} out of range"))),
+        toks => toks
+            .iter()
+            .map(|tok| {
+                tok.parse::<f32>()
+                    .map_err(|_| bad(format!("cannot parse {tok:?} as a number")))
+            })
+            .collect::<Result<Vec<f32>, _>>()
+            .map(StepTarget::Vector),
+    }
+}
+
+/// Parse one **text** line. `Ok(None)` for blank/comment lines; the error
+/// carries no position (the caller — [`EventReader`] — knows the line).
+pub fn parse_event(line: &str) -> Result<Option<StreamEvent>, EventErrorKind> {
     let line = line.split('#').next().unwrap_or("").trim();
     if line.is_empty() {
         return Ok(None);
@@ -33,7 +230,7 @@ pub fn parse_event(line: &str) -> Result<Option<StreamEvent>, String> {
         "!update" => return Ok(Some(StreamEvent::Update)),
         "!end" => return Ok(Some(StreamEvent::EndSequence)),
         other if other.starts_with('!') => {
-            return Err(format!("unknown directive {other:?} (try !update or !end)"))
+            return Err(EventErrorKind::UnknownDirective { directive: other.to_string() })
         }
         _ => {}
     }
@@ -43,23 +240,316 @@ pub fn parse_event(line: &str) -> Result<Option<StreamEvent>, String> {
     };
     let x = xpart
         .split_whitespace()
-        .map(|tok| tok.parse::<f32>().map_err(|_| format!("bad input value {tok:?}")))
-        .collect::<Result<Vec<f32>, String>>()?;
+        .map(|tok| {
+            tok.parse::<f32>().map_err(|_| EventErrorKind::BadValue { token: tok.to_string() })
+        })
+        .collect::<Result<Vec<f32>, EventErrorKind>>()?;
     if x.is_empty() {
-        return Err("event line has no input values".into());
+        return Err(EventErrorKind::EmptyInput);
     }
     let target = match tpart {
         None => StepTarget::None,
-        Some(t) => StepTarget::Class(
-            t.parse::<usize>().map_err(|_| format!("bad class target {t:?}"))?,
-        ),
+        Some(t) => parse_target_tokens(t)?,
     };
     Ok(Some(StreamEvent::Step { x, target }))
+}
+
+// ---------------------------------------------------------------------
+// JSON-lines format
+// ---------------------------------------------------------------------
+
+fn f32s_from_json(arr: &Json, what: &str) -> Result<Vec<f32>, EventErrorKind> {
+    arr.as_arr()
+        .ok_or_else(|| EventErrorKind::Json { detail: format!("{what} must be an array") })?
+        .iter()
+        .map(|v| {
+            v.as_f64().map(|x| x as f32).ok_or_else(|| EventErrorKind::Json {
+                detail: format!("{what} holds a non-number"),
+            })
+        })
+        .collect()
+}
+
+/// Parse one **JSON-lines** record. `Ok(None)` for blank lines.
+pub fn parse_jsonl_event(line: &str) -> Result<Option<StreamEvent>, EventErrorKind> {
+    if line.trim().is_empty() {
+        return Ok(None);
+    }
+    let doc = json_parse(line.trim()).map_err(|e| EventErrorKind::Json { detail: e })?;
+    if let Some(ev) = doc.get("event") {
+        return match ev.as_str() {
+            Some("update") => Ok(Some(StreamEvent::Update)),
+            Some("end") => Ok(Some(StreamEvent::EndSequence)),
+            _ => Err(EventErrorKind::Json {
+                detail: "\"event\" must be \"update\" or \"end\"".into(),
+            }),
+        };
+    }
+    let x = f32s_from_json(
+        doc.get("x").ok_or(EventErrorKind::Json {
+            detail: "object needs \"x\" (a step) or \"event\" (a directive)".into(),
+        })?,
+        "\"x\"",
+    )?;
+    if x.is_empty() {
+        return Err(EventErrorKind::EmptyInput);
+    }
+    let target = match (doc.get("class"), doc.get("target")) {
+        (Some(_), Some(_)) => {
+            return Err(EventErrorKind::BadTarget {
+                detail: "\"class\" and \"target\" are mutually exclusive".into(),
+            })
+        }
+        (Some(c), None) => StepTarget::Class(c.as_u64().ok_or_else(|| {
+            EventErrorKind::BadTarget { detail: "\"class\" must be an unsigned integer".into() }
+        })? as usize),
+        (None, Some(t)) => StepTarget::Vector(f32s_from_json(t, "\"target\"")?),
+        (None, None) => StepTarget::None,
+    };
+    Ok(Some(StreamEvent::Step { x, target }))
+}
+
+// ---------------------------------------------------------------------
+// Binary format
+// ---------------------------------------------------------------------
+
+/// Append one event as a binary frame (no magic — see [`encode_binary`]).
+pub fn write_event_binary(out: &mut Vec<u8>, ev: &StreamEvent) {
+    match ev {
+        StreamEvent::Update => out.push(1),
+        StreamEvent::EndSequence => out.push(2),
+        StreamEvent::Step { x, target } => {
+            out.push(0);
+            out.extend_from_slice(&(x.len() as u32).to_le_bytes());
+            for v in x {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            match target {
+                StepTarget::None => out.push(0),
+                StepTarget::Class(c) => {
+                    out.push(1);
+                    out.extend_from_slice(&(*c as u64).to_le_bytes());
+                }
+                StepTarget::Vector(t) => {
+                    out.push(2);
+                    out.extend_from_slice(&(t.len() as u32).to_le_bytes());
+                    for v in t {
+                        out.extend_from_slice(&v.to_bits().to_le_bytes());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Reference writer for the binary event format: magic + one frame per
+/// event. f32s travel as bit patterns, so a text→binary→parse round trip
+/// is bit-exact.
+pub fn encode_binary(events: &[StreamEvent]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + 16 * events.len());
+    out.extend_from_slice(&BINARY_MAGIC);
+    for ev in events {
+        write_event_binary(&mut out, ev);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------
+
+/// Format-dispatching event reader over any [`BufRead`] source — the one
+/// ingestion path the `stream` subcommand uses for files and stdin.
+///
+/// Iterates `Result<StreamEvent, EventError>`; blank/comment records are
+/// skipped, and errors carry the 1-based line (text/jsonl) or frame
+/// (binary) number. Iteration ends at EOF or after the first error.
+pub struct EventReader<R: BufRead> {
+    src: R,
+    format: EventFormat,
+    /// 1-based position of the record most recently read.
+    line: u64,
+    /// Binary: magic already consumed?
+    started: bool,
+    failed: bool,
+}
+
+impl<R: BufRead> EventReader<R> {
+    /// Read events of a known format.
+    pub fn new(src: R, format: EventFormat) -> Self {
+        EventReader { src, format, line: 0, started: false, failed: false }
+    }
+
+    /// Sniff the format from the stream's first buffered bytes, then read.
+    pub fn autodetect(mut src: R) -> std::io::Result<Self> {
+        let format = EventFormat::detect(src.fill_buf()?);
+        Ok(Self::new(src, format))
+    }
+
+    /// The format this reader is decoding.
+    pub fn format(&self) -> EventFormat {
+        self.format
+    }
+
+    /// 1-based line (text/jsonl) or frame (binary) number of the record
+    /// most recently yielded — for `file:line:` reports about events that
+    /// parsed but are invalid for the consumer (e.g. wrong input width).
+    pub fn line(&self) -> u64 {
+        self.line.max(1)
+    }
+
+    fn err(&mut self, kind: EventErrorKind) -> Option<Result<StreamEvent, EventError>> {
+        self.failed = true;
+        Some(Err(EventError { line: self.line.max(1), kind }))
+    }
+
+    fn next_line(&mut self) -> Result<Option<String>, EventErrorKind> {
+        let mut buf = String::new();
+        match self.src.read_line(&mut buf) {
+            Ok(0) => Ok(None),
+            Ok(_) => {
+                self.line += 1;
+                Ok(Some(buf))
+            }
+            Err(e) => {
+                self.line += 1; // the failing line
+                Err(EventErrorKind::Io { detail: e.to_string() })
+            }
+        }
+    }
+
+    fn read_exact(&mut self, buf: &mut [u8]) -> Result<(), EventErrorKind> {
+        use std::io::Read;
+        self.src.read_exact(buf).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                EventErrorKind::BadFrame { detail: "truncated frame".into() }
+            } else {
+                EventErrorKind::Io { detail: e.to_string() }
+            }
+        })
+    }
+
+    fn read_u32(&mut self) -> Result<u32, EventErrorKind> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn read_f32s(&mut self, what: &str) -> Result<Vec<f32>, EventErrorKind> {
+        let n = self.read_u32()?;
+        if n == 0 || n > MAX_FRAME_ELEMS {
+            return Err(EventErrorKind::BadFrame {
+                detail: format!("{what} count {n} outside 1..={MAX_FRAME_ELEMS}"),
+            });
+        }
+        let mut out = Vec::with_capacity(n as usize);
+        let mut b = [0u8; 4];
+        for _ in 0..n {
+            self.read_exact(&mut b)?;
+            out.push(f32::from_bits(u32::from_le_bytes(b)));
+        }
+        Ok(out)
+    }
+
+    fn next_binary(&mut self) -> Result<Option<StreamEvent>, EventErrorKind> {
+        use std::io::Read;
+        if !self.started {
+            let mut magic = [0u8; 8];
+            self.line = 1;
+            self.read_exact(&mut magic)?;
+            if magic != BINARY_MAGIC {
+                return Err(EventErrorKind::BadFrame {
+                    detail: "stream does not start with the event magic".into(),
+                });
+            }
+            self.started = true;
+            self.line = 0;
+        }
+        let mut tag = [0u8; 1];
+        // EOF at a frame boundary is the clean end of the stream
+        match self.src.read(&mut tag) {
+            Ok(0) => return Ok(None),
+            Ok(_) => {}
+            Err(e) => return Err(EventErrorKind::Io { detail: e.to_string() }),
+        }
+        self.line += 1;
+        match tag[0] {
+            1 => Ok(Some(StreamEvent::Update)),
+            2 => Ok(Some(StreamEvent::EndSequence)),
+            0 => {
+                let x = self.read_f32s("input")?;
+                let mut tkind = [0u8; 1];
+                self.read_exact(&mut tkind)?;
+                let target = match tkind[0] {
+                    0 => StepTarget::None,
+                    1 => {
+                        let mut b = [0u8; 8];
+                        self.read_exact(&mut b)?;
+                        let c = u64::from_le_bytes(b);
+                        usize::try_from(c)
+                            .map(StepTarget::Class)
+                            .map_err(|_| EventErrorKind::BadTarget {
+                                detail: format!("class {c} out of range"),
+                            })?
+                    }
+                    2 => StepTarget::Vector(self.read_f32s("target")?),
+                    k => {
+                        return Err(EventErrorKind::BadFrame {
+                            detail: format!("unknown target kind {k}"),
+                        })
+                    }
+                };
+                Ok(Some(StreamEvent::Step { x, target }))
+            }
+            t => Err(EventErrorKind::BadFrame { detail: format!("unknown record tag {t}") }),
+        }
+    }
+}
+
+impl<R: BufRead> Iterator for EventReader<R> {
+    type Item = Result<StreamEvent, EventError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.failed {
+            return None;
+        }
+        loop {
+            match self.format {
+                EventFormat::Binary => {
+                    return match self.next_binary() {
+                        Ok(Some(ev)) => Some(Ok(ev)),
+                        Ok(None) => None,
+                        Err(kind) => self.err(kind),
+                    }
+                }
+                EventFormat::Text | EventFormat::JsonLines => {
+                    let line = match self.next_line() {
+                        Ok(Some(line)) => line,
+                        Ok(None) => return None,
+                        Err(kind) => return self.err(kind),
+                    };
+                    let parsed = match self.format {
+                        EventFormat::Text => parse_event(&line),
+                        _ => parse_jsonl_event(&line),
+                    };
+                    match parsed {
+                        Ok(Some(ev)) => return Some(Ok(ev)),
+                        Ok(None) => continue, // blank/comment line
+                        Err(kind) => return self.err(kind),
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn step(x: &[f32], target: StepTarget) -> StreamEvent {
+        StreamEvent::Step { x: x.to_vec(), target }
+    }
 
     #[test]
     fn parses_steps_targets_and_directives() {
@@ -67,21 +557,167 @@ mod tests {
         assert_eq!(parse_event("  # just a comment").unwrap(), None);
         assert_eq!(
             parse_event("0.5 -0.2").unwrap(),
-            Some(StreamEvent::Step { x: vec![0.5, -0.2], target: StepTarget::None })
+            Some(step(&[0.5, -0.2], StepTarget::None))
         );
         assert_eq!(
             parse_event("1.0 2.0 -> 1  # recall").unwrap(),
-            Some(StreamEvent::Step { x: vec![1.0, 2.0], target: StepTarget::Class(1) })
+            Some(step(&[1.0, 2.0], StepTarget::Class(1)))
         );
         assert_eq!(parse_event("!update").unwrap(), Some(StreamEvent::Update));
         assert_eq!(parse_event("!end").unwrap(), Some(StreamEvent::EndSequence));
     }
 
     #[test]
-    fn malformed_lines_error() {
-        assert!(parse_event("abc").is_err());
-        assert!(parse_event("0.5 -> x").is_err());
-        assert!(parse_event("-> 1").is_err());
-        assert!(parse_event("!frobnicate").is_err());
+    fn regression_targets_parse_as_vectors() {
+        assert_eq!(
+            parse_event("0.5 -0.2 -> 0.5 0.25").unwrap(),
+            Some(step(&[0.5, -0.2], StepTarget::Vector(vec![0.5, 0.25])))
+        );
+        // ambiguous single number: integer form is a class…
+        assert_eq!(
+            parse_event("1.0 -> 2").unwrap(),
+            Some(step(&[1.0], StepTarget::Class(2)))
+        );
+        // …while decimal / signed / exponent forms are one-element vectors
+        assert_eq!(
+            parse_event("1.0 -> 2.0").unwrap(),
+            Some(step(&[1.0], StepTarget::Vector(vec![2.0])))
+        );
+        assert_eq!(
+            parse_event("1.0 -> -1").unwrap(),
+            Some(step(&[1.0], StepTarget::Vector(vec![-1.0])))
+        );
+        assert_eq!(
+            parse_event("1.0 -> 5e-1").unwrap(),
+            Some(step(&[1.0], StepTarget::Vector(vec![0.5])))
+        );
+    }
+
+    #[test]
+    fn malformed_lines_error_with_typed_kinds() {
+        assert!(matches!(parse_event("abc"), Err(EventErrorKind::BadValue { .. })));
+        assert!(matches!(parse_event("0.5 -> x"), Err(EventErrorKind::BadTarget { .. })));
+        assert!(matches!(parse_event("-> 1"), Err(EventErrorKind::EmptyInput)));
+        assert!(matches!(parse_event("0.5 ->"), Err(EventErrorKind::BadTarget { .. })));
+        assert!(matches!(
+            parse_event("!frobnicate"),
+            Err(EventErrorKind::UnknownDirective { .. })
+        ));
+    }
+
+    #[test]
+    fn jsonl_events_parse() {
+        assert_eq!(parse_jsonl_event("   ").unwrap(), None);
+        assert_eq!(
+            parse_jsonl_event(r#"{"x": [0.5, -0.2]}"#).unwrap(),
+            Some(step(&[0.5, -0.2], StepTarget::None))
+        );
+        assert_eq!(
+            parse_jsonl_event(r#"{"x": [1.0], "class": 3}"#).unwrap(),
+            Some(step(&[1.0], StepTarget::Class(3)))
+        );
+        assert_eq!(
+            parse_jsonl_event(r#"{"x": [1.0], "target": [0.5, 0.25]}"#).unwrap(),
+            Some(step(&[1.0], StepTarget::Vector(vec![0.5, 0.25])))
+        );
+        assert_eq!(parse_jsonl_event(r#"{"event": "update"}"#).unwrap(), Some(StreamEvent::Update));
+        assert_eq!(parse_jsonl_event(r#"{"event": "end"}"#).unwrap(), Some(StreamEvent::EndSequence));
+        assert!(matches!(parse_jsonl_event("{"), Err(EventErrorKind::Json { .. })));
+        assert!(matches!(parse_jsonl_event(r#"{"y": 1}"#), Err(EventErrorKind::Json { .. })));
+        assert!(matches!(
+            parse_jsonl_event(r#"{"x": [1.0], "class": 1, "target": [2.0]}"#),
+            Err(EventErrorKind::BadTarget { .. })
+        ));
+        assert!(matches!(
+            parse_jsonl_event(r#"{"event": "frobnicate"}"#),
+            Err(EventErrorKind::Json { .. })
+        ));
+    }
+
+    #[test]
+    fn format_detection() {
+        assert_eq!(EventFormat::detect(&encode_binary(&[])), EventFormat::Binary);
+        assert_eq!(EventFormat::detect(b"  {\"x\": [1]}"), EventFormat::JsonLines);
+        assert_eq!(EventFormat::detect(b"0.5 -0.2 -> 1"), EventFormat::Text);
+        assert_eq!(EventFormat::detect(b""), EventFormat::Text);
+        for f in EventFormat::all() {
+            assert_eq!(EventFormat::from_name(f.name()), Some(f));
+        }
+        assert_eq!(EventFormat::from_name("csv"), None);
+    }
+
+    fn sample_events() -> Vec<StreamEvent> {
+        vec![
+            step(&[0.5, -0.2], StepTarget::None),
+            step(&[1.0, 2.0], StepTarget::Class(1)),
+            step(&[-0.0, f32::MIN_POSITIVE], StepTarget::Vector(vec![0.5, 0.25])),
+            StreamEvent::Update,
+            StreamEvent::EndSequence,
+        ]
+    }
+
+    /// The three formats describe the same stream: binary and jsonl
+    /// renderings of the same events parse back identically (bit-exact for
+    /// binary, which carries f32 bit patterns).
+    #[test]
+    fn binary_round_trip_is_bit_exact() {
+        let events = sample_events();
+        let bytes = encode_binary(&events);
+        let reader = EventReader::autodetect(std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(reader.format(), EventFormat::Binary);
+        let back: Vec<StreamEvent> = reader.map(|r| r.unwrap()).collect();
+        assert_eq!(back, events);
+        // -0.0 survived as -0.0
+        match &back[2] {
+            StreamEvent::Step { x, .. } => assert_eq!(x[0].to_bits(), (-0.0f32).to_bits()),
+            other => panic!("expected a step, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reader_reports_line_numbers() {
+        let text = "0.5 -0.2\n# comment\n\n0.5 bad\n";
+        let mut reader =
+            EventReader::new(std::io::Cursor::new(text.as_bytes()), EventFormat::Text);
+        assert!(reader.next().unwrap().is_ok());
+        let err = reader.next().unwrap().unwrap_err();
+        assert_eq!(err.line, 4, "comment/blank lines still count for positions");
+        assert!(matches!(err.kind, EventErrorKind::BadValue { .. }));
+        assert_eq!(err.in_file("events.txt"), format!("events.txt:4: {}", err.kind));
+        assert!(reader.next().is_none(), "iteration stops after an error");
+    }
+
+    #[test]
+    fn truncated_binary_frame_is_a_typed_error() {
+        let mut bytes = encode_binary(&sample_events());
+        bytes.truncate(bytes.len() - 3);
+        let errs: Vec<_> = EventReader::autodetect(std::io::Cursor::new(&bytes))
+            .unwrap()
+            .filter_map(|r| r.err())
+            .collect();
+        assert_eq!(errs.len(), 1);
+        assert!(matches!(errs[0].kind, EventErrorKind::BadFrame { .. }), "{:?}", errs[0]);
+    }
+
+    #[test]
+    fn corrupt_binary_count_never_allocates_huge() {
+        let mut bytes = encode_binary(&[step(&[1.0, 2.0], StepTarget::None)]);
+        // frame starts after the 8-byte magic: tag at 8, count at 9..13
+        bytes[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        let errs: Vec<_> = EventReader::new(std::io::Cursor::new(&bytes), EventFormat::Binary)
+            .filter_map(|r| r.err())
+            .collect();
+        assert_eq!(errs.len(), 1);
+        assert!(matches!(errs[0].kind, EventErrorKind::BadFrame { .. }));
+    }
+
+    #[test]
+    fn jsonl_reader_drives_a_stream() {
+        let text = "{\"x\": [0.1, 0.2]}\n\n{\"x\": [0.3, 0.4], \"class\": 0}\n{\"event\": \"end\"}\n";
+        let reader = EventReader::autodetect(std::io::Cursor::new(text.as_bytes())).unwrap();
+        assert_eq!(reader.format(), EventFormat::JsonLines);
+        let events: Vec<StreamEvent> = reader.map(|r| r.unwrap()).collect();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[2], StreamEvent::EndSequence);
     }
 }

@@ -15,11 +15,18 @@
 //!   moments, stream counters and the engine's versioned
 //!   [`crate::rtrl::EngineState`] snapshot (influence panels, UORO rank-1
 //!   vectors + noise-RNG position, SnAp slabs, the BPTT tape) all travel in
-//!   one JSON document ([`checkpoint`]).
+//!   one [`SessionCheckpoint`] ([`checkpoint`]).
+//! * [`codec`]: the snapshot wire formats — a versioned, CRC-checksummed
+//!   binary container ([`SnapshotFormat::Binary`], the spill format) and
+//!   the JSON debug interchange ([`SnapshotFormat::Json`]) — behind one
+//!   [`codec::SnapshotCodec`] facade with format autodetection on load.
 //! * [`SessionPool`]: N independent sessions (one per user) stepped
-//!   concurrently over the in-tree worker pool.
-//! * [`events`]: the line-oriented event format the `sparse-rtrl stream`
-//!   subcommand reads from a file or stdin.
+//!   concurrently over the in-tree worker pool, with codec-backed
+//!   [`SessionPool::evict`] / [`SessionPool::admit`] for spilling idle
+//!   sessions to disk.
+//! * [`events`]: event-stream ingestion for the `sparse-rtrl stream`
+//!   subcommand — text lines, JSON-lines and raw binary f32 frames behind
+//!   one [`EventFormat`] dispatch, also format-autodetected.
 //!
 //! The batch [`crate::train::Trainer`] is a thin client of
 //! [`OnlineSession`] (manual policy + per-minibatch
@@ -27,11 +34,13 @@
 //! streaming surface share one code path.
 
 pub mod checkpoint;
+pub mod codec;
 pub mod events;
 pub mod online;
 pub mod pool;
 
 pub use checkpoint::SessionCheckpoint;
-pub use events::{parse_event, StreamEvent};
+pub use codec::{CodecError, SnapshotCodec, SnapshotFormat};
+pub use events::{parse_event, EventError, EventErrorKind, EventFormat, EventReader, StreamEvent};
 pub use online::{OnlineSession, SessionBuilder, StepOutcome, UpdatePolicy};
 pub use pool::SessionPool;

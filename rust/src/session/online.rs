@@ -246,6 +246,13 @@ impl OnlineSession {
         &self.net
     }
 
+    /// Output width: the class count for classification targets, and the
+    /// required length of [`crate::rtrl::Target::Vector`] regression
+    /// targets.
+    pub fn n_out(&self) -> usize {
+        self.readout.n_out()
+    }
+
     /// Mutable stack access (mask rewiring). Callers that change masks must
     /// [`OnlineSession::rebuild_engine`] afterwards.
     pub fn net_mut(&mut self) -> &mut LayerStack {
@@ -509,6 +516,44 @@ mod tests {
         assert!(outs2.iter().any(|o| o.prediction.is_none()));
         // the extra readout forwards cost ops
         assert!(s.ops.total_macs() > s2.ops.total_macs());
+    }
+
+    /// Satellite contract: the chainable [`SessionBuilder::threads`] and the
+    /// post-build [`OnlineSession::set_threads`] are the same knob — and a
+    /// pure wall-clock knob at that, so any thread count produces
+    /// bit-identical outcomes to the serial default.
+    #[test]
+    fn builder_threads_matches_set_threads_bit_exactly() {
+        let via_builder = {
+            let mut s = tiny_builder()
+                .algorithm(AlgorithmKind::RtrlBoth)
+                .policy(UpdatePolicy::EveryKSteps(1))
+                .threads(3)
+                .build();
+            drive(&mut s, 18, 11)
+        };
+        let via_setter = {
+            let mut s = tiny_builder()
+                .algorithm(AlgorithmKind::RtrlBoth)
+                .policy(UpdatePolicy::EveryKSteps(1))
+                .build();
+            s.set_threads(3);
+            drive(&mut s, 18, 11)
+        };
+        let serial = {
+            let mut s = tiny_builder()
+                .algorithm(AlgorithmKind::RtrlBoth)
+                .policy(UpdatePolicy::EveryKSteps(1))
+                .build();
+            drive(&mut s, 18, 11)
+        };
+        let bits = |outs: &[StepOutcome]| {
+            outs.iter()
+                .map(|o| (o.step, o.loss.map(f32::to_bits), o.prediction, o.updated))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&via_builder), bits(&via_setter), "builder vs setter diverged");
+        assert_eq!(bits(&via_builder), bits(&serial), "threads changed results");
     }
 
     /// The online loop actually learns: on a fixed-association stream the

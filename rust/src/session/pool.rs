@@ -6,10 +6,18 @@
 //! worker threads ([`crate::util::pool`]). Sessions are `Send` (the
 //! [`crate::rtrl::GradientEngine`] contract requires it), so they migrate
 //! freely between workers; results always return in session order.
+//!
+//! Idle users need not stay resident: [`SessionPool::evict`] spills a
+//! session to disk through the snapshot codec facade
+//! ([`crate::session::codec`], binary by default) and
+//! [`SessionPool::admit`] restores it — bit-exactly, in either snapshot
+//! format — when the user returns.
 
+use super::codec::{self, SnapshotFormat};
 use super::online::{OnlineSession, StepOutcome};
 use crate::data::StepTarget;
 use crate::util::pool::run_parallel;
+use std::path::Path;
 
 /// A fixed set of independent sessions plus a worker-thread budget.
 pub struct SessionPool {
@@ -49,6 +57,33 @@ impl SessionPool {
     /// Tear down into the individual sessions (checkpointing each, say).
     pub fn into_sessions(self) -> Vec<OnlineSession> {
         self.sessions
+    }
+
+    /// Spill session `i` to `path` in the given snapshot format and drop it
+    /// from the pool (later sessions shift down one index). The session is
+    /// only removed after the snapshot is durably written, so a failed
+    /// write never loses learner state.
+    pub fn evict(&mut self, i: usize, path: &Path, format: SnapshotFormat) -> Result<(), String> {
+        if i >= self.sessions.len() {
+            return Err(format!("no session {i} in a pool of {}", self.sessions.len()));
+        }
+        let bytes = codec::encode(&self.sessions[i].checkpoint(), format);
+        std::fs::write(path, &bytes)
+            .map_err(|e| format!("cannot write snapshot {}: {e}", path.display()))?;
+        self.sessions.remove(i);
+        Ok(())
+    }
+
+    /// Restore a previously evicted session from `path` (either snapshot
+    /// format, autodetected) and append it to the pool. Returns the new
+    /// session's index. Resumption is bit-exact: the readmitted learner
+    /// continues its stream as if it had never left memory.
+    pub fn admit(&mut self, path: &Path) -> Result<usize, String> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| format!("cannot read snapshot {}: {e}", path.display()))?;
+        let ck = codec::decode(&bytes).map_err(|e| e.to_string())?;
+        self.sessions.push(OnlineSession::resume(&ck)?);
+        Ok(self.sessions.len() - 1)
     }
 
     /// Deliver one event per session (index-aligned) and step them all
@@ -196,6 +231,42 @@ mod tests {
             assert_eq!(o.step, 1);
             assert!(o.loss.is_some());
         }
+    }
+
+    /// Evict a session to disk (binary snapshot), admit it back, and the
+    /// readmitted learner produces bit-identical outcomes to a twin that
+    /// never left memory.
+    #[test]
+    fn evict_admit_round_trip_is_bit_exact() {
+        let dir = std::env::temp_dir()
+            .join(format!("sparse-rtrl-pool-evict-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let spill = dir.join("user1.snap");
+
+        let mut pool = make_pool(3, 2);
+        for round in 0..5 {
+            pool.run_each(|i, s| {
+                s.step(&[(i + round) as f32 * 0.2, -0.3], Target::Class((i + round) % 2))
+            });
+        }
+        // twin of session 1 that stays resident
+        let twin_ck = pool.session(1).checkpoint();
+        let mut twin = OnlineSession::resume(&twin_ck).unwrap();
+
+        pool.evict(1, &spill, SnapshotFormat::Binary).unwrap();
+        assert_eq!(pool.len(), 2);
+        assert!(pool.evict(7, &spill, SnapshotFormat::Binary).is_err());
+
+        let idx = pool.admit(&spill).unwrap();
+        assert_eq!((pool.len(), idx), (3, 2), "readmitted at the end");
+        let back = pool.session_mut(idx);
+        for round in 0..4 {
+            let a = back.step(&[0.7, -0.1 * round as f32], Target::Class(round % 2));
+            let b = twin.step(&[0.7, -0.1 * round as f32], Target::Class(round % 2));
+            assert_eq!(a.loss.map(f32::to_bits), b.loss.map(f32::to_bits), "round {round}");
+            assert_eq!(a.prediction, b.prediction);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// Pool results are deterministic regardless of worker interleaving: a

@@ -1,0 +1,58 @@
+//! CRC-32 (IEEE 802.3, the zlib/PNG polynomial) — in-tree because the build
+//! vendors no checksum crate. Used by the binary snapshot codec
+//! ([`crate::session::codec`]) to checksum each section payload so a
+//! flipped bit in a spilled checkpoint fails loudly on load instead of
+//! resuming a session from silently corrupted state.
+
+/// Reflected polynomial of CRC-32/ISO-HDLC.
+const POLY: u32 = 0xEDB8_8320;
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `bytes` (init `0xFFFF_FFFF`, final xor `0xFFFF_FFFF` — the
+/// standard zlib convention, so values can be cross-checked with any
+/// external `crc32` tool).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The standard check value of CRC-32/ISO-HDLC.
+    #[test]
+    fn known_vectors() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn single_bit_flip_changes_checksum() {
+        let a = b"some section payload".to_vec();
+        let mut b = a.clone();
+        b[7] ^= 0x04;
+        assert_ne!(crc32(&a), crc32(&b));
+    }
+}

@@ -1,6 +1,7 @@
 //! Small utilities: deterministic RNG, math helpers, progress reporting.
 
 pub mod cli;
+pub mod crc32;
 pub mod math;
 pub mod pool;
 pub mod rng;

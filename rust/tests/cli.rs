@@ -171,6 +171,193 @@ fn stream_checkpoint_resume_across_processes_is_exact() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The binary snapshot at the process boundary: checkpoint to the default
+/// binary format in one process, resume in another, and the second half of
+/// the stream is byte-identical both to the uninterrupted run and to a
+/// JSON-checkpointed twin — cross-format equivalence, end to end.
+#[test]
+fn stream_binary_checkpoint_matches_json_across_processes() {
+    let dir = scratch("binresume");
+    let all = dir.join("all.txt");
+    let head = dir.join("head.txt");
+    let tail = dir.join("tail.txt");
+    let ck_bin = dir.join("ck.snap");
+    let ck_json = dir.join("ck.json");
+    std::fs::write(&all, event_lines(0..24)).unwrap();
+    std::fs::write(&head, event_lines(0..12)).unwrap();
+    std::fs::write(&tail, event_lines(12..24)).unwrap();
+
+    let full = run(&["stream", "--input", all.to_str().unwrap(), "--seed", "9"]);
+    assert!(full.status.success(), "{}", stderr_of(&full));
+    let full_lines: Vec<String> = stdout_of(&full).lines().map(str::to_string).collect();
+
+    for ck in [&ck_bin, &ck_json] {
+        let first = run(&[
+            "stream",
+            "--input",
+            head.to_str().unwrap(),
+            "--seed",
+            "9",
+            "--checkpoint",
+            ck.to_str().unwrap(),
+        ]);
+        assert!(first.status.success(), "{}", stderr_of(&first));
+        assert!(stderr_of(&first).contains("checkpoint written to"), "{}", stderr_of(&first));
+    }
+    // `.snap` means the binary container, `.json` the debug interchange
+    let bin_bytes = std::fs::read(&ck_bin).unwrap();
+    let json_bytes = std::fs::read(&ck_json).unwrap();
+    assert_eq!(&bin_bytes[..8], b"SRTLSNAP", "default checkpoint is not the binary container");
+    assert_eq!(json_bytes[0], b'{', "ck.json is not a JSON document");
+    assert!(
+        bin_bytes.len() * 3 <= json_bytes.len(),
+        "binary snapshot ({} B) not 3x smaller than JSON ({} B)",
+        bin_bytes.len(),
+        json_bytes.len()
+    );
+
+    let mut resumed = Vec::new();
+    for ck in [&ck_bin, &ck_json] {
+        let second = run(&[
+            "stream",
+            "--input",
+            tail.to_str().unwrap(),
+            "--resume",
+            ck.to_str().unwrap(),
+        ]);
+        assert!(second.status.success(), "{}", stderr_of(&second));
+        assert!(
+            stderr_of(&second).contains("resumed session at step 12"),
+            "{}",
+            stderr_of(&second)
+        );
+        resumed.push(stdout_of(&second).lines().map(str::to_string).collect::<Vec<_>>());
+    }
+    assert_eq!(resumed[0], &full_lines[12..], "binary-resumed run diverged from uninterrupted");
+    assert_eq!(resumed[0], resumed[1], "binary- and json-resumed runs disagree");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A malformed event is reported as `file:line: message`, counting real
+/// file lines (comments and blanks included), and the process fails.
+#[test]
+fn stream_bad_event_reports_file_and_line() {
+    let dir = scratch("badline");
+    let events = dir.join("events.txt");
+    std::fs::write(&events, "# header comment\n0.1 0.2\n\n0.3 bogus\n").unwrap();
+    let out = run(&["stream", "--input", events.to_str().unwrap()]);
+    assert!(!out.status.success(), "malformed input must fail the stream");
+    let err = stderr_of(&out);
+    assert!(err.contains("events.txt:4:"), "no file:line prefix: {err}");
+    assert!(err.contains("bogus"), "offending token not echoed: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// JSON-lines events built from the text values, consumed via the same
+/// `--input` flag.
+fn jsonl_lines(range: std::ops::Range<usize>) -> String {
+    let mut s = String::new();
+    for i in range {
+        let a = ((i as f32) * 0.37).sin();
+        let b = ((i as f32) * 0.23).cos();
+        if i % 3 == 2 {
+            s.push_str(&format!("{{\"x\": [{a}, {b}], \"class\": {}}}\n", i % 2));
+        } else {
+            s.push_str(&format!("{{\"x\": [{a}, {b}]}}\n"));
+        }
+    }
+    s
+}
+
+/// The same stream in all three event formats — text, JSON-lines, raw
+/// binary frames — autodetected from the bytes, produces byte-identical
+/// session output.
+#[test]
+fn stream_accepts_all_three_event_formats_identically() {
+    use sparse_rtrl::data::StepTarget;
+    use sparse_rtrl::session::{events, StreamEvent};
+
+    let dir = scratch("formats");
+    let text = dir.join("events.txt");
+    let jsonl = dir.join("events.jsonl");
+    let binary = dir.join("events.bin");
+    std::fs::write(&text, event_lines(0..9)).unwrap();
+    std::fs::write(&jsonl, jsonl_lines(0..9)).unwrap();
+    let evs: Vec<StreamEvent> = (0..9)
+        .map(|i| {
+            let a = ((i as f32) * 0.37).sin();
+            let b = ((i as f32) * 0.23).cos();
+            let target =
+                if i % 3 == 2 { StepTarget::Class(i % 2) } else { StepTarget::None };
+            StreamEvent::Step { x: vec![a, b], target }
+        })
+        .collect();
+    std::fs::write(&binary, events::encode_binary(&evs)).unwrap();
+
+    let outputs: Vec<String> = [&text, &jsonl, &binary]
+        .iter()
+        .map(|path| {
+            let out = run(&["stream", "--input", path.to_str().unwrap(), "--seed", "3"]);
+            assert!(out.status.success(), "{}: {}", path.display(), stderr_of(&out));
+            stdout_of(&out)
+        })
+        .collect();
+    assert_eq!(outputs[0], outputs[1], "jsonl stream diverged from text");
+    assert_eq!(outputs[0], outputs[2], "binary stream diverged from text");
+
+    // forcing the format explicitly agrees with autodetection
+    let forced = run(&[
+        "stream",
+        "--input",
+        jsonl.to_str().unwrap(),
+        "--seed",
+        "3",
+        "--event-format",
+        "jsonl",
+    ]);
+    assert!(forced.status.success(), "{}", stderr_of(&forced));
+    assert_eq!(stdout_of(&forced), outputs[1]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Regression targets in text form (`-> 0.2 0.8`) drive a session too:
+/// ambiguity rule is integer → class, anything else → vector. A vector of
+/// the wrong width is a `file:line:` error, not a crash.
+#[test]
+fn stream_accepts_regression_targets() {
+    let dir = scratch("regress");
+    let events = dir.join("events.txt");
+    // vector targets of width n_out (bundled tasks: 2 outputs)
+    let mut s = String::new();
+    for i in 0..6 {
+        let a = (i as f32) * 0.1;
+        if i % 2 == 1 {
+            s.push_str(&format!("{a} 0.5 -> 0.2 0.8\n"));
+        } else {
+            s.push_str(&format!("{a} 0.5\n"));
+        }
+    }
+    std::fs::write(&events, s).unwrap();
+    let out = run(&["stream", "--input", events.to_str().unwrap(), "--seed", "4"]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    let stdout = stdout_of(&out);
+    // the 3 supervised steps report a loss but no class prediction
+    let regression_lines = stdout
+        .lines()
+        .filter(|l| l.contains("pred=-") && l.contains("loss=") && !l.contains("loss=-"))
+        .count();
+    assert_eq!(regression_lines, 3, "regression loss lines missing:\n{stdout}");
+
+    let wide = dir.join("wide.txt");
+    std::fs::write(&wide, "0.1 0.5 -> 0.2 0.3 0.5\n").unwrap();
+    let bad = run(&["stream", "--input", wide.to_str().unwrap(), "--seed", "4"]);
+    assert!(!bad.status.success(), "wrong-width target must fail");
+    let err = stderr_of(&bad);
+    assert!(err.contains("wide.txt:1:"), "no file:line prefix: {err}");
+    assert!(err.contains("regression target has 3"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// `--resume` plus a config-shaping flag is contradictory and must fail.
 #[test]
 fn stream_resume_rejects_config_flags() {
