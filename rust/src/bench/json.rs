@@ -8,13 +8,15 @@
 //! reference for dispatching on [`SCHEMA_VERSION`]: v1 reports (single-cell
 //! era) carry no `layers` axis or per-layer counters; v2 adds depth; v3
 //! adds the intra-step `threads` axis and throughput fields; v4 adds the
-//! `snapshot_codecs` block (checkpoint encode/decode cost per format).
+//! `snapshot_codecs` block (checkpoint encode/decode cost per format); v5
+//! adds the `telemetry` block (observability overhead on the reference
+//! session).
 
 use super::{phase_name, BenchReport, CaseResult};
 use std::collections::BTreeMap;
 
 /// Schema identifier CI consumers can dispatch on.
-pub const SCHEMA: &str = "sparse-rtrl/bench/v4";
+pub const SCHEMA: &str = "sparse-rtrl/bench/v5";
 /// Monotone schema revision: bump on any breaking field change.
 /// * 1 — single-cell grid (engine × hidden × ω).
 /// * 2 — depth axis: `layers`, `macs_per_step_per_layer`,
@@ -27,7 +29,11 @@ pub const SCHEMA: &str = "sparse-rtrl/bench/v4";
 ///   encode/decode wall time on the reference session
 ///   ([`crate::bench::snapshot`]), so the binary-vs-JSON cost ratio is
 ///   part of the tracked perf trajectory.
-pub const SCHEMA_VERSION: u64 = 4;
+/// * 5 — `telemetry` at the top: ns/step with telemetry off vs on, the
+///   sampled α/β means and the step-latency summary on the reference
+///   session ([`crate::bench::telemetry`]), so the cost of observability
+///   is tracked like any other subsystem.
+pub const SCHEMA_VERSION: u64 = 5;
 
 /// Escape a string for a JSON string literal (without the quotes).
 pub fn escape(s: &str) -> String {
@@ -138,6 +144,25 @@ impl BenchReport {
             ));
         }
         s.push_str("  ],\n");
+        let t = &self.telemetry;
+        s.push_str(&format!(
+            "  \"telemetry\": {{\"steps\": {}, \"ns_per_step_off\": {}, \
+             \"ns_per_step_on\": {}, \"points\": {}, \"alpha_mean\": {}, \"beta_mean\": {}, \
+             \"latency_ns\": {{\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \
+             \"p50\": {}, \"p99\": {}}}}},\n",
+            t.steps,
+            t.ns_per_step_off,
+            t.ns_per_step_on,
+            t.points,
+            number32(t.alpha_mean),
+            number32(t.beta_mean),
+            t.latency_ns.count,
+            t.latency_ns.sum,
+            t.latency_ns.min,
+            t.latency_ns.max,
+            t.latency_ns.p50,
+            t.latency_ns.p99,
+        ));
         s.push_str("  \"results\": [\n");
         for (i, r) in self.results.iter().enumerate() {
             s.push_str(&case_json(r, "    "));
@@ -353,6 +378,38 @@ pub fn schema_version_of(doc: &Json) -> u64 {
     doc.get("schema_version").and_then(Json::as_u64).unwrap_or(1)
 }
 
+/// Reference consumer: check a parsed report is a complete current-version
+/// document. Section presence is checked **before** the version gate, so a
+/// stale file fails with the *name of the missing section* — a v4 report
+/// is rejected as `bench report section "telemetry": missing (…)`, which
+/// tells the consumer exactly what its file predates, not just that some
+/// number is wrong.
+pub fn validate(doc: &Json) -> Result<(), String> {
+    for (key, since) in [
+        ("schema", "v1"),
+        ("results", "v1"),
+        ("schema_version", "v2"),
+        ("threads", "v3"),
+        ("snapshot_codecs", "v4"),
+        ("telemetry", "v5"),
+    ] {
+        if doc.get(key).is_none() {
+            return Err(format!("bench report section {key:?}: missing (added in {since})"));
+        }
+    }
+    let version = schema_version_of(doc);
+    if version != SCHEMA_VERSION {
+        return Err(format!(
+            "bench schema_version {version} unsupported (this build writes {SCHEMA_VERSION})"
+        ));
+    }
+    let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+    if schema != SCHEMA {
+        return Err(format!("unknown bench schema {schema:?} (expected {SCHEMA:?})"));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -423,6 +480,22 @@ mod tests {
             assert_eq!(parsed.get("encode_ns").unwrap().as_u64(), Some(orig.encode_ns));
             assert_eq!(parsed.get("decode_ns").unwrap().as_u64(), Some(orig.decode_ns));
         }
+        // v5: the telemetry block survives the round trip
+        let tel = doc.get("telemetry").unwrap();
+        assert_eq!(tel.get("steps").unwrap().as_u64(), Some(report.telemetry.steps));
+        assert_eq!(
+            tel.get("ns_per_step_off").unwrap().as_u64(),
+            Some(report.telemetry.ns_per_step_off)
+        );
+        assert_eq!(
+            tel.get("ns_per_step_on").unwrap().as_u64(),
+            Some(report.telemetry.ns_per_step_on)
+        );
+        assert_eq!(tel.get("points").unwrap().as_u64(), Some(report.telemetry.points));
+        let lat = tel.get("latency_ns").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_u64(), Some(report.telemetry.latency_ns.count));
+        assert_eq!(lat.get("p99").unwrap().as_u64(), Some(report.telemetry.latency_ns.p99));
+        validate(&doc).expect("freshly written report must validate");
         let results = doc.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), report.results.len());
         for (parsed, orig) in results.iter().zip(&report.results) {
@@ -463,6 +536,48 @@ mod tests {
         assert_eq!(schema_version_of(&doc), 1);
     }
 
+    /// The stale-report satellite: a v4 document — structurally complete
+    /// for its era but predating the telemetry block — must be rejected
+    /// with an error that *names the missing section*, not a bare version
+    /// mismatch. The section check runs before the version gate precisely
+    /// so the message says what the file lacks.
+    #[test]
+    fn v4_report_rejected_by_missing_telemetry_section() {
+        let v4 = r#"{
+            "schema": "sparse-rtrl/bench/v4",
+            "schema_version": 4,
+            "threads": 1,
+            "snapshot_codecs": [],
+            "results": []
+        }"#;
+        let doc = parse(v4).unwrap();
+        assert_eq!(schema_version_of(&doc), 4);
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("\"telemetry\""), "error must name the section: {err}");
+        assert!(err.contains("missing"), "error must say it is missing: {err}");
+        assert!(err.contains("v5"), "error must say which revision added it: {err}");
+    }
+
+    /// Version and schema-string gates still fire once all sections exist.
+    #[test]
+    fn validate_gates_version_and_schema_string() {
+        let stale_version = parse(
+            r#"{"schema": "sparse-rtrl/bench/v5", "schema_version": 4,
+                "threads": 1, "snapshot_codecs": [], "telemetry": {}, "results": []}"#,
+        )
+        .unwrap();
+        let err = validate(&stale_version).unwrap_err();
+        assert!(err.contains("schema_version 4"), "{err}");
+
+        let wrong_schema = parse(
+            r#"{"schema": "someone-else/bench/v5", "schema_version": 5,
+                "threads": 1, "snapshot_codecs": [], "telemetry": {}, "results": []}"#,
+        )
+        .unwrap();
+        let err = validate(&wrong_schema).unwrap_err();
+        assert!(err.contains("unknown bench schema"), "{err}");
+    }
+
     /// Structural validation with an in-test micro JSON checker: balanced
     /// braces/brackets outside strings, expected keys present.
     #[test]
@@ -495,6 +610,10 @@ mod tests {
             "\"snapshot_codecs\"",
             "\"encode_ns\"",
             "\"decode_ns\"",
+            "\"telemetry\"",
+            "\"ns_per_step_off\"",
+            "\"ns_per_step_on\"",
+            "\"latency_ns\"",
             "\"results\"",
             "\"engine\"",
             "\"layers\"",

@@ -19,12 +19,14 @@
 pub mod json;
 pub mod runner;
 pub mod snapshot;
+pub mod telemetry;
 
 use crate::config::AlgorithmKind;
 use crate::metrics::Phase;
 use crate::util::pool;
 
 pub use snapshot::SnapshotCodecResult;
+pub use telemetry::TelemetryBenchResult;
 
 /// Grid + measurement knobs for one bench invocation.
 #[derive(Debug, Clone)]
@@ -189,6 +191,9 @@ pub struct BenchReport {
     /// Snapshot-codec cost (encode/decode ns, byte size) per format on the
     /// reference checkpoint — see [`snapshot::measure`]. Schema v4.
     pub snapshot_codecs: Vec<SnapshotCodecResult>,
+    /// Telemetry overhead + sampled-series summary on the reference
+    /// session — see [`telemetry::measure`]. Schema v5.
+    pub telemetry: TelemetryBenchResult,
 }
 
 impl BenchReport {
@@ -225,6 +230,14 @@ impl BenchReport {
                 ));
             }
         }
+        s.push_str(&format!(
+            "\ntelemetry overhead (reference session, {} steps): \
+             {} ns/step off, {} ns/step on, {} sampled point(s)\n",
+            self.telemetry.steps,
+            self.telemetry.ns_per_step_off,
+            self.telemetry.ns_per_step_on,
+            self.telemetry.points
+        ));
         s
     }
 }
@@ -259,6 +272,7 @@ pub fn run(cfg: &BenchConfig, progress: bool) -> BenchReport {
             .unwrap_or(0),
         results,
         snapshot_codecs: snapshot::measure(snapshot::DEFAULT_REPS),
+        telemetry: telemetry::measure(telemetry::DEFAULT_REPS),
     }
 }
 

@@ -1,0 +1,121 @@
+//! Telemetry-overhead measurement for the bench report: the same
+//! reference-scale session driven with telemetry off and on, so the cost
+//! of observability is itself part of the tracked perf trajectory
+//! (`telemetry` block, schema v5).
+//!
+//! Two claims are on record here: disabled telemetry costs one branch per
+//! step (off ≈ a never-instrumented build), and enabled telemetry's cost
+//! is bounded sampling work (clock reads, window folds, the optional
+//! influence-panel scan) — never a change in results, which
+//! `tests/telemetry.rs` pins bit-exactly.
+
+use crate::config::AlgorithmKind;
+use crate::rtrl::Target;
+use crate::session::{OnlineSession, SessionBuilder, UpdatePolicy};
+use crate::telemetry::{HistogramSummary, TelemetryConfig};
+use crate::util::Pcg64;
+
+/// The rep count the bench run uses.
+pub const DEFAULT_REPS: usize = 3;
+/// Steps driven per timed repetition.
+pub const BENCH_STEPS: usize = 64;
+/// Metrics-window cadence of the measured session.
+pub const BENCH_SAMPLE_EVERY: u64 = 8;
+
+/// Telemetry cost + sampled-series summary on the reference session.
+#[derive(Debug, Clone)]
+pub struct TelemetryBenchResult {
+    /// Steps per timed repetition.
+    pub steps: u64,
+    /// Best-of-reps wall time per step with telemetry disabled, ns.
+    pub ns_per_step_off: u64,
+    /// Best-of-reps wall time per step with telemetry enabled
+    /// (cadence [`BENCH_SAMPLE_EVERY`], influence measurement on), ns.
+    pub ns_per_step_on: u64,
+    /// Metric points sampled by the enabled run.
+    pub points: u64,
+    /// Mean sampled activity sparsity α across those points.
+    pub alpha_mean: f32,
+    /// Mean sampled pseudo-derivative sparsity β across those points.
+    pub beta_mean: f32,
+    /// Step-latency histogram summary of the enabled run (self-measured by
+    /// the telemetry under test).
+    pub latency_ns: HistogramSummary,
+}
+
+/// Reference session at bench scale: the paper's combined-sparsity engine,
+/// same shape as [`crate::bench::snapshot::measure`]'s checkpoint source.
+fn build_session() -> OnlineSession {
+    SessionBuilder::new()
+        .algorithm(AlgorithmKind::RtrlBoth)
+        .hidden(32)
+        .param_sparsity(0.8)
+        .policy(UpdatePolicy::EveryKSteps(2))
+        .build()
+}
+
+/// Drive `BENCH_STEPS` deterministic steps; returns total wall ns.
+fn drive(session: &mut OnlineSession) -> u64 {
+    let mut rng = Pcg64::new(17);
+    let t0 = std::time::Instant::now();
+    for i in 0..BENCH_STEPS {
+        let x = [rng.normal(), rng.normal()];
+        let t = if i % 3 == 2 { Target::Class(i % 2) } else { Target::None };
+        session.step(&x, t);
+    }
+    t0.elapsed().as_nanos() as u64
+}
+
+/// Measure telemetry-off vs telemetry-on step cost, best-of `reps` fresh
+/// sessions each, and summarize the enabled run's sampled series.
+pub fn measure(reps: usize) -> TelemetryBenchResult {
+    let reps = reps.max(1);
+    let mut off_best = u64::MAX;
+    for _ in 0..reps {
+        let mut s = build_session();
+        off_best = off_best.min(drive(&mut s));
+    }
+    let mut on_best = u64::MAX;
+    let mut sampled = None;
+    for _ in 0..reps {
+        let mut s = build_session();
+        s.enable_telemetry(TelemetryConfig {
+            sample_every: BENCH_SAMPLE_EVERY,
+            ..TelemetryConfig::default()
+        });
+        on_best = on_best.min(drive(&mut s));
+        sampled = Some(s);
+    }
+    let session = sampled.expect("reps >= 1");
+    let tel = session.telemetry().expect("telemetry enabled");
+    let points: Vec<_> = tel.points().collect();
+    let n = points.len().max(1) as f32;
+    TelemetryBenchResult {
+        steps: BENCH_STEPS as u64,
+        ns_per_step_off: off_best / BENCH_STEPS as u64,
+        ns_per_step_on: on_best / BENCH_STEPS as u64,
+        points: points.len() as u64,
+        alpha_mean: points.iter().map(|p| p.alpha).sum::<f32>() / n,
+        beta_mean: points.iter().map(|p| p.beta).sum::<f32>() / n,
+        latency_ns: HistogramSummary::from_histogram(tel.latency_histogram()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_both_modes_and_samples_series() {
+        let r = measure(1);
+        assert_eq!(r.steps, BENCH_STEPS as u64);
+        assert!(r.ns_per_step_off > 0);
+        assert!(r.ns_per_step_on > 0);
+        // 64 steps at cadence 8 → 8 windows
+        assert_eq!(r.points, (BENCH_STEPS as u64) / BENCH_SAMPLE_EVERY);
+        assert!((0.0..=1.0).contains(&r.alpha_mean), "alpha {}", r.alpha_mean);
+        assert!((0.0..=1.0).contains(&r.beta_mean), "beta {}", r.beta_mean);
+        assert_eq!(r.latency_ns.count, BENCH_STEPS as u64);
+        assert!(r.latency_ns.max >= r.latency_ns.min);
+    }
+}

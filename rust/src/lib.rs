@@ -98,6 +98,16 @@
 //! (`set_threads` / the CLI `--threads` flag) with **bit-identical**
 //! results at any thread count — gradients and op counters alike.
 //!
+//! ## Observability
+//!
+//! The [`telemetry`] subsystem makes the paper's drifting quantities —
+//! α/β/β̃ series, influence occupancy, loss EWMA, per-phase MAC rates,
+//! step latency — first-class runtime signals: opt-in per-session sampling
+//! into bounded rings, pool-level counters surfaced as a
+//! [`telemetry::TelemetrySnapshot`], and a JSON-lines structured trace
+//! (`stream --trace`, rendered by the `stats` subcommand). Disabled
+//! telemetry costs one branch per step and changes no result bits.
+//!
 //! ## The `bench` subsystem
 //!
 //! `sparse-rtrl bench` sweeps engine × hidden size × parameter sparsity
@@ -120,6 +130,7 @@ pub mod rtrl;
 pub mod runtime;
 pub mod session;
 pub mod sparse;
+pub mod telemetry;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -7,9 +7,13 @@ use sparse_rtrl::coordinator::{run_sweep, SweepPlan};
 use sparse_rtrl::data::StepTarget;
 use sparse_rtrl::report::{csv::write_text, fig1, fig2, table1};
 use sparse_rtrl::runtime::{ArtifactSet, PjrtRuntime};
+use sparse_rtrl::report::stats::{render_snapshot, render_trace};
 use sparse_rtrl::session::{
     codec, EventFormat, EventReader, OnlineSession, SessionBuilder, SnapshotFormat, StreamEvent,
     UpdatePolicy,
+};
+use sparse_rtrl::telemetry::{
+    parse_trace, TelemetryConfig, TelemetrySnapshot, TraceEventKind, TraceRecord, TraceSink,
 };
 use sparse_rtrl::train::{build_dataset, Trainer};
 use sparse_rtrl::util::cli::Args;
@@ -26,6 +30,7 @@ USAGE:
                      [--input events.txt|-] [--event-format auto|text|jsonl|binary]
                      [--checkpoint out.snap] [--snapshot-format auto|binary|json]
                      [--resume ck.snap] [--threads 1] [--quiet]
+                     [--trace trace.jsonl] [--metrics-every K]
   sparse-rtrl train  [--config cfg.toml] [--param-sparsity W] [--iterations N]
                      [--seed S] [--algorithm NAME] [--cell NAME] [--layers L]
                      [--threads 1] [--out results/train_curve.csv]
@@ -37,6 +42,7 @@ USAGE:
                      [--timesteps 17] [--sequences 30] [--warmup 3]
                      [--workers 1] [--threads 1] [--out BENCH_rtrl.json]
   sparse-rtrl report <table1|fig1|fig2> [--n 16] [--layers 1] [--omega 0.8]
+  sparse-rtrl stats  (--trace trace.jsonl | --snapshot stats.json) [--check]
   sparse-rtrl artifacts [--dir artifacts]
   sparse-rtrl config-dump            # print the default config TOML
 
@@ -47,10 +53,15 @@ stream formats: --resume autodetects the snapshot format from the file
 bytes (binary or json). --snapshot-format auto writes binary unless the
 --checkpoint path ends in .json. --event-format auto sniffs the input
 (text lines, JSON lines, or binary f32 frames) from its leading bytes.
+
+observability: stream --trace writes a JSON-lines structured trace
+(schema sparse-rtrl/trace/v1); --metrics-every K samples α/β/loss/op-rate
+windows every K steps (to the trace, or to stderr without --trace).
+`stats` renders either artifact; --check validates without rendering.
 ";
 
 /// Subcommand list for unknown-command errors (kept in sync with `main`).
-const SUBCOMMANDS: &str = "stream, train, sweep, bench, report, artifacts, config-dump";
+const SUBCOMMANDS: &str = "stream, train, sweep, bench, report, stats, artifacts, config-dump";
 
 /// Engine names from the single source of truth ([`AlgorithmKind::all`],
 /// the same registry `build_engine` dispatches on).
@@ -152,9 +163,12 @@ fn cmd_stream(mut args: Args) -> Result<()> {
         })?),
     };
     let quiet = args.get_bool("quiet").map_err(err)?;
-    // Runtime knob, deliberately allowed alongside --resume: thread count
-    // is not session state (results are bit-identical at any value).
+    // Runtime knobs, deliberately allowed alongside --resume: thread count
+    // and telemetry are not session state (results are bit-identical with
+    // them at any setting).
     let threads: usize = args.get_parse("threads", 1).map_err(err)?;
+    let trace_path = args.get("trace");
+    let metrics_every: u64 = args.get_parse("metrics-every", 0).map_err(err)?;
     args.finish().map_err(err)?;
 
     let src: Box<dyn BufRead> = if input == "-" {
@@ -173,6 +187,34 @@ fn cmd_stream(mut args: Args) -> Result<()> {
     };
     let mut session = session;
     session.set_threads(threads);
+    // Either flag turns telemetry on; --metrics-every also sets the window
+    // cadence, otherwise the default cadence applies.
+    let session_id = "s0";
+    if trace_path.is_some() || metrics_every > 0 {
+        let mut tc = TelemetryConfig::default();
+        if metrics_every > 0 {
+            tc.sample_every = metrics_every;
+        }
+        session.enable_telemetry(tc);
+    }
+    let mut sink = match &trace_path {
+        Some(p) => {
+            let f = std::fs::File::create(p)
+                .map_err(|e| anyhow!("cannot create trace file {p}: {e}"))?;
+            Some(TraceSink::new(std::io::BufWriter::new(f)))
+        }
+        None => None,
+    };
+    if let Some(sink) = &mut sink {
+        let cfg = session.config();
+        sink.emit(&TraceRecord::Meta {
+            session: session_id.to_string(),
+            engine: cfg.train.algorithm.name().to_string(),
+            hidden: cfg.model.hidden as u64,
+            layers: cfg.model.layers as u64,
+            sample_every: session.telemetry().expect("telemetry on").config().sample_every,
+        })?;
+    }
     let stdout = std::io::stdout();
     let mut out = std::io::BufWriter::new(stdout.lock());
     while let Some(event) = events.next() {
@@ -180,6 +222,15 @@ fn cmd_stream(mut args: Args) -> Result<()> {
         match event {
             StreamEvent::Update => {
                 session.update_now();
+                if let Some(sink) = &mut sink {
+                    sink.emit(&TraceRecord::Event {
+                        session: session_id.to_string(),
+                        step: session.steps(),
+                        event: TraceEventKind::Update,
+                        bytes: None,
+                        duration_ns: None,
+                    })?;
+                }
                 if !quiet {
                     writeln!(out, "step={} update applied", session.steps())?;
                 }
@@ -187,6 +238,15 @@ fn cmd_stream(mut args: Args) -> Result<()> {
             StreamEvent::EndSequence => {
                 session.end_sequence();
                 session.begin_sequence();
+                if let Some(sink) = &mut sink {
+                    sink.emit(&TraceRecord::Event {
+                        session: session_id.to_string(),
+                        step: session.steps(),
+                        event: TraceEventKind::SequenceEnd,
+                        bytes: None,
+                        duration_ns: None,
+                    })?;
+                }
                 if !quiet {
                     writeln!(out, "step={} sequence boundary", session.steps())?;
                 }
@@ -194,8 +254,8 @@ fn cmd_stream(mut args: Args) -> Result<()> {
             StreamEvent::Step { x, target } => {
                 if x.len() != session.net().n_in() {
                     bail!(
-                        "{input_name}:{}: event has {} input values, session expects {}",
-                        events.line(),
+                        "{}: event has {} input values, session expects {}",
+                        events.pos().in_file(input_name),
                         x.len(),
                         session.net().n_in()
                     );
@@ -203,9 +263,8 @@ fn cmd_stream(mut args: Args) -> Result<()> {
                 if let StepTarget::Vector(t) = &target {
                     if t.len() != session.n_out() {
                         bail!(
-                            "{input_name}:{}: regression target has {} values, \
-                             session expects {}",
-                            events.line(),
+                            "{}: regression target has {} values, session expects {}",
+                            events.pos().in_file(input_name),
                             t.len(),
                             session.n_out()
                         );
@@ -221,6 +280,39 @@ fn cmd_stream(mut args: Args) -> Result<()> {
                         o.step, o.updated
                     )?;
                 }
+                // Emit closed metrics windows: to the trace when one is
+                // open, to stderr for --metrics-every without --trace.
+                if let Some(tel) = session.telemetry_mut() {
+                    for point in tel.drain_new_points() {
+                        match &mut sink {
+                            Some(sink) => {
+                                sink.emit(&TraceRecord::Span {
+                                    session: session_id.to_string(),
+                                    phase: "steps".to_string(),
+                                    step_start: point.window_start,
+                                    step_end: point.step,
+                                    duration_ns: point.window_latency_ns,
+                                })?;
+                                sink.emit(&TraceRecord::Metrics {
+                                    session: session_id.to_string(),
+                                    point,
+                                })?;
+                            }
+                            None => eprintln!(
+                                "metrics step={} alpha={:.4} beta={:.4} beta_tilde={:.4} \
+                                 loss_ewma={} mean_step_ns={}",
+                                point.step,
+                                point.alpha,
+                                point.beta,
+                                point.beta_tilde,
+                                point
+                                    .loss_ewma
+                                    .map_or("-".to_string(), |l| format!("{l:.6}")),
+                                point.mean_step_latency_ns()
+                            ),
+                        }
+                    }
+                }
             }
         }
     }
@@ -234,10 +326,59 @@ fn cmd_stream(mut args: Args) -> Result<()> {
     );
     if let Some(path) = checkpoint_out {
         let format = snapshot_format.unwrap_or_else(|| SnapshotFormat::for_path(&path));
+        let t0 = std::time::Instant::now();
         let bytes = codec::encode(&session.checkpoint(), format);
         std::fs::write(&path, &bytes)
             .map_err(|e| anyhow!("cannot write checkpoint {path}: {e}"))?;
+        if let Some(sink) = &mut sink {
+            sink.emit(&TraceRecord::Event {
+                session: session_id.to_string(),
+                step: session.steps(),
+                event: TraceEventKind::Checkpoint,
+                bytes: Some(bytes.len() as u64),
+                duration_ns: Some(t0.elapsed().as_nanos() as u64),
+            })?;
+        }
         eprintln!("checkpoint written to {path} ({format}, {} bytes)", bytes.len());
+    }
+    if let Some(sink) = &mut sink {
+        sink.flush()?;
+        let path = trace_path.as_deref().unwrap_or("?");
+        eprintln!("trace written to {path} ({} records)", sink.records());
+    }
+    Ok(())
+}
+
+/// Render telemetry artifacts: a JSON-lines trace (`stream --trace`) or a
+/// serialized [`TelemetrySnapshot`]. `--check` validates a trace against
+/// the schema and prints a one-line summary instead of rendering.
+fn cmd_stats(mut args: Args) -> Result<()> {
+    let trace = args.get("trace");
+    let snapshot = args.get("snapshot");
+    let check = args.get_bool("check").map_err(err)?;
+    args.finish().map_err(err)?;
+    match (trace, snapshot) {
+        (Some(path), None) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("cannot read trace {path}: {e}"))?;
+            let records = parse_trace(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            if check {
+                println!("trace OK: {} record(s) in {path}", records.len());
+            } else {
+                print!("{}", render_trace(&records));
+            }
+        }
+        (None, Some(path)) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("cannot read snapshot {path}: {e}"))?;
+            let snap = TelemetrySnapshot::from_json(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            if check {
+                println!("snapshot OK: {} session(s) in {path}", snap.sessions.len());
+            } else {
+                print!("{}", render_snapshot(&snap));
+            }
+        }
+        _ => bail!("stats needs exactly one of --trace <file> or --snapshot <file>"),
     }
     Ok(())
 }
@@ -457,6 +598,7 @@ fn main() -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("bench") => cmd_bench(args),
         Some("report") => cmd_report(args),
+        Some("stats") => cmd_stats(args),
         Some("artifacts") => cmd_artifacts(args),
         Some("config-dump") => {
             print!("{}", ExperimentConfig::default().to_toml());

@@ -13,5 +13,5 @@ pub mod ops;
 pub mod sparsity;
 
 pub use compute_adjusted::ComputeAdjusted;
-pub use ops::{OpCounter, Phase};
+pub use ops::{OpCounter, Phase, NUM_PHASES};
 pub use sparsity::SparsityStats;

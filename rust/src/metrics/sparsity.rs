@@ -69,6 +69,17 @@ impl SparsityStats {
         }
     }
 
+    /// Number of α/β observations folded in so far.
+    pub fn observations(&self) -> u64 {
+        self.steps
+    }
+
+    /// Number of influence-sparsity observations folded in so far (telemetry
+    /// uses this to tell "never measured" apart from "measured as 0").
+    pub fn influence_observations(&self) -> u64 {
+        self.influence_obs
+    }
+
     pub fn reset(&mut self) {
         *self = Self::default();
     }
@@ -119,5 +130,67 @@ mod tests {
         b.record_step(4, 4, 4);
         a.merge(&b);
         assert!((a.alpha() - 0.25).abs() < 1e-6);
+    }
+
+    /// A reset accumulator is indistinguishable from a fresh one as a merge
+    /// target: merging `b` into it reproduces `b`'s estimates exactly.
+    #[test]
+    fn merge_after_reset_equals_other() {
+        let mut a = SparsityStats::new();
+        a.record_step(10, 1, 9);
+        a.record_influence(0.5);
+        a.reset();
+        assert_eq!(a.observations(), 0);
+        assert_eq!(a.influence_observations(), 0);
+
+        let mut b = SparsityStats::new();
+        b.record_step(8, 2, 6); // α=0.75 β=0.25
+        b.record_influence(0.9);
+        a.merge(&b);
+        assert_eq!(a.observations(), 1);
+        assert_eq!(a.influence_observations(), 1);
+        assert_eq!(a.alpha().to_bits(), b.alpha().to_bits());
+        assert_eq!(a.beta().to_bits(), b.beta().to_bits());
+        assert_eq!(a.influence_sparsity().to_bits(), b.influence_sparsity().to_bits());
+    }
+
+    /// Merging an empty counterpart is the identity on every estimate.
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = SparsityStats::new();
+        a.record_step(10, 3, 7);
+        a.record_step(10, 5, 5);
+        a.record_influence(0.4);
+        let before = (a.alpha().to_bits(), a.beta().to_bits(), a.influence_sparsity().to_bits());
+        a.merge(&SparsityStats::new());
+        let after = (a.alpha().to_bits(), a.beta().to_bits(), a.influence_sparsity().to_bits());
+        assert_eq!(before, after);
+        assert_eq!(a.observations(), 2);
+        assert_eq!(a.influence_observations(), 1);
+    }
+
+    /// α/β/influence estimates are commutative in the merge order: the sums
+    /// are plain f64 additions, so `a ∪ b` and `b ∪ a` agree bit-for-bit.
+    #[test]
+    fn merge_is_commutative_in_estimates() {
+        let mut a = SparsityStats::new();
+        a.record_step(16, 3, 11);
+        a.record_step(16, 7, 2);
+        a.record_influence(0.25);
+        let mut b = SparsityStats::new();
+        b.record_step(12, 5, 5);
+        b.record_influence(0.75);
+        b.record_influence(0.125);
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.alpha().to_bits(), ba.alpha().to_bits());
+        assert_eq!(ab.beta().to_bits(), ba.beta().to_bits());
+        assert_eq!(ab.beta_tilde().to_bits(), ba.beta_tilde().to_bits());
+        assert_eq!(ab.influence_sparsity().to_bits(), ba.influence_sparsity().to_bits());
+        assert_eq!(ab.observations(), ba.observations());
+        assert_eq!(ab.influence_observations(), ba.influence_observations());
     }
 }

@@ -4,4 +4,5 @@ pub mod ascii_plot;
 pub mod csv;
 pub mod fig1;
 pub mod fig2;
+pub mod stats;
 pub mod table1;

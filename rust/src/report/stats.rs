@@ -1,0 +1,249 @@
+//! Render telemetry artifacts for the terminal: a
+//! [`TelemetrySnapshot`] as a counter/session table, a parsed trace
+//! (`stream --trace` output) as α/β time-series plots plus event and
+//! op-rate summaries. Pure string producers — the `stats` subcommand owns
+//! the I/O.
+
+use crate::metrics::Phase;
+use crate::report::ascii_plot::plot;
+use crate::telemetry::{MetricPoint, TelemetrySnapshot, TraceEventKind, TraceRecord};
+
+const PLOT_W: usize = 64;
+const PLOT_H: usize = 12;
+
+/// Render a pool snapshot: counters, spill/latency summaries, one row per
+/// session.
+pub fn render_snapshot(snap: &TelemetrySnapshot) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "pool: {} live session(s), {} worker(s)\n",
+        snap.live_sessions, snap.workers
+    ));
+    out.push_str(&format!(
+        "admissions {}, evictions {}, spill {} bytes\n",
+        snap.admissions, snap.evictions, snap.spill_bytes
+    ));
+    out.push_str(&format!(
+        "evict encode ns: count {}, mean {}, p50 {}, p99 {}, max {}\n",
+        snap.evict_encode_ns.count,
+        snap.evict_encode_ns.mean(),
+        snap.evict_encode_ns.p50,
+        snap.evict_encode_ns.p99,
+        snap.evict_encode_ns.max
+    ));
+    out.push_str(&format!(
+        "resume decode ns: count {}, mean {}, p50 {}, p99 {}, max {}\n",
+        snap.resume_decode_ns.count,
+        snap.resume_decode_ns.mean(),
+        snap.resume_decode_ns.p50,
+        snap.resume_decode_ns.p99,
+        snap.resume_decode_ns.max
+    ));
+    out.push_str(&format!(
+        "{:>7} {:>9} {:>10} {:>8} {:>10} {:>7} {:>7} {:>7}\n",
+        "session", "steps", "supervised", "updates", "loss_ewma", "alpha", "beta", "points"
+    ));
+    for s in &snap.sessions {
+        let fmt_opt = |x: Option<f32>| match x {
+            Some(v) => format!("{v:.4}"),
+            None => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{:>7} {:>9} {:>10} {:>8} {:>10} {:>7} {:>7} {:>7}\n",
+            s.index,
+            s.steps,
+            s.supervised_steps,
+            s.updates_applied,
+            fmt_opt(s.loss_ewma),
+            fmt_opt(s.alpha),
+            fmt_opt(s.beta),
+            s.points
+        ));
+    }
+    out
+}
+
+fn series(points: &[&MetricPoint], f: impl Fn(&MetricPoint) -> Option<f32>) -> Vec<(f64, f64)> {
+    points
+        .iter()
+        .filter_map(|p| f(p).map(|y| (p.step as f64, y as f64)))
+        .collect()
+}
+
+/// Render a parsed trace: header, α/β/β̃ plot over the stream, loss-EWMA
+/// plot when supervised steps occurred, event tallies and the last
+/// window's per-phase MAC rates.
+pub fn render_trace(records: &[TraceRecord]) -> String {
+    let mut out = String::new();
+    let mut points: Vec<&MetricPoint> = Vec::new();
+    let mut event_counts = [0u64; 5];
+    let event_kinds = [
+        TraceEventKind::Update,
+        TraceEventKind::SequenceEnd,
+        TraceEventKind::Checkpoint,
+        TraceEventKind::Evict,
+        TraceEventKind::Admit,
+    ];
+    let mut span_ns = 0u64;
+    for rec in records {
+        match rec {
+            TraceRecord::Meta { session, engine, hidden, layers, sample_every } => {
+                out.push_str(&format!(
+                    "trace: {} record(s), session {session:?} \
+                     (engine {engine}, n={hidden}×L{layers}, sample_every {sample_every})\n",
+                    records.len()
+                ));
+            }
+            TraceRecord::Metrics { point, .. } => points.push(point),
+            TraceRecord::Span { duration_ns, .. } => span_ns += duration_ns,
+            TraceRecord::Event { event, .. } => {
+                event_counts[event_kinds.iter().position(|k| k == event).unwrap()] += 1;
+            }
+        }
+    }
+    let sparsity = [
+        ("alpha", series(&points, |p| Some(p.alpha))),
+        ("beta", series(&points, |p| Some(p.beta))),
+        ("beta_tilde", series(&points, |p| Some(p.beta_tilde))),
+    ];
+    out.push_str(&plot(&sparsity, PLOT_W, PLOT_H, "sparsity per window (x = step)"));
+    let loss = series(&points, |p| p.loss_ewma);
+    if !loss.is_empty() {
+        out.push_str(&plot(&[("loss_ewma", loss)], PLOT_W, PLOT_H, "loss EWMA (x = step)"));
+    }
+    if let (Some(first), Some(last)) = (points.first(), points.last()) {
+        let steps: u64 = points.iter().map(|p| p.window_len()).sum();
+        let latency: u64 = points.iter().map(|p| p.window_latency_ns).sum();
+        out.push_str(&format!(
+            "windows: {} (steps {}..={}), {} ns in step spans, \
+             mean step latency {} ns\n",
+            points.len(),
+            first.window_start,
+            last.step,
+            span_ns,
+            latency / steps.max(1)
+        ));
+        out.push_str("last window MACs/step:");
+        for ph in Phase::all() {
+            out.push_str(&format!(" {} {}", ph.name(), last.macs_per_step[ph.index()]));
+        }
+        out.push('\n');
+    } else {
+        out.push_str("windows: 0 (no metrics records — stream shorter than the cadence?)\n");
+    }
+    out.push_str("events:");
+    for (kind, count) in event_kinds.iter().zip(event_counts.iter()) {
+        out.push_str(&format!(" {} ×{}", kind.name(), count));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::NUM_PHASES;
+    use crate::telemetry::{HistogramSummary, SessionStats};
+
+    fn point(start: u64, end: u64, alpha: f32, loss: Option<f32>) -> MetricPoint {
+        MetricPoint {
+            window_start: start,
+            step: end,
+            alpha,
+            beta: 0.75,
+            beta_tilde: 0.25,
+            influence_occupancy: Some(0.5),
+            loss_ewma: loss,
+            macs_per_step: [7; NUM_PHASES],
+            words_per_step: [3; NUM_PHASES],
+            window_latency_ns: 4_000,
+        }
+    }
+
+    #[test]
+    fn trace_rendering_mentions_series_and_events() {
+        let records = vec![
+            TraceRecord::Meta {
+                session: "s0".into(),
+                engine: "rtrl-both".into(),
+                hidden: 32,
+                layers: 1,
+                sample_every: 4,
+            },
+            TraceRecord::Metrics { session: "s0".into(), point: point(1, 4, 0.5, None) },
+            TraceRecord::Span {
+                session: "s0".into(),
+                phase: "steps".into(),
+                step_start: 1,
+                step_end: 4,
+                duration_ns: 4_000,
+            },
+            TraceRecord::Metrics { session: "s0".into(), point: point(5, 8, 0.6, Some(1.25)) },
+            TraceRecord::Event {
+                session: "s0".into(),
+                step: 8,
+                event: TraceEventKind::Update,
+                bytes: None,
+                duration_ns: None,
+            },
+        ];
+        let r = render_trace(&records);
+        assert!(r.contains("session \"s0\""), "{r}");
+        assert!(r.contains("alpha"), "{r}");
+        assert!(r.contains("beta_tilde"), "{r}");
+        assert!(r.contains("loss EWMA"), "{r}");
+        assert!(r.contains("windows: 2 (steps 1..=8)"), "{r}");
+        assert!(r.contains("update ×1"), "{r}");
+        assert!(r.contains("evict ×0"), "{r}");
+        assert!(r.contains("influence_update 7"), "{r}");
+    }
+
+    #[test]
+    fn empty_trace_renders_without_panicking() {
+        let records = vec![TraceRecord::Meta {
+            session: "s0".into(),
+            engine: "bptt".into(),
+            hidden: 8,
+            layers: 2,
+            sample_every: 16,
+        }];
+        let r = render_trace(&records);
+        assert!(r.contains("windows: 0"), "{r}");
+    }
+
+    #[test]
+    fn snapshot_rendering_tabulates_sessions() {
+        let snap = TelemetrySnapshot {
+            live_sessions: 2,
+            workers: 4,
+            admissions: 1,
+            evictions: 3,
+            spill_bytes: 6_144,
+            evict_encode_ns: HistogramSummary {
+                count: 3,
+                sum: 30,
+                min: 5,
+                max: 15,
+                p50: 10,
+                p99: 15,
+            },
+            resume_decode_ns: HistogramSummary::default(),
+            sessions: vec![SessionStats {
+                index: 0,
+                steps: 100,
+                supervised_steps: 30,
+                updates_applied: 30,
+                loss_ewma: Some(0.625),
+                alpha: Some(0.5),
+                beta: None,
+                points: 6,
+            }],
+        };
+        let r = render_snapshot(&snap);
+        assert!(r.contains("2 live session(s)"), "{r}");
+        assert!(r.contains("evictions 3"), "{r}");
+        assert!(r.contains("spill 6144 bytes"), "{r}");
+        assert!(r.contains("0.6250"), "{r}");
+        assert!(r.contains(" - "), "{r}"); // absent beta renders as a dash
+    }
+}

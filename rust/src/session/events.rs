@@ -37,8 +37,11 @@
 //!
 //! [`EventReader`] wraps any [`BufRead`] source, autodetects the format
 //! from the leading bytes ([`EventFormat::detect`]) and yields
-//! `Result<StreamEvent, EventError>` — every error carries the 1-based
-//! line (or frame) number, so the CLI can report `file:line: message`.
+//! `Result<StreamEvent, EventError>` — every error carries an
+//! [`EventPosition`]: the 1-based line for the line-oriented formats
+//! (`file:line: message` reports), or the 1-based frame index *plus the
+//! byte offset of the frame's first byte* for binary streams, where a line
+//! number would be meaningless.
 
 use crate::bench::json::{parse as json_parse, Json};
 use crate::data::StepTarget;
@@ -96,27 +99,64 @@ impl fmt::Display for EventErrorKind {
     }
 }
 
-/// An [`EventErrorKind`] at a 1-based line (text/jsonl) or frame (binary)
-/// number. Displays as `line N: message`; the CLI prepends the file name
-/// for `file:line: message` reports.
+/// Where in the stream a record sits, in the coordinates native to its
+/// format: a line number for text/JSON-lines, a frame index plus the byte
+/// offset of the frame's first byte for binary (seekable with `dd`/hexdump,
+/// which a "line" of a binary file is not).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventPosition {
+    /// 1-based line in a line-oriented stream.
+    Line(u64),
+    /// 1-based frame in a binary stream. `byte_offset` points at the
+    /// frame's record tag (offset 0 = the stream magic, for errors in the
+    /// magic itself).
+    Frame { index: u64, byte_offset: u64 },
+}
+
+impl fmt::Display for EventPosition {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EventPosition::Line(n) => write!(f, "line {n}"),
+            EventPosition::Frame { index, byte_offset } => {
+                write!(f, "frame {index} (byte {byte_offset})")
+            }
+        }
+    }
+}
+
+impl EventPosition {
+    /// The CLI report prefix. Lines keep the grep-able `file:line` shape;
+    /// frames read `file: frame N (byte B)`.
+    pub fn in_file(&self, file: &str) -> String {
+        match self {
+            EventPosition::Line(n) => format!("{file}:{n}"),
+            EventPosition::Frame { .. } => format!("{file}: {self}"),
+        }
+    }
+}
+
+/// An [`EventErrorKind`] at an [`EventPosition`]. Displays as
+/// `line N: message` or `frame N (byte B): message`; the CLI prepends the
+/// file name via [`EventError::in_file`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct EventError {
-    pub line: u64,
+    pub pos: EventPosition,
     pub kind: EventErrorKind,
 }
 
 impl fmt::Display for EventError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "line {}: {}", self.line, self.kind)
+        write!(f, "{}: {}", self.pos, self.kind)
     }
 }
 
 impl std::error::Error for EventError {}
 
 impl EventError {
-    /// The CLI report form: `file:line: message`.
+    /// The CLI report form: `file:line: message` (text/jsonl) or
+    /// `file: frame N (byte B): message` (binary).
     pub fn in_file(&self, file: &str) -> String {
-        format!("{file}:{}: {}", self.line, self.kind)
+        format!("{}: {}", self.pos.in_file(file), self.kind)
     }
 }
 
@@ -362,13 +402,18 @@ pub fn encode_binary(events: &[StreamEvent]) -> Vec<u8> {
 /// ingestion path the `stream` subcommand uses for files and stdin.
 ///
 /// Iterates `Result<StreamEvent, EventError>`; blank/comment records are
-/// skipped, and errors carry the 1-based line (text/jsonl) or frame
-/// (binary) number. Iteration ends at EOF or after the first error.
+/// skipped, and errors carry an [`EventPosition`] — the 1-based line for
+/// text/jsonl, the 1-based frame index plus its starting byte offset for
+/// binary. Iteration ends at EOF or after the first error.
 pub struct EventReader<R: BufRead> {
     src: R,
     format: EventFormat,
-    /// 1-based position of the record most recently read.
+    /// 1-based line (text/jsonl) or frame (binary) most recently read.
     line: u64,
+    /// Binary: total bytes consumed from the source so far.
+    bytes_read: u64,
+    /// Binary: byte offset of the current frame's first byte (its tag).
+    frame_start: u64,
     /// Binary: magic already consumed?
     started: bool,
     failed: bool,
@@ -377,7 +422,15 @@ pub struct EventReader<R: BufRead> {
 impl<R: BufRead> EventReader<R> {
     /// Read events of a known format.
     pub fn new(src: R, format: EventFormat) -> Self {
-        EventReader { src, format, line: 0, started: false, failed: false }
+        EventReader {
+            src,
+            format,
+            line: 0,
+            bytes_read: 0,
+            frame_start: 0,
+            started: false,
+            failed: false,
+        }
     }
 
     /// Sniff the format from the stream's first buffered bytes, then read.
@@ -391,16 +444,21 @@ impl<R: BufRead> EventReader<R> {
         self.format
     }
 
-    /// 1-based line (text/jsonl) or frame (binary) number of the record
-    /// most recently yielded — for `file:line:` reports about events that
-    /// parsed but are invalid for the consumer (e.g. wrong input width).
-    pub fn line(&self) -> u64 {
-        self.line.max(1)
+    /// Position of the record most recently yielded — for reports about
+    /// events that parsed but are invalid for the consumer (e.g. wrong
+    /// input width). Lines for text/jsonl, frame + byte offset for binary.
+    pub fn pos(&self) -> EventPosition {
+        match self.format {
+            EventFormat::Binary => {
+                EventPosition::Frame { index: self.line.max(1), byte_offset: self.frame_start }
+            }
+            EventFormat::Text | EventFormat::JsonLines => EventPosition::Line(self.line.max(1)),
+        }
     }
 
     fn err(&mut self, kind: EventErrorKind) -> Option<Result<StreamEvent, EventError>> {
         self.failed = true;
-        Some(Err(EventError { line: self.line.max(1), kind }))
+        Some(Err(EventError { pos: self.pos(), kind }))
     }
 
     fn next_line(&mut self) -> Result<Option<String>, EventErrorKind> {
@@ -420,13 +478,16 @@ impl<R: BufRead> EventReader<R> {
 
     fn read_exact(&mut self, buf: &mut [u8]) -> Result<(), EventErrorKind> {
         use std::io::Read;
-        self.src.read_exact(buf).map_err(|e| {
-            if e.kind() == std::io::ErrorKind::UnexpectedEof {
-                EventErrorKind::BadFrame { detail: "truncated frame".into() }
-            } else {
-                EventErrorKind::Io { detail: e.to_string() }
+        match self.src.read_exact(buf) {
+            Ok(()) => {
+                self.bytes_read += buf.len() as u64;
+                Ok(())
             }
-        })
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                Err(EventErrorKind::BadFrame { detail: "truncated frame".into() })
+            }
+            Err(e) => Err(EventErrorKind::Io { detail: e.to_string() }),
+        }
     }
 
     fn read_u32(&mut self) -> Result<u32, EventErrorKind> {
@@ -455,7 +516,9 @@ impl<R: BufRead> EventReader<R> {
         use std::io::Read;
         if !self.started {
             let mut magic = [0u8; 8];
+            // a bad/short magic reports as frame 1 at byte 0
             self.line = 1;
+            self.frame_start = 0;
             self.read_exact(&mut magic)?;
             if magic != BINARY_MAGIC {
                 return Err(EventErrorKind::BadFrame {
@@ -465,6 +528,7 @@ impl<R: BufRead> EventReader<R> {
             self.started = true;
             self.line = 0;
         }
+        self.frame_start = self.bytes_read;
         let mut tag = [0u8; 1];
         // EOF at a frame boundary is the clean end of the stream
         match self.src.read(&mut tag) {
@@ -472,6 +536,7 @@ impl<R: BufRead> EventReader<R> {
             Ok(_) => {}
             Err(e) => return Err(EventErrorKind::Io { detail: e.to_string() }),
         }
+        self.bytes_read += 1;
         self.line += 1;
         match tag[0] {
             1 => Ok(Some(StreamEvent::Update)),
@@ -681,7 +746,7 @@ mod tests {
             EventReader::new(std::io::Cursor::new(text.as_bytes()), EventFormat::Text);
         assert!(reader.next().unwrap().is_ok());
         let err = reader.next().unwrap().unwrap_err();
-        assert_eq!(err.line, 4, "comment/blank lines still count for positions");
+        assert_eq!(err.pos, EventPosition::Line(4), "comment/blank lines still count for positions");
         assert!(matches!(err.kind, EventErrorKind::BadValue { .. }));
         assert_eq!(err.in_file("events.txt"), format!("events.txt:4: {}", err.kind));
         assert!(reader.next().is_none(), "iteration stops after an error");
@@ -697,6 +762,47 @@ mod tests {
             .collect();
         assert_eq!(errs.len(), 1);
         assert!(matches!(errs[0].kind, EventErrorKind::BadFrame { .. }), "{:?}", errs[0]);
+    }
+
+    /// Regression: binary errors must carry the frame index **and** the
+    /// byte offset of the frame's first byte — not a meaningless "line".
+    /// Offsets are computed from the reference writer, so this stays in
+    /// sync with the wire format.
+    #[test]
+    fn binary_errors_carry_frame_index_and_byte_offset() {
+        let events = sample_events();
+        // byte offset where each frame starts: magic, then cumulative sizes
+        let mut offsets = Vec::with_capacity(events.len());
+        let mut frame = Vec::new();
+        let mut at = BINARY_MAGIC.len() as u64;
+        for ev in &events {
+            offsets.push(at);
+            frame.clear();
+            write_event_binary(&mut frame, ev);
+            at += frame.len() as u64;
+        }
+
+        // truncate inside the 3rd frame (the vector-target step)
+        let mut bytes = encode_binary(&events);
+        bytes.truncate(offsets[2] as usize + 5);
+        let err = EventReader::autodetect(std::io::Cursor::new(&bytes))
+            .unwrap()
+            .filter_map(|r| r.err())
+            .next()
+            .unwrap();
+        assert!(matches!(err.kind, EventErrorKind::BadFrame { .. }), "{err:?}");
+        assert_eq!(err.pos, EventPosition::Frame { index: 3, byte_offset: offsets[2] });
+        assert_eq!(
+            err.in_file("events.bin"),
+            format!("events.bin: frame 3 (byte {}): {}", offsets[2], err.kind)
+        );
+
+        // a bad magic reports as frame 1 at byte 0
+        let err = EventReader::new(std::io::Cursor::new(b"XXXXXXXX\x01".as_slice()), EventFormat::Binary)
+            .filter_map(|r| r.err())
+            .next()
+            .unwrap();
+        assert_eq!(err.pos, EventPosition::Frame { index: 1, byte_offset: 0 });
     }
 
     #[test]

@@ -27,6 +27,12 @@
 //! * [`events`]: event-stream ingestion for the `sparse-rtrl stream`
 //!   subcommand — text lines, JSON-lines and raw binary f32 frames behind
 //!   one [`EventFormat`] dispatch, also format-autodetected.
+//! * Observability: [`OnlineSession::enable_telemetry`] samples α/β/loss/
+//!   op-rate series per session, [`SessionPool::enable_telemetry`]
+//!   aggregates evict/admit counters, and
+//!   [`SessionPool::telemetry_snapshot`] condenses both into a
+//!   [`crate::telemetry::TelemetrySnapshot`]. All of it opt-in and
+//!   zero-cost when off (see [`crate::telemetry`]).
 //!
 //! The batch [`crate::train::Trainer`] is a thin client of
 //! [`OnlineSession`] (manual policy + per-minibatch
@@ -41,6 +47,8 @@ pub mod pool;
 
 pub use checkpoint::SessionCheckpoint;
 pub use codec::{CodecError, SnapshotCodec, SnapshotFormat};
-pub use events::{parse_event, EventError, EventErrorKind, EventFormat, EventReader, StreamEvent};
+pub use events::{
+    parse_event, EventError, EventErrorKind, EventFormat, EventPosition, EventReader, StreamEvent,
+};
 pub use online::{OnlineSession, SessionBuilder, StepOutcome, UpdatePolicy};
 pub use pool::SessionPool;

@@ -16,6 +16,7 @@ use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, LossKind, Readout};
 use crate::optim::{Adam, Optimizer};
 use crate::rtrl::{GradientEngine, Target};
+use crate::telemetry::{SessionTelemetry, TelemetryConfig};
 use crate::train::build;
 use crate::util::Pcg64;
 
@@ -69,6 +70,7 @@ pub struct SessionBuilder {
     policy: UpdatePolicy,
     predict_always: bool,
     threads: usize,
+    telemetry: Option<TelemetryConfig>,
 }
 
 impl SessionBuilder {
@@ -80,6 +82,7 @@ impl SessionBuilder {
             policy: UpdatePolicy::EveryKSteps(1),
             predict_always: false,
             threads: 1,
+            telemetry: None,
         }
     }
 
@@ -154,6 +157,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable per-session telemetry sampling from the first step (see
+    /// [`OnlineSession::enable_telemetry`]). Default: disabled — and
+    /// disabled really is off: no clock reads, no sampling, one `Option`
+    /// discriminant test per step.
+    pub fn telemetry(mut self, cfg: TelemetryConfig) -> Self {
+        self.telemetry = Some(cfg);
+        self
+    }
+
     /// Build the session. RNG streams split in the same order as
     /// [`crate::train::Trainer::new`] (cell, readout, data, batch), so the
     /// two surfaces are weight-for-weight interchangeable.
@@ -173,7 +185,7 @@ impl SessionBuilder {
         let p = net.p();
         let rp = readout.param_len();
         let lr = cfg.train.lr;
-        OnlineSession {
+        let mut session = OnlineSession {
             cfg,
             net,
             readout,
@@ -194,7 +206,12 @@ impl SessionBuilder {
             supervised_steps: 0,
             updates_applied: 0,
             pending_supervised: 0,
+            telemetry: None,
+        };
+        if let Some(tc) = self.telemetry {
+            session.enable_telemetry(tc);
         }
+        session
     }
 }
 
@@ -233,6 +250,11 @@ pub struct OnlineSession {
     pub(crate) updates_applied: u64,
     /// Supervised steps whose gradient has not been applied yet.
     pub(crate) pending_supervised: u64,
+    /// Metric sampler; `None` = telemetry off (the default). A runtime
+    /// observability knob like `threads`: never part of a checkpoint, so a
+    /// resumed session starts with telemetry off regardless of what the
+    /// evicted session had enabled.
+    pub(crate) telemetry: Option<SessionTelemetry>,
 }
 
 impl OnlineSession {
@@ -302,6 +324,9 @@ impl OnlineSession {
         self.engine =
             build::build_engine(self.cfg.train.algorithm, &self.net, self.readout.n_out());
         self.engine.set_threads(self.threads);
+        if self.telemetry.as_ref().is_some_and(|t| t.config().measure_influence) {
+            self.engine.set_measure_influence(true);
+        }
         self.engine.begin_sequence();
     }
 
@@ -319,6 +344,42 @@ impl OnlineSession {
         self.engine.set_threads(threads);
     }
 
+    /// Turn on per-session metric sampling (α/β/β̃, influence occupancy,
+    /// loss EWMA, per-phase MAC rates, step latency) with the given knobs.
+    /// Works at any point in a session's life — including on a resumed
+    /// session, since telemetry never travels in checkpoints. Op-rate
+    /// baselines anchor at the *current* counter values, so mid-stream
+    /// enables report rates for the observed suffix only.
+    ///
+    /// With [`TelemetryConfig::measure_influence`] the engine also measures
+    /// influence-panel occupancy each step: pure inspection (zero ops, no
+    /// gradient effect), but it costs wall time proportional to the panel.
+    pub fn enable_telemetry(&mut self, cfg: TelemetryConfig) {
+        if cfg.measure_influence {
+            self.engine.set_measure_influence(true);
+        }
+        self.telemetry = Some(SessionTelemetry::new(cfg, self.net.total_units(), &self.ops));
+    }
+
+    /// Drop the sampler (and any influence measurement it switched on),
+    /// returning the session to the zero-overhead path.
+    pub fn disable_telemetry(&mut self) {
+        if self.telemetry.as_ref().is_some_and(|t| t.config().measure_influence) {
+            self.engine.set_measure_influence(false);
+        }
+        self.telemetry = None;
+    }
+
+    /// The metric sampler, when telemetry is enabled.
+    pub fn telemetry(&self) -> Option<&SessionTelemetry> {
+        self.telemetry.as_ref()
+    }
+
+    /// Mutable sampler access (trace emitters drain fresh points here).
+    pub fn telemetry_mut(&mut self) -> Option<&mut SessionTelemetry> {
+        self.telemetry.as_mut()
+    }
+
     /// Reset the engine's temporal state for a new sequence. Optional: a
     /// boundary-free stream never calls this.
     pub fn begin_sequence(&mut self) {
@@ -330,6 +391,10 @@ impl OnlineSession {
     /// decide whether to apply the accumulated gradient.
     pub fn step(&mut self, x: &[f32], target: Target<'_>) -> StepOutcome {
         assert_eq!(x.len(), self.net.n_in(), "input width must match the stack");
+        // The only per-step telemetry cost when disabled is this `is_some`
+        // test — the clock is not even read (tests/telemetry.rs pins that
+        // outcomes are bit-identical either way).
+        let t0 = if self.telemetry.is_some() { Some(std::time::Instant::now()) } else { None };
         let r = self.engine.step(
             &self.net,
             &mut self.readout,
@@ -366,7 +431,7 @@ impl OnlineSession {
             }
             _ => false,
         };
-        StepOutcome {
+        let outcome = StepOutcome {
             step: self.steps,
             loss: r.loss,
             correct: r.correct,
@@ -375,7 +440,12 @@ impl OnlineSession {
             deriv_units: r.deriv_units,
             influence_sparsity: r.influence_sparsity,
             updated,
+        };
+        if let Some(tel) = self.telemetry.as_mut() {
+            let latency_ns = t0.map_or(0, |t| t.elapsed().as_nanos() as u64);
+            tel.on_step(&outcome, latency_ns, &self.ops);
         }
+        outcome
     }
 
     /// Close a sequence: finish the engine's pass (BPTT's backward runs

@@ -12,17 +12,33 @@
 //! ([`crate::session::codec`], binary by default) and
 //! [`SessionPool::admit`] restores it — bit-exactly, in either snapshot
 //! format — when the user returns.
+//!
+//! With [`SessionPool::enable_telemetry`] the evict/admit paths aggregate
+//! counters (admissions, evictions, spill bytes) and latency histograms
+//! into a [`crate::telemetry::MemoryRecorder`];
+//! [`SessionPool::telemetry_snapshot`] condenses them — plus one row per
+//! live session — into a serializable
+//! [`crate::telemetry::TelemetrySnapshot`].
 
 use super::codec::{self, SnapshotFormat};
 use super::online::{OnlineSession, StepOutcome};
 use crate::data::StepTarget;
+use crate::telemetry::names;
+use crate::telemetry::{
+    HistogramKind, HistogramSummary, MemoryRecorder, Recorder, SessionStats, TelemetrySnapshot,
+};
 use crate::util::pool::run_parallel;
 use std::path::Path;
+use std::time::Instant;
 
 /// A fixed set of independent sessions plus a worker-thread budget.
 pub struct SessionPool {
     sessions: Vec<OnlineSession>,
     workers: usize,
+    /// Pool-level aggregation (admissions, evictions, spill bytes, evict/
+    /// resume latency). `None` = telemetry off: the evict/admit paths then
+    /// skip even their clock reads.
+    recorder: Option<MemoryRecorder>,
 }
 
 impl SessionPool {
@@ -31,7 +47,24 @@ impl SessionPool {
     /// [`crate::util::pool::resolve_workers`]).
     pub fn new(sessions: Vec<OnlineSession>, workers: usize) -> Self {
         let workers = crate::util::pool::resolve_workers(workers);
-        SessionPool { sessions, workers }
+        SessionPool { sessions, workers, recorder: None }
+    }
+
+    /// Start aggregating pool-level telemetry (admission/eviction counters,
+    /// spill bytes, evict-encode and resume-decode latency histograms).
+    /// Counters start from zero at the moment of the call.
+    pub fn enable_telemetry(&mut self) {
+        self.recorder = Some(MemoryRecorder::new());
+    }
+
+    /// Stop aggregating and drop the collected state.
+    pub fn disable_telemetry(&mut self) {
+        self.recorder = None;
+    }
+
+    /// The pool's aggregated recorder, when telemetry is enabled.
+    pub fn recorder(&self) -> Option<&MemoryRecorder> {
+        self.recorder.as_ref()
     }
 
     pub fn len(&self) -> usize {
@@ -67,10 +100,19 @@ impl SessionPool {
         if i >= self.sessions.len() {
             return Err(format!("no session {i} in a pool of {}", self.sessions.len()));
         }
+        let t0 = self.recorder.as_ref().map(|_| Instant::now());
         let bytes = codec::encode(&self.sessions[i].checkpoint(), format);
         std::fs::write(path, &bytes)
             .map_err(|e| format!("cannot write snapshot {}: {e}", path.display()))?;
         self.sessions.remove(i);
+        if let Some(rec) = self.recorder.as_mut() {
+            let ns = t0.map_or(0, |t| t.elapsed().as_nanos() as u64);
+            rec.counter(names::POOL_EVICTIONS, 1);
+            rec.counter(names::POOL_SPILL_BYTES, bytes.len() as u64);
+            rec.observe(names::POOL_EVICT_ENCODE_NS, HistogramKind::LatencyNs, ns);
+            rec.observe(names::POOL_SPILL_SIZE_BYTES, HistogramKind::Bytes, bytes.len() as u64);
+            rec.gauge(names::POOL_LIVE_SESSIONS, self.sessions.len() as f64);
+        }
         Ok(())
     }
 
@@ -79,11 +121,68 @@ impl SessionPool {
     /// session's index. Resumption is bit-exact: the readmitted learner
     /// continues its stream as if it had never left memory.
     pub fn admit(&mut self, path: &Path) -> Result<usize, String> {
+        let t0 = self.recorder.as_ref().map(|_| Instant::now());
         let bytes = std::fs::read(path)
             .map_err(|e| format!("cannot read snapshot {}: {e}", path.display()))?;
         let ck = codec::decode(&bytes).map_err(|e| e.to_string())?;
         self.sessions.push(OnlineSession::resume(&ck)?);
+        if let Some(rec) = self.recorder.as_mut() {
+            let ns = t0.map_or(0, |t| t.elapsed().as_nanos() as u64);
+            rec.counter(names::POOL_ADMISSIONS, 1);
+            rec.observe(names::POOL_RESUME_DECODE_NS, HistogramKind::LatencyNs, ns);
+            rec.gauge(names::POOL_LIVE_SESSIONS, self.sessions.len() as f64);
+        }
         Ok(self.sessions.len() - 1)
+    }
+
+    /// Condense the pool's aggregated telemetry plus one row per live
+    /// session into a serializable [`TelemetrySnapshot`]. Works with
+    /// telemetry disabled too (all pool counters read zero); per-session
+    /// α/β/loss columns fill in only for sessions whose own telemetry is
+    /// on ([`OnlineSession::enable_telemetry`]).
+    pub fn telemetry_snapshot(&self) -> TelemetrySnapshot {
+        let (admissions, evictions, spill_bytes, evict_ns, resume_ns) = match &self.recorder {
+            Some(r) => (
+                r.counter_value(names::POOL_ADMISSIONS),
+                r.counter_value(names::POOL_EVICTIONS),
+                r.counter_value(names::POOL_SPILL_BYTES),
+                r.histogram(names::POOL_EVICT_ENCODE_NS)
+                    .map(HistogramSummary::from_histogram)
+                    .unwrap_or_default(),
+                r.histogram(names::POOL_RESUME_DECODE_NS)
+                    .map(HistogramSummary::from_histogram)
+                    .unwrap_or_default(),
+            ),
+            None => (0, 0, 0, HistogramSummary::default(), HistogramSummary::default()),
+        };
+        let sessions = self
+            .sessions
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let latest = s.telemetry().and_then(|t| t.latest_point());
+                SessionStats {
+                    index: i as u64,
+                    steps: s.steps(),
+                    supervised_steps: s.supervised_steps(),
+                    updates_applied: s.updates_applied(),
+                    loss_ewma: s.telemetry().and_then(|t| t.loss_ewma()),
+                    alpha: latest.map(|p| p.alpha),
+                    beta: latest.map(|p| p.beta),
+                    points: s.telemetry().map_or(0, |t| t.points().count() as u64),
+                }
+            })
+            .collect();
+        TelemetrySnapshot {
+            live_sessions: self.sessions.len() as u64,
+            workers: self.workers as u64,
+            admissions,
+            evictions,
+            spill_bytes,
+            evict_encode_ns: evict_ns,
+            resume_decode_ns: resume_ns,
+            sessions,
+        }
     }
 
     /// Deliver one event per session (index-aligned) and step them all
@@ -266,6 +365,46 @@ mod tests {
             assert_eq!(a.loss.map(f32::to_bits), b.loss.map(f32::to_bits), "round {round}");
             assert_eq!(a.prediction, b.prediction);
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Pool telemetry observes the evict/admit lifecycle: counters, spill
+    /// bytes and latency histograms all move, and the snapshot serializes
+    /// round-trip through its JSON form.
+    #[test]
+    fn telemetry_counts_evictions_and_admissions() {
+        let dir = std::env::temp_dir()
+            .join(format!("sparse-rtrl-pool-telemetry-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let spill = dir.join("user0.snap");
+
+        let mut pool = make_pool(2, 1);
+        // disabled pool telemetry still snapshots (zero counters)
+        let cold = pool.telemetry_snapshot();
+        assert_eq!((cold.evictions, cold.admissions, cold.live_sessions), (0, 0, 2));
+
+        pool.enable_telemetry();
+        pool.run_each(|i, s| s.step(&[0.2, -0.2], Target::Class(i % 2)));
+        pool.evict(0, &spill, SnapshotFormat::Binary).unwrap();
+        let idx = pool.admit(&spill).unwrap();
+        assert_eq!(idx, 1);
+
+        let snap = pool.telemetry_snapshot();
+        assert_eq!(snap.evictions, 1);
+        assert_eq!(snap.admissions, 1);
+        assert_eq!(snap.live_sessions, 2);
+        assert_eq!(snap.spill_bytes, std::fs::metadata(&spill).unwrap().len());
+        assert_eq!(snap.evict_encode_ns.count, 1);
+        assert_eq!(snap.resume_decode_ns.count, 1);
+        assert!(snap.resume_decode_ns.max > 0);
+        let rec = pool.recorder().unwrap();
+        assert_eq!(
+            rec.gauge_value(crate::telemetry::names::POOL_LIVE_SESSIONS),
+            Some(2.0)
+        );
+
+        let back = TelemetrySnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,61 @@
+//! Zero-cost-when-disabled observability for the streaming stack.
+//!
+//! The paper's cost model is stated in quantities that *drift* over a
+//! stream — activity sparsity α, pseudo-derivative sparsity β, influence
+//! occupancy, per-phase op rates — so they are only verifiable in
+//! production as time series. This module makes them first-class runtime
+//! signals:
+//!
+//! - [`recorder`] — the [`Recorder`] sink trait (counters, gauges,
+//!   fixed-bucket histograms), with [`NullRecorder`] (disabled; no-ops) and
+//!   [`MemoryRecorder`] (bounded in-memory aggregation).
+//! - [`session`] — [`SessionTelemetry`]: per-session sampling of α/β/β̃,
+//!   influence occupancy, loss EWMA and per-phase MAC/word rates on a
+//!   configurable cadence into bounded rings ([`ring::Ring`]).
+//! - [`trace`] — the JSON-lines structured trace
+//!   ([`trace::TRACE_SCHEMA`]): span/event/metrics records behind
+//!   `stream --trace`, with an in-tree parser and round-trip tests.
+//! - [`snapshot`] — [`TelemetrySnapshot`]: pool-level aggregation
+//!   (admissions, evictions, spill bytes, resume latency) serialized like
+//!   the bench report and rendered by the `stats` subcommand.
+//!
+//! # Disabled means off
+//!
+//! Telemetry is opt-in per session
+//! ([`crate::session::OnlineSession::enable_telemetry`]) and per pool
+//! ([`crate::session::SessionPool::enable_telemetry`]). When off, the
+//! per-step cost is one `Option` discriminant test — no clock reads, no
+//! sampling, no allocation — and results are bit-identical to a build that
+//! never had telemetry (pinned by `tests/telemetry.rs`). When on,
+//! *results are still bit-identical*: every sampled quantity is pure
+//! inspection, charged zero ops.
+
+pub mod recorder;
+pub mod ring;
+pub mod session;
+pub mod snapshot;
+pub mod trace;
+
+pub use recorder::{Histogram, HistogramKind, MemoryRecorder, NullRecorder, Recorder};
+pub use session::{MetricPoint, SessionTelemetry, TelemetryConfig};
+pub use snapshot::{HistogramSummary, SessionStats, TelemetrySnapshot};
+pub use trace::{parse_trace, TraceEventKind, TraceRecord, TraceSink, TRACE_SCHEMA, TRACE_VERSION};
+
+/// Canonical metric names recorded by the pool (one place, so snapshot
+/// readers and instrumentation sites cannot drift apart).
+pub mod names {
+    /// Counter: sessions admitted (restored) into a pool.
+    pub const POOL_ADMISSIONS: &str = "pool.admissions";
+    /// Counter: sessions evicted (spilled) from a pool.
+    pub const POOL_EVICTIONS: &str = "pool.evictions";
+    /// Counter: total bytes written by evictions.
+    pub const POOL_SPILL_BYTES: &str = "pool.spill_bytes";
+    /// Gauge: live sessions after the latest pool mutation.
+    pub const POOL_LIVE_SESSIONS: &str = "pool.live_sessions";
+    /// Histogram (latency): checkpoint encode wall time on eviction.
+    pub const POOL_EVICT_ENCODE_NS: &str = "pool.evict_encode_ns";
+    /// Histogram (latency): read+decode+resume wall time on admission.
+    pub const POOL_RESUME_DECODE_NS: &str = "pool.resume_decode_ns";
+    /// Histogram (bytes): serialized snapshot sizes on eviction.
+    pub const POOL_SPILL_SIZE_BYTES: &str = "pool.spill_size_bytes";
+}

@@ -1,0 +1,348 @@
+//! The [`Recorder`] sink abstraction: counters, gauges and fixed-bucket
+//! histograms.
+//!
+//! Instrumentation sites in the streaming stack write through this trait so
+//! the cost of observability is chosen by the *installed sink*, not by the
+//! call site:
+//!
+//! - [`NullRecorder`] is the disabled state. Every method body is empty and
+//!   `#[inline]`, so a monomorphised call compiles to nothing and a dynamic
+//!   call is a single indirect jump to a `ret`. Its [`Recorder::is_enabled`]
+//!   returns `false`, which call sites use to skip *ambient* costs the sink
+//!   cannot elide for them (e.g. reading the clock before an `observe`).
+//! - [`MemoryRecorder`] aggregates in memory with bounded state: one `u64`
+//!   per counter name, one `f64` per gauge name, one [`Histogram`] per
+//!   histogram name. Names are `&'static str` so recording never allocates
+//!   strings.
+//!
+//! Histograms use fixed, log-spaced bucket bounds chosen per quantity kind
+//! ([`HistogramKind`]) — recording is a binary search over a dozen bounds,
+//! O(1) memory, no reservoir. That matches the streaming story: telemetry
+//! state must not grow with stream length.
+
+use std::collections::BTreeMap;
+
+/// Bucket upper bounds (inclusive) for latency histograms, in nanoseconds:
+/// 1 µs … 4 s, log-spaced ×4. Values above the last bound land in the
+/// overflow bucket.
+pub const LATENCY_BOUNDS_NS: [u64; 12] = [
+    1_000,
+    4_000,
+    16_000,
+    64_000,
+    256_000,
+    1_000_000,
+    4_000_000,
+    16_000_000,
+    64_000_000,
+    256_000_000,
+    1_000_000_000,
+    4_000_000_000,
+];
+
+/// Bucket upper bounds (inclusive) for size histograms, in bytes:
+/// 256 B … 64 MiB, log-spaced ×4.
+pub const SIZE_BOUNDS_BYTES: [u64; 10] = [
+    256,
+    1_024,
+    4_096,
+    16_384,
+    65_536,
+    262_144,
+    1 << 20,
+    4 << 20,
+    16 << 20,
+    64 << 20,
+];
+
+/// Which fixed bucket layout a histogram observation belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HistogramKind {
+    /// Durations in nanoseconds (step latency, checkpoint encode/decode).
+    LatencyNs,
+    /// Sizes in bytes (snapshot/spill sizes).
+    Bytes,
+}
+
+impl HistogramKind {
+    /// The fixed bucket bounds for this kind.
+    pub fn bounds(self) -> &'static [u64] {
+        match self {
+            HistogramKind::LatencyNs => &LATENCY_BOUNDS_NS,
+            HistogramKind::Bytes => &SIZE_BOUNDS_BYTES,
+        }
+    }
+}
+
+/// A fixed-bucket histogram: `bounds.len() + 1` counts (the last is the
+/// overflow bucket), plus exact count/sum/min/max. O(1) memory per metric.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    bounds: &'static [u64],
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Histogram {
+    pub fn new(kind: HistogramKind) -> Self {
+        let bounds = kind.bounds();
+        Histogram {
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Fold one observation in (binary search over the bucket bounds).
+    pub fn record(&mut self, value: u64) {
+        let b = self.bounds.partition_point(|&bound| bound < value);
+        self.counts[b] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(value);
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Smallest observation, or 0 when empty.
+    pub fn min(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean observation, or 0 when empty.
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.sum / self.count }
+    }
+
+    /// The fixed bucket upper bounds (the overflow bucket has no bound).
+    pub fn bounds(&self) -> &'static [u64] {
+        self.bounds
+    }
+
+    /// Per-bucket counts; `bucket_counts().len() == bounds().len() + 1`.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Upper bound of the bucket containing the `q`-quantile observation
+    /// (`q` in `[0, 1]`); the exact max for the overflow bucket; 0 when
+    /// empty. Coarse by construction — fine for dashboards, not for SLOs.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let rank = rank.max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram in. Panics if the bucket layouts differ —
+    /// merging incompatible layouts would silently misattribute counts.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert!(
+            std::ptr::eq(self.bounds, other.bounds),
+            "histogram bucket layouts differ"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Sink for telemetry primitives. All names are `&'static str` so recording
+/// never allocates; implementations must be cheap enough to sit on the
+/// eviction/admission path (the per-step path is additionally gated by
+/// [`crate::session::OnlineSession::enable_telemetry`]).
+pub trait Recorder: Send {
+    /// Add `delta` to the named monotone counter.
+    fn counter(&mut self, name: &'static str, delta: u64);
+
+    /// Set the named gauge to `value` (last write wins).
+    fn gauge(&mut self, name: &'static str, value: f64);
+
+    /// Fold `value` into the named fixed-bucket histogram of `kind`.
+    fn observe(&mut self, name: &'static str, kind: HistogramKind, value: u64);
+
+    /// Whether this sink keeps anything. Call sites use `false` to skip
+    /// work the sink cannot elide (clock reads, size computations).
+    fn is_enabled(&self) -> bool {
+        true
+    }
+}
+
+/// The disabled sink: every record is a no-op and [`Recorder::is_enabled`]
+/// is `false`, so instrumented code skips clock reads too.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {
+    #[inline]
+    fn counter(&mut self, _name: &'static str, _delta: u64) {}
+
+    #[inline]
+    fn gauge(&mut self, _name: &'static str, _value: f64) {}
+
+    #[inline]
+    fn observe(&mut self, _name: &'static str, _kind: HistogramKind, _value: u64) {}
+
+    #[inline]
+    fn is_enabled(&self) -> bool {
+        false
+    }
+}
+
+/// In-memory aggregation: `BTreeMap` keyed by static name (deterministic
+/// iteration order for snapshots and tests).
+#[derive(Debug, Clone, Default)]
+pub struct MemoryRecorder {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    histograms: BTreeMap<&'static str, Histogram>,
+}
+
+impl MemoryRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current value of a counter (0 if never written).
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current value of a gauge, if ever written.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// The named histogram, if any observation was recorded.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Counter names seen so far, in sorted order.
+    pub fn counter_names(&self) -> impl Iterator<Item = &'static str> + '_ {
+        self.counters.keys().copied()
+    }
+}
+
+impl Recorder for MemoryRecorder {
+    fn counter(&mut self, name: &'static str, delta: u64) {
+        *self.counters.entry(name).or_insert(0) += delta;
+    }
+
+    fn gauge(&mut self, name: &'static str, value: f64) {
+        self.gauges.insert(name, value);
+    }
+
+    fn observe(&mut self, name: &'static str, kind: HistogramKind, value: u64) {
+        self.histograms
+            .entry(name)
+            .or_insert_with(|| Histogram::new(kind))
+            .record(value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        let mut h = Histogram::new(HistogramKind::LatencyNs);
+        h.record(500); // below first bound → bucket 0
+        h.record(1_000); // == first bound (inclusive) → bucket 0
+        h.record(2_000); // bucket 1
+        h.record(10_000_000_000); // above last bound → overflow bucket
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 500 + 1_000 + 2_000 + 10_000_000_000);
+        assert_eq!(h.min(), 500);
+        assert_eq!(h.max(), 10_000_000_000);
+        assert_eq!(h.bucket_counts()[0], 2);
+        assert_eq!(h.bucket_counts()[1], 1);
+        assert_eq!(*h.bucket_counts().last().unwrap(), 1);
+        assert_eq!(h.bucket_counts().len(), LATENCY_BOUNDS_NS.len() + 1);
+    }
+
+    #[test]
+    fn histogram_quantile_is_bucket_bound() {
+        let mut h = Histogram::new(HistogramKind::Bytes);
+        for _ in 0..99 {
+            h.record(100); // bucket 0, bound 256
+        }
+        h.record(2_000); // bucket 2, bound 4096
+        assert_eq!(h.quantile(0.5), 256);
+        assert_eq!(h.quantile(1.0), 4_096);
+        assert_eq!(Histogram::new(HistogramKind::Bytes).quantile(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = Histogram::new(HistogramKind::LatencyNs);
+        a.record(1_000);
+        let mut b = Histogram::new(HistogramKind::LatencyNs);
+        b.record(5_000);
+        b.record(100);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.min(), 100);
+        assert_eq!(a.max(), 5_000);
+    }
+
+    #[test]
+    fn null_recorder_is_disabled_noop() {
+        let mut r = NullRecorder;
+        assert!(!r.is_enabled());
+        // No state to mutate; just pin that the calls are accepted.
+        r.counter("x", 1);
+        r.gauge("y", 2.0);
+        r.observe("z", HistogramKind::LatencyNs, 3);
+    }
+
+    #[test]
+    fn memory_recorder_aggregates() {
+        let mut r = MemoryRecorder::new();
+        assert!(r.is_enabled());
+        r.counter("pool.evictions", 1);
+        r.counter("pool.evictions", 2);
+        r.gauge("pool.live_sessions", 3.0);
+        r.gauge("pool.live_sessions", 2.0);
+        r.observe("pool.evict_encode_ns", HistogramKind::LatencyNs, 10_000);
+        r.observe("pool.evict_encode_ns", HistogramKind::LatencyNs, 20_000);
+        assert_eq!(r.counter_value("pool.evictions"), 3);
+        assert_eq!(r.counter_value("never"), 0);
+        assert_eq!(r.gauge_value("pool.live_sessions"), Some(2.0));
+        let h = r.histogram("pool.evict_encode_ns").unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.mean(), 15_000);
+        assert_eq!(r.counter_names().collect::<Vec<_>>(), vec!["pool.evictions"]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Bounded ring buffer for telemetry time series: `push` overwrites the
+//! oldest entry once `capacity` is reached, so memory stays O(capacity)
+//! however long the stream runs.
+
+/// Fixed-capacity ring. Iteration yields entries oldest → newest.
+#[derive(Debug, Clone)]
+pub struct Ring<T> {
+    buf: Vec<T>,
+    cap: usize,
+    /// Index of the oldest entry once the ring has wrapped.
+    start: usize,
+}
+
+impl<T> Ring<T> {
+    /// `cap` is clamped to at least 1.
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Ring { buf: Vec::with_capacity(cap), cap, start: 0 }
+    }
+
+    /// Append, dropping the oldest entry when full.
+    pub fn push(&mut self, value: T) {
+        if self.buf.len() < self.cap {
+            self.buf.push(value);
+        } else {
+            self.buf[self.start] = value;
+            self.start = (self.start + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &T> + '_ {
+        let (tail, head) = self.buf.split_at(self.start);
+        head.iter().chain(tail.iter())
+    }
+
+    /// The most recently pushed entry.
+    pub fn latest(&self) -> Option<&T> {
+        if self.buf.is_empty() {
+            None
+        } else if self.buf.len() < self.cap {
+            self.buf.last()
+        } else {
+            let i = (self.start + self.cap - 1) % self.cap;
+            self.buf.get(i)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_wraps_oldest_first() {
+        let mut r = Ring::new(3);
+        assert!(r.is_empty());
+        for i in 0..5 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.capacity(), 3);
+        assert_eq!(r.iter().copied().collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(r.latest(), Some(&4));
+    }
+
+    #[test]
+    fn partial_fill_keeps_order() {
+        let mut r = Ring::new(8);
+        r.push(10);
+        r.push(20);
+        assert_eq!(r.iter().copied().collect::<Vec<_>>(), vec![10, 20]);
+        assert_eq!(r.latest(), Some(&20));
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = Ring::new(0);
+        r.push(1);
+        r.push(2);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.latest(), Some(&2));
+    }
+}

@@ -1,0 +1,335 @@
+//! Per-session metric sampling: fold every step's observations into a
+//! window, close the window every `sample_every` steps into a
+//! [`MetricPoint`], and keep the points in a bounded ring.
+//!
+//! The sampled quantities are exactly the drifting series the paper's cost
+//! model is stated in: activity sparsity α, pseudo-derivative sparsity β
+//! (so β̃ = 1 − β), influence-panel occupancy, and per-phase MAC/word rates
+//! (the `ω̃²β̃²n²p` influence-update term is
+//! [`crate::metrics::Phase::InfluenceUpdate`]'s rate). Memory is O(ring
+//! capacity) regardless of stream length — the streaming story applies to
+//! the telemetry too.
+
+use crate::metrics::{OpCounter, Phase, SparsityStats, NUM_PHASES};
+use crate::session::StepOutcome;
+use crate::telemetry::recorder::{Histogram, HistogramKind};
+use crate::telemetry::ring::Ring;
+
+/// Sampling knobs for [`SessionTelemetry`].
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Close a metrics window every this many steps (≥ 1).
+    pub sample_every: u64,
+    /// How many [`MetricPoint`]s the ring keeps (≥ 1).
+    pub ring_capacity: usize,
+    /// EWMA coefficient for the loss series: `ewma ← (1−a)·ewma + a·loss`.
+    pub loss_ewma_alpha: f32,
+    /// Ask the engine to measure influence-panel occupancy each step.
+    /// Measurement is pure inspection — it charges no ops and perturbs no
+    /// gradients — but it does scan the panel, so it costs wall time.
+    pub measure_influence: bool,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            sample_every: 16,
+            ring_capacity: 256,
+            loss_ewma_alpha: 0.05,
+            measure_influence: true,
+        }
+    }
+}
+
+impl TelemetryConfig {
+    /// Clamp degenerate values (0 cadence / 0 capacity) up to 1.
+    pub fn sanitized(mut self) -> Self {
+        self.sample_every = self.sample_every.max(1);
+        self.ring_capacity = self.ring_capacity.max(1);
+        self
+    }
+}
+
+/// One closed metrics window: means over `window_start..=step`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricPoint {
+    /// 1-based stream position of the first step in the window.
+    pub window_start: u64,
+    /// 1-based stream position of the last step in the window.
+    pub step: u64,
+    /// Mean activation sparsity α over the window.
+    pub alpha: f32,
+    /// Mean pseudo-derivative sparsity β over the window.
+    pub beta: f32,
+    /// Mean backward density β̃ = 1 − β.
+    pub beta_tilde: f32,
+    /// Mean influence-panel occupancy (1 − zero fraction), when measured.
+    pub influence_occupancy: Option<f32>,
+    /// Loss EWMA as of the window close (None until a supervised step).
+    pub loss_ewma: Option<f32>,
+    /// Per-phase MACs per step over the window ([`Phase::index`] order).
+    pub macs_per_step: [u64; NUM_PHASES],
+    /// Per-phase memory words per step over the window.
+    pub words_per_step: [u64; NUM_PHASES],
+    /// Total wall time the window's steps spent inside
+    /// [`crate::session::OnlineSession::step`], in nanoseconds.
+    pub window_latency_ns: u64,
+}
+
+impl MetricPoint {
+    /// Steps folded into this window.
+    pub fn window_len(&self) -> u64 {
+        self.step - self.window_start + 1
+    }
+
+    /// Mean step latency over the window, ns.
+    pub fn mean_step_latency_ns(&self) -> u64 {
+        self.window_latency_ns / self.window_len().max(1)
+    }
+}
+
+/// Streaming metric sampler owned by an [`crate::session::OnlineSession`]
+/// when telemetry is enabled. See the module docs for what is sampled.
+#[derive(Debug, Clone)]
+pub struct SessionTelemetry {
+    cfg: TelemetryConfig,
+    /// Total units N across the stack (denominator for α/β).
+    n_units: usize,
+    /// Open-window sparsity accumulators.
+    window: SparsityStats,
+    window_steps: u64,
+    window_latency_ns: u64,
+    /// Per-phase MAC/word totals at the window open (rates are deltas).
+    base_macs: [u64; NUM_PHASES],
+    base_words: [u64; NUM_PHASES],
+    loss_ewma: Option<f32>,
+    /// Whole-session step-latency histogram (fixed buckets, O(1) memory).
+    latency: Histogram,
+    ring: Ring<MetricPoint>,
+    /// Points not yet drained by a trace emitter.
+    fresh: Vec<MetricPoint>,
+    steps_seen: u64,
+}
+
+impl SessionTelemetry {
+    /// `ops` is the session's op counter *at enable time*: telemetry can
+    /// come on mid-stream (including after a resume), and rates must be
+    /// deltas from that point, not from zero.
+    pub fn new(cfg: TelemetryConfig, n_units: usize, ops: &OpCounter) -> Self {
+        let cfg = cfg.sanitized();
+        let ring = Ring::new(cfg.ring_capacity);
+        let mut t = SessionTelemetry {
+            cfg,
+            n_units: n_units.max(1),
+            window: SparsityStats::new(),
+            window_steps: 0,
+            window_latency_ns: 0,
+            base_macs: [0; NUM_PHASES],
+            base_words: [0; NUM_PHASES],
+            loss_ewma: None,
+            latency: Histogram::new(HistogramKind::LatencyNs),
+            ring,
+            fresh: Vec::new(),
+            steps_seen: 0,
+        };
+        t.rebase_ops(ops);
+        t
+    }
+
+    pub fn config(&self) -> &TelemetryConfig {
+        &self.cfg
+    }
+
+    /// Fold one step in; closes a window (pushing a [`MetricPoint`]) every
+    /// `sample_every` steps. Called by the session with the step's outcome,
+    /// its wall time, and the session's cumulative op counter.
+    pub fn on_step(&mut self, outcome: &StepOutcome, latency_ns: u64, ops: &OpCounter) {
+        self.steps_seen += 1;
+        self.window_steps += 1;
+        self.window_latency_ns = self.window_latency_ns.saturating_add(latency_ns);
+        self.latency.record(latency_ns);
+        self.window.record_step(self.n_units, outcome.active_units, outcome.deriv_units);
+        if let Some(zero_fraction) = outcome.influence_sparsity {
+            self.window.record_influence(zero_fraction);
+        }
+        if let Some(loss) = outcome.loss {
+            let a = self.cfg.loss_ewma_alpha;
+            self.loss_ewma = Some(match self.loss_ewma {
+                Some(e) => (1.0 - a) * e + a * loss,
+                None => loss,
+            });
+        }
+        if self.window_steps >= self.cfg.sample_every {
+            self.close_window(outcome.step, ops);
+        }
+    }
+
+    fn rebase_ops(&mut self, ops: &OpCounter) {
+        for (i, ph) in Phase::all().iter().enumerate() {
+            self.base_macs[i] = ops.macs_in(*ph);
+            self.base_words[i] = ops.words_in(*ph);
+        }
+    }
+
+    fn close_window(&mut self, step: u64, ops: &OpCounter) {
+        let steps = self.window_steps.max(1);
+        let mut macs_per_step = [0u64; NUM_PHASES];
+        let mut words_per_step = [0u64; NUM_PHASES];
+        for (i, ph) in Phase::all().iter().enumerate() {
+            macs_per_step[i] = ops.macs_in(*ph).saturating_sub(self.base_macs[i]) / steps;
+            words_per_step[i] = ops.words_in(*ph).saturating_sub(self.base_words[i]) / steps;
+        }
+        let influence_occupancy = if self.window.influence_observations() > 0 {
+            Some(1.0 - self.window.influence_sparsity())
+        } else {
+            None
+        };
+        let point = MetricPoint {
+            window_start: step + 1 - steps,
+            step,
+            alpha: self.window.alpha(),
+            beta: self.window.beta(),
+            beta_tilde: self.window.beta_tilde(),
+            influence_occupancy,
+            loss_ewma: self.loss_ewma,
+            macs_per_step,
+            words_per_step,
+            window_latency_ns: self.window_latency_ns,
+        };
+        self.ring.push(point.clone());
+        self.fresh.push(point);
+        self.window.reset();
+        self.window_steps = 0;
+        self.window_latency_ns = 0;
+        self.rebase_ops(ops);
+    }
+
+    /// Sampled points still in the ring, oldest → newest.
+    pub fn points(&self) -> impl Iterator<Item = &MetricPoint> + '_ {
+        self.ring.iter()
+    }
+
+    /// The most recent sampled point.
+    pub fn latest_point(&self) -> Option<&MetricPoint> {
+        self.ring.latest()
+    }
+
+    /// Points produced since the last drain (for live trace emission).
+    /// Unlike the ring, this buffer is unbounded *between drains*; callers
+    /// that enable telemetry must drain on their emit cadence.
+    pub fn drain_new_points(&mut self) -> Vec<MetricPoint> {
+        std::mem::take(&mut self.fresh)
+    }
+
+    /// Whole-session step-latency histogram.
+    pub fn latency_histogram(&self) -> &Histogram {
+        &self.latency
+    }
+
+    /// Current loss EWMA (None until the first supervised step).
+    pub fn loss_ewma(&self) -> Option<f32> {
+        self.loss_ewma
+    }
+
+    /// Steps folded in since telemetry was enabled.
+    pub fn steps_seen(&self) -> u64 {
+        self.steps_seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(step: u64, active: usize, deriv: usize, loss: Option<f32>) -> StepOutcome {
+        StepOutcome {
+            step,
+            loss,
+            active_units: active,
+            deriv_units: deriv,
+            ..StepOutcome::default()
+        }
+    }
+
+    #[test]
+    fn cadence_closes_windows_and_bounds_ring() {
+        let cfg = TelemetryConfig {
+            sample_every: 4,
+            ring_capacity: 3,
+            ..TelemetryConfig::default()
+        };
+        let ops = OpCounter::new();
+        let mut t = SessionTelemetry::new(cfg, 8, &ops);
+        for s in 1..=20 {
+            t.on_step(&outcome(s, 4, 2, Some(1.0)), 1_000, &ops);
+        }
+        // 20 steps / cadence 4 = 5 points; ring keeps the last 3.
+        assert_eq!(t.ring.len(), 3);
+        let points: Vec<&MetricPoint> = t.points().collect();
+        assert_eq!(points[0].window_start, 9);
+        assert_eq!(points[0].step, 12);
+        assert_eq!(points[2].step, 20);
+        assert_eq!(points[2].window_len(), 4);
+        // α = 1 - 4/8, β = 1 - 2/8 in every window
+        assert!((points[2].alpha - 0.5).abs() < 1e-6);
+        assert!((points[2].beta - 0.75).abs() < 1e-6);
+        assert!((points[2].beta_tilde - 0.25).abs() < 1e-6);
+        assert_eq!(points[2].window_latency_ns, 4_000);
+        assert_eq!(points[2].mean_step_latency_ns(), 1_000);
+        // drain sees all 5, then empties
+        assert_eq!(t.drain_new_points().len(), 5);
+        assert!(t.drain_new_points().is_empty());
+        assert_eq!(t.latency_histogram().count(), 20);
+        assert_eq!(t.steps_seen(), 20);
+    }
+
+    #[test]
+    fn loss_ewma_tracks_supervised_steps_only() {
+        let cfg = TelemetryConfig { sample_every: 2, loss_ewma_alpha: 0.5, ..Default::default() };
+        let ops = OpCounter::new();
+        let mut t = SessionTelemetry::new(cfg, 4, &ops);
+        t.on_step(&outcome(1, 2, 2, None), 100, &ops);
+        assert_eq!(t.loss_ewma(), None);
+        t.on_step(&outcome(2, 2, 2, Some(2.0)), 100, &ops);
+        assert_eq!(t.loss_ewma(), Some(2.0));
+        t.on_step(&outcome(3, 2, 2, Some(1.0)), 100, &ops);
+        assert!((t.loss_ewma().unwrap() - 1.5).abs() < 1e-6);
+        let last = t.latest_point().unwrap();
+        assert_eq!(last.loss_ewma, Some(2.0)); // closed at step 2
+    }
+
+    #[test]
+    fn op_rates_are_window_deltas() {
+        let cfg = TelemetryConfig { sample_every: 2, ..Default::default() };
+        let mut ops = OpCounter::new();
+        ops.macs(Phase::Forward, 100); // pre-telemetry history must not leak in
+        let mut t = SessionTelemetry::new(cfg, 4, &ops);
+        t.on_step(&outcome(1, 2, 2, None), 10, &ops);
+        ops.macs(Phase::Forward, 8);
+        ops.macs(Phase::InfluenceUpdate, 20);
+        t.on_step(&outcome(2, 2, 2, None), 10, &ops);
+        let p = t.latest_point().unwrap();
+        assert_eq!(p.macs_per_step[Phase::Forward.index()], 4);
+        assert_eq!(p.macs_per_step[Phase::InfluenceUpdate.index()], 10);
+        // next window starts from the new baseline
+        ops.macs(Phase::Forward, 6);
+        t.on_step(&outcome(3, 2, 2, None), 10, &ops);
+        t.on_step(&outcome(4, 2, 2, None), 10, &ops);
+        let p = t.latest_point().unwrap();
+        assert_eq!(p.macs_per_step[Phase::Forward.index()], 3);
+    }
+
+    #[test]
+    fn influence_occupancy_present_only_when_measured() {
+        let cfg = TelemetryConfig { sample_every: 1, ..Default::default() };
+        let ops = OpCounter::new();
+        let mut t = SessionTelemetry::new(cfg.clone(), 4, &ops);
+        t.on_step(&outcome(1, 2, 2, None), 10, &ops);
+        assert_eq!(t.latest_point().unwrap().influence_occupancy, None);
+        let mut o = outcome(2, 2, 2, None);
+        o.influence_sparsity = Some(0.75);
+        t.on_step(&o, 10, &ops);
+        let occ = t.latest_point().unwrap().influence_occupancy.unwrap();
+        assert!((occ - 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,295 @@
+//! [`TelemetrySnapshot`]: a point-in-time view of a
+//! [`crate::session::SessionPool`]'s aggregated telemetry — admissions,
+//! evictions, spill bytes, evict/resume latency summaries, and one row per
+//! live session — serialized as versioned JSON through the same in-tree
+//! conventions as the bench report (schema string + monotone version,
+//! hand-rolled writer, [`crate::bench::json::parse`] reader). This is an
+//! observability document, not a checkpoint: nothing in it restores state,
+//! so floats emit human-readable, not as bit patterns.
+
+use crate::bench::json::{number32, parse, Json};
+use crate::telemetry::recorder::Histogram;
+
+/// Schema identifier for serialized snapshots.
+pub const STATS_SCHEMA: &str = "sparse-rtrl/telemetry/v1";
+/// Monotone snapshot-schema revision.
+pub const STATS_VERSION: u64 = 1;
+
+/// Fixed-bucket histogram condensed to the fields a dashboard needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    /// Coarse bucket-bound quantiles (see [`Histogram::quantile`]).
+    pub p50: u64,
+    pub p99: u64,
+}
+
+impl HistogramSummary {
+    pub fn from_histogram(h: &Histogram) -> Self {
+        HistogramSummary {
+            count: h.count(),
+            sum: h.sum(),
+            min: h.min(),
+            max: h.max(),
+            p50: h.quantile(0.5),
+            p99: h.quantile(0.99),
+        }
+    }
+
+    /// Mean observation, or 0 when empty.
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.sum / self.count }
+    }
+
+    fn to_json(self) -> String {
+        format!(
+            "{{\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \"p50\": {}, \"p99\": {}}}",
+            self.count, self.sum, self.min, self.max, self.p50, self.p99
+        )
+    }
+
+    fn from_json(v: &Json, key: &str) -> Result<Self, String> {
+        let o = v.get(key).ok_or_else(|| format!("missing {key:?}"))?;
+        let f = |k: &str| {
+            o.get(k).and_then(Json::as_u64).ok_or_else(|| format!("{key:?} missing {k:?}"))
+        };
+        Ok(HistogramSummary {
+            count: f("count")?,
+            sum: f("sum")?,
+            min: f("min")?,
+            max: f("max")?,
+            p50: f("p50")?,
+            p99: f("p99")?,
+        })
+    }
+}
+
+/// One live session's row in a snapshot. `alpha`/`beta`/`loss_ewma` come
+/// from the session's latest sampled [`crate::telemetry::MetricPoint`] and
+/// are absent when per-session telemetry is off or no window has closed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionStats {
+    pub index: u64,
+    pub steps: u64,
+    pub supervised_steps: u64,
+    pub updates_applied: u64,
+    pub loss_ewma: Option<f32>,
+    pub alpha: Option<f32>,
+    pub beta: Option<f32>,
+    /// Sampled points currently held in the session's ring.
+    pub points: u64,
+}
+
+fn opt32(x: Option<f32>) -> String {
+    match x {
+        Some(v) => number32(v),
+        None => "null".to_string(),
+    }
+}
+
+fn opt_f32_of(v: &Json, key: &str) -> Result<Option<f32>, String> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => {
+            x.as_f64().map(|f| Some(f as f32)).ok_or_else(|| format!("{key:?} is not a number"))
+        }
+    }
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing integer {key:?}"))
+}
+
+impl SessionStats {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"index\": {}, \"steps\": {}, \"supervised_steps\": {}, \"updates_applied\": {}, \
+             \"loss_ewma\": {}, \"alpha\": {}, \"beta\": {}, \"points\": {}}}",
+            self.index,
+            self.steps,
+            self.supervised_steps,
+            self.updates_applied,
+            opt32(self.loss_ewma),
+            opt32(self.alpha),
+            opt32(self.beta),
+            self.points
+        )
+    }
+
+    fn from_json(v: &Json) -> Result<Self, String> {
+        Ok(SessionStats {
+            index: req_u64(v, "index")?,
+            steps: req_u64(v, "steps")?,
+            supervised_steps: req_u64(v, "supervised_steps")?,
+            updates_applied: req_u64(v, "updates_applied")?,
+            loss_ewma: opt_f32_of(v, "loss_ewma")?,
+            alpha: opt_f32_of(v, "alpha")?,
+            beta: opt_f32_of(v, "beta")?,
+            points: req_u64(v, "points")?,
+        })
+    }
+}
+
+/// Point-in-time pool telemetry. Produced by
+/// [`crate::session::SessionPool::telemetry_snapshot`]; renderable by the
+/// `stats` subcommand.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TelemetrySnapshot {
+    pub live_sessions: u64,
+    pub workers: u64,
+    pub admissions: u64,
+    pub evictions: u64,
+    /// Total bytes spilled by evictions.
+    pub spill_bytes: u64,
+    /// Checkpoint-encode wall time on the eviction path.
+    pub evict_encode_ns: HistogramSummary,
+    /// Read+decode+resume wall time on the admission path.
+    pub resume_decode_ns: HistogramSummary,
+    pub sessions: Vec<SessionStats>,
+}
+
+impl TelemetrySnapshot {
+    /// Serialize (multi-line, human-diffable, same conventions as the bench
+    /// report).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": \"{STATS_SCHEMA}\",\n"));
+        s.push_str(&format!("  \"version\": {STATS_VERSION},\n"));
+        s.push_str(&format!("  \"live_sessions\": {},\n", self.live_sessions));
+        s.push_str(&format!("  \"workers\": {},\n", self.workers));
+        s.push_str(&format!("  \"admissions\": {},\n", self.admissions));
+        s.push_str(&format!("  \"evictions\": {},\n", self.evictions));
+        s.push_str(&format!("  \"spill_bytes\": {},\n", self.spill_bytes));
+        s.push_str(&format!("  \"evict_encode_ns\": {},\n", self.evict_encode_ns.to_json()));
+        s.push_str(&format!("  \"resume_decode_ns\": {},\n", self.resume_decode_ns.to_json()));
+        s.push_str("  \"sessions\": [\n");
+        for (i, sess) in self.sessions.iter().enumerate() {
+            s.push_str("    ");
+            s.push_str(&sess.to_json());
+            if i + 1 < self.sessions.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse a serialized snapshot, rejecting unknown schemas/versions.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let v = parse(text)?;
+        let schema = v
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing string \"schema\"".to_string())?;
+        if schema != STATS_SCHEMA {
+            return Err(format!("unknown telemetry schema {schema:?}"));
+        }
+        let version = req_u64(&v, "version")?;
+        if version != STATS_VERSION {
+            return Err(format!(
+                "telemetry snapshot version {version} unsupported (this build reads {STATS_VERSION})"
+            ));
+        }
+        let sessions = v
+            .get("sessions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing array \"sessions\"".to_string())?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SessionStats::from_json(s).map_err(|e| format!("sessions[{i}]: {e}")))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(TelemetrySnapshot {
+            live_sessions: req_u64(&v, "live_sessions")?,
+            workers: req_u64(&v, "workers")?,
+            admissions: req_u64(&v, "admissions")?,
+            evictions: req_u64(&v, "evictions")?,
+            spill_bytes: req_u64(&v, "spill_bytes")?,
+            evict_encode_ns: HistogramSummary::from_json(&v, "evict_encode_ns")?,
+            resume_decode_ns: HistogramSummary::from_json(&v, "resume_decode_ns")?,
+            sessions,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::recorder::HistogramKind;
+
+    #[test]
+    fn snapshot_round_trips() {
+        let mut h = Histogram::new(HistogramKind::LatencyNs);
+        h.record(5_000);
+        h.record(50_000);
+        let snap = TelemetrySnapshot {
+            live_sessions: 2,
+            workers: 4,
+            admissions: 1,
+            evictions: 3,
+            spill_bytes: 6_144,
+            evict_encode_ns: HistogramSummary::from_histogram(&h),
+            resume_decode_ns: HistogramSummary::default(),
+            sessions: vec![
+                SessionStats {
+                    index: 0,
+                    steps: 100,
+                    supervised_steps: 30,
+                    updates_applied: 30,
+                    loss_ewma: Some(0.625),
+                    alpha: Some(0.5),
+                    beta: Some(0.75),
+                    points: 6,
+                },
+                SessionStats {
+                    index: 1,
+                    steps: 10,
+                    supervised_steps: 0,
+                    updates_applied: 0,
+                    loss_ewma: None,
+                    alpha: None,
+                    beta: None,
+                    points: 0,
+                },
+            ],
+        };
+        let text = snap.to_json();
+        let back = TelemetrySnapshot::from_json(&text).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.evict_encode_ns.count, 2);
+        assert_eq!(back.evict_encode_ns.mean(), 27_500);
+    }
+
+    #[test]
+    fn wrong_schema_or_version_rejected() {
+        let snap = TelemetrySnapshot::default();
+        let text = snap.to_json().replace(STATS_SCHEMA, "sparse-rtrl/other/v1");
+        assert!(TelemetrySnapshot::from_json(&text).unwrap_err().contains("other"));
+        let text = snap.to_json().replace("\"version\": 1", "\"version\": 99");
+        assert!(TelemetrySnapshot::from_json(&text).unwrap_err().contains("99"));
+    }
+
+    #[test]
+    fn malformed_session_rows_name_their_index() {
+        let snap = TelemetrySnapshot {
+            sessions: vec![SessionStats {
+                index: 0,
+                steps: 1,
+                supervised_steps: 0,
+                updates_applied: 0,
+                loss_ewma: None,
+                alpha: None,
+                beta: None,
+                points: 0,
+            }],
+            ..TelemetrySnapshot::default()
+        };
+        let text = snap.to_json().replace("\"steps\": 1", "\"steps\": \"one\"");
+        let err = TelemetrySnapshot::from_json(&text).unwrap_err();
+        assert!(err.contains("sessions[0]"), "{err}");
+    }
+}

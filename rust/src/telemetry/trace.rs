@@ -1,0 +1,480 @@
+//! Structured trace: JSON-lines span/event/metrics records behind
+//! `stream --trace <path>`, with an in-tree parser so the serialize→parse
+//! round trip is testable without vendoring serde (mirrors
+//! [`crate::bench::json`]).
+//!
+//! # Schema (`sparse-rtrl/trace/v1`)
+//!
+//! One JSON object per line, dispatched on `"type"`:
+//!
+//! - `meta` — first line of a trace: `schema`, `version`, `session`,
+//!   `engine`, `hidden`, `layers`, `sample_every`.
+//! - `metrics` — one closed sampling window ([`MetricPoint`]): `session`,
+//!   `window_start`, `step`, `alpha`, `beta`, `beta_tilde`,
+//!   `influence_occupancy` (number or null), `loss_ewma` (number or null),
+//!   `macs_per_step` / `words_per_step` (objects keyed by
+//!   [`crate::metrics::Phase`] name), `window_latency_ns`.
+//! - `span` — a named region over a step range: `session`, `phase`,
+//!   `step_start`, `step_end`, `duration_ns`.
+//! - `event` — a point occurrence: `session`, `step`, `event` (one of
+//!   [`TraceEventKind`]), optional `bytes` and `duration_ns` (number or
+//!   null).
+//!
+//! Numbers follow the bench-report conventions: non-finite floats emit as
+//! `null`, `u64`s emit as plain decimals (quantities here stay far below
+//! the 2⁵³ integer-precision ceiling of JSON consumers).
+
+use crate::bench::json::{escape, number32, parse, Json};
+use crate::metrics::{Phase, NUM_PHASES};
+use crate::telemetry::session::MetricPoint;
+use std::io::Write;
+
+/// Schema identifier carried in every `meta` record.
+pub const TRACE_SCHEMA: &str = "sparse-rtrl/trace/v1";
+/// Monotone trace-schema revision.
+pub const TRACE_VERSION: u64 = 1;
+
+/// Point occurrences a trace records besides metrics windows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEventKind {
+    /// A parameter update was applied.
+    Update,
+    /// A sequence boundary was consumed.
+    SequenceEnd,
+    /// A checkpoint was written (`bytes`, `duration_ns` set).
+    Checkpoint,
+    /// A pool eviction spilled a session (`bytes`, `duration_ns` set).
+    Evict,
+    /// A pool admission restored a session (`duration_ns` set).
+    Admit,
+}
+
+impl TraceEventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceEventKind::Update => "update",
+            TraceEventKind::SequenceEnd => "sequence_end",
+            TraceEventKind::Checkpoint => "checkpoint",
+            TraceEventKind::Evict => "evict",
+            TraceEventKind::Admit => "admit",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<TraceEventKind> {
+        match name {
+            "update" => Some(TraceEventKind::Update),
+            "sequence_end" => Some(TraceEventKind::SequenceEnd),
+            "checkpoint" => Some(TraceEventKind::Checkpoint),
+            "evict" => Some(TraceEventKind::Evict),
+            "admit" => Some(TraceEventKind::Admit),
+            _ => None,
+        }
+    }
+}
+
+/// One line of a trace file. See the module docs for the field-level
+/// schema.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceRecord {
+    Meta {
+        session: String,
+        engine: String,
+        hidden: u64,
+        layers: u64,
+        sample_every: u64,
+    },
+    Metrics {
+        session: String,
+        point: MetricPoint,
+    },
+    Span {
+        session: String,
+        phase: String,
+        step_start: u64,
+        step_end: u64,
+        duration_ns: u64,
+    },
+    Event {
+        session: String,
+        step: u64,
+        event: TraceEventKind,
+        bytes: Option<u64>,
+        duration_ns: Option<u64>,
+    },
+}
+
+fn opt_num32(x: Option<f32>) -> String {
+    match x {
+        Some(v) => number32(v),
+        None => "null".to_string(),
+    }
+}
+
+fn opt_u64(x: Option<u64>) -> String {
+    match x {
+        Some(v) => v.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+fn phase_obj(per_step: &[u64; NUM_PHASES]) -> String {
+    let mut s = String::from("{");
+    for (i, ph) in Phase::all().iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("\"{}\": {}", ph.name(), per_step[i]));
+    }
+    s.push('}');
+    s
+}
+
+fn parse_phase_obj(v: &Json, key: &str) -> Result<[u64; NUM_PHASES], String> {
+    let obj = v.get(key).ok_or_else(|| format!("missing {key:?}"))?;
+    let mut out = [0u64; NUM_PHASES];
+    for (i, ph) in Phase::all().iter().enumerate() {
+        out[i] = obj
+            .get(ph.name())
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("{key:?} missing phase {:?}", ph.name()))?;
+    }
+    Ok(out)
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string {key:?}"))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing integer {key:?}"))
+}
+
+fn req_f32(v: &Json, key: &str) -> Result<f32, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .map(|x| x as f32)
+        .ok_or_else(|| format!("missing number {key:?}"))
+}
+
+/// `key` absent or `null` → `None`; a number → `Some`.
+fn opt_f32_of(v: &Json, key: &str) -> Result<Option<f32>, String> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => {
+            x.as_f64().map(|f| Some(f as f32)).ok_or_else(|| format!("{key:?} is not a number"))
+        }
+    }
+}
+
+fn opt_u64_of(v: &Json, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x.as_u64().map(Some).ok_or_else(|| format!("{key:?} is not an integer")),
+    }
+}
+
+impl TraceRecord {
+    /// The session id every record carries.
+    pub fn session(&self) -> &str {
+        match self {
+            TraceRecord::Meta { session, .. }
+            | TraceRecord::Metrics { session, .. }
+            | TraceRecord::Span { session, .. }
+            | TraceRecord::Event { session, .. } => session,
+        }
+    }
+
+    /// Render as one JSON line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        match self {
+            TraceRecord::Meta { session, engine, hidden, layers, sample_every } => format!(
+                "{{\"type\": \"meta\", \"schema\": \"{}\", \"version\": {}, \
+                 \"session\": \"{}\", \"engine\": \"{}\", \"hidden\": {}, \"layers\": {}, \
+                 \"sample_every\": {}}}",
+                escape(TRACE_SCHEMA),
+                TRACE_VERSION,
+                escape(session),
+                escape(engine),
+                hidden,
+                layers,
+                sample_every
+            ),
+            TraceRecord::Metrics { session, point: p } => format!(
+                "{{\"type\": \"metrics\", \"session\": \"{}\", \"window_start\": {}, \
+                 \"step\": {}, \"alpha\": {}, \"beta\": {}, \"beta_tilde\": {}, \
+                 \"influence_occupancy\": {}, \"loss_ewma\": {}, \"macs_per_step\": {}, \
+                 \"words_per_step\": {}, \"window_latency_ns\": {}}}",
+                escape(session),
+                p.window_start,
+                p.step,
+                number32(p.alpha),
+                number32(p.beta),
+                number32(p.beta_tilde),
+                opt_num32(p.influence_occupancy),
+                opt_num32(p.loss_ewma),
+                phase_obj(&p.macs_per_step),
+                phase_obj(&p.words_per_step),
+                p.window_latency_ns
+            ),
+            TraceRecord::Span { session, phase, step_start, step_end, duration_ns } => format!(
+                "{{\"type\": \"span\", \"session\": \"{}\", \"phase\": \"{}\", \
+                 \"step_start\": {}, \"step_end\": {}, \"duration_ns\": {}}}",
+                escape(session),
+                escape(phase),
+                step_start,
+                step_end,
+                duration_ns
+            ),
+            TraceRecord::Event { session, step, event, bytes, duration_ns } => format!(
+                "{{\"type\": \"event\", \"session\": \"{}\", \"step\": {}, \
+                 \"event\": \"{}\", \"bytes\": {}, \"duration_ns\": {}}}",
+                escape(session),
+                step,
+                event.name(),
+                opt_u64(*bytes),
+                opt_u64(*duration_ns)
+            ),
+        }
+    }
+
+    /// Parse one JSON line. Errors describe the first schema violation.
+    pub fn from_json_line(line: &str) -> Result<TraceRecord, String> {
+        let v = parse(line)?;
+        let ty = req_str(&v, "type")?;
+        match ty.as_str() {
+            "meta" => {
+                let schema = req_str(&v, "schema")?;
+                if schema != TRACE_SCHEMA {
+                    return Err(format!("unknown trace schema {schema:?}"));
+                }
+                let version = req_u64(&v, "version")?;
+                if version != TRACE_VERSION {
+                    return Err(format!(
+                        "trace version {version} unsupported (this build reads {TRACE_VERSION})"
+                    ));
+                }
+                Ok(TraceRecord::Meta {
+                    session: req_str(&v, "session")?,
+                    engine: req_str(&v, "engine")?,
+                    hidden: req_u64(&v, "hidden")?,
+                    layers: req_u64(&v, "layers")?,
+                    sample_every: req_u64(&v, "sample_every")?,
+                })
+            }
+            "metrics" => {
+                let point = MetricPoint {
+                    window_start: req_u64(&v, "window_start")?,
+                    step: req_u64(&v, "step")?,
+                    alpha: req_f32(&v, "alpha")?,
+                    beta: req_f32(&v, "beta")?,
+                    beta_tilde: req_f32(&v, "beta_tilde")?,
+                    influence_occupancy: opt_f32_of(&v, "influence_occupancy")?,
+                    loss_ewma: opt_f32_of(&v, "loss_ewma")?,
+                    macs_per_step: parse_phase_obj(&v, "macs_per_step")?,
+                    words_per_step: parse_phase_obj(&v, "words_per_step")?,
+                    window_latency_ns: req_u64(&v, "window_latency_ns")?,
+                };
+                if point.step < point.window_start {
+                    return Err(format!(
+                        "metrics window ends at {} before it starts at {}",
+                        point.step, point.window_start
+                    ));
+                }
+                Ok(TraceRecord::Metrics { session: req_str(&v, "session")?, point })
+            }
+            "span" => Ok(TraceRecord::Span {
+                session: req_str(&v, "session")?,
+                phase: req_str(&v, "phase")?,
+                step_start: req_u64(&v, "step_start")?,
+                step_end: req_u64(&v, "step_end")?,
+                duration_ns: req_u64(&v, "duration_ns")?,
+            }),
+            "event" => {
+                let name = req_str(&v, "event")?;
+                let event = TraceEventKind::from_name(&name)
+                    .ok_or_else(|| format!("unknown event kind {name:?}"))?;
+                Ok(TraceRecord::Event {
+                    session: req_str(&v, "session")?,
+                    step: req_u64(&v, "step")?,
+                    event,
+                    bytes: opt_u64_of(&v, "bytes")?,
+                    duration_ns: opt_u64_of(&v, "duration_ns")?,
+                })
+            }
+            other => Err(format!("unknown record type {other:?}")),
+        }
+    }
+}
+
+/// Parse a whole trace file. Blank lines are skipped; errors are prefixed
+/// with the 1-based line number. The first non-blank line must be a `meta`
+/// record — that is what makes a file *a trace* rather than arbitrary
+/// JSON-lines.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceRecord>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = TraceRecord::from_json_line(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        if out.is_empty() && !matches!(rec, TraceRecord::Meta { .. }) {
+            return Err(format!("line {}: trace must open with a meta record", i + 1));
+        }
+        out.push(rec);
+    }
+    Ok(out)
+}
+
+/// Streaming JSON-lines writer: one [`TraceRecord`] per line, flushed on
+/// drop via the inner writer's own buffering discipline.
+pub struct TraceSink<W: Write> {
+    out: W,
+    records: u64,
+}
+
+impl<W: Write> TraceSink<W> {
+    pub fn new(out: W) -> Self {
+        TraceSink { out, records: 0 }
+    }
+
+    pub fn emit(&mut self, rec: &TraceRecord) -> std::io::Result<()> {
+        self.out.write_all(rec.to_json_line().as_bytes())?;
+        self.out.write_all(b"\n")?;
+        self.records += 1;
+        Ok(())
+    }
+
+    /// Records emitted so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<TraceRecord> {
+        vec![
+            TraceRecord::Meta {
+                session: "s0".into(),
+                engine: "rtrl-both".into(),
+                hidden: 32,
+                layers: 1,
+                sample_every: 4,
+            },
+            TraceRecord::Metrics {
+                session: "s0".into(),
+                point: MetricPoint {
+                    window_start: 1,
+                    step: 4,
+                    alpha: 0.5,
+                    beta: 0.25,
+                    beta_tilde: 0.75,
+                    influence_occupancy: Some(0.8),
+                    loss_ewma: None,
+                    macs_per_step: [10, 20, 30, 40, 50, 60],
+                    words_per_step: [1, 2, 3, 4, 5, 6],
+                    window_latency_ns: 123_456,
+                },
+            },
+            TraceRecord::Span {
+                session: "s0".into(),
+                phase: "steps".into(),
+                step_start: 1,
+                step_end: 4,
+                duration_ns: 123_456,
+            },
+            TraceRecord::Event {
+                session: "s0".into(),
+                step: 4,
+                event: TraceEventKind::Evict,
+                bytes: Some(2_048),
+                duration_ns: Some(9_999),
+            },
+            TraceRecord::Event {
+                session: "s0".into(),
+                step: 4,
+                event: TraceEventKind::Update,
+                bytes: None,
+                duration_ns: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn round_trip_through_sink_and_parser() {
+        let records = sample_records();
+        let mut buf = Vec::new();
+        {
+            let mut sink = TraceSink::new(&mut buf);
+            for r in &records {
+                sink.emit(r).unwrap();
+            }
+            assert_eq!(sink.records(), records.len() as u64);
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let parsed = parse_trace(&text).unwrap();
+        assert_eq!(parsed, records);
+    }
+
+    #[test]
+    fn trace_must_open_with_meta() {
+        let line = sample_records()[3].to_json_line();
+        let err = parse_trace(&line).unwrap_err();
+        assert!(err.contains("meta"), "{err}");
+        assert!(err.starts_with("line 1:"), "{err}");
+    }
+
+    #[test]
+    fn schema_violations_name_the_field() {
+        // a metrics record missing a phase in macs_per_step
+        let bad = r#"{"type": "metrics", "session": "s0", "window_start": 1, "step": 4,
+            "alpha": 0.5, "beta": 0.5, "beta_tilde": 0.5, "influence_occupancy": null,
+            "loss_ewma": null, "macs_per_step": {"forward": 1}, "words_per_step": {},
+            "window_latency_ns": 1}"#
+            .replace('\n', " ");
+        let err = TraceRecord::from_json_line(&bad).unwrap_err();
+        assert!(err.contains("macs_per_step"), "{err}");
+        // an event with an unknown kind
+        let bad = r#"{"type": "event", "session": "s0", "step": 1, "event": "compact"}"#;
+        let err = TraceRecord::from_json_line(bad).unwrap_err();
+        assert!(err.contains("compact"), "{err}");
+        // an unknown schema in meta
+        let bad = r#"{"type": "meta", "schema": "other/v9", "version": 1, "session": "s",
+            "engine": "e", "hidden": 1, "layers": 1, "sample_every": 1}"#
+            .replace('\n', " ");
+        let err = TraceRecord::from_json_line(&bad).unwrap_err();
+        assert!(err.contains("other/v9"), "{err}");
+    }
+
+    #[test]
+    fn inverted_metrics_window_rejected() {
+        let bad = r#"{"type": "metrics", "session": "s0", "window_start": 9, "step": 4,
+            "alpha": 0, "beta": 0, "beta_tilde": 1, "influence_occupancy": null,
+            "loss_ewma": null,
+            "macs_per_step": {"forward": 0, "jacobian": 0, "immediate": 0,
+            "influence_update": 0, "grad_combine": 0, "optimizer": 0},
+            "words_per_step": {"forward": 0, "jacobian": 0, "immediate": 0,
+            "influence_update": 0, "grad_combine": 0, "optimizer": 0},
+            "window_latency_ns": 1}"#
+            .replace('\n', " ");
+        let err = TraceRecord::from_json_line(&bad).unwrap_err();
+        assert!(err.contains("before it starts"), "{err}");
+    }
+
+    #[test]
+    fn blank_lines_skipped_and_errors_carry_line_numbers() {
+        let meta = sample_records()[0].to_json_line();
+        let text = format!("{meta}\n\nnot json\n");
+        let err = parse_trace(&text).unwrap_err();
+        assert!(err.starts_with("line 3:"), "{err}");
+    }
+}

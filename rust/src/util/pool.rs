@@ -130,16 +130,30 @@ where
         .collect()
 }
 
-/// Available hardware parallelism (≥ 1). Falls back to 1 (serial) when the
-/// platform cannot report a count — parallelism is opted into via
-/// `--threads 0`, never guessed at a hardcoded width.
+/// Width assumed when the platform cannot report its parallelism
+/// (`available_parallelism` errors on some containers/sandboxes): a small
+/// multi-core guess beats falling all the way back to serial on machines
+/// that are overwhelmingly multi-core, while staying cheap if wrong.
+const FALLBACK_WORKERS: usize = 4;
+
+/// The `--threads 0` fallback chain as a pure function of what the
+/// platform reports: reported count → [`FALLBACK_WORKERS`] when the
+/// platform cannot say → floored at 1 (a reported 0 would deadlock the
+/// pool sizing math downstream).
+fn worker_fallback_chain(reported: Option<usize>) -> usize {
+    reported.unwrap_or(FALLBACK_WORKERS).max(1)
+}
+
+/// Available hardware parallelism (≥ 1), via [`worker_fallback_chain`]:
+/// the platform-reported count when available, else 4, never below 1.
 pub fn available_workers() -> usize {
-    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    worker_fallback_chain(std::thread::available_parallelism().ok().map(|p| p.get()))
 }
 
 /// The uniform `--threads` semantics shared by `train`/`stream`/`bench`,
 /// [`crate::session::SessionPool`] and the intra-step panel kernels:
-/// `0` = available hardware parallelism, any other value is taken as-is.
+/// `0` = [`available_workers`] (hardware parallelism with its fallback
+/// chain), any other value is taken as-is.
 pub fn resolve_workers(requested: usize) -> usize {
     if requested == 0 {
         available_workers()
@@ -262,6 +276,17 @@ mod tests {
         let auto = resolve_workers(0);
         assert!(auto >= 1);
         assert_eq!(auto, available_workers());
+    }
+
+    /// The `--threads 0` fallback chain, each link pinned: platform count
+    /// when reported, 4 when the platform cannot say, floor of 1 always.
+    #[test]
+    fn worker_fallback_chain_links() {
+        assert_eq!(worker_fallback_chain(Some(16)), 16);
+        assert_eq!(worker_fallback_chain(Some(1)), 1);
+        assert_eq!(worker_fallback_chain(None), FALLBACK_WORKERS);
+        assert_eq!(worker_fallback_chain(None), 4);
+        assert_eq!(worker_fallback_chain(Some(0)), 1);
     }
 
     #[test]

@@ -358,6 +358,116 @@ fn stream_accepts_regression_targets() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// `stream --trace` writes a schema-valid JSON-lines trace: it opens with
+/// a meta record, carries one sampled α/β window per `--metrics-every`
+/// cadence plus the checkpoint event, parses with the in-tree parser, and
+/// `stats` both validates (`--check`) and renders it. Tracing must not
+/// change the stream itself: stdout is byte-identical to an untraced run.
+#[test]
+fn stream_trace_round_trips_through_stats() {
+    use sparse_rtrl::telemetry::{parse_trace, TraceEventKind, TraceRecord};
+
+    let dir = scratch("trace");
+    let events = dir.join("events.txt");
+    let trace = dir.join("trace.jsonl");
+    let ck = dir.join("ck.snap");
+    std::fs::write(&events, event_lines(0..16)).unwrap();
+
+    let plain = run(&["stream", "--input", events.to_str().unwrap(), "--seed", "3"]);
+    assert!(plain.status.success(), "{}", stderr_of(&plain));
+
+    let traced = run(&[
+        "stream",
+        "--input",
+        events.to_str().unwrap(),
+        "--seed",
+        "3",
+        "--trace",
+        trace.to_str().unwrap(),
+        "--metrics-every",
+        "4",
+        "--checkpoint",
+        ck.to_str().unwrap(),
+    ]);
+    assert!(traced.status.success(), "{}", stderr_of(&traced));
+    assert!(stderr_of(&traced).contains("trace written to"), "{}", stderr_of(&traced));
+    assert_eq!(stdout_of(&traced), stdout_of(&plain), "tracing changed the stream output");
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let records = parse_trace(&text).expect("trace must be schema-valid");
+    assert!(matches!(records[0], TraceRecord::Meta { .. }), "first record must be meta");
+    let metrics = records.iter().filter(|r| matches!(r, TraceRecord::Metrics { .. })).count();
+    assert_eq!(metrics, 4, "16 steps at cadence 4 must close 4 windows:\n{text}");
+    assert!(
+        records.iter().any(|r| matches!(
+            r,
+            TraceRecord::Event { event: TraceEventKind::Checkpoint, bytes: Some(_), .. }
+        )),
+        "checkpoint event missing:\n{text}"
+    );
+
+    let check = run(&["stats", "--trace", trace.to_str().unwrap(), "--check"]);
+    assert!(check.status.success(), "{}", stderr_of(&check));
+    let line = stdout_of(&check);
+    assert!(line.contains("trace OK:"), "{line}");
+    assert!(line.contains(&format!("{} record(s)", records.len())), "{line}");
+
+    let render = run(&["stats", "--trace", trace.to_str().unwrap()]);
+    assert!(render.status.success(), "{}", stderr_of(&render));
+    let shown = stdout_of(&render);
+    assert!(shown.contains("sparsity per window"), "{shown}");
+    assert!(shown.contains("windows: 4"), "{shown}");
+    assert!(shown.contains("checkpoint ×1"), "{shown}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--metrics-every` without `--trace` reports the sampled windows as
+/// stderr lines instead, leaving stdout untouched for the predictions.
+#[test]
+fn stream_metrics_every_prints_stderr_series_without_trace() {
+    let dir = scratch("metrics");
+    let events = dir.join("events.txt");
+    std::fs::write(&events, event_lines(0..12)).unwrap();
+    let out = run(&[
+        "stream",
+        "--input",
+        events.to_str().unwrap(),
+        "--seed",
+        "3",
+        "--metrics-every",
+        "4",
+    ]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    let err = stderr_of(&out);
+    let lines: Vec<&str> = err.lines().filter(|l| l.starts_with("metrics step=")).collect();
+    assert_eq!(lines.len(), 3, "12 steps at cadence 4:\n{err}");
+    assert!(lines[0].contains("alpha="), "{err}");
+    assert!(lines[2].contains("step=12"), "{err}");
+    assert_eq!(stdout_of(&out).lines().filter(|l| l.contains("pred=")).count(), 12);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `stats` needs exactly one input artifact, and validates/renders a
+/// serialized pool snapshot too.
+#[test]
+fn stats_validates_snapshots_and_rejects_missing_input() {
+    let bad = run(&["stats"]);
+    assert!(!bad.status.success());
+    assert!(stderr_of(&bad).contains("exactly one of --trace"), "{}", stderr_of(&bad));
+
+    let dir = scratch("stats");
+    let snap = dir.join("stats.json");
+    std::fs::write(&snap, sparse_rtrl::telemetry::TelemetrySnapshot::default().to_json())
+        .unwrap();
+    let check = run(&["stats", "--snapshot", snap.to_str().unwrap(), "--check"]);
+    assert!(check.status.success(), "{}", stderr_of(&check));
+    assert!(stdout_of(&check).contains("snapshot OK: 0 session(s)"), "{}", stdout_of(&check));
+    let render = run(&["stats", "--snapshot", snap.to_str().unwrap()]);
+    assert!(render.status.success(), "{}", stderr_of(&render));
+    assert!(stdout_of(&render).contains("0 live session(s)"), "{}", stdout_of(&render));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// `--resume` plus a config-shaping flag is contradictory and must fail.
 #[test]
 fn stream_resume_rejects_config_flags() {

@@ -1,0 +1,232 @@
+//! Acceptance tests for the telemetry subsystem, at the crate boundary:
+//!
+//! * **Disabled means off, enabled means invisible** — a session with
+//!   telemetry on produces bit-identical step outcomes *and* bit-identical
+//!   checkpoint bytes to a twin that never had it. Telemetry is pure
+//!   inspection: no ops charged, nothing serialized.
+//! * Sampling cadence and ring bounds hold on a real session, not just on
+//!   the unit-level sampler.
+//! * The pool's evict/admit lifecycle lands in its aggregated counters and
+//!   snapshot, the snapshot survives its JSON round trip, and evict/admit
+//!   events round-trip through the JSON-lines trace into the `stats`
+//!   renderer.
+
+use sparse_rtrl::config::AlgorithmKind;
+use sparse_rtrl::report::stats::{render_snapshot, render_trace};
+use sparse_rtrl::rtrl::Target;
+use sparse_rtrl::session::{
+    codec, OnlineSession, SessionBuilder, SessionPool, SnapshotFormat, UpdatePolicy,
+};
+use sparse_rtrl::telemetry::{
+    parse_trace, TelemetryConfig, TelemetrySnapshot, TraceEventKind, TraceRecord, TraceSink,
+};
+use sparse_rtrl::util::Pcg64;
+
+/// The paper's combined-sparsity engine at test scale (2 inputs, like the
+/// bundled tasks).
+fn reference_session(seed: u64) -> OnlineSession {
+    SessionBuilder::new()
+        .algorithm(AlgorithmKind::RtrlBoth)
+        .hidden(16)
+        .param_sparsity(0.8)
+        .policy(UpdatePolicy::EveryKSteps(2))
+        .seed(seed)
+        .build()
+}
+
+/// Drive a deterministic mixed stream (supervised every third step) and
+/// return every observable outcome field, losses as exact bit patterns.
+fn drive(session: &mut OnlineSession, steps: usize) -> Vec<(u64, Option<u32>, Option<usize>, usize, usize, bool)> {
+    let mut rng = Pcg64::new(99);
+    (0..steps)
+        .map(|i| {
+            let x = [rng.normal(), rng.normal()];
+            let t = if i % 3 == 2 { Target::Class(i % 2) } else { Target::None };
+            let o = session.step(&x, t);
+            (o.step, o.loss.map(f32::to_bits), o.prediction, o.active_units, o.deriv_units, o.updated)
+        })
+        .collect()
+}
+
+/// The headline acceptance claim: enabling telemetry changes *nothing*
+/// observable about the learner. Same outcomes step by step, and the
+/// checkpoints — which serialize weights, optimizer moments, engine state
+/// AND op counters — are byte-identical in both formats. A telemetry
+/// implementation that charged ops or perturbed state would fail here.
+#[test]
+fn enabled_telemetry_is_bit_identical_to_disabled() {
+    let mut plain = reference_session(7);
+    let mut instrumented = reference_session(7);
+    instrumented.enable_telemetry(TelemetryConfig {
+        sample_every: 4,
+        ..TelemetryConfig::default()
+    });
+
+    let baseline = drive(&mut plain, 32);
+    let observed = drive(&mut instrumented, 32);
+    assert_eq!(baseline, observed, "telemetry perturbed the stream");
+
+    // it genuinely ran: windows were sampled, latencies were recorded
+    let tel = instrumented.telemetry().expect("telemetry is on");
+    assert_eq!(tel.steps_seen(), 32);
+    assert!(tel.points().count() > 0, "no windows sampled");
+    assert_eq!(tel.latency_histogram().count(), 32);
+
+    // nothing of it reaches the checkpoint, in either wire format
+    for format in [SnapshotFormat::Binary, SnapshotFormat::Json] {
+        let a = codec::encode(&plain.checkpoint(), format);
+        let b = codec::encode(&instrumented.checkpoint(), format);
+        assert_eq!(a, b, "telemetry leaked into the {format} checkpoint");
+    }
+
+    // and turning it off mid-stream keeps the twins in lockstep
+    instrumented.disable_telemetry();
+    assert!(instrumented.telemetry().is_none());
+    assert_eq!(drive(&mut plain, 8), drive(&mut instrumented, 8));
+}
+
+/// Cadence and ring bounds on a live session: 32 steps at cadence 4
+/// produce 8 windows, the ring keeps only the configured last 4, and every
+/// sampled quantity is in range. Memory stays O(ring capacity) no matter
+/// how long the stream runs.
+#[test]
+fn sampling_cadence_and_ring_bounds_on_a_live_session() {
+    let mut session = reference_session(11);
+    session.enable_telemetry(TelemetryConfig {
+        sample_every: 4,
+        ring_capacity: 4,
+        ..TelemetryConfig::default()
+    });
+    drive(&mut session, 32);
+
+    let tel = session.telemetry_mut().expect("telemetry is on");
+    assert_eq!(tel.drain_new_points().len(), 8, "32 steps / cadence 4");
+    assert!(tel.drain_new_points().is_empty(), "drain must empty the buffer");
+
+    let tel = session.telemetry().expect("telemetry is on");
+    let points: Vec<_> = tel.points().collect();
+    assert_eq!(points.len(), 4, "ring must cap retained points");
+    assert_eq!(points.last().unwrap().step, 32);
+    assert_eq!(points.first().unwrap().window_start, 17, "oldest retained window");
+    for p in &points {
+        assert_eq!(p.window_len(), 4);
+        assert!((0.0..=1.0).contains(&p.alpha), "alpha {}", p.alpha);
+        assert!((0.0..=1.0).contains(&p.beta), "beta {}", p.beta);
+        assert!((p.beta_tilde - (1.0 - p.beta)).abs() < 1e-6);
+        let occ = p.influence_occupancy.expect("rtrl-both measures influence");
+        assert!((0.0..=1.0).contains(&occ), "occupancy {occ}");
+    }
+    // supervised steps occurred, so the loss series is live
+    assert!(tel.loss_ewma().is_some());
+    assert!(points.last().unwrap().loss_ewma.is_some());
+}
+
+/// The pool lifecycle reaches the aggregated telemetry: one eviction and
+/// one admission tick the counters and latency histograms, the snapshot
+/// serializes and parses back equal, and the `stats` renderer tabulates
+/// it.
+#[test]
+fn pool_lifecycle_lands_in_snapshot_and_survives_json() {
+    let dir = std::env::temp_dir()
+        .join(format!("sparse-rtrl-telemetry-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let spill = dir.join("spill.snap");
+
+    let mut a = reference_session(1);
+    a.enable_telemetry(TelemetryConfig { sample_every: 2, ..TelemetryConfig::default() });
+    drive(&mut a, 8);
+    let b = reference_session(2);
+
+    let mut pool = SessionPool::new(vec![a, b], 2);
+    pool.enable_telemetry();
+    pool.evict(1, &spill, SnapshotFormat::Binary).expect("evict");
+    assert_eq!(pool.len(), 1);
+    let readmitted = pool.admit(&spill).expect("admit");
+    assert_eq!(readmitted, 1);
+
+    let snap = pool.telemetry_snapshot();
+    assert_eq!(snap.live_sessions, 2);
+    assert_eq!(snap.evictions, 1);
+    assert_eq!(snap.admissions, 1);
+    assert!(snap.spill_bytes > 0, "spill bytes uncounted");
+    assert_eq!(snap.evict_encode_ns.count, 1);
+    assert_eq!(snap.resume_decode_ns.count, 1);
+    // per-session rows: the instrumented session carries sampled columns
+    assert_eq!(snap.sessions.len(), 2);
+    assert_eq!(snap.sessions[0].steps, 8);
+    assert!(snap.sessions[0].points > 0);
+    assert!(snap.sessions[0].alpha.is_some());
+    assert!(snap.sessions[1].alpha.is_none(), "uninstrumented session has no series");
+
+    let back = TelemetrySnapshot::from_json(&snap.to_json()).expect("snapshot round trip");
+    assert_eq!(back, snap);
+
+    let rendered = render_snapshot(&snap);
+    assert!(rendered.contains("2 live session(s)"), "{rendered}");
+    assert!(rendered.contains("admissions 1, evictions 1"), "{rendered}");
+    assert!(rendered.contains("evict encode ns: count 1"), "{rendered}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Pool evict/admit events round-trip through the JSON-lines trace: a
+/// trace carrying real sampled metric points plus the pool transition
+/// events parses back record-for-record, and the renderer shows both the
+/// α/β series and the event tallies.
+#[test]
+fn evict_admit_events_round_trip_through_the_trace() {
+    let mut session = reference_session(5);
+    session.enable_telemetry(TelemetryConfig {
+        sample_every: 4,
+        ..TelemetryConfig::default()
+    });
+    drive(&mut session, 8);
+
+    let mut records = vec![TraceRecord::Meta {
+        session: "s0".into(),
+        engine: "rtrl-both".into(),
+        hidden: 16,
+        layers: 1,
+        sample_every: 4,
+    }];
+    let points = session.telemetry_mut().expect("telemetry on").drain_new_points();
+    assert_eq!(points.len(), 2, "8 steps / cadence 4");
+    for point in points {
+        records.push(TraceRecord::Metrics { session: "s0".into(), point });
+    }
+    records.push(TraceRecord::Event {
+        session: "s0".into(),
+        step: 8,
+        event: TraceEventKind::Evict,
+        bytes: Some(4_096),
+        duration_ns: Some(52_000),
+    });
+    records.push(TraceRecord::Event {
+        session: "s0".into(),
+        step: 8,
+        event: TraceEventKind::Admit,
+        bytes: None,
+        duration_ns: Some(31_000),
+    });
+
+    let mut buf = Vec::new();
+    {
+        let mut sink = TraceSink::new(&mut buf);
+        for rec in &records {
+            sink.emit(rec).expect("emit");
+        }
+        assert_eq!(sink.records(), records.len() as u64);
+        sink.flush().expect("flush");
+    }
+    let text = String::from_utf8(buf).expect("utf8 trace");
+
+    let parsed = parse_trace(&text).expect("trace parses");
+    assert_eq!(parsed, records, "trace did not round-trip");
+
+    let rendered = render_trace(&parsed);
+    assert!(rendered.contains("alpha"), "{rendered}");
+    assert!(rendered.contains("windows: 2 (steps 1..=8)"), "{rendered}");
+    assert!(rendered.contains("evict ×1"), "{rendered}");
+    assert!(rendered.contains("admit ×1"), "{rendered}");
+}
