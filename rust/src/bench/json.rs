@@ -10,13 +10,14 @@
 //! adds the intra-step `threads` axis and throughput fields; v4 adds the
 //! `snapshot_codecs` block (checkpoint encode/decode cost per format); v5
 //! adds the `telemetry` block (observability overhead on the reference
-//! session).
+//! session); v6 adds the shared-weight `batch` axis (`batch` + `grad_fp`
+//! per case) and the `kernels` block (per-row-kernel ns/element).
 
 use super::{phase_name, BenchReport, CaseResult};
 use std::collections::BTreeMap;
 
 /// Schema identifier CI consumers can dispatch on.
-pub const SCHEMA: &str = "sparse-rtrl/bench/v5";
+pub const SCHEMA: &str = "sparse-rtrl/bench/v6";
 /// Monotone schema revision: bump on any breaking field change.
 /// * 1 — single-cell grid (engine × hidden × ω).
 /// * 2 — depth axis: `layers`, `macs_per_step_per_layer`,
@@ -33,7 +34,15 @@ pub const SCHEMA: &str = "sparse-rtrl/bench/v5";
 ///   sampled α/β means and the step-latency summary on the reference
 ///   session ([`crate::bench::telemetry`]), so the cost of observability
 ///   is tracked like any other subsystem.
-pub const SCHEMA_VERSION: u64 = 5;
+/// * 6 — the shared-weight batch axis: `batch` per case (lanes stepped
+///   together; `rtrl-param` runs every width through the batched engine)
+///   and `grad_fp` per case — lane 0's gradient fingerprint as a *decimal
+///   string*, because this parser (like many) stores numbers as f64 and
+///   would silently round a 64-bit integer. Also `kernels` at the top:
+///   per-row-kernel ns/element at several densities
+///   ([`crate::bench::kernels`]). CI diffs `grad_fp` and the op fields
+///   across `--batch 1` vs `--batch 8` and `--threads 1` vs `--threads 2`.
+pub const SCHEMA_VERSION: u64 = 6;
 
 /// Escape a string for a JSON string literal (without the quotes).
 pub fn escape(s: &str) -> String {
@@ -88,7 +97,7 @@ fn case_json(r: &CaseResult, indent: &str) -> String {
     format!(
         "{indent}{{\"engine\": \"{}\", \"hidden\": {}, \"layers\": {}, \"param_sparsity\": {}, \
          \"omega_tilde\": {}, \"p\": {}, \"timesteps\": {}, \"sequences\": {}, \
-         \"threads\": {}, \
+         \"threads\": {}, \"batch\": {}, \"grad_fp\": \"{}\", \
          \"wall_ns\": {}, \"ns_per_step\": {}, \"steps_per_sec\": {}, \"seqs_per_sec\": {}, \
          \"macs_per_step_total\": {}, \"macs_per_step\": {{{}}}, \
          \"macs_per_step_per_layer\": {}, \"words_per_step_per_layer\": {}, \
@@ -103,6 +112,8 @@ fn case_json(r: &CaseResult, indent: &str) -> String {
         r.timesteps,
         r.sequences,
         r.threads,
+        r.batch,
+        r.grad_fp,
         r.wall_ns,
         number(r.ns_per_step),
         number(r.steps_per_sec),
@@ -163,6 +174,20 @@ impl BenchReport {
             t.latency_ns.p50,
             t.latency_ns.p99,
         ));
+        s.push_str("  \"kernels\": [\n");
+        for (i, k) in self.kernels.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"kernel\": \"{}\", \"density\": {}, \"elements\": {}, \
+                 \"ns_total\": {}, \"ns_per_element\": {}}}{}\n",
+                escape(k.kernel),
+                number32(k.density),
+                k.elements,
+                k.ns_total,
+                number(k.ns_per_element),
+                if i + 1 < self.kernels.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
         s.push_str("  \"results\": [\n");
         for (i, r) in self.results.iter().enumerate() {
             s.push_str(&case_json(r, "    "));
@@ -392,6 +417,7 @@ pub fn validate(doc: &Json) -> Result<(), String> {
         ("threads", "v3"),
         ("snapshot_codecs", "v4"),
         ("telemetry", "v5"),
+        ("kernels", "v6"),
     ] {
         if doc.get(key).is_none() {
             return Err(format!("bench report section {key:?}: missing (added in {since})"));
@@ -428,6 +454,7 @@ mod tests {
             theta: 0.1,
             workers: 1,
             threads: 1,
+            batches: vec![1],
             quick: true,
         };
         run(&cfg, false)
@@ -495,6 +522,16 @@ mod tests {
         let lat = tel.get("latency_ns").unwrap();
         assert_eq!(lat.get("count").unwrap().as_u64(), Some(report.telemetry.latency_ns.count));
         assert_eq!(lat.get("p99").unwrap().as_u64(), Some(report.telemetry.latency_ns.p99));
+        // v6: the kernel micro-bench block survives the round trip
+        let kernels = doc.get("kernels").unwrap().as_arr().unwrap();
+        assert_eq!(kernels.len(), report.kernels.len());
+        assert!(!kernels.is_empty());
+        for (parsed, orig) in kernels.iter().zip(&report.kernels) {
+            assert_eq!(parsed.get("kernel").unwrap().as_str(), Some(orig.kernel));
+            assert_eq!(parsed.get("elements").unwrap().as_u64(), Some(orig.elements));
+            assert_eq!(parsed.get("ns_total").unwrap().as_u64(), Some(orig.ns_total));
+            assert!(parsed.get("ns_per_element").unwrap().as_f64().is_some());
+        }
         validate(&doc).expect("freshly written report must validate");
         let results = doc.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), report.results.len());
@@ -503,6 +540,18 @@ mod tests {
             assert_eq!(parsed.get("hidden").unwrap().as_u64(), Some(orig.hidden as u64));
             assert_eq!(parsed.get("layers").unwrap().as_u64(), Some(orig.layers as u64));
             assert_eq!(parsed.get("threads").unwrap().as_u64(), Some(orig.threads as u64));
+            // v6: batch width is a number; the 64-bit gradient fingerprint
+            // rides as a decimal string so the f64-backed parser keeps
+            // every bit
+            assert_eq!(parsed.get("batch").unwrap().as_u64(), Some(orig.batch as u64));
+            let fp: u64 = parsed
+                .get("grad_fp")
+                .unwrap()
+                .as_str()
+                .expect("grad_fp must be a string")
+                .parse()
+                .expect("grad_fp must be a decimal u64");
+            assert_eq!(fp, orig.grad_fp);
             let sps = parsed.get("seqs_per_sec").unwrap().as_f64().unwrap();
             assert!((sps - orig.seqs_per_sec).abs() < 1e-6 * (1.0 + sps.abs()));
             assert_eq!(
@@ -558,20 +607,43 @@ mod tests {
         assert!(err.contains("v5"), "error must say which revision added it: {err}");
     }
 
+    /// A v5 document — complete for its era but predating the batch axis
+    /// and the kernel micro-bench — is rejected with the name of the
+    /// section it lacks, same contract as the v4 case above.
+    #[test]
+    fn v5_report_rejected_by_missing_kernels_section() {
+        let v5 = r#"{
+            "schema": "sparse-rtrl/bench/v5",
+            "schema_version": 5,
+            "threads": 1,
+            "snapshot_codecs": [],
+            "telemetry": {},
+            "results": []
+        }"#;
+        let doc = parse(v5).unwrap();
+        assert_eq!(schema_version_of(&doc), 5);
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("\"kernels\""), "error must name the section: {err}");
+        assert!(err.contains("missing"), "error must say it is missing: {err}");
+        assert!(err.contains("v6"), "error must say which revision added it: {err}");
+    }
+
     /// Version and schema-string gates still fire once all sections exist.
     #[test]
     fn validate_gates_version_and_schema_string() {
         let stale_version = parse(
-            r#"{"schema": "sparse-rtrl/bench/v5", "schema_version": 4,
-                "threads": 1, "snapshot_codecs": [], "telemetry": {}, "results": []}"#,
+            r#"{"schema": "sparse-rtrl/bench/v6", "schema_version": 5,
+                "threads": 1, "snapshot_codecs": [], "telemetry": {}, "kernels": [],
+                "results": []}"#,
         )
         .unwrap();
         let err = validate(&stale_version).unwrap_err();
-        assert!(err.contains("schema_version 4"), "{err}");
+        assert!(err.contains("schema_version 5"), "{err}");
 
         let wrong_schema = parse(
-            r#"{"schema": "someone-else/bench/v5", "schema_version": 5,
-                "threads": 1, "snapshot_codecs": [], "telemetry": {}, "results": []}"#,
+            r#"{"schema": "someone-else/bench/v6", "schema_version": 6,
+                "threads": 1, "snapshot_codecs": [], "telemetry": {}, "kernels": [],
+                "results": []}"#,
         )
         .unwrap();
         let err = validate(&wrong_schema).unwrap_err();
@@ -614,10 +686,14 @@ mod tests {
             "\"ns_per_step_off\"",
             "\"ns_per_step_on\"",
             "\"latency_ns\"",
+            "\"kernels\"",
+            "\"ns_per_element\"",
             "\"results\"",
             "\"engine\"",
             "\"layers\"",
             "\"threads\"",
+            "\"batch\"",
+            "\"grad_fp\"",
             "\"ns_per_step\"",
             "\"steps_per_sec\"",
             "\"seqs_per_sec\"",

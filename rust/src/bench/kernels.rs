@@ -1,0 +1,277 @@
+//! Row-kernel micro-bench: each kernel from [`crate::rtrl::kernels`] timed
+//! in isolation, at several row densities, in ns per processed element.
+//!
+//! The engine-level bench cases measure kernels only in aggregate — a
+//! regression in one kernel's inner loop hides inside a whole step. This
+//! module pins each kernel alone on synthetic rows shaped like the real
+//! influence panels (contiguous `pc`-wide rows, `u32` column lists,
+//! lane-interleaved panels for the batched variants), so the per-kernel
+//! cost lands in the bench report (`kernels` block, schema v6) and CI
+//! tracks it like any other perf surface.
+//!
+//! Density here means the fraction of *structural* work per row: the
+//! fraction of source rows a gather consumes, of columns a scatter or
+//! sparse dot touches. Dense kernels (`axpy`, `scale_flush`, their panel
+//! forms, `dot_dense_acc`) do width-proportional work regardless, so they
+//! are measured at density 1.0 only.
+
+use crate::rtrl::kernels::{
+    axpy, axpy_panel, dot_dense_acc, dot_sparse_acc, fused_gather, gather_panel, scale_flush,
+    scale_flush_panel, scatter_axpy,
+};
+use crate::util::Pcg64;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Timed repetitions (per kernel × density) for the default bench run —
+/// enough to smooth scheduler noise without dominating the smoke bench.
+pub const DEFAULT_REPS: usize = 7;
+
+/// Row width `pc` of the synthetic panel (columns per influence row).
+const ROW_W: usize = 512;
+/// Gatherable source rows / scatterable columns behind each call.
+const SRC_ROWS: usize = 96;
+/// Lane width of the panel-kernel variants (the batched stepping shape).
+const PANEL_LANES: usize = 8;
+/// Kernel invocations per timed repetition.
+const CALLS: usize = 64;
+
+/// Structural densities the sparse kernels are measured at.
+const DENSITIES: [f32; 4] = [1.0, 0.5, 0.2, 0.05];
+
+/// One (kernel, density) micro-measurement.
+#[derive(Debug, Clone)]
+pub struct KernelBenchResult {
+    /// Kernel name as exported by [`crate::rtrl::kernels`].
+    pub kernel: &'static str,
+    /// Structural density of the synthetic rows (1.0 = dense).
+    pub density: f32,
+    /// Elements processed across all timed calls.
+    pub elements: u64,
+    /// Total timed wall-clock nanoseconds.
+    pub ns_total: u64,
+    pub ns_per_element: f64,
+}
+
+/// Deterministic synthetic state shared by every kernel measurement.
+struct Fixture {
+    /// `SRC_ROWS` contiguous `ROW_W`-wide source rows.
+    src: Vec<f32>,
+    /// Lane-interleaved panel sources, `ROW_W * PANEL_LANES` wide.
+    src_panel: Vec<f32>,
+    dst: Vec<f32>,
+    dst_panel: Vec<f32>,
+}
+
+impl Fixture {
+    fn new() -> Self {
+        let mut rng = Pcg64::new(0xbe2c_f00d);
+        let mut fill = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.normal()).collect() };
+        Fixture {
+            src: fill(SRC_ROWS * ROW_W),
+            src_panel: fill(SRC_ROWS * ROW_W * PANEL_LANES),
+            dst: fill(ROW_W),
+            dst_panel: fill(ROW_W * PANEL_LANES),
+        }
+    }
+
+    fn src_row(&self, r: usize) -> &[f32] {
+        &self.src[r * ROW_W..(r + 1) * ROW_W]
+    }
+}
+
+/// Evenly spread structural work: `⌈density · total⌉` indices out of
+/// `0..total`, ascending — the shape the slab builder produces.
+fn pick(total: usize, density: f32) -> Vec<u32> {
+    let count = ((total as f32 * density).ceil() as usize).clamp(1, total);
+    (0..count).map(|i| (i * total / count) as u32).collect()
+}
+
+fn time_calls(mut f: impl FnMut(), reps: usize) -> u64 {
+    f(); // warm the caches untimed
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for _ in 0..CALLS {
+            f();
+        }
+    }
+    t0.elapsed().as_nanos() as u64
+}
+
+fn result(kernel: &'static str, density: f32, per_call: u64, ns: u64, reps: usize) -> KernelBenchResult {
+    let elements = per_call * (reps * CALLS) as u64;
+    KernelBenchResult {
+        kernel,
+        density,
+        elements,
+        ns_total: ns,
+        ns_per_element: if elements > 0 { ns as f64 / elements as f64 } else { 0.0 },
+    }
+}
+
+/// Measure every row kernel at every applicable density. Deterministic
+/// inputs (fixed PCG seed); wall time obviously varies with the host.
+pub fn measure(reps: usize) -> Vec<KernelBenchResult> {
+    let reps = reps.max(1);
+    let mut fx = Fixture::new();
+    let mut out = Vec::new();
+
+    for &density in &DENSITIES {
+        // fused_gather: density controls how many source rows contribute
+        let rows = pick(SRC_ROWS, density);
+        let jlist: Vec<(u32, f32)> =
+            rows.iter().enumerate().map(|(i, &r)| (r, 0.3 + 0.01 * i as f32)).collect();
+        let mut dst = fx.dst.clone();
+        let src = &fx.src;
+        let ns = time_calls(
+            || {
+                fused_gather(&mut dst, &jlist, |r| &src[r * ROW_W..(r + 1) * ROW_W]);
+                black_box(dst[0]);
+            },
+            reps,
+        );
+        out.push(result("fused_gather", density, (jlist.len() * ROW_W) as u64, ns, reps));
+
+        // gather_panel: same structure, PANEL_LANES lanes wide
+        let vals: Vec<f32> = (0..rows.len() * PANEL_LANES).map(|i| 0.2 + 0.001 * i as f32).collect();
+        let mut dstp = fx.dst_panel.clone();
+        let srcp = &fx.src_panel;
+        let w = ROW_W * PANEL_LANES;
+        let ns = time_calls(
+            || {
+                gather_panel(&mut dstp, &rows, &vals, |r| &srcp[r * w..(r + 1) * w], PANEL_LANES);
+                black_box(dstp[0]);
+            },
+            reps,
+        );
+        out.push(result("gather_panel", density, (rows.len() * w) as u64, ns, reps));
+
+        // scatter_axpy / dot_sparse_acc: density controls touched columns
+        let cols = pick(ROW_W, density);
+        let svals: Vec<f32> = (0..cols.len()).map(|i| 0.1 + 0.002 * i as f32).collect();
+        let mut dst = fx.dst.clone();
+        let ns = time_calls(
+            || {
+                scatter_axpy(&mut dst, 0.99, &cols, &svals);
+                black_box(dst[0]);
+            },
+            reps,
+        );
+        out.push(result("scatter_axpy", density, cols.len() as u64, ns, reps));
+
+        let x = fx.src_row(0);
+        let ns = time_calls(
+            || {
+                black_box(dot_sparse_acc(0.0, &cols, &svals, x));
+            },
+            reps,
+        );
+        out.push(result("dot_sparse_acc", density, cols.len() as u64, ns, reps));
+    }
+
+    // dense kernels: width-proportional work, one density point each
+    let src_row0: Vec<f32> = fx.src_row(0).to_vec();
+    let mut dst = fx.dst.clone();
+    let ns = time_calls(
+        || {
+            axpy(&mut dst, 0.999, &src_row0);
+            black_box(dst[0]);
+        },
+        reps,
+    );
+    out.push(result("axpy", 1.0, ROW_W as u64, ns, reps));
+
+    let coef: Vec<f32> = (0..PANEL_LANES).map(|s| 0.99 + 0.001 * s as f32).collect();
+    let srcp_row: Vec<f32> = fx.src_panel[..ROW_W * PANEL_LANES].to_vec();
+    let mut dstp = fx.dst_panel.clone();
+    let ns = time_calls(
+        || {
+            axpy_panel(&mut dstp, &coef, &srcp_row, PANEL_LANES);
+            black_box(dstp[0]);
+        },
+        reps,
+    );
+    out.push(result("axpy_panel", 1.0, (ROW_W * PANEL_LANES) as u64, ns, reps));
+
+    // gains ~1 so repeated in-place rescaling neither over- nor underflows
+    let ns = time_calls(
+        || {
+            scale_flush(&mut fx.dst, 1.0001);
+            black_box(fx.dst[0]);
+        },
+        reps,
+    );
+    out.push(result("scale_flush", 1.0, ROW_W as u64, ns, reps));
+
+    let gains: Vec<f32> = (0..PANEL_LANES).map(|s| 1.0001 - 0.0002 * s as f32).collect();
+    let ns = time_calls(
+        || {
+            scale_flush_panel(&mut fx.dst_panel, &gains, PANEL_LANES);
+            black_box(fx.dst_panel[0]);
+        },
+        reps,
+    );
+    out.push(result("scale_flush_panel", 1.0, (ROW_W * PANEL_LANES) as u64, ns, reps));
+
+    let vals: Vec<f32> = (0..ROW_W).map(|i| 0.1 + 0.001 * i as f32).collect();
+    let x2: Vec<f32> = fx.src_row(1).to_vec();
+    let ns = time_calls(
+        || {
+            black_box(dot_dense_acc(0.0, &vals, &x2));
+        },
+        reps,
+    );
+    out.push(result("dot_dense_acc", 1.0, ROW_W as u64, ns, reps));
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_every_kernel_at_every_applicable_density() {
+        let rs = measure(1);
+        let sparse = ["fused_gather", "gather_panel", "scatter_axpy", "dot_sparse_acc"];
+        for k in sparse {
+            let ds: Vec<f32> =
+                rs.iter().filter(|r| r.kernel == k).map(|r| r.density).collect();
+            assert_eq!(ds, DENSITIES.to_vec(), "{k} must cover every density");
+        }
+        for k in ["axpy", "axpy_panel", "scale_flush", "scale_flush_panel", "dot_dense_acc"] {
+            assert_eq!(rs.iter().filter(|r| r.kernel == k).count(), 1, "{k} once, dense");
+        }
+        for r in &rs {
+            assert!(r.elements > 0, "{}: no elements", r.kernel);
+            assert!(r.ns_per_element.is_finite() && r.ns_per_element >= 0.0);
+            assert_eq!(
+                r.ns_per_element,
+                r.ns_total as f64 / r.elements as f64,
+                "{}: derived field must agree",
+                r.kernel
+            );
+        }
+    }
+
+    #[test]
+    fn density_scales_structural_work() {
+        let rs = measure(1);
+        let at = |k: &str, d: f32| {
+            rs.iter().find(|r| r.kernel == k && r.density == d).unwrap().elements
+        };
+        for k in ["fused_gather", "scatter_axpy", "dot_sparse_acc"] {
+            assert!(at(k, 0.05) < at(k, 1.0), "{k}: density must shrink the work");
+        }
+    }
+
+    #[test]
+    fn pick_spreads_and_clamps() {
+        assert_eq!(pick(10, 1.0).len(), 10);
+        assert_eq!(pick(10, 0.001).len(), 1, "at least one index survives");
+        let p = pick(100, 0.2);
+        assert_eq!(p.len(), 20);
+        assert!(p.windows(2).all(|w| w[0] < w[1]), "ascending like the slab builder");
+        assert!(p.iter().all(|&c| (c as usize) < 100));
+    }
+}

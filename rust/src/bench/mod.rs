@@ -17,6 +17,7 @@
 //! engine automatically adds it to the bench grid.
 
 pub mod json;
+pub mod kernels;
 pub mod runner;
 pub mod snapshot;
 pub mod telemetry;
@@ -25,6 +26,7 @@ use crate::config::AlgorithmKind;
 use crate::metrics::Phase;
 use crate::util::pool;
 
+pub use kernels::KernelBenchResult;
 pub use snapshot::SnapshotCodecResult;
 pub use telemetry::TelemetryBenchResult;
 
@@ -54,6 +56,14 @@ pub struct BenchConfig {
     /// (0 = available parallelism; 1 = serial, the default). Op counts are
     /// identical at any value — CI diffs 1 vs 2 to prove it.
     pub threads: usize,
+    /// Shared-weight batch widths (default `[1]`). `rtrl-param` cases run
+    /// every width through the batched machinery
+    /// ([`crate::rtrl::BatchedSparse`]) — width 1 included, so `--batch 1`
+    /// vs `--batch 8` is bit-identical by construction; other engines step
+    /// the extra lanes serially (same wall-clock accounting, no fusion).
+    /// Op counts and lane-0 gradients are batch-invariant — CI diffs
+    /// `--batch 1` vs `--batch 8` to prove it.
+    pub batches: Vec<usize>,
     /// Whether this is the reduced CI grid.
     pub quick: bool,
 }
@@ -72,6 +82,7 @@ impl BenchConfig {
             theta: 0.1,
             workers: 1,
             threads: 1,
+            batches: vec![1],
             quick: false,
         }
     }
@@ -91,27 +102,35 @@ impl BenchConfig {
         }
     }
 
-    /// Expand the grid into concrete cases — size-major, then depth, then
+    /// Expand the grid into concrete cases — batch-major, then size, depth,
     /// sparsity, engine varying fastest — in a deterministic order so
-    /// reports diff cleanly between runs (`seed` is the positional index).
+    /// reports diff cleanly between runs. `seed` is the positional index
+    /// *within the batch block*: case `i` at every batch width shares one
+    /// weight/stream seed, so gradients and op counts are comparable
+    /// across widths inside a single report and across separate
+    /// single-width invocations alike.
     pub fn expand(&self) -> Vec<BenchCase> {
         let mut cases = Vec::new();
-        for &hidden in &self.hidden_sizes {
-            for &layers in &self.layers {
-                for &omega in &self.param_sparsities {
-                    for &engine in &self.engines {
-                        cases.push(BenchCase {
-                            engine,
-                            hidden,
-                            layers: layers.max(1),
-                            param_sparsity: omega,
-                            timesteps: self.timesteps.max(1),
-                            sequences: self.sequences.max(1),
-                            warmup_sequences: self.warmup_sequences,
-                            theta: self.theta,
-                            threads: self.threads,
-                            seed: cases.len() as u64,
-                        });
+        for &batch in &self.batches {
+            let block = cases.len();
+            for &hidden in &self.hidden_sizes {
+                for &layers in &self.layers {
+                    for &omega in &self.param_sparsities {
+                        for &engine in &self.engines {
+                            cases.push(BenchCase {
+                                engine,
+                                hidden,
+                                layers: layers.max(1),
+                                param_sparsity: omega,
+                                timesteps: self.timesteps.max(1),
+                                sequences: self.sequences.max(1),
+                                warmup_sequences: self.warmup_sequences,
+                                theta: self.theta,
+                                threads: self.threads,
+                                batch: batch.max(1),
+                                seed: (cases.len() - block) as u64,
+                            });
+                        }
                     }
                 }
             }
@@ -134,7 +153,10 @@ pub struct BenchCase {
     pub theta: f32,
     /// Intra-step kernel threads handed to the engine under measurement.
     pub threads: usize,
-    /// Deterministic per-case RNG stream id.
+    /// Shared-weight lanes stepped together (1 = the classic single-lane
+    /// case; `rtrl-param` still routes through the batched machinery).
+    pub batch: usize,
+    /// Deterministic per-case RNG stream id (shared across batch widths).
     pub seed: u64,
 }
 
@@ -153,12 +175,20 @@ pub struct CaseResult {
     pub sequences: usize,
     /// Intra-step kernel threads the engine ran with.
     pub threads: usize,
-    /// Total timed wall-clock nanoseconds.
+    /// Shared-weight lanes stepped together (schema v6).
+    pub batch: usize,
+    /// FNV-1a fingerprint folded over lane-0's end-of-sequence gradient
+    /// bit patterns — the batch/thread invariance witness CI diffs
+    /// (schema v6; serialized as a decimal string to survive f64 parsers).
+    pub grad_fp: u64,
+    /// Total timed wall-clock nanoseconds (covers **all** lanes).
     pub wall_ns: u64,
+    /// Wall time per lane-step (`wall_ns / (steps · batch)`), so widths
+    /// compare directly: batching helps exactly when this drops.
     pub ns_per_step: f64,
-    /// Timed throughput, steps per second (`1e9 / ns_per_step`).
+    /// Timed throughput, lane-steps per second (`1e9 / ns_per_step`).
     pub steps_per_sec: f64,
-    /// Timed throughput, whole sequences per second.
+    /// Timed throughput, whole sequences per second across all lanes.
     pub seqs_per_sec: f64,
     /// Per-phase MACs per step, indexed like [`Phase::all`].
     pub macs_per_step: [u64; crate::metrics::ops::NUM_PHASES],
@@ -194,6 +224,9 @@ pub struct BenchReport {
     /// Telemetry overhead + sampled-series summary on the reference
     /// session — see [`telemetry::measure`]. Schema v5.
     pub telemetry: TelemetryBenchResult,
+    /// Per-kernel ns/element at several row densities — see
+    /// [`kernels::measure`]. Schema v6.
+    pub kernels: Vec<KernelBenchResult>,
 }
 
 impl BenchReport {
@@ -201,21 +234,35 @@ impl BenchReport {
     pub fn summary_table(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "{:<14}{:>6}{:>4}{:>7}{:>14}{:>14}{:>16}{:>12}\n",
-            "engine", "n", "L", "ω", "ns/step", "steps/s", "MACs/step", "mem words"
+            "{:<14}{:>6}{:>4}{:>7}{:>4}{:>14}{:>14}{:>16}{:>12}\n",
+            "engine", "n", "L", "ω", "B", "ns/step", "steps/s", "MACs/step", "mem words"
         ));
         for r in &self.results {
             s.push_str(&format!(
-                "{:<14}{:>6}{:>4}{:>7.2}{:>14.1}{:>14.0}{:>16}{:>12}\n",
+                "{:<14}{:>6}{:>4}{:>7.2}{:>4}{:>14.1}{:>14.0}{:>16}{:>12}\n",
                 r.engine,
                 r.hidden,
                 r.layers,
                 r.param_sparsity,
+                r.batch,
                 r.ns_per_step,
                 r.steps_per_sec,
                 r.macs_per_step_total,
                 r.state_memory_words,
             ));
+        }
+        if !self.kernels.is_empty() {
+            s.push_str("\nrow kernels (synthetic rows, ns per element):\n");
+            s.push_str(&format!(
+                "{:<20}{:>9}{:>14}{:>14}\n",
+                "kernel", "density", "elements", "ns/elem"
+            ));
+            for k in &self.kernels {
+                s.push_str(&format!(
+                    "{:<20}{:>9.2}{:>14}{:>14.3}\n",
+                    k.kernel, k.density, k.elements, k.ns_per_element
+                ));
+            }
         }
         if !self.snapshot_codecs.is_empty() {
             s.push_str("\nsnapshot codecs (reference checkpoint):\n");
@@ -273,6 +320,7 @@ pub fn run(cfg: &BenchConfig, progress: bool) -> BenchReport {
         results,
         snapshot_codecs: snapshot::measure(snapshot::DEFAULT_REPS),
         telemetry: telemetry::measure(telemetry::DEFAULT_REPS),
+        kernels: kernels::measure(kernels::DEFAULT_REPS),
     }
 }
 
@@ -297,6 +345,7 @@ mod tests {
             theta: 0.1,
             workers: 2,
             threads: 1,
+            batches: vec![1],
             quick: true,
         }
     }
@@ -317,11 +366,31 @@ mod tests {
         assert_eq!(seeds.len(), 8);
     }
 
+    /// The batch axis is outermost and seed-transparent: case `i` of the
+    /// width-8 block carries the same weight/stream seed as case `i` of the
+    /// width-1 block, so gradients compare across widths within one report.
+    #[test]
+    fn batch_axis_replicates_the_grid_with_shared_seeds() {
+        let mut cfg = tiny_cfg();
+        cfg.batches = vec![1, 8];
+        let cases = cfg.expand();
+        assert_eq!(cases.len(), 16);
+        let (b1, b8) = cases.split_at(8);
+        assert!(b1.iter().all(|c| c.batch == 1));
+        assert!(b8.iter().all(|c| c.batch == 8));
+        for (a, b) in b1.iter().zip(b8) {
+            assert_eq!(a.seed, b.seed, "twin cases must share a seed");
+            assert_eq!(a.engine, b.engine);
+            assert_eq!((a.hidden, a.layers), (b.hidden, b.layers));
+        }
+    }
+
     #[test]
     fn run_produces_complete_results() {
         let cfg = tiny_cfg();
         let report = run(&cfg, false);
         assert_eq!(report.results.len(), 8);
+        assert!(!report.kernels.is_empty(), "v6 reports carry the kernel micro-bench");
         for r in &report.results {
             assert!(r.wall_ns > 0, "{}: no time measured", r.engine);
             assert!(r.macs_per_step_total > 0, "{}: no MACs charged", r.engine);

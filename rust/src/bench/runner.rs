@@ -1,12 +1,26 @@
 //! Single-case measurement: build stack + engine, drive warm-up and timed
-//! sequences through the [`GradientEngine`] trait, read wall-clock and the
-//! per-phase / per-layer op counters.
+//! sequences, read wall-clock and the per-phase / per-layer op counters.
+//!
+//! Three execution paths share one accounting tail:
+//! * **batched** — `rtrl-param` cases run through the shared-weight
+//!   [`BatchedSparse`] engine at the case's lane width, *including width 1*,
+//!   so `--batch 1` vs `--batch 8` compares the same machinery and is
+//!   bit-identical by construction (gradient fingerprints and op counters
+//!   diff equal in CI);
+//! * **serial lanes** — other engines at `batch > 1` step each lane
+//!   sequentially through one engine (shared weights, no fusion): the wall
+//!   clock covers every lane, lane 0's ops/gradient are reported;
+//! * **solo** — the classic single-lane path, unchanged.
+//!
+//! Lane 0 always consumes exactly the stream a width-1 run would, so its
+//! gradient fingerprint is invariant across batch widths and thread counts.
 
 use super::{BenchCase, CaseResult};
+use crate::config::AlgorithmKind;
 use crate::metrics::ops::NUM_PHASES;
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
-use crate::rtrl::{GradientEngine, Target};
+use crate::rtrl::{BatchedSparse, GradientEngine, Target};
 use crate::sparse::MaskPattern;
 use crate::train::build_engine;
 use crate::util::Pcg64;
@@ -20,9 +34,40 @@ const BENCH_N_OUT: usize = 2;
 const BENCH_GAMMA: f32 = 0.3;
 const BENCH_EPS: f32 = 0.2;
 
+/// FNV-1a folded over the f32 bit patterns of a gradient vector — the
+/// cheap bit-exactness witness the CI invariance arms diff. Serialized as
+/// a decimal string (not a JSON number) so f64-based parsers keep all 64
+/// bits.
+pub fn grad_fingerprint(grads: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in grads {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Lane `lane`'s fixed input stream. Lane 0 is exactly the stream the
+/// pre-batch bench drew (`0x5eed_0000 ^ seed`); later lanes shift the
+/// stream id into the high word so lanes never collide for any seed.
+fn lane_inputs(case: &BenchCase, lane: usize) -> Vec<Vec<f32>> {
+    let mut xrng = Pcg64::new((0x5eed_0000 ^ case.seed) ^ ((lane as u64) << 32));
+    (0..case.timesteps)
+        .map(|_| (0..BENCH_N_IN).map(|_| xrng.normal()).collect())
+        .collect()
+}
+
+/// One class target at the end of each sequence so the gradient-combine
+/// phase is exercised like real training.
+fn bench_targets(timesteps: usize) -> Vec<Target<'static>> {
+    let mut targets = vec![Target::None; timesteps];
+    targets[timesteps - 1] = Target::Class(0);
+    targets
+}
+
 /// Measure one case. Deterministic for a given `BenchCase` (weights, masks
-/// and the input stream all derive from `case.seed`); wall-time obviously
-/// varies with the host.
+/// and every lane's input stream all derive from `case.seed`); wall-time
+/// obviously varies with the host.
 pub fn run_case(case: &BenchCase) -> CaseResult {
     let n = case.hidden;
     let mut rng = Pcg64::new(0xbe2c_0001 ^ (case.seed.wrapping_mul(0x9e37_79b9)));
@@ -37,41 +82,35 @@ pub fn run_case(case: &BenchCase) -> CaseResult {
         cells.push(RnnCell::egru(n, n_in, case.theta, BENCH_GAMMA, BENCH_EPS, mask, &mut rng));
     }
     let net = LayerStack::new(cells);
-    let mut readout = Readout::new(BENCH_N_OUT, net.top_n(), &mut rng);
-    let mut loss = Loss::new(LossKind::CrossEntropy, BENCH_N_OUT);
-    let mut engine = build_engine(case.engine, &net, BENCH_N_OUT);
-    engine.set_threads(case.threads);
-
-    // Fixed input stream; one class target at the end of each sequence so
-    // the gradient-combine phase is exercised like real training.
-    let mut xrng = Pcg64::new(0x5eed_0000 ^ case.seed);
-    let inputs: Vec<Vec<f32>> = (0..case.timesteps)
-        .map(|_| (0..BENCH_N_IN).map(|_| xrng.normal()).collect())
-        .collect();
-    let mut targets = vec![Target::None; case.timesteps];
-    targets[case.timesteps - 1] = Target::Class(0);
-
-    let mut ops = OpCounter::new();
-    for _ in 0..case.warmup_sequences {
-        engine.run_sequence(&net, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+    let readout = Readout::new(BENCH_N_OUT, net.top_n(), &mut rng);
+    let loss = Loss::new(LossKind::CrossEntropy, BENCH_N_OUT);
+    if case.engine == AlgorithmKind::RtrlParam {
+        run_case_batched(case, &net, &readout, &loss)
+    } else if case.batch > 1 {
+        run_case_serial_lanes(case, &net, readout, loss)
+    } else {
+        run_case_solo(case, &net, readout, loss)
     }
-    readout.zero_grads();
+}
 
-    let before = ops.clone();
-    let mut active_unit_steps = 0usize;
-    let mut deriv_unit_steps = 0usize;
-    let t0 = Instant::now();
-    for _ in 0..case.sequences {
-        let summary =
-            engine.run_sequence(&net, &mut readout, &mut loss, &inputs, &targets, &mut ops);
-        active_unit_steps += summary.active_unit_steps;
-        deriv_unit_steps += summary.deriv_unit_steps;
-        std::hint::black_box(engine.grads()[0]);
-    }
-    let wall_ns = t0.elapsed().as_nanos() as u64;
-    let delta = ops.since(&before);
-
+/// Shared accounting tail: per-step op attribution divides by **lane-0**
+/// steps (ops are per-lane by contract), wall-clock rates divide by
+/// lane-steps across the whole batch, so `ns_per_step` at width B > 1
+/// drops exactly when batching amortizes real work.
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    case: &BenchCase,
+    net: &LayerStack,
+    delta: &OpCounter,
+    wall_ns: u64,
+    active_unit_steps: usize,
+    deriv_unit_steps: usize,
+    grad_fp: u64,
+    state_memory_words: usize,
+) -> CaseResult {
+    let batch = case.batch.max(1);
     let steps = (case.sequences * case.timesteps) as u64;
+    let lane_steps = steps * batch as u64;
     let unit_steps = (steps as usize * net.total_units()) as f64;
     let mut macs_per_step = [0u64; NUM_PHASES];
     for ph in Phase::all() {
@@ -81,10 +120,10 @@ pub fn run_case(case: &BenchCase) -> CaseResult {
         (0..case.layers).map(|l| delta.layer_total_macs(l) / steps).collect();
     let words_per_step_per_layer: Vec<u64> =
         (0..case.layers).map(|l| delta.layer_total_words(l) / steps).collect();
-    let ns_per_step = wall_ns as f64 / steps as f64;
+    let ns_per_step = wall_ns as f64 / lane_steps as f64;
     CaseResult {
         engine: case.engine.name(),
-        hidden: n,
+        hidden: case.hidden,
         layers: case.layers,
         param_sparsity: case.param_sparsity,
         omega_tilde: net.omega_tilde(),
@@ -92,19 +131,203 @@ pub fn run_case(case: &BenchCase) -> CaseResult {
         timesteps: case.timesteps,
         sequences: case.sequences,
         threads: case.threads,
+        batch,
+        grad_fp,
         wall_ns,
         ns_per_step,
         steps_per_sec: if ns_per_step > 0.0 { 1e9 / ns_per_step } else { 0.0 },
-        seqs_per_sec: if wall_ns > 0 { case.sequences as f64 * 1e9 / wall_ns as f64 } else { 0.0 },
+        seqs_per_sec: if wall_ns > 0 {
+            (case.sequences * batch) as f64 * 1e9 / wall_ns as f64
+        } else {
+            0.0
+        },
         macs_per_step,
         macs_per_step_total: delta.total_macs() / steps,
         words_per_step_total: delta.total_words() / steps,
         macs_per_step_per_layer,
         words_per_step_per_layer,
-        state_memory_words: engine.state_memory_words(),
+        state_memory_words,
         alpha_tilde: active_unit_steps as f64 / unit_steps,
         beta_tilde: deriv_unit_steps as f64 / unit_steps,
     }
+}
+
+/// The classic single-lane path, through the [`GradientEngine`] trait.
+fn run_case_solo(
+    case: &BenchCase,
+    net: &LayerStack,
+    mut readout: Readout,
+    mut loss: Loss,
+) -> CaseResult {
+    let mut engine = build_engine(case.engine, net, BENCH_N_OUT);
+    engine.set_threads(case.threads);
+    let inputs = lane_inputs(case, 0);
+    let targets = bench_targets(case.timesteps);
+
+    let mut ops = OpCounter::new();
+    for _ in 0..case.warmup_sequences {
+        engine.run_sequence(net, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+    }
+    readout.zero_grads();
+
+    let before = ops.clone();
+    let mut active_unit_steps = 0usize;
+    let mut deriv_unit_steps = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..case.sequences {
+        let summary =
+            engine.run_sequence(net, &mut readout, &mut loss, &inputs, &targets, &mut ops);
+        active_unit_steps += summary.active_unit_steps;
+        deriv_unit_steps += summary.deriv_unit_steps;
+        std::hint::black_box(engine.grads()[0]);
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let grad_fp = grad_fingerprint(engine.grads());
+    finish(
+        case,
+        net,
+        &ops.since(&before),
+        wall_ns,
+        active_unit_steps,
+        deriv_unit_steps,
+        grad_fp,
+        engine.state_memory_words(),
+    )
+}
+
+/// One sequence through the batched engine; returns lane 0's (active,
+/// deriv) unit-step totals.
+fn drive_batched_sequence(
+    batched: &mut BatchedSparse,
+    inputs: &[Vec<Vec<f32>>],
+    targets: &[Target<'_>],
+    readouts: &mut [Readout],
+    losses: &mut [Loss],
+    ops: &mut [OpCounter],
+) -> (usize, usize) {
+    let b = batched.batch();
+    batched.begin_sequence();
+    let (mut active, mut deriv) = (0usize, 0usize);
+    for (t, tg) in targets.iter().enumerate() {
+        let xs: Vec<&[f32]> = (0..b).map(|s| inputs[s][t].as_slice()).collect();
+        let tgs: Vec<Target<'_>> = vec![*tg; b];
+        let mut rr: Vec<&mut Readout> = readouts.iter_mut().collect();
+        let mut ll: Vec<&mut Loss> = losses.iter_mut().collect();
+        let mut oo: Vec<&mut OpCounter> = ops.iter_mut().collect();
+        let results = batched.step(&xs, &tgs, &mut rr, &mut ll, &mut oo);
+        active += results[0].active_units;
+        deriv += results[0].deriv_units;
+    }
+    batched.end_sequence();
+    (active, deriv)
+}
+
+/// `rtrl-param` at any width: the shared-weight batched engine, lanes
+/// differing only in their input streams (every lane's readout starts as a
+/// clone of the shared one — the serving-fleet shape). Reported ops and
+/// gradient are lane 0's; `state_memory_words` stays the *per-session*
+/// footprint so the column remains comparable across engines and widths.
+fn run_case_batched(
+    case: &BenchCase,
+    net: &LayerStack,
+    readout: &Readout,
+    loss: &Loss,
+) -> CaseResult {
+    let b = case.batch.max(1);
+    let mut batched = BatchedSparse::new(net, BENCH_N_OUT, b);
+    batched.set_threads(case.threads);
+    let mut readouts: Vec<Readout> = (0..b).map(|_| readout.clone()).collect();
+    let mut losses: Vec<Loss> = (0..b).map(|_| loss.clone()).collect();
+    let mut ops: Vec<OpCounter> = (0..b).map(|_| OpCounter::new()).collect();
+    let inputs: Vec<Vec<Vec<f32>>> = (0..b).map(|s| lane_inputs(case, s)).collect();
+    let targets = bench_targets(case.timesteps);
+
+    for _ in 0..case.warmup_sequences {
+        drive_batched_sequence(&mut batched, &inputs, &targets, &mut readouts, &mut losses, &mut ops);
+    }
+    for r in &mut readouts {
+        r.zero_grads();
+    }
+
+    let before = ops[0].clone();
+    let mut active_unit_steps = 0usize;
+    let mut deriv_unit_steps = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..case.sequences {
+        let (a, d) =
+            drive_batched_sequence(&mut batched, &inputs, &targets, &mut readouts, &mut losses, &mut ops);
+        active_unit_steps += a;
+        deriv_unit_steps += d;
+        std::hint::black_box(batched.grads(0)[0]);
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let grad_fp = grad_fingerprint(batched.grads(0));
+    let state_memory_words = build_engine(case.engine, net, BENCH_N_OUT).state_memory_words();
+    finish(
+        case,
+        net,
+        &ops[0].since(&before),
+        wall_ns,
+        active_unit_steps,
+        deriv_unit_steps,
+        grad_fp,
+        state_memory_words,
+    )
+}
+
+/// Non-batchable engines at `batch > 1`: each lane steps sequentially
+/// through one engine (no fusion to measure — this axis exists so every
+/// engine still produces a width-B row for apples-to-apples throughput).
+/// Lanes run in descending order so lane 0 finishes last and the engine's
+/// gradient buffer holds lane 0's result — lane order is immaterial to the
+/// numbers because `run_sequence` resets influence state per sequence.
+fn run_case_serial_lanes(
+    case: &BenchCase,
+    net: &LayerStack,
+    mut readout: Readout,
+    mut loss: Loss,
+) -> CaseResult {
+    let b = case.batch;
+    let mut engine = build_engine(case.engine, net, BENCH_N_OUT);
+    engine.set_threads(case.threads);
+    let inputs: Vec<Vec<Vec<f32>>> = (0..b).map(|s| lane_inputs(case, s)).collect();
+    let targets = bench_targets(case.timesteps);
+
+    let mut ops: Vec<OpCounter> = (0..b).map(|_| OpCounter::new()).collect();
+    for _ in 0..case.warmup_sequences {
+        for s in (0..b).rev() {
+            engine.run_sequence(net, &mut readout, &mut loss, &inputs[s], &targets, &mut ops[s]);
+        }
+    }
+    readout.zero_grads();
+
+    let before = ops[0].clone();
+    let mut active_unit_steps = 0usize;
+    let mut deriv_unit_steps = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..case.sequences {
+        for s in (0..b).rev() {
+            let summary =
+                engine.run_sequence(net, &mut readout, &mut loss, &inputs[s], &targets, &mut ops[s]);
+            if s == 0 {
+                active_unit_steps += summary.active_unit_steps;
+                deriv_unit_steps += summary.deriv_unit_steps;
+            }
+        }
+        std::hint::black_box(engine.grads()[0]);
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let grad_fp = grad_fingerprint(engine.grads());
+    finish(
+        case,
+        net,
+        &ops[0].since(&before),
+        wall_ns,
+        active_unit_steps,
+        deriv_unit_steps,
+        grad_fp,
+        engine.state_memory_words(),
+    )
 }
 
 #[cfg(test)]
@@ -123,6 +346,7 @@ mod tests {
             warmup_sequences: 1,
             theta: 0.1,
             threads: 1,
+            batch: 1,
             seed: 7,
         }
     }
@@ -150,6 +374,55 @@ mod tests {
             assert_eq!(serial.alpha_tilde.to_bits(), threaded.alpha_tilde.to_bits());
             assert_eq!(serial.beta_tilde.to_bits(), threaded.beta_tilde.to_bits());
         }
+    }
+
+    /// The tentpole acceptance invariant, locally: an `rtrl-param` case at
+    /// batch widths 1 and 8 produces bit-identical lane-0 gradients (equal
+    /// FNV fingerprints) and identical per-phase/per-layer op counts —
+    /// structure built once per group is charged as if built per lane.
+    #[test]
+    fn batched_widths_share_gradient_fingerprint_and_ops() {
+        let b1 = run_case(&case(AlgorithmKind::RtrlParam, 0.5));
+        let mut c8 = case(AlgorithmKind::RtrlParam, 0.5);
+        c8.batch = 8;
+        let b8 = run_case(&c8);
+        assert_eq!(b1.grad_fp, b8.grad_fp, "lane-0 gradient must be batch-invariant");
+        assert_eq!(b1.macs_per_step, b8.macs_per_step);
+        assert_eq!(b1.macs_per_step_per_layer, b8.macs_per_step_per_layer);
+        assert_eq!(b1.words_per_step_total, b8.words_per_step_total);
+        assert_eq!(b1.state_memory_words, b8.state_memory_words);
+        assert_eq!(b1.alpha_tilde.to_bits(), b8.alpha_tilde.to_bits());
+        assert_eq!(b1.beta_tilde.to_bits(), b8.beta_tilde.to_bits());
+        assert_eq!((b1.batch, b8.batch), (1, 8));
+    }
+
+    /// Same invariant along the thread axis, under batching.
+    #[test]
+    fn batched_thread_counts_share_gradient_fingerprint() {
+        let mut c = case(AlgorithmKind::RtrlParam, 0.5);
+        c.batch = 4;
+        let serial = run_case(&c);
+        c.threads = 2;
+        let threaded = run_case(&c);
+        assert_eq!(serial.grad_fp, threaded.grad_fp);
+        assert_eq!(serial.macs_per_step, threaded.macs_per_step);
+        assert_eq!(serial.alpha_tilde.to_bits(), threaded.alpha_tilde.to_bits());
+    }
+
+    /// The serial-lane fallback reports lane 0 — so a non-batchable engine
+    /// at width 3 fingerprints identically to its width-1 run, and its op
+    /// counters stay per-lane.
+    #[test]
+    fn serial_lane_fallback_reports_lane_zero() {
+        let b1 = run_case(&case(AlgorithmKind::RtrlBoth, 0.5));
+        let mut c3 = case(AlgorithmKind::RtrlBoth, 0.5);
+        c3.batch = 3;
+        let b3 = run_case(&c3);
+        assert_eq!(b1.grad_fp, b3.grad_fp, "lane 0 consumes the width-1 stream");
+        assert_eq!(b1.macs_per_step, b3.macs_per_step);
+        assert_eq!(b1.alpha_tilde.to_bits(), b3.alpha_tilde.to_bits());
+        assert_eq!(b3.batch, 3);
+        assert!(b3.wall_ns > 0);
     }
 
     #[test]

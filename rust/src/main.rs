@@ -40,7 +40,8 @@ USAGE:
   sparse-rtrl bench  [--quick] [--engines a,b,..] [--hidden 16,32,..]
                      [--layers 1,2,..] [--sparsity 0.0,0.8,..]
                      [--timesteps 17] [--sequences 30] [--warmup 3]
-                     [--workers 1] [--threads 1] [--out BENCH_rtrl.json]
+                     [--workers 1] [--threads 1] [--batch 1,8,..]
+                     [--out BENCH_rtrl.json]
   sparse-rtrl report <table1|fig1|fig2> [--n 16] [--layers 1] [--omega 0.8]
   sparse-rtrl stats  (--trace trace.jsonl | --snapshot stats.json) [--check]
   sparse-rtrl artifacts [--dir artifacts]
@@ -48,6 +49,11 @@ USAGE:
 
 --threads N sets the worker count for the intra-step RTRL kernels
 (0 = available parallelism); results are bit-identical at any value.
+
+bench --batch B1,B2,.. adds shared-weight batch widths to the grid:
+rtrl-param cases step B lanes through one fused engine (width 1 included,
+so widths compare bit-identically); other engines step the extra lanes
+serially. Lane-0 gradients and op counts are batch-invariant.
 
 stream formats: --resume autodetects the snapshot format from the file
 bytes (binary or json). --snapshot-format auto writes binary unless the
@@ -504,6 +510,12 @@ fn cmd_bench(mut args: Args) -> Result<()> {
     cfg.warmup_sequences = args.get_parse("warmup", cfg.warmup_sequences).map_err(err)?;
     cfg.workers = args.get_parse("workers", cfg.workers).map_err(err)?;
     cfg.threads = args.get_parse("threads", cfg.threads).map_err(err)?;
+    if let Some(s) = args.get("batch") {
+        cfg.batches = parse_csv(&s, "batch")?;
+        if cfg.batches.iter().any(|&b| b == 0) {
+            bail!("--batch widths must be ≥ 1");
+        }
+    }
     let out: PathBuf = args.get("out").unwrap_or_else(|| "BENCH_rtrl.json".into()).into();
     args.finish().map_err(err)?;
     if cfg.engines.is_empty()
@@ -519,13 +531,18 @@ fn cmd_bench(mut args: Args) -> Result<()> {
     if cfg.timesteps == 0 || cfg.sequences == 0 {
         bail!("--timesteps and --sequences must be positive");
     }
+    if cfg.batches.is_empty() {
+        bail!("--batch needs at least one width");
+    }
 
     eprintln!(
-        "bench: {} engines × {} sizes × {} depths × {} sparsities, T={}, {} sequences/case{}",
+        "bench: {} engines × {} sizes × {} depths × {} sparsities × {} batch widths, \
+         T={}, {} sequences/case{}",
         cfg.engines.len(),
         cfg.hidden_sizes.len(),
         cfg.layers.len(),
         cfg.param_sparsities.len(),
+        cfg.batches.len(),
         cfg.timesteps,
         cfg.sequences,
         if cfg.quick { " (quick)" } else { "" },

@@ -606,6 +606,73 @@ impl RnnCell {
         }
     }
 
+    /// Strided variant of [`Self::fill_dv_da_cols`] for lane-interleaved
+    /// batch panels: writes `out[i*stride] = ∂v_k/∂a_{cols[i]}`, leaving
+    /// the other lanes' slots untouched. Identical arithmetic to the
+    /// unstrided filler (bit-exact per entry) — only the destination
+    /// addressing differs. `out` must span at least
+    /// `(cols.len()-1)*stride + 1` elements.
+    pub fn fill_dv_da_cols_strided(
+        &self,
+        s: &CellScratch,
+        k: usize,
+        cols: &[u32],
+        out: &mut [f32],
+        stride: usize,
+    ) {
+        let n = self.n;
+        match self.dynamics {
+            Dynamics::Linear => {
+                let v = self.layout.block(&self.w, linear_blocks::V);
+                let row = &v[k * n..(k + 1) * n];
+                for (o, &c) in out.iter_mut().step_by(stride).zip(cols) {
+                    *o = row[c as usize];
+                }
+            }
+            Dynamics::Gated => {
+                let vu = self.layout.block(&self.w, gated_blocks::VU);
+                let vz = self.layout.block(&self.w, gated_blocks::VZ);
+                let (ru, rz) = (&vu[k * n..(k + 1) * n], &vz[k * n..(k + 1) * n]);
+                let (gu, gz) = (s.gu[k], s.gz[k]);
+                for (o, &c) in out.iter_mut().step_by(stride).zip(cols) {
+                    *o = gu * ru[c as usize] + gz * rz[c as usize];
+                }
+            }
+        }
+    }
+
+    /// Strided variant of [`Self::fill_dv_dx_cols`] for lane-interleaved
+    /// batch panels: writes `out[i*stride] = ∂v_k/∂x_{cols[i]}`. Bit-exact
+    /// with the unstrided filler per entry.
+    pub fn fill_dv_dx_cols_strided(
+        &self,
+        s: &CellScratch,
+        k: usize,
+        cols: &[u32],
+        out: &mut [f32],
+        stride: usize,
+    ) {
+        let n_in = self.n_in;
+        match self.dynamics {
+            Dynamics::Linear => {
+                let w = self.layout.block(&self.w, linear_blocks::W);
+                let row = &w[k * n_in..(k + 1) * n_in];
+                for (o, &c) in out.iter_mut().step_by(stride).zip(cols) {
+                    *o = row[c as usize];
+                }
+            }
+            Dynamics::Gated => {
+                let wu = self.layout.block(&self.w, gated_blocks::WU);
+                let wz = self.layout.block(&self.w, gated_blocks::WZ);
+                let (ru, rz) = (&wu[k * n_in..(k + 1) * n_in], &wz[k * n_in..(k + 1) * n_in]);
+                let (gu, gz) = (s.gu[k], s.gz[k]);
+                for (o, &c) in out.iter_mut().step_by(stride).zip(cols) {
+                    *o = gu * ru[c as usize] + gz * rz[c as usize];
+                }
+            }
+        }
+    }
+
     /// Structural fan-in parameter indices of unit `k`: every flat parameter
     /// that can ever appear in row `k` of `M̄` (input weights, kept recurrent
     /// weights, biases), sorted ascending. This is SnAp-1's influence pattern

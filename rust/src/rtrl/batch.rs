@@ -1,0 +1,656 @@
+//! [`BatchedSparse`] — shared-weight batched stepping for the exact
+//! parameter-sparse engine: N sessions, one slab structure, fused panel
+//! kernels.
+//!
+//! In [`SparsityMode::Parameter`](super::SparsityMode) the step-Jacobian
+//! slab's *structure* is value-independent: every row is built, own
+//! columns are the mask's `kept_cols` (empty only on the first step after
+//! a reset, when the previous influence panel is logically zero), and the
+//! cross block is structurally dense over the lower layer's rows. N
+//! sessions that share one weight+mask set therefore share the structure
+//! exactly — only the Jacobian *values* and the influence *panels* differ
+//! per session. This engine exploits that:
+//!
+//! * one [`BatchedSlab`](super::kernels::BatchedSlab) per `(layer, step)`
+//!   — structure laid out once, values filled once per lane via the cell's
+//!   strided column fillers;
+//! * lane-interleaved influence panels (`row[c*B + s]` is compact column
+//!   `c` of lane `s`), advanced by the fused panel kernels
+//!   ([`gather_panel`](super::kernels::gather_panel) and friends) — one
+//!   pass over a row's shared column list moves all N sessions;
+//! * per-lane forward passes, readout/loss steps and gradient
+//!   accumulators, identical to a solo [`SparseRtrl`] run.
+//!
+//! # Bit-exactness and accounting contract
+//!
+//! Lanes never mix arithmetically: lane `s` of a width-`B` step performs
+//! exactly the arithmetic of a width-1 step of that session through the
+//! same panel kernels, in the same order — so gradients, losses and
+//! predictions are **bit-identical across batch widths and thread counts**
+//! (pinned by `rust/tests/batched_step.rs`). One deliberate difference
+//! from the solo [`SparseRtrl`] path: the solo engine drops exact-zero
+//! Jacobian coefficients while staging its gather lists, which regroups
+//! [`fused_gather`](super::kernels::fused_gather)'s pair consumption; the
+//! batched path keeps the full *structural* list at every width (a
+//! per-lane filter would diverge the shared structure). The two paths
+//! agree to FP-reassociation tolerance, and exactly when no structural
+//! coefficient evaluates to 0.0 — the generic case.
+//!
+//! Op accounting charges every lane the counts its session would pay solo:
+//! value-dependent phases (Forward, Immediate, GradCombine) are charged
+//! per lane from that lane's own work; structure-dependent phases
+//! (Jacobian, InfluenceUpdate) are charged **identically to each lane**
+//! from the shared structural counts, whether the structure was built once
+//! or N times. Amortization shows up in wall time only, never in charged
+//! ops.
+//!
+//! The per-lane snapshot surface ([`BatchedSparse::save_lane`] /
+//! [`BatchedSparse::load_lane`]) speaks the *same* [`EngineState`] format
+//! as a solo `rtrl-param` [`SparseRtrl`], so [`crate::session::SessionPool`]
+//! can move sessions between solo and batched stepping freely.
+
+use super::column_map::StackColumnMap;
+use super::kernels::{self, BatchedSlab};
+use super::sparse::{PAR_MIN_PANEL_ELEMS, SPARSE_STATE_VERSION};
+use super::{supervised_step, EngineState, StateError, StepResult, Target};
+use crate::metrics::{OpCounter, Phase};
+use crate::nn::{LayerStack, Loss, Readout, StackScratch};
+
+/// One layer's lane-interleaved influence panel pair: `n × pc × B` floats,
+/// element `(row k, compact col c, lane s)` at `k*pc*B + c*B + s`.
+#[derive(Debug, Clone)]
+struct Panel {
+    n: usize,
+    pc: usize,
+    cur: Vec<f32>,
+    next: Vec<f32>,
+}
+
+/// Exact parameter-sparse RTRL over a batch of sessions sharing one
+/// weight+mask set (see module docs). Owns a clone of the shared stack, so
+/// stepping needs no external network borrow — the session pool hands it
+/// per-lane readouts, losses and op counters only.
+pub struct BatchedSparse {
+    net: LayerStack,
+    batch: usize,
+    colmap: StackColumnMap,
+    panels: Vec<Panel>,
+    slab: BatchedSlab,
+    /// Per-lane step scratch / previous state / gradient accumulators.
+    scratch: Vec<StackScratch>,
+    a_prev: Vec<Vec<f32>>,
+    grad_compact: Vec<Vec<f32>>,
+    grads: Vec<Vec<f32>>,
+    /// Readout scratch, reused serially across lanes.
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    c_bar: Vec<f32>,
+    /// Per-row per-lane `φ'` staging for `scale_flush_panel` (`n·B`).
+    dphi: Vec<f32>,
+    threads: usize,
+    /// Whether the *current* panels carry live rows (step ≥ 2 of a
+    /// sequence). Structural in parameter mode, hence one flag for the
+    /// whole group — `load_lane` rejects states that disagree.
+    cur_active: bool,
+    measure_influence: bool,
+}
+
+impl BatchedSparse {
+    /// Build for `batch` lanes over a shared stack (cloned; parameter-mode
+    /// column compaction). `readout_n_out` sizes the readout scratch.
+    pub fn new(net: &LayerStack, readout_n_out: usize, batch: usize) -> Self {
+        assert!(batch >= 1, "batch width must be at least 1");
+        let colmap = StackColumnMap::from_stack(net, true);
+        let panels: Vec<Panel> = (0..net.layers())
+            .map(|l| {
+                let (n, pc) = (net.layer(l).n(), colmap.cum_cols(l));
+                Panel { n, pc, cur: vec![0.0; n * pc * batch], next: vec![0.0; n * pc * batch] }
+            })
+            .collect();
+        let pc_total = colmap.total_cols();
+        let top_n = net.top_n();
+        let total_units = net.total_units();
+        let p = net.p();
+        let scratch = (0..batch).map(|_| net.scratch()).collect();
+        BatchedSparse {
+            net: net.clone(),
+            batch,
+            colmap,
+            panels,
+            slab: BatchedSlab::new(),
+            scratch,
+            a_prev: vec![vec![0.0; total_units]; batch],
+            grad_compact: vec![vec![0.0; pc_total]; batch],
+            grads: vec![vec![0.0; p]; batch],
+            logits: vec![0.0; readout_n_out],
+            dlogits: vec![0.0; readout_n_out],
+            c_bar: vec![0.0; top_n],
+            dphi: Vec::new(),
+            threads: 1,
+            cur_active: false,
+            measure_influence: false,
+        }
+    }
+
+    /// Batch width (number of lanes).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The cloned shared stack this engine steps.
+    pub fn net(&self) -> &LayerStack {
+        &self.net
+    }
+
+    /// Worker threads for the panel-row update (`0` = hardware count).
+    /// Bit-identical results at any value.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = crate::util::pool::resolve_workers(threads);
+    }
+
+    pub fn set_measure_influence(&mut self, on: bool) {
+        self.measure_influence = on;
+    }
+
+    /// Reset every lane to the start of a sequence.
+    pub fn begin_sequence(&mut self) {
+        for p in &mut self.panels {
+            p.cur.iter_mut().for_each(|x| *x = 0.0);
+            p.next.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for s in 0..self.batch {
+            self.a_prev[s].iter_mut().for_each(|x| *x = 0.0);
+            self.grad_compact[s].iter_mut().for_each(|x| *x = 0.0);
+            self.grads[s].iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.cur_active = false;
+    }
+
+    /// Advance every lane one timestep. `xs[s]`/`targets[s]` are lane
+    /// `s`'s input and supervision; `readouts[s]`/`losses[s]`/`ops[s]` its
+    /// session-owned readout, loss and op counter. Returns one
+    /// [`StepResult`] per lane.
+    pub fn step(
+        &mut self,
+        xs: &[&[f32]],
+        targets: &[Target<'_>],
+        readouts: &mut [&mut Readout],
+        losses: &mut [&mut Loss],
+        ops: &mut [&mut OpCounter],
+    ) -> Vec<StepResult> {
+        let b = self.batch;
+        assert_eq!(xs.len(), b, "one input per lane");
+        assert_eq!(targets.len(), b, "one target per lane");
+        assert_eq!(readouts.len(), b, "one readout per lane");
+        assert_eq!(losses.len(), b, "one loss per lane");
+        assert_eq!(ops.len(), b, "one op counter per lane");
+
+        // ---- forward, per lane (charges per-layer Forward ops) ----------
+        for s in 0..b {
+            self.net.forward(&self.a_prev[s], xs[s], &mut self.scratch[s], ops[s]);
+        }
+
+        // ---- influence update: one shared structure, fused panels -------
+        let layers = self.net.layers();
+        for l in 0..layers {
+            for o in ops.iter_mut() {
+                o.set_layer(l);
+            }
+            let cell = self.net.layer(l);
+            let n_l = cell.n();
+            let dv_da_cost = cell.dv_da_cost();
+            let dv_dx_cost = cell.dv_dx_cost();
+            let pc_lower = if l > 0 { self.colmap.cum_cols(l - 1) } else { 0 };
+
+            // (1) shared structure + per-lane value fill. Per-lane counts
+            // equal a solo parameter-mode build of the same step.
+            let counts = self.slab.build_structure(cell, self.cur_active, l > 0, b);
+            for s in 0..b {
+                self.slab.fill_lane(s, cell, &self.scratch[s].layers[l]);
+            }
+            let jac_macs = counts.own_entries * dv_da_cost + counts.cross_entries * dv_dx_cost;
+
+            // (2) stage the per-row per-lane φ' gates, row-major.
+            self.dphi.clear();
+            for k in 0..n_l {
+                for s in 0..b {
+                    self.dphi.push(self.scratch[s].layers[l].dphi[k]);
+                }
+            }
+
+            // (3) panel-row update. The lower layer's panel was finished
+            // earlier in this same loop (block lower-bidiagonal order).
+            let (lower_panels, rest) = self.panels.split_at_mut(l);
+            let lower = lower_panels.last();
+            let panel = &mut rest[0];
+            let pc_l = panel.pc;
+            let cur: &[f32] = &panel.cur;
+            let next: &mut [f32] = &mut panel.next;
+            let srange = self.net.layout().state_range(l);
+            let (srange0, srange1) = (srange.start, srange.end);
+            let slab = &self.slab;
+            let colmap = &self.colmap;
+            let scratch = &self.scratch;
+            let a_prev = &self.a_prev;
+            let dphi = &self.dphi;
+            let update_row = |k: usize, row: &mut [f32]| -> (u64, u64, Vec<u64>) {
+                // Own-layer gather: Σ_c J[k,c] · M_l^{(t-1)}[c], all lanes.
+                let (cols, vals) = slab.own_row(k);
+                kernels::gather_panel(row, cols, vals, |c| &cur[c * pc_l * b..(c + 1) * pc_l * b], b);
+                let mut rows_read = cols.len() as u64;
+                let mut upd_macs = cols.len() as u64 * pc_l as u64;
+                // Cross-layer block into the leading pc_lower panel slice.
+                if let Some(lo) = lower {
+                    let cvals = slab.cross_row(k);
+                    for (e, &j) in slab.cross_cols().iter().enumerate() {
+                        let j = j as usize;
+                        kernels::axpy_panel(
+                            &mut row[..pc_lower * b],
+                            &cvals[e * b..(e + 1) * b],
+                            &lo.next[j * lo.pc * b..(j + 1) * lo.pc * b],
+                            b,
+                        );
+                    }
+                    rows_read += slab.cross_cols().len() as u64;
+                    upd_macs += slab.cross_cols().len() as u64 * pc_lower as u64;
+                }
+                // Immediate influence M̄ row k, per lane (value-dependent).
+                let mut emitted = vec![0u64; b];
+                for s in 0..b {
+                    let sl = &scratch[s].layers[l];
+                    let a_prev_l = &a_prev[s][srange0..srange1];
+                    let input_l: &[f32] = if l == 0 { xs[s] } else { &scratch[s].layers[l - 1].a };
+                    emitted[s] +=
+                        cell.immediate_row_visit(sl, a_prev_l, input_l, k, |pi, val| {
+                            row[colmap.global_compact_of(l, pi) * b + s] += val;
+                        });
+                }
+                // Row gate φ'(v_k), per lane, with flush-to-zero.
+                kernels::scale_flush_panel(row, &dphi[k * b..(k + 1) * b], b);
+                upd_macs += pc_l as u64;
+                (rows_read, upd_macs, emitted)
+            };
+
+            let panel_elems = (n_l * pc_l * b) as u64;
+            let stats: Vec<(u64, u64, Vec<u64>)> =
+                if self.threads > 1 && n_l > 1 && panel_elems >= PAR_MIN_PANEL_ELEMS {
+                    let jobs: Vec<(usize, &mut [f32])> =
+                        next.chunks_mut(pc_l * b).enumerate().collect();
+                    kernels::for_each_row_parallel(jobs, self.threads, |(k, row)| {
+                        update_row(k, row)
+                    })
+                } else {
+                    next.chunks_mut(pc_l * b).enumerate().map(|(k, row)| update_row(k, row)).collect()
+                };
+
+            // Charges: structural counts identical for every lane (built
+            // once, charged N times); Immediate is per-lane.
+            let (mut rows_read, mut upd_macs) = (0u64, 0u64);
+            let mut emitted = vec![0u64; b];
+            for (rr, um, em) in &stats {
+                rows_read += rr;
+                upd_macs += um;
+                for s in 0..b {
+                    emitted[s] += em[s];
+                }
+            }
+            for (s, o) in ops.iter_mut().enumerate() {
+                o.macs(Phase::Jacobian, jac_macs);
+                o.macs(Phase::Immediate, emitted[s]);
+                o.macs(Phase::InfluenceUpdate, upd_macs);
+                o.words(Phase::InfluenceUpdate, (n_l as u64 + rows_read) * pc_l as u64);
+            }
+        }
+        for o in ops.iter_mut() {
+            o.clear_layer();
+        }
+
+        // ---- loss + gradient accumulation, per lane ---------------------
+        let top_l = layers - 1;
+        let pc_total = self.colmap.total_cols();
+        let mut results = Vec::with_capacity(b);
+        for s in 0..b {
+            let (loss_val, correct, prediction) = supervised_step(
+                readouts[s],
+                losses[s],
+                &self.scratch[s].top().a,
+                targets[s],
+                &mut self.logits,
+                &mut self.dlogits,
+                &mut self.c_bar,
+                ops[s],
+            );
+            if loss_val.is_some() {
+                let top = &self.panels[top_l];
+                let mut grad_macs = 0u64;
+                for k in 0..top.n {
+                    let coef = self.c_bar[k];
+                    if coef == 0.0 {
+                        continue;
+                    }
+                    let row = &top.next[k * top.pc * b..(k + 1) * top.pc * b];
+                    for (c, g) in self.grad_compact[s].iter_mut().enumerate() {
+                        *g += coef * row[c * b + s];
+                    }
+                    grad_macs += pc_total as u64;
+                }
+                ops[s].macs(Phase::GradCombine, grad_macs);
+            }
+
+            let influence_sparsity = if self.measure_influence {
+                let logical = (self.a_prev[s].len() * self.colmap.p()) as f64;
+                let nonzero: usize = self
+                    .panels
+                    .iter()
+                    .map(|p| p.next.iter().skip(s).step_by(b).filter(|&&v| v != 0.0).count())
+                    .sum();
+                Some((1.0 - nonzero as f64 / logical) as f32)
+            } else {
+                None
+            };
+
+            results.push(StepResult {
+                loss: loss_val,
+                correct,
+                prediction,
+                active_units: self.scratch[s].active_units(),
+                deriv_units: self.scratch[s].deriv_units(),
+                influence_sparsity,
+            });
+        }
+
+        // ---- rotate state ----------------------------------------------
+        for p in &mut self.panels {
+            std::mem::swap(&mut p.cur, &mut p.next);
+        }
+        for s in 0..b {
+            self.scratch[s].write_state(&mut self.a_prev[s]);
+        }
+        self.cur_active = true;
+        results
+    }
+
+    /// Materialize every lane's dense `R^P` gradient from its compact
+    /// accumulator (the solo engine's `end_sequence`).
+    pub fn end_sequence(&mut self) {
+        for s in 0..self.batch {
+            self.grads[s].iter_mut().for_each(|x| *x = 0.0);
+            self.colmap.scatter_add(&self.net, &self.grad_compact[s], 1.0, &mut self.grads[s]);
+        }
+    }
+
+    /// Lane `s`'s dense gradient (valid after [`Self::end_sequence`]).
+    pub fn grads(&self, lane: usize) -> &[f32] {
+        &self.grads[lane]
+    }
+
+    /// Lane `s`'s current activations `a ∈ R^N`.
+    pub fn activations(&self, lane: usize) -> &[f32] {
+        &self.a_prev[lane]
+    }
+
+    /// Snapshot lane `lane` in the solo `rtrl-param` [`EngineState`]
+    /// format: a [`super::SparseRtrl`] built for the same stack loads it
+    /// via `load_state` and continues bit-identically, and vice versa.
+    pub fn save_lane(&self, lane: usize) -> EngineState {
+        let mut st = EngineState::new("rtrl-param", SPARSE_STATE_VERSION);
+        st.put_scalar("layers", self.panels.len() as u64);
+        for (l, p) in self.panels.iter().enumerate() {
+            let (rows, vals) = if self.cur_active {
+                let rows: Vec<u64> = (0..p.n as u64).collect();
+                let mut vals = Vec::with_capacity(p.n * p.pc);
+                for k in 0..p.n {
+                    for c in 0..p.pc {
+                        vals.push(p.cur[(k * p.pc + c) * self.batch + lane]);
+                    }
+                }
+                (rows, vals)
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            st.put_ints(&format!("rows_{l}"), rows);
+            st.put_floats(&format!("vals_{l}"), vals);
+        }
+        st.put_floats("a_prev", self.a_prev[lane].clone());
+        st.put_floats("grad_compact", self.grad_compact[lane].clone());
+        st.put_floats("grads", self.grads[lane].clone());
+        st
+    }
+
+    /// Restore lane `lane` from a solo `rtrl-param` snapshot. Lanes must
+    /// be loaded in ascending order starting at lane 0: the parameter-mode
+    /// structure is shared, so lane 0's "are the current panels live"
+    /// state becomes the group's, and later lanes must agree. States with
+    /// a *partial* active row set (possible only for a snapshot that never
+    /// was parameter-mode) are rejected — callers fall back to solo
+    /// stepping on any error.
+    pub fn load_lane(&mut self, lane: usize, state: &EngineState) -> Result<(), StateError> {
+        state.expect("rtrl-param", SPARSE_STATE_VERSION)?;
+        if state.scalar("layers")? != self.panels.len() as u64 {
+            return Err(StateError(format!(
+                "snapshot has {} influence layers, batched engine has {}",
+                state.scalar("layers")?,
+                self.panels.len()
+            )));
+        }
+        let a = state.floats_exact("a_prev", self.a_prev[lane].len())?;
+        let gc = state.floats_exact("grad_compact", self.grad_compact[lane].len())?;
+        let g = state.floats_exact("grads", self.grads[lane].len())?;
+        // Validate every layer before mutating anything.
+        let mut active = None;
+        for (l, p) in self.panels.iter().enumerate() {
+            let rows = state.ints(&format!("rows_{l}"))?;
+            let vals = state.floats(&format!("vals_{l}"))?;
+            if vals.len() != rows.len() * p.pc {
+                return Err(StateError(format!(
+                    "snapshot layer {l} holds {} values for {} rows × {} cols",
+                    vals.len(),
+                    rows.len(),
+                    p.pc
+                )));
+            }
+            let layer_active = !rows.is_empty();
+            if layer_active {
+                let mut sorted: Vec<u64> = rows.to_vec();
+                sorted.sort_unstable();
+                if sorted.len() != p.n || sorted.iter().enumerate().any(|(k, &r)| r != k as u64) {
+                    return Err(StateError(format!(
+                        "snapshot layer {l} has a partial active set ({} of {} rows) — \
+                         not a parameter-mode state",
+                        rows.len(),
+                        p.n
+                    )));
+                }
+            }
+            match active {
+                None => active = Some(layer_active),
+                Some(a) if a != layer_active => {
+                    return Err(StateError(format!(
+                        "snapshot layer {l} activity disagrees with earlier layers"
+                    )));
+                }
+                _ => {}
+            }
+        }
+        let active = active.unwrap_or(false);
+        if lane == 0 {
+            self.cur_active = active;
+        } else if active != self.cur_active {
+            return Err(StateError(
+                "lane state's panel activity disagrees with the group's".into(),
+            ));
+        }
+        // Commit.
+        let b = self.batch;
+        for (l, p) in self.panels.iter_mut().enumerate() {
+            let rows = state.ints(&format!("rows_{l}"))?;
+            let vals = state.floats(&format!("vals_{l}"))?;
+            for slot in p.cur.iter_mut().skip(lane).step_by(b) {
+                *slot = 0.0;
+            }
+            for slot in p.next.iter_mut().skip(lane).step_by(b) {
+                *slot = 0.0;
+            }
+            for (i, &k) in rows.iter().enumerate() {
+                let k = k as usize;
+                for c in 0..p.pc {
+                    p.cur[(k * p.pc + c) * b + lane] = vals[i * p.pc + c];
+                }
+            }
+        }
+        self.a_prev[lane].copy_from_slice(a);
+        self.grad_compact[lane].copy_from_slice(gc);
+        self.grads[lane].copy_from_slice(g);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{GradientEngine, SparseRtrl, SparsityMode};
+    use super::*;
+    use crate::nn::{LossKind, RnnCell};
+    use crate::sparse::MaskPattern;
+    use crate::util::Pcg64;
+
+    fn make_net(seed: u64) -> LayerStack {
+        let mut rng = Pcg64::new(seed);
+        let mask = MaskPattern::random(8, 8, 0.4, &mut rng);
+        LayerStack::single(RnnCell::egru(8, 2, 0.05, 0.3, 0.9, Some(mask), &mut rng))
+    }
+
+    fn lane_inputs(lane: u64, t: u64) -> Vec<f32> {
+        let mut r = Pcg64::new(0x1000 + lane * 97 + t);
+        vec![r.normal(), r.normal()]
+    }
+
+    /// Lane 0 of a width-3 batched run must be bit-identical to a width-1
+    /// batched run of the same session — gradients, losses and op counts.
+    #[test]
+    fn lane_zero_is_bit_identical_across_batch_widths() {
+        let net = make_net(51);
+        let run = |b: usize| {
+            let mut readouts: Vec<Readout> =
+                (0..b).map(|_| Readout::new(2, 8, &mut Pcg64::new(7))).collect();
+            let mut losses: Vec<Loss> =
+                (0..b).map(|_| Loss::new(LossKind::CrossEntropy, 2)).collect();
+            let mut counters: Vec<OpCounter> = (0..b).map(|_| OpCounter::new()).collect();
+            let mut eng = BatchedSparse::new(&net, 2, b);
+            eng.begin_sequence();
+            let mut lane0_losses = Vec::new();
+            for t in 0..6u64 {
+                let xs: Vec<Vec<f32>> = (0..b as u64).map(|s| lane_inputs(s, t)).collect();
+                let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+                let tgts: Vec<Target> = (0..b)
+                    .map(|_| if t % 2 == 1 { Target::Class(0) } else { Target::None })
+                    .collect();
+                let mut rref: Vec<&mut Readout> = readouts.iter_mut().collect();
+                let mut lref: Vec<&mut Loss> = losses.iter_mut().collect();
+                let mut oref: Vec<&mut OpCounter> = counters.iter_mut().collect();
+                let rs = eng.step(&xrefs, &tgts, &mut rref, &mut lref, &mut oref);
+                lane0_losses.push(rs[0].loss.map(f32::to_bits));
+            }
+            eng.end_sequence();
+            (eng.grads(0).to_vec(), lane0_losses, counters[0].to_words_vec())
+        };
+        let (g1, l1, o1) = run(1);
+        let (g3, l3, o3) = run(3);
+        assert_eq!(l1, l3, "lane-0 losses diverged across batch widths");
+        assert_eq!(o1, o3, "lane-0 op counts diverged across batch widths");
+        assert_eq!(
+            g1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            g3.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "lane-0 gradient diverged across batch widths"
+        );
+    }
+
+    /// Batched lanes must match a solo SparseRtrl parameter-mode run to FP
+    /// tolerance (exact up to the solo path's zero-coefficient filtering).
+    #[test]
+    fn lanes_match_solo_parameter_engine() {
+        let net = make_net(52);
+        let b = 2;
+        let mut eng = BatchedSparse::new(&net, 2, b);
+        let mut readouts: Vec<Readout> =
+            (0..b).map(|_| Readout::new(2, 8, &mut Pcg64::new(9))).collect();
+        let mut losses: Vec<Loss> =
+            (0..b).map(|_| Loss::new(LossKind::CrossEntropy, 2)).collect();
+        let mut counters: Vec<OpCounter> = (0..b).map(|_| OpCounter::new()).collect();
+        eng.begin_sequence();
+        for t in 0..5u64 {
+            let xs: Vec<Vec<f32>> = (0..b as u64).map(|s| lane_inputs(s, t)).collect();
+            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let tgts: Vec<Target> =
+                (0..b).map(|_| if t == 4 { Target::Class(1) } else { Target::None }).collect();
+            let mut rref: Vec<&mut Readout> = readouts.iter_mut().collect();
+            let mut lref: Vec<&mut Loss> = losses.iter_mut().collect();
+            let mut oref: Vec<&mut OpCounter> = counters.iter_mut().collect();
+            eng.step(&xrefs, &tgts, &mut rref, &mut lref, &mut oref);
+        }
+        eng.end_sequence();
+
+        for lane in 0..b {
+            let mut solo = SparseRtrl::new(&net, 2, SparsityMode::Parameter);
+            let mut readout = Readout::new(2, 8, &mut Pcg64::new(9));
+            let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+            let mut ops = OpCounter::new();
+            solo.begin_sequence();
+            for t in 0..5u64 {
+                let x = lane_inputs(lane as u64, t);
+                let tgt = if t == 4 { Target::Class(1) } else { Target::None };
+                solo.step(&net, &mut readout, &mut loss, &x, tgt, &mut ops);
+            }
+            solo.end_sequence(&net, &mut readout, &mut ops);
+            let solo_g = solo.grads();
+            let batched_g = eng.grads(lane);
+            assert_eq!(solo_g.len(), batched_g.len());
+            for (i, (a, c)) in solo_g.iter().zip(batched_g).enumerate() {
+                assert!(
+                    (a - c).abs() <= 1e-5 * (1.0 + a.abs()),
+                    "lane {lane} grad[{i}]: solo {a} vs batched {c}"
+                );
+            }
+        }
+    }
+
+    /// Lane snapshots round-trip through the solo engine's state format in
+    /// both directions, and a continued run stays on track.
+    #[test]
+    fn lane_state_interoperates_with_solo_engine() {
+        let net = make_net(53);
+        let b = 2;
+        let mut eng = BatchedSparse::new(&net, 2, b);
+        let mut readouts: Vec<Readout> =
+            (0..b).map(|_| Readout::new(2, 8, &mut Pcg64::new(13))).collect();
+        let mut losses: Vec<Loss> =
+            (0..b).map(|_| Loss::new(LossKind::CrossEntropy, 2)).collect();
+        let mut counters: Vec<OpCounter> = (0..b).map(|_| OpCounter::new()).collect();
+        eng.begin_sequence();
+        for t in 0..3u64 {
+            let xs: Vec<Vec<f32>> = (0..b as u64).map(|s| lane_inputs(s, t)).collect();
+            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let tgts = vec![Target::None; b];
+            let mut rref: Vec<&mut Readout> = readouts.iter_mut().collect();
+            let mut lref: Vec<&mut Loss> = losses.iter_mut().collect();
+            let mut oref: Vec<&mut OpCounter> = counters.iter_mut().collect();
+            eng.step(&xrefs, &tgts, &mut rref, &mut lref, &mut oref);
+        }
+        // batched lane -> solo engine
+        let st = eng.save_lane(1);
+        let mut solo = SparseRtrl::new(&net, 2, SparsityMode::Parameter);
+        solo.load_state(&net, &st).expect("solo engine loads a batched lane snapshot");
+        // solo engine -> batched lane (fresh group)
+        let solo_st = solo.save_state();
+        let mut eng2 = BatchedSparse::new(&net, 2, b);
+        eng2.load_lane(0, &st).expect("lane 0 loads");
+        eng2.load_lane(1, &solo_st).expect("lane 1 loads a solo snapshot");
+        // a fresh-sequence lane cannot join a mid-sequence group
+        let mut eng3 = BatchedSparse::new(&net, 2, b);
+        eng3.load_lane(0, &st).expect("lane 0 loads");
+        let fresh = SparseRtrl::new(&net, 2, SparsityMode::Parameter).save_state();
+        assert!(
+            eng3.load_lane(1, &fresh).is_err(),
+            "mixed fresh/mid-sequence lanes must be rejected"
+        );
+    }
+}

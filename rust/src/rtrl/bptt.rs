@@ -15,7 +15,8 @@
 //! The reverse pass does exploit activity sparsity (`δv_k = φ'_k·…` vanishes
 //! where `φ' = 0`), matching Subramoney et al. (2022)'s sparse-BPTT
 //! observation; the *memory* still grows with `T`, which is the axis the
-//! paper contrasts.
+//! paper contrasts. Its adjoint accumulations run on the same lane-chunked
+//! [`super::kernels`] row kernels as the online engines.
 
 use super::kernels::{self, CrossSelect, JacobianSlab, OwnSelect, RowSelect};
 use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};

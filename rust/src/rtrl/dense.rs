@@ -14,6 +14,10 @@
 //! invent is architecturally impossible coupling: the recursion is the
 //! exact recursion of the layered network, so the structurally-zero upper
 //! blocks hold zeros in the materialized `N×P` matrix too.
+//!
+//! The row update runs on the shared lane-chunked kernels of
+//! [`super::kernels`] (`fused_gather`/`axpy`), so SIMD-shaped improvements
+//! to that layer speed this baseline up identically to the sparse engines.
 
 use super::kernels::{self, CrossSelect, JacobianSlab, OwnSelect, RowSelect};
 use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};

@@ -12,6 +12,33 @@
 //! adjoint scatters and slab·vector dots. Op charging is bulk per kernel
 //! call, derived from slice lengths and [`SlabCounts`].
 //!
+//! # Structure-of-arrays kernel shapes
+//!
+//! The row kernels are written for autovectorization on stable Rust: every
+//! hot loop runs over contiguous, pre-truncated slices in
+//! [`rowops::LANES`]-wide `chunks_exact` blocks with a scalar remainder
+//! tail, so no per-element bounds check survives into the loop body and
+//! LLVM can emit packed SIMD for the block bodies. The unrolling regroups
+//! *elements*, never the terms of one element's sum, so the kernels stay
+//! bit-identical to their plain-loop forms (pinned by kernel-level tests
+//! and `rust/tests/jacobian_slab.rs`). All five engine families — dense,
+//! sparse, SnAp-1/2, UORO and BPTT — run these same loops.
+//!
+//! # Shared-weight batched stepping
+//!
+//! When N sessions share one weight+mask set, the parameter-mode slab
+//! structure is identical across them — only the *values* differ. The
+//! batched path ([`BatchedSlab`] + the panel kernels
+//! [`gather_panel`]/[`axpy_panel`]/[`scale_flush_panel`]) builds the
+//! structure **once per step** and stores each session's influence panel
+//! lane-interleaved (`row[c*B + s]` is compact column `c` of lane `s`), so
+//! one pass over a row's shared column list advances all N sessions. Lanes
+//! never mix arithmetically — lane `s` of a width-`B` run is bit-identical
+//! to a width-1 run of that session alone through the same panel kernels —
+//! and op accounting charges every lane the same counts it would pay solo.
+//! `rtrl::BatchedSparse` drives these kernels; `session::SessionPool::
+//! step_batched` and the bench `--batch` axis expose them.
+//!
 //! # Intra-step parallelism
 //!
 //! The exact-RTRL influence update writes disjoint memory per panel row
@@ -21,15 +48,18 @@
 //! Because every kernel fixes its floating-point association order and a
 //! row's inputs are immutable during the update, a multi-threaded step is
 //! **bit-identical** to the single-threaded one — pinned by
-//! `rust/tests/jacobian_slab.rs` over a full training run.
+//! `rust/tests/jacobian_slab.rs` over a full training run. The same holds
+//! under batching: a batched panel row carries all lanes, so thread count
+//! changes neither lane values nor charged ops.
 
 pub mod rowops;
 pub mod slab;
 
 pub use rowops::{
-    axpy, dot_dense_acc, dot_sparse_acc, fused_gather, scale_flush, scatter_axpy, FLUSH_EPS,
+    axpy, axpy_panel, dot_dense_acc, dot_sparse_acc, fused_gather, gather_panel, scale_flush,
+    scale_flush_panel, scatter_axpy, FLUSH_EPS, LANES,
 };
-pub use slab::{CrossSelect, JacobianSlab, OwnSelect, RowSelect, SlabCounts};
+pub use slab::{BatchedSlab, CrossSelect, JacobianSlab, OwnSelect, RowSelect, SlabCounts};
 
 use crate::util::pool;
 
@@ -96,5 +126,46 @@ mod tests {
         for (i, chunk) in buf.chunks(4).enumerate() {
             assert!(chunk.iter().all(|&v| v == i as f32));
         }
+    }
+
+    #[test]
+    fn zero_jobs_is_a_no_op_at_any_thread_count() {
+        for threads in [1, 2, 8] {
+            let out: Vec<u64> = for_each_row_parallel(Vec::<u64>::new(), threads, |j| j);
+            assert!(out.is_empty(), "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn fewer_jobs_than_threads_runs_every_job_once_in_order() {
+        // 3 jobs on 8 requested workers: the pool must clamp, run each job
+        // exactly once, and return results in job order.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let runs = AtomicU64::new(0);
+        let out = for_each_row_parallel(vec![10u64, 20, 30], 8, |j| {
+            runs.fetch_add(1, Ordering::SeqCst);
+            j + 1
+        });
+        assert_eq!(out, vec![11, 21, 31]);
+        assert_eq!(runs.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn panicking_job_lets_sibling_rows_complete() {
+        // util/pool contract: every job runs to completion even when one
+        // panics; the first panic (by job index) is re-raised afterwards.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let done = AtomicU64::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for_each_row_parallel((0..16u64).collect(), 4, |j| {
+                if j == 5 {
+                    panic!("row job {j} failed");
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+                j
+            })
+        }));
+        assert!(result.is_err(), "the job panic must propagate to the caller");
+        assert_eq!(done.load(Ordering::SeqCst), 15, "sibling rows must still complete");
     }
 }

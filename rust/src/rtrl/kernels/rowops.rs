@@ -8,15 +8,43 @@
 //! they hold no state, so a row update composed from them can run on any
 //! thread — the property [`super::for_each_row_parallel`] exploits.
 //!
+//! # Structure-of-arrays shapes
+//!
+//! The hot loops are written in autovectorization-friendly form on stable
+//! Rust: operands are pre-truncated to a common length (no per-element
+//! bounds checks survive into the loop body), the body runs over
+//! [`LANES`]-wide `chunks_exact` blocks with a scalar remainder tail, and
+//! element `i`'s arithmetic never depends on element `i−1`'s — except in
+//! the two dot kernels, whose single accumulator chain is *deliberately*
+//! sequential (see below). The panel variants ([`gather_panel`],
+//! [`axpy_panel`], [`scale_flush_panel`]) extend the same shapes to
+//! lane-interleaved batch panels, where `B` independent sessions' influence
+//! rows are stored element-major / lane-minor (`row[c*B + s]` is column `c`
+//! of lane `s`) so one pass over a row advances every lane at once.
+//!
 //! # Bit-exactness contract
 //!
 //! These kernels pin the floating-point *association order* of the hot
 //! loops. [`fused_gather`] consumes its coefficient list in pairs (two
 //! fused multiply-adds per row element — the measured-fastest form of the
 //! `J·M` gather); [`axpy`], [`scatter_axpy`] and the dot kernels accumulate
-//! strictly left-to-right. Engines that must stay bit-identical across
-//! refactors and thread counts rely on this: the same kernel call sequence
-//! produces the same bits regardless of which thread runs it.
+//! strictly left-to-right. The `chunks_exact` unrolling regroups *elements*
+//! across iterations, never the terms of any one element's sum, so it is
+//! bit-identical to the plain loop. The dot kernels fold everything into
+//! one accumulator and therefore cannot be widened without reassociating —
+//! they stay a sequential chain on purpose. Engines that must stay
+//! bit-identical across refactors, thread counts and batch widths rely on
+//! this: the same kernel call sequence produces the same bits regardless
+//! of which thread runs it or how many lanes ride along. Each panel kernel
+//! applies, per lane, exactly the arithmetic of its scalar counterpart in
+//! the same order, so lane `s` of a width-`B` panel run is bit-identical
+//! to a width-1 run of that lane alone.
+
+/// Fixed unroll width of the element loops. Eight `f32`s is one AVX2
+/// register / two NEON registers — wide enough that LLVM reliably
+/// vectorizes the `chunks_exact` bodies, small enough that the scalar
+/// remainder tail stays cheap for the short rows of small networks.
+pub const LANES: usize = 8;
 
 /// Magnitudes below this are flushed to an exact zero by
 /// [`scale_flush`]. Influence entries only ever shrink through the `φ'`
@@ -24,7 +52,57 @@
 /// into denormal range, where scalar multiplies cost ~100 cycles (§Perf:
 /// a measured 10× slowdown). Flushing restores full-speed arithmetic and
 /// surfaces decayed influence as the structural zero it effectively is.
+///
+/// # Flush invariant
+///
+/// For every element, with `v = row[i] * g`:
+///
+/// * `|v| < FLUSH_EPS` → the element becomes exactly `+0.0` (this includes
+///   `v = -0.0`, so flushed zeros have one canonical bit pattern);
+/// * otherwise the element becomes `v` unchanged — **including non-finite
+///   values**: `NaN.abs() < eps` and `∞.abs() < eps` are both false, so a
+///   NaN or ±∞ entering the gate always survives it. The kernels never
+///   silently drop a non-finite value; it stays in the panel where tests,
+///   telemetry and downstream gradients surface it.
 pub const FLUSH_EPS: f32 = 1e-30;
+
+/// `dst[i] = j0·s0[i] + j1·s1[i]` over pre-truncated equal-length slices.
+#[inline]
+fn pair_write(dst: &mut [f32], j0: f32, s0: &[f32], j1: f32, s1: &[f32]) {
+    let len = dst.len();
+    let (s0, s1) = (&s0[..len], &s1[..len]);
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut a = s0.chunks_exact(LANES);
+    let mut b = s1.chunks_exact(LANES);
+    for dc in &mut d {
+        let (ac, bc) = (a.next().unwrap(), b.next().unwrap());
+        for i in 0..LANES {
+            dc[i] = j0 * ac[i] + j1 * bc[i];
+        }
+    }
+    for ((dv, &av), &bv) in d.into_remainder().iter_mut().zip(a.remainder()).zip(b.remainder()) {
+        *dv = j0 * av + j1 * bv;
+    }
+}
+
+/// `dst[i] += ja·sa[i] + jb·sb[i]` over pre-truncated equal-length slices.
+#[inline]
+fn pair_add(dst: &mut [f32], ja: f32, sa: &[f32], jb: f32, sb: &[f32]) {
+    let len = dst.len();
+    let (sa, sb) = (&sa[..len], &sb[..len]);
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut a = sa.chunks_exact(LANES);
+    let mut b = sb.chunks_exact(LANES);
+    for dc in &mut d {
+        let (ac, bc) = (a.next().unwrap(), b.next().unwrap());
+        for i in 0..LANES {
+            dc[i] += ja * ac[i] + jb * bc[i];
+        }
+    }
+    for ((dv, &av), &bv) in d.into_remainder().iter_mut().zip(a.remainder()).zip(b.remainder()) {
+        *dv += ja * av + jb * bv;
+    }
+}
 
 /// The influence-recursion gather (paper Eq. 10, inner bracket):
 /// `dst = Σ_i jlist[i].1 · src(jlist[i].0)`.
@@ -34,7 +112,9 @@ pub const FLUSH_EPS: f32 = 1e-30;
 /// `dst`. §Perf: the first contribution *writes* the row (no separate
 /// zeroing pass) and entries are consumed in pairs so each pass over the
 /// row does two fused multiply-adds per element — halving row read/write
-/// traffic and roughly doubling ILP on the measured hot loop.
+/// traffic and roughly doubling ILP on the measured hot loop. The passes
+/// themselves run [`LANES`]-wide with a scalar tail (see module docs);
+/// per-element association order is unchanged.
 pub fn fused_gather<'a>(
     dst: &mut [f32],
     jlist: &[(u32, f32)],
@@ -44,17 +124,12 @@ pub fn fused_gather<'a>(
         dst.iter_mut().for_each(|x| *x = 0.0);
         return;
     }
-    let len = dst.len();
     let (l0, j0) = jlist[0];
     let s0 = src(l0 as usize);
     let mut idx = 1;
     if jlist.len() >= 2 {
         let (l1, j1) = jlist[1];
-        let s1 = src(l1 as usize);
-        let (s0, s1) = (&s0[..len], &s1[..len]);
-        for i in 0..len {
-            dst[i] = j0 * s0[i] + j1 * s1[i];
-        }
+        pair_write(dst, j0, s0, j1, src(l1 as usize));
         idx = 2;
     } else {
         for (r, s) in dst.iter_mut().zip(s0) {
@@ -64,12 +139,7 @@ pub fn fused_gather<'a>(
     while idx + 1 < jlist.len() {
         let (la, ja) = jlist[idx];
         let (lb, jb) = jlist[idx + 1];
-        let sa = src(la as usize);
-        let sb = src(lb as usize);
-        let (sa, sb) = (&sa[..len], &sb[..len]);
-        for i in 0..len {
-            dst[i] += ja * sa[i] + jb * sb[i];
-        }
+        pair_add(dst, ja, src(la as usize), jb, src(lb as usize));
         idx += 2;
     }
     if idx < jlist.len() {
@@ -85,23 +155,43 @@ pub fn fused_gather<'a>(
 /// the cross-layer panel accumulation and the dense-row adjoint push.
 #[inline]
 pub fn axpy(dst: &mut [f32], a: f32, src: &[f32]) {
-    for (d, s) in dst.iter_mut().zip(src) {
-        *d += a * s;
+    let len = dst.len().min(src.len());
+    let (dst, src) = (&mut dst[..len], &src[..len]);
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut s = src.chunks_exact(LANES);
+    for dc in &mut d {
+        let sc = s.next().unwrap();
+        for i in 0..LANES {
+            dc[i] += a * sc[i];
+        }
+    }
+    for (dv, &sv) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *dv += a * sv;
     }
 }
 
 /// The `φ'` row gate with flush-to-zero: `row[i] = row[i] · g`, magnitudes
-/// below [`FLUSH_EPS`] snapped to an exact `0.0`.
+/// below [`FLUSH_EPS`] snapped to an exact `+0.0`. Non-finite products are
+/// never flushed — see the [`FLUSH_EPS`] invariant.
 #[inline]
 pub fn scale_flush(row: &mut [f32], g: f32) {
-    for r in row.iter_mut() {
+    let mut chunks = row.chunks_exact_mut(LANES);
+    for rc in &mut chunks {
+        for r in rc.iter_mut() {
+            let v = *r * g;
+            *r = if v.abs() < FLUSH_EPS { 0.0 } else { v };
+        }
+    }
+    for r in chunks.into_remainder() {
         let v = *r * g;
         *r = if v.abs() < FLUSH_EPS { 0.0 } else { v };
     }
 }
 
 /// Sparse transpose-axpy: `dst[cols[i]] += a · vals[i]` — the `Jᵀ·δv`
-/// adjoint scatter of BPTT's reverse pass.
+/// adjoint scatter of BPTT's reverse pass. Inherently gather/scatter
+/// shaped: the random column writes cannot be chunked, so this stays the
+/// plain indexed loop.
 #[inline]
 pub fn scatter_axpy(dst: &mut [f32], a: f32, cols: &[u32], vals: &[f32]) {
     for (&c, &v) in cols.iter().zip(vals) {
@@ -113,7 +203,8 @@ pub fn scatter_axpy(dst: &mut [f32], a: f32, cols: &[u32], vals: &[f32]) {
 /// — the slab-row · vector product of UORO's forward substitution. The
 /// accumulator threads through so a row's own-layer and cross-layer
 /// contributions fold left-to-right into one sum (bit-compatible with the
-/// historical single-loop form).
+/// historical single-loop form). The single accumulator chain is
+/// sequential by contract — widening it would reassociate the sum.
 #[inline]
 pub fn dot_sparse_acc(mut acc: f32, cols: &[u32], vals: &[f32], x: &[f32]) -> f32 {
     for (&c, &v) in cols.iter().zip(vals) {
@@ -123,12 +214,124 @@ pub fn dot_sparse_acc(mut acc: f32, cols: &[u32], vals: &[f32], x: &[f32]) -> f3
 }
 
 /// Dense dot continuing an accumulator: `acc + Σ_i vals[i] · x[i]`.
+/// Sequential chain by contract, like [`dot_sparse_acc`].
 #[inline]
 pub fn dot_dense_acc(mut acc: f32, vals: &[f32], x: &[f32]) -> f32 {
     for (v, xv) in vals.iter().zip(x) {
         acc += v * xv;
     }
     acc
+}
+
+// ---------------------------------------------------------------------------
+// Lane-interleaved panel kernels (shared-weight batched stepping)
+// ---------------------------------------------------------------------------
+
+/// Panel form of [`fused_gather`] over a lane-interleaved batch panel:
+/// `dst[c·b + s] = Σ_e vals[e·b + s] · src(cols[e])[c·b + s]`.
+///
+/// `cols` is the **shared** structural column list (one slab structure for
+/// all `b` lanes); `vals` carries the per-lane Jacobian coefficients of
+/// each entry, entry-major / lane-minor (`vals[e*b + s]` is entry `e` of
+/// lane `s`). Entries are consumed in the same first-pair-writes /
+/// pairs-add / single-tail order as [`fused_gather`], and within an entry
+/// each lane multiplies only its own coefficient — lanes never mix — so
+/// lane `s` of this kernel is bit-identical to [`fused_gather`] run on
+/// lane `s`'s columns alone with the *same structural list* (zero-valued
+/// coefficients included). An empty `cols` zeroes `dst`.
+pub fn gather_panel<'a>(
+    dst: &mut [f32],
+    cols: &[u32],
+    vals: &[f32],
+    src: impl Fn(usize) -> &'a [f32],
+    b: usize,
+) {
+    debug_assert_eq!(vals.len(), cols.len() * b);
+    debug_assert_eq!(dst.len() % b.max(1), 0);
+    if cols.is_empty() {
+        dst.iter_mut().for_each(|x| *x = 0.0);
+        return;
+    }
+    let len = dst.len();
+    let c0 = &vals[..b];
+    let s0 = src(cols[0] as usize);
+    let mut idx = 1;
+    if cols.len() >= 2 {
+        let c1 = &vals[b..2 * b];
+        let s1 = &src(cols[1] as usize)[..len];
+        let s0 = &s0[..len];
+        for ((dc, ac), bc) in
+            dst.chunks_exact_mut(b).zip(s0.chunks_exact(b)).zip(s1.chunks_exact(b))
+        {
+            for s in 0..b {
+                dc[s] = c0[s] * ac[s] + c1[s] * bc[s];
+            }
+        }
+        idx = 2;
+    } else {
+        let s0 = &s0[..len];
+        for (dc, ac) in dst.chunks_exact_mut(b).zip(s0.chunks_exact(b)) {
+            for s in 0..b {
+                dc[s] = c0[s] * ac[s];
+            }
+        }
+    }
+    while idx + 1 < cols.len() {
+        let ca = &vals[idx * b..(idx + 1) * b];
+        let cb = &vals[(idx + 1) * b..(idx + 2) * b];
+        let sa = &src(cols[idx] as usize)[..len];
+        let sb = &src(cols[idx + 1] as usize)[..len];
+        for ((dc, ac), bc) in
+            dst.chunks_exact_mut(b).zip(sa.chunks_exact(b)).zip(sb.chunks_exact(b))
+        {
+            for s in 0..b {
+                dc[s] += ca[s] * ac[s] + cb[s] * bc[s];
+            }
+        }
+        idx += 2;
+    }
+    if idx < cols.len() {
+        let cv = &vals[idx * b..(idx + 1) * b];
+        let sv = &src(cols[idx] as usize)[..len];
+        for (dc, ac) in dst.chunks_exact_mut(b).zip(sv.chunks_exact(b)) {
+            for s in 0..b {
+                dc[s] += cv[s] * ac[s];
+            }
+        }
+    }
+}
+
+/// Panel form of [`axpy`] with a per-lane coefficient vector:
+/// `dst[c·b + s] += coef[s] · src[c·b + s]` over
+/// `min(dst.len(), src.len())` panel elements. Lane `s` sees exactly the
+/// arithmetic of `axpy(dst_lane_s, coef[s], src_lane_s)` — including for
+/// `coef[s] == 0.0`, which adds a signed zero on finite data (normalized
+/// to `+0.0` by the next [`scale_flush_panel`]) but turns a non-finite
+/// source element into NaN (`0·∞`), surfacing it rather than masking it.
+#[inline]
+pub fn axpy_panel(dst: &mut [f32], coef: &[f32], src: &[f32], b: usize) {
+    debug_assert_eq!(coef.len(), b);
+    let len = dst.len().min(src.len());
+    let (dst, src) = (&mut dst[..len], &src[..len]);
+    for (dc, sc) in dst.chunks_exact_mut(b).zip(src.chunks_exact(b)) {
+        for s in 0..b {
+            dc[s] += coef[s] * sc[s];
+        }
+    }
+}
+
+/// Panel form of [`scale_flush`] with a per-lane gate vector:
+/// `row[c·b + s] = row[c·b + s] · g[s]`, flushed per the [`FLUSH_EPS`]
+/// invariant (non-finite values always survive).
+#[inline]
+pub fn scale_flush_panel(row: &mut [f32], g: &[f32], b: usize) {
+    debug_assert_eq!(g.len(), b);
+    for rc in row.chunks_exact_mut(b) {
+        for s in 0..b {
+            let v = rc[s] * g[s];
+            rc[s] = if v.abs() < FLUSH_EPS { 0.0 } else { v };
+        }
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +367,55 @@ mod tests {
         }
     }
 
+    /// The `chunks_exact` unrolling must be bit-identical to the plain
+    /// element loop at every row length around the LANES boundary.
+    #[test]
+    fn unrolled_kernels_bit_match_plain_loops_at_all_tail_lengths() {
+        for len in 0..(3 * LANES + 3) {
+            let src_rows: Vec<Vec<f32>> = (0..5)
+                .map(|r| (0..len).map(|c| ((r * 31 + c * 7) as f32).sin()).collect())
+                .collect();
+            let jlist: Vec<(u32, f32)> =
+                (0..5).map(|i| (i as u32, 0.9 - 0.37 * i as f32)).collect();
+            let mut dst = vec![0.0f32; len];
+            fused_gather(&mut dst, &jlist, |r| &src_rows[r]);
+            // plain reference with the same pair-consumption order
+            let mut reference = vec![0.0f32; len];
+            for i in 0..len {
+                let mut v = jlist[0].1 * src_rows[0][i] + jlist[1].1 * src_rows[1][i];
+                v += jlist[2].1 * src_rows[2][i] + jlist[3].1 * src_rows[3][i];
+                v += jlist[4].1 * src_rows[4][i];
+                reference[i] = v;
+            }
+            for (a, b) in dst.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits(), "len {len}");
+            }
+
+            let mut d1 = src_rows[0].clone();
+            let mut d2 = src_rows[0].clone();
+            axpy(&mut d1, 1.7, &src_rows[1]);
+            for (d, s) in d2.iter_mut().zip(&src_rows[1]) {
+                *d += 1.7 * s;
+            }
+            assert_eq!(
+                d1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                d2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+
+            let mut r1 = src_rows[2].clone();
+            let mut r2 = src_rows[2].clone();
+            scale_flush(&mut r1, 0.3);
+            for r in r2.iter_mut() {
+                let v = *r * 0.3;
+                *r = if v.abs() < FLUSH_EPS { 0.0 } else { v };
+            }
+            assert_eq!(
+                r1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                r2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
     #[test]
     fn axpy_and_scatter() {
         let mut d = vec![1.0f32, 2.0, 3.0];
@@ -181,6 +433,73 @@ mod tests {
         assert_eq!(row, vec![1.0, 0.0, -2.0, 0.0]);
     }
 
+    /// Flush-invariant property: an empty row is a no-op, an
+    /// all-below-threshold row flushes to canonical `+0.0` everywhere
+    /// (including `-0.0` inputs), and every surviving element is exactly
+    /// `row[i] * g`.
+    #[test]
+    fn scale_flush_edge_rows() {
+        let mut empty: Vec<f32> = vec![];
+        scale_flush(&mut empty, 0.5);
+        assert!(empty.is_empty());
+
+        let mut tiny: Vec<f32> = (0..19)
+            .map(|i| if i % 2 == 0 { 1e-33 } else { -1e-38 })
+            .collect();
+        tiny.push(-0.0);
+        scale_flush(&mut tiny, 0.9);
+        for v in &tiny {
+            assert_eq!(v.to_bits(), 0.0f32.to_bits(), "flush must produce +0.0");
+        }
+
+        let mut mixed: Vec<f32> = vec![3.0, 1e-35, -2.5, 5e-31, 0.25];
+        let expect: Vec<f32> = mixed
+            .iter()
+            .map(|&x| {
+                let v = x * 0.5;
+                if v.abs() < FLUSH_EPS {
+                    0.0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        scale_flush(&mut mixed, 0.5);
+        assert_eq!(
+            mixed.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            expect.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    /// Non-finite values must never be silently dropped: NaN and ±∞ pass
+    /// through the flush gate (their `abs()` compares false against any
+    /// threshold), and a zero gate over ±∞ surfaces NaN rather than
+    /// producing a clean zero.
+    #[test]
+    fn scale_flush_surfaces_non_finite_values() {
+        let mut row = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0];
+        scale_flush(&mut row, 0.5);
+        assert!(row[0].is_nan(), "NaN was dropped by the flush gate");
+        assert_eq!(row[1], f32::INFINITY);
+        assert_eq!(row[2], f32::NEG_INFINITY);
+        assert_eq!(row[3], 0.5);
+
+        // zero gate × infinity = NaN (surfaced), × NaN = NaN, × finite = 0
+        let mut row = vec![f32::INFINITY, f32::NAN, 7.0];
+        scale_flush(&mut row, 0.0);
+        assert!(row[0].is_nan() && row[1].is_nan());
+        assert_eq!(row[2], 0.0);
+
+        // long rows: the unrolled body and the tail behave identically
+        let mut long = vec![1.0f32; 2 * LANES + 3];
+        long[1] = f32::NAN;
+        long[LANES] = f32::INFINITY;
+        long[2 * LANES + 2] = f32::NAN;
+        scale_flush(&mut long, 1.0);
+        assert!(long[1].is_nan() && long[2 * LANES + 2].is_nan());
+        assert_eq!(long[LANES], f32::INFINITY);
+    }
+
     #[test]
     fn dots_accumulate_left_to_right() {
         let x = [1.0f32, 2.0, 3.0];
@@ -188,5 +507,116 @@ mod tests {
         assert_eq!(acc, 1.0 + 2.0 + 12.0);
         let acc = dot_dense_acc(acc, &[1.0, 1.0, 1.0], &x);
         assert_eq!(acc, 15.0 + 6.0);
+    }
+
+    // -- panel kernels ----------------------------------------------------
+
+    /// Lane `s` of every panel kernel must be bit-identical to the scalar
+    /// kernel run on that lane alone with the same structural list.
+    #[test]
+    fn panel_kernels_lane_bit_match_scalar_kernels() {
+        let b = 3;
+        let pc = 2 * LANES + 5;
+        let n = 6;
+        // lane-interleaved source panel + per-lane deinterleaved copies
+        let panel: Vec<f32> =
+            (0..n * pc * b).map(|i| ((i * 37 % 101) as f32 * 0.11 - 3.0).sin()).collect();
+        let lane_rows = |s: usize| -> Vec<Vec<f32>> {
+            (0..n)
+                .map(|k| (0..pc).map(|c| panel[(k * pc + c) * b + s]).collect())
+                .collect()
+        };
+        let cols: Vec<u32> = vec![0, 2, 3, 5, 1];
+        // per-lane coefficients, entry-major — include an exact zero
+        let vals: Vec<f32> = (0..cols.len() * b)
+            .map(|i| if i == 4 { 0.0 } else { 0.8 - 0.13 * i as f32 })
+            .collect();
+
+        let mut dst = vec![0.0f32; pc * b];
+        gather_panel(&mut dst, &cols, &vals, |k| &panel[k * pc * b..(k + 1) * pc * b], b);
+        for s in 0..b {
+            let rows = lane_rows(s);
+            let jlist: Vec<(u32, f32)> =
+                cols.iter().enumerate().map(|(e, &c)| (c, vals[e * b + s])).collect();
+            let mut lane_dst = vec![0.0f32; pc];
+            fused_gather(&mut lane_dst, &jlist, |k| &rows[k]);
+            for c in 0..pc {
+                assert_eq!(
+                    dst[c * b + s].to_bits(),
+                    lane_dst[c].to_bits(),
+                    "gather_panel lane {s} col {c}"
+                );
+            }
+        }
+
+        // empty structural list zeroes the panel row
+        let mut z = vec![5.0f32; pc * b];
+        gather_panel(&mut z, &[], &[], |_| unreachable!(), b);
+        assert!(z.iter().all(|&v| v == 0.0));
+
+        // axpy_panel
+        let coef = [0.7f32, 0.0, -1.3];
+        let mut pd = dst.clone();
+        let src = &panel[..pc * b];
+        axpy_panel(&mut pd, &coef, src, b);
+        for s in 0..b {
+            let mut lane_d: Vec<f32> = (0..pc).map(|c| dst[c * b + s]).collect();
+            let lane_s: Vec<f32> = (0..pc).map(|c| src[c * b + s]).collect();
+            axpy(&mut lane_d, coef[s], &lane_s);
+            for c in 0..pc {
+                assert_eq!(
+                    pd[c * b + s].to_bits(),
+                    lane_d[c].to_bits(),
+                    "axpy_panel lane {s} col {c}"
+                );
+            }
+        }
+
+        // scale_flush_panel (after a zero-coefficient axpy the signed zeros
+        // must normalize identically on both paths)
+        let g = [0.4f32, 0.0, 1.0];
+        let mut pf = pd.clone();
+        scale_flush_panel(&mut pf, &g, b);
+        for s in 0..b {
+            let mut lane: Vec<f32> = (0..pc).map(|c| pd[c * b + s]).collect();
+            scale_flush(&mut lane, g[s]);
+            for c in 0..pc {
+                assert_eq!(
+                    pf[c * b + s].to_bits(),
+                    lane[c].to_bits(),
+                    "scale_flush_panel lane {s} col {c}"
+                );
+            }
+        }
+    }
+
+    /// Width-1 panels are the degenerate batch: every panel kernel must be
+    /// bit-identical to its scalar counterpart at `b = 1`.
+    #[test]
+    fn panel_kernels_at_width_one_match_scalar_exactly() {
+        let pc = LANES + 3;
+        let n = 4;
+        let panel: Vec<f32> = (0..n * pc).map(|i| (i as f32 * 0.77).cos()).collect();
+        let cols: Vec<u32> = vec![3, 0, 2];
+        let vals: Vec<f32> = vec![1.5, -0.25, 0.0];
+        let mut a = vec![0.0f32; pc];
+        let mut bb = vec![0.0f32; pc];
+        gather_panel(&mut a, &cols, &vals, |k| &panel[k * pc..(k + 1) * pc], 1);
+        let jlist: Vec<(u32, f32)> =
+            cols.iter().zip(&vals).map(|(&c, &v)| (c, v)).collect();
+        fused_gather(&mut bb, &jlist, |k| &panel[k * pc..(k + 1) * pc]);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            bb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+
+        axpy_panel(&mut a, &[0.9], &panel[..pc], 1);
+        axpy(&mut bb, 0.9, &panel[..pc]);
+        scale_flush_panel(&mut a, &[0.21], 1);
+        scale_flush(&mut bb, 0.21);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            bb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 }

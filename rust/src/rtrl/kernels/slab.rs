@@ -246,6 +246,151 @@ impl JacobianSlab {
     }
 }
 
+/// The step Jacobian of one layer for a **batch** of sessions sharing one
+/// weight+mask set: structure built once, values filled once per lane.
+///
+/// In parameter-sparsity mode the slab's structure is value-independent —
+/// every row is built, own columns are the mask's `kept_cols` (or empty on
+/// the first step after a reset, when the previous influence panel is all
+/// zero), and the cross block is structurally dense. N sessions stepping
+/// the same weights therefore share one structure per `(layer, step)`:
+/// [`BatchedSlab::build_structure`] lays out the CSR shell, then
+/// [`BatchedSlab::fill_lane`] writes each session's Jacobian values into
+/// lane-interleaved value panels (`own_vals[e*B + s]` is entry `e` of lane
+/// `s`) via the cell's strided column fillers. The fused panel kernels
+/// ([`rowops::gather_panel`](super::rowops::gather_panel) and friends) then
+/// advance all N influence panels in one pass per row.
+///
+/// The returned [`SlabCounts`] are **per lane**: op accounting charges each
+/// session the same Jacobian cost it would pay solo, whether the structure
+/// was built once or N times — amortization shows up in wall time, never
+/// in charged ops.
+#[derive(Debug, Clone, Default)]
+pub struct BatchedSlab {
+    n: usize,
+    batch: usize,
+    /// CSR row pointers over all `n` rows (`len = n + 1`).
+    own_ptr: Vec<u32>,
+    own_cols: Vec<u32>,
+    /// Own values, entry-major / lane-minor: `own_vals[e*batch + s]`.
+    own_vals: Vec<f32>,
+    cross_cols: Vec<u32>,
+    /// Cross values, `(row, col)`-major / lane-minor:
+    /// `cross_vals[(k*w + j)*batch + s]`.
+    cross_vals: Vec<f32>,
+}
+
+impl BatchedSlab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lay out the shared sparsity structure for one layer and batch width.
+    /// All `n` rows are built. `own_kept` selects the mask's kept columns
+    /// per row (false → no own block, the first post-reset step);
+    /// `cross_all` selects the full `n_in` cross block (false → no cross
+    /// block, layer 0). Value panels are resized and zeroed. Returns the
+    /// **per-lane** entry counts.
+    pub fn build_structure(
+        &mut self,
+        cell: &RnnCell,
+        own_kept: bool,
+        cross_all: bool,
+        batch: usize,
+    ) -> SlabCounts {
+        assert!(batch >= 1, "batch width must be at least 1");
+        let n = cell.n();
+        self.n = n;
+        self.batch = batch;
+        self.own_ptr.clear();
+        self.own_cols.clear();
+        self.own_ptr.push(0);
+        for k in 0..n {
+            if own_kept {
+                self.own_cols.extend_from_slice(cell.kept_cols(k));
+            }
+            self.own_ptr.push(self.own_cols.len() as u32);
+        }
+        self.own_vals.clear();
+        self.own_vals.resize(self.own_cols.len() * batch, 0.0);
+
+        self.cross_cols.clear();
+        if cross_all {
+            self.cross_cols.extend(0..cell.n_in() as u32);
+        }
+        self.cross_vals.clear();
+        self.cross_vals.resize(n * self.cross_cols.len() * batch, 0.0);
+        SlabCounts {
+            own_entries: self.own_cols.len() as u64,
+            cross_entries: (n * self.cross_cols.len()) as u64,
+        }
+    }
+
+    /// Fill lane `s`'s Jacobian values from one session's step scratch.
+    /// The cell must match the one the structure was built for.
+    pub fn fill_lane(&mut self, lane: usize, cell: &RnnCell, sl: &CellScratch) {
+        let b = self.batch;
+        debug_assert!(lane < b);
+        for k in 0..self.n {
+            let (s, e) = (self.own_ptr[k] as usize, self.own_ptr[k + 1] as usize);
+            if s == e {
+                continue;
+            }
+            cell.fill_dv_da_cols_strided(
+                sl,
+                k,
+                &self.own_cols[s..e],
+                &mut self.own_vals[s * b + lane..e * b],
+                b,
+            );
+        }
+        let w = self.cross_cols.len();
+        if w > 0 {
+            for k in 0..self.n {
+                cell.fill_dv_dx_cols_strided(
+                    sl,
+                    k,
+                    &self.cross_cols,
+                    &mut self.cross_vals[k * w * b + lane..(k + 1) * w * b],
+                    b,
+                );
+            }
+        }
+    }
+
+    /// Batch width the structure was built for.
+    #[inline]
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Own-layer row `k`: `(shared column indices, lane-interleaved
+    /// values)` — `values[e*batch + s]` is entry `e` of lane `s`.
+    #[inline]
+    pub fn own_row(&self, k: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.own_ptr[k] as usize, self.own_ptr[k + 1] as usize);
+        (&self.own_cols[s..e], &self.own_vals[s * self.batch..e * self.batch])
+    }
+
+    /// The shared cross-block column list (lower-layer unit indices).
+    #[inline]
+    pub fn cross_cols(&self) -> &[u32] {
+        &self.cross_cols
+    }
+
+    /// Cross-layer values of row `k`, `(col)`-major / lane-minor:
+    /// `row[j*batch + s]`. Empty when no cross block was built.
+    #[inline]
+    pub fn cross_row(&self, k: usize) -> &[f32] {
+        let w = self.cross_cols.len();
+        if w == 0 {
+            return &[];
+        }
+        let b = self.batch;
+        &self.cross_vals[k * w * b..(k + 1) * w * b]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -369,5 +514,73 @@ mod tests {
         assert!(!slab.has_row(0));
         assert!(slab.cross_cols().is_empty());
         assert_eq!(slab.own_row(2).0, &[2]);
+    }
+
+    /// Every lane of a batched slab must carry bit-identical values to a
+    /// solo [`JacobianSlab`] built from that lane's scratch with the same
+    /// structural selects — and the per-lane counts must match too.
+    #[test]
+    fn batched_slab_lanes_bit_match_solo_slabs() {
+        let mut rng = Pcg64::new(21);
+        let mask = MaskPattern::random(7, 7, 0.45, &mut rng);
+        let cell = RnnCell::egru(7, 3, 0.05, 0.3, 0.9, Some(mask), &mut rng);
+        let scratches: Vec<CellScratch> = (0..3).map(|i| forward(&cell, 30 + i)).collect();
+
+        let mut batched = BatchedSlab::new();
+        let bcounts = batched.build_structure(&cell, true, true, scratches.len());
+        for (lane, s) in scratches.iter().enumerate() {
+            batched.fill_lane(lane, &cell, s);
+        }
+
+        let mut solo = JacobianSlab::new();
+        for (lane, s) in scratches.iter().enumerate() {
+            let counts =
+                solo.build(&cell, s, RowSelect::All, OwnSelect::Kept, CrossSelect::All);
+            assert_eq!(counts.own_entries, bcounts.own_entries);
+            assert_eq!(counts.cross_entries, bcounts.cross_entries);
+            for k in 0..7 {
+                let (bcols, bvals) = batched.own_row(k);
+                let (scols, svals) = solo.own_row(k);
+                assert_eq!(bcols, scols);
+                for (e, &v) in svals.iter().enumerate() {
+                    assert_eq!(
+                        bvals[e * batched.batch() + lane].to_bits(),
+                        v.to_bits(),
+                        "own row {k} entry {e} lane {lane}"
+                    );
+                }
+                let bx = batched.cross_row(k);
+                for (j, &v) in solo.cross_row(k).iter().enumerate() {
+                    assert_eq!(
+                        bx[j * batched.batch() + lane].to_bits(),
+                        v.to_bits(),
+                        "cross row {k} col {j} lane {lane}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// `own_kept = false` (the first post-reset step) builds an empty own
+    /// block but keeps the dense cross block; layer-0 style builds skip
+    /// the cross block.
+    #[test]
+    fn batched_slab_structure_flags() {
+        let mut rng = Pcg64::new(23);
+        let cell = RnnCell::vanilla(5, 2, None, &mut rng);
+        let s = forward(&cell, 24);
+        let mut batched = BatchedSlab::new();
+        let counts = batched.build_structure(&cell, false, true, 2);
+        batched.fill_lane(0, &cell, &s);
+        assert_eq!(counts.own_entries, 0);
+        assert_eq!(counts.cross_entries, 10);
+        for k in 0..5 {
+            assert!(batched.own_row(k).0.is_empty());
+            assert_eq!(batched.cross_row(k).len(), 2 * 2);
+        }
+        let counts = batched.build_structure(&cell, true, false, 2);
+        assert_eq!(counts.cross_entries, 0);
+        assert!(batched.cross_cols().is_empty());
+        assert!(counts.own_entries > 0);
     }
 }

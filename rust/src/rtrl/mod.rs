@@ -121,6 +121,7 @@
 //! diffs the per-phase counters between `--threads 1` and `--threads 2`
 //! smoke benches on every PR.
 
+pub mod batch;
 pub mod bptt;
 pub mod column_map;
 pub mod dense;
@@ -131,6 +132,7 @@ pub mod sparse;
 pub mod state;
 pub mod uoro;
 
+pub use batch::BatchedSparse;
 pub use bptt::Bptt;
 pub use column_map::{ColumnMap, StackColumnMap};
 pub use dense::DenseRtrl;
@@ -305,6 +307,14 @@ pub trait GradientEngine: Send {
     /// masks); mismatches in engine name, state version or buffer lengths
     /// fail loudly without partially mutating the engine where practical.
     fn load_state(&mut self, net: &LayerStack, state: &EngineState) -> Result<(), StateError>;
+
+    /// Downcast to the exact sparse engine, when this engine is one. The
+    /// session pool uses this to find sessions eligible for shared-weight
+    /// batched stepping ([`BatchedSparse`]) — only `SparseRtrl` in
+    /// parameter mode qualifies. Default: not a sparse engine.
+    fn as_sparse(&mut self) -> Option<&mut SparseRtrl> {
+        None
+    }
 
     /// Drive one whole supervised sequence through the engine
     /// (`begin_sequence` → `step` × T → `end_sequence`), charging every op

@@ -28,6 +28,8 @@
 //! activity/parameter sparsity skips only *structural zeros* (exact; see
 //! `rtrl::sparse` for the exact block treatment of depth). At depth 1 the
 //! decomposition degenerates to the original single-cell SnAp exactly.
+//! Both engines' slab updates run on the shared lane-chunked row kernels
+//! of [`super::kernels`], so they inherit the SoA-layout speedups too.
 
 use super::kernels::{CrossSelect, JacobianSlab, OwnSelect, RowSelect};
 use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};

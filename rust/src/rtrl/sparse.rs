@@ -47,16 +47,20 @@ use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
 
-/// Snapshot-format version of [`SparseRtrl`] (see [`EngineState`]).
-const STATE_VERSION: u32 = 1;
+/// Snapshot-format version of [`SparseRtrl`] (see [`EngineState`]) —
+/// shared with [`super::BatchedSparse`]'s per-lane snapshots, which speak
+/// the same format.
+pub(crate) const SPARSE_STATE_VERSION: u32 = 1;
+const STATE_VERSION: u32 = SPARSE_STATE_VERSION;
 
 /// Minimum panel elements (claimed rows × panel width) before the row
 /// update fans out over the worker pool. The pool spawns scoped threads
 /// per call (tens of microseconds), so small panels — where a whole step
 /// is only a few microseconds of row work — must stay serial even at
 /// `--threads N`; results are bit-identical either way, so this threshold
-/// is purely a wall-clock guard.
-const PAR_MIN_PANEL_ELEMS: u64 = 32 * 1024;
+/// is purely a wall-clock guard. Shared with [`super::BatchedSparse`],
+/// whose panels count `rows × width × lanes` against the same floor.
+pub(crate) const PAR_MIN_PANEL_ELEMS: u64 = 32 * 1024;
 
 /// One staged panel-row update: row `k` with its filtered Jacobian
 /// coefficient span in the engine's flat `jflat` staging buffer.
@@ -466,6 +470,10 @@ impl GradientEngine for SparseRtrl {
         self.grad_compact.copy_from_slice(gc);
         self.grads.copy_from_slice(g);
         Ok(())
+    }
+
+    fn as_sparse(&mut self) -> Option<&mut SparseRtrl> {
+        Some(self)
     }
 }
 

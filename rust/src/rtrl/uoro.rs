@@ -22,7 +22,9 @@
 //! keeps `E[s̃ ⊗ θ̃] = M` (unbiased) at `O(N² + P)` per step — far cheaper
 //! than exact RTRL but with gradient *variance* that exact sparse RTRL does
 //! not pay. This is the contrast the paper draws: its savings are free of
-//! both bias (SnAp) and variance (UORO).
+//! both bias (SnAp) and variance (UORO). The substitution passes run on
+//! the shared lane-chunked kernels of [`super::kernels`], same as every
+//! other engine family.
 
 use super::kernels::{self, CrossSelect, JacobianSlab, OwnSelect, RowSelect};
 use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};

@@ -15,7 +15,7 @@ use crate::config::ExperimentConfig;
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, LossKind, Readout};
 use crate::optim::{Adam, Optimizer};
-use crate::rtrl::{GradientEngine, Target};
+use crate::rtrl::{GradientEngine, StepResult, Target};
 use crate::telemetry::{SessionTelemetry, TelemetryConfig};
 use crate::train::build;
 use crate::util::Pcg64;
@@ -403,6 +403,20 @@ impl OnlineSession {
             target,
             &mut self.ops,
         );
+        self.absorb_step_result(r, t0)
+    }
+
+    /// Per-session bookkeeping after an engine step that ran *outside*
+    /// `self.engine` — the tail of [`Self::step`], shared with
+    /// [`crate::session::SessionPool::step_batched`]'s shared-weight
+    /// batched path. The engine's post-step state must already be in place
+    /// (serving-mode prediction reads `engine.activations()`, and a policy
+    /// update harvests the engine's gradient).
+    pub(crate) fn absorb_step_result(
+        &mut self,
+        r: StepResult,
+        t0: Option<std::time::Instant>,
+    ) -> StepOutcome {
         self.steps += 1;
         let mut prediction = r.prediction;
         if r.loss.is_none() && self.predict_always {

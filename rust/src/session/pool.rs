@@ -7,6 +7,13 @@
 //! [`crate::rtrl::GradientEngine`] contract requires it), so they migrate
 //! freely between workers; results always return in session order.
 //!
+//! Sessions that share one weight-and-mask set (a fleet of replicas serving
+//! the same frozen model, say) can amortize the per-step influence-structure
+//! work: [`SessionPool::step_batched`] groups lanes with bitwise-identical
+//! parameters and steps each group through one shared-weight
+//! [`crate::rtrl::BatchedSparse`] engine, falling back to per-session
+//! stepping whenever weights diverge (e.g. right after an update).
+//!
 //! Idle users need not stay resident: [`SessionPool::evict`] spills a
 //! session to disk through the snapshot codec facade
 //! ([`crate::session::codec`], binary by default) and
@@ -23,6 +30,9 @@
 use super::codec::{self, SnapshotFormat};
 use super::online::{OnlineSession, StepOutcome};
 use crate::data::StepTarget;
+use crate::metrics::OpCounter;
+use crate::nn::{Loss, Readout};
+use crate::rtrl::{BatchedSparse, SparsityMode, Target};
 use crate::telemetry::names;
 use crate::telemetry::{
     HistogramKind, HistogramSummary, MemoryRecorder, Recorder, SessionStats, TelemetrySnapshot,
@@ -195,6 +205,134 @@ impl SessionPool {
         })
     }
 
+    /// Deliver one event per session like [`SessionPool::step_all`], but
+    /// step sessions that share one weight-and-mask set through a single
+    /// shared-weight [`BatchedSparse`] engine, building each step's
+    /// influence structure once per group instead of once per session.
+    ///
+    /// Grouping is exact, not heuristic: two sessions batch together only
+    /// when both run the parameter-mode sparse engine
+    /// ([`SparsityMode::Parameter`]) and their stacks agree bitwise —
+    /// same shape, same cell dynamics/activation/thresholds, same mask
+    /// pattern, same parameter bits — and their readouts have the same
+    /// width. Everything else (other engines, singleton groups, lanes whose
+    /// engine state cannot be adopted into the group — a fresh lane joining
+    /// a mid-sequence group, say) steps per-session exactly as
+    /// [`SessionPool::step_all`] would.
+    ///
+    /// Sessions keep full ownership of their own learning state: each lane
+    /// is loaded into the group engine from `engine.save_state()`, stepped,
+    /// and written back via `load_state` — so outcomes, op charges and
+    /// update-policy behaviour are per-session, and an update applied by one
+    /// lane diverges its weights so the *next* call regroups around it.
+    /// Batched groups use the group leader's thread knob for the fused
+    /// panel update; influence measurement is on for a group when any lane's
+    /// telemetry requests it.
+    ///
+    /// Unlike `step_all`, sessions do not migrate to worker threads here —
+    /// parallelism comes from inside the fused step (`step_all` remains the
+    /// concurrent path for independently-weighted pools). Outcomes return
+    /// in session order.
+    pub fn step_batched(&mut self, events: &[(Vec<f32>, StepTarget)]) -> Vec<StepOutcome> {
+        assert_eq!(events.len(), self.sessions.len(), "one event per session");
+        let n = self.sessions.len();
+
+        // Group sessions by exact weight identity (ascending index order
+        // within each group, so lane order matches a forward iter_mut scan).
+        let mut keys: Vec<Option<Vec<u64>>> =
+            self.sessions.iter_mut().map(shared_weight_key).collect();
+        let mut groups: Vec<(Vec<u64>, Vec<usize>)> = Vec::new();
+        for (i, slot) in keys.iter_mut().enumerate() {
+            if let Some(k) = slot.take() {
+                match groups.iter_mut().find(|(gk, _)| *gk == k) {
+                    Some((_, g)) => g.push(i),
+                    None => groups.push((k, vec![i])),
+                }
+            }
+        }
+
+        let mut outcomes: Vec<Option<StepOutcome>> = (0..n).map(|_| None).collect();
+        for (_, group) in groups.iter().filter(|(_, g)| g.len() >= 2) {
+            let lanes = group.len();
+            let mut batched = {
+                let leader = &self.sessions[group[0]];
+                let mut b = BatchedSparse::new(leader.net(), leader.n_out(), lanes);
+                b.set_threads(leader.threads);
+                let measure = group.iter().any(|&i| {
+                    self.sessions[i]
+                        .telemetry()
+                        .is_some_and(|t| t.config().measure_influence)
+                });
+                b.set_measure_influence(measure);
+                b
+            };
+
+            // Adopt every lane's engine state. Any refusal (a lane whose
+            // panel activity disagrees with the group's, say) sends the
+            // whole group down the per-session path — correctness first.
+            let adopted = group.iter().enumerate().all(|(lane, &i)| {
+                let st = self.sessions[i].engine.save_state();
+                batched.load_lane(lane, &st).is_ok()
+            });
+            if !adopted {
+                continue;
+            }
+
+            let mut in_group = vec![false; n];
+            for &i in group {
+                in_group[i] = true;
+            }
+
+            // Pass A: borrow each lane's per-session pieces (readout, loss,
+            // op counter) side by side and run the fused step.
+            let mut xs: Vec<&[f32]> = Vec::with_capacity(lanes);
+            let mut targets: Vec<Target<'_>> = Vec::with_capacity(lanes);
+            let mut readouts: Vec<&mut Readout> = Vec::with_capacity(lanes);
+            let mut losses: Vec<&mut Loss> = Vec::with_capacity(lanes);
+            let mut opsv: Vec<&mut OpCounter> = Vec::with_capacity(lanes);
+            let mut t0s: Vec<Option<Instant>> = Vec::with_capacity(lanes);
+            for (i, s) in self.sessions.iter_mut().enumerate() {
+                if !in_group[i] {
+                    continue;
+                }
+                assert_eq!(events[i].0.len(), s.net.n_in(), "input width must match the stack");
+                t0s.push(if s.telemetry.is_some() { Some(Instant::now()) } else { None });
+                let OnlineSession { readout, loss, ops, .. } = s;
+                readouts.push(readout);
+                losses.push(loss);
+                opsv.push(ops);
+                xs.push(&events[i].0);
+                targets.push(events[i].1.as_target());
+            }
+            let results =
+                batched.step(&xs, &targets, &mut readouts, &mut losses, &mut opsv);
+
+            // Pass B: hand each lane its post-step engine state back, then
+            // run the ordinary per-session bookkeeping (serving-mode
+            // prediction, update policy, telemetry). An update applied here
+            // diverges that lane's weights; the next call regroups.
+            for (lane, &i) in group.iter().enumerate() {
+                let st = batched.save_lane(lane);
+                let s = &mut self.sessions[i];
+                let OnlineSession { engine, net, .. } = &mut *s;
+                engine
+                    .load_state(net, &st)
+                    .expect("a batched lane state always round-trips into its own engine");
+                outcomes[i] = Some(s.absorb_step_result(results[lane], t0s[lane]));
+            }
+        }
+
+        // Everyone else — other engine families, singleton weight groups,
+        // groups that refused adoption — steps per-session, in order.
+        for i in 0..n {
+            if outcomes[i].is_none() {
+                let (x, t) = &events[i];
+                outcomes[i] = Some(self.sessions[i].step(x, t.as_target()));
+            }
+        }
+        outcomes.into_iter().map(|o| o.expect("every session stepped")).collect()
+    }
+
     /// Run an arbitrary closure over every session concurrently (e.g. drain
     /// a per-user event queue); results return in session order. The
     /// sessions move to worker threads for the duration of the call.
@@ -232,6 +370,51 @@ impl SessionPool {
         }
         out
     }
+}
+
+/// Exact batchability fingerprint for [`SessionPool::step_batched`]:
+/// `Some(key)` iff the session runs the parameter-mode sparse engine, where
+/// equal keys guarantee bitwise-identical forward/Jacobian arithmetic —
+/// stack shape, cell dynamics and activation (with γ/ε bits), threshold
+/// bits, parameter bits, kept-column structure (the mask), and readout
+/// width all participate. `None` marks the session per-session-only.
+fn shared_weight_key(s: &mut OnlineSession) -> Option<Vec<u64>> {
+    use crate::nn::{Activation, Dynamics};
+    let parameter_mode =
+        matches!(s.engine.as_sparse().map(|e| e.mode()), Some(SparsityMode::Parameter));
+    if !parameter_mode {
+        return None;
+    }
+    let net = s.net();
+    let mut key = Vec::new();
+    key.push(net.layers() as u64);
+    key.push(s.n_out() as u64);
+    for l in 0..net.layers() {
+        let c = net.layer(l);
+        key.push(c.n() as u64);
+        key.push(c.n_in() as u64);
+        key.push(match c.dynamics() {
+            Dynamics::Linear => 0,
+            Dynamics::Gated => 1,
+        });
+        match c.activation() {
+            Activation::Heaviside { gamma, eps } => {
+                key.push(2);
+                key.push(gamma.to_bits() as u64);
+                key.push(eps.to_bits() as u64);
+            }
+            Activation::Tanh => key.push(3),
+        }
+        key.extend(c.theta().iter().map(|v| v.to_bits() as u64));
+        key.push(c.params().len() as u64);
+        key.extend(c.params().iter().map(|v| v.to_bits() as u64));
+        for k in 0..c.n() {
+            let cols = c.kept_cols(k);
+            key.push(cols.len() as u64);
+            key.extend(cols.iter().map(|&x| x as u64));
+        }
+    }
+    Some(key)
 }
 
 #[cfg(test)]
@@ -406,6 +589,171 @@ mod tests {
         let back = TelemetrySnapshot::from_json(&snap.to_json()).unwrap();
         assert_eq!(back, snap);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `n` replicas of ONE parameter-mode learner: same seed → bitwise the
+    /// same weights and mask, so [`SessionPool::step_batched`] can fuse
+    /// them into a single shared-weight group.
+    fn make_shared_pool(n: usize, seed: u64, policy: UpdatePolicy, threads: usize) -> SessionPool {
+        let sessions = (0..n)
+            .map(|_| {
+                let mut cfg = ExperimentConfig::default();
+                cfg.model.hidden = 6;
+                cfg.seed = seed;
+                SessionBuilder::from_config(cfg)
+                    .algorithm(AlgorithmKind::RtrlParam)
+                    .param_sparsity(0.5)
+                    .policy(policy)
+                    .threads(threads)
+                    .build()
+            })
+            .collect();
+        SessionPool::new(sessions, 2)
+    }
+
+    fn shared_events(pool_len: usize, round: usize) -> Vec<(Vec<f32>, StepTarget)> {
+        (0..pool_len)
+            .map(|i| {
+                let x = vec![(round as f32 * 0.4 + i as f32).sin(), 0.3 - 0.1 * i as f32];
+                let t = if round % 3 == 0 {
+                    StepTarget::Class((i + round) % 2)
+                } else {
+                    StepTarget::None
+                };
+                (x, t)
+            })
+            .collect()
+    }
+
+    /// Batched stepping is a pure execution strategy: a shared-weight pool
+    /// driven by `step_batched` tracks a twin pool driven by `step_all`
+    /// step for step (losses agree to float tolerance — the solo engine
+    /// compresses exact structural zeros out of its row lists, so the two
+    /// paths sum in slightly different orders; predictions, counts and
+    /// policy behaviour agree exactly).
+    #[test]
+    fn step_batched_matches_per_session_stepping() {
+        let mut fused = make_shared_pool(4, 42, UpdatePolicy::Manual, 1);
+        let mut solo = make_shared_pool(4, 42, UpdatePolicy::Manual, 1);
+        // the replicas really are one weight set: every pair of keys agrees
+        let keys: Vec<_> =
+            (0..4).map(|i| shared_weight_key(fused.session_mut(i)).unwrap()).collect();
+        assert!(keys.iter().all(|k| *k == keys[0]), "replicas must share a weight key");
+
+        for round in 0..9 {
+            let events = shared_events(4, round);
+            let a = fused.step_batched(&events);
+            let b = solo.step_all(&events);
+            for i in 0..4 {
+                match (a[i].loss, b[i].loss) {
+                    (Some(x), Some(y)) => {
+                        assert!(
+                            (x - y).abs() <= 1e-5 * (1.0 + y.abs()),
+                            "round {round} session {i}: batched loss {x} vs solo {y}"
+                        );
+                    }
+                    (x, y) => assert_eq!(x, y, "round {round} session {i} supervision"),
+                }
+                assert_eq!(a[i].prediction, b[i].prediction, "round {round} session {i}");
+                assert_eq!(a[i].step, b[i].step);
+            }
+        }
+        for i in 0..4 {
+            assert_eq!(fused.session(i).steps(), 9);
+            assert_eq!(fused.session(i).supervised_steps(), 3);
+            assert_eq!(fused.session(i).updates_applied(), 0, "Manual policy never applies");
+        }
+    }
+
+    /// The batched path is bit-identical at any intra-step thread count —
+    /// the same contract the solo engines pin, surfaced at pool level.
+    #[test]
+    fn step_batched_outcomes_independent_of_thread_knob() {
+        let run = |threads: usize| -> Vec<Vec<Option<u32>>> {
+            let mut pool = make_shared_pool(3, 7, UpdatePolicy::Manual, threads);
+            (0..8)
+                .map(|round| {
+                    let outs = pool.step_batched(&shared_events(3, round));
+                    outs.iter().map(|o| o.loss.map(f32::to_bits)).collect()
+                })
+                .collect()
+        };
+        assert_eq!(run(1), run(3), "thread knob changed batched results");
+    }
+
+    /// An update applied by a lane (EveryKSteps(1)) diverges its weights
+    /// from the group; the next `step_batched` call must regroup — here
+    /// every lane updates on a *different* gradient, so all keys split and
+    /// every session falls back to per-session stepping, still correctly.
+    #[test]
+    fn step_batched_regroups_after_update_divergence() {
+        let mut pool = make_shared_pool(3, 11, UpdatePolicy::EveryKSteps(1), 1);
+        // round 0: supervised with per-lane inputs/targets → per-lane updates
+        let events: Vec<(Vec<f32>, StepTarget)> = (0..3)
+            .map(|i| (vec![0.9 - 0.4 * i as f32, -0.2], StepTarget::Class(i % 2)))
+            .collect();
+        let outs = pool.step_batched(&events);
+        assert!(outs.iter().all(|o| o.loss.is_some()));
+        for i in 0..3 {
+            assert_eq!(pool.session(i).updates_applied(), 1, "lane {i} must have updated");
+        }
+        let keys: Vec<_> =
+            (0..3).map(|i| shared_weight_key(pool.session_mut(i)).unwrap()).collect();
+        assert!(keys[0] != keys[1] && keys[1] != keys[2] && keys[0] != keys[2],
+            "independent updates must diverge the weight keys");
+        // later rounds run on the fallback path and keep learning
+        for round in 1..4 {
+            let outs = pool.step_batched(&shared_events(3, round * 3));
+            assert_eq!(outs.len(), 3);
+            assert!(outs.iter().all(|o| o.loss.is_some()));
+        }
+        for i in 0..3 {
+            assert_eq!(pool.session(i).steps(), 4);
+            assert_eq!(pool.session(i).updates_applied(), 4);
+        }
+    }
+
+    /// A mixed pool — a shared-weight pair, an unbatchable engine family,
+    /// and a parameter-mode singleton — steps everyone, in session order.
+    #[test]
+    fn step_batched_mixes_batchable_and_solo_engines() {
+        let mut sessions = Vec::new();
+        for (alg, seed) in [
+            (AlgorithmKind::RtrlParam, 7u64),
+            (AlgorithmKind::RtrlBoth, 7),
+            (AlgorithmKind::RtrlParam, 7),
+            (AlgorithmKind::RtrlParam, 9),
+        ] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.model.hidden = 6;
+            cfg.seed = seed;
+            sessions.push(
+                SessionBuilder::from_config(cfg)
+                    .algorithm(alg)
+                    .param_sparsity(0.5)
+                    .policy(UpdatePolicy::Manual)
+                    .build(),
+            );
+        }
+        let mut pool = SessionPool::new(sessions, 2);
+        assert_eq!(
+            shared_weight_key(pool.session_mut(0)),
+            shared_weight_key(pool.session_mut(2)),
+            "same seed + same algorithm must share a key"
+        );
+        assert_eq!(shared_weight_key(pool.session_mut(1)), None, "RtrlBoth is per-session-only");
+        assert_ne!(
+            shared_weight_key(pool.session_mut(0)),
+            shared_weight_key(pool.session_mut(3)),
+            "different seeds must not group"
+        );
+        for round in 0..6 {
+            let outs = pool.step_batched(&shared_events(4, round));
+            assert_eq!(outs.len(), 4);
+        }
+        for i in 0..4 {
+            assert_eq!(pool.session(i).steps(), 6, "session {i} must step every round");
+        }
     }
 
     /// Pool results are deterministic regardless of worker interleaving: a

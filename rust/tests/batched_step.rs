@@ -1,0 +1,202 @@
+//! The shared-weight batched stepping contract, end to end: lanes stepped
+//! through one [`BatchedSparse`] engine never mix arithmetically, so lane
+//! gradients are **bitwise** identical to the same lane run at any other
+//! batch width or thread count — and the whole batched family stays inside
+//! the exact-RTRL envelope against the dense oracle.
+
+use sparse_rtrl::config::AlgorithmKind;
+use sparse_rtrl::metrics::OpCounter;
+use sparse_rtrl::nn::{LayerStack, Loss, LossKind, Readout, RnnCell};
+use sparse_rtrl::rtrl::{BatchedSparse, GradientEngine, Target};
+use sparse_rtrl::sparse::MaskPattern;
+use sparse_rtrl::train::build_engine;
+use sparse_rtrl::util::Pcg64;
+
+type Seq = Vec<(Vec<f32>, Option<usize>)>;
+
+/// One random sequence with supervised steps in the middle and at the end.
+fn random_sequence(n_in: usize, len: usize, rng: &mut Pcg64) -> Seq {
+    (0..len)
+        .map(|t| {
+            let x: Vec<f32> = (0..n_in).map(|_| rng.normal()).collect();
+            let target = if t == len / 2 || t + 1 == len { Some(t % 2) } else { None };
+            (x, target)
+        })
+        .collect()
+}
+
+/// Per-lane sequences of one shared length, each from its own stream.
+fn lane_sequences(batch: usize, n_in: usize, len: usize, seed: u64) -> Vec<Seq> {
+    (0..batch)
+        .map(|s| {
+            let mut rng = Pcg64::new(seed ^ ((s as u64 + 1) << 32));
+            random_sequence(n_in, len, &mut rng)
+        })
+        .collect()
+}
+
+/// A parameter-sparse EGRU stack (the batched engine's native mode).
+fn masked_egru(n: usize, n_in: usize, keep: f32, seed: u64) -> LayerStack {
+    let mut rng = Pcg64::new(seed);
+    let mask = (keep < 1.0).then(|| MaskPattern::random(n, n, keep, &mut rng));
+    LayerStack::single(RnnCell::egru(n, n_in, 0.05, 0.3, 0.5, mask, &mut rng))
+}
+
+/// Drive `seqs` (one per lane) through a fresh [`BatchedSparse`] and return
+/// every lane's end-of-sequence gradient. The readout is seeded identically
+/// for every lane so a solo run with the same seed is directly comparable.
+fn run_batched(net: &LayerStack, seqs: &[Seq], threads: usize, readout_seed: u64) -> Vec<Vec<f32>> {
+    let batch = seqs.len();
+    let mut rng = Pcg64::new(readout_seed);
+    let proto = Readout::new(2, net.top_n(), &mut rng);
+    let mut readouts: Vec<Readout> = (0..batch).map(|_| proto.clone()).collect();
+    let mut losses: Vec<Loss> = (0..batch).map(|_| Loss::new(LossKind::CrossEntropy, 2)).collect();
+    let mut counters: Vec<OpCounter> = (0..batch).map(|_| OpCounter::new()).collect();
+
+    let mut eng = BatchedSparse::new(net, 2, batch);
+    eng.set_threads(threads);
+    eng.begin_sequence();
+    for t in 0..seqs[0].len() {
+        let xs: Vec<&[f32]> = seqs.iter().map(|s| s[t].0.as_slice()).collect();
+        let targets: Vec<Target<'_>> =
+            seqs.iter().map(|s| s[t].1.map(Target::Class).unwrap_or(Target::None)).collect();
+        let mut rrefs: Vec<&mut Readout> = readouts.iter_mut().collect();
+        let mut lrefs: Vec<&mut Loss> = losses.iter_mut().collect();
+        let mut orefs: Vec<&mut OpCounter> = counters.iter_mut().collect();
+        eng.step(&xs, &targets, &mut rrefs, &mut lrefs, &mut orefs);
+    }
+    eng.end_sequence();
+    (0..batch).map(|s| eng.grads(s).to_vec()).collect()
+}
+
+/// The same lane sequence through a solo engine of `kind`.
+fn run_solo(net: &LayerStack, kind: AlgorithmKind, seq: &Seq, readout_seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(readout_seed);
+    let mut readout = Readout::new(2, net.top_n(), &mut rng);
+    let mut loss = Loss::new(LossKind::CrossEntropy, 2);
+    let mut ops = OpCounter::new();
+    let mut eng = build_engine(kind, net, 2);
+    eng.begin_sequence();
+    for (x, t) in seq {
+        let target = t.map(Target::Class).unwrap_or(Target::None);
+        eng.step(net, &mut readout, &mut loss, x, target, &mut ops);
+    }
+    eng.end_sequence(net, &mut readout, &mut ops);
+    eng.grads().to_vec()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        assert!((x - y).abs() / scale <= tol, "{what}: index {i}: {x} vs {y}");
+    }
+}
+
+/// Lane 0 of a width-4 run is **bitwise** the width-1 run: widening the
+/// batch adds lanes without perturbing a single existing bit.
+#[test]
+fn lane_gradients_are_bitwise_invariant_to_batch_width() {
+    let net = masked_egru(12, 3, 0.5, 7001);
+    let seqs = lane_sequences(4, 3, 9, 7002);
+    let wide = run_batched(&net, &seqs, 1, 7003);
+    let solo_width = run_batched(&net, &seqs[..1], 1, 7003);
+    assert!(wide[0].iter().any(|&g| g != 0.0), "degenerate test: lane-0 gradient is all-zero");
+    assert_eq!(wide[0], solo_width[0], "lane 0 must not feel lanes 1..4");
+    // and every lane individually matches its own width-1 run
+    for (s, seq) in seqs.iter().enumerate() {
+        let alone = run_batched(&net, std::slice::from_ref(seq), 1, 7003);
+        assert_eq!(wide[s], alone[0], "lane {s} differs from its solo-width run");
+    }
+}
+
+/// Threads are a wall-clock knob only, including above the parallel gate:
+/// hidden 32 at full density puts the panel far beyond
+/// `PAR_MIN_PANEL_ELEMS`, so the threaded row update genuinely engages —
+/// and every lane's gradient must still match serial bit for bit.
+#[test]
+fn lane_gradients_are_bitwise_invariant_to_threads_above_par_gate() {
+    let net = masked_egru(32, 3, 1.0, 7101); // dense mask: maximal panel
+    let seqs = lane_sequences(4, 3, 8, 7102);
+    let serial = run_batched(&net, &seqs, 1, 7103);
+    let threaded = run_batched(&net, &seqs, 3, 7103);
+    assert!(serial[0].iter().any(|&g| g != 0.0));
+    for s in 0..seqs.len() {
+        assert_eq!(serial[s], threaded[s], "lane {s} differs between 1 and 3 threads");
+    }
+}
+
+/// Every batched lane stays within exact-RTRL tolerance of the dense
+/// oracle run on that lane's sequence — batching amortizes structure, it
+/// never approximates.
+#[test]
+fn batched_lanes_match_dense_rtrl() {
+    let net = masked_egru(12, 3, 0.5, 7201);
+    let seqs = lane_sequences(3, 3, 9, 7202);
+    let lanes = run_batched(&net, &seqs, 1, 7203);
+    for (s, seq) in seqs.iter().enumerate() {
+        let dense = run_solo(&net, AlgorithmKind::RtrlDense, seq, 7203);
+        assert!(dense.iter().any(|&g| g != 0.0));
+        assert_close(&lanes[s], &dense, 2e-4, &format!("lane {s} vs dense oracle"));
+    }
+}
+
+/// Lane snapshots transplant across engines of different widths
+/// mid-sequence: save two lanes out of a width-3 engine, load them into a
+/// fresh width-2 engine, and both engines finish the sequence with bitwise
+/// identical gradients for the transplanted lanes.
+#[test]
+fn lane_state_transplants_across_batch_widths_mid_sequence() {
+    let net = masked_egru(10, 3, 0.6, 7301);
+    let seqs = lane_sequences(3, 3, 10, 7302);
+    let split = 4;
+
+    let batch = seqs.len();
+    let mut rng = Pcg64::new(7303);
+    let proto = Readout::new(2, net.top_n(), &mut rng);
+    let mut readouts: Vec<Readout> = (0..batch).map(|_| proto.clone()).collect();
+    let mut losses: Vec<Loss> = (0..batch).map(|_| Loss::new(LossKind::CrossEntropy, 2)).collect();
+    let mut counters: Vec<OpCounter> = (0..batch).map(|_| OpCounter::new()).collect();
+    let mut eng = BatchedSparse::new(&net, 2, batch);
+    eng.begin_sequence();
+
+    let drive = |eng: &mut BatchedSparse,
+                 lanes: &[usize],
+                 range: std::ops::Range<usize>,
+                 readouts: &mut [Readout],
+                 losses: &mut [Loss],
+                 counters: &mut [OpCounter],
+                 seqs: &[Seq]| {
+        for t in range.clone() {
+            let xs: Vec<&[f32]> = lanes.iter().map(|&s| seqs[s][t].0.as_slice()).collect();
+            let targets: Vec<Target<'_>> = lanes
+                .iter()
+                .map(|&s| seqs[s][t].1.map(Target::Class).unwrap_or(Target::None))
+                .collect();
+            let mut rrefs: Vec<&mut Readout> = readouts.iter_mut().collect();
+            let mut lrefs: Vec<&mut Loss> = losses.iter_mut().collect();
+            let mut orefs: Vec<&mut OpCounter> = counters.iter_mut().collect();
+            eng.step(&xs, &targets, &mut rrefs, &mut lrefs, &mut orefs);
+        }
+    };
+
+    drive(&mut eng, &[0, 1, 2], 0..split, &mut readouts, &mut losses, &mut counters, &seqs);
+
+    // transplant lanes 2 and 0 (in that order) into a width-2 engine
+    let mut small = BatchedSparse::new(&net, 2, 2);
+    small.load_lane(0, &eng.save_lane(2)).expect("lane 2 snapshot must load");
+    small.load_lane(1, &eng.save_lane(0)).expect("lane 0 snapshot must load");
+    let mut s_readouts = vec![readouts[2].clone(), readouts[0].clone()];
+    let mut s_losses = vec![losses[2].clone(), losses[0].clone()];
+    let mut s_counters = vec![OpCounter::new(), OpCounter::new()];
+
+    let t_len = seqs[0].len();
+    drive(&mut eng, &[0, 1, 2], split..t_len, &mut readouts, &mut losses, &mut counters, &seqs);
+    drive(&mut small, &[2, 0], split..t_len, &mut s_readouts, &mut s_losses, &mut s_counters, &seqs);
+
+    eng.end_sequence();
+    small.end_sequence();
+    assert!(eng.grads(2).iter().any(|&g| g != 0.0));
+    assert_eq!(eng.grads(2), small.grads(0), "transplanted lane 2 diverged");
+    assert_eq!(eng.grads(0), small.grads(1), "transplanted lane 0 diverged");
+}
