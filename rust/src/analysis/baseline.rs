@@ -1,0 +1,135 @@
+//! The committed panic-discipline ratchet: `ANALYSIS_baseline.json`.
+//!
+//! The baseline freezes today's per-file `panic`-rule finding counts.
+//! `analyze --check` fails when any file's live count *exceeds* its frozen
+//! allowance — so new `unwrap()`/`expect()`/`panic!` sites cannot land —
+//! while counts below the allowance pass, and `analyze --fix-baseline`
+//! re-freezes them so the ratchet only ever moves down. Only the `panic`
+//! rule is baselinable; every other rule must be fixed or pragma'd at the
+//! offending line.
+
+use crate::bench::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Schema identifier written into (and required of) the baseline file.
+pub const SCHEMA: &str = "sparse-rtrl/analysis-baseline/v1";
+
+/// Frozen per-file allowances for the `panic` rule.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Baseline {
+    /// Root-relative path → allowed `panic` finding count.
+    pub files: BTreeMap<String, u64>,
+}
+
+impl Baseline {
+    /// Sum of all per-file allowances.
+    pub fn total(&self) -> u64 {
+        let mut t = 0;
+        for v in self.files.values() {
+            t += v;
+        }
+        t
+    }
+
+    /// Allowance for one file (0 when absent).
+    pub fn allowance(&self, rel: &str) -> u64 {
+        self.files.get(rel).copied().unwrap_or(0)
+    }
+
+    /// Build a baseline from live per-file counts (zero counts dropped).
+    pub fn from_counts(counts: &BTreeMap<String, u64>) -> Baseline {
+        let files =
+            counts.iter().filter(|(_, &c)| c > 0).map(|(k, &c)| (k.clone(), c)).collect();
+        Baseline { files }
+    }
+
+    /// Parse a baseline file.
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read baseline {}: {e}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let schema = v.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != SCHEMA {
+            return Err(format!(
+                "{}: schema {schema:?}, this build reads {SCHEMA:?}",
+                path.display()
+            ));
+        }
+        let mut files = BTreeMap::new();
+        match v.get("files") {
+            Some(Json::Obj(m)) => {
+                for (k, count) in m {
+                    let c = count.as_u64().ok_or_else(|| {
+                        format!("{}: files.{k} is not a non-negative integer", path.display())
+                    })?;
+                    files.insert(k.clone(), c);
+                }
+            }
+            _ => return Err(format!("{}: missing `files` object", path.display())),
+        }
+        Ok(Baseline { files })
+    }
+
+    /// Render to the committed JSON form (stable key order, one file per
+    /// line, so ratchet diffs review cleanly).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": \"{}\",\n", json::escape(SCHEMA)));
+        out.push_str("  \"rule\": \"panic\",\n");
+        out.push_str(&format!("  \"total\": {},\n", self.total()));
+        out.push_str("  \"files\": {");
+        for (i, (k, c)) in self.files.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    \"{}\": {c}", json::escape(k)));
+        }
+        if self.files.is_empty() {
+            out.push_str("}\n");
+        } else {
+            out.push_str("\n  }\n");
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// Write the committed form to `path`.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.render())
+            .map_err(|e| format!("cannot write baseline {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_load_roundtrip() {
+        let mut counts = BTreeMap::new();
+        counts.insert("a/b.rs".to_string(), 3u64);
+        counts.insert("c.rs".to_string(), 1u64);
+        counts.insert("dropped.rs".to_string(), 0u64);
+        let b = Baseline::from_counts(&counts);
+        assert_eq!(b.total(), 4);
+        assert_eq!(b.allowance("a/b.rs"), 3);
+        assert_eq!(b.allowance("dropped.rs"), 0);
+        let dir = std::env::temp_dir().join("sparse_rtrl_baseline_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.json");
+        b.save(&path).unwrap();
+        assert_eq!(Baseline::load(&path).unwrap(), b);
+    }
+
+    #[test]
+    fn wrong_schema_is_rejected() {
+        let dir = std::env::temp_dir().join("sparse_rtrl_baseline_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{\"schema\": \"other/v9\", \"files\": {}}").unwrap();
+        let e = Baseline::load(&path).unwrap_err();
+        assert!(e.contains("schema"), "{e}");
+    }
+}

@@ -1,0 +1,344 @@
+//! Comment/string-aware Rust source scanner for the analyzer.
+//!
+//! [`strip_source`] "blanks out" the contents of comments, string literals
+//! and char literals — replacing them with spaces while preserving every
+//! newline and the column of every remaining code character — so the rule
+//! layer (`super::rules`) can pattern-match on *code only* without a full
+//! Rust parser. Line comments are additionally collected verbatim, because
+//! suppression pragmas live in them.
+//!
+//! Handled forms: `//` line comments (incl. `///` and `//!` doc comments),
+//! nested `/* /* */ */` block comments, plain strings with escapes
+//! (including escaped newlines), byte strings `b"…"`, raw strings
+//! `r"…"` / `r#"…"#` / `br##"…"##`, char and byte-char literals, and the
+//! char-literal-vs-lifetime ambiguity (`'a'` vs `&'a str`). The scanner
+//! never fails: malformed input degrades to blanking through end-of-file,
+//! which is safe for a linter (unterminated literals are rustc's job).
+
+/// One `//` comment, verbatim, with the 1-based line it starts on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LineComment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// Result of [`strip_source`]: blanked text plus the collected comments.
+#[derive(Debug, Clone)]
+pub struct Stripped {
+    /// Source with comment/string/char contents replaced by spaces.
+    /// Newline count and code-character positions match the input exactly.
+    pub text: String,
+    /// Every `//`-style comment (doc comments included), in file order.
+    pub comments: Vec<LineComment>,
+}
+
+fn is_word(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn prev_is_word(cs: &[char], i: usize) -> bool {
+    i > 0 && is_word(cs[i - 1])
+}
+
+/// If a raw-string opener (`r"`, `r#"`, `br##"`, …) starts at `i`, return
+/// `(opener_length, hash_count)`.
+fn raw_open(cs: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if cs.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if cs.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while cs.get(j) == Some(&'#') {
+        j += 1;
+        hashes += 1;
+    }
+    if cs.get(j) != Some(&'"') {
+        return None;
+    }
+    Some((j + 1 - i, hashes))
+}
+
+/// Blank out comment and literal contents; collect `//` comments.
+pub fn strip_source(text: &str) -> Stripped {
+    let cs: Vec<char> = text.chars().collect();
+    let n = cs.len();
+    let mut out: Vec<char> = Vec::with_capacity(n);
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            out.push('\n');
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // line comment: collect verbatim, blank in the output
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let mut j = i;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            comments.push(LineComment { line, text: cs[i..j].iter().collect() });
+            for _ in i..j {
+                out.push(' ');
+            }
+            i = j;
+            continue;
+        }
+        // block comment (nested) — delimiters blanked too
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if cs[j] == '/' && j + 1 < n && cs[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && j + 1 < n && cs[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = j.min(n);
+            for &ch in &cs[i..j] {
+                if ch == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+            }
+            i = j;
+            continue;
+        }
+        // raw string: keep the delimiters (code structure), blank the body
+        if (c == 'r' || (c == 'b' && cs.get(i + 1) == Some(&'r'))) && !prev_is_word(&cs, i) {
+            if let Some((open_len, hashes)) = raw_open(&cs, i) {
+                out.extend_from_slice(&cs[i..i + open_len]);
+                let mut j = i + open_len;
+                let closes = |cs: &[char], j: usize| {
+                    cs.get(j) == Some(&'"')
+                        && (1..=hashes).all(|h| cs.get(j + h) == Some(&'#'))
+                };
+                while j < n && !closes(&cs, j) {
+                    if cs[j] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    j += 1;
+                }
+                let close_end = (j + 1 + hashes).min(n);
+                out.extend_from_slice(&cs[j.min(n)..close_end]);
+                i = close_end;
+                continue;
+            }
+        }
+        // byte string b"…"
+        if c == 'b' && cs.get(i + 1) == Some(&'"') && !prev_is_word(&cs, i) {
+            out.push('b');
+            out.push('"');
+            let mut j = i + 2;
+            while j < n && cs[j] != '"' {
+                if cs[j] == '\\' && j + 1 < n {
+                    out.push(' ');
+                    if cs[j + 1] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                j += 1;
+            }
+            if j < n {
+                out.push('"');
+            }
+            i = j + 1;
+            continue;
+        }
+        // plain string
+        if c == '"' {
+            out.push('"');
+            let mut j = i + 1;
+            while j < n && cs[j] != '"' {
+                if cs[j] == '\\' && j + 1 < n {
+                    out.push(' ');
+                    if cs[j + 1] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                j += 1;
+            }
+            if j < n {
+                out.push('"');
+            }
+            i = j + 1;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            // escaped char literal: '\n', '\'', '\u{1F600}', …
+            if cs.get(i + 1) == Some(&'\\') {
+                let mut j = i + 2;
+                while j < n && cs[j] != '\'' && cs[j] != '\n' {
+                    j += 1;
+                }
+                out.push('\'');
+                for _ in i + 1..j {
+                    out.push(' ');
+                }
+                if cs.get(j) == Some(&'\'') {
+                    out.push('\'');
+                    i = j + 1;
+                } else {
+                    i = j;
+                }
+                continue;
+            }
+            // plain char literal: 'x'
+            if i + 2 < n && cs[i + 2] == '\'' && cs[i + 1] != '\n' {
+                out.push('\'');
+                out.push(' ');
+                out.push('\'');
+                i += 3;
+                continue;
+            }
+            // lifetime (or stray quote): emit as-is
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    Stripped { text: out.into_iter().collect(), comments }
+}
+
+/// 1-based line numbers covered by `#[cfg(test)]`-gated items in *stripped*
+/// text (strings already blanked, so braces inside literals cannot
+/// unbalance the match). From each attribute, the scanner brace-matches
+/// the first `{ … }` that follows — in this codebase every occurrence is a
+/// `#[cfg(test)] mod tests { … }` block.
+pub fn test_lines(stripped: &str) -> std::collections::BTreeSet<usize> {
+    let cs: Vec<char> = stripped.chars().collect();
+    let mut lines = std::collections::BTreeSet::new();
+    let mut pos = 0usize;
+    while let Some(attr_end) = find_cfg_test(&cs, pos) {
+        let attr_start = pos_of_attr_start(&cs, attr_end);
+        pos = attr_end;
+        let mut i = attr_end;
+        while i < cs.len() && cs[i] != '{' {
+            i += 1;
+        }
+        if i == cs.len() {
+            break;
+        }
+        let mut depth = 0usize;
+        let mut j = i;
+        while j < cs.len() {
+            if cs[j] == '{' {
+                depth += 1;
+            } else if cs[j] == '}' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        let start_line = 1 + cs[..attr_start].iter().filter(|&&c| c == '\n').count();
+        let end_line = 1 + cs[..j.min(cs.len())].iter().filter(|&&c| c == '\n').count();
+        for l in start_line..=end_line {
+            lines.insert(l);
+        }
+    }
+    lines
+}
+
+/// Find the next `#[cfg(test)]` attribute at or after `from`; returns the
+/// index one past its closing `]`.
+fn find_cfg_test(cs: &[char], from: usize) -> Option<usize> {
+    let mut i = from;
+    while i < cs.len() {
+        if cs[i] == '#' {
+            if let Some(end) = match_cfg_test_at(cs, i) {
+                return Some(end);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+fn skip_ws(cs: &[char], mut i: usize) -> usize {
+    while i < cs.len() && cs[i].is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+fn eat(cs: &[char], i: usize, lit: &str) -> Option<usize> {
+    let mut j = i;
+    for c in lit.chars() {
+        if cs.get(j) != Some(&c) {
+            return None;
+        }
+        j += 1;
+    }
+    Some(j)
+}
+
+fn match_cfg_test_at(cs: &[char], i: usize) -> Option<usize> {
+    let j = eat(cs, i, "#")?;
+    let j = skip_ws(cs, j);
+    let j = eat(cs, j, "[")?;
+    let j = skip_ws(cs, j);
+    let j = eat(cs, j, "cfg")?;
+    let j = skip_ws(cs, j);
+    let j = eat(cs, j, "(")?;
+    let j = skip_ws(cs, j);
+    let j = eat(cs, j, "test")?;
+    let j = skip_ws(cs, j);
+    let j = eat(cs, j, ")")?;
+    let j = skip_ws(cs, j);
+    eat(cs, j, "]")
+}
+
+/// The attribute end index is where matching started from `#`; recover the
+/// `#` position by scanning back (the attribute contains no newline in
+/// practice, but scanning is bounded either way).
+fn pos_of_attr_start(cs: &[char], attr_end: usize) -> usize {
+    let mut i = attr_end;
+    while i > 0 && cs[i - 1] != '#' {
+        i -= 1;
+    }
+    i.saturating_sub(1)
+}

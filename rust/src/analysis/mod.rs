@@ -1,0 +1,174 @@
+//! In-tree static analysis: the determinism and panic-discipline gate
+//! behind `sparse-rtrl analyze`.
+//!
+//! The repo's core claim — gradients and op counts bit-identical across
+//! thread counts, batch widths, and checkpoint round trips — is a property
+//! of *code patterns*, not just of tests that happen to exercise the right
+//! paths. This module makes the forbidden patterns a build-time error: a
+//! dependency-free, comment/string-aware scanner ([`lexer`]) feeds a small
+//! rule engine ([`rules`]), and CI runs `analyze --check` as a blocking
+//! job. No `syn`, no regex crate — the same house style as
+//! [`crate::util::toml_mini`] and [`crate::bench::json`].
+//!
+//! # Rules
+//!
+//! * **`unordered-map`** — `HashMap`/`HashSet` in compute modules.
+//!   Hash-map iteration order varies per process (SipHash keys are
+//!   randomized), so any reduction or traversal over one silently breaks
+//!   run-to-run determinism. Compute code uses `BTreeMap`/`Vec` instead.
+//! * **`ambient-time`** — `Instant`/`SystemTime` in compute modules.
+//!   Clock reads in learner paths either leak into results (fatal) or
+//!   tempt time-based branching (worse). Telemetry latency clocks are the
+//!   legitimate exception and carry a pragma at each site.
+//! * **`ambient-rng`** — `thread_rng`/`from_entropy`/`RandomState`/
+//!   `getrandom` in compute modules. All randomness must flow from a
+//!   seeded [`crate::util::Pcg64`] whose stream position is checkpointed;
+//!   ambient entropy makes replay impossible.
+//! * **`float-reduce`** — `.sum::<f32>()`-style reductions, untyped
+//!   `.sum()` in float context, and float-seeded `fold`s outside the
+//!   pinned-order modules (`util/math.rs`, `rtrl/kernels/rowops.rs`).
+//!   Float addition does not reassociate; scattering ad-hoc reductions
+//!   across the tree is how "exact RTRL" drifts into
+//!   approximately-reproducible RTRL. Integer reductions are exempt.
+//! * **`panic`** — `.unwrap()` / `.expect(` / `panic!`-family macros in
+//!   library code. A long-running session host must surface malformed
+//!   input as `Result`s, not process aborts. Existing sites are frozen in
+//!   the committed `ANALYSIS_baseline.json` ratchet ([`baseline`]): counts
+//!   may only shrink, so new sites fail `--check` while legacy ones are
+//!   paid down over time. This is the only baselinable rule.
+//!
+//! Scope: rules apply to library sources only — `main.rs` and
+//! `#[cfg(test)]` blocks are exempt. Determinism rules are further scoped
+//! to the compute-module prefixes minus an explicit allowlist (see
+//! [`rules::COMPUTE_PREFIXES`] and [`rules::ALLOWLIST`]).
+//!
+//! # Suppression pragmas
+//!
+//! A finding is suppressed only by a same-line or preceding-line comment
+//! of the form
+//!
+//! ```text
+//! // analyze: allow(<rule>[, <rule>…]) -- <reason>
+//! ```
+//!
+//! The reason is mandatory, unknown rule names are `bad-pragma` errors,
+//! and a pragma that suppresses nothing is an `unused-pragma` error — so
+//! stale exemptions cannot accumulate. Neither pragma error is itself
+//! suppressible or baselinable.
+//!
+//! # Workflow
+//!
+//! * `sparse-rtrl analyze` — scan and print findings (never fails).
+//! * `sparse-rtrl analyze --check` — exit non-zero on any violation:
+//!   a non-`panic` finding, a pragma error, or a file over its baseline
+//!   `panic` allowance.
+//! * `sparse-rtrl analyze --fix-baseline` — re-freeze the baseline to the
+//!   current counts (use after paying down panic sites).
+//! * `sparse-rtrl analyze --json out.json` — also write the machine
+//!   report ([`report`]); CI uploads it as `ANALYSIS_report.json`.
+
+pub mod baseline;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use baseline::Baseline;
+pub use report::Report;
+pub use rules::{scan_file, Finding};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// All findings from scanning every `.rs` file under `root`, in
+/// deterministic (path-sorted) order, keyed by root-relative path.
+pub fn analyze_tree(root: &Path) -> Result<BTreeMap<String, Vec<Finding>>, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = BTreeMap::new();
+    for path in files {
+        let rel = rel_name(root, &path)?;
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        out.insert(rel.clone(), scan_file(&rel, &text));
+    }
+    Ok(out)
+}
+
+/// Fold per-file findings + a baseline into the check outcome.
+pub fn build_report(
+    findings: &BTreeMap<String, Vec<Finding>>,
+    baseline: &Baseline,
+) -> Report {
+    let mut panic_counts: BTreeMap<String, u64> = BTreeMap::new();
+    for (rel, fs) in findings {
+        let n = fs.iter().filter(|f| f.rule == "panic").count() as u64;
+        panic_counts.insert(rel.clone(), n);
+    }
+    let mut violations = Vec::new();
+    for (rel, fs) in findings {
+        let over = panic_counts.get(rel).copied().unwrap_or(0) > baseline.allowance(rel);
+        for f in fs {
+            if f.rule != "panic" {
+                violations.push(f.clone());
+            } else if over {
+                let mut f = f.clone();
+                f.message = format!(
+                    "{} — {} site(s) in this file, baseline allows {}",
+                    f.message,
+                    panic_counts.get(rel).copied().unwrap_or(0),
+                    baseline.allowance(rel)
+                );
+                violations.push(f);
+            }
+        }
+    }
+    Report {
+        files_scanned: findings.len(),
+        violations,
+        panic_counts,
+        baseline_total: baseline.total(),
+    }
+}
+
+/// Scan `root` and check against the baseline at `baseline_path`.
+pub fn run_check(root: &Path, baseline_path: &Path) -> Result<Report, String> {
+    let baseline = Baseline::load(baseline_path)?;
+    let findings = analyze_tree(root)?;
+    Ok(build_report(&findings, &baseline))
+}
+
+/// The live panic counts as a fresh baseline (for `--fix-baseline`).
+pub fn fresh_baseline(findings: &BTreeMap<String, Vec<Finding>>) -> Baseline {
+    let mut counts = BTreeMap::new();
+    for (rel, fs) in findings {
+        counts.insert(rel.clone(), fs.iter().filter(|f| f.rule == "panic").count() as u64);
+    }
+    Baseline::from_counts(&counts)
+}
+
+fn rel_name(root: &Path, path: &Path) -> Result<String, String> {
+    let rel = path
+        .strip_prefix(root)
+        .map_err(|_| format!("{} is outside {}", path.display(), root.display()))?;
+    let parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    Ok(parts.join("/"))
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot list {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("cannot list {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

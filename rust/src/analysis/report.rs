@@ -1,0 +1,100 @@
+//! Rendering for analyzer results: the human `file:line: rule: message`
+//! listing and the machine-readable JSON report CI uploads as an artifact.
+
+use super::baseline::Baseline;
+use super::rules::Finding;
+use crate::bench::json::escape;
+use std::collections::BTreeMap;
+
+/// Schema identifier for the JSON report (`--json`).
+pub const SCHEMA: &str = "sparse-rtrl/analysis-report/v1";
+
+/// Everything one `analyze` run produced.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Files scanned (even clean ones).
+    pub files_scanned: usize,
+    /// Findings that are *violations*: every non-`panic` finding, plus all
+    /// `panic` findings in files over their baseline allowance.
+    pub violations: Vec<Finding>,
+    /// Live per-file `panic` finding counts (all of them, baselined or not).
+    pub panic_counts: BTreeMap<String, u64>,
+    /// Total allowance the baseline grants.
+    pub baseline_total: u64,
+}
+
+impl Report {
+    /// True when `--check` should exit 0.
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Live `panic` finding total.
+    pub fn panic_total(&self) -> u64 {
+        let mut t = 0;
+        for v in self.panic_counts.values() {
+            t += v;
+        }
+        t
+    }
+
+    /// The `file:line: rule: message` listing plus a one-line summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.violations {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "analyze: {} file(s), {} violation(s), panic findings {} (baseline {})\n",
+            self.files_scanned,
+            self.violations.len(),
+            self.panic_total(),
+            self.baseline_total,
+        ));
+        out
+    }
+
+    /// The JSON artifact CI uploads.
+    pub fn render_json(&self, baseline: &Baseline) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": \"{}\",\n", escape(SCHEMA)));
+        out.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        out.push_str(&format!("  \"clean\": {},\n", self.clean()));
+        out.push_str("  \"violations\": [");
+        for (i, f) in self.violations.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \
+                 \"message\": \"{}\"}}",
+                escape(&f.file),
+                f.line,
+                escape(&f.rule),
+                escape(&f.message)
+            ));
+        }
+        out.push_str(if self.violations.is_empty() { "],\n" } else { "\n  ],\n" });
+        out.push_str("  \"panic\": {\n");
+        out.push_str(&format!("    \"total\": {},\n", self.panic_total()));
+        out.push_str(&format!("    \"baseline_total\": {},\n", self.baseline_total));
+        out.push_str("    \"files\": {");
+        let entries: Vec<String> = self
+            .panic_counts
+            .iter()
+            .filter(|(_, &c)| c > 0)
+            .map(|(k, c)| {
+                format!(
+                    "\"{}\": {{\"count\": {c}, \"allowed\": {}}}",
+                    escape(k),
+                    baseline.allowance(k)
+                )
+            })
+            .collect();
+        out.push_str(&entries.join(", "));
+        out.push_str("}\n  }\n}\n");
+        out
+    }
+}

@@ -1,0 +1,448 @@
+//! The analyzer's rule engine: pattern checks over stripped source plus
+//! pragma-based suppression. See `super` (module docs) for what each rule
+//! protects and why.
+//!
+//! Scoping model, applied per file from its root-relative path:
+//! * **determinism rules** (`unordered-map`, `ambient-time`, `ambient-rng`)
+//!   fire only inside the compute-module prefixes ([`COMPUTE_PREFIXES`]),
+//!   minus the explicit [`ALLOWLIST`] — observability and harness code may
+//!   read clocks; learner state may not.
+//! * **`float-reduce`** fires in every library file except the pinned-order
+//!   modules ([`FLOAT_PINNED`]), where reduction order is the module's
+//!   documented contract.
+//! * **`panic`** fires in every library file and is the only rule that can
+//!   be absorbed by the committed baseline ratchet (`super::baseline`).
+//! * `main.rs` (the bin target) and `#[cfg(test)]` blocks are exempt from
+//!   all rules.
+
+use super::lexer::{strip_source, test_lines, LineComment};
+use std::collections::BTreeSet;
+
+/// Rule identifiers a pragma may name.
+pub const RULES: [&str; 5] =
+    ["unordered-map", "ambient-time", "ambient-rng", "float-reduce", "panic"];
+
+/// Module prefixes whose code computes or carries learner state — the
+/// determinism rules apply here.
+pub const COMPUTE_PREFIXES: [&str; 8] =
+    ["rtrl/", "nn/", "sparse/", "optim/", "session/", "tensor/", "data/", "metrics/"];
+
+/// Compute-adjacent paths where the determinism rules do *not* apply, each
+/// with the reason. Wall-clock reads and unordered containers are fine in
+/// observability and harness code because nothing there feeds back into
+/// gradients, parameters, or engine state.
+pub const ALLOWLIST: [(&str, &str); 5] = [
+    ("telemetry/", "observability: wall-clock latency is the measurement"),
+    ("bench/", "harness: benchmarks time wall-clock by definition"),
+    ("report/", "rendering only; consumes finished results"),
+    ("coordinator/", "sweep harness: timestamps runs, never gradients"),
+    ("runtime/", "artifact plumbing; no learner state"),
+];
+
+/// Files whose whole contract is a pinned reduction order; `.sum()` /
+/// `fold` over floats is allowed only here.
+pub const FLOAT_PINNED: [&str; 2] = ["util/math.rs", "rtrl/kernels/rowops.rs"];
+
+const UNORDERED_IDENTS: [&str; 2] = ["HashMap", "HashSet"];
+const TIME_IDENTS: [&str; 2] = ["Instant", "SystemTime"];
+const RNG_IDENTS: [&str; 4] = ["thread_rng", "from_entropy", "RandomState", "getrandom"];
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+/// One finding: a rule violation (or a pragma problem) at a source line.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Root-relative path with `/` separators, e.g. `rtrl/sparse.rs`.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id — one of [`RULES`], or `bad-pragma` / `unused-pragma`.
+    pub rule: String,
+    pub message: String,
+}
+
+impl Finding {
+    /// The canonical `file:line: rule: message` form.
+    pub fn render(&self) -> String {
+        format!("{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+fn is_word(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn skip_ws(cs: &[char], mut i: usize) -> usize {
+    while i < cs.len() && cs[i].is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Read the maximal identifier starting at `i` (empty if none).
+fn word_at(cs: &[char], i: usize) -> (usize, String) {
+    let mut j = i;
+    while j < cs.len() && is_word(cs[j]) {
+        j += 1;
+    }
+    (j, cs[i..j].iter().collect())
+}
+
+/// All identifiers in `cs` with their start positions (word-boundary
+/// starts only; runs beginning with a digit are number literals, skipped).
+fn idents(cs: &[char]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < cs.len() {
+        if is_word(cs[i]) && (i == 0 || !is_word(cs[i - 1])) {
+            let (j, w) = word_at(cs, i);
+            if !cs[i].is_ascii_digit() {
+                out.push((i, w));
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn starts(cs: &[char], i: usize, lit: &str) -> bool {
+    let mut j = i;
+    for c in lit.chars() {
+        if cs.get(j) != Some(&c) {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// `.sum::<f32>` / `.product::<f64>` — a typed float reduction.
+fn typed_float_reduce(cs: &[char], dot: usize) -> bool {
+    let i = skip_ws(cs, dot + 1);
+    let (i, w) = word_at(cs, i);
+    if w != "sum" && w != "product" {
+        return false;
+    }
+    let i = skip_ws(cs, i);
+    if !starts(cs, i, "::") {
+        return false;
+    }
+    let i = skip_ws(cs, i + 2);
+    if cs.get(i) != Some(&'<') {
+        return false;
+    }
+    let i = skip_ws(cs, i + 1);
+    let (i, ty) = word_at(cs, i);
+    if ty != "f32" && ty != "f64" {
+        return false;
+    }
+    let i = skip_ws(cs, i);
+    cs.get(i) == Some(&'>')
+}
+
+/// `.fold(` whose next few characters mention a float literal or an
+/// `f32::` / `f64::` constant — a float fold.
+fn float_fold(cs: &[char], dot: usize) -> bool {
+    let i = skip_ws(cs, dot + 1);
+    let (i, w) = word_at(cs, i);
+    if w != "fold" {
+        return false;
+    }
+    let i = skip_ws(cs, i);
+    if cs.get(i) != Some(&'(') {
+        return false;
+    }
+    let window = &cs[i + 1..(i + 1 + 48).min(cs.len())];
+    has_float_literal(window)
+}
+
+/// A float literal (`0.5`, `1f32`) or float-typed path (`f32::MAX`).
+fn has_float_literal(w: &[char]) -> bool {
+    let mut i = 0;
+    while i < w.len() {
+        let boundary = i == 0 || !is_word(w[i - 1]);
+        if boundary && w[i].is_ascii_digit() {
+            let mut j = i;
+            while j < w.len() && w[j].is_ascii_digit() {
+                j += 1;
+            }
+            if w.get(j) == Some(&'.') && w.get(j + 1).is_some_and(|c| c.is_ascii_digit()) {
+                return true;
+            }
+            if (starts(w, j, "f32") || starts(w, j, "f64"))
+                && !w.get(j + 3).is_some_and(|&c| is_word(c))
+            {
+                return true;
+            }
+            i = j;
+            continue;
+        }
+        if boundary && w[i] == 'f' {
+            let (j, ty) = word_at(w, i);
+            if (ty == "f32" || ty == "f64") && starts(w, skip_ws(w, j), "::") {
+                return true;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    false
+}
+
+/// First untyped `.sum()` / `.product()` in a statement segment; flagged
+/// when the segment also mentions `f32` / `f64` (integer sums reassociate
+/// losslessly and are not findings). Returns the char index of the dot.
+fn untyped_reduce_in(seg: &[char]) -> Option<usize> {
+    let mut found = None;
+    for dot in 0..seg.len() {
+        if seg[dot] != '.' {
+            continue;
+        }
+        let i = skip_ws(seg, dot + 1);
+        let (i, w) = word_at(seg, i);
+        if w != "sum" && w != "product" {
+            continue;
+        }
+        let i = skip_ws(seg, i);
+        if seg.get(i) != Some(&'(') {
+            continue;
+        }
+        if seg.get(skip_ws(seg, i + 1)) != Some(&')') {
+            continue;
+        }
+        found = Some(dot);
+        break;
+    }
+    let dot = found?;
+    let floaty = idents(seg).iter().any(|(_, w)| w == "f32" || w == "f64");
+    if floaty {
+        Some(dot)
+    } else {
+        None
+    }
+}
+
+/// `.unwrap()`, `.expect(`, or a `panic!`-family macro at `i`.
+fn panic_at(cs: &[char], i: usize) -> Option<String> {
+    if cs[i] == '.' {
+        let j = skip_ws(cs, i + 1);
+        let (j, w) = word_at(cs, j);
+        if w == "unwrap" {
+            let j = skip_ws(cs, j);
+            if cs.get(j) == Some(&'(') && cs.get(skip_ws(cs, j + 1)) == Some(&')') {
+                return Some("unwrap()".into());
+            }
+        }
+        if w == "expect" && cs.get(skip_ws(cs, j)) == Some(&'(') {
+            return Some("expect(..)".into());
+        }
+        return None;
+    }
+    if is_word(cs[i]) && (i == 0 || !is_word(cs[i - 1])) && !cs[i].is_ascii_digit() {
+        let (j, w) = word_at(cs, i);
+        if PANIC_MACROS.contains(&w.as_str()) && cs.get(skip_ws(cs, j)) == Some(&'!') {
+            return Some(format!("{w}!"));
+        }
+    }
+    None
+}
+
+/// A parsed (or failed) suppression pragma.
+struct Pragma {
+    line: usize,
+    rules: Vec<String>,
+    /// Line the pragma suppresses: its own if it trails code, else the
+    /// next non-blank code line.
+    target: usize,
+    used: bool,
+}
+
+/// A comment is a pragma *candidate* iff it is a plain `//` comment whose
+/// first token is `analyze:`. Doc comments (`///`, `//!`) are never
+/// candidates, so documentation may quote the pragma syntax freely.
+fn pragma_candidate(text: &str) -> Option<&str> {
+    let rest = text.strip_prefix("//")?;
+    if rest.starts_with('/') || rest.starts_with('!') {
+        return None;
+    }
+    let t = rest.trim_start();
+    if t.starts_with("analyze:") {
+        Some(t)
+    } else {
+        None
+    }
+}
+
+/// Parse `analyze: allow(rule, …) -- reason`; `Err` carries the defect.
+fn parse_pragma(t: &str) -> Result<Vec<String>, String> {
+    let t = match t.strip_prefix("analyze:") {
+        Some(t) => t.trim_start(),
+        None => return Err("pragma must start with `analyze:`".into()),
+    };
+    let t = match t.strip_prefix("allow(") {
+        Some(t) => t,
+        None => return Err("expected `allow(<rule, …>)`".into()),
+    };
+    let (inner, rest) = match t.split_once(')') {
+        Some(p) => p,
+        None => return Err("unclosed `allow(`".into()),
+    };
+    let rules: Vec<String> = inner.split(',').map(|r| r.trim().to_string()).collect();
+    if rules.iter().any(|r| r.is_empty()) {
+        return Err("empty rule name in allow(..)".into());
+    }
+    for r in &rules {
+        if !RULES.contains(&r.as_str()) {
+            return Err(format!("unknown rule {r:?} (valid: {})", RULES.join(", ")));
+        }
+    }
+    let rest = rest.trim_start();
+    let reason = match rest.strip_prefix("--") {
+        Some(r) => r.trim(),
+        None => return Err("missing `-- <reason>`".into()),
+    };
+    if reason.is_empty() {
+        return Err("missing `-- <reason>`".into());
+    }
+    Ok(rules)
+}
+
+fn in_compute_scope(rel: &str) -> bool {
+    if ALLOWLIST.iter().any(|(p, _)| rel.starts_with(p)) {
+        return false;
+    }
+    COMPUTE_PREFIXES.iter().any(|p| rel.starts_with(p))
+}
+
+/// Scan one file. `rel` is the root-relative path with `/` separators.
+/// Returns all unsuppressed findings, sorted by line.
+pub fn scan_file(rel: &str, text: &str) -> Vec<Finding> {
+    let stripped = strip_source(text);
+    let tlines = test_lines(&stripped.text);
+    let slines: Vec<&str> = stripped.text.split('\n').collect();
+
+    let compute = in_compute_scope(rel);
+    let is_bin = rel == "main.rs";
+    let pinned = FLOAT_PINNED.contains(&rel);
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut push = |line: usize, rule: &str, message: String| {
+        findings.push(Finding { file: rel.to_string(), line, rule: rule.to_string(), message });
+    };
+
+    for (idx, sl) in slines.iter().enumerate() {
+        let line = idx + 1;
+        if tlines.contains(&line) || is_bin {
+            continue;
+        }
+        let lc: Vec<char> = sl.chars().collect();
+        if compute {
+            for (_, w) in idents(&lc) {
+                if UNORDERED_IDENTS.contains(&w.as_str()) {
+                    push(line, "unordered-map", format!("{w} iterates in hash order"));
+                } else if TIME_IDENTS.contains(&w.as_str()) {
+                    push(line, "ambient-time", format!("{w} reads the ambient clock"));
+                } else if RNG_IDENTS.contains(&w.as_str()) {
+                    push(line, "ambient-rng", format!("{w} draws ambient randomness"));
+                }
+            }
+        }
+        if !pinned {
+            for dot in 0..lc.len() {
+                if lc[dot] != '.' {
+                    continue;
+                }
+                if typed_float_reduce(&lc, dot) {
+                    push(line, "float-reduce", "typed float reduction".into());
+                } else if float_fold(&lc, dot) {
+                    push(line, "float-reduce", "float fold".into());
+                }
+            }
+        }
+        let mut col = 0;
+        while col < lc.len() {
+            if let Some(what) = panic_at(&lc, col) {
+                push(line, "panic", format!("{what} in library code"));
+            }
+            col += 1;
+        }
+    }
+
+    // untyped reduces need statement context, so they scan whole segments
+    if !is_bin && !pinned {
+        let cs: Vec<char> = stripped.text.chars().collect();
+        let mut newlines_before = 0usize;
+        let mut seg_start = 0usize;
+        for i in 0..=cs.len() {
+            let boundary = i == cs.len() || matches!(cs[i], ';' | '{' | '}');
+            if !boundary {
+                continue;
+            }
+            let seg = &cs[seg_start..i];
+            if let Some(dot) = untyped_reduce_in(seg) {
+                let line =
+                    1 + newlines_before + seg[..dot].iter().filter(|&&c| c == '\n').count();
+                if !tlines.contains(&line) {
+                    push(line, "float-reduce", "untyped float reduction".into());
+                }
+            }
+            newlines_before += seg.iter().filter(|&&c| c == '\n').count();
+            seg_start = i + 1;
+        }
+    }
+
+    // pragmas: parse, resolve targets, then apply suppression
+    let code_lines: BTreeSet<usize> = slines
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .map(|(i, _)| i + 1)
+        .collect();
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    for LineComment { line, text } in &stripped.comments {
+        let Some(t) = pragma_candidate(text) else { continue };
+        match parse_pragma(t) {
+            Err(e) => push(*line, "bad-pragma", e),
+            Ok(rules) => {
+                let target = if code_lines.contains(line) {
+                    *line
+                } else {
+                    (*line + 1..=slines.len())
+                        .find(|l| code_lines.contains(l))
+                        .unwrap_or(usize::MAX)
+                };
+                pragmas.push(Pragma { line: *line, rules, target, used: false });
+            }
+        }
+    }
+
+    let mut kept: Vec<Finding> = Vec::new();
+    for f in findings {
+        let mut suppressed = false;
+        if RULES.contains(&f.rule.as_str()) {
+            for p in pragmas.iter_mut() {
+                if p.target == f.line && p.rules.iter().any(|r| r == &f.rule) {
+                    p.used = true;
+                    suppressed = true;
+                }
+            }
+        }
+        if !suppressed {
+            kept.push(f);
+        }
+    }
+    for p in &pragmas {
+        if !p.used {
+            kept.push(Finding {
+                file: rel.to_string(),
+                line: p.line,
+                rule: "unused-pragma".to_string(),
+                message: format!("allow({}) suppresses nothing", p.rules.join(", ")),
+            });
+        }
+    }
+    kept.sort();
+    kept
+}

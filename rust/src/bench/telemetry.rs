@@ -13,6 +13,7 @@ use crate::config::AlgorithmKind;
 use crate::rtrl::Target;
 use crate::session::{OnlineSession, SessionBuilder, UpdatePolicy};
 use crate::telemetry::{HistogramSummary, TelemetryConfig};
+use crate::util::math::sum_f32;
 use crate::util::Pcg64;
 
 /// The rep count the bench run uses.
@@ -95,8 +96,8 @@ pub fn measure(reps: usize) -> TelemetryBenchResult {
         ns_per_step_off: off_best / BENCH_STEPS as u64,
         ns_per_step_on: on_best / BENCH_STEPS as u64,
         points: points.len() as u64,
-        alpha_mean: points.iter().map(|p| p.alpha).sum::<f32>() / n,
-        beta_mean: points.iter().map(|p| p.beta).sum::<f32>() / n,
+        alpha_mean: sum_f32(points.iter().map(|p| p.alpha)) / n,
+        beta_mean: sum_f32(points.iter().map(|p| p.beta)) / n,
         latency_ns: HistogramSummary::from_histogram(tel.latency_histogram()),
     }
 }

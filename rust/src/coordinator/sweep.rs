@@ -7,7 +7,7 @@
 use crate::config::{AlgorithmKind, CellKind, ExperimentConfig};
 use crate::metrics::curve::Curve;
 use crate::train::{build_dataset, Trainer};
-use crate::util::math::{mean, stderr};
+use crate::util::math::{mean, mean_f64, stderr};
 use crate::util::pool;
 
 /// Grid specification for the sweep.
@@ -213,11 +213,10 @@ impl SweepResult {
                     .collect();
                 ArmPoint {
                     iteration: members[0].curve.points[i].iteration,
-                    compute_adjusted_mean: members
-                        .iter()
-                        .map(|r| r.curve.points[i].compute_adjusted)
-                        .sum::<f64>()
-                        / members.len() as f64,
+                    compute_adjusted_mean: mean_f64(
+                        members.iter().map(|r| r.curve.points[i].compute_adjusted),
+                        members.len(),
+                    ),
                     loss_mean: mean(&losses),
                     loss_stderr: stderr(&losses),
                     val_accuracy_mean: mean(&vals),

@@ -118,6 +118,17 @@
 //! a dedicated arm fails the build if op counts differ between
 //! `--threads 1` and `--threads 2`).
 
+//!
+//! ## Static analysis
+//!
+//! The [`analysis`] subsystem (`sparse-rtrl analyze`) is the build-time
+//! guard on the determinism story: a dependency-free scanner that forbids
+//! unordered-map iteration, ambient clocks/RNG, and unpinned float
+//! reductions in compute modules, and ratchets library panic sites down
+//! through the committed `ANALYSIS_baseline.json`. CI runs
+//! `analyze --check` as a blocking job.
+
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

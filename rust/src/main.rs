@@ -45,6 +45,8 @@ USAGE:
   sparse-rtrl report <table1|fig1|fig2> [--n 16] [--layers 1] [--omega 0.8]
   sparse-rtrl stats  (--trace trace.jsonl | --snapshot stats.json) [--check]
   sparse-rtrl artifacts [--dir artifacts]
+  sparse-rtrl analyze [--root src] [--baseline ANALYSIS_baseline.json]
+                      [--check] [--json ANALYSIS_report.json] [--fix-baseline]
   sparse-rtrl config-dump            # print the default config TOML
 
 --threads N sets the worker count for the intra-step RTRL kernels
@@ -64,10 +66,16 @@ observability: stream --trace writes a JSON-lines structured trace
 (schema sparse-rtrl/trace/v1); --metrics-every K samples α/β/loss/op-rate
 windows every K steps (to the trace, or to stderr without --trace).
 `stats` renders either artifact; --check validates without rendering.
+
+analyze scans the library sources for determinism and panic-discipline
+violations (see src/analysis/). --check exits non-zero on any violation;
+--fix-baseline re-freezes the panic ratchet after paying sites down;
+--json writes the machine report CI uploads.
 ";
 
 /// Subcommand list for unknown-command errors (kept in sync with `main`).
-const SUBCOMMANDS: &str = "stream, train, sweep, bench, report, stats, artifacts, config-dump";
+const SUBCOMMANDS: &str =
+    "stream, train, sweep, bench, report, stats, artifacts, analyze, config-dump";
 
 /// Engine names from the single source of truth ([`AlgorithmKind::all`],
 /// the same registry `build_engine` dispatches on).
@@ -603,6 +611,55 @@ fn cmd_artifacts(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_analyze(mut args: Args) -> Result<()> {
+    // Default roots: `rust/src` from the repo root, `src` from `rust/`
+    // (the CI working directory). The baseline lives next to the `rust`
+    // directory either way.
+    let root: PathBuf = match args.get("root") {
+        Some(r) => r.into(),
+        None if PathBuf::from("rust/src").is_dir() => "rust/src".into(),
+        None => "src".into(),
+    };
+    let baseline_path: PathBuf = match args.get("baseline") {
+        Some(b) => b.into(),
+        None => root
+            .parent()
+            .map(|p| p.join("../ANALYSIS_baseline.json"))
+            .unwrap_or_else(|| "ANALYSIS_baseline.json".into()),
+    };
+    let check = args.get_bool("check").map_err(err)?;
+    let fix = args.get_bool("fix-baseline").map_err(err)?;
+    let json_out: Option<PathBuf> = args.get("json").map(PathBuf::from);
+    args.finish().map_err(err)?;
+
+    let findings = sparse_rtrl::analysis::analyze_tree(&root).map_err(err)?;
+    if fix {
+        let old_total = sparse_rtrl::analysis::Baseline::load(&baseline_path)
+            .map(|b| b.total())
+            .unwrap_or(0);
+        let fresh = sparse_rtrl::analysis::fresh_baseline(&findings);
+        fresh.save(&baseline_path).map_err(err)?;
+        println!(
+            "baseline {}: panic allowance {old_total} -> {} across {} file(s)",
+            baseline_path.display(),
+            fresh.total(),
+            fresh.files.len()
+        );
+    }
+    let baseline = sparse_rtrl::analysis::Baseline::load(&baseline_path).map_err(err)?;
+    let report = sparse_rtrl::analysis::build_report(&findings, &baseline);
+    print!("{}", report.render_text());
+    if let Some(path) = json_out {
+        std::fs::write(&path, report.render_json(&baseline))
+            .map_err(|e| anyhow!("cannot write {}: {e}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
+    if check && !report.clean() {
+        bail!("analyze --check: {} violation(s)", report.violations.len());
+    }
+    Ok(())
+}
+
 fn err(e: String) -> anyhow::Error {
     anyhow!(e)
 }
@@ -617,6 +674,7 @@ fn main() -> Result<()> {
         Some("report") => cmd_report(args),
         Some("stats") => cmd_stats(args),
         Some("artifacts") => cmd_artifacts(args),
+        Some("analyze") => cmd_analyze(args),
         Some("config-dump") => {
             print!("{}", ExperimentConfig::default().to_toml());
             Ok(())

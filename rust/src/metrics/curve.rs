@@ -1,4 +1,10 @@
 //! Learning-curve records: the per-iteration rows behind Fig. 3's panels.
+//!
+//! This module only *carries* per-iteration values; cross-seed aggregation
+//! (mean curves over sweep members) lives in [`crate::coordinator::sweep`]
+//! and runs through the pinned-order reducers in [`crate::util::math`]
+//! (`mean` / `mean_f64`), so summary statistics are bit-reproducible like
+//! everything else.
 
 /// One logged training iteration.
 #[derive(Debug, Clone)]

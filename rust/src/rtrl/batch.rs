@@ -425,7 +425,7 @@ impl BatchedSparse {
     /// was parameter-mode) are rejected — callers fall back to solo
     /// stepping on any error.
     pub fn load_lane(&mut self, lane: usize, state: &EngineState) -> Result<(), StateError> {
-        state.expect("rtrl-param", SPARSE_STATE_VERSION)?;
+        state.require("rtrl-param", SPARSE_STATE_VERSION)?;
         if state.scalar("layers")? != self.panels.len() as u64 {
             return Err(StateError(format!(
                 "snapshot has {} influence layers, batched engine has {}",

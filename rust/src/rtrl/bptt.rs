@@ -277,7 +277,7 @@ impl GradientEngine for Bptt {
             *off += len;
             s
         }
-        state.expect(self.name(), STATE_VERSION)?;
+        state.require(self.name(), STATE_VERSION)?;
         if net.total_units() != self.n_total || net.n_in() != self.n_in {
             return Err(StateError("stack does not match the engine's dimensions".into()));
         }

@@ -219,7 +219,7 @@ impl GradientEngine for DenseRtrl {
     }
 
     fn load_state(&mut self, _net: &LayerStack, state: &EngineState) -> Result<(), StateError> {
-        state.expect(self.name(), STATE_VERSION)?;
+        state.require(self.name(), STATE_VERSION)?;
         let m = state.floats_exact("m_cur", self.m_cur.len())?;
         let a = state.floats_exact("a_prev", self.a_prev.len())?;
         let g = state.floats_exact("grads", self.grads.len())?;

@@ -118,7 +118,7 @@ fn snap_load(
     a_prev: &mut [f32],
     grads: &mut [f32],
 ) -> Result<(), StateError> {
-    state.expect(name, STATE_VERSION)?;
+    state.require(name, STATE_VERSION)?;
     let a = state.floats_exact("a_prev", a_prev.len())?;
     let g = state.floats_exact("grads", grads.len())?;
     inf.restore_cur(state.floats("inf_cur")?).map_err(StateError)?;

@@ -450,7 +450,7 @@ impl GradientEngine for SparseRtrl {
     }
 
     fn load_state(&mut self, _net: &LayerStack, state: &EngineState) -> Result<(), StateError> {
-        state.expect(self.name(), STATE_VERSION)?;
+        state.require(self.name(), STATE_VERSION)?;
         if state.scalar("layers")? != self.buffers.layers() as u64 {
             return Err(StateError(format!(
                 "snapshot has {} influence layers, engine has {}",

@@ -118,7 +118,7 @@ impl EngineState {
     }
 
     /// Verify the snapshot header matches the restoring engine.
-    pub fn expect(&self, engine: &str, version: u32) -> Result<(), StateError> {
+    pub fn require(&self, engine: &str, version: u32) -> Result<(), StateError> {
         if self.engine != engine {
             return Err(StateError(format!(
                 "snapshot is for engine {:?}, cannot restore into {engine:?}",
@@ -157,10 +157,10 @@ mod tests {
     #[test]
     fn header_mismatches_are_loud() {
         let st = EngineState::new("uoro", 1);
-        assert!(st.expect("uoro", 1).is_ok());
-        let e = st.expect("bptt", 1).unwrap_err();
+        assert!(st.require("uoro", 1).is_ok());
+        let e = st.require("bptt", 1).unwrap_err();
         assert!(e.to_string().contains("uoro"), "{e}");
-        let e = st.expect("uoro", 2).unwrap_err();
+        let e = st.require("uoro", 2).unwrap_err();
         assert!(e.to_string().contains("version"), "{e}");
     }
 

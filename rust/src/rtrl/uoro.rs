@@ -30,6 +30,7 @@ use super::kernels::{self, CrossSelect, JacobianSlab, OwnSelect, RowSelect};
 use super::{supervised_step, EngineState, GradientEngine, StateError, StepResult, Target};
 use crate::metrics::{OpCounter, Phase};
 use crate::nn::{LayerStack, Loss, Readout, StackScratch};
+use crate::util::math::{dot, l2_norm};
 use crate::util::Pcg64;
 
 /// Snapshot-format version of [`Uoro`] (see [`EngineState`]).
@@ -209,9 +210,9 @@ impl GradientEngine for Uoro {
         }
         ops.clear_layer();
         // variance-balancing scales
-        let norm_js = self.js.iter().map(|v| v * v).sum::<f32>().sqrt();
-        let norm_tt = self.theta_tilde.iter().map(|v| v * v).sum::<f32>().sqrt();
-        let norm_nm = self.nu_mbar.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let norm_js = l2_norm(&self.js);
+        let norm_tt = l2_norm(&self.theta_tilde);
+        let norm_nm = l2_norm(&self.nu_mbar);
         let eps = 1e-7;
         let rho0 = ((norm_tt + eps) / (norm_js + eps)).sqrt();
         let rho1 = ((norm_nm + eps) / ((n as f32).sqrt() + eps)).sqrt();
@@ -238,8 +239,7 @@ impl GradientEngine for Uoro {
         if loss_val.is_some() {
             // grad += (c̄ · s̃_top) θ̃ — c̄ lives on the top layer only
             let top_off = net.layout().state_offset(net.layers() - 1);
-            let coef: f32 =
-                self.c_bar.iter().zip(&self.s_tilde[top_off..]).map(|(c, s)| c * s).sum();
+            let coef = dot(&self.c_bar, &self.s_tilde[top_off..top_off + self.c_bar.len()]);
             if coef != 0.0 {
                 for (g, t) in self.grads.iter_mut().zip(&self.theta_tilde) {
                     *g += coef * t;
@@ -286,7 +286,7 @@ impl GradientEngine for Uoro {
     }
 
     fn load_state(&mut self, _net: &LayerStack, state: &EngineState) -> Result<(), StateError> {
-        state.expect(self.name(), STATE_VERSION)?;
+        state.require(self.name(), STATE_VERSION)?;
         let s = state.floats_exact("s_tilde", self.s_tilde.len())?;
         let t = state.floats_exact("theta_tilde", self.theta_tilde.len())?;
         let a = state.floats_exact("a_prev", self.a_prev.len())?;

@@ -64,8 +64,17 @@ const SEC_OPS: &str = "ops";
 const SEC_ENGINE: &str = "engine";
 
 /// The required sections, in the order [`BinaryCodec::encode`] writes them.
-const SECTIONS: [&str; 7] =
-    [SEC_META, SEC_CONFIG, SEC_PARAMS, SEC_OPTIM, SEC_MASKS, SEC_OPS, SEC_ENGINE];
+/// Encoder table: section order *and* the writer for each section live in
+/// one place, so a section can never be listed without a payload writer.
+const SECTIONS: [(&str, fn(&SessionCheckpoint, &mut Payload)); 7] = [
+    (SEC_META, payload_meta),
+    (SEC_CONFIG, payload_config),
+    (SEC_PARAMS, payload_params),
+    (SEC_OPTIM, payload_optim),
+    (SEC_MASKS, payload_masks),
+    (SEC_OPS, payload_ops),
+    (SEC_ENGINE, payload_engine),
+];
 
 /// The binary [`SnapshotCodec`]. Stateless; see the module docs for the
 /// layout.
@@ -160,65 +169,68 @@ fn write_section(out: &mut Vec<u8>, name: &str, payload: &[u8]) {
     pad_to(out, ALIGN);
 }
 
-fn section_payload(ck: &SessionCheckpoint, name: &str) -> Vec<u8> {
-    let mut p = Payload::default();
-    match name {
-        SEC_META => {
-            let (policy, k) = policy_name(ck.policy);
-            p.str16(policy);
-            p.u8(ck.predict_always as u8);
-            p.u64(k);
-            p.u64(ck.steps);
-            p.u64(ck.supervised_steps);
-            p.u64(ck.updates_applied);
-            p.u64(ck.pending_supervised);
-        }
-        SEC_CONFIG => p.buf.extend_from_slice(ck.config_toml.as_bytes()),
-        SEC_PARAMS => {
-            p.f32s(&ck.net_params);
-            p.f32s(&ck.readout_params);
-            p.f32s(&ck.readout_grads);
-            p.f32s(&ck.grad_accum);
-        }
-        SEC_OPTIM => {
-            for opt in [&ck.opt_cell, &ck.opt_readout] {
-                p.u64(opt.t);
-                p.f32s(&opt.m);
-                p.f32s(&opt.v);
-            }
-        }
-        SEC_MASKS => {
-            p.u64(ck.masks.len() as u64);
-            for m in &ck.masks {
-                match m {
-                    None => p.u8(0),
-                    Some(kept) => {
-                        p.u8(1);
-                        p.u64s(kept);
-                    }
-                }
-            }
-        }
-        SEC_OPS => p.u64s(&ck.ops),
-        SEC_ENGINE => {
-            p.str16(&ck.engine.engine);
-            p.u32(ck.engine.version);
-            let ints: Vec<_> = ck.engine.int_entries().collect();
-            p.u32(ints.len() as u32);
-            for (key, v) in ints {
-                p.str16(key);
-                p.u64s(v);
-            }
-            let floats: Vec<_> = ck.engine.float_entries().collect();
-            p.u32(floats.len() as u32);
-            for (key, v) in floats {
-                p.str16(key);
-                p.f32s(v);
-            }
-        }
-        other => unreachable!("unknown section {other:?} in the encoder table"),
+fn payload_meta(ck: &SessionCheckpoint, p: &mut Payload) {
+    let (policy, k) = policy_name(ck.policy);
+    p.str16(policy);
+    p.u8(ck.predict_always as u8);
+    p.u64(k);
+    p.u64(ck.steps);
+    p.u64(ck.supervised_steps);
+    p.u64(ck.updates_applied);
+    p.u64(ck.pending_supervised);
+}
+
+fn payload_config(ck: &SessionCheckpoint, p: &mut Payload) {
+    p.buf.extend_from_slice(ck.config_toml.as_bytes());
+}
+
+fn payload_params(ck: &SessionCheckpoint, p: &mut Payload) {
+    p.f32s(&ck.net_params);
+    p.f32s(&ck.readout_params);
+    p.f32s(&ck.readout_grads);
+    p.f32s(&ck.grad_accum);
+}
+
+fn payload_optim(ck: &SessionCheckpoint, p: &mut Payload) {
+    for opt in [&ck.opt_cell, &ck.opt_readout] {
+        p.u64(opt.t);
+        p.f32s(&opt.m);
+        p.f32s(&opt.v);
     }
-    p.buf
+}
+
+fn payload_masks(ck: &SessionCheckpoint, p: &mut Payload) {
+    p.u64(ck.masks.len() as u64);
+    for m in &ck.masks {
+        match m {
+            None => p.u8(0),
+            Some(kept) => {
+                p.u8(1);
+                p.u64s(kept);
+            }
+        }
+    }
+}
+
+fn payload_ops(ck: &SessionCheckpoint, p: &mut Payload) {
+    p.u64s(&ck.ops);
+}
+
+fn payload_engine(ck: &SessionCheckpoint, p: &mut Payload) {
+    p.str16(&ck.engine.engine);
+    p.u32(ck.engine.version);
+    let ints: Vec<_> = ck.engine.int_entries().collect();
+    p.u32(ints.len() as u32);
+    for (key, v) in ints {
+        p.str16(key);
+        p.u64s(v);
+    }
+    let floats: Vec<_> = ck.engine.float_entries().collect();
+    p.u32(floats.len() as u32);
+    for (key, v) in floats {
+        p.str16(key);
+        p.f32s(v);
+    }
 }
 
 /// Serialize a checkpoint into the binary container.
@@ -227,8 +239,10 @@ pub fn encode(ck: &SessionCheckpoint) -> Vec<u8> {
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&SCHEMA_VERSION.to_le_bytes());
     out.extend_from_slice(&(SECTIONS.len() as u32).to_le_bytes());
-    for name in SECTIONS {
-        write_section(&mut out, name, &section_payload(ck, name));
+    for (name, write_payload) in SECTIONS {
+        let mut p = Payload::default();
+        write_payload(ck, &mut p);
+        write_section(&mut out, name, &p.buf);
     }
     out
 }

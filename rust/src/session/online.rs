@@ -394,6 +394,7 @@ impl OnlineSession {
         // The only per-step telemetry cost when disabled is this `is_some`
         // test — the clock is not even read (tests/telemetry.rs pins that
         // outcomes are bit-identical either way).
+        // analyze: allow(ambient-time) -- telemetry latency clock, gated off the hot path
         let t0 = if self.telemetry.is_some() { Some(std::time::Instant::now()) } else { None };
         let r = self.engine.step(
             &self.net,
@@ -415,6 +416,7 @@ impl OnlineSession {
     pub(crate) fn absorb_step_result(
         &mut self,
         r: StepResult,
+        // analyze: allow(ambient-time) -- carries the caller's telemetry clock, never reads one
         t0: Option<std::time::Instant>,
     ) -> StepOutcome {
         self.steps += 1;

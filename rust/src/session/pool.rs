@@ -39,6 +39,7 @@ use crate::telemetry::{
 };
 use crate::util::pool::run_parallel;
 use std::path::Path;
+// analyze: allow(ambient-time) -- telemetry latency clocks only; never feeds learner state
 use std::time::Instant;
 
 /// A fixed set of independent sessions plus a worker-thread budget.
@@ -110,6 +111,7 @@ impl SessionPool {
         if i >= self.sessions.len() {
             return Err(format!("no session {i} in a pool of {}", self.sessions.len()));
         }
+        // analyze: allow(ambient-time) -- spill-latency metric; encode output is clock-free
         let t0 = self.recorder.as_ref().map(|_| Instant::now());
         let bytes = codec::encode(&self.sessions[i].checkpoint(), format);
         std::fs::write(path, &bytes)
@@ -131,6 +133,7 @@ impl SessionPool {
     /// session's index. Resumption is bit-exact: the readmitted learner
     /// continues its stream as if it had never left memory.
     pub fn admit(&mut self, path: &Path) -> Result<usize, String> {
+        // analyze: allow(ambient-time) -- admit-latency metric; decode output is clock-free
         let t0 = self.recorder.as_ref().map(|_| Instant::now());
         let bytes = std::fs::read(path)
             .map_err(|e| format!("cannot read snapshot {}: {e}", path.display()))?;
@@ -290,12 +293,14 @@ impl SessionPool {
             let mut readouts: Vec<&mut Readout> = Vec::with_capacity(lanes);
             let mut losses: Vec<&mut Loss> = Vec::with_capacity(lanes);
             let mut opsv: Vec<&mut OpCounter> = Vec::with_capacity(lanes);
+            // analyze: allow(ambient-time) -- per-lane step-latency clocks (telemetry only)
             let mut t0s: Vec<Option<Instant>> = Vec::with_capacity(lanes);
             for (i, s) in self.sessions.iter_mut().enumerate() {
                 if !in_group[i] {
                     continue;
                 }
                 assert_eq!(events[i].0.len(), s.net.n_in(), "input width must match the stack");
+                // analyze: allow(ambient-time) -- read only when telemetry is on; bit-identity pinned by tests
                 t0s.push(if s.telemetry.is_some() { Some(Instant::now()) } else { None });
                 let OnlineSession { readout, loss, ops, .. } = s;
                 readouts.push(readout);

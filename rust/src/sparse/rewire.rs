@@ -16,6 +16,7 @@
 
 use super::mask::MaskPattern;
 use crate::nn::RnnCell;
+use crate::util::math::sum_f32;
 use crate::util::Pcg64;
 
 /// One rewiring step. Returns the new mask (same density as the cell's
@@ -39,10 +40,9 @@ pub fn magnitude_rewire(cell: &RnnCell, swap_fraction: f32, rng: &mut Pcg64) -> 
     for r in 0..n {
         for c in 0..n {
             if mask.is_kept(r, c) {
-                let score: f32 = blocks
-                    .iter()
-                    .map(|&b| layout.block(cell.params(), b)[r * n + c].abs())
-                    .sum();
+                let score = sum_f32(
+                    blocks.iter().map(|&b| layout.block(cell.params(), b)[r * n + c].abs()),
+                );
                 scored.push((score, r * n + c));
             }
         }

@@ -69,6 +69,53 @@ pub fn stderr(xs: &[f32]) -> f32 {
     (var / n as f32).sqrt()
 }
 
+/// Sequential left-fold sum over f32 values. Element order is pinned here
+/// (identical to `Iterator::sum`), so every caller inherits the same
+/// bit-exact accumulation regardless of where the values came from.
+#[inline]
+pub fn sum_f32(xs: impl IntoIterator<Item = f32>) -> f32 {
+    let mut acc = 0.0f32;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Sequential left-fold sum over f64 values; the f64 twin of [`sum_f32`].
+#[inline]
+pub fn sum_f64(xs: impl IntoIterator<Item = f64>) -> f64 {
+    let mut acc = 0.0f64;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Mean of an f64 stream with a known element count (0 when `n == 0`).
+/// Summary/report code funnels through here so the float-discipline rule
+/// can pin reduction order in exactly one place.
+#[inline]
+pub fn mean_f64(xs: impl IntoIterator<Item = f64>, n: usize) -> f64 {
+    if n == 0 {
+        0.0
+    } else {
+        sum_f64(xs) / n as f64
+    }
+}
+
+/// Pinned-order dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    sum_f32(a.iter().zip(b).map(|(x, y)| x * y))
+}
+
+/// Euclidean norm with pinned accumulation order.
+#[inline]
+pub fn l2_norm(xs: &[f32]) -> f32 {
+    sum_f32(xs.iter().map(|x| x * x)).sqrt()
+}
+
 /// Max absolute difference between two slices (∞ if lengths differ).
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     if a.len() != b.len() {
@@ -128,6 +175,32 @@ mod tests {
     #[test]
     fn stderr_of_constant_is_zero() {
         assert_eq!(stderr(&[2.0, 2.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn pinned_sums_match_iterator_sum_bitwise() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37).sin() * 1e3).collect();
+        assert_eq!(sum_f32(xs.iter().copied()).to_bits(), xs.iter().sum::<f32>().to_bits());
+        let ys: Vec<f64> = xs.iter().map(|&x| x as f64 / 7.0).collect();
+        assert_eq!(sum_f64(ys.iter().copied()).to_bits(), ys.iter().sum::<f64>().to_bits());
+    }
+
+    #[test]
+    fn mean_f64_handles_empty_and_matches_manual() {
+        assert_eq!(mean_f64(std::iter::empty(), 0), 0.0);
+        let ys = [1.5f64, 2.5, -0.5];
+        let manual = ys.iter().sum::<f64>() / 3.0;
+        assert_eq!(mean_f64(ys.iter().copied(), 3).to_bits(), manual.to_bits());
+    }
+
+    #[test]
+    fn dot_and_l2_norm_match_manual_folds() {
+        let a = [1.0f32, -2.0, 3.0];
+        let b = [0.5f32, 4.0, -1.0];
+        let manual: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot(&a, &b).to_bits(), manual.to_bits());
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>();
+        assert_eq!(l2_norm(&a).to_bits(), norm.sqrt().to_bits());
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Analyzer tests: lexer edge cases, rule scoping, pragma semantics, the
+//! baseline ratchet, and the self-test that the repo's own tree is clean.
+
+use sparse_rtrl::analysis::lexer::{strip_source, test_lines};
+use sparse_rtrl::analysis::{
+    analyze_tree, build_report, fresh_baseline, run_check, scan_file, Baseline, Finding,
+};
+use std::path::Path;
+
+fn rules_of(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+// ------------------------------------------------------------------ lexer
+
+#[test]
+fn lexer_blanks_plain_strings_and_keeps_positions() {
+    let src = "let a = \"Instant::now() // not a comment\";\nlet b = 1;\n";
+    let s = strip_source(src);
+    assert_eq!(s.text.len(), src.len());
+    assert!(!s.text.contains("Instant"));
+    assert!(!s.text.contains("not a comment"));
+    assert!(s.comments.is_empty(), "// inside a string is not a comment");
+    assert_eq!(s.text.matches('\n').count(), src.matches('\n').count());
+    assert!(s.text.contains("let b = 1;"));
+}
+
+#[test]
+fn lexer_collects_line_comments_with_lines() {
+    let src = "let a = 1; // trailing\n// standalone\nlet b = 2;\n";
+    let s = strip_source(src);
+    assert_eq!(s.comments.len(), 2);
+    assert_eq!(s.comments[0].line, 1);
+    assert_eq!(s.comments[0].text, "// trailing");
+    assert_eq!(s.comments[1].line, 2);
+    assert_eq!(s.comments[1].text, "// standalone");
+    assert!(!s.text.contains("trailing"));
+}
+
+#[test]
+fn lexer_handles_raw_strings() {
+    let src = "let re = r#\"panic!( \" quote inside \" )\"#;\nlet x = 3;\n";
+    let s = strip_source(src);
+    assert!(!s.text.contains("panic"));
+    assert!(s.text.contains("r#\""), "raw-string opener stays visible");
+    assert!(s.text.contains("\"#;"), "raw-string closer stays visible");
+    assert!(s.text.contains("let x = 3;"));
+    // multi-line raw string preserves the newline count
+    let src2 = "let t = r\"line one\nline two\";\nlet y = 9;\n";
+    let s2 = strip_source(src2);
+    assert_eq!(s2.text.matches('\n').count(), src2.matches('\n').count());
+    assert!(s2.text.contains("let y = 9;"));
+}
+
+#[test]
+fn lexer_handles_nested_block_comments() {
+    let src = "let a = 1;\n/* outer /* inner */ still comment\nunwrap() */\nlet b = 2;\n";
+    let s = strip_source(src);
+    assert!(!s.text.contains("unwrap"));
+    assert!(!s.text.contains("still comment"));
+    assert_eq!(s.text.matches('\n').count(), src.matches('\n').count());
+    assert!(s.text.contains("let b = 2;"));
+}
+
+#[test]
+fn lexer_distinguishes_char_literals_from_lifetimes() {
+    let src = "fn f<'a>(x: &'a str) -> char { let c = '{'; let d = '\\n'; c }\n";
+    let s = strip_source(src);
+    // the brace inside the char literal is blanked, so brace matching works
+    let opens = s.text.matches('{').count();
+    let closes = s.text.matches('}').count();
+    assert_eq!(opens, closes, "stripped braces balance: {:?}", s.text);
+    assert!(s.text.contains("<'a>"), "lifetime survives");
+    assert!(s.text.contains("&'a str"), "lifetime reference survives");
+}
+
+#[test]
+fn lexer_counts_crlf_lines_like_lf() {
+    let src = "let a = 1;\r\n// note\r\nlet t = std::time::Instant::now();\r\n";
+    let s = strip_source(src);
+    assert_eq!(s.comments.len(), 1);
+    assert_eq!(s.comments[0].line, 2);
+    // the \r rides along inside the comment capture; content is what counts
+    assert!(s.comments[0].text.starts_with("// note"));
+    let f = scan_file("rtrl/x.rs", src);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "ambient-time");
+    assert_eq!(f[0].line, 3, "CRLF files report correct 1-based lines");
+}
+
+#[test]
+fn lexer_marks_cfg_test_blocks() {
+    let src = "fn lib() {}\n\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn tail() {}\n";
+    let t = test_lines(&strip_source(src).text);
+    assert!(t.contains(&3) && t.contains(&4) && t.contains(&5) && t.contains(&6));
+    assert!(!t.contains(&1) && !t.contains(&7));
+}
+
+// ------------------------------------------------------------------ rules
+
+#[test]
+fn determinism_rules_fire_in_compute_modules_only() {
+    let src = "use std::collections::HashMap;\nlet t = Instant::now();\nlet r = thread_rng();\n";
+    let in_compute = scan_file("rtrl/fake.rs", src);
+    assert_eq!(rules_of(&in_compute), ["unordered-map", "ambient-time", "ambient-rng"]);
+    assert!(scan_file("coordinator/fake.rs", src).is_empty(), "allowlisted path");
+    assert!(scan_file("telemetry/fake.rs", src).is_empty(), "non-compute path");
+    assert!(scan_file("main.rs", src).is_empty(), "bin target is exempt");
+}
+
+#[test]
+fn seeded_instant_in_rtrl_sparse_is_a_violation() {
+    // the acceptance-criteria seeding: an ambient clock in rtrl/sparse.rs
+    let src = "pub fn step() { let _t = std::time::Instant::now(); }\n";
+    let f = scan_file("rtrl/sparse.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, "ambient-time");
+    let report = build_report(
+        &[("rtrl/sparse.rs".to_string(), f)].into_iter().collect(),
+        &Baseline::default(),
+    );
+    assert!(!report.clean());
+    let line = report.render_text();
+    assert!(line.contains("rtrl/sparse.rs:1: ambient-time:"), "{line}");
+}
+
+#[test]
+fn seeded_unwrap_in_session_online_trips_the_ratchet() {
+    // the acceptance-criteria seeding: a new unwrap() beyond the baseline
+    let src = "pub fn load(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    let findings = scan_file("session/online.rs", src);
+    assert_eq!(rules_of(&findings), ["panic"]);
+    let map = [("session/online.rs".to_string(), findings)].into_iter().collect();
+    // allowance 0: the unwrap is a violation, rendered file:line: rule: msg
+    let over = build_report(&map, &Baseline::default());
+    assert!(!over.clean());
+    assert!(over.render_text().contains("session/online.rs:1: panic:"), "{}", over.render_text());
+    // allowance 1: same tree passes — the ratchet absorbs legacy sites
+    let mut counts = std::collections::BTreeMap::new();
+    counts.insert("session/online.rs".to_string(), 1u64);
+    let under = build_report(&map, &Baseline::from_counts(&counts));
+    assert!(under.clean());
+}
+
+#[test]
+fn float_reduce_rule_scopes_to_pinned_modules() {
+    let typed = "fn m(xs: &[f32]) -> f32 { xs.iter().sum::<f32>() }\n";
+    assert_eq!(rules_of(&scan_file("nn/fake.rs", typed)), ["float-reduce"]);
+    assert!(scan_file("util/math.rs", typed).is_empty(), "pinned module");
+    assert!(scan_file("rtrl/kernels/rowops.rs", typed).is_empty(), "pinned module");
+
+    let fold = "fn m(xs: &[f32]) -> f32 { xs.iter().fold(0.0, |a, b| a + b) }\n";
+    assert_eq!(rules_of(&scan_file("rtrl/fake.rs", fold)), ["float-reduce"]);
+
+    let untyped = "fn m(xs: &[f32]) -> f32 { let s: f32 = xs.iter().sum(); s }\n";
+    assert_eq!(rules_of(&scan_file("rtrl/fake.rs", untyped)), ["float-reduce"]);
+
+    let integer = "fn m(xs: &[u64]) -> u64 { let s: u64 = xs.iter().sum(); s }\n";
+    assert!(scan_file("rtrl/fake.rs", integer).is_empty(), "integer sums are order-safe");
+}
+
+#[test]
+fn panic_rule_sees_all_library_files_but_not_tests() {
+    let src = "pub fn f(x: Option<u8>) -> u8 { x.expect(\"set\") }\n\
+               #[cfg(test)]\nmod tests {\n    fn t() { None::<u8>.unwrap(); panic!(); }\n}\n";
+    let f = scan_file("report/fake.rs", src);
+    assert_eq!(rules_of(&f), ["panic"], "{f:?}");
+    assert_eq!(f[0].line, 1);
+    let macros = "fn g(x: u8) { if x > 3 { unreachable!() } else { todo!() } }\n";
+    assert_eq!(rules_of(&scan_file("util/fake.rs", macros)), ["panic", "panic"]);
+}
+
+// ---------------------------------------------------------------- pragmas
+
+#[test]
+fn trailing_pragma_suppresses_its_own_line() {
+    let src = "let t = Instant::now(); // analyze: allow(ambient-time) -- test clock\n";
+    assert!(scan_file("rtrl/fake.rs", src).is_empty());
+}
+
+#[test]
+fn standalone_pragma_suppresses_the_next_code_line() {
+    let src = "// analyze: allow(ambient-time) -- latency metric\n\
+               \n\
+               let t = Instant::now();\n";
+    assert!(scan_file("session/fake.rs", src).is_empty(), "skips blank lines to its target");
+}
+
+#[test]
+fn unused_pragma_is_an_error() {
+    let src = "// analyze: allow(ambient-time) -- stale\nlet x = 1;\n";
+    let f = scan_file("rtrl/fake.rs", src);
+    assert_eq!(rules_of(&f), ["unused-pragma"]);
+    assert_eq!(f[0].line, 1);
+}
+
+#[test]
+fn malformed_pragmas_are_errors() {
+    let missing_reason = "// analyze: allow(panic)\nlet x: Option<u8> = None;\n";
+    assert_eq!(rules_of(&scan_file("rtrl/fake.rs", missing_reason)), ["bad-pragma"]);
+    let unknown_rule = "// analyze: allow(no-such-rule) -- why\nlet x = 1;\n";
+    assert_eq!(rules_of(&scan_file("rtrl/fake.rs", unknown_rule)), ["bad-pragma"]);
+}
+
+#[test]
+fn pragma_suppresses_only_named_rules() {
+    let src = "// analyze: allow(ambient-time) -- clock ok\n\
+               let t = (Instant::now(), HashMap::<u8, u8>::new());\n";
+    let f = scan_file("nn/fake.rs", src);
+    assert_eq!(rules_of(&f), ["unordered-map"], "{f:?}");
+}
+
+#[test]
+fn doc_comments_may_quote_pragma_syntax() {
+    let src = "//! Suppress via `// analyze: allow(panic) -- reason`.\n\
+               /// analyze: allow(panic) -- docs, not a pragma\n\
+               pub fn f() {}\n";
+    assert!(scan_file("rtrl/fake.rs", src).is_empty());
+}
+
+// --------------------------------------------------------------- baseline
+
+#[test]
+fn fix_baseline_freezes_live_counts() {
+    let src = "pub fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+    let findings = [("util/fake.rs".to_string(), scan_file("util/fake.rs", src))]
+        .into_iter()
+        .collect();
+    let b = fresh_baseline(&findings);
+    assert_eq!(b.total(), 1);
+    assert_eq!(b.allowance("util/fake.rs"), 1);
+    assert!(build_report(&findings, &b).clean());
+}
+
+// -------------------------------------------------------------- self-test
+
+#[test]
+fn analyze_check_is_clean_on_this_repo() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let baseline = Path::new(env!("CARGO_MANIFEST_DIR")).join("../ANALYSIS_baseline.json");
+    let report = run_check(&root, &baseline).expect("repo tree scans");
+    assert!(
+        report.clean(),
+        "the tree must pass its own analyzer; violations:\n{}",
+        report.render_text()
+    );
+    assert!(report.files_scanned > 40, "walked the real tree");
+    // the ratchet is honest: live counts match the committed allowance
+    let findings = analyze_tree(&root).expect("repo tree scans");
+    assert_eq!(
+        fresh_baseline(&findings).total(),
+        report.baseline_total,
+        "baseline is stale — run `sparse-rtrl analyze --fix-baseline`"
+    );
+}
