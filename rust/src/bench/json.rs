@@ -11,13 +11,15 @@
 //! `snapshot_codecs` block (checkpoint encode/decode cost per format); v5
 //! adds the `telemetry` block (observability overhead on the reference
 //! session); v6 adds the shared-weight `batch` axis (`batch` + `grad_fp`
-//! per case) and the `kernels` block (per-row-kernel ns/element).
+//! per case) and the `kernels` block (per-row-kernel ns/element); v7 adds
+//! the `serve` block (multi-tenant serve-loop throughput and latency,
+//! batched vs round-robin vs a resident budget).
 
 use super::{phase_name, BenchReport, CaseResult};
 use std::collections::BTreeMap;
 
 /// Schema identifier CI consumers can dispatch on.
-pub const SCHEMA: &str = "sparse-rtrl/bench/v6";
+pub const SCHEMA: &str = "sparse-rtrl/bench/v7";
 /// Monotone schema revision: bump on any breaking field change.
 /// * 1 — single-cell grid (engine × hidden × ω).
 /// * 2 — depth axis: `layers`, `macs_per_step_per_layer`,
@@ -42,7 +44,12 @@ pub const SCHEMA: &str = "sparse-rtrl/bench/v6";
 ///   per-row-kernel ns/element at several densities
 ///   ([`crate::bench::kernels`]). CI diffs `grad_fp` and the op fields
 ///   across `--batch 1` vs `--batch 8` and `--threads 1` vs `--threads 2`.
-pub const SCHEMA_VERSION: u64 = 6;
+/// * 7 — `serve` at the top: the multi-tenant serve-loop load test
+///   ([`crate::bench::serve`]) — events/sec, p50/p99 lane-step latency and
+///   residency churn per (schedule × tenant count × resident budget) over
+///   one identical Zipf-skewed workload. CI gates the batched schedule at
+///   ≥ 1.2× the round-robin baseline's events/sec on the quick grid.
+pub const SCHEMA_VERSION: u64 = 7;
 
 /// Escape a string for a JSON string literal (without the quotes).
 pub fn escape(s: &str) -> String {
@@ -185,6 +192,33 @@ impl BenchReport {
                 k.ns_total,
                 number(k.ns_per_element),
                 if i + 1 < self.kernels.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"serve\": [\n");
+        for (i, r) in self.serve.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"schedule\": \"{}\", \"tenants\": {}, \"max_resident\": {}, \
+                 \"threads\": {}, \"burst\": {}, \"events\": {}, \"rounds\": {}, \
+                 \"wall_ns\": {}, \"events_per_sec\": {}, \"p50_step_ns\": {}, \
+                 \"p99_step_ns\": {}, \"fused_lane_steps\": {}, \"solo_steps\": {}, \
+                 \"evictions\": {}, \"admissions\": {}}}{}\n",
+                escape(r.schedule),
+                r.tenants,
+                r.max_resident,
+                r.threads,
+                r.burst,
+                r.events,
+                r.rounds,
+                r.wall_ns,
+                number(r.events_per_sec),
+                r.p50_step_ns,
+                r.p99_step_ns,
+                r.fused_lane_steps,
+                r.solo_steps,
+                r.evictions,
+                r.admissions,
+                if i + 1 < self.serve.len() { "," } else { "" }
             ));
         }
         s.push_str("  ],\n");
@@ -418,6 +452,7 @@ pub fn validate(doc: &Json) -> Result<(), String> {
         ("snapshot_codecs", "v4"),
         ("telemetry", "v5"),
         ("kernels", "v6"),
+        ("serve", "v7"),
     ] {
         if doc.get(key).is_none() {
             return Err(format!("bench report section {key:?}: missing (added in {since})"));
@@ -455,6 +490,9 @@ mod tests {
             workers: 1,
             threads: 1,
             batches: vec![1],
+            serve_tenants: vec![2],
+            serve_events: 12,
+            serve_threads: 1,
             quick: true,
         };
         run(&cfg, false)
@@ -531,6 +569,26 @@ mod tests {
             assert_eq!(parsed.get("elements").unwrap().as_u64(), Some(orig.elements));
             assert_eq!(parsed.get("ns_total").unwrap().as_u64(), Some(orig.ns_total));
             assert!(parsed.get("ns_per_element").unwrap().as_f64().is_some());
+        }
+        // v7: the serve block survives the round trip
+        let serve = doc.get("serve").unwrap().as_arr().unwrap();
+        assert_eq!(serve.len(), report.serve.len());
+        assert!(!serve.is_empty());
+        for (parsed, orig) in serve.iter().zip(&report.serve) {
+            assert_eq!(parsed.get("schedule").unwrap().as_str(), Some(orig.schedule));
+            assert_eq!(parsed.get("tenants").unwrap().as_u64(), Some(orig.tenants as u64));
+            assert_eq!(
+                parsed.get("max_resident").unwrap().as_u64(),
+                Some(orig.max_resident as u64)
+            );
+            assert_eq!(parsed.get("events").unwrap().as_u64(), Some(orig.events));
+            assert_eq!(
+                parsed.get("fused_lane_steps").unwrap().as_u64(),
+                Some(orig.fused_lane_steps)
+            );
+            assert_eq!(parsed.get("solo_steps").unwrap().as_u64(), Some(orig.solo_steps));
+            assert!(parsed.get("events_per_sec").unwrap().as_f64().is_some());
+            assert_eq!(parsed.get("p99_step_ns").unwrap().as_u64(), Some(orig.p99_step_ns));
         }
         validate(&doc).expect("freshly written report must validate");
         let results = doc.get("results").unwrap().as_arr().unwrap();
@@ -628,22 +686,44 @@ mod tests {
         assert!(err.contains("v6"), "error must say which revision added it: {err}");
     }
 
+    /// A v6 document — complete for its era but predating the serve block —
+    /// is rejected with the name of the section it lacks, same contract as
+    /// the v4/v5 cases above.
+    #[test]
+    fn v6_report_rejected_by_missing_serve_section() {
+        let v6 = r#"{
+            "schema": "sparse-rtrl/bench/v6",
+            "schema_version": 6,
+            "threads": 1,
+            "snapshot_codecs": [],
+            "telemetry": {},
+            "kernels": [],
+            "results": []
+        }"#;
+        let doc = parse(v6).unwrap();
+        assert_eq!(schema_version_of(&doc), 6);
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("\"serve\""), "error must name the section: {err}");
+        assert!(err.contains("missing"), "error must say it is missing: {err}");
+        assert!(err.contains("v7"), "error must say which revision added it: {err}");
+    }
+
     /// Version and schema-string gates still fire once all sections exist.
     #[test]
     fn validate_gates_version_and_schema_string() {
         let stale_version = parse(
-            r#"{"schema": "sparse-rtrl/bench/v6", "schema_version": 5,
+            r#"{"schema": "sparse-rtrl/bench/v7", "schema_version": 6,
                 "threads": 1, "snapshot_codecs": [], "telemetry": {}, "kernels": [],
-                "results": []}"#,
+                "serve": [], "results": []}"#,
         )
         .unwrap();
         let err = validate(&stale_version).unwrap_err();
-        assert!(err.contains("schema_version 5"), "{err}");
+        assert!(err.contains("schema_version 6"), "{err}");
 
         let wrong_schema = parse(
-            r#"{"schema": "someone-else/bench/v6", "schema_version": 6,
+            r#"{"schema": "someone-else/bench/v7", "schema_version": 7,
                 "threads": 1, "snapshot_codecs": [], "telemetry": {}, "kernels": [],
-                "results": []}"#,
+                "serve": [], "results": []}"#,
         )
         .unwrap();
         let err = validate(&wrong_schema).unwrap_err();
@@ -688,6 +768,10 @@ mod tests {
             "\"latency_ns\"",
             "\"kernels\"",
             "\"ns_per_element\"",
+            "\"serve\"",
+            "\"events_per_sec\"",
+            "\"fused_lane_steps\"",
+            "\"max_resident\"",
             "\"results\"",
             "\"engine\"",
             "\"layers\"",

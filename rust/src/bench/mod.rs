@@ -19,6 +19,7 @@
 pub mod json;
 pub mod kernels;
 pub mod runner;
+pub mod serve;
 pub mod snapshot;
 pub mod telemetry;
 
@@ -27,6 +28,7 @@ use crate::metrics::Phase;
 use crate::util::pool;
 
 pub use kernels::KernelBenchResult;
+pub use serve::ServeBenchResult;
 pub use snapshot::SnapshotCodecResult;
 pub use telemetry::TelemetryBenchResult;
 
@@ -64,6 +66,17 @@ pub struct BenchConfig {
     /// Op counts and lane-0 gradients are batch-invariant — CI diffs
     /// `--batch 1` vs `--batch 8` to prove it.
     pub batches: Vec<usize>,
+    /// Tenant counts for the multi-tenant serve bench (empty = skip the
+    /// `serve` block). Each count measures batched vs round-robin vs a
+    /// half-capacity resident budget over one identical workload
+    /// ([`serve::measure`]).
+    pub serve_tenants: Vec<usize>,
+    /// Events per serve case.
+    pub serve_events: usize,
+    /// Intra-step kernel threads of the serve cases (the batched-vs-solo
+    /// gate needs ≥ 2: a fused group's panel crosses the kernels' parallel
+    /// threshold, a solo session's does not).
+    pub serve_threads: usize,
     /// Whether this is the reduced CI grid.
     pub quick: bool,
 }
@@ -83,6 +96,9 @@ impl BenchConfig {
             workers: 1,
             threads: 1,
             batches: vec![1],
+            serve_tenants: vec![16, 64],
+            serve_events: 4096,
+            serve_threads: 2,
             quick: false,
         }
     }
@@ -97,6 +113,8 @@ impl BenchConfig {
             param_sparsities: vec![0.0, 0.8],
             sequences: 6,
             warmup_sequences: 1,
+            serve_tenants: vec![64],
+            serve_events: 1536,
             quick: true,
             ..Self::full()
         }
@@ -227,6 +245,10 @@ pub struct BenchReport {
     /// Per-kernel ns/element at several row densities — see
     /// [`kernels::measure`]. Schema v6.
     pub kernels: Vec<KernelBenchResult>,
+    /// Multi-tenant serve loop throughput/latency: batched vs round-robin
+    /// vs a resident budget per tenant count — see [`serve::measure`].
+    /// Schema v7.
+    pub serve: Vec<ServeBenchResult>,
 }
 
 impl BenchReport {
@@ -261,6 +283,28 @@ impl BenchReport {
                 s.push_str(&format!(
                     "{:<20}{:>9.2}{:>14}{:>14.3}\n",
                     k.kernel, k.density, k.elements, k.ns_per_element
+                ));
+            }
+        }
+        if !self.serve.is_empty() {
+            s.push_str("\nserve loop (multi-tenant, shared weights):\n");
+            s.push_str(&format!(
+                "{:<13}{:>9}{:>10}{:>4}{:>13}{:>12}{:>12}{:>8}{:>8}\n",
+                "schedule", "tenants", "resident", "thr", "events/s", "p50 ns", "p99 ns", "evict",
+                "admit"
+            ));
+            for r in &self.serve {
+                s.push_str(&format!(
+                    "{:<13}{:>9}{:>10}{:>4}{:>13.0}{:>12}{:>12}{:>8}{:>8}\n",
+                    r.schedule,
+                    r.tenants,
+                    r.max_resident,
+                    r.threads,
+                    r.events_per_sec,
+                    r.p50_step_ns,
+                    r.p99_step_ns,
+                    r.evictions,
+                    r.admissions,
                 ));
             }
         }
@@ -321,6 +365,7 @@ pub fn run(cfg: &BenchConfig, progress: bool) -> BenchReport {
         snapshot_codecs: snapshot::measure(snapshot::DEFAULT_REPS),
         telemetry: telemetry::measure(telemetry::DEFAULT_REPS),
         kernels: kernels::measure(kernels::DEFAULT_REPS),
+        serve: serve::measure(&cfg.serve_tenants, cfg.serve_events, cfg.serve_threads),
     }
 }
 
@@ -346,6 +391,9 @@ mod tests {
             workers: 2,
             threads: 1,
             batches: vec![1],
+            serve_tenants: vec![],
+            serve_events: 0,
+            serve_threads: 1,
             quick: true,
         }
     }

@@ -1,0 +1,296 @@
+//! Load generator for the multi-tenant serve loop (`serve` block, schema
+//! v7): deterministic seeded tenants with Zipf-skewed arrivals driven
+//! through [`crate::serve::Scheduler`], measuring end-to-end events/sec
+//! and per-lane-step latency for the fused batched schedule against the
+//! naive per-session round-robin baseline, with and without a resident
+//! budget.
+//!
+//! All tenants share one weight seed — the serve scheduler's best case and
+//! the configuration the batched-vs-round-robin CI gate measures (batched
+//! must clear 1.2× the baseline's events/sec at the quick grid's 64
+//! tenants). The workload is a pure function of the bench seed: tenant
+//! choice per event comes from inverse-CDF sampling over `1/(i+1)^0.6`
+//! weights via [`Pcg64`], never from ambient randomness, so two runs of
+//! the same grid enqueue byte-identical event streams.
+
+use crate::config::{AlgorithmKind, ExperimentConfig};
+use crate::data::StepTarget;
+use crate::serve::{SchedulePolicy, Scheduler, ServeConfig};
+use crate::session::{StreamEvent, UpdatePolicy};
+use crate::telemetry::names;
+use crate::telemetry::HistogramSummary;
+use crate::util::math::sum_f64;
+use crate::util::Pcg64;
+
+/// Weight seed every bench tenant shares (shared weights → fusable).
+pub const TENANT_SEED: u64 = 42;
+/// Workload RNG seed (arrival skew + inputs).
+pub const WORKLOAD_SEED: u64 = 2023;
+/// Zipf-ish skew exponent for tenant arrival weights.
+pub const SKEW: f64 = 0.6;
+/// Burst length the serve cases run with.
+pub const BURST: usize = 16;
+
+/// One measured serve case.
+#[derive(Debug, Clone)]
+pub struct ServeBenchResult {
+    /// `"batched"` or `"round-robin"`.
+    pub schedule: &'static str,
+    pub tenants: usize,
+    /// Resident-session budget (0 = unlimited).
+    pub max_resident: usize,
+    /// Intra-step kernel threads of each tenant/fused group.
+    pub threads: usize,
+    /// Burst length (longest fused run per tenant per round).
+    pub burst: usize,
+    /// Events applied end to end.
+    pub events: u64,
+    /// Scheduling rounds taken to drain the workload.
+    pub rounds: u64,
+    /// Wall time of the drain, ns.
+    pub wall_ns: u64,
+    /// End-to-end throughput: `events / wall`.
+    pub events_per_sec: f64,
+    /// Per-lane-step latency quantiles (amortized within each bucket call).
+    pub p50_step_ns: u64,
+    pub p99_step_ns: u64,
+    /// Lane-steps that went through the fused shared-weight path.
+    pub fused_lane_steps: u64,
+    /// Lane-steps that ran per-session.
+    pub solo_steps: u64,
+    /// Residency churn during the drain.
+    pub evictions: u64,
+    pub admissions: u64,
+}
+
+/// The bench model: big enough that a fused group's panel crosses the
+/// kernels' parallel threshold while a solo session stays serial — the
+/// regime the batched schedule is built for.
+fn bench_base() -> ExperimentConfig {
+    let mut base = ExperimentConfig::default();
+    base.model.hidden = 32;
+    base.model.param_sparsity = 0.8;
+    base.train.algorithm = AlgorithmKind::RtrlParam;
+    base
+}
+
+/// The deterministic workload: `(tenant index, event)` in arrival order.
+/// Tenant `i` is drawn with probability ∝ `1/(i+1)^SKEW` (head tenants
+/// stay busy every round, tail tenants go idle — the shape that exercises
+/// both the full-burst and straggler buckets and, under a budget, LRU
+/// churn). Every third event is supervised.
+pub fn workload(tenants: usize, events: usize) -> Vec<(usize, StreamEvent)> {
+    let mut rng = Pcg64::new(WORKLOAD_SEED);
+    let weights: Vec<f64> = (0..tenants).map(|i| 1.0 / ((i + 1) as f64).powf(SKEW)).collect();
+    let total = sum_f64(weights.iter().copied());
+    let mut out = Vec::with_capacity(events);
+    for e in 0..events {
+        let mut pick = rng.f64() * total;
+        let mut tenant = tenants - 1;
+        for (i, w) in weights.iter().enumerate() {
+            if pick < *w {
+                tenant = i;
+                break;
+            }
+            pick -= *w;
+        }
+        let x = vec![rng.normal(), rng.normal()];
+        let target =
+            if e % 3 == 2 { StepTarget::Class(e % 2) } else { StepTarget::None };
+        out.push((tenant, StreamEvent::Step { x, target }));
+    }
+    out
+}
+
+/// Run one serve case over the shared workload and measure the drain.
+fn run_case(
+    schedule: SchedulePolicy,
+    tenants: usize,
+    max_resident: usize,
+    threads: usize,
+    events: &[(usize, StreamEvent)],
+) -> ServeBenchResult {
+    let spill_dir = std::env::temp_dir().join(format!(
+        "sparse-rtrl-serve-bench-{}-{}-{}-{}",
+        std::process::id(),
+        schedule.name(),
+        tenants,
+        max_resident
+    ));
+    let cfg = ServeConfig {
+        base: bench_base(),
+        policy: UpdatePolicy::Manual,
+        threads,
+        max_resident,
+        burst: BURST,
+        spill_dir: spill_dir.clone(),
+        schedule,
+    };
+    let mut sched = match Scheduler::new(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            // a bench case that cannot set up reports a zeroed row rather
+            // than poisoning the whole report
+            eprintln!("serve bench: {e}");
+            return zero_result(schedule, tenants, max_resident, threads);
+        }
+    };
+    let mut ok = true;
+    for i in 0..tenants {
+        ok &= sched.open(&format!("t{i:03}"), Some(TENANT_SEED)).is_ok();
+    }
+    let mut queues: Vec<Vec<StreamEvent>> = vec![Vec::new(); tenants];
+    for (tenant, ev) in events {
+        queues[*tenant].push(ev.clone());
+    }
+    for (i, q) in queues.into_iter().enumerate() {
+        if !q.is_empty() {
+            ok &= sched.enqueue(&format!("t{i:03}"), q).is_ok();
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let rounds = match sched.run_until_idle() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serve bench: {e}");
+            ok = false;
+            0
+        }
+    };
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let rec = sched.recorder();
+    let latency = rec
+        .histogram(names::SERVE_STEP_NS)
+        .map(HistogramSummary::from_histogram)
+        .unwrap_or(HistogramSummary { count: 0, sum: 0, min: 0, max: 0, p50: 0, p99: 0 });
+    let snap = sched.stats();
+    let applied = rec.counter_value(names::SERVE_EVENTS);
+    std::fs::remove_dir_all(&spill_dir).ok();
+    if !ok {
+        return zero_result(schedule, tenants, max_resident, threads);
+    }
+    ServeBenchResult {
+        schedule: schedule.name(),
+        tenants,
+        max_resident,
+        threads,
+        burst: BURST,
+        events: applied,
+        rounds,
+        wall_ns,
+        events_per_sec: if wall_ns > 0 {
+            applied as f64 * 1e9 / wall_ns as f64
+        } else {
+            0.0
+        },
+        p50_step_ns: latency.p50,
+        p99_step_ns: latency.p99,
+        fused_lane_steps: rec.counter_value(names::SERVE_FUSED_STEPS),
+        solo_steps: rec.counter_value(names::SERVE_SOLO_STEPS),
+        evictions: snap.evictions,
+        admissions: snap.admissions,
+    }
+}
+
+fn zero_result(
+    schedule: SchedulePolicy,
+    tenants: usize,
+    max_resident: usize,
+    threads: usize,
+) -> ServeBenchResult {
+    ServeBenchResult {
+        schedule: schedule.name(),
+        tenants,
+        max_resident,
+        threads,
+        burst: BURST,
+        events: 0,
+        rounds: 0,
+        wall_ns: 0,
+        events_per_sec: 0.0,
+        p50_step_ns: 0,
+        p99_step_ns: 0,
+        fused_lane_steps: 0,
+        solo_steps: 0,
+        evictions: 0,
+        admissions: 0,
+    }
+}
+
+/// Measure the serve grid: for each tenant count, the batched schedule
+/// (unlimited residency), the round-robin baseline (the CI gate's
+/// denominator), and the batched schedule under a half-capacity resident
+/// budget (spill/cold-start in the loop). Every case replays the identical
+/// workload. `events == 0` skips the grid entirely (how the CI invariance
+/// arms opt out of serve timing they don't assert on).
+pub fn measure(tenant_counts: &[usize], events: usize, threads: usize) -> Vec<ServeBenchResult> {
+    let mut out = Vec::new();
+    if events == 0 {
+        return out;
+    }
+    for &tenants in tenant_counts {
+        let tenants = tenants.max(1);
+        let load = workload(tenants, events);
+        out.push(run_case(SchedulePolicy::Batched, tenants, 0, threads, &load));
+        out.push(run_case(SchedulePolicy::RoundRobin, tenants, 0, threads, &load));
+        out.push(run_case(
+            SchedulePolicy::Batched,
+            tenants,
+            (tenants / 2).max(1),
+            threads,
+            &load,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_is_deterministic_and_skewed() {
+        let a = workload(8, 400);
+        let b = workload(8, 400);
+        assert_eq!(a.len(), 400);
+        assert_eq!(
+            a.iter().map(|(t, _)| *t).collect::<Vec<_>>(),
+            b.iter().map(|(t, _)| *t).collect::<Vec<_>>(),
+            "same seed, same arrivals"
+        );
+        let mut counts = [0usize; 8];
+        for (t, _) in &a {
+            counts[*t] += 1;
+        }
+        assert!(
+            counts[0] > counts[7],
+            "head tenant must outdraw the tail: {counts:?}"
+        );
+        assert!(counts.iter().all(|&c| c > 0), "every tenant appears: {counts:?}");
+    }
+
+    /// Smoke the measurement path at toy scale: three rows per tenant
+    /// count, all events applied, fused steps only in the batched rows.
+    #[test]
+    fn measure_produces_three_cases_per_tenant_count() {
+        let rows = measure(&[4], 48, 1);
+        assert_eq!(rows.len(), 3);
+        let (batched, rr, budget) = (&rows[0], &rows[1], &rows[2]);
+        assert_eq!(batched.schedule, "batched");
+        assert_eq!(rr.schedule, "round-robin");
+        assert_eq!(budget.schedule, "batched");
+        assert_eq!(budget.max_resident, 2);
+        for r in &rows {
+            assert_eq!(r.tenants, 4);
+            assert_eq!(r.events, 48, "{}: every event applies", r.schedule);
+            assert!(r.rounds > 0);
+            assert!(r.wall_ns > 0);
+            assert!(r.events_per_sec > 0.0);
+            assert_eq!(r.fused_lane_steps + r.solo_steps, 48, "{}", r.schedule);
+        }
+        assert!(batched.fused_lane_steps > 0, "shared-seed tenants must fuse");
+        assert_eq!(rr.fused_lane_steps, 0, "the baseline never fuses");
+        assert!(budget.evictions > 0, "a half-capacity budget must spill");
+        assert!(budget.admissions > 0, "…and re-admit");
+    }
+}

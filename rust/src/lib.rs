@@ -41,6 +41,10 @@
 //! sparsity stats). There are no mandatory sequence boundaries — a
 //! [`session::UpdatePolicy`] (every-k-supervised-steps / end-of-sequence /
 //! manual) decides when accumulated gradients become parameter updates.
+//! [`serve`] turns the pool into a long-lived multi-tenant server
+//! (`sparse-rtrl serve`): per-tenant event queues drained in rounds with
+//! fused shared-weight stepping, LRU spill-to-snapshot under a residency
+//! budget, and a line protocol over a Unix socket or stdin.
 //! Sessions checkpoint **bit-exactly** ([`session::SessionCheckpoint`]):
 //! weights, Adam moments, stream counters and the engine's versioned
 //! [`rtrl::EngineState`] snapshot travel in one JSON document, so a live
@@ -139,6 +143,7 @@ pub mod optim;
 pub mod report;
 pub mod rtrl;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sparse;
 pub mod telemetry;

@@ -7,7 +7,8 @@ use sparse_rtrl::coordinator::{run_sweep, SweepPlan};
 use sparse_rtrl::data::StepTarget;
 use sparse_rtrl::report::{csv::write_text, fig1, fig2, table1};
 use sparse_rtrl::runtime::{ArtifactSet, PjrtRuntime};
-use sparse_rtrl::report::stats::{render_snapshot, render_trace};
+use sparse_rtrl::report::stats::{render_serve_summary, render_snapshot, render_trace};
+use sparse_rtrl::serve::{serve_stdin, serve_unix, SchedulePolicy, Scheduler, ServeConfig};
 use sparse_rtrl::session::{
     codec, EventFormat, EventReader, OnlineSession, SessionBuilder, SnapshotFormat, StreamEvent,
     UpdatePolicy,
@@ -18,7 +19,7 @@ use sparse_rtrl::telemetry::{
 use sparse_rtrl::train::{build_dataset, Trainer};
 use sparse_rtrl::util::cli::Args;
 use std::io::{BufRead, Write};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 const USAGE: &str = "\
 sparse-rtrl — Efficient RTRL through combined activity and parameter sparsity
@@ -31,6 +32,12 @@ USAGE:
                      [--checkpoint out.snap] [--snapshot-format auto|binary|json]
                      [--resume ck.snap] [--threads 1] [--quiet]
                      [--trace trace.jsonl] [--metrics-every K]
+  sparse-rtrl serve  [--socket path.sock] [--config cfg.toml] [--algorithm NAME]
+                     [--layers L] [--hidden N] [--param-sparsity W] [--seed S]
+                     [--lr R] [--policy every-k|sequence|manual]
+                     [--update-every K] [--threads 1] [--schedule batched|round-robin]
+                     [--burst 16] [--max-resident 0] [--spill-dir serve-spill]
+                     [--quiet]
   sparse-rtrl train  [--config cfg.toml] [--param-sparsity W] [--iterations N]
                      [--seed S] [--algorithm NAME] [--cell NAME] [--layers L]
                      [--threads 1] [--out results/train_curve.csv]
@@ -41,7 +48,8 @@ USAGE:
                      [--layers 1,2,..] [--sparsity 0.0,0.8,..]
                      [--timesteps 17] [--sequences 30] [--warmup 3]
                      [--workers 1] [--threads 1] [--batch 1,8,..]
-                     [--out BENCH_rtrl.json]
+                     [--serve-tenants 16,64,..] [--serve-events N]
+                     [--serve-threads 2] [--out BENCH_rtrl.json]
   sparse-rtrl report <table1|fig1|fig2> [--n 16] [--layers 1] [--omega 0.8]
   sparse-rtrl stats  (--trace trace.jsonl | --snapshot stats.json) [--check]
   sparse-rtrl artifacts [--dir artifacts]
@@ -56,6 +64,16 @@ bench --batch B1,B2,.. adds shared-weight batch widths to the grid:
 rtrl-param cases step B lanes through one fused engine (width 1 included,
 so widths compare bit-identically); other engines step the extra lanes
 serially. Lane-0 gradients and op counts are batch-invariant.
+
+serve runs a long-lived multi-tenant session server over a line protocol
+(Unix socket with --socket, stdin/stdout otherwise): open/event/tick/run/
+stats/drain/shutdown requests, per-tenant queues drained in rounds. Tenants
+sharing one weight seed step through the fused batched path (--schedule
+batched; round-robin is the per-session baseline); --max-resident N spills
+idle sessions to binary snapshots in --spill-dir and re-admits them
+transparently. Drained checkpoints are bit-identical to offline `stream`
+runs. bench --serve-tenants/--serve-events/--serve-threads size the serve
+load-generator grid of the report's v7 `serve` block.
 
 stream formats: --resume autodetects the snapshot format from the file
 bytes (binary or json). --snapshot-format auto writes binary unless the
@@ -75,7 +93,7 @@ violations (see src/analysis/). --check exits non-zero on any violation;
 
 /// Subcommand list for unknown-command errors (kept in sync with `main`).
 const SUBCOMMANDS: &str =
-    "stream, train, sweep, bench, report, stats, artifacts, analyze, config-dump";
+    "stream, serve, train, sweep, bench, report, stats, artifacts, analyze, config-dump";
 
 /// Engine names from the single source of truth ([`AlgorithmKind::all`],
 /// the same registry `build_engine` dispatches on).
@@ -363,6 +381,82 @@ fn cmd_stream(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the multi-tenant session server: per-tenant event queues drained in
+/// rounds (shared-weight tenants step through the fused batched path), LRU
+/// spill to binary snapshots under `--max-resident`, line protocol over a
+/// Unix socket (`--socket`) or stdin/stdout.
+fn cmd_serve(mut args: Args) -> Result<()> {
+    let mut cfg = load_config(&mut args)?;
+    if let Some(alg) = args.get("algorithm") {
+        cfg.train.algorithm = parse_algorithm(&alg)?;
+    }
+    cfg.model.layers = args.get_parse("layers", cfg.model.layers).map_err(err)?;
+    if cfg.model.layers == 0 {
+        bail!("--layers must be ≥ 1");
+    }
+    cfg.model.hidden = args.get_parse("hidden", cfg.model.hidden).map_err(err)?;
+    if let Some(w) = args.get("param-sparsity") {
+        cfg.model.param_sparsity = w.parse().map_err(|_| anyhow!("bad --param-sparsity"))?;
+        if !(0.0..1.0).contains(&cfg.model.param_sparsity) {
+            bail!("--param-sparsity must be in [0,1)");
+        }
+    }
+    cfg.seed = args.get_parse("seed", cfg.seed).map_err(err)?;
+    cfg.train.lr = args.get_parse("lr", cfg.train.lr).map_err(err)?;
+    let update_every: u64 = args.get_parse("update-every", 1).map_err(err)?;
+    if update_every == 0 {
+        bail!("--update-every must be ≥ 1");
+    }
+    let policy = match args.get("policy").as_deref().unwrap_or("every-k") {
+        "every-k" => UpdatePolicy::EveryKSteps(update_every),
+        "sequence" => UpdatePolicy::EndOfSequence,
+        "manual" => UpdatePolicy::Manual,
+        other => bail!("unknown policy {other:?} (valid: every-k, sequence, manual)"),
+    };
+    let threads: usize = args.get_parse("threads", 1).map_err(err)?;
+    let max_resident: usize = args.get_parse("max-resident", 0).map_err(err)?;
+    let burst: usize = args.get_parse("burst", 16).map_err(err)?;
+    if burst == 0 {
+        bail!("--burst must be ≥ 1");
+    }
+    let schedule = {
+        let name = args.get("schedule").unwrap_or_else(|| "batched".into());
+        SchedulePolicy::from_name(&name).ok_or_else(|| {
+            anyhow!("unknown --schedule {name:?} (valid: batched, round-robin)")
+        })?
+    };
+    let spill_dir: PathBuf = args.get("spill-dir").unwrap_or_else(|| "serve-spill".into()).into();
+    let socket = args.get("socket");
+    let quiet = args.get_bool("quiet").map_err(err)?;
+    args.finish().map_err(err)?;
+
+    if !quiet {
+        eprintln!(
+            "serve: engine {}, n={}×L{}, ω={}, policy {policy:?}, schedule {}, burst {burst}, \
+             max-resident {max_resident}, threads {threads}",
+            cfg.train.algorithm.name(),
+            cfg.model.hidden,
+            cfg.model.layers,
+            cfg.model.param_sparsity,
+            schedule.name(),
+        );
+    }
+    let serve_cfg =
+        ServeConfig { base: cfg, policy, threads, max_resident, burst, spill_dir, schedule };
+    let mut sched = Scheduler::new(serve_cfg).map_err(|e| anyhow!("{e}"))?;
+    match socket {
+        Some(path) => {
+            serve_unix(&mut sched, Path::new(&path), quiet).map_err(|e| anyhow!("{e}"))?
+        }
+        None => serve_stdin(&mut sched).map_err(|e| anyhow!("{e}"))?,
+    }
+    if !quiet {
+        let snap = sched.stats();
+        eprint!("{}", render_serve_summary(&snap, sched.recorder(), sched.rounds()));
+    }
+    Ok(())
+}
+
 /// Render telemetry artifacts: a JSON-lines trace (`stream --trace`) or a
 /// serialized [`TelemetrySnapshot`]. `--check` validates a trace against
 /// the schema and prints a one-line summary instead of rendering.
@@ -524,6 +618,14 @@ fn cmd_bench(mut args: Args) -> Result<()> {
             bail!("--batch widths must be ≥ 1");
         }
     }
+    if let Some(s) = args.get("serve-tenants") {
+        cfg.serve_tenants = parse_csv(&s, "serve-tenants")?;
+        if cfg.serve_tenants.iter().any(|&t| t == 0) {
+            bail!("--serve-tenants counts must be ≥ 1");
+        }
+    }
+    cfg.serve_events = args.get_parse("serve-events", cfg.serve_events).map_err(err)?;
+    cfg.serve_threads = args.get_parse("serve-threads", cfg.serve_threads).map_err(err)?;
     let out: PathBuf = args.get("out").unwrap_or_else(|| "BENCH_rtrl.json".into()).into();
     args.finish().map_err(err)?;
     if cfg.engines.is_empty()
@@ -668,6 +770,7 @@ fn main() -> Result<()> {
     let args = Args::from_env().map_err(err)?;
     match args.pos(0) {
         Some("stream") => cmd_stream(args),
+        Some("serve") => cmd_serve(args),
         Some("train") => cmd_train(args),
         Some("sweep") => cmd_sweep(args),
         Some("bench") => cmd_bench(args),

@@ -6,7 +6,10 @@
 
 use crate::metrics::Phase;
 use crate::report::ascii_plot::plot;
-use crate::telemetry::{MetricPoint, TelemetrySnapshot, TraceEventKind, TraceRecord};
+use crate::telemetry::names;
+use crate::telemetry::{
+    HistogramSummary, MemoryRecorder, MetricPoint, TelemetrySnapshot, TraceEventKind, TraceRecord,
+};
 
 const PLOT_W: usize = 64;
 const PLOT_H: usize = 12;
@@ -60,6 +63,39 @@ pub fn render_snapshot(snap: &TelemetrySnapshot) -> String {
             s.points
         ));
     }
+    out
+}
+
+/// Render the serve-loop shutdown summary: rounds/events, the fused-vs-solo
+/// lane-step split, per-lane-step latency quantiles, then the pool snapshot
+/// table (residency churn + per-session rows) via [`render_snapshot`].
+pub fn render_serve_summary(
+    snap: &TelemetrySnapshot,
+    rec: &MemoryRecorder,
+    rounds: u64,
+) -> String {
+    let mut out = String::new();
+    let events = rec.counter_value(names::SERVE_EVENTS);
+    let fused = rec.counter_value(names::SERVE_FUSED_STEPS);
+    let solo = rec.counter_value(names::SERVE_SOLO_STEPS);
+    let lane_steps = fused + solo;
+    out.push_str(&format!("serve: {rounds} round(s), {events} event(s) applied\n"));
+    out.push_str(&format!(
+        "lane-steps: {lane_steps} ({fused} fused, {solo} solo, {:.1}% fused)\n",
+        100.0 * fused as f64 / lane_steps.max(1) as f64
+    ));
+    if let Some(h) = rec.histogram(names::SERVE_STEP_NS) {
+        let s = HistogramSummary::from_histogram(h);
+        out.push_str(&format!(
+            "lane-step latency ns: count {}, mean {}, p50 {}, p99 {}, max {}\n",
+            s.count,
+            s.mean(),
+            s.p50,
+            s.p99,
+            s.max
+        ));
+    }
+    out.push_str(&render_snapshot(snap));
     out
 }
 
@@ -209,6 +245,24 @@ mod tests {
         }];
         let r = render_trace(&records);
         assert!(r.contains("windows: 0"), "{r}");
+    }
+
+    #[test]
+    fn serve_summary_reports_split_latency_and_pool() {
+        use crate::telemetry::{HistogramKind, Recorder};
+        let mut rec = MemoryRecorder::new();
+        rec.counter(names::SERVE_EVENTS, 10);
+        rec.counter(names::SERVE_FUSED_STEPS, 6);
+        rec.counter(names::SERVE_SOLO_STEPS, 2);
+        for ns in [100, 200, 300, 400] {
+            rec.observe(names::SERVE_STEP_NS, HistogramKind::LatencyNs, ns);
+        }
+        let snap = TelemetrySnapshot { live_sessions: 3, ..TelemetrySnapshot::default() };
+        let r = render_serve_summary(&snap, &rec, 4);
+        assert!(r.contains("serve: 4 round(s), 10 event(s) applied"), "{r}");
+        assert!(r.contains("lane-steps: 8 (6 fused, 2 solo, 75.0% fused)"), "{r}");
+        assert!(r.contains("lane-step latency ns: count 4"), "{r}");
+        assert!(r.contains("3 live session(s)"), "{r}");
     }
 
     #[test]

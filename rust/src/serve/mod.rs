@@ -1,0 +1,102 @@
+//! `sparse-rtrl serve`: a long-lived multi-tenant serving loop on top of
+//! [`crate::session::SessionPool`] — the production shape of the paper's
+//! per-user online-learning story.
+//!
+//! Tenants (named users) each own a private [`crate::session::OnlineSession`]
+//! and an event queue. The pieces:
+//!
+//! * [`Scheduler`] — drains the per-tenant queues in rounds. Ready tenants
+//!   whose sessions share one weight-and-mask set step through the pool's
+//!   fused shared-weight path ([`crate::session::SessionPool::step_batched_runs`],
+//!   one influence-structure build and one lane state transfer amortized
+//!   across the whole group and burst), everyone else steps per-session;
+//!   [`RoundReport`] carries the per-round batching stats. A naive
+//!   per-session mode ([`SchedulePolicy::RoundRobin`]) exists purely as the
+//!   serve-bench baseline.
+//! * LRU residency — a `--max-resident` budget caps live sessions; the
+//!   least-recently-scheduled tenant spills to a binary snapshot
+//!   ([`crate::session::SessionPool::evict_id`]) and is transparently
+//!   re-admitted on its next event, with cold-start latency landing in the
+//!   pool's existing telemetry histograms.
+//! * [`server`] — the line protocol over a Unix-domain socket or stdin:
+//!   tenant-framed event payloads in any [`crate::session::EventFormat`]
+//!   (autodetected per payload), a `stats` request answering with a
+//!   [`crate::telemetry::TelemetrySnapshot`], and graceful
+//!   drain-to-checkpoint on shutdown. Drained checkpoints are bit-identical
+//!   to an offline `stream` run of the same events (pinned by
+//!   `tests/serve.rs` and the CI serve arm).
+//! * [`crate::bench::serve`] — the deterministic load generator behind
+//!   `bench`'s `serve` block (events/sec, p50/p99 step latency vs tenant
+//!   count and resident budget).
+//!
+//! Failures are typed ([`ServeError`]) end to end — a corrupt spill file,
+//! an unknown tenant, a malformed payload and a transport error are all
+//! distinct, and none of them panic the server.
+
+pub mod scheduler;
+pub mod server;
+
+pub use scheduler::{RoundReport, SchedulePolicy, Scheduler, ServeConfig};
+pub use server::{serve_io, serve_stdin, serve_unix};
+
+use crate::session::{EventError, PoolError};
+
+/// Typed failure of the serve subsystem. Protocol-level errors render as
+/// one `err …` reply line and keep the server alive; transport errors
+/// ([`ServeError::Io`]) end the connection.
+#[derive(Debug)]
+pub enum ServeError {
+    /// A pool spill/restore operation failed underneath the scheduler.
+    Pool(PoolError),
+    /// A tenant's event payload failed to parse. Transactional: nothing
+    /// from the payload was queued.
+    Event { tenant: String, source: EventError },
+    /// A request names a tenant that was never opened.
+    UnknownTenant { name: String },
+    /// A tenant name the protocol refuses (empty, too long, or containing
+    /// characters outside `[A-Za-z0-9._-]`).
+    BadTenant { name: String, detail: String },
+    /// A malformed protocol request.
+    Protocol { detail: String },
+    /// The transport (socket, stdin/stdout) failed.
+    Io { detail: String },
+    /// An event parsed but is impossible for the tenant's session — wrong
+    /// input width, or a regression target of the wrong length.
+    Session { tenant: String, detail: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Pool(e) => write!(f, "pool: {e}"),
+            ServeError::Event { tenant, source } => {
+                write!(f, "tenant {tenant}: bad payload: {source}")
+            }
+            ServeError::UnknownTenant { name } => {
+                write!(f, "unknown tenant {name:?} (open it first)")
+            }
+            ServeError::BadTenant { name, detail } => {
+                write!(f, "bad tenant name {name:?}: {detail}")
+            }
+            ServeError::Protocol { detail } => write!(f, "bad request: {detail}"),
+            ServeError::Io { detail } => write!(f, "transport: {detail}"),
+            ServeError::Session { tenant, detail } => write!(f, "tenant {tenant}: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Pool(e) => Some(e),
+            ServeError::Event { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<PoolError> for ServeError {
+    fn from(e: PoolError) -> Self {
+        ServeError::Pool(e)
+    }
+}

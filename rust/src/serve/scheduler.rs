@@ -1,0 +1,734 @@
+//! The serve scheduler: per-tenant event queues drained in rounds, fused
+//! shared-weight stepping, and LRU residency under a `--max-resident`
+//! budget.
+//!
+//! # Scheduling model
+//!
+//! Each tenant owns a FIFO queue of [`StreamEvent`]s. A round picks the
+//! *ready* tenants (non-empty queue), least recently scheduled first,
+//! truncated to the resident budget. A control event at the head of a
+//! tenant's queue (update / end-of-sequence) applies immediately; tenants
+//! with a step at the head contribute a **run** of consecutive steps to
+//! this round. Runs fuse through
+//! [`SessionPool::step_batched_runs`], which groups lanes by exact weight
+//! identity and amortizes both the per-step influence-structure build and
+//! the per-lane state transfer across the whole group and run. Tenants
+//! with at least [`ServeConfig::burst`] steps queued run the full burst;
+//! the stragglers share the longest uniform run they can all supply, so
+//! every ready tenant progresses every round.
+//!
+//! # Residency
+//!
+//! With `max_resident = R > 0`, at most `R` sessions stay live. The
+//! least-recently-scheduled resident spills to a binary snapshot in
+//! [`ServeConfig::spill_dir`] ([`SessionPool::evict_id`]); a spilled
+//! tenant's next event transparently re-admits it
+//! ([`SessionPool::admit_id`]) — bit-exactly, with the cold-start latency
+//! recorded in the pool's resume histogram. One `last_active` stamp drives
+//! both the scheduling order and the eviction choice.
+//!
+//! # Determinism
+//!
+//! Learner outcomes never depend on the wall clock or ambient RNG: time is
+//! read only for latency telemetry, and the round structure is a pure
+//! function of queue contents and the budget. The serve-bench equivalence
+//! tests (`tests/serve.rs`) pin that drained checkpoints are bit-identical
+//! across resident budgets and against an offline `stream` run.
+
+use super::ServeError;
+use crate::config::ExperimentConfig;
+use crate::data::StepTarget;
+use crate::session::{
+    BatchStats, SessionBuilder, SessionId, SessionPool, SnapshotFormat, StreamEvent, UpdatePolicy,
+};
+use crate::telemetry::names;
+use crate::telemetry::{HistogramKind, MemoryRecorder, Recorder, TelemetrySnapshot};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// How a round steps its ready tenants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Fuse shared-weight tenants through
+    /// [`SessionPool::step_batched_runs`] (the default).
+    Batched,
+    /// Step every tenant per-session — the naive baseline the serve bench
+    /// measures batching against.
+    RoundRobin,
+}
+
+impl SchedulePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulePolicy::Batched => "batched",
+            SchedulePolicy::RoundRobin => "round-robin",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "batched" => Some(SchedulePolicy::Batched),
+            "round-robin" => Some(SchedulePolicy::RoundRobin),
+            _ => None,
+        }
+    }
+}
+
+/// Everything a [`Scheduler`] needs to know up front. Every tenant session
+/// is built from `base` (only the seed may vary per tenant), so one serve
+/// process hosts one model family — the shape that makes fused stepping
+/// possible at all.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Model/task/training description shared by all tenants.
+    pub base: ExperimentConfig,
+    /// Update policy for every tenant session.
+    pub policy: UpdatePolicy,
+    /// Intra-step kernel threads per session / fused group.
+    pub threads: usize,
+    /// Maximum live sessions; `0` = unlimited (nothing ever spills).
+    pub max_resident: usize,
+    /// Longest step run fused per tenant per round (≥ 1).
+    pub burst: usize,
+    /// Where evicted sessions spill their binary snapshots.
+    pub spill_dir: PathBuf,
+    /// Batched fusion or the per-session baseline.
+    pub schedule: SchedulePolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            base: ExperimentConfig::default(),
+            policy: UpdatePolicy::EveryKSteps(1),
+            threads: 1,
+            max_resident: 0,
+            burst: 16,
+            spill_dir: PathBuf::from("serve-spill"),
+            schedule: SchedulePolicy::Batched,
+        }
+    }
+}
+
+/// Where a tenant's session currently lives.
+enum Residency {
+    Resident(SessionId),
+    Spilled(PathBuf),
+}
+
+struct Tenant {
+    queue: VecDeque<StreamEvent>,
+    residency: Residency,
+    /// Round stamp of the tenant's last scheduled event — the shared LRU
+    /// key for scheduling order and eviction choice.
+    last_active: u64,
+}
+
+/// What one [`Scheduler::run_round`] did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundReport {
+    /// The round's number (0-based).
+    pub round: u64,
+    /// Tenants that consumed at least one event.
+    pub scheduled: usize,
+    /// Step events applied.
+    pub steps: u64,
+    /// Control events (update / end-of-sequence) applied.
+    pub control: u64,
+    /// How the step events ran (lanes counted once per fused call).
+    pub batch: BatchStats,
+}
+
+/// The multi-tenant serving loop. See the module docs for the scheduling
+/// and residency model; [`crate::serve::server`] drives this over a socket
+/// or stdin, [`crate::bench::serve`] drives it as a load generator.
+pub struct Scheduler {
+    cfg: ServeConfig,
+    pool: SessionPool,
+    tenants: BTreeMap<String, Tenant>,
+    rounds: u64,
+    recorder: MemoryRecorder,
+    /// `(n_in, n_out)` of the shared model family, set by the first open —
+    /// enqueue validates event shapes against it so malformed events are
+    /// rejected at ingestion, never mid-round.
+    io_shape: Option<(usize, usize)>,
+}
+
+fn internal(name: &str, what: &str) -> ServeError {
+    ServeError::Protocol { detail: format!("internal: tenant {name}: {what}") }
+}
+
+fn validate_name(name: &str) -> Result<(), ServeError> {
+    let bad =
+        |detail: &str| ServeError::BadTenant { name: name.to_string(), detail: detail.into() };
+    if name.is_empty() {
+        return Err(bad("empty"));
+    }
+    if name.len() > 64 {
+        return Err(bad("longer than 64 bytes"));
+    }
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphanumeric() => {}
+        _ => return Err(bad("must start with an ASCII letter or digit")),
+    }
+    if !name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')) {
+        return Err(bad("only [A-Za-z0-9._-] allowed"));
+    }
+    Ok(())
+}
+
+impl Scheduler {
+    /// Create an empty scheduler, ensuring the spill directory exists.
+    /// Pool telemetry is always on — the `stats` request needs it.
+    pub fn new(cfg: ServeConfig) -> Result<Self, ServeError> {
+        std::fs::create_dir_all(&cfg.spill_dir).map_err(|e| ServeError::Io {
+            detail: format!("cannot create spill dir {}: {e}", cfg.spill_dir.display()),
+        })?;
+        let mut pool = SessionPool::new(Vec::new(), cfg.threads);
+        pool.enable_telemetry();
+        Ok(Scheduler {
+            cfg,
+            pool,
+            tenants: BTreeMap::new(),
+            rounds: 0,
+            recorder: MemoryRecorder::new(),
+            io_shape: None,
+        })
+    }
+
+    /// Open a tenant: build its session from the base config (seed
+    /// overridable per tenant) and make it resident, evicting the LRU
+    /// resident first if the budget is full. Returns `false` (and does
+    /// nothing) if the tenant already exists — opens are idempotent.
+    pub fn open(&mut self, name: &str, seed: Option<u64>) -> Result<bool, ServeError> {
+        validate_name(name)?;
+        if self.tenants.contains_key(name) {
+            return Ok(false);
+        }
+        let mut cfg = self.cfg.base.clone();
+        if let Some(s) = seed {
+            cfg.seed = s;
+        }
+        let mut session = SessionBuilder::from_config(cfg)
+            .policy(self.cfg.policy)
+            .predict_always(true)
+            .build();
+        session.set_threads(self.cfg.threads);
+        let shape = (session.net().n_in(), session.n_out());
+        self.io_shape.get_or_insert(shape);
+        if self.cfg.max_resident > 0 {
+            let nobody = BTreeSet::new();
+            while self.pool.len() >= self.cfg.max_resident {
+                if self.evict_lru(&nobody)?.is_none() {
+                    break;
+                }
+            }
+        }
+        let id = self.pool.insert(session);
+        self.tenants.insert(
+            name.to_string(),
+            Tenant {
+                queue: VecDeque::new(),
+                residency: Residency::Resident(id),
+                last_active: self.rounds,
+            },
+        );
+        Ok(true)
+    }
+
+    /// Queue events for a tenant — transactional: either every event is
+    /// accepted or (on an unknown tenant or a shape-invalid event) none
+    /// are. Returns the number queued.
+    pub fn enqueue(&mut self, name: &str, events: Vec<StreamEvent>) -> Result<usize, ServeError> {
+        if !self.tenants.contains_key(name) {
+            return Err(ServeError::UnknownTenant { name: name.to_string() });
+        }
+        let Some((n_in, n_out)) = self.io_shape else {
+            return Err(internal(name, "tenant exists but the io shape was never set"));
+        };
+        for ev in &events {
+            if let StreamEvent::Step { x, target } = ev {
+                if x.len() != n_in {
+                    return Err(ServeError::Session {
+                        tenant: name.to_string(),
+                        detail: format!("event has {} inputs, the model takes {n_in}", x.len()),
+                    });
+                }
+                if let StepTarget::Vector(t) = target {
+                    if t.len() != n_out {
+                        return Err(ServeError::Session {
+                            tenant: name.to_string(),
+                            detail: format!(
+                                "regression target has {} values, the readout emits {n_out}",
+                                t.len()
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        let n = events.len();
+        if let Some(t) = self.tenants.get_mut(name) {
+            t.queue.extend(events);
+        }
+        Ok(n)
+    }
+
+    /// Run one scheduling round. See the module docs for the exact model;
+    /// a round with nothing queued returns `scheduled = 0` and advances
+    /// nothing.
+    pub fn run_round(&mut self) -> Result<RoundReport, ServeError> {
+        let round = self.rounds;
+        let mut report = RoundReport { round, ..RoundReport::default() };
+
+        // Ready tenants, least recently scheduled first — the same LRU
+        // order eviction uses, so the budget rotates fairly.
+        let mut ready: Vec<(u64, String)> = self
+            .tenants
+            .iter()
+            .filter(|(_, t)| !t.queue.is_empty())
+            .map(|(n, t)| (t.last_active, n.clone()))
+            .collect();
+        ready.sort();
+        if self.cfg.max_resident > 0 {
+            ready.truncate(self.cfg.max_resident);
+        }
+        if ready.is_empty() {
+            return Ok(report);
+        }
+        let ready_names: BTreeSet<String> = ready.iter().map(|(_, n)| n.clone()).collect();
+
+        // Residency: re-admit every spilled ready tenant, spilling idle
+        // LRU residents as needed to respect the budget.
+        for (_, name) in &ready {
+            if self.is_spilled(name) {
+                if self.cfg.max_resident > 0 {
+                    while self.pool.len() >= self.cfg.max_resident {
+                        if self.evict_lru(&ready_names)?.is_none() {
+                            break;
+                        }
+                    }
+                }
+                self.admit_tenant(name)?;
+            }
+        }
+
+        // One event class per tenant per round: a control event at the
+        // head applies immediately; step tenants join the fused runs.
+        let mut step_names: Vec<String> = Vec::new();
+        for (_, name) in &ready {
+            let Some(t) = self.tenants.get_mut(name) else { continue };
+            match t.queue.front() {
+                Some(StreamEvent::Step { .. }) => step_names.push(name.clone()),
+                Some(_) => {
+                    let ev = t.queue.pop_front();
+                    t.last_active = round;
+                    let Residency::Resident(id) = &t.residency else {
+                        return Err(internal(name, "control event on a non-resident tenant"));
+                    };
+                    let Some(s) = self.pool.session_by_id_mut(*id) else {
+                        return Err(internal(name, "resident id missing from the pool"));
+                    };
+                    match ev {
+                        Some(StreamEvent::Update) => s.update_now(),
+                        Some(StreamEvent::EndSequence) => {
+                            // mirror `stream`'s `!end`: close the sequence,
+                            // immediately begin the next
+                            s.end_sequence();
+                            s.begin_sequence();
+                        }
+                        _ => {}
+                    }
+                    report.control += 1;
+                    report.scheduled += 1;
+                }
+                None => {}
+            }
+        }
+
+        // Burst policy: tenants with a full burst of consecutive steps
+        // queued fuse at `burst`; the stragglers share the longest uniform
+        // run they can all supply. Heavy queues amortize the lane state
+        // transfer over the full burst, light ones still progress.
+        let burst = self.cfg.burst.max(1);
+        let mut full: Vec<(usize, String)> = Vec::new();
+        let mut short: Vec<(usize, String)> = Vec::new();
+        let mut k_short = burst;
+        for name in &step_names {
+            let Some(t) = self.tenants.get(name) else { continue };
+            let Residency::Resident(id) = &t.residency else {
+                return Err(internal(name, "step event on a non-resident tenant"));
+            };
+            let Some(slot) = self.pool.slot_of(*id) else {
+                return Err(internal(name, "resident id missing from the pool"));
+            };
+            let lead = t
+                .queue
+                .iter()
+                .take(burst)
+                .take_while(|e| matches!(e, StreamEvent::Step { .. }))
+                .count();
+            if lead >= burst {
+                full.push((slot, name.clone()));
+            } else {
+                k_short = k_short.min(lead);
+                short.push((slot, name.clone()));
+            }
+        }
+        if short.is_empty() {
+            k_short = 0;
+        }
+
+        for (mut lanes, k) in [(full, burst), (short, k_short)] {
+            if lanes.is_empty() || k == 0 {
+                continue;
+            }
+            lanes.sort();
+            let mut slots: Vec<usize> = Vec::with_capacity(lanes.len());
+            let mut runs: Vec<Vec<(Vec<f32>, StepTarget)>> = Vec::with_capacity(lanes.len());
+            for (slot, name) in &lanes {
+                let Some(t) = self.tenants.get_mut(name) else { continue };
+                let mut run = Vec::with_capacity(k);
+                while run.len() < k {
+                    match t.queue.pop_front() {
+                        Some(StreamEvent::Step { x, target }) => run.push((x, target)),
+                        Some(other) => {
+                            t.queue.push_front(other);
+                            break;
+                        }
+                        None => break,
+                    }
+                }
+                t.last_active = round;
+                if run.len() == k {
+                    slots.push(*slot);
+                    runs.push(run);
+                } else {
+                    // defensive: a queue that changed shape under us still
+                    // steps, just per-session
+                    report.steps += run.len() as u64;
+                    report.scheduled += 1;
+                    report.batch.solo += 1;
+                    self.recorder.counter(names::SERVE_SOLO_STEPS, run.len() as u64);
+                    let s = self.pool.session_mut(*slot);
+                    for (x, tgt) in &run {
+                        let _ = s.step(x, tgt.as_target());
+                    }
+                }
+            }
+            if slots.is_empty() {
+                continue;
+            }
+            let lane_steps = (slots.len() * k) as u64;
+            // wall clock feeds latency telemetry only; learner state stays clock-free
+            let t0 = Instant::now();
+            let stats = match self.cfg.schedule {
+                SchedulePolicy::Batched => self.pool.step_batched_runs(&slots, &runs).1,
+                SchedulePolicy::RoundRobin => {
+                    let mut st = BatchStats::default();
+                    for (j, &slot) in slots.iter().enumerate() {
+                        let s = self.pool.session_mut(slot);
+                        for (x, tgt) in &runs[j] {
+                            let _ = s.step(x, tgt.as_target());
+                        }
+                        st.solo += 1;
+                    }
+                    st
+                }
+            };
+            let per_step_ns = (t0.elapsed().as_nanos() as u64) / lane_steps.max(1);
+            for _ in 0..lane_steps {
+                self.recorder.observe(names::SERVE_STEP_NS, HistogramKind::LatencyNs, per_step_ns);
+            }
+            self.recorder.counter(names::SERVE_FUSED_STEPS, (stats.fused_lanes * k) as u64);
+            self.recorder.counter(names::SERVE_SOLO_STEPS, (stats.solo * k) as u64);
+            report.batch.fused_groups += stats.fused_groups;
+            report.batch.fused_lanes += stats.fused_lanes;
+            report.batch.solo += stats.solo;
+            report.steps += lane_steps;
+            report.scheduled += slots.len();
+        }
+
+        self.recorder.counter(names::SERVE_ROUNDS, 1);
+        self.recorder.counter(names::SERVE_EVENTS, report.steps + report.control);
+        self.rounds += 1;
+        Ok(report)
+    }
+
+    /// Run rounds until every queue is empty. Returns the number of rounds
+    /// that did work.
+    pub fn run_until_idle(&mut self) -> Result<u64, ServeError> {
+        let mut rounds = 0u64;
+        loop {
+            let r = self.run_round()?;
+            if r.scheduled == 0 {
+                return Ok(rounds);
+            }
+            rounds += 1;
+        }
+    }
+
+    /// Graceful shutdown: apply every queued event, then checkpoint every
+    /// tenant to its spill path (binary snapshots, same codec as `stream
+    /// --checkpoint`). Returns `(tenant, snapshot path)` pairs, every
+    /// tenant included — already-spilled ones report their existing file.
+    pub fn drain(&mut self) -> Result<Vec<(String, PathBuf)>, ServeError> {
+        self.run_until_idle()?;
+        let names: Vec<String> = self.tenants.keys().cloned().collect();
+        let mut out = Vec::with_capacity(names.len());
+        for name in names {
+            let path = self.spill_path(&name);
+            let Some(t) = self.tenants.get_mut(&name) else { continue };
+            if let Residency::Resident(id) = &t.residency {
+                let id = *id;
+                self.pool.evict_id(id, &path, SnapshotFormat::Binary)?;
+                t.residency = Residency::Spilled(path.clone());
+            }
+            out.push((name, path));
+        }
+        Ok(out)
+    }
+
+    /// Pool-level telemetry (live sessions, admissions/evictions, spill
+    /// bytes, cold-start latency histograms, one row per live session) —
+    /// the `stats` request's reply.
+    pub fn stats(&self) -> TelemetrySnapshot {
+        self.pool.telemetry_snapshot()
+    }
+
+    /// The scheduler's own metrics: rounds, events, fused vs solo step
+    /// counts, per-step latency histogram (`serve.*` names).
+    pub fn recorder(&self) -> &MemoryRecorder {
+        &self.recorder
+    }
+
+    /// Total events still queued across all tenants.
+    pub fn pending(&self) -> usize {
+        self.tenants.values().map(|t| t.queue.len()).sum()
+    }
+
+    /// Rounds run so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// The configuration the scheduler was built with.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// The underlying pool (telemetry inspection in tests and benches).
+    pub fn pool(&self) -> &SessionPool {
+        &self.pool
+    }
+
+    /// All tenant names, sorted.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+
+    /// Whether a tenant's session is currently live (`None`: no such
+    /// tenant).
+    pub fn is_resident(&self, name: &str) -> Option<bool> {
+        self.tenants.get(name).map(|t| matches!(t.residency, Residency::Resident(_)))
+    }
+
+    /// The snapshot path tenant `name` spills to.
+    pub fn spill_path(&self, name: &str) -> PathBuf {
+        self.cfg.spill_dir.join(format!("{name}.snap"))
+    }
+
+    fn is_spilled(&self, name: &str) -> bool {
+        matches!(self.tenants.get(name), Some(Tenant { residency: Residency::Spilled(_), .. }))
+    }
+
+    /// Spill the least-recently-scheduled resident tenant not in
+    /// `exclude`. `Ok(None)`: nobody evictable.
+    fn evict_lru(&mut self, exclude: &BTreeSet<String>) -> Result<Option<String>, ServeError> {
+        let victim: Option<(u64, String)> = self
+            .tenants
+            .iter()
+            .filter(|(n, t)| {
+                !exclude.contains(*n) && matches!(t.residency, Residency::Resident(_))
+            })
+            .map(|(n, t)| (t.last_active, n.clone()))
+            .min();
+        let Some((_, name)) = victim else { return Ok(None) };
+        let path = self.spill_path(&name);
+        let Some(t) = self.tenants.get_mut(&name) else { return Ok(None) };
+        let Residency::Resident(id) = &t.residency else { return Ok(None) };
+        let id = *id;
+        self.pool.evict_id(id, &path, SnapshotFormat::Binary)?;
+        t.residency = Residency::Spilled(path.clone());
+        Ok(Some(name))
+    }
+
+    /// Restore a spilled tenant's session (bit-exact) and delete its spill
+    /// file. Runtime knobs never travel in snapshots, so the thread count
+    /// is re-applied here.
+    fn admit_tenant(&mut self, name: &str) -> Result<(), ServeError> {
+        let Some(t) = self.tenants.get(name) else {
+            return Err(ServeError::UnknownTenant { name: name.to_string() });
+        };
+        let Residency::Spilled(path) = &t.residency else { return Ok(()) };
+        let path = path.clone();
+        let id = self.pool.admit_id(&path)?;
+        if let Some(s) = self.pool.session_by_id_mut(id) {
+            s.set_threads(self.cfg.threads);
+        }
+        std::fs::remove_file(&path).ok();
+        if let Some(t) = self.tenants.get_mut(name) {
+            t.residency = Residency::Resident(id);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgorithmKind;
+
+    fn test_cfg(tag: &str) -> ServeConfig {
+        let mut base = ExperimentConfig::default();
+        base.model.hidden = 6;
+        base.model.param_sparsity = 0.5;
+        base.train.algorithm = AlgorithmKind::RtrlParam;
+        ServeConfig {
+            base,
+            policy: UpdatePolicy::Manual,
+            spill_dir: std::env::temp_dir()
+                .join(format!("sparse-rtrl-serve-{tag}-{}", std::process::id())),
+            ..ServeConfig::default()
+        }
+    }
+
+    fn steps(n: usize, salt: u64) -> Vec<StreamEvent> {
+        (0..n)
+            .map(|i| StreamEvent::Step {
+                x: vec![((i as u64 + salt) as f32 * 0.37).sin(), 0.25],
+                target: if i % 2 == 0 { StepTarget::Class(i % 2) } else { StepTarget::None },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tenant_names_are_validated() {
+        let mut sched = Scheduler::new(test_cfg("names")).unwrap();
+        assert!(sched.open("alice", None).unwrap());
+        assert!(!sched.open("alice", None).unwrap(), "reopen is idempotent");
+        assert!(sched.open("user-2.prod_x", Some(7)).unwrap());
+        for bad in ["", "-dash", "has space", ".dot", "a/b", &"x".repeat(65)] {
+            assert!(
+                matches!(sched.open(bad, None), Err(ServeError::BadTenant { .. })),
+                "{bad:?} must be rejected"
+            );
+        }
+        std::fs::remove_dir_all(&sched.cfg.spill_dir).ok();
+    }
+
+    #[test]
+    fn enqueue_is_transactional_and_shape_checked() {
+        let mut sched = Scheduler::new(test_cfg("shapes")).unwrap();
+        sched.open("a", None).unwrap();
+        assert!(matches!(
+            sched.enqueue("ghost", steps(1, 0)),
+            Err(ServeError::UnknownTenant { .. })
+        ));
+        // wrong input width rejects the whole payload
+        let mut evs = steps(2, 0);
+        evs.push(StreamEvent::Step { x: vec![1.0], target: StepTarget::None });
+        assert!(matches!(sched.enqueue("a", evs), Err(ServeError::Session { .. })));
+        assert_eq!(sched.pending(), 0, "nothing from a rejected payload is queued");
+        // wrong regression-target length too
+        let evs = vec![StreamEvent::Step {
+            x: vec![0.1, 0.2],
+            target: StepTarget::Vector(vec![0.5]),
+        }];
+        assert!(matches!(sched.enqueue("a", evs), Err(ServeError::Session { .. })));
+        assert_eq!(sched.enqueue("a", steps(3, 1)).unwrap(), 3);
+        assert_eq!(sched.pending(), 3);
+        std::fs::remove_dir_all(&sched.cfg.spill_dir).ok();
+    }
+
+    /// Three tenants under a budget of one: every round evicts somebody,
+    /// yet all queues drain, all events apply, and drained snapshots exist
+    /// for everyone.
+    #[test]
+    fn lru_budget_churns_and_still_drains_everyone() {
+        let mut cfg = test_cfg("lru");
+        cfg.max_resident = 1;
+        let dir = cfg.spill_dir.clone();
+        let mut sched = Scheduler::new(cfg).unwrap();
+        for (i, name) in ["a", "b", "c"].iter().enumerate() {
+            sched.open(name, Some(50 + i as u64)).unwrap();
+            sched.enqueue(name, steps(4 + i, i as u64)).unwrap();
+        }
+        assert_eq!(sched.pool().len(), 1, "budget holds after opens");
+        let rounds = sched.run_until_idle().unwrap();
+        assert!(rounds >= 3, "a budget of one forces one tenant per round");
+        assert_eq!(sched.pending(), 0);
+        let snap = sched.stats();
+        assert!(snap.evictions >= 2, "churn must evict");
+        assert!(snap.admissions >= 2, "churn must re-admit");
+        let paths = sched.drain().unwrap();
+        assert_eq!(paths.len(), 3);
+        for (name, p) in &paths {
+            assert!(p.exists(), "tenant {name} must have a drained snapshot");
+        }
+        // per-tenant step counts survived the churn: 4 + 5 + 6 events
+        let evs = sched.recorder().counter_value(names::SERVE_EVENTS);
+        assert_eq!(evs, 15);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Shared-weight tenants fuse; the round-robin baseline never does.
+    #[test]
+    fn batched_rounds_fuse_shared_weights() {
+        let run = |schedule: SchedulePolicy, tag: &str| {
+            let mut cfg = test_cfg(tag);
+            cfg.schedule = schedule;
+            cfg.burst = 4;
+            let dir = cfg.spill_dir.clone();
+            let mut sched = Scheduler::new(cfg).unwrap();
+            for name in ["a", "b", "c"] {
+                sched.open(name, Some(9)).unwrap(); // same seed → shared weights
+                sched.enqueue(name, steps(8, 3)).unwrap();
+            }
+            sched.run_until_idle().unwrap();
+            let fused = sched.recorder().counter_value(names::SERVE_FUSED_STEPS);
+            let solo = sched.recorder().counter_value(names::SERVE_SOLO_STEPS);
+            std::fs::remove_dir_all(&dir).ok();
+            (fused, solo)
+        };
+        let (fused_b, solo_b) = run(SchedulePolicy::Batched, "fuse-b");
+        assert_eq!((fused_b, solo_b), (24, 0), "3 tenants × 8 steps all fuse");
+        let (fused_r, solo_r) = run(SchedulePolicy::RoundRobin, "fuse-r");
+        assert_eq!((fused_r, solo_r), (0, 24), "round-robin never fuses");
+    }
+
+    /// Control events interleave with bursts in queue order: `!update`
+    /// and `!end` apply exactly once, exactly in place.
+    #[test]
+    fn control_events_apply_in_stream_order() {
+        let cfg = test_cfg("control");
+        let dir = cfg.spill_dir.clone();
+        let mut sched = Scheduler::new(cfg).unwrap();
+        sched.open("a", None).unwrap();
+        let mut evs = steps(3, 0);
+        evs.push(StreamEvent::Update);
+        evs.extend(steps(2, 9));
+        evs.push(StreamEvent::EndSequence);
+        sched.enqueue("a", evs).unwrap();
+        sched.run_until_idle().unwrap();
+        assert_eq!(sched.pending(), 0);
+        let snap = sched.stats();
+        assert_eq!(snap.sessions.len(), 1);
+        assert_eq!(snap.sessions[0].steps, 5, "5 step events");
+        assert_eq!(snap.sessions[0].updates_applied, 1, "one !update");
+        assert_eq!(sched.recorder().counter_value(names::SERVE_EVENTS), 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

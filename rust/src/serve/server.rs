@@ -1,0 +1,338 @@
+//! The serve transport: a line-oriented request protocol over a
+//! Unix-domain socket ([`serve_unix`]) or stdin/stdout ([`serve_stdin`]),
+//! both thin wrappers around the transport-agnostic [`serve_io`].
+//!
+//! # Protocol
+//!
+//! Requests are single lines of whitespace-separated words; the only
+//! binary framing is the event payload, which follows its header line
+//! verbatim:
+//!
+//! ```text
+//! open <tenant> [seed]        -> ok open <tenant>
+//! event <tenant> <nbytes>     -> ok event <tenant> <n-queued>
+//!   (followed by exactly <nbytes> payload bytes and one '\n';
+//!    the payload is a complete event stream in any EventFormat —
+//!    text, JSONL or binary — autodetected per payload)
+//! tick                        -> ok tick <tenants-scheduled>
+//! run                         -> ok run <rounds>
+//! stats                       -> ok stats <nbytes>   (then <nbytes> of JSON + '\n')
+//! drain                       -> ok drain <n-tenants>
+//! shutdown                    -> ok drain-first, then ok shutdown <n-tenants>
+//! ```
+//!
+//! Request failures (unknown tenant, malformed payload, bad framing
+//! numbers) answer with one `err <detail>` line and keep the connection
+//! alive; transport failures and payload-framing corruption end the
+//! connection. The `stats` reply is byte-counted because the
+//! [`crate::telemetry::TelemetrySnapshot`] JSON is multi-line.
+
+use super::{Scheduler, ServeError};
+use crate::session::parse_payload;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::os::unix::net::UnixListener;
+use std::path::Path;
+
+/// Largest accepted event payload (16 MiB). An `event` header declaring
+/// more is rejected — after the payload is consumed, so the stream stays
+/// framed.
+pub const MAX_PAYLOAD: usize = 16 << 20;
+
+fn io_err(e: std::io::Error) -> ServeError {
+    ServeError::Io { detail: e.to_string() }
+}
+
+fn proto(detail: impl Into<String>) -> ServeError {
+    ServeError::Protocol { detail: detail.into() }
+}
+
+/// Handle one request line (plus its payload, for `event`). `Ok(Some(s))`
+/// is the success reply; `Ok(None)` means shutdown was requested (the
+/// reply is already written by the caller from the returned drain count —
+/// see [`serve_io`]). Any `Err` becomes an `err …` line unless it is
+/// transport-level.
+fn handle(
+    sched: &mut Scheduler,
+    words: &[&str],
+    reader: &mut impl BufRead,
+) -> Result<String, ServeError> {
+    match words {
+        ["open", tenant] => {
+            sched.open(tenant, None)?;
+            Ok(format!("ok open {tenant}"))
+        }
+        ["open", tenant, seed] => {
+            let seed: u64 =
+                seed.parse().map_err(|_| proto(format!("seed {seed:?} is not a u64")))?;
+            sched.open(tenant, Some(seed))?;
+            Ok(format!("ok open {tenant}"))
+        }
+        ["event", tenant, nbytes] => {
+            let n: usize =
+                nbytes.parse().map_err(|_| proto(format!("size {nbytes:?} is not a byte count")))?;
+            if n > MAX_PAYLOAD {
+                // consume payload + terminator so the stream stays framed
+                let mut sink = std::io::sink();
+                std::io::copy(&mut reader.take(n as u64 + 1), &mut sink).map_err(io_err)?;
+                return Err(proto(format!("payload of {n} bytes exceeds {MAX_PAYLOAD}")));
+            }
+            let mut payload = vec![0u8; n];
+            reader.read_exact(&mut payload).map_err(io_err)?;
+            let mut nl = [0u8; 1];
+            reader.read_exact(&mut nl).map_err(io_err)?;
+            if nl[0] != b'\n' {
+                // framing corruption — unrecoverable on this connection
+                return Err(ServeError::Io {
+                    detail: "event payload is not terminated by a newline".into(),
+                });
+            }
+            let events = parse_payload(&payload)
+                .map_err(|source| ServeError::Event { tenant: tenant.to_string(), source })?;
+            let queued = sched.enqueue(tenant, events)?;
+            Ok(format!("ok event {tenant} {queued}"))
+        }
+        ["tick"] => {
+            let r = sched.run_round()?;
+            Ok(format!("ok tick {}", r.scheduled))
+        }
+        ["run"] => {
+            let rounds = sched.run_until_idle()?;
+            Ok(format!("ok run {rounds}"))
+        }
+        ["stats"] => {
+            // trim the JSON's own trailing newline: the reply terminator
+            // supplies it, so the framing is exactly <nbytes> + '\n', same
+            // as event payloads
+            let json = sched.stats().to_json();
+            let body = json.trim_end_matches('\n');
+            Ok(format!("ok stats {}\n{body}", body.len()))
+        }
+        ["drain"] => {
+            let drained = sched.drain()?;
+            Ok(format!("ok drain {}", drained.len()))
+        }
+        _ => Err(proto(format!("unknown request {:?}", words.join(" ")))),
+    }
+}
+
+/// Serve one connection worth of requests from `reader`, writing replies
+/// to `writer`. Returns `Ok(true)` iff a `shutdown` request was handled
+/// (the caller should stop accepting); `Ok(false)` on a clean EOF.
+pub fn serve_io(
+    sched: &mut Scheduler,
+    mut reader: impl BufRead,
+    mut writer: impl Write,
+) -> Result<bool, ServeError> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).map_err(io_err)?;
+        if n == 0 {
+            return Ok(false);
+        }
+        let words: Vec<&str> = line.split_whitespace().collect();
+        if words.is_empty() {
+            continue;
+        }
+        let (reply, stop) = if words[0] == "shutdown" {
+            match sched.drain() {
+                Ok(drained) => (format!("ok shutdown {}", drained.len()), true),
+                Err(e) => (format!("err {e}"), false),
+            }
+        } else {
+            match handle(sched, &words, &mut reader) {
+                Ok(reply) => (reply, false),
+                // transport-level errors are unrecoverable on this stream
+                Err(e @ ServeError::Io { .. }) => return Err(e),
+                Err(e) => (format!("err {e}"), false),
+            }
+        };
+        writer.write_all(reply.as_bytes()).map_err(io_err)?;
+        writer.write_all(b"\n").map_err(io_err)?;
+        writer.flush().map_err(io_err)?;
+        if stop {
+            return Ok(true);
+        }
+    }
+}
+
+/// Serve over a Unix-domain socket, one connection at a time, until a
+/// client requests `shutdown`. A stale socket file from a dead server is
+/// replaced; the live socket file is removed on exit.
+pub fn serve_unix(sched: &mut Scheduler, path: &Path, quiet: bool) -> Result<(), ServeError> {
+    let listener = match UnixListener::bind(path) {
+        Ok(l) => l,
+        Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+            std::fs::remove_file(path).map_err(io_err)?;
+            UnixListener::bind(path).map_err(io_err)?
+        }
+        Err(e) => return Err(io_err(e)),
+    };
+    if !quiet {
+        eprintln!("serving on {}", path.display());
+    }
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(s) => s,
+            Err(e) => {
+                std::fs::remove_file(path).ok();
+                return Err(io_err(e));
+            }
+        };
+        match serve_io(sched, BufReader::new(&stream), &stream) {
+            Ok(true) => break,
+            Ok(false) => {}
+            Err(e) => {
+                // one broken client must not take the server down
+                if !quiet {
+                    eprintln!("connection error: {e}");
+                }
+            }
+        }
+    }
+    std::fs::remove_file(path).ok();
+    Ok(())
+}
+
+/// Serve the protocol over stdin/stdout — the no-socket mode for piping
+/// and tests. EOF without `shutdown` still drains to checkpoints, so a
+/// closed pipe never loses learner state.
+pub fn serve_stdin(sched: &mut Scheduler) -> Result<(), ServeError> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let shutdown = serve_io(sched, stdin.lock(), stdout.lock())?;
+    if !shutdown {
+        sched.drain()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgorithmKind, ExperimentConfig};
+    use crate::serve::ServeConfig;
+    use crate::session::UpdatePolicy;
+    use std::io::Cursor;
+
+    fn test_sched(tag: &str) -> Scheduler {
+        let mut base = ExperimentConfig::default();
+        base.model.hidden = 6;
+        base.model.param_sparsity = 0.5;
+        base.train.algorithm = AlgorithmKind::RtrlParam;
+        let cfg = ServeConfig {
+            base,
+            policy: UpdatePolicy::Manual,
+            spill_dir: std::env::temp_dir()
+                .join(format!("sparse-rtrl-server-{tag}-{}", std::process::id())),
+            ..ServeConfig::default()
+        };
+        Scheduler::new(cfg).unwrap()
+    }
+
+    fn request(req: &str, payloads: &[&[u8]]) -> Vec<u8> {
+        // substitute each `{}` in req's lines with a framed payload
+        let mut out = Vec::new();
+        let mut p = payloads.iter();
+        for line in req.lines() {
+            if let Some(head) = line.strip_suffix("{}") {
+                let body = p.next().expect("payload for each {}");
+                out.extend_from_slice(head.as_bytes());
+                out.extend_from_slice(body.len().to_string().as_bytes());
+                out.push(b'\n');
+                out.extend_from_slice(body);
+                out.push(b'\n');
+            } else {
+                out.extend_from_slice(line.as_bytes());
+                out.push(b'\n');
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn protocol_round_trip_all_formats() {
+        let mut sched = test_sched("proto");
+        let dir = sched.config().spill_dir.clone();
+        let text = b"0.5 -0.2 -> 0\n0.1 0.3\n!update\n";
+        let jsonl = br#"{"x": [0.25, -0.5], "class": 1}"#;
+        let binary = crate::session::events::encode_binary(&[
+            crate::session::StreamEvent::Step {
+                x: vec![0.75, 0.125],
+                target: crate::data::StepTarget::None,
+            },
+        ]);
+        let input = request(
+            "open alice 7\nopen bob 8\nevent alice {}\nevent bob {}\nevent alice {}\nrun\nstats\ndrain\nshutdown\n",
+            &[&text[..], &jsonl[..], &binary[..]],
+        );
+        let mut out = Vec::new();
+        let stop = serve_io(&mut sched, Cursor::new(input), &mut out).unwrap();
+        assert!(stop, "shutdown must stop the loop");
+        let reply = String::from_utf8(out).unwrap();
+        let mut lines = reply.lines();
+        assert_eq!(lines.next(), Some("ok open alice"));
+        assert_eq!(lines.next(), Some("ok open bob"));
+        assert_eq!(lines.next(), Some("ok event alice 3"));
+        assert_eq!(lines.next(), Some("ok event bob 1"));
+        assert_eq!(lines.next(), Some("ok event alice 1"));
+        let run = lines.next().unwrap();
+        assert!(run.starts_with("ok run "), "got {run:?}");
+        let stats = lines.next().unwrap();
+        let nbytes: usize = stats.strip_prefix("ok stats ").unwrap().parse().unwrap();
+        let at = reply.find("ok stats ").unwrap();
+        let body_at = at + stats.len() + 1;
+        let body = &reply.as_bytes()[body_at..body_at + nbytes];
+        let body = std::str::from_utf8(body).unwrap();
+        assert!(body.contains("\"schema\""), "stats body is the snapshot JSON");
+        assert!(body.contains("\"live_sessions\": 2"), "both tenants resident:\n{body}");
+        let tail = &reply[body_at + nbytes..];
+        let mut lines = tail.lines().filter(|l| !l.is_empty());
+        assert_eq!(lines.next(), Some("ok drain 2"));
+        assert_eq!(lines.next(), Some("ok shutdown 2"));
+        assert_eq!(lines.next(), None);
+        // all five events actually stepped/updated sessions
+        assert_eq!(sched.pending(), 0);
+        for name in ["alice", "bob"] {
+            assert!(sched.spill_path(name).exists(), "{name} drained to disk");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn errors_reply_and_keep_serving() {
+        let mut sched = test_sched("errs");
+        let dir = sched.config().spill_dir.clone();
+        let bad_payload = b"not an event line\n";
+        let input = request(
+            "frobnicate\nopen 9\u{fc}ser\nevent ghost {}\nopen ok-1\nevent ok-1 {}\nopen ok-1\nshutdown\n",
+            &[&b"0.1 0.2\n"[..], &bad_payload[..]],
+        );
+        let mut out = Vec::new();
+        let stop = serve_io(&mut sched, Cursor::new(input), &mut out).unwrap();
+        assert!(stop);
+        let reply = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = reply.lines().collect();
+        assert!(lines[0].starts_with("err bad request"), "got {:?}", lines[0]);
+        assert!(lines[1].starts_with("err bad tenant name"), "got {:?}", lines[1]);
+        assert!(lines[2].starts_with("err unknown tenant"), "got {:?}", lines[2]);
+        assert_eq!(lines[3], "ok open ok-1");
+        assert!(lines[4].starts_with("err tenant ok-1: bad payload"), "got {:?}", lines[4]);
+        assert_eq!(lines[5], "ok open ok-1", "reopen is idempotent, not an error");
+        assert_eq!(lines[6], "ok shutdown 1");
+        assert_eq!(sched.pending(), 0, "the bad payload queued nothing");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn eof_without_shutdown_reports_clean_exit() {
+        let mut sched = test_sched("eof");
+        let dir = sched.config().spill_dir.clone();
+        let input = request("open a\nevent a {}\n", &[&b"0.5 0.5\n"[..]]);
+        let mut out = Vec::new();
+        let stop = serve_io(&mut sched, Cursor::new(input), &mut out).unwrap();
+        assert!(!stop, "EOF is not shutdown — the caller decides to drain");
+        assert_eq!(sched.pending(), 1, "nothing ran without tick/run");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

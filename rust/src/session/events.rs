@@ -394,6 +394,24 @@ pub fn encode_binary(events: &[StreamEvent]) -> Vec<u8> {
     out
 }
 
+/// Decode a whole in-memory payload — format-autodetected exactly like a
+/// stream ([`EventFormat::detect`]) — into its events, all-or-nothing: one
+/// malformed record rejects the entire payload. The serve ingestion path
+/// uses this for transactional enqueues (a tenant's frame either queues
+/// completely or not at all); an empty payload is simply zero events.
+pub fn parse_payload(bytes: &[u8]) -> Result<Vec<StreamEvent>, EventError> {
+    let reader = match EventReader::autodetect(std::io::Cursor::new(bytes)) {
+        Ok(r) => r,
+        Err(e) => {
+            return Err(EventError {
+                pos: EventPosition::Line(0),
+                kind: EventErrorKind::Io { detail: e.to_string() },
+            })
+        }
+    };
+    reader.collect()
+}
+
 // ---------------------------------------------------------------------
 // Reader
 // ---------------------------------------------------------------------
@@ -614,6 +632,31 @@ mod tests {
 
     fn step(x: &[f32], target: StepTarget) -> StreamEvent {
         StreamEvent::Step { x: x.to_vec(), target }
+    }
+
+    #[test]
+    fn parse_payload_autodetects_and_is_all_or_nothing() {
+        // text payload
+        let evs = parse_payload(b"0.5 -0.2\n!update\n0.1 0.3 -> 1\n").unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                step(&[0.5, -0.2], StepTarget::None),
+                StreamEvent::Update,
+                step(&[0.1, 0.3], StepTarget::Class(1)),
+            ]
+        );
+        // binary payload round-trips bit-exactly
+        assert_eq!(parse_payload(&encode_binary(&evs)).unwrap(), evs);
+        // jsonl payload
+        let evs2 = parse_payload(b"{\"x\": [1.0, 2.0], \"class\": 0}\n").unwrap();
+        assert_eq!(evs2, vec![step(&[1.0, 2.0], StepTarget::Class(0))]);
+        // empty payload is zero events, not an error
+        assert_eq!(parse_payload(b"").unwrap(), vec![]);
+        // one bad record rejects the whole payload
+        let err = parse_payload(b"0.5 -0.2\nnot-a-number\n").unwrap_err();
+        assert_eq!(err.pos, EventPosition::Line(2));
+        assert!(matches!(err.kind, EventErrorKind::BadValue { .. }));
     }
 
     #[test]

@@ -48,7 +48,8 @@ pub mod pool;
 pub use checkpoint::SessionCheckpoint;
 pub use codec::{CodecError, SnapshotCodec, SnapshotFormat};
 pub use events::{
-    parse_event, EventError, EventErrorKind, EventFormat, EventPosition, EventReader, StreamEvent,
+    parse_event, parse_payload, EventError, EventErrorKind, EventFormat, EventPosition,
+    EventReader, StreamEvent,
 };
 pub use online::{OnlineSession, SessionBuilder, StepOutcome, UpdatePolicy};
-pub use pool::SessionPool;
+pub use pool::{BatchStats, PoolError, SessionId, SessionPool};

@@ -419,6 +419,23 @@ impl OnlineSession {
         // analyze: allow(ambient-time) -- carries the caller's telemetry clock, never reads one
         t0: Option<std::time::Instant>,
     ) -> StepOutcome {
+        self.absorb_step_result_from(r, t0, None)
+    }
+
+    /// [`Self::absorb_step_result`] with an optional activation override:
+    /// `acts` supplies the post-step activations when the step ran in a
+    /// fused group engine whose state has *not* been written back yet
+    /// ([`crate::session::SessionPool::step_batched_runs`] defers the
+    /// write-back to the end of a run). Callers deferring the write-back
+    /// must guarantee no update policy can fire during the run — an update
+    /// harvests `self.engine`, which would still hold pre-run state.
+    pub(crate) fn absorb_step_result_from(
+        &mut self,
+        r: StepResult,
+        // analyze: allow(ambient-time) -- carries the caller's telemetry clock, never reads one
+        t0: Option<std::time::Instant>,
+        acts: Option<&[f32]>,
+    ) -> StepOutcome {
         self.steps += 1;
         let mut prediction = r.prediction;
         if r.loss.is_none() && self.predict_always {
@@ -428,11 +445,11 @@ impl OnlineSession {
             // readout; regression (Vector) steps deliberately keep
             // `prediction = None` rather than argmax-ing an MSE output.
             let top_off = self.net.layout().state_offset(self.net.layers() - 1);
-            self.readout.forward(
-                &self.engine.activations()[top_off..],
-                &mut self.logits,
-                &mut self.ops,
-            );
+            let a = match acts {
+                Some(a) => a,
+                None => self.engine.activations(),
+            };
+            self.readout.forward(&a[top_off..], &mut self.logits, &mut self.ops);
             prediction = Some(Loss::predict(&self.logits));
         }
         if r.loss.is_some() {

@@ -13,12 +13,21 @@
 //! parameters and steps each group through one shared-weight
 //! [`crate::rtrl::BatchedSparse`] engine, falling back to per-session
 //! stepping whenever weights diverge (e.g. right after an update).
+//! [`SessionPool::step_batched_runs`] extends the same grouping to runs of
+//! consecutive events, amortizing the per-lane state transfer across the
+//! run — the serve scheduler's burst path.
 //!
-//! Idle users need not stay resident: [`SessionPool::evict`] spills a
+//! Idle users need not stay resident: [`SessionPool::evict_id`] spills a
 //! session to disk through the snapshot codec facade
 //! ([`crate::session::codec`], binary by default) and
-//! [`SessionPool::admit`] restores it — bit-exactly, in either snapshot
-//! format — when the user returns.
+//! [`SessionPool::admit_id`] restores it — bit-exactly, in either snapshot
+//! format — when the user returns. Sessions are addressed by a stable
+//! [`SessionId`] that survives the slot compaction an eviction causes
+//! (raw indices shift down); the index-based [`SessionPool::evict`] /
+//! [`SessionPool::admit`] API delegates to the id-keyed one. Failures are
+//! typed ([`PoolError`]): a long-running server can tell a corrupt spill
+//! file ([`PoolError::Codec`]) from a session that simply is not resident
+//! ([`PoolError::NoSuchSession`]) without string matching.
 //!
 //! With [`SessionPool::enable_telemetry`] the evict/admit paths aggregate
 //! counters (admissions, evictions, spill bytes) and latency histograms
@@ -28,23 +37,104 @@
 //! [`crate::telemetry::TelemetrySnapshot`].
 
 use super::codec::{self, SnapshotFormat};
-use super::online::{OnlineSession, StepOutcome};
+use super::online::{OnlineSession, StepOutcome, UpdatePolicy};
 use crate::data::StepTarget;
 use crate::metrics::OpCounter;
 use crate::nn::{Loss, Readout};
-use crate::rtrl::{BatchedSparse, SparsityMode, Target};
+use crate::rtrl::{BatchedSparse, EngineState, SparsityMode, Target};
 use crate::telemetry::names;
 use crate::telemetry::{
     HistogramKind, HistogramSummary, MemoryRecorder, Recorder, SessionStats, TelemetrySnapshot,
 };
 use crate::util::pool::run_parallel;
-use std::path::Path;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 // analyze: allow(ambient-time) -- telemetry latency clocks only; never feeds learner state
 use std::time::Instant;
+
+/// Stable identity of a session within one [`SessionPool`], assigned at
+/// insertion and never reused. Unlike a slot index, an id stays valid
+/// across evictions (which compact the slot array); looking one up after
+/// its session was evicted yields [`PoolError::NoSuchSession`] rather than
+/// silently addressing a *different* session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SessionId(pub u64);
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// Typed failure of a pool spill/restore operation, so callers (the serve
+/// residency manager foremost) can branch on the failure class instead of
+/// string-matching. [`PoolError::Codec`] wraps the snapshot codec's own
+/// typed [`CodecError`](codec::CodecError) as its `source`.
+#[derive(Debug)]
+pub enum PoolError {
+    /// The id names no resident session (already evicted, or never
+    /// existed in this pool).
+    NoSuchSession { id: SessionId },
+    /// The slot index is out of range for the current resident set.
+    NoSuchIndex { index: usize, len: usize },
+    /// Reading or writing the snapshot file failed.
+    Io { path: PathBuf, op: &'static str, detail: String },
+    /// The spill bytes failed to decode — a corrupt or foreign snapshot.
+    Codec { path: PathBuf, source: codec::CodecError },
+    /// The checkpoint decoded but refused to resume into a session.
+    Resume { path: PathBuf, detail: String },
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::NoSuchSession { id } => write!(f, "no resident session with id {id}"),
+            PoolError::NoSuchIndex { index, len } => {
+                write!(f, "no session {index} in a pool of {len}")
+            }
+            PoolError::Io { path, op, detail } => {
+                write!(f, "cannot {op} snapshot {}: {detail}", path.display())
+            }
+            PoolError::Codec { path, source } => {
+                write!(f, "corrupt snapshot {}: {source}", path.display())
+            }
+            PoolError::Resume { path, detail } => {
+                write!(f, "snapshot {} cannot resume: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for PoolError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PoolError::Codec { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// What [`SessionPool::step_batched_at`] did with the selected sessions —
+/// the per-round batching visibility the serve scheduler reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Shared-weight groups of ≥ 2 lanes that ran fused.
+    pub fused_groups: usize,
+    /// Lanes stepped through a fused group engine.
+    pub fused_lanes: usize,
+    /// Sessions stepped per-session (other engine families, singleton
+    /// weight groups, or groups that refused state adoption).
+    pub solo: usize,
+}
 
 /// A fixed set of independent sessions plus a worker-thread budget.
 pub struct SessionPool {
     sessions: Vec<OnlineSession>,
+    /// Stable id of each slot (parallel to `sessions`).
+    ids: Vec<SessionId>,
+    /// id → slot lookup; rebuilt incrementally as evictions compact slots.
+    slots: BTreeMap<SessionId, usize>,
+    next_id: u64,
     workers: usize,
     /// Pool-level aggregation (admissions, evictions, spill bytes, evict/
     /// resume latency). `None` = telemetry off: the evict/admit paths then
@@ -58,7 +148,45 @@ impl SessionPool {
     /// [`crate::util::pool::resolve_workers`]).
     pub fn new(sessions: Vec<OnlineSession>, workers: usize) -> Self {
         let workers = crate::util::pool::resolve_workers(workers);
-        SessionPool { sessions, workers, recorder: None }
+        let ids: Vec<SessionId> = (0..sessions.len() as u64).map(SessionId).collect();
+        let slots = ids.iter().enumerate().map(|(slot, &id)| (id, slot)).collect();
+        let next_id = sessions.len() as u64;
+        SessionPool { sessions, ids, slots, next_id, workers, recorder: None }
+    }
+
+    /// Append a freshly built session (a tenant arriving for the first
+    /// time) and return its stable id.
+    pub fn insert(&mut self, session: OnlineSession) -> SessionId {
+        let id = SessionId(self.next_id);
+        self.next_id += 1;
+        self.slots.insert(id, self.sessions.len());
+        self.ids.push(id);
+        self.sessions.push(session);
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.gauge(names::POOL_LIVE_SESSIONS, self.sessions.len() as f64);
+        }
+        id
+    }
+
+    /// Stable id of the session currently in slot `i`.
+    pub fn id_at(&self, i: usize) -> Option<SessionId> {
+        self.ids.get(i).copied()
+    }
+
+    /// Current slot of the session with stable id `id`, if resident.
+    pub fn slot_of(&self, id: SessionId) -> Option<usize> {
+        self.slots.get(&id).copied()
+    }
+
+    /// The resident session with stable id `id`.
+    pub fn session_by_id(&self, id: SessionId) -> Option<&OnlineSession> {
+        self.slot_of(id).map(|i| &self.sessions[i])
+    }
+
+    /// Mutable access to the resident session with stable id `id`.
+    pub fn session_by_id_mut(&mut self, id: SessionId) -> Option<&mut OnlineSession> {
+        let i = self.slot_of(id)?;
+        Some(&mut self.sessions[i])
     }
 
     /// Start aggregating pool-level telemetry (admission/eviction counters,
@@ -104,19 +232,46 @@ impl SessionPool {
     }
 
     /// Spill session `i` to `path` in the given snapshot format and drop it
-    /// from the pool (later sessions shift down one index). The session is
-    /// only removed after the snapshot is durably written, so a failed
-    /// write never loses learner state.
-    pub fn evict(&mut self, i: usize, path: &Path, format: SnapshotFormat) -> Result<(), String> {
-        if i >= self.sessions.len() {
-            return Err(format!("no session {i} in a pool of {}", self.sessions.len()));
-        }
+    /// from the pool (later sessions shift down one index; their
+    /// [`SessionId`]s are unaffected). Delegates to [`SessionPool::evict_id`].
+    pub fn evict(
+        &mut self,
+        i: usize,
+        path: &Path,
+        format: SnapshotFormat,
+    ) -> Result<(), PoolError> {
+        let id =
+            self.id_at(i).ok_or(PoolError::NoSuchIndex { index: i, len: self.sessions.len() })?;
+        self.evict_id(id, path, format)
+    }
+
+    /// Spill the session with stable id `id` to `path` in the given
+    /// snapshot format and drop it from the pool. The session is only
+    /// removed after the snapshot is durably written, so a failed write
+    /// never loses learner state.
+    pub fn evict_id(
+        &mut self,
+        id: SessionId,
+        path: &Path,
+        format: SnapshotFormat,
+    ) -> Result<(), PoolError> {
+        let i = self.slot_of(id).ok_or(PoolError::NoSuchSession { id })?;
         // analyze: allow(ambient-time) -- spill-latency metric; encode output is clock-free
         let t0 = self.recorder.as_ref().map(|_| Instant::now());
         let bytes = codec::encode(&self.sessions[i].checkpoint(), format);
-        std::fs::write(path, &bytes)
-            .map_err(|e| format!("cannot write snapshot {}: {e}", path.display()))?;
+        std::fs::write(path, &bytes).map_err(|e| PoolError::Io {
+            path: path.to_path_buf(),
+            op: "write",
+            detail: e.to_string(),
+        })?;
         self.sessions.remove(i);
+        self.ids.remove(i);
+        self.slots.remove(&id);
+        for slot in self.slots.values_mut() {
+            if *slot > i {
+                *slot -= 1;
+            }
+        }
         if let Some(rec) = self.recorder.as_mut() {
             let ns = t0.map_or(0, |t| t.elapsed().as_nanos() as u64);
             rec.counter(names::POOL_EVICTIONS, 1);
@@ -130,22 +285,38 @@ impl SessionPool {
 
     /// Restore a previously evicted session from `path` (either snapshot
     /// format, autodetected) and append it to the pool. Returns the new
-    /// session's index. Resumption is bit-exact: the readmitted learner
-    /// continues its stream as if it had never left memory.
-    pub fn admit(&mut self, path: &Path) -> Result<usize, String> {
+    /// session's index. Delegates to [`SessionPool::admit_id`].
+    pub fn admit(&mut self, path: &Path) -> Result<usize, PoolError> {
+        let id = self.admit_id(path)?;
+        // freshly admitted sessions always land in the last slot
+        Ok(self.slots[&id])
+    }
+
+    /// Restore a previously evicted session from `path` (either snapshot
+    /// format, autodetected) and append it to the pool under a **fresh**
+    /// stable id, which is returned. Resumption is bit-exact: the
+    /// readmitted learner continues its stream as if it had never left
+    /// memory. (Runtime knobs — threads, telemetry — are not snapshot
+    /// state; re-apply them on the readmitted session if needed.)
+    pub fn admit_id(&mut self, path: &Path) -> Result<SessionId, PoolError> {
         // analyze: allow(ambient-time) -- admit-latency metric; decode output is clock-free
         let t0 = self.recorder.as_ref().map(|_| Instant::now());
-        let bytes = std::fs::read(path)
-            .map_err(|e| format!("cannot read snapshot {}: {e}", path.display()))?;
-        let ck = codec::decode(&bytes).map_err(|e| e.to_string())?;
-        self.sessions.push(OnlineSession::resume(&ck)?);
+        let bytes = std::fs::read(path).map_err(|e| PoolError::Io {
+            path: path.to_path_buf(),
+            op: "read",
+            detail: e.to_string(),
+        })?;
+        let ck = codec::decode(&bytes)
+            .map_err(|source| PoolError::Codec { path: path.to_path_buf(), source })?;
+        let session = OnlineSession::resume(&ck)
+            .map_err(|detail| PoolError::Resume { path: path.to_path_buf(), detail })?;
+        let id = self.insert(session);
         if let Some(rec) = self.recorder.as_mut() {
             let ns = t0.map_or(0, |t| t.elapsed().as_nanos() as u64);
             rec.counter(names::POOL_ADMISSIONS, 1);
             rec.observe(names::POOL_RESUME_DECODE_NS, HistogramKind::LatencyNs, ns);
-            rec.gauge(names::POOL_LIVE_SESSIONS, self.sessions.len() as f64);
         }
-        Ok(self.sessions.len() - 1)
+        Ok(id)
     }
 
     /// Condense the pool's aggregated telemetry plus one row per live
@@ -238,30 +409,59 @@ impl SessionPool {
     /// in session order.
     pub fn step_batched(&mut self, events: &[(Vec<f32>, StepTarget)]) -> Vec<StepOutcome> {
         assert_eq!(events.len(), self.sessions.len(), "one event per session");
-        let n = self.sessions.len();
+        let slots: Vec<usize> = (0..self.sessions.len()).collect();
+        self.step_batched_at(&slots, events).0
+    }
 
-        // Group sessions by exact weight identity (ascending index order
-        // within each group, so lane order matches a forward iter_mut scan).
-        let mut keys: Vec<Option<Vec<u64>>> =
-            self.sessions.iter_mut().map(shared_weight_key).collect();
-        let mut groups: Vec<(Vec<u64>, Vec<usize>)> = Vec::new();
-        for (i, slot) in keys.iter_mut().enumerate() {
-            if let Some(k) = slot.take() {
+    /// Step only the sessions in `slots` (strictly increasing slot
+    /// indices), each paired with the event at the same position in
+    /// `events`, with the exact shared-weight grouping of
+    /// [`SessionPool::step_batched`]. The serve scheduler's entry point: a
+    /// round only has events for *ready* tenants, not the whole pool.
+    /// Outcomes return in `slots` order, alongside [`BatchStats`] saying
+    /// how many lanes actually fused.
+    pub fn step_batched_at(
+        &mut self,
+        slots: &[usize],
+        events: &[(Vec<f32>, StepTarget)],
+    ) -> (Vec<StepOutcome>, BatchStats) {
+        assert_eq!(events.len(), slots.len(), "one event per selected slot");
+        let n = self.sessions.len();
+        for w in slots.windows(2) {
+            assert!(w[0] < w[1], "slots must be strictly increasing");
+        }
+        if let Some(&last) = slots.last() {
+            assert!(last < n, "slot {last} out of range for a pool of {n}");
+        }
+
+        // Group selected sessions by exact weight identity, recording each
+        // member as (slot, position in `slots`/`events`). Ascending slot
+        // order within each group, so lane order matches a forward
+        // iter_mut scan.
+        let mut selected: Vec<Option<usize>> = vec![None; n];
+        for (pos, &i) in slots.iter().enumerate() {
+            selected[i] = Some(pos);
+        }
+        let mut groups: Vec<(Vec<u64>, Vec<(usize, usize)>)> = Vec::new();
+        for (i, s) in self.sessions.iter_mut().enumerate() {
+            let Some(pos) = selected[i] else { continue };
+            if let Some(k) = shared_weight_key(s) {
                 match groups.iter_mut().find(|(gk, _)| *gk == k) {
-                    Some((_, g)) => g.push(i),
-                    None => groups.push((k, vec![i])),
+                    Some((_, g)) => g.push((i, pos)),
+                    None => groups.push((k, vec![(i, pos)])),
                 }
             }
         }
 
-        let mut outcomes: Vec<Option<StepOutcome>> = (0..n).map(|_| None).collect();
+        let mut stats = BatchStats::default();
+        let mut outcomes: Vec<Option<StepOutcome>> = (0..slots.len()).map(|_| None).collect();
         for (_, group) in groups.iter().filter(|(_, g)| g.len() >= 2) {
             let lanes = group.len();
             let mut batched = {
-                let leader = &self.sessions[group[0]];
+                let leader = &self.sessions[group[0].0];
                 let mut b = BatchedSparse::new(leader.net(), leader.n_out(), lanes);
                 b.set_threads(leader.threads);
-                let measure = group.iter().any(|&i| {
+                let measure = group.iter().any(|&(i, _)| {
                     self.sessions[i]
                         .telemetry()
                         .is_some_and(|t| t.config().measure_influence)
@@ -273,17 +473,12 @@ impl SessionPool {
             // Adopt every lane's engine state. Any refusal (a lane whose
             // panel activity disagrees with the group's, say) sends the
             // whole group down the per-session path — correctness first.
-            let adopted = group.iter().enumerate().all(|(lane, &i)| {
+            let adopted = group.iter().enumerate().all(|(lane, &(i, _))| {
                 let st = self.sessions[i].engine.save_state();
                 batched.load_lane(lane, &st).is_ok()
             });
             if !adopted {
                 continue;
-            }
-
-            let mut in_group = vec![false; n];
-            for &i in group {
-                in_group[i] = true;
             }
 
             // Pass A: borrow each lane's per-session pieces (readout, loss,
@@ -295,47 +490,202 @@ impl SessionPool {
             let mut opsv: Vec<&mut OpCounter> = Vec::with_capacity(lanes);
             // analyze: allow(ambient-time) -- per-lane step-latency clocks (telemetry only)
             let mut t0s: Vec<Option<Instant>> = Vec::with_capacity(lanes);
+            let mut next_member = 0usize;
             for (i, s) in self.sessions.iter_mut().enumerate() {
-                if !in_group[i] {
+                if next_member == lanes || group[next_member].0 != i {
                     continue;
                 }
-                assert_eq!(events[i].0.len(), s.net.n_in(), "input width must match the stack");
+                let pos = group[next_member].1;
+                next_member += 1;
+                assert_eq!(events[pos].0.len(), s.net.n_in(), "input width must match the stack");
                 // analyze: allow(ambient-time) -- read only when telemetry is on; bit-identity pinned by tests
                 t0s.push(if s.telemetry.is_some() { Some(Instant::now()) } else { None });
                 let OnlineSession { readout, loss, ops, .. } = s;
                 readouts.push(readout);
                 losses.push(loss);
                 opsv.push(ops);
-                xs.push(&events[i].0);
-                targets.push(events[i].1.as_target());
+                xs.push(&events[pos].0);
+                targets.push(events[pos].1.as_target());
             }
-            let results =
-                batched.step(&xs, &targets, &mut readouts, &mut losses, &mut opsv);
+            let results = batched.step(&xs, &targets, &mut readouts, &mut losses, &mut opsv);
 
             // Pass B: hand each lane its post-step engine state back, then
             // run the ordinary per-session bookkeeping (serving-mode
             // prediction, update policy, telemetry). An update applied here
             // diverges that lane's weights; the next call regroups.
-            for (lane, &i) in group.iter().enumerate() {
+            for (lane, &(i, pos)) in group.iter().enumerate() {
                 let st = batched.save_lane(lane);
                 let s = &mut self.sessions[i];
-                let OnlineSession { engine, net, .. } = &mut *s;
-                engine
-                    .load_state(net, &st)
-                    .expect("a batched lane state always round-trips into its own engine");
-                outcomes[i] = Some(s.absorb_step_result(results[lane], t0s[lane]));
+                adopt_back(s, &st);
+                outcomes[pos] = Some(s.absorb_step_result(results[lane], t0s[lane]));
             }
+            stats.fused_groups += 1;
+            stats.fused_lanes += lanes;
         }
 
         // Everyone else — other engine families, singleton weight groups,
-        // groups that refused adoption — steps per-session, in order.
-        for i in 0..n {
-            if outcomes[i].is_none() {
-                let (x, t) = &events[i];
-                outcomes[i] = Some(self.sessions[i].step(x, t.as_target()));
+        // groups that refused adoption — steps per-session, in slot order.
+        for (pos, &i) in slots.iter().enumerate() {
+            if outcomes[pos].is_none() {
+                let (x, t) = &events[pos];
+                outcomes[pos] = Some(self.sessions[i].step(x, t.as_target()));
+                stats.solo += 1;
             }
         }
-        outcomes.into_iter().map(|o| o.expect("every session stepped")).collect()
+        let outs =
+            outcomes.into_iter().map(|o| o.expect("every selected session stepped")).collect();
+        (outs, stats)
+    }
+
+    /// Step the sessions in `slots` through **runs** of consecutive events —
+    /// `runs[j]` holds the next `k` events for the session in `slots[j]`,
+    /// every run the same length `k ≥ 1` — amortizing the per-call lane
+    /// state transfer of [`SessionPool::step_batched_at`] across the whole
+    /// run. A fused group loads each lane into the shared-weight engine
+    /// once, steps it `k` times (per-step bookkeeping — serving-mode
+    /// predictions, counters, telemetry — still runs every sub-step,
+    /// reading activations straight from the group engine), and writes each
+    /// lane back once at the end of the run. At `k = 1` this *is*
+    /// [`SessionPool::step_batched_at`].
+    ///
+    /// Deferring the write-back is only sound when no lane can apply a
+    /// parameter update mid-run: an update harvests the *session* engine,
+    /// which holds pre-run state until the write-back. A group therefore
+    /// fuses a run only when every lane's policy provably cannot fire
+    /// during it — [`UpdatePolicy::Manual`] and
+    /// [`UpdatePolicy::EndOfSequence`] never fire on a step, and
+    /// [`UpdatePolicy::EveryKSteps`] cannot fire while the lane's pending
+    /// supervised count plus the run's supervised events stays below the
+    /// cadence. Groups failing the check (and singleton groups, other
+    /// engines, refused adoptions) step per-session, event by event,
+    /// exactly as [`SessionPool::step_all`] would.
+    ///
+    /// Outcomes return in `slots` order, `k` per session, alongside
+    /// [`BatchStats`] counting each *lane* once per call (not once per
+    /// sub-step).
+    pub fn step_batched_runs(
+        &mut self,
+        slots: &[usize],
+        runs: &[Vec<(Vec<f32>, StepTarget)>],
+    ) -> (Vec<Vec<StepOutcome>>, BatchStats) {
+        assert_eq!(runs.len(), slots.len(), "one run per selected slot");
+        let k = runs.first().map_or(1, Vec::len);
+        assert!(k >= 1, "runs must hold at least one event");
+        for r in runs {
+            assert_eq!(r.len(), k, "all runs must have the same length");
+        }
+        if k == 1 {
+            let events: Vec<(Vec<f32>, StepTarget)> = runs.iter().map(|r| r[0].clone()).collect();
+            let (outs, stats) = self.step_batched_at(slots, &events);
+            return (outs.into_iter().map(|o| vec![o]).collect(), stats);
+        }
+        let n = self.sessions.len();
+        for w in slots.windows(2) {
+            assert!(w[0] < w[1], "slots must be strictly increasing");
+        }
+        if let Some(&last) = slots.last() {
+            assert!(last < n, "slot {last} out of range for a pool of {n}");
+        }
+
+        let mut selected: Vec<Option<usize>> = vec![None; n];
+        for (pos, &i) in slots.iter().enumerate() {
+            selected[i] = Some(pos);
+        }
+        let mut groups: Vec<(Vec<u64>, Vec<(usize, usize)>)> = Vec::new();
+        for (i, s) in self.sessions.iter_mut().enumerate() {
+            let Some(pos) = selected[i] else { continue };
+            if let Some(key) = shared_weight_key(s) {
+                match groups.iter_mut().find(|(gk, _)| *gk == key) {
+                    Some((_, g)) => g.push((i, pos)),
+                    None => groups.push((key, vec![(i, pos)])),
+                }
+            }
+        }
+
+        let mut stats = BatchStats::default();
+        let mut outcomes: Vec<Vec<StepOutcome>> =
+            (0..slots.len()).map(|_| Vec::with_capacity(k)).collect();
+        for (_, group) in groups.iter().filter(|(_, g)| g.len() >= 2) {
+            if !group.iter().all(|&(i, pos)| run_fuses(&self.sessions[i], &runs[pos])) {
+                continue;
+            }
+            let lanes = group.len();
+            let mut batched = {
+                let leader = &self.sessions[group[0].0];
+                let mut b = BatchedSparse::new(leader.net(), leader.n_out(), lanes);
+                b.set_threads(leader.threads);
+                let measure = group.iter().any(|&(i, _)| {
+                    self.sessions[i]
+                        .telemetry()
+                        .is_some_and(|t| t.config().measure_influence)
+                });
+                b.set_measure_influence(measure);
+                b
+            };
+            let adopted = group.iter().enumerate().all(|(lane, &(i, _))| {
+                let st = self.sessions[i].engine.save_state();
+                batched.load_lane(lane, &st).is_ok()
+            });
+            if !adopted {
+                continue;
+            }
+
+            for t in 0..k {
+                let mut xs: Vec<&[f32]> = Vec::with_capacity(lanes);
+                let mut targets: Vec<Target<'_>> = Vec::with_capacity(lanes);
+                let mut readouts: Vec<&mut Readout> = Vec::with_capacity(lanes);
+                let mut losses: Vec<&mut Loss> = Vec::with_capacity(lanes);
+                let mut opsv: Vec<&mut OpCounter> = Vec::with_capacity(lanes);
+                // analyze: allow(ambient-time) -- per-lane step-latency clocks (telemetry only)
+                let mut t0s: Vec<Option<Instant>> = Vec::with_capacity(lanes);
+                let mut next_member = 0usize;
+                for (i, s) in self.sessions.iter_mut().enumerate() {
+                    if next_member == lanes || group[next_member].0 != i {
+                        continue;
+                    }
+                    let pos = group[next_member].1;
+                    next_member += 1;
+                    let (x, tgt) = &runs[pos][t];
+                    assert_eq!(x.len(), s.net.n_in(), "input width must match the stack");
+                    // analyze: allow(ambient-time) -- read only when telemetry is on; bit-identity pinned by tests
+                    t0s.push(if s.telemetry.is_some() { Some(Instant::now()) } else { None });
+                    let OnlineSession { readout, loss, ops, .. } = s;
+                    readouts.push(readout);
+                    losses.push(loss);
+                    opsv.push(ops);
+                    xs.push(x);
+                    targets.push(tgt.as_target());
+                }
+                let results = batched.step(&xs, &targets, &mut readouts, &mut losses, &mut opsv);
+                for (lane, &(i, pos)) in group.iter().enumerate() {
+                    let out = self.sessions[i].absorb_step_result_from(
+                        results[lane],
+                        t0s[lane],
+                        Some(batched.activations(lane)),
+                    );
+                    outcomes[pos].push(out);
+                }
+            }
+            for (lane, &(i, _)) in group.iter().enumerate() {
+                let st = batched.save_lane(lane);
+                adopt_back(&mut self.sessions[i], &st);
+            }
+            stats.fused_groups += 1;
+            stats.fused_lanes += lanes;
+        }
+
+        // Everyone else — ineligible or refused groups, singleton weight
+        // groups, other engine families — steps per-session, in slot order.
+        for (pos, &i) in slots.iter().enumerate() {
+            if outcomes[pos].is_empty() {
+                for (x, tgt) in &runs[pos] {
+                    let out = self.sessions[i].step(x, tgt.as_target());
+                    outcomes[pos].push(out);
+                }
+                stats.solo += 1;
+            }
+        }
+        (outcomes, stats)
     }
 
     /// Run an arbitrary closure over every session concurrently (e.g. drain
@@ -374,6 +724,29 @@ impl SessionPool {
             resume_unwind(p);
         }
         out
+    }
+}
+
+/// Hand a lane's post-step engine state back to its session — the
+/// write-back half of the batched-lane round trip.
+fn adopt_back(s: &mut OnlineSession, st: &EngineState) {
+    let OnlineSession { engine, net, .. } = &mut *s;
+    engine
+        .load_state(net, st)
+        .expect("a batched lane state always round-trips into its own engine");
+}
+
+/// The run-fusion soundness condition of
+/// [`SessionPool::step_batched_runs`]: can this lane's per-step bookkeeping
+/// run once per event in `run` without a parameter update firing?
+fn run_fuses(s: &OnlineSession, run: &[(Vec<f32>, StepTarget)]) -> bool {
+    match s.policy {
+        UpdatePolicy::Manual | UpdatePolicy::EndOfSequence => true,
+        UpdatePolicy::EveryKSteps(k) => {
+            let supervised =
+                run.iter().filter(|(_, t)| !matches!(t, StepTarget::None)).count() as u64;
+            s.pending_supervised + supervised < k
+        }
     }
 }
 
@@ -779,5 +1152,115 @@ mod tests {
             all
         };
         assert_eq!(run(1), run(8));
+    }
+
+    /// A run-fused pool (`step_batched_runs`: one lane load/save per run)
+    /// is bit-identical to per-event batched stepping (`step_batched`: one
+    /// lane load/save per step) — the state round trip is exact, so
+    /// deferring the write-back cannot change the math, and serving-mode
+    /// predictions read the group engine's activations correctly.
+    #[test]
+    fn step_batched_runs_matches_per_event_batched_bitwise() {
+        let build = || {
+            let sessions = (0..3)
+                .map(|_| {
+                    let mut cfg = ExperimentConfig::default();
+                    cfg.model.hidden = 6;
+                    cfg.seed = 21;
+                    SessionBuilder::from_config(cfg)
+                        .algorithm(AlgorithmKind::RtrlParam)
+                        .param_sparsity(0.5)
+                        .policy(UpdatePolicy::Manual)
+                        .predict_always(true)
+                        .build()
+                })
+                .collect();
+            SessionPool::new(sessions, 2)
+        };
+        let mut by_runs = build();
+        let mut by_event = build();
+        let k = 4usize;
+        let slots = [0usize, 1, 2];
+        for round in 0..3 {
+            let runs: Vec<Vec<(Vec<f32>, StepTarget)>> = (0..3)
+                .map(|i| {
+                    (0..k)
+                        .map(|t| {
+                            let x = vec![
+                                ((round * k + t) as f32 * 0.3 + i as f32).sin(),
+                                0.2 - 0.1 * i as f32,
+                            ];
+                            let tgt = if (t + i) % 3 == 0 {
+                                StepTarget::Class((i + t) % 2)
+                            } else {
+                                StepTarget::None
+                            };
+                            (x, tgt)
+                        })
+                        .collect()
+                })
+                .collect();
+            let (outs, stats) = by_runs.step_batched_runs(&slots, &runs);
+            assert_eq!(stats, BatchStats { fused_groups: 1, fused_lanes: 3, solo: 0 });
+            for t in 0..k {
+                let events: Vec<(Vec<f32>, StepTarget)> =
+                    (0..3).map(|i| runs[i][t].clone()).collect();
+                let ref_outs = by_event.step_batched(&events);
+                for i in 0..3 {
+                    let (a, b) = (&outs[i][t], &ref_outs[i]);
+                    assert_eq!(a.step, b.step);
+                    assert_eq!(
+                        a.loss.map(f32::to_bits),
+                        b.loss.map(f32::to_bits),
+                        "round {round} lane {i} sub-step {t}"
+                    );
+                    assert_eq!(a.prediction, b.prediction, "round {round} lane {i} sub-step {t}");
+                    assert_eq!(a.updated, b.updated);
+                }
+            }
+        }
+        for i in 0..3 {
+            assert_eq!(by_runs.session(i).steps(), 12);
+            assert_eq!(by_runs.session(i).updates_applied(), 0);
+        }
+    }
+
+    /// Run fusion is refused exactly when an update could fire mid-run: an
+    /// `EveryKSteps(1)` supervised run steps per-session (policy behaviour
+    /// stays exact, just unfused), while a cadence the run cannot reach
+    /// fuses fine.
+    #[test]
+    fn step_batched_runs_defers_to_solo_when_updates_can_fire() {
+        let slots = [0usize, 1, 2];
+        let runs: Vec<Vec<(Vec<f32>, StepTarget)>> = (0..3)
+            .map(|i| {
+                (0..2)
+                    .map(|t| {
+                        let x = vec![0.5 - 0.2 * i as f32, 0.1 * t as f32];
+                        (x, StepTarget::Class((i + t) % 2))
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let mut eager = make_shared_pool(3, 13, UpdatePolicy::EveryKSteps(1), 1);
+        let (outs, stats) = eager.step_batched_runs(&slots, &runs);
+        assert_eq!(stats, BatchStats { fused_groups: 0, fused_lanes: 0, solo: 3 });
+        for i in 0..3 {
+            assert_eq!(outs[i].len(), 2);
+            assert!(outs[i].iter().all(|o| o.updated), "every supervised step updates at k=1");
+            assert_eq!(eager.session(i).updates_applied(), 2);
+        }
+
+        // pending (0) + supervised in run (2) < cadence (5) → provably no
+        // mid-run update → the same run fuses
+        let mut lazy = make_shared_pool(3, 13, UpdatePolicy::EveryKSteps(5), 1);
+        let (outs2, stats2) = lazy.step_batched_runs(&slots, &runs);
+        assert_eq!(stats2, BatchStats { fused_groups: 1, fused_lanes: 3, solo: 0 });
+        assert!(outs2.iter().flatten().all(|o| !o.updated));
+        for i in 0..3 {
+            assert_eq!(lazy.session(i).updates_applied(), 0);
+            assert_eq!(lazy.session(i).supervised_steps(), 2);
+        }
     }
 }

@@ -58,4 +58,15 @@ pub mod names {
     pub const POOL_RESUME_DECODE_NS: &str = "pool.resume_decode_ns";
     /// Histogram (bytes): serialized snapshot sizes on eviction.
     pub const POOL_SPILL_SIZE_BYTES: &str = "pool.spill_size_bytes";
+
+    /// Counter: scheduler rounds run by a serve loop.
+    pub const SERVE_ROUNDS: &str = "serve.rounds";
+    /// Counter: events applied by a serve loop (steps + control events).
+    pub const SERVE_EVENTS: &str = "serve.events";
+    /// Counter: step events that ran through a fused shared-weight group.
+    pub const SERVE_FUSED_STEPS: &str = "serve.fused_steps";
+    /// Counter: step events that ran per-session.
+    pub const SERVE_SOLO_STEPS: &str = "serve.solo_steps";
+    /// Histogram (latency): per-step wall time inside scheduler rounds.
+    pub const SERVE_STEP_NS: &str = "serve.step_ns";
 }

@@ -1,0 +1,258 @@
+//! The serve loop's end-to-end contracts: an evicted-and-readmitted lane
+//! rejoins the fused batched group **bitwise**, drained serve checkpoints
+//! are byte-identical to offline `stream`-style sessions fed the same
+//! events (including across LRU churn), the resident budget is invisible
+//! in the learner state, and the line protocol round-trips over an
+//! in-memory transport.
+
+use sparse_rtrl::config::{AlgorithmKind, ExperimentConfig};
+use sparse_rtrl::data::StepTarget;
+use sparse_rtrl::serve::{serve_io, Scheduler, ServeConfig};
+use sparse_rtrl::session::{
+    codec, SessionBuilder, SessionPool, SnapshotFormat, StepOutcome, StreamEvent, UpdatePolicy,
+};
+use std::path::PathBuf;
+
+fn unique_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sparse-rtrl-serve-it-{tag}-{}", std::process::id()))
+}
+
+/// A small parameter-sparse config — the batched engine's native mode.
+fn model_config(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model.hidden = 6;
+    cfg.model.param_sparsity = 0.5;
+    cfg.train.algorithm = AlgorithmKind::RtrlParam;
+    cfg.seed = seed;
+    cfg
+}
+
+fn serve_cfg(tag: &str, max_resident: usize) -> ServeConfig {
+    ServeConfig {
+        base: model_config(0),
+        policy: UpdatePolicy::EveryKSteps(1),
+        max_resident,
+        burst: 4,
+        spill_dir: unique_dir(tag),
+        ..ServeConfig::default()
+    }
+}
+
+/// Deterministic per-tenant event mix: steps (every other one supervised),
+/// a mid-stream sequence boundary, a trailing explicit update.
+fn tenant_events(salt: u64, n: usize) -> Vec<StreamEvent> {
+    let mut out = Vec::new();
+    for i in 0..n {
+        let t = i as u64 + salt;
+        let x = vec![((t * 13 + 1) as f32 * 0.37).sin(), ((t * 7 + 2) as f32 * 0.23).cos()];
+        let target = if i % 2 == 0 { StepTarget::Class(i % 2) } else { StepTarget::None };
+        out.push(StreamEvent::Step { x, target });
+        if i == n / 2 {
+            out.push(StreamEvent::EndSequence);
+        }
+    }
+    out.push(StreamEvent::Update);
+    out
+}
+
+/// What `sparse-rtrl stream` would do with the same events: one offline
+/// session, stepped directly, checkpointed in the binary format — the
+/// byte-for-byte reference for every drained serve snapshot.
+fn offline_checkpoint(cfg: &ServeConfig, seed: u64, events: &[StreamEvent]) -> Vec<u8> {
+    let mut base = cfg.base.clone();
+    base.seed = seed;
+    let mut s = SessionBuilder::from_config(base)
+        .policy(cfg.policy)
+        .predict_always(true)
+        .build();
+    s.set_threads(cfg.threads);
+    for ev in events {
+        match ev {
+            StreamEvent::Step { x, target } => {
+                s.step(x, target.as_target());
+            }
+            StreamEvent::Update => {
+                s.update_now();
+            }
+            StreamEvent::EndSequence => {
+                s.end_sequence();
+                s.begin_sequence();
+            }
+        }
+    }
+    codec::encode(&s.checkpoint(), SnapshotFormat::Binary)
+}
+
+fn assert_outcome_bits(a: &StepOutcome, b: &StepOutcome, what: &str) {
+    assert_eq!(a.step, b.step, "{what}: step counter");
+    assert_eq!(a.loss.map(f32::to_bits), b.loss.map(f32::to_bits), "{what}: loss bits");
+    assert_eq!(a.prediction, b.prediction, "{what}: prediction");
+    assert_eq!(a.correct, b.correct, "{what}: correctness");
+    assert_eq!(a.active_units, b.active_units, "{what}: active units");
+    assert_eq!(a.deriv_units, b.deriv_units, "{what}: derivative units");
+}
+
+/// The mid-stream spill round trip, at the pool level (satellite of the
+/// serve loop): three shared-weight sessions step fused via
+/// `step_batched`; one is evicted to a snapshot mid-stream and readmitted.
+/// Every subsequent outcome and the final checkpoint must be **bitwise**
+/// identical to a twin pool that never evicted — spilling a lane is
+/// invisible to the arithmetic.
+#[test]
+fn evicted_lane_rejoins_batched_group_bit_exactly() {
+    // Manual policy: no per-lane updates, so weights stay shared and the
+    // three lanes keep fusing for the whole stream.
+    let build = || {
+        SessionBuilder::from_config(model_config(11))
+            .policy(UpdatePolicy::Manual)
+            .predict_always(true)
+            .build()
+    };
+    let event = |t: u64, lane: usize| -> (Vec<f32>, StepTarget) {
+        let x = vec![
+            ((t * 7 + lane as u64 * 3 + 1) as f32 * 0.13).sin(),
+            ((t + lane as u64 + 2) as f32 * 0.29).cos(),
+        ];
+        let target =
+            if t % 2 == 0 { StepTarget::Class((t as usize + lane) % 2) } else { StepTarget::None };
+        (x, target)
+    };
+
+    let mut pool = SessionPool::new((0..3).map(|_| build()).collect(), 1);
+    let mut twin = SessionPool::new((0..3).map(|_| build()).collect(), 1);
+    for t in 0..4u64 {
+        let events: Vec<_> = (0..3).map(|lane| event(t, lane)).collect();
+        let a = pool.step_batched(&events);
+        let b = twin.step_batched(&events);
+        for lane in 0..3 {
+            assert_outcome_bits(&a[lane], &b[lane], &format!("pre-evict t={t} lane {lane}"));
+        }
+    }
+
+    let dir = unique_dir("lane");
+    std::fs::create_dir_all(&dir).expect("spill dir");
+    let path = dir.join("lane1.snap");
+    let id1 = pool.id_at(1).expect("slot 1 occupied");
+    pool.evict_id(id1, &path, SnapshotFormat::Binary).expect("evict");
+    assert_eq!(pool.len(), 2);
+    let readmitted = pool.admit_id(&path).expect("admit");
+    // slots are now [lane0, lane2, lane1]: the readmitted lane landed last
+    let order = [0usize, 2, 1];
+
+    for t in 4..10u64 {
+        let events: Vec<_> = order.iter().map(|&lane| event(t, lane)).collect();
+        let a = pool.step_batched(&events);
+        let twin_events: Vec<_> = (0..3).map(|lane| event(t, lane)).collect();
+        let b = twin.step_batched(&twin_events);
+        for (slot, &lane) in order.iter().enumerate() {
+            assert_outcome_bits(&a[slot], &b[lane], &format!("post-admit t={t} lane {lane}"));
+        }
+    }
+
+    let roundtripped = codec::encode(
+        &pool.session_by_id(readmitted).expect("readmitted resident").checkpoint(),
+        SnapshotFormat::Binary,
+    );
+    let straight = codec::encode(&twin.session(1).checkpoint(), SnapshotFormat::Binary);
+    assert_eq!(roundtripped, straight, "evict/readmit must not cost a single bit");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Drained serve checkpoints equal offline single-session runs byte for
+/// byte, even when a resident budget of one forces the scheduler to churn
+/// both tenants through spill-and-readmit mid-stream.
+#[test]
+fn drained_checkpoints_match_offline_sessions_under_budget_churn() {
+    let mut sched = Scheduler::new(serve_cfg("drain", 1)).expect("scheduler");
+    let ev_a = tenant_events(5, 9);
+    let ev_b = tenant_events(11, 7);
+    sched.open("alice", Some(101)).expect("open alice");
+    sched.open("bob", Some(202)).expect("open bob");
+    sched.enqueue("alice", ev_a.clone()).expect("enqueue alice");
+    sched.enqueue("bob", ev_b.clone()).expect("enqueue bob");
+    let drained = sched.drain().expect("drain");
+    assert_eq!(drained.len(), 2);
+    let snap = sched.stats();
+    assert!(snap.evictions >= 2, "budget 1 with 2 tenants must churn: {}", snap.evictions);
+    assert!(snap.admissions >= 1, "…and readmit: {}", snap.admissions);
+    for (name, path) in &drained {
+        let got = std::fs::read(path).expect("drained snapshot readable");
+        let (seed, events) = if name == "alice" { (101, &ev_a) } else { (202, &ev_b) };
+        let want = offline_checkpoint(sched.config(), seed, events);
+        assert_eq!(got, want, "tenant {name}: drained state differs from the offline stream");
+    }
+    std::fs::remove_dir_all(&sched.config().spill_dir).ok();
+}
+
+/// The resident budget is a wall-clock/memory knob only: draining the same
+/// three tenants with unlimited residency and with a budget of one yields
+/// byte-identical snapshots.
+#[test]
+fn drained_state_is_invariant_to_the_resident_budget() {
+    let run = |budget: usize, tag: &str| -> Vec<(String, Vec<u8>)> {
+        let cfg = serve_cfg(tag, budget);
+        let spill = cfg.spill_dir.clone();
+        let mut sched = Scheduler::new(cfg).expect("scheduler");
+        for (i, seed) in [301u64, 302, 303].iter().enumerate() {
+            let name = format!("t{i}");
+            sched.open(&name, Some(*seed)).expect("open");
+            sched.enqueue(&name, tenant_events(i as u64 * 17 + 3, 6 + i)).expect("enqueue");
+        }
+        let drained = sched.drain().expect("drain");
+        let out = drained
+            .iter()
+            .map(|(n, p)| (n.clone(), std::fs::read(p).expect("snapshot readable")))
+            .collect();
+        std::fs::remove_dir_all(&spill).ok();
+        out
+    };
+    let unlimited = run(0, "inv0");
+    let tight = run(1, "inv1");
+    assert_eq!(unlimited.len(), 3);
+    for ((n0, b0), (n1, b1)) in unlimited.iter().zip(&tight) {
+        assert_eq!(n0, n1);
+        assert_eq!(b0, b1, "tenant {n0}: learner state depends on the resident budget");
+    }
+}
+
+/// The line protocol over an in-memory transport: open, framed text
+/// payload, run, stats, shutdown — and the shutdown leaves a spill file.
+#[test]
+fn serve_io_round_trips_over_in_memory_transport() {
+    let cfg = serve_cfg("proto", 0);
+    let spill = cfg.spill_dir.clone();
+    let mut sched = Scheduler::new(cfg).expect("scheduler");
+    let payload = b"0.5 -0.25 -> 1\n0.125 0.75\n";
+    let mut req = Vec::new();
+    req.extend_from_slice(b"open alice 7\n");
+    req.extend_from_slice(format!("event alice {}\n", payload.len()).as_bytes());
+    req.extend_from_slice(payload);
+    req.extend_from_slice(b"\nrun\nstats\nshutdown\n");
+    let mut reply = Vec::new();
+    let shutdown = serve_io(&mut sched, &req[..], &mut reply).expect("serve_io");
+    assert!(shutdown, "shutdown request must end the connection loop");
+    let text = String::from_utf8(reply).expect("utf8 replies");
+    assert!(text.contains("ok open alice"), "{text}");
+    assert!(text.contains("ok event alice 2"), "{text}");
+    assert!(text.contains("ok run "), "{text}");
+    assert!(text.contains("\"live_sessions\": 1"), "{text}");
+    assert!(text.trim_end().ends_with("ok shutdown 1"), "{text}");
+    assert!(sched.spill_path("alice").exists(), "shutdown spills the tenant");
+    assert_eq!(sched.pending(), 0);
+    std::fs::remove_dir_all(&spill).ok();
+}
+
+/// The serve load generator produces the three-row grid the v7 `serve`
+/// bench block serializes, with every workload event applied.
+#[test]
+fn serve_bench_toy_grid_applies_every_event() {
+    let rows = sparse_rtrl::bench::serve::measure(&[3], 24, 1);
+    assert_eq!(rows.len(), 3);
+    for r in &rows {
+        assert_eq!(r.events, 24, "{}: all events apply", r.schedule);
+        assert!(r.events_per_sec > 0.0);
+        assert_eq!(r.fused_lane_steps + r.solo_steps, 24, "{}", r.schedule);
+    }
+    assert!(rows[0].fused_lane_steps > 0, "shared-seed tenants fuse under the batched schedule");
+    assert_eq!(rows[1].fused_lane_steps, 0, "round-robin never fuses");
+}
