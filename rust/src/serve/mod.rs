@@ -61,7 +61,8 @@ pub enum ServeError {
     /// The transport (socket, stdin/stdout) failed.
     Io { detail: String },
     /// An event parsed but is impossible for the tenant's session — wrong
-    /// input width, or a regression target of the wrong length.
+    /// input width, a regression target of the wrong length, or a class
+    /// index outside the readout's range.
     Session { tenant: String, detail: String },
 }
 

@@ -256,8 +256,8 @@ impl Scheduler {
                         detail: format!("event has {} inputs, the model takes {n_in}", x.len()),
                     });
                 }
-                if let StepTarget::Vector(t) = target {
-                    if t.len() != n_out {
+                match target {
+                    StepTarget::Vector(t) if t.len() != n_out => {
                         return Err(ServeError::Session {
                             tenant: name.to_string(),
                             detail: format!(
@@ -266,6 +266,15 @@ impl Scheduler {
                             ),
                         });
                     }
+                    StepTarget::Class(c) if *c >= n_out => {
+                        return Err(ServeError::Session {
+                            tenant: name.to_string(),
+                            detail: format!(
+                                "class target {c} is out of range, the readout emits {n_out} classes"
+                            ),
+                        });
+                    }
+                    _ => {}
                 }
             }
         }
@@ -648,6 +657,11 @@ mod tests {
             target: StepTarget::Vector(vec![0.5]),
         }];
         assert!(matches!(sched.enqueue("a", evs), Err(ServeError::Session { .. })));
+        // out-of-range class index is rejected at ingestion, never mid-round
+        let mut evs = steps(2, 0);
+        evs.push(StreamEvent::Step { x: vec![0.1, 0.2], target: StepTarget::Class(9) });
+        assert!(matches!(sched.enqueue("a", evs), Err(ServeError::Session { .. })));
+        assert_eq!(sched.pending(), 0, "the bad-class payload queued nothing");
         assert_eq!(sched.enqueue("a", steps(3, 1)).unwrap(), 3);
         assert_eq!(sched.pending(), 3);
         std::fs::remove_dir_all(&sched.cfg.spill_dir).ok();

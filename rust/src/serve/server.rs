@@ -21,16 +21,18 @@
 //! shutdown                    -> ok drain-first, then ok shutdown <n-tenants>
 //! ```
 //!
-//! Request failures (unknown tenant, malformed payload, bad framing
-//! numbers) answer with one `err <detail>` line and keep the connection
-//! alive; transport failures and payload-framing corruption end the
-//! connection. The `stats` reply is byte-counted because the
+//! Request failures (unknown tenant, malformed payload, shape-invalid
+//! events) answer with one `err <detail>` line and keep the connection
+//! alive; transport failures and payload-framing corruption — including an
+//! `event` header whose byte count doesn't parse, which leaves the
+//! payload's length unknowable — end the connection. The `stats` reply is
+//! byte-counted because the
 //! [`crate::telemetry::TelemetrySnapshot`] JSON is multi-line.
 
 use super::{Scheduler, ServeError};
 use crate::session::parse_payload;
 use std::io::{BufRead, BufReader, Read, Write};
-use std::os::unix::net::UnixListener;
+use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::Path;
 
 /// Largest accepted event payload (16 MiB). An `event` header declaring
@@ -68,8 +70,13 @@ fn handle(
             Ok(format!("ok open {tenant}"))
         }
         ["event", tenant, nbytes] => {
-            let n: usize =
-                nbytes.parse().map_err(|_| proto(format!("size {nbytes:?} is not a byte count")))?;
+            // An unparseable byte count is framing corruption, not a
+            // protocol error: the payload that follows has unknowable
+            // length, so replying `err` and reading on would reinterpret
+            // payload bytes as requests. End the connection instead.
+            let n: usize = nbytes.parse().map_err(|_| ServeError::Io {
+                detail: format!("event size {nbytes:?} is not a byte count"),
+            })?;
             if n > MAX_PAYLOAD {
                 // consume payload + terminator so the stream stays framed
                 let mut sink = std::io::sink();
@@ -111,6 +118,14 @@ fn handle(
             let drained = sched.drain()?;
             Ok(format!("ok drain {}", drained.len()))
         }
+        // an event header with the wrong word count is equally unframeable —
+        // any payload the client sent next would read back as request lines
+        ["event", ..] => Err(ServeError::Io {
+            detail: format!(
+                "malformed event header {:?} (want: event <tenant> <nbytes>)",
+                words.join(" ")
+            ),
+        }),
         _ => Err(proto(format!("unknown request {:?}", words.join(" ")))),
     }
 }
@@ -158,11 +173,23 @@ pub fn serve_io(
 
 /// Serve over a Unix-domain socket, one connection at a time, until a
 /// client requests `shutdown`. A stale socket file from a dead server is
-/// replaced; the live socket file is removed on exit.
+/// replaced — but only after a connect probe confirms nobody is listening
+/// (Unix sockets report `AddrInUse` either way, and silently unlinking
+/// would steal a live server's socket). The live socket file is removed on
+/// exit.
 pub fn serve_unix(sched: &mut Scheduler, path: &Path, quiet: bool) -> Result<(), ServeError> {
     let listener = match UnixListener::bind(path) {
         Ok(l) => l,
         Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+            if UnixStream::connect(path).is_ok() {
+                return Err(ServeError::Io {
+                    detail: format!(
+                        "{} already has a live server listening (connect succeeded); \
+                         refusing to replace its socket",
+                        path.display()
+                    ),
+                });
+            }
             std::fs::remove_file(path).map_err(io_err)?;
             UnixListener::bind(path).map_err(io_err)?
         }
@@ -321,6 +348,109 @@ mod tests {
         assert_eq!(lines[5], "ok open ok-1", "reopen is idempotent, not an error");
         assert_eq!(lines[6], "ok shutdown 1");
         assert_eq!(sched.pending(), 0, "the bad payload queued nothing");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// An out-of-range class index in an otherwise well-formed payload is
+    /// rejected at ingestion with an `err` reply — it must never reach a
+    /// round and panic the server (the loss asserts on class bounds).
+    #[test]
+    fn out_of_range_class_rejects_transactionally_and_keeps_serving() {
+        let mut sched = test_sched("class");
+        let dir = sched.config().spill_dir.clone();
+        // 2-class model; "-> 9" parses fine but can never be stepped
+        let input = request(
+            "open a\nevent a {}\nrun\nevent a {}\nrun\nshutdown\n",
+            &[&b"0.1 0.2 -> 9\n"[..], &b"0.1 0.2 -> 1\n"[..]],
+        );
+        let mut out = Vec::new();
+        let stop = serve_io(&mut sched, Cursor::new(input), &mut out).unwrap();
+        assert!(stop, "the server survives to handle shutdown");
+        let reply = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines[0], "ok open a");
+        assert!(
+            lines[1].starts_with("err tenant a:") && lines[1].contains("out of range"),
+            "got {:?}",
+            lines[1]
+        );
+        assert_eq!(lines[2], "ok run 0", "nothing from the rejected payload queued");
+        assert_eq!(lines[3], "ok event a 1", "an in-range class still queues");
+        assert_eq!(lines[4], "ok run 1");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A byte count that doesn't parse leaves the payload length
+    /// unknowable: the connection must end rather than desync and read
+    /// payload bytes (here, a `shutdown` line) as requests.
+    #[test]
+    fn unparseable_byte_count_ends_the_connection() {
+        let mut sched = test_sched("badcount");
+        let dir = sched.config().spill_dir.clone();
+        let input = b"open a\nevent a twelve\nshutdown\n0.1 0.2\nshutdown\n".to_vec();
+        let mut out = Vec::new();
+        let err = serve_io(&mut sched, Cursor::new(input), &mut out).unwrap_err();
+        assert!(matches!(err, ServeError::Io { .. }), "got {err:?}");
+        let reply = String::from_utf8(out).unwrap();
+        assert_eq!(reply.lines().count(), 1, "no reply after the corrupt header");
+        assert!(!reply.contains("shutdown"), "payload lines were never read as requests");
+
+        // wrong word count in an event header is equally unframeable
+        let input = b"open b\nevent b\nshutdown\n".to_vec();
+        let mut out = Vec::new();
+        let err = serve_io(&mut sched, Cursor::new(input), &mut out).unwrap_err();
+        assert!(matches!(err, ServeError::Io { .. }), "got {err:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `serve_unix` replaces a dead server's stale socket file but refuses
+    /// to steal one a live server is still listening on.
+    #[test]
+    fn serve_unix_replaces_stale_but_not_live_sockets() {
+        use std::os::unix::net::{UnixListener, UnixStream};
+        let dir =
+            std::env::temp_dir().join(format!("sparse-rtrl-sock-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.sock");
+
+        // live listener on the path: serve_unix must refuse to bind
+        let live = UnixListener::bind(&path).unwrap();
+        let mut sched = test_sched("sock-live");
+        let live_spill = sched.config().spill_dir.clone();
+        let err = serve_unix(&mut sched, &path, true).unwrap_err();
+        assert!(matches!(err, ServeError::Io { .. }), "got {err:?}");
+        assert!(path.exists(), "the live server's socket file is untouched");
+        drop(live);
+
+        // dead listener's stale file: serve_unix replaces it and serves
+        assert!(path.exists(), "dropping the listener leaves the file");
+        let path2 = path.clone();
+        let handle = std::thread::spawn(move || {
+            let mut sched = test_sched("sock-stale");
+            let d = sched.config().spill_dir.clone();
+            let r = serve_unix(&mut sched, &path2, true);
+            std::fs::remove_dir_all(&d).ok();
+            r
+        });
+        // the probe+rebind races the thread start; retry the connect
+        let mut stream = None;
+        for _ in 0..200 {
+            match UnixStream::connect(&path) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
+            }
+        }
+        let mut stream = stream.expect("stale socket was replaced and served");
+        stream.write_all(b"shutdown\n").unwrap();
+        let mut reply = String::new();
+        BufReader::new(&stream).read_line(&mut reply).unwrap();
+        assert_eq!(reply, "ok shutdown 0\n");
+        handle.join().unwrap().unwrap();
+        assert!(!path.exists(), "the socket file is removed on exit");
+        std::fs::remove_dir_all(&live_spill).ok();
         std::fs::remove_dir_all(&dir).ok();
     }
 
